@@ -1,0 +1,130 @@
+"""AOT-lower the L2 entry points to HLO *text* artifacts for the rust runtime.
+
+HLO text (NOT ``lowered.compile()`` / ``.serialize()``) is the interchange
+format: jax >= 0.5 emits HloModuleProto with 64-bit instruction ids which
+the xla crate's bundled xla_extension 0.5.1 rejects (``proto.id() <=
+INT_MAX``).  The text parser reassigns ids, so text round-trips cleanly.
+See /opt/xla-example/README.md.
+
+Each (entry point, shape) pair becomes one self-contained artifact —
+"one compiled executable per model variant".  A ``manifest.json`` records
+every artifact's entry point, parameter shapes and dtypes so the rust
+runtime can validate its inputs before execution.
+
+Usage: ``python -m compile.aot --out-dir ../artifacts`` (idempotent; the
+Makefile only re-runs it when a python source changes).
+"""
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+# (name, N keys, B buckets) partition variants.  N must be a multiple of the
+# kernel block (2048).  B-1 boundary entries.
+PARTITION_VARIANTS = [
+    ("partition_n16384_b16", 16384, 16),
+    ("partition_n65536_b64", 65536, 64),
+]
+
+# (name, N) whole-tile sort variants.  N must be a power of two.
+SORT_VARIANTS = [
+    ("sort_n1024", 1024),
+    ("sort_n4096", 4096),
+]
+
+# (name, N total, block) blocked sort variants: N/block independent sorts.
+SORT_BLOCKED_VARIANTS = [
+    ("sort_n16384_block1024", 16384, 1024),
+]
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (ids reassigned by the parser)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _spec(shape):
+    return jax.ShapeDtypeStruct(shape, jnp.int32)
+
+
+def build_artifacts():
+    """Yield (name, hlo_text, manifest_entry) for every variant."""
+    for name, n, b in PARTITION_VARIANTS:
+        lowered = jax.jit(model.plan_partition).lower(_spec((n,)), _spec((b - 1,)))
+        yield name, to_hlo_text(lowered), {
+            "entry": "plan_partition",
+            "params": [
+                {"name": "keys", "shape": [n], "dtype": "i32"},
+                {"name": "bounds", "shape": [b - 1], "dtype": "i32"},
+            ],
+            "outputs": [
+                {"name": "bucket_ids", "shape": [n], "dtype": "i32"},
+                {"name": "histogram", "shape": [b], "dtype": "i32"},
+            ],
+            "n": n,
+            "buckets": b,
+        }
+    for name, n in SORT_VARIANTS:
+        lowered = jax.jit(model.plan_sort).lower(_spec((n,)))
+        yield name, to_hlo_text(lowered), {
+            "entry": "plan_sort",
+            "params": [{"name": "keys", "shape": [n], "dtype": "i32"}],
+            "outputs": [
+                {"name": "sorted_keys", "shape": [n], "dtype": "i32"},
+                {"name": "permutation", "shape": [n], "dtype": "i32"},
+            ],
+            "n": n,
+        }
+    for name, n, block in SORT_BLOCKED_VARIANTS:
+        fn = lambda keys: model.plan_sort_blocked(keys, block=block)  # noqa: E731
+        lowered = jax.jit(fn).lower(_spec((n,)))
+        yield name, to_hlo_text(lowered), {
+            "entry": "plan_sort_blocked",
+            "params": [{"name": "keys", "shape": [n], "dtype": "i32"}],
+            "outputs": [
+                {"name": "sorted_keys", "shape": [n], "dtype": "i32"},
+                {"name": "permutation", "shape": [n], "dtype": "i32"},
+            ],
+            "n": n,
+            "block": block,
+        }
+
+
+def main() -> None:
+    parser = argparse.ArgumentParser(description=__doc__)
+    parser.add_argument("--out-dir", default="../artifacts")
+    parser.add_argument("--out", default=None, help="also write a stamp file")
+    args = parser.parse_args()
+
+    # The bitonic kernel packs (key, index) into int64 composites.
+    jax.config.update("jax_enable_x64", True)
+
+    os.makedirs(args.out_dir, exist_ok=True)
+    manifest = {}
+    for name, hlo, entry in build_artifacts():
+        path = os.path.join(args.out_dir, f"{name}.hlo.txt")
+        with open(path, "w") as f:
+            f.write(hlo)
+        entry["file"] = f"{name}.hlo.txt"
+        manifest[name] = entry
+        print(f"wrote {path} ({len(hlo)} chars)")
+    with open(os.path.join(args.out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2, sort_keys=True)
+    if args.out:
+        with open(args.out, "w") as f:
+            f.write("\n".join(sorted(manifest)) + "\n")
+    print(f"manifest: {len(manifest)} artifacts")
+
+
+if __name__ == "__main__":
+    main()

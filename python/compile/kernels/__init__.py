@@ -1,0 +1,4 @@
+# L1: Pallas kernels for the WTF sort application's compute hot-spots.
+from .bitonic import bitonic_sort, bitonic_sort_blocked  # noqa: F401
+from .partition import partition  # noqa: F401
+from .ref import ref_partition, ref_sort  # noqa: F401

@@ -1,0 +1,99 @@
+"""L1 Pallas kernel: bitonic sort of record keys, returning the permutation.
+
+This is the compute hot-spot of the per-bucket sort phase of the WTF sort
+application (paper §4.1).  The kernel returns sorted keys *and the
+permutation indices*: the permutation is exactly what the file-slicing
+sort needs, because it rearranges *slice pointers* (metadata) instead of
+record bytes — the paper's core trick, expressed numerically.
+
+Stability / determinism: each (key, index) pair is packed into one int64
+composite ``(key << 32) | index`` so the network sorts lexicographically
+by (key, original index); the result is bit-identical to a stable argsort.
+Keys must be non-negative int32.
+
+TPU adaptation (DESIGN.md §Hardware-Adaptation): the whole tile is
+VMEM-resident and the network is a fixed O(n log^2 n) sequence of
+compare-exchange stages with *no data-dependent control flow* — each
+stage is a gather + select over the full vector, i.e. pure VPU work; on
+GPU the classic formulation uses warp shuffles, here the BlockSpec keeps
+the tile resident instead.  VMEM footprint: n * 8 B (one int64 vector).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _compare_exchange(comp, n, k, j):
+    pos = jnp.arange(n, dtype=jnp.int32)
+    partner = pos ^ j
+    other = comp[partner]
+    ascending = (pos & k) == 0
+    lower = pos < partner
+    # Lower element of an ascending pair keeps the min; mirror for the rest.
+    take_min = lower == ascending
+    return jnp.where(take_min, jnp.minimum(comp, other), jnp.maximum(comp, other))
+
+
+def _bitonic_kernel(keys_ref, sorted_ref, perm_ref):
+    n = keys_ref.shape[0]
+    keys = keys_ref[...]
+    idx = jnp.arange(n, dtype=jnp.int32)
+    comp = (keys.astype(jnp.int64) << 32) | idx.astype(jnp.int64)
+    k = 2
+    while k <= n:  # static python loops: the network unrolls at trace time
+        j = k // 2
+        while j >= 1:
+            comp = _compare_exchange(comp, n, k, j)
+            j //= 2
+        k *= 2
+    sorted_ref[...] = (comp >> 32).astype(jnp.int32)
+    perm_ref[...] = (comp & 0xFFFFFFFF).astype(jnp.int32)
+
+
+@jax.jit
+def bitonic_sort(keys):
+    """Sort (N,) non-negative int32 ``keys``; N must be a power of two.
+
+    Returns (sorted_keys (N,) int32, permutation (N,) int32) where
+    ``sorted_keys == keys[permutation]`` and the permutation is stable.
+    """
+    n = keys.shape[0]
+    if n & (n - 1) != 0 or n == 0:
+        raise ValueError(f"N={n} must be a power of two")
+    return pl.pallas_call(
+        _bitonic_kernel,
+        out_shape=[
+            jax.ShapeDtypeStruct((n,), jnp.int32),
+            jax.ShapeDtypeStruct((n,), jnp.int32),
+        ],
+        interpret=True,
+    )(keys)
+
+
+@functools.partial(jax.jit, static_argnames=("block",))
+def bitonic_sort_blocked(keys, *, block):
+    """Grid variant: independently sort each ``block``-sized tile of keys.
+
+    Used when one PJRT call sorts many buckets at once (N % block == 0).
+    """
+    n = keys.shape[0]
+    if n % block != 0 or block & (block - 1) != 0:
+        raise ValueError(f"N={n} must be a multiple of power-of-two block={block}")
+
+    return pl.pallas_call(
+        _bitonic_kernel,
+        grid=(n // block,),
+        in_specs=[pl.BlockSpec((block,), lambda i: (i,))],
+        out_specs=[
+            pl.BlockSpec((block,), lambda i: (i,)),
+            pl.BlockSpec((block,), lambda i: (i,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((n,), jnp.int32),
+            jax.ShapeDtypeStruct((n,), jnp.int32),
+        ],
+        interpret=True,
+    )(keys)

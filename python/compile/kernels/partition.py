@@ -1,0 +1,83 @@
+"""L1 Pallas kernel: bucket-classify a stream of record keys + histogram.
+
+This is the compute hot-spot of the map/bucketing phase of the WTF sort
+application (paper §4.1).  Given a block of int32 record keys and the
+(B-1,) ascending bucket boundaries, emit the bucket id of every key and
+the per-bucket histogram.  The WTF sort uses the bucket ids to *yank*
+record slices into per-bucket files without rewriting the record bytes.
+
+TPU adaptation (DESIGN.md §Hardware-Adaptation): the key stream is tiled
+through VMEM in ``block_size`` chunks by the BlockSpec; the boundary table
+is tiny and resident for every grid step.  The classify is a dense
+compare-reduce (keys[:,None] >= bounds[None,:]) which maps onto the VPU;
+there is no data-dependent control flow.  The histogram output revisits
+the same (B,) block every grid step and accumulates across steps.
+
+``interpret=True`` everywhere: the CPU PJRT plugin cannot execute Mosaic
+custom-calls, and interpret-mode lowers to plain HLO that the rust
+runtime replays byte-for-byte.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _partition_kernel(bounds_ref, keys_ref, bucket_ref, hist_ref):
+    step = pl.program_id(0)
+
+    @pl.when(step == 0)
+    def _init():
+        hist_ref[...] = jnp.zeros_like(hist_ref)
+
+    keys = keys_ref[...]
+    bounds = bounds_ref[...]
+    # bucket(k) = #bounds <= k  ==  searchsorted(bounds, k, side='right')
+    bucket = jnp.sum(
+        (keys[:, None] >= bounds[None, :]).astype(jnp.int32), axis=1
+    ).astype(jnp.int32)
+    bucket_ref[...] = bucket
+
+    num_buckets = hist_ref.shape[0]
+    onehot = (bucket[:, None] == jnp.arange(num_buckets)[None, :]).astype(jnp.int32)
+    hist_ref[...] += jnp.sum(onehot, axis=0)
+
+
+@functools.partial(jax.jit, static_argnames=("block_size",))
+def partition(keys, bounds, *, block_size=2048):
+    """Pallas bucket partition. ``keys``: (N,) int32, N % block_size == 0.
+
+    ``bounds``: (B-1,) ascending int32.  Returns (bucket_ids (N,) int32,
+    histogram (B,) int32).
+    """
+    n = keys.shape[0]
+    if n % block_size != 0:
+        raise ValueError(f"N={n} not a multiple of block_size={block_size}")
+    num_buckets = bounds.shape[0] + 1
+    if bounds.shape[0] == 0:
+        # Degenerate single-bucket case: a zero-length BlockSpec dimension is
+        # not representable, and the answer is trivially constant.
+        return (
+            jnp.zeros((n,), jnp.int32),
+            jnp.full((1,), n, jnp.int32),
+        )
+    grid = (n // block_size,)
+    return pl.pallas_call(
+        _partition_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bounds.shape[0],), lambda i: (0,)),  # resident
+            pl.BlockSpec((block_size,), lambda i: (i,)),  # streamed
+        ],
+        out_specs=[
+            pl.BlockSpec((block_size,), lambda i: (i,)),
+            pl.BlockSpec((num_buckets,), lambda i: (0,)),  # revisited
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((n,), jnp.int32),
+            jax.ShapeDtypeStruct((num_buckets,), jnp.int32),
+        ],
+        interpret=True,
+    )(bounds, keys)

@@ -1,0 +1,38 @@
+"""Pure-jnp correctness oracles for the Pallas kernels.
+
+These are the ground truth the pytest/hypothesis suites compare the
+Pallas kernels against.  They intentionally use only high-level jnp ops
+(searchsorted / argsort) so that a bug in the hand-written kernels cannot
+be mirrored here.
+"""
+
+import jax.numpy as jnp
+
+
+def ref_partition(keys, bounds):
+    """Classify each key into a bucket delimited by ``bounds``.
+
+    ``bounds`` are the (num_buckets - 1) ascending bucket boundaries; key k
+    lands in bucket ``sum(k >= bounds)`` (i.e. ``searchsorted(side='right')``).
+
+    Returns ``(bucket_ids, histogram)`` with ``histogram.shape == (B,)``
+    where ``B = len(bounds) + 1``.
+    """
+    keys = jnp.asarray(keys)
+    bounds = jnp.asarray(bounds)
+    bucket = jnp.searchsorted(bounds, keys, side="right").astype(jnp.int32)
+    num_buckets = bounds.shape[0] + 1
+    hist = jnp.zeros((num_buckets,), jnp.int32).at[bucket].add(1)
+    return bucket, hist
+
+
+def ref_sort(keys):
+    """Stable sort of ``keys``; returns ``(sorted_keys, permutation)``.
+
+    ``permutation[i]`` is the original index of the i-th smallest key, with
+    ties broken by original index (stable), exactly matching the composite
+    (key << 32 | index) ordering the bitonic kernel uses.
+    """
+    keys = jnp.asarray(keys)
+    perm = jnp.argsort(keys, stable=True).astype(jnp.int32)
+    return keys[perm], perm

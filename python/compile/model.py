@@ -1,0 +1,44 @@
+"""L2: the JAX compute graph of the WTF sort application's hot spots.
+
+The WTF paper's sort (§4.1) is bucketing → per-bucket sort → concat.  The
+byte movement lives in the rust filesystem (L3); the *compute* — deciding
+which bucket every record key belongs to, and the permutation that orders
+a bucket — lives here, calling the L1 Pallas kernels so that everything
+lowers into one HLO module per entry point.
+
+Entry points (each AOT-lowered by aot.py to its own artifact):
+
+* ``plan_partition(keys, bounds)``  -> (bucket_ids, histogram)
+* ``plan_sort(keys)``               -> (sorted_keys, permutation)
+* ``plan_sort_blocked(keys)``       -> per-tile independent sorts
+
+All arrays are int32; keys must be non-negative (the bitonic kernel packs
+(key, index) into an int64 composite).  Shapes are static per artifact —
+the rust runtime pads the tail batch with i32::MAX sentinel keys, which
+sort to the end and are dropped.
+"""
+
+import functools
+
+import jax
+
+from .kernels import bitonic
+from .kernels.partition import partition as _partition
+
+
+@jax.jit
+def plan_partition(keys, bounds):
+    """Bucket-classify ``keys`` against ``bounds``; returns (ids, histogram)."""
+    return _partition(keys, bounds)
+
+
+@jax.jit
+def plan_sort(keys):
+    """Sort one power-of-two tile of keys; returns (sorted, permutation)."""
+    return bitonic.bitonic_sort(keys)
+
+
+@functools.partial(jax.jit, static_argnames=("block",))
+def plan_sort_blocked(keys, *, block):
+    """Independently sort each ``block``-sized tile in one call."""
+    return bitonic.bitonic_sort_blocked(keys, block=block)

@@ -1,0 +1,180 @@
+"""Kernel-vs-reference correctness: the CORE signal for the L1 layer.
+
+Hypothesis sweeps shapes and key distributions; every Pallas kernel output
+is compared elementwise against the pure-jnp oracle in kernels/ref.py.
+"""
+
+import jax
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+jax.config.update("jax_enable_x64", True)  # bitonic packs int64 composites
+
+from compile.kernels import (  # noqa: E402
+    bitonic_sort,
+    bitonic_sort_blocked,
+    partition,
+    ref_partition,
+    ref_sort,
+)
+
+KEY_MAX = 2**31 - 1
+
+
+def np_i32(xs):
+    return np.asarray(xs, dtype=np.int32)
+
+
+# ---------------------------------------------------------------- partition
+
+
+def check_partition(keys, bounds, block_size):
+    got_ids, got_hist = partition(np_i32(keys), np_i32(bounds), block_size=block_size)
+    ref_ids, ref_hist = ref_partition(np_i32(keys), np_i32(bounds))
+    np.testing.assert_array_equal(np.asarray(got_ids), np.asarray(ref_ids))
+    np.testing.assert_array_equal(np.asarray(got_hist), np.asarray(ref_hist))
+
+
+def test_partition_basic():
+    keys = [5, 0, 99, 42, 10, 10, 9, 100]
+    bounds = [10, 50]
+    check_partition(keys, bounds, block_size=4)
+
+
+def test_partition_single_bucket():
+    # No boundaries: everything lands in bucket 0.
+    check_partition(list(range(8)), [], block_size=8)
+
+
+def test_partition_all_below_all_above():
+    check_partition([0] * 8, [1], block_size=4)
+    check_partition([KEY_MAX] * 8, [1], block_size=4)
+
+
+def test_partition_boundary_is_inclusive_right():
+    # key == bound goes to the upper bucket (searchsorted side='right').
+    ids, hist = partition(np_i32([9, 10, 11]* 4), np_i32([10]), block_size=4)
+    np.testing.assert_array_equal(np.asarray(ids)[:3], [0, 1, 1])
+
+
+def test_partition_rejects_ragged():
+    with pytest.raises(ValueError):
+        partition(np_i32(list(range(10))), np_i32([5]), block_size=4)
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    data=st.data(),
+    log_blocks=st.integers(min_value=0, max_value=3),
+    block_size=st.sampled_from([4, 16, 64]),
+    n_bounds=st.integers(min_value=0, max_value=9),
+)
+def test_partition_matches_ref(data, log_blocks, block_size, n_bounds):
+    n = block_size * (2**log_blocks)
+    keys = data.draw(
+        st.lists(st.integers(0, KEY_MAX), min_size=n, max_size=n), label="keys"
+    )
+    bounds = sorted(
+        data.draw(
+            st.lists(
+                st.integers(0, KEY_MAX),
+                min_size=n_bounds,
+                max_size=n_bounds,
+                unique=True,
+            ),
+            label="bounds",
+        )
+    )
+    check_partition(keys, bounds, block_size=block_size)
+
+
+# ------------------------------------------------------------------ bitonic
+
+
+def check_sort(keys):
+    got_sorted, got_perm = bitonic_sort(np_i32(keys))
+    ref_sorted, ref_perm = ref_sort(np_i32(keys))
+    np.testing.assert_array_equal(np.asarray(got_sorted), np.asarray(ref_sorted))
+    np.testing.assert_array_equal(np.asarray(got_perm), np.asarray(ref_perm))
+
+
+def test_sort_basic():
+    check_sort([3, 1, 4, 1, 5, 9, 2, 6])
+
+
+def test_sort_already_sorted():
+    check_sort(list(range(16)))
+
+
+def test_sort_reverse():
+    check_sort(list(reversed(range(16))))
+
+
+def test_sort_all_equal_is_stable():
+    # Equal keys must keep original order (the int64 composite tie-break).
+    _, perm = bitonic_sort(np_i32([7] * 16))
+    np.testing.assert_array_equal(np.asarray(perm), np.arange(16))
+
+
+def test_sort_size_one():
+    check_sort([42])
+
+
+def test_sort_rejects_non_power_of_two():
+    with pytest.raises(ValueError):
+        bitonic_sort(np_i32([1, 2, 3]))
+
+
+def test_sort_permutation_reconstructs():
+    keys = np_i32([9, 3, 7, 3, 0, KEY_MAX, 12, 5])
+    sorted_keys, perm = bitonic_sort(keys)
+    np.testing.assert_array_equal(np.asarray(sorted_keys), keys[np.asarray(perm)])
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    data=st.data(),
+    log_n=st.integers(min_value=0, max_value=9),
+)
+def test_sort_matches_ref(data, log_n):
+    n = 2**log_n
+    keys = data.draw(
+        st.lists(st.integers(0, KEY_MAX), min_size=n, max_size=n), label="keys"
+    )
+    check_sort(keys)
+
+
+@settings(max_examples=10, deadline=None)
+@given(
+    data=st.data(),
+    dupes=st.integers(min_value=2, max_value=16),
+)
+def test_sort_heavy_duplicates_stable(data, dupes):
+    n = 64
+    pool = data.draw(
+        st.lists(st.integers(0, 100), min_size=dupes, max_size=dupes), label="pool"
+    )
+    keys = [pool[i % dupes] for i in range(n)]
+    check_sort(keys)
+
+
+# ---------------------------------------------------------------- blocked
+
+
+def test_sort_blocked_independent_tiles():
+    rng = np.random.default_rng(0)
+    keys = rng.integers(0, KEY_MAX, size=4 * 256, dtype=np.int32)
+    got_sorted, got_perm = bitonic_sort_blocked(keys, block=256)
+    got_sorted, got_perm = np.asarray(got_sorted), np.asarray(got_perm)
+    for t in range(4):
+        tile = keys[t * 256 : (t + 1) * 256]
+        ref_sorted, ref_perm = ref_sort(tile)
+        np.testing.assert_array_equal(got_sorted[t * 256 : (t + 1) * 256], ref_sorted)
+        # permutation indices are tile-local
+        np.testing.assert_array_equal(got_perm[t * 256 : (t + 1) * 256], ref_perm)
+
+
+def test_sort_blocked_rejects_bad_block():
+    with pytest.raises(ValueError):
+        bitonic_sort_blocked(np_i32(list(range(12))), block=6)

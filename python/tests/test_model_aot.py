@@ -1,0 +1,77 @@
+"""L2 model shape checks + AOT artifact smoke tests."""
+
+import json
+import os
+
+import jax
+import numpy as np
+
+jax.config.update("jax_enable_x64", True)
+
+from compile import aot, model  # noqa: E402
+from compile.kernels import ref_partition, ref_sort  # noqa: E402
+
+
+def test_plan_partition_shapes():
+    keys = np.zeros(4096, np.int32)
+    bounds = np.arange(15, dtype=np.int32)
+    ids, hist = model.plan_partition(keys, bounds)
+    assert ids.shape == (4096,) and ids.dtype == np.int32
+    assert hist.shape == (16,) and hist.dtype == np.int32
+    assert int(np.asarray(hist).sum()) == 4096
+
+
+def test_plan_sort_shapes():
+    keys = np.arange(1024, dtype=np.int32)[::-1].copy()
+    s, p = model.plan_sort(keys)
+    assert s.shape == (1024,) and p.shape == (1024,)
+    np.testing.assert_array_equal(np.asarray(s), np.arange(1024))
+
+
+def test_plan_sort_blocked_matches_ref_per_tile():
+    rng = np.random.default_rng(7)
+    keys = rng.integers(0, 2**31 - 1, size=2048, dtype=np.int32)
+    s, p = model.plan_sort_blocked(keys, block=1024)
+    for t in range(2):
+        tile = keys[t * 1024 : (t + 1) * 1024]
+        ref_s, ref_p = ref_sort(tile)
+        np.testing.assert_array_equal(np.asarray(s)[t * 1024 : (t + 1) * 1024], ref_s)
+        np.testing.assert_array_equal(np.asarray(p)[t * 1024 : (t + 1) * 1024], ref_p)
+
+
+def test_partition_histogram_consistency():
+    rng = np.random.default_rng(3)
+    keys = rng.integers(0, 2**31 - 1, size=16384, dtype=np.int32)
+    bounds = np.sort(rng.choice(2**31 - 1, size=15, replace=False)).astype(np.int32)
+    ids, hist = model.plan_partition(keys, bounds)
+    ref_ids, ref_hist = ref_partition(keys, bounds)
+    np.testing.assert_array_equal(np.asarray(ids), np.asarray(ref_ids))
+    np.testing.assert_array_equal(np.asarray(hist), np.asarray(ref_hist))
+
+
+def test_aot_emits_parseable_hlo(tmp_path):
+    # Lower ONE small variant end-to-end and sanity-check the HLO text.
+    lowered = jax.jit(model.plan_sort).lower(
+        jax.ShapeDtypeStruct((1024,), np.int32)
+    )
+    hlo = aot.to_hlo_text(lowered)
+    assert "ENTRY" in hlo and "s32[1024]" in hlo
+    out = tmp_path / "sort.hlo.txt"
+    out.write_text(hlo)
+    assert out.stat().st_size > 0
+
+
+def test_aot_manifest_round_trip(tmp_path, monkeypatch):
+    # Exercise main() on a trimmed variant list to keep the test fast.
+    monkeypatch.setattr(aot, "PARTITION_VARIANTS", [("partition_n4096_b4", 4096, 4)])
+    monkeypatch.setattr(aot, "SORT_VARIANTS", [("sort_n256", 256)])
+    monkeypatch.setattr(aot, "SORT_BLOCKED_VARIANTS", [])
+    monkeypatch.setattr(
+        "sys.argv", ["aot", "--out-dir", str(tmp_path)]
+    )
+    aot.main()
+    manifest = json.loads((tmp_path / "manifest.json").read_text())
+    assert set(manifest) == {"partition_n4096_b4", "sort_n256"}
+    for entry in manifest.values():
+        assert os.path.exists(tmp_path / entry["file"])
+        assert entry["params"][0]["dtype"] == "i32"

@@ -1,0 +1,83 @@
+//! End-to-end client hot paths on a real in-process cluster: the write
+//! path (slices + blind metadata txn), the read path (resolve + fetch),
+//! appends, and the slicing ops whose cost is the paper's headline.
+
+use wtf::bench::Bench;
+use wtf::cluster::Cluster;
+use wtf::config::Config;
+use wtf::util::Rng;
+
+fn main() {
+    let cluster = Cluster::builder()
+        .config(Config {
+            region_size: 1 << 22, // 4 MB regions
+            ..Config::default()
+        })
+        .build()
+        .unwrap();
+    let c = cluster.client();
+
+    let mut payload = vec![0u8; 256 * 1024];
+    Rng::new(7).fill_bytes(&mut payload);
+
+    // Sequential write path: 256 kB per op.
+    let mut fd = c.create("/bench-w").unwrap();
+    Bench::new("client/write-256k")
+        .iters(40)
+        .run_bytes(payload.len() as u64, || c.write(&mut fd, &payload).unwrap());
+
+    // Append fast path.
+    let fda = c.create("/bench-a").unwrap();
+    Bench::new("client/append-256k")
+        .iters(40)
+        .run_bytes(payload.len() as u64, || {
+            c.append_bytes(&fda, &payload).unwrap()
+        });
+
+    // Read path over the written file.
+    let fr = c.open("/bench-w").unwrap();
+    let mut off = 0u64;
+    Bench::new("client/read-256k")
+        .iters(40)
+        .run_bytes(payload.len() as u64, || {
+            let r = c.read_at(&fr, off, payload.len() as u64).unwrap();
+            off = (off + payload.len() as u64) % (payload.len() as u64 * 16);
+            r
+        });
+
+    // yank+paste: the metadata-only "write".
+    let mut dst = c.create("/bench-paste").unwrap();
+    Bench::new("client/yank+paste-256k (0 data bytes)")
+        .iters(40)
+        .run_bytes(payload.len() as u64, || {
+            let s = c.yank_at(fr.inode(), 0, payload.len() as u64).unwrap();
+            c.paste(&mut dst, &s).unwrap()
+        });
+
+    // concat of 8 files.
+    for i in 0..8 {
+        let mut f = c.create(&format!("/part{i}")).unwrap();
+        c.write(&mut f, &payload).unwrap();
+    }
+    let parts: Vec<String> = (0..8).map(|i| format!("/part{i}")).collect();
+    let refs: Vec<&str> = parts.iter().map(|s| s.as_str()).collect();
+    let mut n = 0;
+    Bench::new("client/concat-8x256k (metadata only)")
+        .iters(30)
+        .run(|| {
+            n += 1;
+            c.concat(&refs, &format!("/cat{n}")).unwrap()
+        });
+
+    // Transaction commit (small read-modify-write).
+    let mut seed = c.create("/bench-txn").unwrap();
+    c.write(&mut seed, b"0123456789abcdef").unwrap();
+    Bench::new("client/txn(read+write+commit)").iters(40).run(|| {
+        let mut t = c.begin();
+        let fd = t.open("/bench-txn").unwrap();
+        let data = t.read(fd, 8).unwrap();
+        t.seek(fd, wtf::client::SeekFrom::End(0)).unwrap();
+        t.write(fd, &data[..4]).unwrap();
+        t.commit().unwrap()
+    });
+}

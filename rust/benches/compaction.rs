@@ -1,0 +1,83 @@
+//! Metadata compaction hot path: resolve/fuse cost as fragmentation
+//! grows — tier-1 GC runs this over every region (§2.8), so it must be
+//! cheap even for pathological overlay lists.
+
+use wtf::bench::Bench;
+use wtf::client::compact::{compact, fuse_extents, resolve_entries};
+use wtf::types::{Placement, RegionEntry, RegionMeta, SliceData, SlicePtr};
+use wtf::util::Rng;
+
+fn sequential_entries(n: u64) -> Vec<RegionEntry> {
+    (0..n)
+        .map(|i| RegionEntry {
+            placement: Placement::At(i * 64),
+            len: 64,
+            data: SliceData::Stored(vec![SlicePtr {
+                server: (i % 4) as u32,
+                backing: 0,
+                offset: i * 64,
+                len: 64,
+            }]),
+        })
+        .collect()
+}
+
+fn random_entries(n: u64, span: u64, seed: u64) -> Vec<RegionEntry> {
+    let mut rng = Rng::new(seed);
+    (0..n)
+        .map(|i| {
+            let at = rng.next_below(span);
+            let len = 1 + rng.next_below(256);
+            RegionEntry {
+                placement: Placement::At(at),
+                len,
+                data: SliceData::Stored(vec![SlicePtr {
+                    server: (i % 8) as u32,
+                    backing: (i % 3) as u32,
+                    offset: i * 1024,
+                    len,
+                }]),
+            }
+        })
+        .collect()
+}
+
+fn main() {
+    for n in [64u64, 512, 4096] {
+        let seq = sequential_entries(n);
+        Bench::new(format!("compact/resolve-seq-{n}"))
+            .iters(30)
+            .run(|| resolve_entries(&seq));
+
+        let rand = random_entries(n, 1 << 20, n);
+        Bench::new(format!("compact/resolve-rand-{n}"))
+            .iters(30)
+            .run(|| resolve_entries(&rand));
+
+        let region = RegionMeta {
+            spill: None,
+            entries: rand.clone(),
+            eof: 1 << 20,
+        };
+        Bench::new(format!("compact/full-compact-rand-{n}"))
+            .iters(30)
+            .run(|| compact(&region));
+    }
+
+    // Fusion of a fully-sequential overlay (the locality payoff).
+    let seq = sequential_entries(4096);
+    Bench::new("compact/fuse-seq-4096").iters(30).run(|| {
+        let extents = resolve_entries(&seq);
+        fuse_extents(extents)
+    });
+
+    // Spill encode/decode round trip.
+    let entries = random_entries(4096, 1 << 26, 1);
+    Bench::new("spill/encode-4096").iters(30).run(|| {
+        wtf::client::spill::encode_entries(&entries).unwrap()
+    });
+    let bytes = wtf::client::spill::encode_entries(&entries).unwrap();
+    Bench::new("spill/decode-4096").iters(30).run(|| {
+        wtf::client::spill::decode_entries(&bytes).unwrap()
+    });
+}

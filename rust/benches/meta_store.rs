@@ -1,0 +1,134 @@
+//! Metadata-store hot paths: gets, blind appends, conditional appends,
+//! multi-key commits, conflict detection.  The paper's write path costs
+//! one metadata transaction per write — this is the L3 floor.
+
+use wtf::bench::Bench;
+use wtf::meta::{Commit, MetaOp, MetaStore};
+use wtf::types::{Key, Placement, RegionEntry, RegionMeta, SliceData, SlicePtr, Value};
+
+fn stored(len: u64) -> SliceData {
+    SliceData::Stored(vec![SlicePtr {
+        server: 1,
+        backing: 0,
+        offset: 0,
+        len,
+    }])
+}
+
+fn main() {
+    let store = MetaStore::new(8, 2);
+
+    // Point gets on a populated store.
+    for i in 0..10_000u64 {
+        store
+            .commit(&Commit {
+                reads: vec![],
+                ops: vec![MetaOp::Put {
+                    key: Key::sys(format!("warm{i}")),
+                    value: Value::U64(i),
+                }],
+            })
+            .unwrap();
+    }
+    let mut i = 0u64;
+    Bench::new("meta/get").iters(50).run(|| {
+        i = (i + 1) % 10_000;
+        store.get(&Key::sys(format!("warm{i}")))
+    });
+
+    // Blind region append (the common write-path op).
+    let mut n = 0u64;
+    Bench::new("meta/region-append(blind)").iters(50).run(|| {
+        n += 1;
+        let rid = Key::new(wtf::types::Space::Region, format!("r{}", n % 64));
+        store.commit(&Commit {
+            reads: vec![],
+            ops: vec![MetaOp::RegionAppend {
+                key: rid,
+                entry: RegionEntry {
+                    placement: Placement::At(n * 8),
+                    len: 8,
+                    data: stored(8),
+                },
+            }],
+        })
+    });
+
+    // Conditional EOF append (the §2.5 fast path).
+    let mut m = 0u64;
+    Bench::new("meta/region-append(eof-cond)").iters(50).run(|| {
+        m += 1;
+        let rid = Key::new(wtf::types::Space::Region, format!("e{m}"));
+        store.commit(&Commit {
+            reads: vec![],
+            ops: vec![MetaOp::RegionAppendEof {
+                key: rid,
+                data: stored(8),
+                len: 8,
+                cap: 1 << 26,
+            }],
+        })
+    });
+
+    // Multi-key transaction (create-file shape: 3 ops across spaces).
+    let mut c = 0u64;
+    Bench::new("meta/multi-key-create-txn").iters(50).run(|| {
+        c += 1;
+        store.commit(&Commit {
+            reads: vec![(Key::path("/"), store.version(&Key::path("/")))],
+            ops: vec![
+                MetaOp::PathInsert {
+                    key: Key::path(format!("/bench{c}")),
+                    inode: c,
+                    expect_absent: true,
+                },
+                MetaOp::Put {
+                    key: Key::inode(c),
+                    value: Value::Inode(wtf::types::Inode::new_file(c, 0o644, 2)),
+                },
+                MetaOp::Put {
+                    key: Key::new(wtf::types::Space::Region, format!("br{c}")),
+                    value: Value::Region(RegionMeta::default()),
+                },
+            ],
+        })
+    });
+
+    // Bulk transaction: thousands of appends to ONE region in a single
+    // commit (the shape of `concat` on a large file).
+    let mut b = 0u64;
+    Bench::new("meta/bulk-4096-appends-one-txn").iters(10).run(|| {
+        b += 1;
+        let key = Key::new(wtf::types::Space::Region, format!("bulk{b}"));
+        let ops = (0..4096u64)
+            .map(|i| MetaOp::RegionAppend {
+                key: key.clone(),
+                entry: RegionEntry {
+                    placement: Placement::At(i * 8),
+                    len: 8,
+                    data: stored(8),
+                },
+            })
+            .collect();
+        store.commit(&Commit { reads: vec![], ops })
+    });
+
+    // Conflict detection cost (validation failure path).
+    let key = Key::sys("conflict");
+    store
+        .commit(&Commit {
+            reads: vec![],
+            ops: vec![MetaOp::Put {
+                key: key.clone(),
+                value: Value::U64(0),
+            }],
+        })
+        .unwrap();
+    Bench::new("meta/conflict-detect").iters(50).run(|| {
+        let stale = Commit {
+            reads: vec![(key.clone(), 0)], // always stale
+            ops: vec![],
+        };
+        let _ = store.commit(&stale);
+    });
+}

@@ -1,0 +1,22 @@
+//! End-to-end regeneration of every table and figure (quick mode) —
+//! `cargo bench` therefore reproduces the paper's evaluation shapes in
+//! one command.  Use `repro bench --all` (without --quick) for the
+//! full-size runs.
+
+use wtf::bench::exps;
+
+fn main() {
+    for id in exps::all_experiments() {
+        let t0 = std::time::Instant::now();
+        match exps::run(id, true) {
+            Ok(report) => {
+                report.print();
+                println!("  [{id} regenerated in {:.2?}]\n", t0.elapsed());
+            }
+            Err(e) => {
+                eprintln!("experiment {id} FAILED: {e}");
+                std::process::exit(1);
+            }
+        }
+    }
+}

@@ -1,0 +1,39 @@
+//! Simulator engine throughput: events (resource serves) per second.
+//! The paper-scale figure sweeps issue millions of serves; the engine
+//! must not be the bottleneck of `repro bench --all`.
+
+use wtf::bench::Bench;
+use wtf::sim::engine::{run_pipelined, Sim};
+use wtf::sim::model::{ClusterModel, OpKind};
+use wtf::sim::Testbed;
+
+fn main() {
+    // Raw serve throughput.
+    let mut sim = Sim::new();
+    let rs: Vec<_> = (0..16).map(|_| sim.resource()).collect();
+    let mut i = 0usize;
+    Bench::new("sim/serve-1M").iters(10).run(|| {
+        let mut t = 0;
+        for k in 0..1_000_000u64 {
+            i = (i + 1) % rs.len();
+            t = sim.serve(rs[i], t, k % 97);
+        }
+        t
+    });
+
+    // Full write-model op.
+    Bench::new("sim/wtf-write-op-100k").iters(10).run(|| {
+        let mut model = ClusterModel::new(Testbed::default(), 12, 1);
+        run_pipelined(12, 100_000 / 12, |c, _, now| {
+            model.wtf_write_op(c, 4 << 20, OpKind::SeqWrite, now)
+        })
+    });
+
+    Bench::new("sim/hdfs-read-op-100k").iters(10).run(|| {
+        let mut model = ClusterModel::new(Testbed::default(), 12, 1);
+        run_pipelined(12, 100_000 / 12, |c, _, now| {
+            let done = model.hdfs_seq_read(c, 1 << 20, now);
+            (done, done)
+        })
+    });
+}

@@ -1,0 +1,372 @@
+//! The HDFS client: append-only writers with hflush, streaming readers
+//! with readahead, and positional (random) reads.  Random WRITES are
+//! structurally impossible — the API has no way to express them, exactly
+//! like HDFS (§4.2: "applications that need to change a file must
+//! rewrite the file in its entirety").
+
+use super::datanode::DataNode;
+use super::namenode::{BlockInfo, NameNode};
+use super::HdfsConfig;
+use crate::error::{Error, Result};
+use crate::types::ServerId;
+use std::sync::Arc;
+
+/// Client handle bound to one hdfs-lite deployment.
+#[derive(Clone)]
+pub struct HdfsClient {
+    config: HdfsConfig,
+    namenode: Arc<NameNode>,
+    datanodes: Vec<Arc<DataNode>>,
+}
+
+impl HdfsClient {
+    pub fn new(
+        config: HdfsConfig,
+        namenode: Arc<NameNode>,
+        datanodes: Vec<Arc<DataNode>>,
+    ) -> Self {
+        HdfsClient {
+            config,
+            namenode,
+            datanodes,
+        }
+    }
+
+    fn node(&self, id: ServerId) -> Result<&Arc<DataNode>> {
+        self.datanodes
+            .get(id as usize)
+            .ok_or(Error::ServerUnavailable(id))
+    }
+
+    /// Create a file and return its writer.
+    pub fn create(&self, path: &str) -> Result<HdfsWriter> {
+        self.namenode.create(path)?;
+        Ok(HdfsWriter {
+            client: self.clone(),
+            path: path.to_string(),
+            current: None,
+            buffer: Vec::new(),
+            closed: false,
+        })
+    }
+
+    /// Reopen an existing file for appending at the end.
+    pub fn append(&self, path: &str) -> Result<HdfsWriter> {
+        let current = self.namenode.reopen_for_append(path)?;
+        Ok(HdfsWriter {
+            client: self.clone(),
+            path: path.to_string(),
+            current,
+            buffer: Vec::new(),
+            closed: false,
+        })
+    }
+
+    /// Open a file for reading.
+    pub fn open(&self, path: &str) -> Result<HdfsReader> {
+        if !self.namenode.exists(path) {
+            return Err(Error::NotFound(path.into()));
+        }
+        Ok(HdfsReader {
+            client: self.clone(),
+            path: path.to_string(),
+            pos: 0,
+            readahead: Vec::new(),
+            readahead_at: 0,
+        })
+    }
+
+    pub fn len(&self, path: &str) -> Result<u64> {
+        self.namenode.len(path)
+    }
+
+    pub fn exists(&self, path: &str) -> bool {
+        self.namenode.exists(path)
+    }
+
+    /// Delete a file and its blocks.
+    pub fn delete(&self, path: &str) -> Result<()> {
+        let blocks = self.namenode.blocks(path)?;
+        self.namenode.delete(path)?;
+        for b in blocks {
+            for r in b.replicas {
+                if let Ok(dn) = self.node(r) {
+                    dn.delete_block(b.id);
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// Positional read without a stream (no readahead) — HDFS pread.
+    pub fn read_at(&self, path: &str, offset: u64, len: u64) -> Result<Vec<u8>> {
+        let file_len = self.namenode.len(path)?;
+        if offset >= file_len {
+            return Ok(Vec::new());
+        }
+        let len = len.min(file_len - offset);
+        let blocks = self.namenode.blocks(path)?;
+        let mut out = Vec::with_capacity(len as usize);
+        let mut cursor = offset;
+        let end = offset + len;
+        while cursor < end {
+            let (block, block_off) = locate(&blocks, cursor)?;
+            let take = (block.len - block_off).min(end - cursor);
+            let data = self.read_block_failover(block, block_off, take)?;
+            out.extend_from_slice(&data);
+            cursor += take;
+        }
+        Ok(out)
+    }
+
+    fn read_block_failover(&self, block: &BlockInfo, off: u64, len: u64) -> Result<Vec<u8>> {
+        let mut last = Error::InvalidArgument("no replicas".into());
+        for &r in &block.replicas {
+            match self.node(r).and_then(|dn| dn.read_block(block.id, off, len)) {
+                Ok(d) => return Ok(d),
+                Err(e) => last = e,
+            }
+        }
+        Err(last)
+    }
+}
+
+/// Map a file offset to `(block, offset in block)` using visible lengths.
+fn locate(blocks: &[BlockInfo], offset: u64) -> Result<(&BlockInfo, u64)> {
+    let mut base = 0u64;
+    for b in blocks {
+        if offset < base + b.len {
+            return Ok((b, offset - base));
+        }
+        base += b.len;
+    }
+    Err(Error::InvalidArgument(format!(
+        "offset {offset} beyond visible length"
+    )))
+}
+
+/// Append-only writer with client-side buffering and hflush.
+pub struct HdfsWriter {
+    client: HdfsClient,
+    path: String,
+    /// Block currently being filled.
+    current: Option<BlockInfo>,
+    /// Bytes not yet pushed to the pipeline.
+    buffer: Vec<u8>,
+    closed: bool,
+}
+
+impl HdfsWriter {
+    /// Buffer `data` (nothing is visible until [`Self::hflush`] /
+    /// [`Self::close`]).
+    pub fn write(&mut self, data: &[u8]) -> Result<()> {
+        if self.closed {
+            return Err(Error::InvalidArgument("write after close".into()));
+        }
+        self.buffer.extend_from_slice(data);
+        // Flush full blocks eagerly to bound the buffer.
+        while self.buffer.len() as u64 >= self.client.config.block_size {
+            self.push_one_block()?;
+        }
+        Ok(())
+    }
+
+    /// Push buffered bytes up to one block boundary into the pipeline.
+    fn push_one_block(&mut self) -> Result<()> {
+        let block_size = self.client.config.block_size;
+        // Allocate a block if needed.
+        if self.current.is_none() {
+            self.current = Some(self.client.namenode.add_block(&self.path)?);
+        }
+        let cur = self.current.as_ref().unwrap().clone();
+        let room = block_size - self.client.node(cur.replicas[0])?.block_len(cur.id);
+        let take = (room as usize).min(self.buffer.len());
+        let chunk: Vec<u8> = self.buffer.drain(..take).collect();
+        // Write pipeline: every replica, in order (HDFS datanode chain).
+        let mut new_len = 0;
+        for &r in &cur.replicas {
+            new_len = self.client.node(r)?.append_block(cur.id, &chunk)?;
+        }
+        self.client.namenode.publish(&self.path, cur.id, new_len)?;
+        if new_len >= block_size {
+            self.current = None; // next write allocates a fresh block
+        }
+        Ok(())
+    }
+
+    /// Make everything written so far visible to readers.  Matches HDFS
+    /// hflush: durability is NOT promised, visibility is.
+    pub fn hflush(&mut self) -> Result<()> {
+        while !self.buffer.is_empty() {
+            self.push_one_block()?;
+        }
+        Ok(())
+    }
+
+    /// Flush and seal the file.
+    pub fn close(&mut self) -> Result<()> {
+        if self.closed {
+            return Ok(());
+        }
+        self.hflush()?;
+        self.client.namenode.complete(&self.path)?;
+        self.closed = true;
+        Ok(())
+    }
+}
+
+/// Streaming reader with readahead.
+pub struct HdfsReader {
+    client: HdfsClient,
+    path: String,
+    pos: u64,
+    readahead: Vec<u8>,
+    readahead_at: u64,
+}
+
+impl HdfsReader {
+    /// Sequential read with readahead; short only at EOF.
+    pub fn read(&mut self, len: u64) -> Result<Vec<u8>> {
+        let mut out = Vec::with_capacity(len as usize);
+        let mut remaining = len;
+        while remaining > 0 {
+            // Serve from the readahead buffer when possible.
+            if self.pos >= self.readahead_at
+                && self.pos < self.readahead_at + self.readahead.len() as u64
+            {
+                let start = (self.pos - self.readahead_at) as usize;
+                let take = (self.readahead.len() - start).min(remaining as usize);
+                out.extend_from_slice(&self.readahead[start..start + take]);
+                self.pos += take as u64;
+                remaining -= take as u64;
+                continue;
+            }
+            // Refill: fetch max(requested, readahead) bytes.
+            let file_len = self.client.namenode.len(&self.path)?;
+            if self.pos >= file_len {
+                break;
+            }
+            let fetch = remaining.max(self.client.config.readahead);
+            let data = self.client.read_at(&self.path, self.pos, fetch)?;
+            if data.is_empty() {
+                break;
+            }
+            self.readahead_at = self.pos;
+            self.readahead = data;
+        }
+        Ok(out)
+    }
+
+    /// Reposition the stream (reads only — this is HDFS).
+    pub fn seek(&mut self, pos: u64) {
+        self.pos = pos;
+    }
+
+    pub fn pos(&self) -> u64 {
+        self.pos
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::{HdfsCluster, HdfsConfig};
+    use crate::net::LinkModel;
+
+    fn cluster() -> HdfsCluster {
+        HdfsCluster::new(HdfsConfig::test(), None, LinkModel::instant()).unwrap()
+    }
+
+    #[test]
+    fn write_spans_blocks_and_reads_back() {
+        let cl = cluster();
+        let c = cl.client();
+        let mut w = c.create("/big").unwrap();
+        let data: Vec<u8> = (0..3 * 4096 + 17).map(|i| (i % 251) as u8).collect();
+        w.write(&data).unwrap();
+        w.close().unwrap();
+        assert_eq!(c.len("/big").unwrap(), data.len() as u64);
+        let back = c.read_at("/big", 0, data.len() as u64).unwrap();
+        assert_eq!(back, data);
+        // Cross-block positional read.
+        assert_eq!(
+            c.read_at("/big", 4090, 12).unwrap(),
+            &data[4090..4102]
+        );
+    }
+
+    #[test]
+    fn hflush_publishes_without_close() {
+        let cl = cluster();
+        let c = cl.client();
+        let mut w = c.create("/f").unwrap();
+        w.write(b"invisible").unwrap();
+        assert_eq!(c.len("/f").unwrap(), 0, "buffered bytes invisible");
+        w.hflush().unwrap();
+        assert_eq!(c.len("/f").unwrap(), 9);
+        let mut r = c.open("/f").unwrap();
+        assert_eq!(r.read(9).unwrap(), b"invisible");
+        w.close().unwrap();
+    }
+
+    #[test]
+    fn reopen_for_append_continues_partial_block() {
+        let cl = cluster();
+        let c = cl.client();
+        let mut w = c.create("/log").unwrap();
+        w.write(b"first,").unwrap();
+        w.close().unwrap();
+        let mut w = c.append("/log").unwrap();
+        w.write(b"second").unwrap();
+        w.close().unwrap();
+        assert_eq!(c.read_at("/log", 0, 12).unwrap(), b"first,second");
+    }
+
+    #[test]
+    fn no_random_writes_by_construction() {
+        // The writer API exposes only write/hflush/close: there is no
+        // way to express a random write.  Verify append-only behavior.
+        let cl = cluster();
+        let c = cl.client();
+        let mut w = c.create("/ro").unwrap();
+        w.write(b"abc").unwrap();
+        w.close().unwrap();
+        assert!(w.write(b"late").is_err(), "write after close");
+    }
+
+    #[test]
+    fn streaming_reader_with_readahead() {
+        let cl = cluster();
+        let c = cl.client();
+        let mut w = c.create("/stream").unwrap();
+        let data: Vec<u8> = (0..10_000).map(|i| (i % 256) as u8).collect();
+        w.write(&data).unwrap();
+        w.close().unwrap();
+        let reads_before: u64 = cl.bytes_read();
+        let mut r = c.open("/stream").unwrap();
+        let mut got = Vec::new();
+        // 100 tiny reads; readahead (1 KB in test config) batches them.
+        for _ in 0..100 {
+            got.extend(r.read(10).unwrap());
+        }
+        assert_eq!(&got[..], &data[..1000]);
+        let fetched = cl.bytes_read() - reads_before;
+        // Without readahead this would be 100 separate 10 B reads; with
+        // it, we fetch ~1 KB chunks: roughly 1000 bytes total.
+        assert!(fetched >= 1000 && fetched < 3000, "fetched {fetched}");
+        // Seek + continue.
+        r.seek(9990);
+        assert_eq!(r.read(100).unwrap(), &data[9990..]);
+    }
+
+    #[test]
+    fn delete_removes_blocks() {
+        let cl = cluster();
+        let c = cl.client();
+        let mut w = c.create("/d").unwrap();
+        w.write(&vec![1u8; 5000]).unwrap();
+        w.close().unwrap();
+        c.delete("/d").unwrap();
+        assert!(!c.exists("/d"));
+        assert!(c.read_at("/d", 0, 1).is_err());
+    }
+}

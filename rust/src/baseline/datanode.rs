@@ -1,0 +1,153 @@
+//! HDFS data node: stores blocks as local files, supports append and
+//! positional read.  Server-side readahead is modeled in the client's
+//! read path (one buffer per stream, as HDFS does).
+
+use crate::error::{Error, Result};
+use crate::metrics::Metrics;
+use crate::net::LinkModel;
+use crate::types::ServerId;
+use crate::util::TempDir;
+use std::collections::HashMap;
+use std::fs::{File, OpenOptions};
+use std::os::unix::fs::FileExt;
+use std::path::PathBuf;
+use std::sync::Mutex;
+
+use super::namenode::BlockId;
+
+/// One data node.
+#[derive(Debug)]
+pub struct DataNode {
+    id: ServerId,
+    _tempdir: Option<TempDir>,
+    dir: PathBuf,
+    blocks: Mutex<HashMap<BlockId, BlockFile>>,
+    metrics: Metrics,
+    link: LinkModel,
+}
+
+#[derive(Debug)]
+struct BlockFile {
+    file: File,
+    len: u64,
+}
+
+impl DataNode {
+    pub fn new(id: ServerId, dir: Option<PathBuf>, link: LinkModel) -> Result<Self> {
+        let (tempdir, dir) = match dir {
+            Some(d) => {
+                std::fs::create_dir_all(&d)?;
+                (None, d)
+            }
+            None => {
+                let t = TempDir::new(&format!("hdfs-dn-{id}"))?;
+                let p = t.path().to_path_buf();
+                (Some(t), p)
+            }
+        };
+        Ok(DataNode {
+            id,
+            _tempdir: tempdir,
+            dir,
+            blocks: Mutex::new(HashMap::new()),
+            metrics: Metrics::new(),
+            link,
+        })
+    }
+
+    pub fn id(&self) -> ServerId {
+        self.id
+    }
+
+    pub fn metrics(&self) -> &Metrics {
+        &self.metrics
+    }
+
+    /// Append `data` to `block` (creating it on first write).  Returns
+    /// the block's new length.
+    pub fn append_block(&self, block: BlockId, data: &[u8]) -> Result<u64> {
+        self.link.charge(data.len() as u64);
+        let mut g = self.blocks.lock().unwrap();
+        let entry = match g.get_mut(&block) {
+            Some(b) => b,
+            None => {
+                let path = self.dir.join(format!("blk_{block:016x}"));
+                let file = OpenOptions::new()
+                    .read(true)
+                    .write(true)
+                    .create(true)
+                    .truncate(true)
+                    .open(path)?;
+                g.insert(block, BlockFile { file, len: 0 });
+                g.get_mut(&block).unwrap()
+            }
+        };
+        entry.file.write_all_at(data, entry.len)?;
+        entry.len += data.len() as u64;
+        self.metrics.add_bytes_written(data.len() as u64);
+        self.metrics.add_ops_written(1);
+        Ok(entry.len)
+    }
+
+    /// Positional read within a block.
+    pub fn read_block(&self, block: BlockId, offset: u64, len: u64) -> Result<Vec<u8>> {
+        let g = self.blocks.lock().unwrap();
+        let entry = g.get(&block).ok_or(Error::SliceNotFound {
+            server: self.id,
+            backing: 0,
+            offset,
+            len,
+        })?;
+        let len = len.min(entry.len.saturating_sub(offset));
+        let mut buf = vec![0u8; len as usize];
+        entry.file.read_exact_at(&mut buf, offset)?;
+        drop(g);
+        self.link.charge(len);
+        self.metrics.add_bytes_read(len);
+        self.metrics.add_ops_read(1);
+        Ok(buf)
+    }
+
+    /// Stored length of a block (0 when absent).
+    pub fn block_len(&self, block: BlockId) -> u64 {
+        self.blocks
+            .lock()
+            .unwrap()
+            .get(&block)
+            .map(|b| b.len)
+            .unwrap_or(0)
+    }
+
+    pub fn delete_block(&self, block: BlockId) {
+        self.blocks.lock().unwrap().remove(&block);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn append_and_read() {
+        let dn = DataNode::new(0, None, LinkModel::instant()).unwrap();
+        assert_eq!(dn.append_block(7, b"abc").unwrap(), 3);
+        assert_eq!(dn.append_block(7, b"def").unwrap(), 6);
+        assert_eq!(dn.read_block(7, 0, 6).unwrap(), b"abcdef");
+        assert_eq!(dn.read_block(7, 2, 2).unwrap(), b"cd");
+        // Reads past the stored length are clamped, as with short reads.
+        assert_eq!(dn.read_block(7, 4, 100).unwrap(), b"ef");
+        assert!(dn.read_block(9, 0, 1).is_err());
+    }
+
+    #[test]
+    fn blocks_are_independent() {
+        let dn = DataNode::new(0, None, LinkModel::instant()).unwrap();
+        dn.append_block(1, b"one").unwrap();
+        dn.append_block(2, b"two").unwrap();
+        assert_eq!(dn.read_block(1, 0, 3).unwrap(), b"one");
+        assert_eq!(dn.read_block(2, 0, 3).unwrap(), b"two");
+        dn.delete_block(1);
+        assert!(dn.read_block(1, 0, 1).is_err());
+        assert_eq!(dn.block_len(2), 3);
+    }
+}

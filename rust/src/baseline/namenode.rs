@@ -1,0 +1,255 @@
+//! The central HDFS name node: all filesystem metadata in one process's
+//! memory, the design WTF's §5 calls the "scalability bottleneck
+//! inherent to the limits of a single server".
+
+use crate::error::{Error, Result};
+use crate::types::ServerId;
+use std::collections::HashMap;
+use std::sync::Mutex;
+
+/// Identifier of one block.
+pub type BlockId = u64;
+
+/// Where a block lives and how many bytes of it are visible.
+#[derive(Clone, Debug)]
+pub struct BlockInfo {
+    pub id: BlockId,
+    /// Data nodes holding replicas (pipeline order).
+    pub replicas: Vec<ServerId>,
+    /// Visible length (grows on hflush up to the block size).
+    pub len: u64,
+}
+
+#[derive(Clone, Debug, Default)]
+struct FileMeta {
+    blocks: Vec<BlockInfo>,
+    /// Visible length (hflush-published).
+    len: u64,
+    under_construction: bool,
+}
+
+#[derive(Debug, Default)]
+struct State {
+    files: HashMap<String, FileMeta>,
+    next_block: BlockId,
+    rr_cursor: u32,
+}
+
+/// The name node.  One big lock, as in the original (the HDFS namesystem
+/// lock is famously coarse).
+#[derive(Debug)]
+pub struct NameNode {
+    block_size: u64,
+    replication: u8,
+    datanodes: u32,
+    state: Mutex<State>,
+}
+
+impl NameNode {
+    pub fn new(block_size: u64, replication: u8, datanodes: u32) -> Self {
+        NameNode {
+            block_size,
+            replication,
+            datanodes,
+            state: Mutex::new(State::default()),
+        }
+    }
+
+    pub fn block_size(&self) -> u64 {
+        self.block_size
+    }
+
+    /// Create a file for writing; fails if it exists (HDFS create).
+    pub fn create(&self, path: &str) -> Result<()> {
+        let mut s = self.state.lock().unwrap();
+        if s.files.contains_key(path) {
+            return Err(Error::AlreadyExists(path.into()));
+        }
+        s.files.insert(
+            path.to_string(),
+            FileMeta {
+                blocks: Vec::new(),
+                len: 0,
+                under_construction: true,
+            },
+        );
+        Ok(())
+    }
+
+    /// Allocate the next block of `path`, choosing `replication` data
+    /// nodes round-robin (HDFS's default placement modulo rack awareness).
+    pub fn add_block(&self, path: &str) -> Result<BlockInfo> {
+        let mut s = self.state.lock().unwrap();
+        let id = s.next_block;
+        s.next_block += 1;
+        let want = (self.replication.max(1) as u32).min(self.datanodes) as usize;
+        let mut replicas = Vec::with_capacity(want);
+        for i in 0..want {
+            replicas.push((s.rr_cursor + i as u32) % self.datanodes);
+        }
+        s.rr_cursor = (s.rr_cursor + 1) % self.datanodes;
+        let info = BlockInfo {
+            id,
+            replicas,
+            len: 0,
+        };
+        let file = s
+            .files
+            .get_mut(path)
+            .ok_or_else(|| Error::NotFound(path.into()))?;
+        if !file.under_construction {
+            return Err(Error::Unsupported(
+                "append to closed file requires reopen-for-append".into(),
+            ));
+        }
+        file.blocks.push(info.clone());
+        Ok(info)
+    }
+
+    /// Publish `new_len` bytes of the last block (hflush).
+    pub fn publish(&self, path: &str, block: BlockId, block_len: u64) -> Result<()> {
+        let mut s = self.state.lock().unwrap();
+        let block_size = self.block_size;
+        let file = s
+            .files
+            .get_mut(path)
+            .ok_or_else(|| Error::NotFound(path.into()))?;
+        let b = file
+            .blocks
+            .iter_mut()
+            .find(|b| b.id == block)
+            .ok_or_else(|| Error::CorruptMetadata(format!("block {block} not in {path}")))?;
+        if block_len > block_size {
+            return Err(Error::InvalidArgument("block overflow".into()));
+        }
+        b.len = b.len.max(block_len);
+        file.len = file
+            .blocks
+            .iter()
+            .map(|b| b.len)
+            .sum();
+        Ok(())
+    }
+
+    /// Close a file (no further appends without reopen).
+    pub fn complete(&self, path: &str) -> Result<()> {
+        let mut s = self.state.lock().unwrap();
+        let file = s
+            .files
+            .get_mut(path)
+            .ok_or_else(|| Error::NotFound(path.into()))?;
+        file.under_construction = false;
+        Ok(())
+    }
+
+    /// Reopen for append (HDFS append support, the feature whose bug
+    /// forced the paper's 64 MB block-size workaround).
+    pub fn reopen_for_append(&self, path: &str) -> Result<Option<BlockInfo>> {
+        let mut s = self.state.lock().unwrap();
+        let block_size = self.block_size;
+        let file = s
+            .files
+            .get_mut(path)
+            .ok_or_else(|| Error::NotFound(path.into()))?;
+        file.under_construction = true;
+        Ok(file
+            .blocks
+            .last()
+            .filter(|b| b.len < block_size)
+            .cloned())
+    }
+
+    /// Visible length of `path`.
+    pub fn len(&self, path: &str) -> Result<u64> {
+        let s = self.state.lock().unwrap();
+        s.files
+            .get(path)
+            .map(|f| f.len)
+            .ok_or_else(|| Error::NotFound(path.into()))
+    }
+
+    pub fn exists(&self, path: &str) -> bool {
+        self.state.lock().unwrap().files.contains_key(path)
+    }
+
+    /// Block layout of `path` (for readers).
+    pub fn blocks(&self, path: &str) -> Result<Vec<BlockInfo>> {
+        let s = self.state.lock().unwrap();
+        s.files
+            .get(path)
+            .map(|f| f.blocks.clone())
+            .ok_or_else(|| Error::NotFound(path.into()))
+    }
+
+    pub fn delete(&self, path: &str) -> Result<()> {
+        let mut s = self.state.lock().unwrap();
+        s.files
+            .remove(path)
+            .map(|_| ())
+            .ok_or_else(|| Error::NotFound(path.into()))
+    }
+
+    /// Number of files (observability).
+    pub fn file_count(&self) -> usize {
+        self.state.lock().unwrap().files.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn create_add_publish_len() {
+        let nn = NameNode::new(100, 2, 4);
+        nn.create("/f").unwrap();
+        assert!(matches!(nn.create("/f"), Err(Error::AlreadyExists(_))));
+        let b0 = nn.add_block("/f").unwrap();
+        assert_eq!(b0.replicas.len(), 2);
+        nn.publish("/f", b0.id, 60).unwrap();
+        assert_eq!(nn.len("/f").unwrap(), 60);
+        let b1 = nn.add_block("/f").unwrap();
+        nn.publish("/f", b0.id, 100).unwrap();
+        nn.publish("/f", b1.id, 30).unwrap();
+        assert_eq!(nn.len("/f").unwrap(), 130);
+    }
+
+    #[test]
+    fn closed_files_reject_new_blocks() {
+        let nn = NameNode::new(100, 1, 2);
+        nn.create("/f").unwrap();
+        nn.complete("/f").unwrap();
+        assert!(nn.add_block("/f").is_err());
+        // Reopen-for-append restores writability.
+        nn.reopen_for_append("/f").unwrap();
+        assert!(nn.add_block("/f").is_ok());
+    }
+
+    #[test]
+    fn publish_rejects_block_overflow() {
+        let nn = NameNode::new(100, 1, 2);
+        nn.create("/f").unwrap();
+        let b = nn.add_block("/f").unwrap();
+        assert!(nn.publish("/f", b.id, 101).is_err());
+    }
+
+    #[test]
+    fn round_robin_spreads_blocks() {
+        let nn = NameNode::new(10, 1, 3);
+        nn.create("/f").unwrap();
+        let mut seen = std::collections::HashSet::new();
+        for _ in 0..3 {
+            seen.insert(nn.add_block("/f").unwrap().replicas[0]);
+        }
+        assert_eq!(seen.len(), 3);
+    }
+
+    #[test]
+    fn delete_removes() {
+        let nn = NameNode::new(10, 1, 1);
+        nn.create("/f").unwrap();
+        nn.delete("/f").unwrap();
+        assert!(!nn.exists("/f"));
+        assert!(nn.delete("/f").is_err());
+    }
+}

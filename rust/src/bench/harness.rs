@@ -1,0 +1,93 @@
+//! A small measurement harness (stand-in for criterion in the offline
+//! build): warmup, timed iterations, summary statistics, throughput.
+
+use super::stats::{fmt_ns, fmt_rate, Summary};
+use std::time::Instant;
+
+/// One registered benchmark run.
+pub struct Bench {
+    name: String,
+    warmup: u32,
+    iters: u32,
+}
+
+impl Bench {
+    pub fn new(name: impl Into<String>) -> Bench {
+        Bench {
+            name: name.into(),
+            warmup: 3,
+            iters: 20,
+        }
+    }
+
+    pub fn warmup(mut self, n: u32) -> Self {
+        self.warmup = n;
+        self
+    }
+
+    pub fn iters(mut self, n: u32) -> Self {
+        self.iters = n;
+        self
+    }
+
+    /// Run `f` (whose return value is black-boxed) and print a summary.
+    /// Returns the per-iteration summary for programmatic use.
+    pub fn run<T>(&self, mut f: impl FnMut() -> T) -> Summary {
+        for _ in 0..self.warmup {
+            black_box(f());
+        }
+        let mut samples = Vec::with_capacity(self.iters as usize);
+        for _ in 0..self.iters {
+            let t0 = Instant::now();
+            black_box(f());
+            samples.push(t0.elapsed().as_nanos() as u64);
+        }
+        let s = Summary::of(&samples);
+        println!(
+            "{:<44} {:>12}/iter  p50 {:>10}  p95 {:>10}  (n={})",
+            self.name,
+            fmt_ns(s.mean as u64),
+            fmt_ns(s.p50),
+            fmt_ns(s.p95),
+            s.n
+        );
+        s
+    }
+
+    /// Like [`Bench::run`] but also reports throughput for `bytes`
+    /// processed per iteration.
+    pub fn run_bytes<T>(&self, bytes: u64, f: impl FnMut() -> T) -> Summary {
+        let s = self.run(f);
+        if s.mean > 0.0 {
+            let rate = bytes as f64 / (s.mean / 1e9);
+            println!("{:<44} {:>14}", format!("  └─ throughput ({bytes} B)"), fmt_rate(rate));
+        }
+        s
+    }
+}
+
+/// Opaque value sink that defeats dead-code elimination without unsafe
+/// (std::hint::black_box is stable).
+pub fn black_box<T>(x: T) -> T {
+    std::hint::black_box(x)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_measures_something() {
+        let s = Bench::new("noop").warmup(1).iters(5).run(|| 1 + 1);
+        assert_eq!(s.n, 5);
+    }
+
+    #[test]
+    fn bench_bytes_reports() {
+        let s = Bench::new("memcpy")
+            .warmup(1)
+            .iters(5)
+            .run_bytes(1 << 20, || vec![0u8; 1 << 20]);
+        assert!(s.mean > 0.0);
+    }
+}

@@ -1,0 +1,13 @@
+//! Benchmark infrastructure: statistics, a small bench harness (the
+//! offline build has no criterion), and the experiment suite that
+//! regenerates every table and figure of the paper's evaluation.
+//!
+//! Entry point: `repro bench --exp <id>` (see `rust/src/main.rs`), or
+//! programmatically via [`exps`].
+
+pub mod exps;
+pub mod harness;
+pub mod stats;
+
+pub use harness::Bench;
+pub use stats::Summary;

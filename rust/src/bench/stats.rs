@@ -1,0 +1,130 @@
+//! Percentiles, means, and standard errors for benchmark reporting —
+//! the quantities in the paper's error bars (stderr of the mean across
+//! trials; p5/p95 and p99 latencies).
+
+/// Summary statistics over a sample of u64 measurements (ns or bytes).
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct Summary {
+    pub n: usize,
+    pub mean: f64,
+    pub stderr: f64,
+    pub min: u64,
+    pub max: u64,
+    pub p50: u64,
+    pub p95: u64,
+    pub p99: u64,
+    pub p5: u64,
+}
+
+impl Summary {
+    /// Compute from an unsorted sample.  Empty input yields zeros.
+    pub fn of(sample: &[u64]) -> Summary {
+        if sample.is_empty() {
+            return Summary::default();
+        }
+        let mut v = sample.to_vec();
+        v.sort_unstable();
+        let n = v.len();
+        let mean = v.iter().map(|&x| x as f64).sum::<f64>() / n as f64;
+        let var = v
+            .iter()
+            .map(|&x| {
+                let d = x as f64 - mean;
+                d * d
+            })
+            .sum::<f64>()
+            / n.max(2).saturating_sub(1) as f64;
+        Summary {
+            n,
+            mean,
+            stderr: (var / n as f64).sqrt(),
+            min: v[0],
+            max: v[n - 1],
+            p50: pct(&v, 50.0),
+            p95: pct(&v, 95.0),
+            p99: pct(&v, 99.0),
+            p5: pct(&v, 5.0),
+        }
+    }
+}
+
+/// Nearest-rank percentile of a sorted sample.
+pub fn pct(sorted: &[u64], p: f64) -> u64 {
+    if sorted.is_empty() {
+        return 0;
+    }
+    let rank = ((p / 100.0) * sorted.len() as f64).ceil() as usize;
+    sorted[rank.clamp(1, sorted.len()) - 1]
+}
+
+/// Format nanoseconds human-readably.
+pub fn fmt_ns(ns: u64) -> String {
+    match ns {
+        0..=9_999 => format!("{ns} ns"),
+        10_000..=9_999_999 => format!("{:.1} µs", ns as f64 / 1e3),
+        10_000_000..=1_999_999_999 => format!("{:.1} ms", ns as f64 / 1e6),
+        _ => format!("{:.2} s", ns as f64 / 1e9),
+    }
+}
+
+/// Format bytes/second human-readably.
+pub fn fmt_rate(bytes_per_sec: f64) -> String {
+    if bytes_per_sec >= 1e9 {
+        format!("{:.2} GB/s", bytes_per_sec / 1e9)
+    } else if bytes_per_sec >= 1e6 {
+        format!("{:.1} MB/s", bytes_per_sec / 1e6)
+    } else {
+        format!("{:.1} kB/s", bytes_per_sec / 1e3)
+    }
+}
+
+/// Format a byte count.
+pub fn fmt_bytes(b: u64) -> String {
+    if b >= 1 << 30 {
+        format!("{:.2} GB", b as f64 / (1u64 << 30) as f64)
+    } else if b >= 1 << 20 {
+        format!("{:.1} MB", b as f64 / (1u64 << 20) as f64)
+    } else if b >= 1 << 10 {
+        format!("{:.1} kB", b as f64 / 1024.0)
+    } else {
+        format!("{b} B")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn summary_of_uniform() {
+        let v: Vec<u64> = (1..=100).collect();
+        let s = Summary::of(&v);
+        assert_eq!(s.n, 100);
+        assert_eq!(s.mean, 50.5);
+        assert_eq!(s.p50, 50);
+        assert_eq!(s.p95, 95);
+        assert_eq!(s.p99, 99);
+        assert_eq!(s.p5, 5);
+        assert_eq!((s.min, s.max), (1, 100));
+        assert!(s.stderr > 2.8 && s.stderr < 3.0, "{}", s.stderr);
+    }
+
+    #[test]
+    fn empty_and_single() {
+        assert_eq!(Summary::of(&[]).n, 0);
+        let s = Summary::of(&[7]);
+        assert_eq!(s.p50, 7);
+        assert_eq!(s.mean, 7.0);
+    }
+
+    #[test]
+    fn formatting() {
+        assert_eq!(fmt_ns(12), "12 ns");
+        assert_eq!(fmt_ns(15_000), "15.0 µs");
+        assert_eq!(fmt_ns(15_000_000), "15.0 ms");
+        assert_eq!(fmt_ns(3_000_000_000), "3.00 s");
+        assert_eq!(fmt_rate(400e6), "400.0 MB/s");
+        assert_eq!(fmt_rate(9.3e9), "9.30 GB/s");
+        assert_eq!(fmt_bytes(100 << 20), "100.0 MB");
+    }
+}

@@ -1,0 +1,431 @@
+//! Overlay resolution and metadata compaction (§2.1, Fig. 2; §2.8 tier 1).
+//!
+//! A region's metadata is an ordered list of slice entries; where entries
+//! overlap, the *latest* wins.  [`resolve`] turns the list into the
+//! minimal sorted, disjoint extent sequence needed to reconstruct the
+//! region's bytes; [`compact`] rebuilds a `RegionMeta` from that sequence
+//! — fusing slices that locality-aware placement made adjacent on disk —
+//! and is the unit of tier-1 garbage collection (no storage I/O at all).
+
+use crate::types::{Placement, RegionEntry, RegionMeta, SliceData};
+use std::collections::BTreeMap;
+
+/// One resolved extent of a region: bytes `[start, start+len)` come from
+/// `data` (or are zeros for holes).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Extent {
+    /// Region-relative start offset.
+    pub start: u64,
+    pub len: u64,
+    pub data: SliceData,
+}
+
+impl Extent {
+    pub fn end(&self) -> u64 {
+        self.start + self.len
+    }
+
+    /// Sub-extent clipped to `[from, to)` (absolute region offsets).
+    pub fn clip(&self, from: u64, to: u64) -> Option<Extent> {
+        let s = self.start.max(from);
+        let e = self.end().min(to);
+        if s >= e {
+            return None;
+        }
+        Some(Extent {
+            start: s,
+            len: e - s,
+            data: self.data.slice(s - self.start, e - self.start),
+        })
+    }
+}
+
+/// Resolve an entry list (already including any spilled base, see
+/// `client::spill`) into sorted, disjoint extents.  Later entries take
+/// precedence over earlier ones.  `Placement::Eof` entries must have been
+/// resolved to explicit offsets by the metadata store; they never appear
+/// in committed lists.
+pub fn resolve_entries(entries: &[RegionEntry]) -> Vec<Extent> {
+    // Interval map keyed by start offset; values are extents.
+    let mut map: BTreeMap<u64, Extent> = BTreeMap::new();
+    for entry in entries {
+        let at = match entry.placement {
+            Placement::At(a) => a,
+            Placement::Eof => {
+                debug_assert!(false, "committed entry with unresolved Eof placement");
+                continue;
+            }
+        };
+        if entry.len == 0 {
+            continue;
+        }
+        let (new_start, new_end) = (at, at + entry.len);
+
+        // Find extents overlapping [new_start, new_end) and trim them.
+        // Candidates: the last extent starting <= new_start, plus all
+        // extents starting inside the new range.
+        let mut to_remove: Vec<u64> = Vec::new();
+        let mut to_insert: Vec<Extent> = Vec::new();
+        // Left neighbor reaching into the new range.
+        if let Some((&s, ext)) = map.range(..new_start).next_back() {
+            if ext.end() > new_start {
+                to_remove.push(s);
+                // Left remainder survives.
+                to_insert.push(Extent {
+                    start: s,
+                    len: new_start - s,
+                    data: ext.data.slice(0, new_start - s),
+                });
+                // Right remainder survives if it extends past the new end.
+                if ext.end() > new_end {
+                    to_insert.push(Extent {
+                        start: new_end,
+                        len: ext.end() - new_end,
+                        data: ext.data.slice(new_end - s, ext.end() - s),
+                    });
+                }
+            }
+        }
+        // Extents starting inside the new range are (partially) shadowed.
+        let inside: Vec<u64> = map.range(new_start..new_end).map(|(&s, _)| s).collect();
+        for s in inside {
+            let ext = &map[&s];
+            to_remove.push(s);
+            if ext.end() > new_end {
+                to_insert.push(Extent {
+                    start: new_end,
+                    len: ext.end() - new_end,
+                    data: ext.data.slice(new_end - s, ext.end() - s),
+                });
+            }
+        }
+        for s in to_remove {
+            map.remove(&s);
+        }
+        for e in to_insert {
+            map.insert(e.start, e);
+        }
+        map.insert(
+            new_start,
+            Extent {
+                start: new_start,
+                len: entry.len,
+                data: entry.data.clone(),
+            },
+        );
+    }
+    map.into_values().collect()
+}
+
+/// Fuse adjacent resolved extents whose replica pointer lists are
+/// pairwise adjacent on disk — the payoff of locality-aware placement
+/// (§2.7): a sequential writer's many slices compact to one pointer.
+pub fn fuse_extents(extents: Vec<Extent>) -> Vec<Extent> {
+    let mut out: Vec<Extent> = Vec::with_capacity(extents.len());
+    for e in extents {
+        if let Some(last) = out.last_mut() {
+            if last.end() == e.start {
+                match (&last.data, &e.data) {
+                    (SliceData::Hole, SliceData::Hole) => {
+                        last.len += e.len;
+                        continue;
+                    }
+                    (SliceData::Stored(a), SliceData::Stored(b))
+                        if a.len() == b.len()
+                            && a.iter().zip(b.iter()).all(|(x, y)| x.is_adjacent(y)) =>
+                    {
+                        let fused = a
+                            .iter()
+                            .zip(b.iter())
+                            .map(|(x, y)| x.fuse(y))
+                            .collect();
+                        last.data = SliceData::Stored(fused);
+                        last.len += e.len;
+                        continue;
+                    }
+                    _ => {}
+                }
+            }
+        }
+        out.push(e);
+    }
+    out
+}
+
+/// Tier-1 compaction: resolved + fused extents re-encoded as the minimal
+/// entry list.  The resulting region reconstructs identical bytes.
+pub fn compact(region: &RegionMeta) -> RegionMeta {
+    let extents = fuse_extents(resolve_entries(&region.entries));
+    RegionMeta {
+        spill: region.spill.clone(),
+        entries: extents
+            .into_iter()
+            .map(|e| RegionEntry {
+                placement: Placement::At(e.start),
+                len: e.len,
+                data: e.data,
+            })
+            .collect(),
+        eof: region.eof,
+    }
+}
+
+/// Clip resolved extents to the window `[from, to)`, preserving order.
+pub fn clip_extents(extents: &[Extent], from: u64, to: u64) -> Vec<Extent> {
+    extents.iter().filter_map(|e| e.clip(from, to)).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::types::SlicePtr;
+
+    fn ptr(backing: u32, offset: u64, len: u64) -> SlicePtr {
+        SlicePtr {
+            server: 1,
+            backing,
+            offset,
+            len,
+        }
+    }
+
+    fn entry(at: u64, len: u64, backing: u32, off: u64) -> RegionEntry {
+        RegionEntry {
+            placement: Placement::At(at),
+            len,
+            data: SliceData::Stored(vec![ptr(backing, off, len)]),
+        }
+    }
+
+    fn region(entries: Vec<RegionEntry>) -> RegionMeta {
+        let eof = entries
+            .iter()
+            .map(|e| match e.placement {
+                Placement::At(a) => a + e.len,
+                Placement::Eof => 0,
+            })
+            .max()
+            .unwrap_or(0);
+        RegionMeta {
+            spill: None,
+            entries,
+            eof,
+        }
+    }
+
+    /// Reference implementation: byte-level overlay.
+    fn resolve_bytewise(entries: &[RegionEntry], size: u64) -> Vec<Option<(usize, u64)>> {
+        // For each byte: (entry index, offset within entry) of the winner.
+        let mut bytes = vec![None; size as usize];
+        for (i, e) in entries.iter().enumerate() {
+            let Placement::At(at) = e.placement else {
+                continue;
+            };
+            for b in 0..e.len {
+                bytes[(at + b) as usize] = Some((i, b));
+            }
+        }
+        bytes
+    }
+
+    /// Check `resolve_entries` against the byte-level oracle.
+    fn check_against_oracle(entries: &[RegionEntry], size: u64) {
+        let extents = resolve_entries(entries);
+        let oracle = resolve_bytewise(entries, size);
+        // Disjoint + sorted.
+        for w in extents.windows(2) {
+            assert!(w[0].end() <= w[1].start, "overlap: {w:?}");
+        }
+        // Every byte maps to the same source as the oracle.
+        let mut covered = vec![false; size as usize];
+        for e in &extents {
+            for b in 0..e.len {
+                let abs = (e.start + b) as usize;
+                covered[abs] = true;
+                let got = match &e.data {
+                    SliceData::Stored(v) => Some(v[0].offset + b),
+                    SliceData::Hole => None,
+                };
+                let want = oracle[abs].map(|(i, off)| match &entries[i].data {
+                    SliceData::Stored(v) => v[0].offset + off,
+                    SliceData::Hole => u64::MAX,
+                });
+                let want = match want {
+                    Some(u64::MAX) => None,
+                    w => w,
+                };
+                assert_eq!(got, want, "byte {abs}");
+            }
+        }
+        for (i, c) in covered.iter().enumerate() {
+            assert_eq!(*c, oracle[i].is_some(), "coverage at byte {i}");
+        }
+    }
+
+    #[test]
+    fn paper_figure_2_example() {
+        // A@[0,2), B@[2,4), C@[1,3), D@[2,3), E@[2,3) (MB -> use bytes).
+        let mb = 1u64; // scale factor irrelevant
+        let entries = vec![
+            entry(0, 2 * mb, 0, 0),   // A
+            entry(2 * mb, 2 * mb, 0, 100), // B
+            entry(1 * mb, 2 * mb, 0, 200), // C
+            entry(2 * mb, 1 * mb, 0, 300), // D
+            entry(2 * mb, 1 * mb, 0, 400), // E
+        ];
+        let extents = resolve_entries(&entries);
+        // Compacted: A@[0,1), C@[1,2), E@[2,3), B@[3,4).
+        assert_eq!(extents.len(), 4);
+        assert_eq!(
+            extents.iter().map(|e| (e.start, e.len)).collect::<Vec<_>>(),
+            vec![(0, mb), (mb, mb), (2 * mb, mb), (3 * mb, mb)]
+        );
+        // Sources: A(0), C(200), E(400), B(101).
+        let src = |e: &Extent| match &e.data {
+            SliceData::Stored(v) => v[0].offset,
+            _ => panic!(),
+        };
+        assert_eq!(src(&extents[0]), 0);
+        assert_eq!(src(&extents[1]), 200);
+        assert_eq!(src(&extents[2]), 400);
+        assert_eq!(src(&extents[3]), 101);
+        check_against_oracle(&entries, 4 * mb);
+    }
+
+    #[test]
+    fn later_entries_win_and_split_earlier() {
+        let entries = vec![entry(0, 100, 0, 0), entry(40, 20, 1, 0)];
+        let extents = resolve_entries(&entries);
+        assert_eq!(extents.len(), 3);
+        assert_eq!((extents[0].start, extents[0].len), (0, 40));
+        assert_eq!((extents[1].start, extents[1].len), (40, 20));
+        assert_eq!((extents[2].start, extents[2].len), (60, 40));
+        // Right remainder points into the original slice at offset 60.
+        match &extents[2].data {
+            SliceData::Stored(v) => assert_eq!(v[0].offset, 60),
+            _ => panic!(),
+        }
+        check_against_oracle(&entries, 100);
+    }
+
+    #[test]
+    fn gaps_are_preserved() {
+        let entries = vec![entry(10, 5, 0, 0), entry(50, 5, 0, 100)];
+        let extents = resolve_entries(&entries);
+        assert_eq!(extents.len(), 2);
+        assert_eq!(extents[0].start, 10);
+        assert_eq!(extents[1].start, 50);
+        check_against_oracle(&entries, 60);
+    }
+
+    #[test]
+    fn holes_overlay_like_writes() {
+        let entries = vec![
+            entry(0, 100, 0, 0),
+            RegionEntry {
+                placement: Placement::At(20),
+                len: 30,
+                data: SliceData::Hole,
+            },
+        ];
+        let extents = resolve_entries(&entries);
+        assert_eq!(extents.len(), 3);
+        assert!(extents[1].data.is_hole());
+        check_against_oracle(&entries, 100);
+    }
+
+    #[test]
+    fn fuse_rejoins_sequential_writes() {
+        // Sequential writer: slices adjacent on disk (same backing).
+        let entries = vec![
+            entry(0, 10, 0, 0),
+            entry(10, 10, 0, 10),
+            entry(20, 10, 0, 20),
+        ];
+        let fused = fuse_extents(resolve_entries(&entries));
+        assert_eq!(fused.len(), 1);
+        assert_eq!(fused[0].len, 30);
+        match &fused[0].data {
+            SliceData::Stored(v) => {
+                assert_eq!(v[0], ptr(0, 0, 30));
+            }
+            _ => panic!(),
+        }
+    }
+
+    #[test]
+    fn fuse_respects_non_adjacency() {
+        let entries = vec![entry(0, 10, 0, 0), entry(10, 10, 0, 50)];
+        let fused = fuse_extents(resolve_entries(&entries));
+        assert_eq!(fused.len(), 2);
+        let entries = vec![entry(0, 10, 0, 0), entry(10, 10, 1, 10)];
+        assert_eq!(fuse_extents(resolve_entries(&entries)).len(), 2);
+    }
+
+    #[test]
+    fn compact_preserves_contents_and_shrinks() {
+        let mut entries = Vec::new();
+        // 20 overlapping writes.
+        for i in 0..20u64 {
+            entries.push(entry(i * 5, 10, 0, i * 10));
+        }
+        let r = region(entries.clone());
+        let c = compact(&r);
+        assert!(c.entries.len() <= r.entries.len());
+        assert_eq!(c.eof, r.eof);
+        // Resolving the compacted region yields identical extents.
+        assert_eq!(
+            resolve_entries(&c.entries),
+            fuse_extents(resolve_entries(&r.entries))
+        );
+        // Compaction is idempotent.
+        let cc = compact(&c);
+        assert_eq!(cc.entries, c.entries);
+    }
+
+    #[test]
+    fn clip_extents_windows() {
+        let entries = vec![entry(0, 100, 0, 0)];
+        let extents = resolve_entries(&entries);
+        let clipped = clip_extents(&extents, 30, 60);
+        assert_eq!(clipped.len(), 1);
+        assert_eq!((clipped[0].start, clipped[0].len), (30, 30));
+        match &clipped[0].data {
+            SliceData::Stored(v) => assert_eq!(v[0].offset, 30),
+            _ => panic!(),
+        }
+        assert!(clip_extents(&extents, 100, 200).is_empty());
+        assert!(clip_extents(&extents, 60, 60).is_empty());
+    }
+
+    #[test]
+    fn randomized_overlays_match_bytewise_oracle() {
+        let mut rng = crate::util::Rng::new(0xC0FFEE);
+        for round in 0..50 {
+            let n = 1 + (rng.next_below(30) as usize);
+            let mut entries = Vec::new();
+            for i in 0..n {
+                let at = rng.next_below(200);
+                let len = 1 + rng.next_below(50);
+                if rng.next_below(5) == 0 {
+                    entries.push(RegionEntry {
+                        placement: Placement::At(at),
+                        len,
+                        data: SliceData::Hole,
+                    });
+                } else {
+                    entries.push(entry(at, len, (i % 3) as u32, i as u64 * 1000));
+                }
+            }
+            check_against_oracle(&entries, 256);
+            // Compaction must preserve resolution exactly.
+            let r = region(entries);
+            let c = compact(&r);
+            assert_eq!(
+                resolve_entries(&c.entries),
+                fuse_extents(resolve_entries(&r.entries)),
+                "round {round}"
+            );
+        }
+    }
+}

@@ -1,0 +1,693 @@
+//! The POSIX-style filesystem API (§2.4): namespace operations via the
+//! one-lookup pathname→inode map, plus read/write/seek over regions.
+//!
+//! Namespace changes (create, mkdir, link, unlink) are each one metadata
+//! transaction that atomically updates the path map, the inode, and the
+//! containing directory — the paper's hardlink example verbatim.
+//!
+//! Writes create slices on the storage servers *first*, then publish
+//! them with blind region appends; any transaction that can observe the
+//! metadata can already retrieve the immutable slices (§2.1).
+
+use super::{FileHandle, SeekFrom, Slice, WtfClient};
+use crate::error::{Error, Result};
+use crate::meta::MetaOp;
+use crate::types::{
+    DirEntries, Inode, InodeId, Key, Placement, RegionEntry, RegionId, SliceData, Value,
+};
+use crate::util::unix_now;
+
+/// Split an absolute path into `(parent, name)`.
+pub(crate) fn split_path(path: &str) -> Result<(String, String)> {
+    let path = normalize(path)?;
+    if path == "/" {
+        return Err(Error::InvalidArgument("cannot split root".into()));
+    }
+    let idx = path.rfind('/').unwrap();
+    let parent = if idx == 0 { "/".to_string() } else { path[..idx].to_string() };
+    Ok((parent, path[idx + 1..].to_string()))
+}
+
+/// Normalize an absolute path (no trailing slash except root, no empty
+/// or dot components).
+pub(crate) fn normalize(path: &str) -> Result<String> {
+    if !path.starts_with('/') {
+        return Err(Error::InvalidArgument(format!(
+            "path must be absolute: {path}"
+        )));
+    }
+    let mut out = String::from("/");
+    for comp in path.split('/') {
+        match comp {
+            "" | "." => continue,
+            ".." => {
+                return Err(Error::InvalidArgument(format!(
+                    "'..' not supported: {path}"
+                )))
+            }
+            c => {
+                if !out.ends_with('/') {
+                    out.push('/');
+                }
+                out.push_str(c);
+            }
+        }
+    }
+    Ok(out)
+}
+
+impl WtfClient {
+    // ------------------------------------------------------------ namespace
+
+    /// Resolve a path to its inode id with ONE metadata lookup, no matter
+    /// how deeply nested (§2.4).
+    pub fn lookup(&self, path: &str) -> Result<InodeId> {
+        let path = normalize(path)?;
+        match self.meta.get(&Key::path(&path)) {
+            Some((Value::PathEntry(id), _)) => Ok(id),
+            Some(_) => Err(Error::CorruptMetadata(format!("path {path} wrong type"))),
+            None => Err(Error::NotFound(path)),
+        }
+    }
+
+    pub fn exists(&self, path: &str) -> bool {
+        self.lookup(path).is_ok()
+    }
+
+    /// `stat`: the inode for a path.
+    pub fn stat(&self, path: &str) -> Result<Inode> {
+        self.fetch_inode(self.lookup(path)?)
+    }
+
+    /// Create a regular file.  One transaction: path-map insert (atomic
+    /// create), inode put, directory-entry insert.
+    pub fn create(&self, path: &str) -> Result<FileHandle> {
+        self.create_with_replication(path, self.config.replication)
+    }
+
+    /// Create with an explicit replication factor (the sort benchmark
+    /// writes intermediate files unreplicated, §4.1).
+    pub fn create_with_replication(&self, path: &str, replication: u8) -> Result<FileHandle> {
+        let path = normalize(path)?;
+        let (parent, name) = split_path(&path)?;
+        let id = self.meta.alloc_inode_id();
+        self.with_retry(|| {
+            let mut t = self.meta_txn();
+            let parent_id = match t.get(&Key::path(&parent)) {
+                Some(Value::PathEntry(p)) => p,
+                _ => return Err(Error::NotFound(parent.clone())),
+            };
+            let parent_inode = match t.get(&Key::inode(parent_id)) {
+                Some(Value::Inode(i)) => i,
+                _ => return Err(Error::CorruptMetadata(parent.clone())),
+            };
+            if !parent_inode.is_dir() {
+                return Err(Error::NotADirectory(parent.clone()));
+            }
+            t.push(MetaOp::PathInsert {
+                key: Key::path(&path),
+                inode: id,
+                expect_absent: true,
+            });
+            t.push(MetaOp::Put {
+                key: Key::inode(id),
+                value: Value::Inode(Inode::new_file(id, 0o644, replication)),
+            });
+            t.push(MetaOp::DirInsert {
+                key: Key::dir(parent_id),
+                name: name.clone(),
+                inode: id,
+                expect_absent: true,
+            });
+            t.commit()?;
+            Ok(())
+        })?;
+        Ok(FileHandle {
+            inode: id,
+            path,
+            offset: 0,
+        })
+    }
+
+    /// Create a directory.
+    pub fn mkdir(&self, path: &str) -> Result<()> {
+        let path = normalize(path)?;
+        let (parent, name) = split_path(&path)?;
+        let id = self.meta.alloc_inode_id();
+        self.with_retry(|| {
+            let mut t = self.meta_txn();
+            let parent_id = match t.get(&Key::path(&parent)) {
+                Some(Value::PathEntry(p)) => p,
+                _ => return Err(Error::NotFound(parent.clone())),
+            };
+            t.push(MetaOp::PathInsert {
+                key: Key::path(&path),
+                inode: id,
+                expect_absent: true,
+            });
+            t.push(MetaOp::Put {
+                key: Key::inode(id),
+                value: Value::Inode(Inode::new_directory(id, 0o755)),
+            });
+            t.push(MetaOp::Put {
+                key: Key::dir(id),
+                value: Value::Dir(DirEntries::new()),
+            });
+            t.push(MetaOp::DirInsert {
+                key: Key::dir(parent_id),
+                name: name.clone(),
+                inode: id,
+                expect_absent: true,
+            });
+            t.commit()?;
+            Ok(())
+        })
+    }
+
+    /// Open an existing file.
+    pub fn open(&self, path: &str) -> Result<FileHandle> {
+        let path = normalize(path)?;
+        let id = self.lookup(&path)?;
+        let inode = self.fetch_inode(id)?;
+        if inode.is_dir() {
+            return Err(Error::IsDirectory(path));
+        }
+        Ok(FileHandle {
+            inode: id,
+            path,
+            offset: 0,
+        })
+    }
+
+    /// Open, creating if absent.
+    pub fn open_or_create(&self, path: &str) -> Result<FileHandle> {
+        match self.open(path) {
+            Err(Error::NotFound(_)) => match self.create(path) {
+                Err(Error::AlreadyExists(_)) => self.open(path),
+                other => other,
+            },
+            other => other,
+        }
+    }
+
+    /// Hard-link `existing` at `new_path`: atomically create the new path
+    /// mapping, bump the link count, and insert the directory entry —
+    /// the transaction spelled out in §2.4.
+    pub fn link(&self, existing: &str, new_path: &str) -> Result<()> {
+        let new_path = normalize(new_path)?;
+        let (parent, name) = split_path(&new_path)?;
+        let existing = normalize(existing)?;
+        self.with_retry(|| {
+            let mut t = self.meta_txn();
+            let id = match t.get(&Key::path(&existing)) {
+                Some(Value::PathEntry(p)) => p,
+                _ => return Err(Error::NotFound(existing.clone())),
+            };
+            let parent_id = match t.get(&Key::path(&parent)) {
+                Some(Value::PathEntry(p)) => p,
+                _ => return Err(Error::NotFound(parent.clone())),
+            };
+            t.push(MetaOp::PathInsert {
+                key: Key::path(&new_path),
+                inode: id,
+                expect_absent: true,
+            });
+            t.push(MetaOp::InodeAdjustLinks {
+                key: Key::inode(id),
+                delta: 1,
+                mtime: unix_now(),
+            });
+            t.push(MetaOp::DirInsert {
+                key: Key::dir(parent_id),
+                name: name.clone(),
+                inode: id,
+                expect_absent: true,
+            });
+            t.commit()?;
+            Ok(())
+        })
+    }
+
+    /// Remove a path; the inode is deleted when its last link drops and
+    /// its slices become garbage for the GC scan (§2.8).
+    pub fn unlink(&self, path: &str) -> Result<()> {
+        let path = normalize(path)?;
+        let (parent, name) = split_path(&path)?;
+        self.with_retry(|| {
+            let mut t = self.meta_txn();
+            let id = match t.get(&Key::path(&path)) {
+                Some(Value::PathEntry(p)) => p,
+                _ => return Err(Error::NotFound(path.clone())),
+            };
+            if let Some(Value::Inode(i)) = t.get(&Key::inode(id)) {
+                if i.is_dir() {
+                    return Err(Error::IsDirectory(path.clone()));
+                }
+            }
+            let parent_id = match t.get(&Key::path(&parent)) {
+                Some(Value::PathEntry(p)) => p,
+                _ => return Err(Error::NotFound(parent.clone())),
+            };
+            t.push(MetaOp::Delete {
+                key: Key::path(&path),
+            });
+            t.push(MetaOp::InodeAdjustLinks {
+                key: Key::inode(id),
+                delta: -1,
+                mtime: unix_now(),
+            });
+            t.push(MetaOp::DirRemove {
+                key: Key::dir(parent_id),
+                name: name.clone(),
+            });
+            t.commit()?;
+            Ok(())
+        })
+    }
+
+    /// Enumerate one directory (§2.4's traditional-style directories).
+    pub fn readdir(&self, path: &str) -> Result<Vec<(String, InodeId)>> {
+        let id = self.lookup(path)?;
+        let inode = self.fetch_inode(id)?;
+        if !inode.is_dir() {
+            return Err(Error::NotADirectory(path.into()));
+        }
+        match self.meta.get(&Key::dir(id)) {
+            Some((Value::Dir(d), _)) => Ok(d.into_iter().collect()),
+            _ => Ok(Vec::new()),
+        }
+    }
+
+    /// Current file length.
+    pub fn len(&self, fd: &FileHandle) -> Result<u64> {
+        Ok(self.fetch_inode(fd.inode)?.len)
+    }
+
+    // ------------------------------------------------------------ seek
+
+    /// Move the cursor.  Returns the new offset.
+    pub fn seek(&self, fd: &mut FileHandle, from: SeekFrom) -> Result<u64> {
+        let new = match from {
+            SeekFrom::Start(o) => o as i128,
+            SeekFrom::Current(d) => fd.offset as i128 + d as i128,
+            SeekFrom::End(d) => self.len(fd)? as i128 + d as i128,
+        };
+        if new < 0 {
+            return Err(Error::InvalidArgument("seek before start".into()));
+        }
+        fd.offset = new as u64;
+        Ok(fd.offset)
+    }
+
+    // ------------------------------------------------------------ write
+
+    /// Write at the cursor and advance it.
+    pub fn write(&self, fd: &mut FileHandle, data: &[u8]) -> Result<()> {
+        self.write_at(fd.inode, fd.offset, data)?;
+        fd.offset += data.len() as u64;
+        Ok(())
+    }
+
+    /// Random-access write at an explicit offset (the operation HDFS
+    /// cannot do at all, §4.2).  One storage round per replica per region
+    /// part, then one blind metadata transaction.
+    pub fn write_at(&self, inode: InodeId, offset: u64, data: &[u8]) -> Result<()> {
+        if data.is_empty() {
+            return Ok(());
+        }
+        let replication = self.fetch_inode(inode)?.replication;
+        // 1. Slices first (§2.1): visible to nobody until the commit.
+        let parts = self.split_range(inode, offset, data.len() as u64);
+        let mut created: Vec<(RegionId, u64, SliceData)> = Vec::with_capacity(parts.len());
+        let mut cursor = 0usize;
+        for (rid, rel, len) in &parts {
+            let chunk = &data[cursor..cursor + *len as usize];
+            cursor += *len as usize;
+            let replicas = self.create_replicated(chunk, *rid, replication)?;
+            created.push((*rid, *rel, SliceData::Stored(replicas)));
+        }
+        // 2. Publish with blind appends — no read set, so concurrent
+        //    writers never conflict here.
+        let end = offset + data.len() as u64;
+        let highest = parts.last().map(|(r, _, _)| r.index).unwrap_or(0);
+        self.with_retry(|| {
+            let mut t = self.meta_txn();
+            for (rid, rel, data) in &created {
+                t.push(MetaOp::RegionAppend {
+                    key: Key::region(*rid),
+                    entry: RegionEntry {
+                        placement: Placement::At(*rel),
+                        len: data.len().unwrap_or(0),
+                        data: data.clone(),
+                    },
+                });
+            }
+            t.push(MetaOp::InodeSetLenMax {
+                key: Key::inode(inode),
+                candidate: end,
+                highest_region: highest,
+                mtime: unix_now(),
+            });
+            t.commit()?;
+            Ok(())
+        })
+    }
+
+    /// Append bytes at the end of file using the conditional EOF-relative
+    /// fast path (§2.5): concurrent appends commute; only when a region
+    /// fills does the writer fall back to an explicit-offset write.
+    pub fn append_bytes(&self, fd: &FileHandle, data: &[u8]) -> Result<u64> {
+        if data.is_empty() {
+            return self.len(fd);
+        }
+        let inode = self.fetch_inode(fd.inode)?;
+        let region_idx = inode.highest_region;
+        let replication = inode.replication;
+        loop {
+            let rid = RegionId::new(fd.inode, region_idx);
+            let replicas = self.create_replicated(data, rid, replication)?;
+            let region_base = u64::from(region_idx) * self.config.region_size;
+            let mut t = self.meta_txn();
+            t.push(MetaOp::RegionAppendEof {
+                key: Key::region(rid),
+                data: SliceData::Stored(replicas.clone()),
+                len: data.len() as u64,
+                cap: self.config.region_size,
+            });
+            t.push(MetaOp::InodeSetLenMax {
+                key: Key::inode(fd.inode),
+                candidate: 0,
+                highest_region: region_idx,
+                mtime: unix_now(),
+            });
+            t.push(MetaOp::InodeSetLenFromRegion {
+                inode_key: Key::inode(fd.inode),
+                region_key: Key::region(rid),
+                region_base,
+                mtime: unix_now(),
+            });
+            match t.commit() {
+                Ok(outcomes) => {
+                    let at = outcomes
+                        .iter()
+                        .find_map(|o| match o {
+                            crate::meta::OpOutcome::AppendedAt(a) => Some(*a),
+                            _ => None,
+                        })
+                        .unwrap_or(0);
+                    return Ok(region_base + at);
+                }
+                Err(Error::CondAppendFailed { .. }) => {
+                    // Region full.  §2.5 fallback: read the end-of-file
+                    // offset and perform an explicit write there (filling
+                    // the remainder of this region, spilling into the
+                    // next).  The EOF read is validated at commit, so a
+                    // concurrent append conflicts and we retry.
+                    let slice = Slice {
+                        pieces: vec![(data.len() as u64, SliceData::Stored(replicas))],
+                    };
+                    return self.append_at_eof_validated(fd.inode, &slice);
+                }
+                Err(e) if e.is_retryable() => {
+                    self.metrics.add_txn_retries(1);
+                    continue;
+                }
+                Err(e) => return Err(e),
+            }
+        }
+    }
+
+    /// §2.5 slow path shared by byte and slice appends: read the file
+    /// length inside the metadata transaction (conflict-validated) and
+    /// paste at exactly that offset.
+    pub(crate) fn append_at_eof_validated(
+        &self,
+        inode: InodeId,
+        slice: &Slice,
+    ) -> Result<u64> {
+        self.with_retry(|| {
+            let mut t = self.meta_txn();
+            let len = match t.get(&Key::inode(inode)) {
+                Some(Value::Inode(i)) => i.len,
+                _ => return Err(Error::NotFound(format!("inode {inode}"))),
+            };
+            let highest = self.push_paste_ops(&mut t, inode, len, slice);
+            t.push(MetaOp::InodeSetLenMax {
+                key: Key::inode(inode),
+                candidate: len + slice.len(),
+                highest_region: highest,
+                mtime: unix_now(),
+            });
+            t.commit()?;
+            Ok(len)
+        })
+    }
+
+    // ------------------------------------------------------------ read
+
+    /// Read at the cursor and advance it.  Short reads happen only at EOF.
+    pub fn read(&self, fd: &mut FileHandle, len: u64) -> Result<Vec<u8>> {
+        let out = self.read_at(fd, fd.offset, len)?;
+        fd.offset += out.len() as u64;
+        Ok(out)
+    }
+
+    /// Read `[offset, offset+len)`, clamped to EOF.  Gaps and punched
+    /// holes read as zeros.
+    pub fn read_at(&self, fd: &FileHandle, offset: u64, len: u64) -> Result<Vec<u8>> {
+        self.read_inode_at(fd.inode, offset, len)
+    }
+
+    pub(crate) fn read_inode_at(&self, inode: InodeId, offset: u64, len: u64) -> Result<Vec<u8>> {
+        let file_len = self.fetch_inode(inode)?.len;
+        if offset >= file_len {
+            return Ok(Vec::new());
+        }
+        let len = len.min(file_len - offset);
+        let mut out = vec![0u8; len as usize];
+        for (rid, rel, part_len) in self.split_range(inode, offset, len) {
+            let (region, _) = self.fetch_region(rid)?;
+            let extents = self.resolve_region(&region)?;
+            let window = super::compact::clip_extents(&extents, rel, rel + part_len);
+            let region_base = u64::from(rid.index) * self.config.region_size;
+            for e in window {
+                if let SliceData::Stored(replicas) = &e.data {
+                    let bytes = self.fetch_replicated(replicas)?;
+                    let dst = (region_base + e.start - offset) as usize;
+                    out[dst..dst + bytes.len()].copy_from_slice(&bytes);
+                }
+                // Holes/gaps: already zero.
+            }
+        }
+        Ok(out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::client::testutil::small_cluster;
+
+    #[test]
+    fn path_normalization() {
+        assert_eq!(normalize("/a//b/").unwrap(), "/a/b");
+        assert_eq!(normalize("/").unwrap(), "/");
+        assert_eq!(normalize("/a/./b").unwrap(), "/a/b");
+        assert!(normalize("relative").is_err());
+        assert!(normalize("/a/../b").is_err());
+        assert_eq!(
+            split_path("/a/b/c").unwrap(),
+            ("/a/b".to_string(), "c".to_string())
+        );
+        assert_eq!(split_path("/a").unwrap(), ("/".to_string(), "a".to_string()));
+    }
+
+    #[test]
+    fn create_write_read_round_trip() {
+        let cluster = small_cluster();
+        let c = cluster.client();
+        let mut fd = c.create("/f").unwrap();
+        c.write(&mut fd, b"hello world").unwrap();
+        assert_eq!(c.len(&fd).unwrap(), 11);
+        assert_eq!(c.read_at(&fd, 0, 11).unwrap(), b"hello world");
+        assert_eq!(c.read_at(&fd, 6, 100).unwrap(), b"world");
+        assert_eq!(c.read_at(&fd, 11, 5).unwrap(), b"");
+    }
+
+    #[test]
+    fn multi_region_write_and_read() {
+        let cluster = small_cluster();
+        let c = cluster.client();
+        let rs = c.config().region_size;
+        let mut fd = c.create("/big").unwrap();
+        let mut data = vec![0u8; (3 * rs + 100) as usize];
+        let mut rng = crate::util::Rng::new(1);
+        rng.fill_bytes(&mut data);
+        c.write(&mut fd, &data).unwrap();
+        assert_eq!(c.len(&fd).unwrap(), data.len() as u64);
+        let back = c.read_at(&fd, 0, data.len() as u64).unwrap();
+        assert_eq!(back, data);
+        // Cross-region window.
+        let from = rs - 50;
+        let to = rs + 50;
+        assert_eq!(
+            c.read_at(&fd, from, to - from).unwrap(),
+            &data[from as usize..to as usize]
+        );
+    }
+
+    #[test]
+    fn random_writes_overlay_correctly() {
+        let cluster = small_cluster();
+        let c = cluster.client();
+        let mut fd = c.create("/rw").unwrap();
+        c.write(&mut fd, &vec![b'a'; 100]).unwrap();
+        c.write_at(fd.inode, 20, &vec![b'b'; 30]).unwrap();
+        c.write_at(fd.inode, 40, &vec![b'c'; 10]).unwrap();
+        let back = c.read_at(&fd, 0, 100).unwrap();
+        assert_eq!(&back[..20], &vec![b'a'; 20][..]);
+        assert_eq!(&back[20..40], &vec![b'b'; 20][..]);
+        assert_eq!(&back[40..50], &vec![b'c'; 10][..]);
+        assert_eq!(&back[50..], &vec![b'a'; 50][..]);
+    }
+
+    #[test]
+    fn sparse_files_read_zeros_in_gaps() {
+        let cluster = small_cluster();
+        let c = cluster.client();
+        let fd = c.create("/sparse").unwrap();
+        c.write_at(fd.inode, 100, b"xyz").unwrap();
+        let back = c.read_at(&fd, 0, 103).unwrap();
+        assert_eq!(&back[..100], &vec![0u8; 100][..]);
+        assert_eq!(&back[100..], b"xyz");
+    }
+
+    #[test]
+    fn seek_semantics() {
+        let cluster = small_cluster();
+        let c = cluster.client();
+        let mut fd = c.create("/s").unwrap();
+        c.write(&mut fd, b"0123456789").unwrap();
+        assert_eq!(c.seek(&mut fd, SeekFrom::Start(3)).unwrap(), 3);
+        assert_eq!(c.read(&mut fd, 2).unwrap(), b"34");
+        assert_eq!(c.seek(&mut fd, SeekFrom::Current(-1)).unwrap(), 4);
+        assert_eq!(c.seek(&mut fd, SeekFrom::End(-2)).unwrap(), 8);
+        assert_eq!(c.read(&mut fd, 10).unwrap(), b"89");
+        assert!(c.seek(&mut fd, SeekFrom::Current(-100)).is_err());
+    }
+
+    #[test]
+    fn appends_see_sequential_offsets() {
+        let cluster = small_cluster();
+        let c = cluster.client();
+        let fd = c.create("/log").unwrap();
+        assert_eq!(c.append_bytes(&fd, b"aa").unwrap(), 0);
+        assert_eq!(c.append_bytes(&fd, b"bb").unwrap(), 2);
+        assert_eq!(c.read_at(&fd, 0, 4).unwrap(), b"aabb");
+    }
+
+    #[test]
+    fn append_crosses_region_boundary() {
+        let cluster = small_cluster();
+        let c = cluster.client();
+        let rs = c.config().region_size;
+        let fd = c.create("/spill").unwrap();
+        let chunk = vec![7u8; (rs / 2 + 1) as usize];
+        // Region 0 cannot hold two of these: the second append falls back
+        // to an explicit EOF write that STRADDLES the region boundary —
+        // no gap is ever introduced (§2.5 fallback).
+        assert_eq!(c.append_bytes(&fd, &chunk).unwrap(), 0);
+        let second = c.append_bytes(&fd, &chunk).unwrap();
+        assert_eq!(second, chunk.len() as u64);
+        assert_eq!(c.len(&fd).unwrap(), 2 * chunk.len() as u64);
+        let back = c.read_at(&fd, second, chunk.len() as u64).unwrap();
+        assert_eq!(back, chunk);
+        // The whole file is contiguous 7s.
+        let all = c.read_at(&fd, 0, 2 * chunk.len() as u64).unwrap();
+        assert!(all.iter().all(|&b| b == 7));
+    }
+
+    #[test]
+    fn namespace_operations() {
+        let cluster = small_cluster();
+        let c = cluster.client();
+        c.mkdir("/dir").unwrap();
+        c.create("/dir/f").unwrap();
+        assert!(c.exists("/dir/f"));
+        assert!(matches!(c.create("/dir/f"), Err(Error::AlreadyExists(_))));
+        assert!(matches!(c.create("/nodir/f"), Err(Error::NotFound(_))));
+        let entries = c.readdir("/dir").unwrap();
+        assert_eq!(entries.len(), 1);
+        assert_eq!(entries[0].0, "f");
+        // Root listing contains /dir.
+        let root = c.readdir("/").unwrap();
+        assert!(root.iter().any(|(n, _)| n == "dir"));
+    }
+
+    #[test]
+    fn hardlinks_share_data_and_count_links() {
+        let cluster = small_cluster();
+        let c = cluster.client();
+        let mut fd = c.create("/a").unwrap();
+        c.write(&mut fd, b"shared").unwrap();
+        c.link("/a", "/b").unwrap();
+        assert_eq!(c.stat("/a").unwrap().links, 2);
+        let fb = c.open("/b").unwrap();
+        assert_eq!(c.read_at(&fb, 0, 6).unwrap(), b"shared");
+        // Unlink one name: data still reachable through the other.
+        c.unlink("/a").unwrap();
+        assert!(!c.exists("/a"));
+        assert_eq!(c.stat("/b").unwrap().links, 1);
+        assert_eq!(c.read_at(&fb, 0, 6).unwrap(), b"shared");
+        // Unlink the last name: inode is gone.
+        c.unlink("/b").unwrap();
+        assert!(matches!(c.stat("/b"), Err(Error::NotFound(_))));
+    }
+
+    #[test]
+    fn unlink_directory_is_rejected() {
+        let cluster = small_cluster();
+        let c = cluster.client();
+        c.mkdir("/d").unwrap();
+        assert!(matches!(c.unlink("/d"), Err(Error::IsDirectory(_))));
+        assert!(matches!(c.open("/d"), Err(Error::IsDirectory(_))));
+    }
+
+    #[test]
+    fn open_or_create_is_idempotent() {
+        let cluster = small_cluster();
+        let c = cluster.client();
+        let a = c.open_or_create("/x").unwrap();
+        let b = c.open_or_create("/x").unwrap();
+        assert_eq!(a.inode(), b.inode());
+    }
+
+    #[test]
+    fn concurrent_appends_from_threads_all_land() {
+        let cluster = small_cluster();
+        let c = cluster.client();
+        c.create("/conc").unwrap();
+        let threads: Vec<_> = (0..8)
+            .map(|i| {
+                let c = c.clone();
+                std::thread::spawn(move || {
+                    let fd = c.open("/conc").unwrap();
+                    for _ in 0..16 {
+                        c.append_bytes(&fd, &[b'0' + i as u8; 8]).unwrap();
+                    }
+                })
+            })
+            .collect();
+        for t in threads {
+            t.join().unwrap();
+        }
+        let fd = c.open("/conc").unwrap();
+        let len = c.len(&fd).unwrap();
+        assert_eq!(len, 8 * 16 * 8);
+        // Every 8-byte record is intact (no torn appends).
+        let data = c.read_at(&fd, 0, len).unwrap();
+        for rec in data.chunks(8) {
+            assert!(rec.iter().all(|&b| b == rec[0]), "torn record {rec:?}");
+        }
+    }
+}

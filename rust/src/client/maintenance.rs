@@ -1,0 +1,240 @@
+//! Metadata maintenance: the first two GC tiers of §2.8, driven through
+//! the client.
+//!
+//! * **Tier 1** — [`WtfClient::compact_region`]: read the region list,
+//!   compact it (pure metadata), and CAS it back in one transaction.  No
+//!   storage I/O at all; the overlaid slices become garbage for tier 3.
+//! * **Tier 2** — [`WtfClient::spill_region`]: when the *compacted* list
+//!   is still too fragmented (random writes defeat locality), serialize
+//!   it into a slice and swap a pointer into its place.
+
+use super::compact;
+use super::spill;
+use super::WtfClient;
+use crate::error::{Error, Result};
+use crate::meta::MetaOp;
+use crate::types::{InodeId, Key, RegionId, RegionMeta};
+
+/// Outcome of one region compaction.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct CompactReport {
+    pub entries_before: usize,
+    pub entries_after: usize,
+    /// True when the region was spilled to a slice (tier 2).
+    pub spilled: bool,
+}
+
+impl WtfClient {
+    /// Tier-1 compaction of one region.  Retries the CAS on conflict.
+    pub fn compact_region(&self, rid: RegionId) -> Result<CompactReport> {
+        self.with_retry(|| {
+            let (region, version) = self.fetch_region(rid)?;
+            let before = region.entries.len();
+            let compacted = compact::compact(&region);
+            let report = CompactReport {
+                entries_before: before,
+                entries_after: compacted.entries.len(),
+                spilled: false,
+            };
+            if compacted.entries == region.entries {
+                return Ok(report); // nothing to do
+            }
+            let mut t = self.meta_txn();
+            t.push(MetaOp::RegionSwap {
+                key: Key::region(rid),
+                expected_version: version,
+                region: compacted,
+            });
+            t.commit()?;
+            Ok(report)
+        })
+    }
+
+    /// Tier-2 spill of one region: compact, serialize the entry list
+    /// (including any previously spilled base) into a replicated slice,
+    /// and swap the region for a pointer + empty list.
+    pub fn spill_region(&self, rid: RegionId) -> Result<CompactReport> {
+        self.with_retry(|| {
+            let (region, version) = self.fetch_region(rid)?;
+            let before = region.entries.len();
+            // Materialize the full view (spilled base + live list), then
+            // compact it to the minimal form.
+            let entries = self.region_entries(&region)?;
+            let resolved = compact::fuse_extents(compact::resolve_entries(&entries));
+            let minimal: Vec<crate::types::RegionEntry> = resolved
+                .into_iter()
+                .map(|e| crate::types::RegionEntry {
+                    placement: crate::types::Placement::At(e.start),
+                    len: e.len,
+                    data: e.data,
+                })
+                .collect();
+            let bytes = spill::encode_entries(&minimal)?;
+            let replicas =
+                self.create_replicated(&bytes, rid, self.config.replication)?;
+            let swapped = RegionMeta {
+                spill: Some(replicas),
+                entries: Vec::new(),
+                eof: region.eof,
+            };
+            let mut t = self.meta_txn();
+            t.push(MetaOp::RegionSwap {
+                key: Key::region(rid),
+                expected_version: version,
+                region: swapped,
+            });
+            t.commit()?;
+            Ok(CompactReport {
+                entries_before: before,
+                entries_after: 0,
+                spilled: true,
+            })
+        })
+    }
+
+    /// Compact every written region of a file; spill regions whose
+    /// compacted form still exceeds `spill_threshold` entries.
+    pub fn compact_file(&self, inode: InodeId, spill_threshold: usize) -> Result<Vec<CompactReport>> {
+        let meta = self.fetch_inode(inode)?;
+        let mut reports = Vec::new();
+        for idx in 0..=meta.highest_region {
+            let rid = RegionId::new(inode, idx);
+            let r = self.compact_region(rid)?;
+            if r.entries_after > spill_threshold {
+                reports.push(self.spill_region(rid)?);
+            } else {
+                reports.push(r);
+            }
+        }
+        Ok(reports)
+    }
+
+    /// Total metadata entries across a file's regions (fragmentation
+    /// metric for the compaction benchmarks).
+    pub fn file_fragmentation(&self, inode: InodeId) -> Result<usize> {
+        let meta = self.fetch_inode(inode)?;
+        let mut total = 0;
+        for idx in 0..=meta.highest_region {
+            let (region, _) = self.fetch_region(RegionId::new(inode, idx))?;
+            total += region.entries.len();
+        }
+        Ok(total)
+    }
+}
+
+// Re-export for bench/tests convenience.
+pub use CompactReport as RegionCompactReport;
+
+#[allow(unused_imports)]
+use Error as _ErrorUnused;
+
+#[cfg(test)]
+mod tests {
+    use crate::client::testutil::small_cluster;
+    use crate::types::RegionId;
+    use crate::util::Rng;
+
+    #[test]
+    fn compaction_shrinks_sequential_write_metadata() {
+        let cluster = small_cluster();
+        let c = cluster.client();
+        let mut f = c.create("/seq").unwrap();
+        // 32 sequential small writes into region 0.
+        for i in 0..32 {
+            c.write(&mut f, &[i as u8; 64]).unwrap();
+        }
+        let rid = RegionId::new(f.inode(), 0);
+        let before = c.fetch_region(rid).unwrap().0.entries.len();
+        assert_eq!(before, 32);
+        let report = c.compact_region(rid).unwrap();
+        assert_eq!(report.entries_before, 32);
+        // Locality-aware placement makes sequential slices adjacent:
+        // they fuse down to very few pointers.
+        assert!(
+            report.entries_after <= 4,
+            "compacted to {}",
+            report.entries_after
+        );
+        // Contents unchanged.
+        let back = c.read_at(&f, 0, 32 * 64).unwrap();
+        for i in 0..32 {
+            assert!(back[i * 64..(i + 1) * 64].iter().all(|&b| b == i as u8));
+        }
+    }
+
+    #[test]
+    fn compaction_drops_overwritten_slices() {
+        let cluster = small_cluster();
+        let c = cluster.client();
+        let f = c.create("/ow").unwrap();
+        for _ in 0..10 {
+            c.write_at(f.inode(), 0, &[7u8; 100]).unwrap();
+        }
+        let rid = RegionId::new(f.inode(), 0);
+        let report = c.compact_region(rid).unwrap();
+        assert_eq!(report.entries_before, 10);
+        assert_eq!(report.entries_after, 1);
+    }
+
+    #[test]
+    fn spill_preserves_contents() {
+        let cluster = small_cluster();
+        let c = cluster.client();
+        let f = c.create("/frag").unwrap();
+        let mut rng = Rng::new(11);
+        let mut reference = vec![0u8; 2048];
+        // Random writes -> fragmented metadata that compaction can't fuse.
+        for _ in 0..40 {
+            let off = rng.next_below(2048 - 32);
+            let mut data = vec![0u8; 32];
+            rng.fill_bytes(&mut data);
+            c.write_at(f.inode(), off, &data).unwrap();
+            reference[off as usize..off as usize + 32].copy_from_slice(&data);
+        }
+        // Pad reference to file length semantics (max end written).
+        let flen = c.stat("/frag").unwrap().len;
+        let rid = RegionId::new(f.inode(), 0);
+        let report = c.spill_region(rid).unwrap();
+        assert!(report.spilled);
+        assert_eq!(c.fetch_region(rid).unwrap().0.entries.len(), 0);
+        // Reads traverse the spilled base transparently.
+        let back = c.read_at(&f, 0, flen).unwrap();
+        assert_eq!(back, &reference[..flen as usize]);
+        // Writes after the spill overlay on top of it.
+        c.write_at(f.inode(), 0, b"!!").unwrap();
+        let back = c.read_at(&f, 0, 2).unwrap();
+        assert_eq!(back, b"!!");
+    }
+
+    #[test]
+    fn compact_file_spills_only_fragmented_regions() {
+        let cluster = small_cluster();
+        let c = cluster.client();
+        let mut f = c.create("/mixed").unwrap();
+        let rs = c.config().region_size;
+        // Region 0: sequential (compacts well). Region 1: random.
+        for _ in 0..16 {
+            c.write(&mut f, &[1u8; 64]).unwrap();
+        }
+        let mut rng = Rng::new(3);
+        for _ in 0..16 {
+            let off = rs + rng.next_below(1000);
+            c.write_at(f.inode(), off, &[2u8; 16]).unwrap();
+        }
+        let reports = c.compact_file(f.inode(), 8).unwrap();
+        assert_eq!(reports.len(), 2);
+        assert!(!reports[0].spilled);
+        assert!(reports[1].spilled);
+    }
+
+    #[test]
+    fn fragmentation_metric_counts_entries() {
+        let cluster = small_cluster();
+        let c = cluster.client();
+        let mut f = c.create("/fm").unwrap();
+        for _ in 0..5 {
+            c.write(&mut f, &[0u8; 10]).unwrap();
+        }
+        assert_eq!(c.file_fragmentation(f.inode()).unwrap(), 5);
+    }
+}

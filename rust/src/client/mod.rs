@@ -1,0 +1,368 @@
+//! The WTF client library — where metadata and data combine into a
+//! coherent filesystem (§2, Fig. 1).
+//!
+//! The client owns most of the system's logic: it routes slice writes via
+//! the placement ring, assembles file contents from region metadata,
+//! implements the POSIX-style API ([`fs`]), the file-slicing API
+//! ([`slicing`]: yank/paste/punch/append/concat/copy), the WTF
+//! transaction with its conflict-replay retry layer ([`txn`], §2.6), and
+//! metadata compaction/spilling ([`compact`], [`spill`], §2.8).
+
+pub mod compact;
+pub mod maintenance;
+pub mod fs;
+pub mod slicing;
+pub mod spill;
+pub mod txn;
+
+pub use compact::Extent;
+pub use txn::Transaction;
+
+use crate::config::Config;
+use crate::error::{Error, Result};
+use crate::meta::{MetaService, MetaTxn};
+use crate::metrics::Metrics;
+use crate::storage::{Ring, StorageCluster};
+use crate::types::{
+    Inode, InodeId, Key, RegionId, RegionMeta, SliceData, SlicePtr, Value,
+};
+use std::sync::Arc;
+
+/// An open file: inode + cursor.  Handles are plain values; sharing one
+/// between threads is the application's business, exactly as with POSIX
+/// file descriptors.
+#[derive(Clone, Debug)]
+pub struct FileHandle {
+    pub(crate) inode: InodeId,
+    pub(crate) path: String,
+    /// Cursor for read/write/seek.
+    pub offset: u64,
+}
+
+impl FileHandle {
+    pub fn inode(&self) -> InodeId {
+        self.inode
+    }
+    pub fn path(&self) -> &str {
+        &self.path
+    }
+}
+
+/// Cursor positioning for [`fs`] seek (mirrors `std::io::SeekFrom`).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SeekFrom {
+    Start(u64),
+    End(i64),
+    Current(i64),
+}
+
+/// The app-visible result of `yank`: an ordered list of byte sources that
+/// can be pasted or appended elsewhere *without touching the data* (§2.5,
+/// Table 1).  Pieces are `(len, source)`; `Hole` pieces read as zeros.
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct Slice {
+    pub pieces: Vec<(u64, SliceData)>,
+}
+
+impl Slice {
+    /// Total byte length.
+    pub fn len(&self) -> u64 {
+        self.pieces.iter().map(|(l, _)| l).sum()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Number of distinct slice pointers (metadata cost of pasting this).
+    pub fn fragmentation(&self) -> usize {
+        self.pieces.len()
+    }
+
+    /// Concatenate two slices.
+    pub fn extend(&mut self, other: &Slice) {
+        self.pieces.extend(other.pieces.iter().cloned());
+    }
+
+    /// Arithmetic sub-slice `[from, to)` — no metadata or data access.
+    /// This is how applications carve records out of a yanked range
+    /// (e.g. the §4.1 sort rearranging records by permutation).
+    pub fn sub(&self, from: u64, to: u64) -> Slice {
+        assert!(from <= to && to <= self.len(), "sub-slice out of range");
+        let mut pieces = Vec::new();
+        let mut at = 0u64;
+        for (len, data) in &self.pieces {
+            let s = from.max(at);
+            let e = to.min(at + len);
+            if s < e {
+                pieces.push((e - s, data.slice(s - at, e - at)));
+            }
+            at += len;
+            if at >= to {
+                break;
+            }
+        }
+        Slice { pieces }
+    }
+}
+
+/// The WTF client.
+#[derive(Clone)]
+pub struct WtfClient {
+    pub(crate) config: Config,
+    pub(crate) meta: Arc<MetaService>,
+    pub(crate) storage: Arc<StorageCluster>,
+    pub(crate) ring: Ring,
+    pub(crate) metrics: Metrics,
+}
+
+impl WtfClient {
+    pub fn new(
+        config: Config,
+        meta: Arc<MetaService>,
+        storage: Arc<StorageCluster>,
+        ring: Ring,
+    ) -> Self {
+        WtfClient {
+            config,
+            meta,
+            storage,
+            ring,
+            metrics: Metrics::new(),
+        }
+    }
+
+    pub fn config(&self) -> &Config {
+        &self.config
+    }
+
+    pub fn metrics(&self) -> &Metrics {
+        &self.metrics
+    }
+
+    pub fn meta_service(&self) -> &Arc<MetaService> {
+        &self.meta
+    }
+
+    /// The client's placement ring (observability/tests).
+    pub fn ring(&self) -> &Ring {
+        &self.ring
+    }
+
+    /// Begin a WTF transaction (§2.6): all operations performed through
+    /// the returned handle commit atomically, with transparent retry on
+    /// metadata conflicts.
+    pub fn begin(&self) -> Transaction<'_> {
+        Transaction::new(self)
+    }
+
+    // ------------------------------------------------------------------
+    // Shared low-level plumbing used by fs/slicing/txn.
+    // ------------------------------------------------------------------
+
+    /// Retry `f` while it fails with a retryable metadata error (§2.6's
+    /// guarantee for single-call operations: they never surface spurious
+    /// aborts).
+    pub(crate) fn with_retry<T>(&self, mut f: impl FnMut() -> Result<T>) -> Result<T> {
+        let budget = self.config.txn_retry_budget.max(1);
+        let mut attempts = 0;
+        loop {
+            match f() {
+                Err(e) if e.is_retryable() => {
+                    attempts += 1;
+                    self.metrics.add_txn_retries(1);
+                    if attempts >= budget {
+                        return Err(Error::RetriesExhausted { attempts });
+                    }
+                }
+                other => return other,
+            }
+        }
+    }
+
+    /// Direct (non-transactional) inode fetch.
+    pub(crate) fn fetch_inode(&self, id: InodeId) -> Result<Inode> {
+        match self.meta.get(&Key::inode(id)) {
+            Some((Value::Inode(i), _)) => Ok(i),
+            Some(_) => Err(Error::CorruptMetadata(format!("inode {id} wrong type"))),
+            None => Err(Error::NotFound(format!("inode {id}"))),
+        }
+    }
+
+    /// Direct region fetch; absent regions read as empty.
+    /// Public (observability/tests): a region's metadata + version.
+    pub fn fetch_region_public(&self, rid: RegionId) -> Result<(RegionMeta, u64)> {
+        self.fetch_region(rid)
+    }
+
+    pub(crate) fn fetch_region(&self, rid: RegionId) -> Result<(RegionMeta, u64)> {
+        match self.meta.get(&Key::region(rid)) {
+            Some((Value::Region(r), v)) => Ok((r, v)),
+            Some(_) => Err(Error::CorruptMetadata(format!(
+                "region {rid:?} wrong type"
+            ))),
+            None => Ok((
+                RegionMeta::default(),
+                self.meta.store().version(&Key::region(rid)),
+            )),
+        }
+    }
+
+    /// Full entry list of a region including the spilled base (§2.8).
+    pub(crate) fn region_entries(
+        &self,
+        region: &RegionMeta,
+    ) -> Result<Vec<crate::types::RegionEntry>> {
+        let mut entries = Vec::new();
+        if let Some(replicas) = &region.spill {
+            let bytes = self.fetch_replicated(replicas)?;
+            entries.extend(spill::decode_entries(&bytes)?);
+        }
+        entries.extend(region.entries.iter().cloned());
+        Ok(entries)
+    }
+
+    /// Resolve one region to disjoint extents, including spilled base.
+    pub(crate) fn resolve_region(&self, region: &RegionMeta) -> Result<Vec<Extent>> {
+        Ok(compact::resolve_entries(&self.region_entries(region)?))
+    }
+
+    /// Fetch bytes for a replicated slice, failing over across replicas
+    /// (§2.9: readers may use any replica).
+    pub(crate) fn fetch_replicated(&self, replicas: &[SlicePtr]) -> Result<Vec<u8>> {
+        let mut last_err = Error::InvalidArgument("no replicas".into());
+        for ptr in replicas {
+            match self
+                .storage
+                .get(ptr.server)
+                .and_then(|s| s.retrieve_slice(ptr))
+            {
+                Ok(data) => {
+                    self.metrics.add_bytes_read(data.len() as u64);
+                    return Ok(data);
+                }
+                Err(e) => last_err = e,
+            }
+        }
+        Err(last_err)
+    }
+
+    /// Create `replication` replicas of `data` for `region`, on distinct
+    /// servers chosen by the placement ring (§2.7, §2.9), failing over to
+    /// further ring successors when a server is down.
+    pub(crate) fn create_replicated(
+        &self,
+        data: &[u8],
+        region: RegionId,
+        replication: u8,
+    ) -> Result<Vec<SlicePtr>> {
+        let want = replication.max(1) as usize;
+        // Ask for extra candidates so individual failures can be skipped.
+        let candidates = self
+            .ring
+            .servers_for(region, self.ring.servers().len().min(want + 2));
+        let mut out = Vec::with_capacity(want);
+        let mut last_err = Error::InvalidArgument("no storage servers".into());
+        for sid in candidates {
+            if out.len() == want {
+                break;
+            }
+            match self
+                .storage
+                .get(sid)
+                .and_then(|s| s.create_slice(data, region))
+            {
+                Ok(ptr) => {
+                    self.metrics.add_bytes_written(data.len() as u64);
+                    out.push(ptr);
+                }
+                Err(e) => last_err = e,
+            }
+        }
+        if out.is_empty() {
+            return Err(last_err);
+        }
+        // Degraded replication (fewer live servers than replicas) is
+        // allowed, as in the paper's failure model.
+        Ok(out)
+    }
+
+    /// Split a file-absolute byte range into per-region parts:
+    /// `(region, region-relative offset, length)`.
+    pub(crate) fn split_range(
+        &self,
+        inode: InodeId,
+        offset: u64,
+        len: u64,
+    ) -> Vec<(RegionId, u64, u64)> {
+        let mut parts = Vec::new();
+        let mut off = offset;
+        let end = offset + len;
+        while off < end {
+            let (idx, rel) = self.config.locate(off);
+            let take = (self.config.region_size - rel).min(end - off);
+            parts.push((RegionId::new(inode, idx), rel, take));
+            off += take;
+        }
+        parts
+    }
+
+    /// A fresh metadata transaction builder.
+    pub(crate) fn meta_txn(&self) -> MetaTxn {
+        MetaTxn::new(self.meta.clone())
+    }
+}
+
+#[cfg(test)]
+pub(crate) mod testutil {
+    use crate::cluster::Cluster;
+    use crate::config::Config;
+
+    /// A small test cluster with tiny regions (multi-region paths get
+    /// exercised with little data).
+    pub fn small_cluster() -> Cluster {
+        Cluster::builder()
+            .config(Config::test())
+            .build()
+            .expect("test cluster")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn slice_accounting() {
+        let mut s = Slice::default();
+        assert!(s.is_empty());
+        s.pieces.push((10, SliceData::Hole));
+        s.pieces.push((
+            5,
+            SliceData::Stored(vec![SlicePtr {
+                server: 0,
+                backing: 0,
+                offset: 0,
+                len: 5,
+            }]),
+        ));
+        assert_eq!(s.len(), 15);
+        assert_eq!(s.fragmentation(), 2);
+        let t = s.clone();
+        s.extend(&t);
+        assert_eq!(s.len(), 30);
+    }
+
+    #[test]
+    fn split_range_spans_regions() {
+        let cluster = testutil::small_cluster();
+        let client = cluster.client();
+        let rs = client.config().region_size; // 4096 in test config
+        let parts = client.split_range(7, rs - 10, 20);
+        assert_eq!(parts.len(), 2);
+        assert_eq!(parts[0], (RegionId::new(7, 0), rs - 10, 10));
+        assert_eq!(parts[1], (RegionId::new(7, 1), 0, 10));
+        let parts = client.split_range(7, 0, 3 * rs);
+        assert_eq!(parts.len(), 3);
+    }
+}

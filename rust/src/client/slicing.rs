@@ -1,0 +1,456 @@
+//! The file slicing API (§2.5, Table 1): yank, paste, punch, append,
+//! concat, copy.
+//!
+//! These calls manipulate subsequences of files *at the structural
+//! level*: yank returns slice pointers, paste/append publish those
+//! pointers into another file's metadata, and none of them move a single
+//! data byte — the entire cost is borne by the metadata store.  This is
+//! what lets the §4.1 sort application shuffle 100 GB with zero write
+//! I/O.
+
+use super::compact::clip_extents;
+use super::fs::normalize;
+use super::{FileHandle, Slice, WtfClient};
+use crate::error::{Error, Result};
+use crate::meta::{MetaOp, MetaTxn};
+use crate::types::{InodeId, Key, Placement, RegionEntry, RegionId, SliceData, Value};
+use crate::util::unix_now;
+
+impl WtfClient {
+    // ---------------------------------------------------------------- yank
+
+    /// Copy `sz` bytes from the cursor as slice pointers, advancing the
+    /// cursor.  No data is read; pass the result to [`Self::paste`] /
+    /// [`Self::append_slice`] to write it elsewhere for free.
+    pub fn yank(&self, fd: &mut FileHandle, sz: u64) -> Result<Slice> {
+        let s = self.yank_at(fd.inode, fd.offset, sz)?;
+        fd.offset += s.len();
+        Ok(s)
+    }
+
+    /// Yank an explicit range (clamped to EOF).
+    pub fn yank_at(&self, inode: InodeId, offset: u64, sz: u64) -> Result<Slice> {
+        let file_len = self.fetch_inode(inode)?.len;
+        if offset >= file_len {
+            return Ok(Slice::default());
+        }
+        let sz = sz.min(file_len - offset);
+        let mut pieces: Vec<(u64, SliceData)> = Vec::new();
+        for (rid, rel, part_len) in self.split_range(inode, offset, sz) {
+            let (region, _) = self.fetch_region(rid)?;
+            let extents = self.resolve_region(&region)?;
+            let window = clip_extents(&extents, rel, rel + part_len);
+            // Fill gaps with holes so the slice's length is exact.
+            let mut cursor = rel;
+            for e in window {
+                if e.start > cursor {
+                    pieces.push((e.start - cursor, SliceData::Hole));
+                }
+                pieces.push((e.len, e.data.clone()));
+                cursor = e.end();
+            }
+            if cursor < rel + part_len {
+                pieces.push((rel + part_len - cursor, SliceData::Hole));
+            }
+        }
+        Ok(Slice { pieces })
+    }
+
+    /// Yank and also fetch the underlying bytes (`yank` returns "slice
+    /// pointers and optionally the data", Table 1).
+    pub fn yank_with_data(&self, fd: &mut FileHandle, sz: u64) -> Result<(Slice, Vec<u8>)> {
+        let offset = fd.offset;
+        let s = self.yank(fd, sz)?;
+        let data = self.read_inode_at(fd.inode, offset, s.len())?;
+        Ok((s, data))
+    }
+
+    // --------------------------------------------------------------- paste
+
+    /// Write `slice` at the cursor and advance it.  Bypasses the storage
+    /// servers entirely: one blind metadata transaction.
+    pub fn paste(&self, fd: &mut FileHandle, slice: &Slice) -> Result<()> {
+        self.paste_at(fd.inode, fd.offset, slice)?;
+        fd.offset += slice.len();
+        Ok(())
+    }
+
+    /// Paste at an explicit offset.
+    pub fn paste_at(&self, inode: InodeId, offset: u64, slice: &Slice) -> Result<()> {
+        if slice.is_empty() {
+            return Ok(());
+        }
+        self.with_retry(|| {
+            let mut t = self.meta_txn();
+            let highest = self.push_paste_ops(&mut t, inode, offset, slice);
+            t.push(MetaOp::InodeSetLenMax {
+                key: Key::inode(inode),
+                candidate: offset + slice.len(),
+                highest_region: highest,
+                mtime: unix_now(),
+            });
+            t.commit()?;
+            Ok(())
+        })
+    }
+
+    /// Queue the region-append ops for pasting `slice` at `offset`;
+    /// returns the highest region index touched.  Shared with the
+    /// transaction layer.
+    pub(crate) fn push_paste_ops(
+        &self,
+        t: &mut MetaTxn,
+        inode: InodeId,
+        offset: u64,
+        slice: &Slice,
+    ) -> u32 {
+        let mut highest = 0u32;
+        let mut cursor = offset;
+        for (len, data) in &slice.pieces {
+            let mut remaining = *len;
+            let mut piece_off = 0u64;
+            while remaining > 0 {
+                let (idx, rel) = self.config.locate(cursor);
+                let take = (self.config.region_size - rel).min(remaining);
+                let rid = RegionId::new(inode, idx);
+                highest = highest.max(idx);
+                t.push(MetaOp::RegionAppend {
+                    key: Key::region(rid),
+                    entry: RegionEntry {
+                        placement: Placement::At(rel),
+                        len: take,
+                        data: data.slice(piece_off, piece_off + take),
+                    },
+                });
+                cursor += take;
+                piece_off += take;
+                remaining -= take;
+            }
+        }
+        highest
+    }
+
+    // --------------------------------------------------------------- punch
+
+    /// Zero out `amount` bytes at the cursor, freeing the underlying
+    /// storage (the old slices become garbage for the next GC scan), and
+    /// advance the cursor.
+    pub fn punch(&self, fd: &mut FileHandle, amount: u64) -> Result<()> {
+        // A punch never extends the file; clamp to EOF.
+        let file_len = self.fetch_inode(fd.inode)?.len;
+        let amount_in_file = amount.min(file_len.saturating_sub(fd.offset));
+        if amount_in_file > 0 {
+            let hole = Slice {
+                pieces: vec![(amount_in_file, SliceData::Hole)],
+            };
+            self.with_retry(|| {
+                let mut t = self.meta_txn();
+                self.push_paste_ops(&mut t, fd.inode, fd.offset, &hole);
+                t.commit()?;
+                Ok(())
+            })?;
+        }
+        fd.offset += amount;
+        Ok(())
+    }
+
+    // -------------------------------------------------------------- append
+
+    /// Append `slice` at the end of file via the conditional EOF-relative
+    /// fast path (§2.5) — like [`Self::append_bytes`] but with zero
+    /// storage I/O.
+    pub fn append_slice(&self, fd: &FileHandle, slice: &Slice) -> Result<u64> {
+        if slice.is_empty() {
+            return self.len(fd);
+        }
+        let inode = self.fetch_inode(fd.inode)?;
+        let region_idx = inode.highest_region;
+        loop {
+            let rid = RegionId::new(fd.inode, region_idx);
+            let region_base = u64::from(region_idx) * self.config.region_size;
+            let mut t = self.meta_txn();
+            // All pieces go in one transaction: the append is atomic.
+            for (len, data) in &slice.pieces {
+                t.push(MetaOp::RegionAppendEof {
+                    key: Key::region(rid),
+                    data: data.clone(),
+                    len: *len,
+                    cap: self.config.region_size,
+                });
+            }
+            t.push(MetaOp::InodeSetLenMax {
+                key: Key::inode(fd.inode),
+                candidate: 0,
+                highest_region: region_idx,
+                mtime: unix_now(),
+            });
+            t.push(MetaOp::InodeSetLenFromRegion {
+                inode_key: Key::inode(fd.inode),
+                region_key: Key::region(rid),
+                region_base,
+                mtime: unix_now(),
+            });
+            match t.commit() {
+                Ok(outcomes) => {
+                    let at = outcomes
+                        .iter()
+                        .find_map(|o| match o {
+                            crate::meta::OpOutcome::AppendedAt(a) => Some(*a),
+                            _ => None,
+                        })
+                        .unwrap_or(0);
+                    return Ok(region_base + at);
+                }
+                Err(Error::CondAppendFailed { .. }) => {
+                    // Region full: §2.5 fallback — read the EOF inside a
+                    // validated transaction and paste at that offset,
+                    // filling the current region's remainder.
+                    return self.append_at_eof_validated(fd.inode, slice);
+                }
+                Err(e) if e.is_retryable() => {
+                    self.metrics.add_txn_retries(1);
+                    continue;
+                }
+                Err(e) => return Err(e),
+            }
+        }
+    }
+
+    // -------------------------------------------------------------- concat
+
+    /// Concatenate `sources` into a new file `dest` — pure metadata, in
+    /// ONE transaction: if any source changes concurrently, the concat
+    /// retries against the new state (§2.5, Table 1).
+    pub fn concat(&self, sources: &[&str], dest: &str) -> Result<FileHandle> {
+        let dest = normalize(dest)?;
+        let (parent, name) = super::fs::split_path(&dest)?;
+        let id = self.meta.alloc_inode_id();
+        self.with_retry(|| {
+            let mut t = self.meta_txn();
+            let parent_id = match t.get(&Key::path(&parent)) {
+                Some(Value::PathEntry(p)) => p,
+                _ => return Err(Error::NotFound(parent.clone())),
+            };
+            // Snapshot-read every source through the transaction (its
+            // regions enter the read set: concurrent modification aborts
+            // and retries the whole concat).
+            let mut pieces: Vec<(u64, SliceData)> = Vec::new();
+            for src in sources {
+                let src = normalize(src)?;
+                let src_id = match t.get(&Key::path(&src)) {
+                    Some(Value::PathEntry(p)) => p,
+                    _ => return Err(Error::NotFound(src.clone())),
+                };
+                let src_inode = match t.get(&Key::inode(src_id)) {
+                    Some(Value::Inode(i)) => i,
+                    _ => return Err(Error::CorruptMetadata(src.clone())),
+                };
+                let mut remaining = src_inode.len;
+                let mut region_idx = 0u32;
+                while remaining > 0 {
+                    let rid = RegionId::new(src_id, region_idx);
+                    let region = match t.get(&Key::region(rid)) {
+                        Some(Value::Region(r)) => r,
+                        _ => Default::default(),
+                    };
+                    let extents = self.resolve_region(&region)?;
+                    let part = remaining.min(self.config.region_size);
+                    let window = clip_extents(&extents, 0, part);
+                    let mut cursor = 0u64;
+                    for e in window {
+                        if e.start > cursor {
+                            pieces.push((e.start - cursor, SliceData::Hole));
+                        }
+                        pieces.push((e.len, e.data.clone()));
+                        cursor = e.end();
+                    }
+                    if cursor < part {
+                        pieces.push((part - cursor, SliceData::Hole));
+                    }
+                    remaining -= part;
+                    region_idx += 1;
+                }
+            }
+            let slice = Slice { pieces };
+            // Create dest and paste the combined slice, all in this txn.
+            t.push(MetaOp::PathInsert {
+                key: Key::path(&dest),
+                inode: id,
+                expect_absent: true,
+            });
+            let mut inode = crate::types::Inode::new_file(id, 0o644, self.config.replication);
+            inode.len = slice.len();
+            let highest = self.push_paste_ops(&mut t, id, 0, &slice);
+            inode.highest_region = highest;
+            inode.mtime = unix_now();
+            t.push(MetaOp::Put {
+                key: Key::inode(id),
+                value: Value::Inode(inode),
+            });
+            t.push(MetaOp::DirInsert {
+                key: Key::dir(parent_id),
+                name: name.clone(),
+                inode: id,
+                expect_absent: true,
+            });
+            t.commit()?;
+            Ok(())
+        })?;
+        Ok(FileHandle {
+            inode: id,
+            path: dest,
+            offset: 0,
+        })
+    }
+
+    /// Copy `source` to `dest` using only the metadata (Table 1).
+    pub fn copy(&self, source: &str, dest: &str) -> Result<FileHandle> {
+        self.concat(&[source], dest)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use crate::client::testutil::small_cluster;
+    use crate::util::Rng;
+
+    #[test]
+    fn yank_paste_round_trip_moves_no_data() {
+        let cluster = small_cluster();
+        let c = cluster.client();
+        let mut src = c.create("/src").unwrap();
+        let mut data = vec![0u8; 1000];
+        Rng::new(2).fill_bytes(&mut data);
+        c.write(&mut src, &data).unwrap();
+
+        let written_before = cluster.storage_bytes_written();
+        let mut src = c.open("/src").unwrap();
+        let slice = c.yank(&mut src, 1000).unwrap();
+        assert_eq!(slice.len(), 1000);
+        let mut dst = c.create("/dst").unwrap();
+        c.paste(&mut dst, &slice).unwrap();
+        // ZERO bytes hit the storage servers.
+        assert_eq!(cluster.storage_bytes_written(), written_before);
+        assert_eq!(c.read_at(&dst, 0, 1000).unwrap(), data);
+    }
+
+    #[test]
+    fn yank_subrange_and_rearrange() {
+        let cluster = small_cluster();
+        let c = cluster.client();
+        let mut f = c.create("/f").unwrap();
+        c.write(&mut f, b"AAAABBBBCCCC").unwrap();
+        // Reverse the three 4-byte records using yank/paste only.
+        let a = c.yank_at(f.inode, 0, 4).unwrap();
+        let b = c.yank_at(f.inode, 4, 4).unwrap();
+        let cc = c.yank_at(f.inode, 8, 4).unwrap();
+        let mut out = c.create("/out").unwrap();
+        c.paste(&mut out, &cc).unwrap();
+        c.paste(&mut out, &b).unwrap();
+        c.paste(&mut out, &a).unwrap();
+        assert_eq!(c.read_at(&out, 0, 12).unwrap(), b"CCCCBBBBAAAA");
+    }
+
+    #[test]
+    fn punch_zeroes_and_frees() {
+        let cluster = small_cluster();
+        let c = cluster.client();
+        let mut f = c.create("/p").unwrap();
+        c.write(&mut f, &vec![9u8; 100]).unwrap();
+        c.seek(&mut f, crate::client::SeekFrom::Start(10)).unwrap();
+        c.punch(&mut f, 30).unwrap();
+        assert_eq!(f.offset, 40);
+        let back = c.read_at(&f, 0, 100).unwrap();
+        assert_eq!(&back[..10], &vec![9u8; 10][..]);
+        assert_eq!(&back[10..40], &vec![0u8; 30][..]);
+        assert_eq!(&back[40..], &vec![9u8; 60][..]);
+        // Length unchanged.
+        assert_eq!(c.len(&f).unwrap(), 100);
+    }
+
+    #[test]
+    fn append_slice_is_metadata_only() {
+        let cluster = small_cluster();
+        let c = cluster.client();
+        let mut src = c.create("/src").unwrap();
+        c.write(&mut src, b"0123456789").unwrap();
+        let dst = c.create("/dst").unwrap();
+        let written_before = cluster.storage_bytes_written();
+        let s1 = c.yank_at(src.inode, 0, 5).unwrap();
+        let s2 = c.yank_at(src.inode, 5, 5).unwrap();
+        assert_eq!(c.append_slice(&dst, &s2).unwrap(), 0);
+        assert_eq!(c.append_slice(&dst, &s1).unwrap(), 5);
+        assert_eq!(cluster.storage_bytes_written(), written_before);
+        assert_eq!(c.read_at(&dst, 0, 10).unwrap(), b"5678901234");
+    }
+
+    #[test]
+    fn concat_without_reading() {
+        let cluster = small_cluster();
+        let c = cluster.client();
+        for (i, content) in [b"aaa".as_ref(), b"bb", b"cccc"].iter().enumerate() {
+            let mut f = c.create(&format!("/part{i}")).unwrap();
+            c.write(&mut f, content).unwrap();
+        }
+        let read_before = cluster.storage_bytes_read();
+        let written_before = cluster.storage_bytes_written();
+        let out = c.concat(&["/part0", "/part1", "/part2"], "/all").unwrap();
+        assert_eq!(cluster.storage_bytes_read(), read_before);
+        assert_eq!(cluster.storage_bytes_written(), written_before);
+        assert_eq!(c.len(&out).unwrap(), 9);
+        assert_eq!(c.read_at(&out, 0, 9).unwrap(), b"aaabbcccc");
+    }
+
+    #[test]
+    fn concat_multi_region_sources() {
+        let cluster = small_cluster();
+        let c = cluster.client();
+        let rs = c.config().region_size;
+        let mut data = vec![0u8; (2 * rs + 17) as usize];
+        Rng::new(5).fill_bytes(&mut data);
+        let mut a = c.create("/a").unwrap();
+        c.write(&mut a, &data).unwrap();
+        let mut b = c.create("/b").unwrap();
+        c.write(&mut b, b"tail").unwrap();
+        let out = c.concat(&["/a", "/b"], "/joined").unwrap();
+        let total = data.len() as u64 + 4;
+        assert_eq!(c.len(&out).unwrap(), total);
+        let back = c.read_at(&out, 0, total).unwrap();
+        assert_eq!(&back[..data.len()], &data[..]);
+        assert_eq!(&back[data.len()..], b"tail");
+    }
+
+    #[test]
+    fn copy_shares_slices() {
+        let cluster = small_cluster();
+        let c = cluster.client();
+        let mut f = c.create("/orig").unwrap();
+        c.write(&mut f, b"copy me").unwrap();
+        let written_before = cluster.storage_bytes_written();
+        let copy = c.copy("/orig", "/copy").unwrap();
+        assert_eq!(cluster.storage_bytes_written(), written_before);
+        assert_eq!(c.read_at(&copy, 0, 7).unwrap(), b"copy me");
+        // Mutating the copy must not disturb the original (immutability:
+        // the copy's new write overlays new slices).
+        c.write_at(copy.inode, 0, b"COPY").unwrap();
+        assert_eq!(c.read_at(&copy, 0, 7).unwrap(), b"COPY me");
+        let orig = c.open("/orig").unwrap();
+        assert_eq!(c.read_at(&orig, 0, 7).unwrap(), b"copy me");
+    }
+
+    #[test]
+    fn yank_of_sparse_range_preserves_holes() {
+        let cluster = small_cluster();
+        let c = cluster.client();
+        let f = c.create("/sp").unwrap();
+        c.write_at(f.inode, 50, b"xx").unwrap();
+        let s = c.yank_at(f.inode, 0, 52).unwrap();
+        assert_eq!(s.len(), 52);
+        assert!(s.pieces[0].1.is_hole());
+        let mut out = c.create("/sp2").unwrap();
+        c.paste(&mut out, &s).unwrap();
+        let back = c.read_at(&out, 0, 52).unwrap();
+        assert_eq!(&back[..50], &vec![0u8; 50][..]);
+        assert_eq!(&back[50..], b"xx");
+    }
+}

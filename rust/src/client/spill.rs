@@ -1,0 +1,211 @@
+//! Tier-2 metadata garbage collection: spill a compacted-but-still-large
+//! entry list into a slice on the storage servers and replace it with a
+//! pointer (§2.8).  Random-write workloads defeat tier-1 compaction; this
+//! keeps the metadata object small regardless.
+//!
+//! The encoding is a self-describing little-endian binary format (the
+//! offline build has no serde); [`encode_entries`]/[`decode_entries`]
+//! round-trip exactly.
+
+use crate::error::{Error, Result};
+use crate::types::{Placement, RegionEntry, SliceData, SlicePtr};
+
+const MAGIC: &[u8; 8] = b"WTFSPILL";
+const VERSION: u32 = 1;
+
+fn put_u32(out: &mut Vec<u8>, v: u32) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+fn put_u64(out: &mut Vec<u8>, v: u64) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+struct Cursor<'a> {
+    b: &'a [u8],
+    i: usize,
+}
+
+impl<'a> Cursor<'a> {
+    fn take(&mut self, n: usize) -> Result<&'a [u8]> {
+        if self.i + n > self.b.len() {
+            return Err(Error::CorruptMetadata("truncated spill slice".into()));
+        }
+        let s = &self.b[self.i..self.i + n];
+        self.i += n;
+        Ok(s)
+    }
+    fn u8(&mut self) -> Result<u8> {
+        Ok(self.take(1)?[0])
+    }
+    fn u32(&mut self) -> Result<u32> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+    fn u64(&mut self) -> Result<u64> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+}
+
+/// Serialize an entry list (which must already be fully resolved —
+/// `Placement::Eof` is rejected, it never appears in committed lists).
+pub fn encode_entries(entries: &[RegionEntry]) -> Result<Vec<u8>> {
+    let mut out = Vec::with_capacity(16 + entries.len() * 48);
+    out.extend_from_slice(MAGIC);
+    put_u32(&mut out, VERSION);
+    put_u32(&mut out, entries.len() as u32);
+    for e in entries {
+        match e.placement {
+            Placement::At(at) => {
+                out.push(0);
+                put_u64(&mut out, at);
+            }
+            Placement::Eof => {
+                return Err(Error::CorruptMetadata(
+                    "cannot spill unresolved EOF-relative entry".into(),
+                ))
+            }
+        }
+        put_u64(&mut out, e.len);
+        match &e.data {
+            SliceData::Hole => out.push(1),
+            SliceData::Stored(replicas) => {
+                out.push(0);
+                put_u32(&mut out, replicas.len() as u32);
+                for p in replicas {
+                    put_u32(&mut out, p.server);
+                    put_u32(&mut out, p.backing);
+                    put_u64(&mut out, p.offset);
+                    put_u64(&mut out, p.len);
+                }
+            }
+        }
+    }
+    Ok(out)
+}
+
+/// Inverse of [`encode_entries`].
+pub fn decode_entries(bytes: &[u8]) -> Result<Vec<RegionEntry>> {
+    let mut c = Cursor { b: bytes, i: 0 };
+    if c.take(8)? != MAGIC {
+        return Err(Error::CorruptMetadata("bad spill magic".into()));
+    }
+    let version = c.u32()?;
+    if version != VERSION {
+        return Err(Error::CorruptMetadata(format!(
+            "unsupported spill version {version}"
+        )));
+    }
+    let count = c.u32()? as usize;
+    let mut entries = Vec::with_capacity(count.min(1 << 20));
+    for _ in 0..count {
+        let tag = c.u8()?;
+        let placement = match tag {
+            0 => Placement::At(c.u64()?),
+            _ => return Err(Error::CorruptMetadata("bad placement tag".into())),
+        };
+        let len = c.u64()?;
+        let data = match c.u8()? {
+            1 => SliceData::Hole,
+            0 => {
+                let n = c.u32()? as usize;
+                let mut replicas = Vec::with_capacity(n.min(64));
+                for _ in 0..n {
+                    replicas.push(SlicePtr {
+                        server: c.u32()?,
+                        backing: c.u32()?,
+                        offset: c.u64()?,
+                        len: c.u64()?,
+                    });
+                }
+                SliceData::Stored(replicas)
+            }
+            _ => return Err(Error::CorruptMetadata("bad data tag".into())),
+        };
+        entries.push(RegionEntry {
+            placement,
+            len,
+            data,
+        });
+    }
+    if c.i != bytes.len() {
+        return Err(Error::CorruptMetadata("trailing bytes in spill".into()));
+    }
+    Ok(entries)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> Vec<RegionEntry> {
+        vec![
+            RegionEntry {
+                placement: Placement::At(0),
+                len: 100,
+                data: SliceData::Stored(vec![
+                    SlicePtr {
+                        server: 3,
+                        backing: 1,
+                        offset: 4096,
+                        len: 100,
+                    },
+                    SlicePtr {
+                        server: 7,
+                        backing: 0,
+                        offset: 0,
+                        len: 100,
+                    },
+                ]),
+            },
+            RegionEntry {
+                placement: Placement::At(100),
+                len: 50,
+                data: SliceData::Hole,
+            },
+            RegionEntry {
+                placement: Placement::At(u64::MAX / 2),
+                len: u64::MAX / 4,
+                data: SliceData::Stored(vec![]),
+            },
+        ]
+    }
+
+    #[test]
+    fn round_trip() {
+        let entries = sample();
+        let bytes = encode_entries(&entries).unwrap();
+        assert_eq!(decode_entries(&bytes).unwrap(), entries);
+    }
+
+    #[test]
+    fn empty_list_round_trips() {
+        let bytes = encode_entries(&[]).unwrap();
+        assert_eq!(decode_entries(&bytes).unwrap(), vec![]);
+    }
+
+    #[test]
+    fn rejects_eof_entries() {
+        let e = RegionEntry {
+            placement: Placement::Eof,
+            len: 1,
+            data: SliceData::Hole,
+        };
+        assert!(encode_entries(&[e]).is_err());
+    }
+
+    #[test]
+    fn rejects_corruption() {
+        let entries = sample();
+        let bytes = encode_entries(&entries).unwrap();
+        assert!(decode_entries(&bytes[..bytes.len() - 1]).is_err());
+        assert!(decode_entries(&bytes[1..]).is_err());
+        let mut truncated = bytes.clone();
+        truncated.truncate(10);
+        assert!(decode_entries(&truncated).is_err());
+        let mut extra = bytes.clone();
+        extra.push(0);
+        assert!(decode_entries(&extra).is_err());
+        let mut bad_version = bytes;
+        bad_version[8] = 99;
+        assert!(decode_entries(&bad_version).is_err());
+    }
+}

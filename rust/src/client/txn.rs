@@ -1,0 +1,744 @@
+//! WTF transactions and the retry layer (§2.6).
+//!
+//! A WTF transaction logs every application call with its arguments and
+//! outcome.  All metadata mutations buffer into ONE underlying metadata
+//! (HyperDex) transaction; data slices are written to the storage servers
+//! eagerly — they are invisible until the metadata commits, and immutable
+//! afterwards, so it is always safe to re-use them across retries.
+//!
+//! When the metadata transaction aborts on a conflict, the filesystem
+//! state is unchanged, so the retry layer replays the op log in order
+//! with the same arguments.  If every re-executed call completes with the
+//! same application-visible outcome, the retry is invisible; if any
+//! outcome differs (a read sees different slices, a create finds the name
+//! taken), the transaction aborts to the application — the only aborts
+//! WTF ever surfaces.  Crucially, outcomes are compared by *slice
+//! pointer*, never by data bytes: a 100 MB write logs a few pointers
+//! (§2.6's log-size optimization), and seek-to-EOF records no outcome at
+//! all, which is what lets the paper's seek-and-append example commit
+//! under concurrent appends.
+
+use super::fs::{normalize, split_path};
+use super::{SeekFrom, Slice, WtfClient};
+use crate::error::{Error, Result};
+use crate::meta::{MetaOp, MetaTxn};
+use crate::types::{
+    Inode, InodeId, Key, Placement, RegionEntry, RegionId, SliceData, Value,
+};
+use crate::util::unix_now;
+use std::collections::HashMap;
+
+/// A transaction-scoped file descriptor.
+pub type TxnFd = usize;
+
+/// One logged application call (arguments + recorded outcome).
+#[derive(Clone, Debug)]
+enum LoggedOp {
+    Open { path: String, outcome: InodeId },
+    Create { path: String, inode: InodeId },
+    Seek { fd: TxnFd, from: SeekFrom },
+    Write { fd: TxnFd, slice: Slice },
+    Read { fd: TxnFd, len: u64, outcome: Vec<(u64, SliceData)> },
+    Yank { fd: TxnFd, sz: u64, outcome: Vec<(u64, SliceData)> },
+    Paste { fd: TxnFd, slice: Slice },
+    Punch { fd: TxnFd, amount: u64 },
+}
+
+/// Mutable execution state, rebuilt from scratch on every replay.
+struct TxnState {
+    meta: MetaTxn,
+    /// Read-your-writes overlay: entries this transaction appended.
+    pending_regions: HashMap<RegionId, Vec<RegionEntry>>,
+    /// Inode overlay (length updates, creations).
+    pending_inodes: HashMap<InodeId, Inode>,
+    /// Paths created by this transaction (open-after-create support).
+    pending_paths: HashMap<String, InodeId>,
+    fds: Vec<FdState>,
+}
+
+impl TxnState {
+    fn fresh(client: &WtfClient) -> Self {
+        TxnState {
+            meta: client.meta_txn(),
+            pending_regions: HashMap::new(),
+            pending_inodes: HashMap::new(),
+            pending_paths: HashMap::new(),
+            fds: Vec::new(),
+        }
+    }
+}
+
+#[derive(Clone, Debug)]
+struct FdState {
+    inode: InodeId,
+    offset: u64,
+}
+
+/// An in-flight WTF transaction.  Obtain via [`WtfClient::begin`]; all
+/// calls go through this handle and commit atomically.
+pub struct Transaction<'c> {
+    client: &'c WtfClient,
+    state: TxnState,
+    log: Vec<LoggedOp>,
+}
+
+impl<'c> Transaction<'c> {
+    pub(crate) fn new(client: &'c WtfClient) -> Self {
+        Transaction {
+            client,
+            state: TxnState::fresh(client),
+            log: Vec::new(),
+        }
+    }
+
+    // ------------------------------------------------------------ public API
+
+    /// Open an existing file within the transaction.
+    pub fn open(&mut self, path: &str) -> Result<TxnFd> {
+        let path = normalize(path)?;
+        let inode = Self::exec_open(self.client, &mut self.state, &path)?;
+        self.log.push(LoggedOp::Open {
+            path,
+            outcome: inode,
+        });
+        Ok(self.state.fds.len() - 1)
+    }
+
+    /// Create a file within the transaction (visible to others only at
+    /// commit).
+    pub fn create(&mut self, path: &str) -> Result<TxnFd> {
+        let path = normalize(path)?;
+        let inode = self.client.meta.alloc_inode_id();
+        Self::exec_create(self.client, &mut self.state, &path, inode)?;
+        self.log.push(LoggedOp::Create { path, inode });
+        Ok(self.state.fds.len() - 1)
+    }
+
+    /// Move a cursor.  Deliberately returns no offset: the application
+    /// never observes where `SeekFrom::End` landed, so concurrent length
+    /// changes replay instead of aborting (§2.6's seek-and-write example).
+    pub fn seek(&mut self, fd: TxnFd, from: SeekFrom) -> Result<()> {
+        Self::exec_seek(self.client, &mut self.state, fd, from)?;
+        self.log.push(LoggedOp::Seek { fd, from });
+        Ok(())
+    }
+
+    /// Write at the cursor.  The data's slices are created on the storage
+    /// servers now; only their pointers live in the transaction.
+    pub fn write(&mut self, fd: TxnFd, data: &[u8]) -> Result<()> {
+        let fds = &self.state.fds;
+        let fd_state = fds.get(fd).ok_or_else(bad_fd)?.clone();
+        let inode = fd_state.inode;
+        let replication = self
+            .state
+            .pending_inodes
+            .get(&inode)
+            .map(|i| i.replication)
+            .unwrap_or(self.client.config.replication);
+        // Slice creation is offset-independent: split by region size only
+        // for placement locality, using the *current* cursor as the hint.
+        let mut pieces = Vec::new();
+        let mut cursor_off = fd_state.offset;
+        let mut consumed = 0usize;
+        while consumed < data.len() {
+            let (idx, rel) = self.client.config.locate(cursor_off);
+            let take = ((self.client.config.region_size - rel) as usize)
+                .min(data.len() - consumed);
+            let rid = RegionId::new(inode, idx);
+            let replicas = self.client.create_replicated(
+                &data[consumed..consumed + take],
+                rid,
+                replication,
+            )?;
+            pieces.push((take as u64, SliceData::Stored(replicas)));
+            consumed += take;
+            cursor_off += take as u64;
+        }
+        let slice = Slice { pieces };
+        Self::exec_paste(self.client, &mut self.state, fd, &slice)?;
+        self.log.push(LoggedOp::Write { fd, slice });
+        Ok(())
+    }
+
+    /// Read at the cursor.  The outcome (the resolved slice pointers) is
+    /// logged; a replay that resolves different pointers aborts.
+    pub fn read(&mut self, fd: TxnFd, len: u64) -> Result<Vec<u8>> {
+        let (pieces, data) =
+            Self::exec_read(self.client, &mut self.state, fd, len, true)?;
+        self.log.push(LoggedOp::Read {
+            fd,
+            len,
+            outcome: pieces,
+        });
+        Ok(data)
+    }
+
+    /// Yank at the cursor: like read, but returns pointers, not bytes.
+    pub fn yank(&mut self, fd: TxnFd, sz: u64) -> Result<Slice> {
+        let (pieces, _) = Self::exec_read(self.client, &mut self.state, fd, sz, false)?;
+        self.log.push(LoggedOp::Yank {
+            fd,
+            sz,
+            outcome: pieces.clone(),
+        });
+        Ok(Slice { pieces })
+    }
+
+    /// Paste a slice at the cursor (metadata only).
+    pub fn paste(&mut self, fd: TxnFd, slice: &Slice) -> Result<()> {
+        Self::exec_paste(self.client, &mut self.state, fd, slice)?;
+        self.log.push(LoggedOp::Paste {
+            fd,
+            slice: slice.clone(),
+        });
+        Ok(())
+    }
+
+    /// Punch a hole at the cursor.
+    pub fn punch(&mut self, fd: TxnFd, amount: u64) -> Result<()> {
+        Self::exec_punch(self.client, &mut self.state, fd, amount)?;
+        self.log.push(LoggedOp::Punch { fd, amount });
+        Ok(())
+    }
+
+    /// File length as observed inside the transaction.  NOTE: exposing
+    /// the length makes it part of the application-visible state, but it
+    /// is *not* logged as an outcome — WTF's contract is that only
+    /// returned data/pointers are compared on replay.
+    pub fn len(&mut self, fd: TxnFd) -> Result<u64> {
+        let inode = self.state.fds.get(fd).ok_or_else(bad_fd)?.inode;
+        Self::file_len(self.client, &mut self.state, inode)
+    }
+
+    /// Abort the transaction: nothing was published; eagerly-created
+    /// slices become garbage for the next GC scan.
+    pub fn abort(self) {}
+
+    /// Commit.  Retries transparently on metadata conflicts by replaying
+    /// the op log (§2.6); aborts to the application only when a replayed
+    /// call's outcome diverges.
+    pub fn commit(mut self) -> Result<()> {
+        let budget = self.client.config.txn_retry_budget.max(1);
+        let mut attempts = 0u32;
+        loop {
+            let state = std::mem::replace(&mut self.state, TxnState::fresh(self.client));
+            match state.meta.commit() {
+                Ok(_) => return Ok(()),
+                Err(e) if e.is_retryable() => {
+                    attempts += 1;
+                    self.client.metrics.add_txn_retries(1);
+                    if attempts >= budget {
+                        return Err(Error::RetriesExhausted { attempts });
+                    }
+                    // Replay the log against fresh state.
+                    self.replay()?;
+                }
+                Err(e) => return Err(e),
+            }
+        }
+    }
+
+    /// Re-execute every logged call; abort on any outcome divergence.
+    fn replay(&mut self) -> Result<()> {
+        let client = self.client;
+        for op in &self.log {
+            match op {
+                LoggedOp::Open { path, outcome } => {
+                    let inode = Self::exec_open(client, &mut self.state, path)
+                        .map_err(|e| diverged(format!("open({path}): {e}")))?;
+                    if inode != *outcome {
+                        return Err(diverged(format!(
+                            "open({path}) resolved a different inode"
+                        )));
+                    }
+                }
+                LoggedOp::Create { path, inode } => {
+                    Self::exec_create(client, &mut self.state, path, *inode)
+                        .map_err(|e| diverged(format!("create({path}): {e}")))?;
+                }
+                LoggedOp::Seek { fd, from } => {
+                    Self::exec_seek(client, &mut self.state, *fd, *from)
+                        .map_err(|e| diverged(format!("seek: {e}")))?;
+                }
+                LoggedOp::Write { fd, slice } => {
+                    // Re-paste the previously-created slices at the (new)
+                    // cursor — no data is rewritten.
+                    Self::exec_paste(client, &mut self.state, *fd, slice)
+                        .map_err(|e| diverged(format!("write: {e}")))?;
+                }
+                LoggedOp::Read { fd, len, outcome } => {
+                    let (pieces, _) =
+                        Self::exec_read(client, &mut self.state, *fd, *len, false)
+                            .map_err(|e| diverged(format!("read: {e}")))?;
+                    if &pieces != outcome {
+                        return Err(diverged(
+                            "read observed different contents".to_string(),
+                        ));
+                    }
+                }
+                LoggedOp::Yank { fd, sz, outcome } => {
+                    let (pieces, _) =
+                        Self::exec_read(client, &mut self.state, *fd, *sz, false)
+                            .map_err(|e| diverged(format!("yank: {e}")))?;
+                    if &pieces != outcome {
+                        return Err(diverged(
+                            "yank observed different contents".to_string(),
+                        ));
+                    }
+                }
+                LoggedOp::Paste { fd, slice } => {
+                    Self::exec_paste(client, &mut self.state, *fd, slice)
+                        .map_err(|e| diverged(format!("paste: {e}")))?;
+                }
+                LoggedOp::Punch { fd, amount } => {
+                    Self::exec_punch(client, &mut self.state, *fd, *amount)
+                        .map_err(|e| diverged(format!("punch: {e}")))?;
+                }
+            }
+        }
+        Ok(())
+    }
+
+    // --------------------------------------------------------- executors
+    // (associated functions so replay can call them without aliasing)
+
+    fn exec_open(client: &WtfClient, state: &mut TxnState, path: &str) -> Result<InodeId> {
+        let _ = client;
+        // Paths created earlier in this transaction shadow the store.
+        let inode = if let Some(id) = state.pending_paths.get(path) {
+            *id
+        } else {
+            match state.meta.get(&Key::path(path)) {
+                Some(Value::PathEntry(id)) => id,
+                Some(_) => return Err(Error::CorruptMetadata(path.into())),
+                None => return Err(Error::NotFound(path.into())),
+            }
+        };
+        state.fds.push(FdState { inode, offset: 0 });
+        Ok(inode)
+    }
+
+    fn exec_create(
+        client: &WtfClient,
+        state: &mut TxnState,
+        path: &str,
+        inode_id: InodeId,
+    ) -> Result<()> {
+        let (parent, name) = split_path(path)?;
+        let parent_id = match state.meta.get(&Key::path(&parent)) {
+            Some(Value::PathEntry(p)) => p,
+            _ => return Err(Error::NotFound(parent)),
+        };
+        if state.pending_paths.contains_key(path)
+            || state.meta.get(&Key::path(path)).is_some()
+        {
+            return Err(Error::AlreadyExists(path.into()));
+        }
+        let inode = Inode::new_file(inode_id, 0o644, client.config.replication);
+        state.meta.push(MetaOp::PathInsert {
+            key: Key::path(path),
+            inode: inode_id,
+            expect_absent: true,
+        });
+        state.meta.push(MetaOp::Put {
+            key: Key::inode(inode_id),
+            value: Value::Inode(inode.clone()),
+        });
+        state.meta.push(MetaOp::DirInsert {
+            key: Key::dir(parent_id),
+            name,
+            inode: inode_id,
+            expect_absent: true,
+        });
+        state.pending_inodes.insert(inode_id, inode);
+        state.pending_paths.insert(path.to_string(), inode_id);
+        state.fds.push(FdState {
+            inode: inode_id,
+            offset: 0,
+        });
+        Ok(())
+    }
+
+    fn file_len(client: &WtfClient, state: &mut TxnState, inode: InodeId) -> Result<u64> {
+        if let Some(i) = state.pending_inodes.get(&inode) {
+            return Ok(i.len);
+        }
+        // Committed inode enters the read set: a concurrent length change
+        // conflicts the metadata txn and triggers a replay.
+        let mut i = match state.meta.get(&Key::inode(inode)) {
+            Some(Value::Inode(i)) => i,
+            _ => return Err(Error::NotFound(format!("inode {inode}"))),
+        };
+        // Overlay any pending appends (they only ever grow the file).
+        for (rid, entries) in &state.pending_regions {
+            if rid.inode != inode {
+                continue;
+            }
+            let base = u64::from(rid.index) * client.config.region_size;
+            for e in entries {
+                if let Placement::At(at) = e.placement {
+                    i.len = i.len.max(base + at + e.len);
+                }
+            }
+        }
+        state.pending_inodes.insert(inode, i.clone());
+        Ok(i.len)
+    }
+
+    fn exec_seek(
+        client: &WtfClient,
+        state: &mut TxnState,
+        fd: TxnFd,
+        from: SeekFrom,
+    ) -> Result<()> {
+        let inode = state.fds.get(fd).ok_or_else(bad_fd)?.inode;
+        let cur = state.fds[fd].offset;
+        let new = match from {
+            SeekFrom::Start(o) => o as i128,
+            SeekFrom::Current(d) => cur as i128 + d as i128,
+            SeekFrom::End(d) => Self::file_len(client, state, inode)? as i128 + d as i128,
+        };
+        if new < 0 {
+            return Err(Error::InvalidArgument("seek before start".into()));
+        }
+        state.fds[fd].offset = new as u64;
+        Ok(())
+    }
+
+    /// Region view inside the transaction: committed entries (read set)
+    /// plus this transaction's pending appends.
+    fn region_view(
+        client: &WtfClient,
+        state: &mut TxnState,
+        rid: RegionId,
+    ) -> Result<Vec<RegionEntry>> {
+        let committed = match state.meta.get(&Key::region(rid)) {
+            Some(Value::Region(r)) => client.region_entries(&r)?,
+            Some(_) => return Err(Error::CorruptMetadata(format!("region {rid:?}"))),
+            None => Vec::new(),
+        };
+        let mut all = committed;
+        if let Some(pending) = state.pending_regions.get(&rid) {
+            all.extend(pending.iter().cloned());
+        }
+        Ok(all)
+    }
+
+    fn exec_read(
+        client: &WtfClient,
+        state: &mut TxnState,
+        fd: TxnFd,
+        len: u64,
+        fetch: bool,
+    ) -> Result<(Vec<(u64, SliceData)>, Vec<u8>)> {
+        let FdState { inode, offset } = state.fds.get(fd).ok_or_else(bad_fd)?.clone();
+        let file_len = Self::file_len(client, state, inode)?;
+        let len = if offset >= file_len {
+            0
+        } else {
+            len.min(file_len - offset)
+        };
+        let mut pieces: Vec<(u64, SliceData)> = Vec::new();
+        for (rid, rel, part_len) in client.split_range(inode, offset, len) {
+            let entries = Self::region_view(client, state, rid)?;
+            let extents = super::compact::resolve_entries(&entries);
+            let window = super::compact::clip_extents(&extents, rel, rel + part_len);
+            let mut cursor = rel;
+            for e in window {
+                if e.start > cursor {
+                    pieces.push((e.start - cursor, SliceData::Hole));
+                }
+                pieces.push((e.len, e.data.clone()));
+                cursor = e.end();
+            }
+            if cursor < rel + part_len {
+                pieces.push((rel + part_len - cursor, SliceData::Hole));
+            }
+        }
+        let mut data = Vec::new();
+        if fetch {
+            data = vec![0u8; len as usize];
+            let mut at = 0usize;
+            for (plen, src) in &pieces {
+                if let SliceData::Stored(replicas) = src {
+                    let bytes = client.fetch_replicated(replicas)?;
+                    data[at..at + bytes.len()].copy_from_slice(&bytes);
+                }
+                at += *plen as usize;
+            }
+        }
+        state.fds[fd].offset += len;
+        Ok((pieces, data))
+    }
+
+    fn exec_paste(
+        client: &WtfClient,
+        state: &mut TxnState,
+        fd: TxnFd,
+        slice: &Slice,
+    ) -> Result<()> {
+        let FdState { inode, offset } = state.fds.get(fd).ok_or_else(bad_fd)?.clone();
+        let mut cursor = offset;
+        let mut highest = 0u32;
+        for (len, data) in &slice.pieces {
+            let mut remaining = *len;
+            let mut piece_off = 0u64;
+            while remaining > 0 {
+                let (idx, rel) = client.config.locate(cursor);
+                let take = (client.config.region_size - rel).min(remaining);
+                let rid = RegionId::new(inode, idx);
+                highest = highest.max(idx);
+                let entry = RegionEntry {
+                    placement: Placement::At(rel),
+                    len: take,
+                    data: data.slice(piece_off, piece_off + take),
+                };
+                state.meta.push(MetaOp::RegionAppend {
+                    key: Key::region(rid),
+                    entry: entry.clone(),
+                });
+                state.pending_regions.entry(rid).or_default().push(entry);
+                cursor += take;
+                piece_off += take;
+                remaining -= take;
+            }
+        }
+        let end = offset + slice.len();
+        state.meta.push(MetaOp::InodeSetLenMax {
+            key: Key::inode(inode),
+            candidate: end,
+            highest_region: highest,
+            mtime: unix_now(),
+        });
+        if let Some(i) = state.pending_inodes.get_mut(&inode) {
+            i.len = i.len.max(end);
+            i.highest_region = i.highest_region.max(highest);
+        }
+        state.fds[fd].offset = end;
+        Ok(())
+    }
+
+    fn exec_punch(
+        client: &WtfClient,
+        state: &mut TxnState,
+        fd: TxnFd,
+        amount: u64,
+    ) -> Result<()> {
+        let FdState { inode, offset } = state.fds.get(fd).ok_or_else(bad_fd)?.clone();
+        let file_len = Self::file_len(client, state, inode)?;
+        let in_file = amount.min(file_len.saturating_sub(offset));
+        if in_file > 0 {
+            let hole = Slice {
+                pieces: vec![(in_file, SliceData::Hole)],
+            };
+            Self::exec_paste(client, state, fd, &hole)?;
+        }
+        state.fds[fd].offset = offset + amount;
+        Ok(())
+    }
+}
+
+fn bad_fd() -> Error {
+    Error::InvalidArgument("bad transaction fd".into())
+}
+
+fn diverged(reason: String) -> Error {
+    Error::TxnAborted { reason }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::client::testutil::small_cluster;
+
+    #[test]
+    fn transactional_write_is_atomic_and_isolated() {
+        let cluster = small_cluster();
+        let c = cluster.client();
+        let mut t = c.begin();
+        let fd = t.create("/t").unwrap();
+        t.write(fd, b"atomic").unwrap();
+        // Not visible before commit.
+        assert!(!c.exists("/t"));
+        t.commit().unwrap();
+        let f = c.open("/t").unwrap();
+        assert_eq!(c.read_at(&f, 0, 6).unwrap(), b"atomic");
+    }
+
+    #[test]
+    fn abort_publishes_nothing() {
+        let cluster = small_cluster();
+        let c = cluster.client();
+        let mut t = c.begin();
+        let fd = t.create("/gone").unwrap();
+        t.write(fd, b"data").unwrap();
+        t.abort();
+        assert!(!c.exists("/gone"));
+    }
+
+    #[test]
+    fn read_your_writes_within_txn() {
+        let cluster = small_cluster();
+        let c = cluster.client();
+        let mut f = c.create("/ryw").unwrap();
+        c.write(&mut f, b"base").unwrap();
+        let mut t = c.begin();
+        let fd = t.open("/ryw").unwrap();
+        t.seek(fd, SeekFrom::End(0)).unwrap();
+        t.write(fd, b"+txn").unwrap();
+        t.seek(fd, SeekFrom::Start(0)).unwrap();
+        assert_eq!(t.read(fd, 8).unwrap(), b"base+txn");
+        t.commit().unwrap();
+        assert_eq!(c.read_at(&f, 0, 8).unwrap(), b"base+txn");
+    }
+
+    #[test]
+    fn multi_file_transaction_commits_atomically() {
+        let cluster = small_cluster();
+        let c = cluster.client();
+        let mut a = c.create("/a").unwrap();
+        c.write(&mut a, b"AA").unwrap();
+        let mut t = c.begin();
+        let fa = t.open("/a").unwrap();
+        let fb = t.create("/b").unwrap();
+        let got = t.read(fa, 2).unwrap();
+        t.write(fb, &got).unwrap();
+        t.seek(fa, SeekFrom::End(0)).unwrap();
+        t.write(fa, b"!").unwrap();
+        t.commit().unwrap();
+        assert_eq!(c.read_at(&c.open("/a").unwrap(), 0, 3).unwrap(), b"AA!");
+        assert_eq!(c.read_at(&c.open("/b").unwrap(), 0, 2).unwrap(), b"AA");
+    }
+
+    #[test]
+    fn seek_end_write_replays_instead_of_aborting() {
+        // The paper's "Hello World" example: a concurrent append changes
+        // the EOF between our seek and commit; the transaction must
+        // replay and land the write at the NEW end, not abort.
+        let cluster = small_cluster();
+        let c = cluster.client();
+        let mut f = c.create("/hello").unwrap();
+        c.write(&mut f, b"0123").unwrap();
+
+        let mut t = c.begin();
+        let fd = t.open("/hello").unwrap();
+        t.seek(fd, SeekFrom::End(0)).unwrap();
+        t.write(fd, b"Hello World").unwrap();
+
+        // Concurrent writer extends the file before we commit.
+        c.append_bytes(&f, b"XYZ").unwrap();
+
+        t.commit().unwrap();
+        let f = c.open("/hello").unwrap();
+        let len = c.len(&f).unwrap();
+        assert_eq!(len, 4 + 3 + 11);
+        assert_eq!(c.read_at(&f, 7, 11).unwrap(), b"Hello World");
+        // And the retry counter moved.
+        assert!(c.metrics().txn_retries() >= 1);
+    }
+
+    #[test]
+    fn conflicting_read_aborts_to_application() {
+        // If the transaction READ data that then changed, replay observes
+        // a different outcome and must abort.
+        let cluster = small_cluster();
+        let c = cluster.client();
+        let mut f = c.create("/contested").unwrap();
+        c.write(&mut f, b"old!").unwrap();
+
+        let mut t = c.begin();
+        let fd = t.open("/contested").unwrap();
+        let data = t.read(fd, 4).unwrap();
+        assert_eq!(data, b"old!");
+        t.write(fd, &data).unwrap(); // echo what we read
+
+        // Concurrent writer overwrites what the transaction read.
+        c.write_at(f.inode, 0, b"new!").unwrap();
+
+        let err = t.commit().unwrap_err();
+        assert!(matches!(err, Error::TxnAborted { .. }), "{err}");
+    }
+
+    #[test]
+    fn create_conflict_aborts_on_replay() {
+        let cluster = small_cluster();
+        let c = cluster.client();
+        let mut seed = c.create("/seed").unwrap();
+        c.write(&mut seed, b"s").unwrap();
+
+        let mut t = c.begin();
+        // Force a read set entry so the concurrent write conflicts.
+        let fs = t.open("/seed").unwrap();
+        let _ = t.read(fs, 1).unwrap();
+        let fd = t.create("/race").unwrap();
+        t.write(fd, b"mine").unwrap();
+
+        // Another client wins the name AND invalidates the read.
+        c.create("/race").unwrap();
+        c.write_at(seed.inode, 0, b"S").unwrap();
+
+        let err = t.commit().unwrap_err();
+        assert!(matches!(err, Error::TxnAborted { .. }), "{err}");
+    }
+
+    #[test]
+    fn yank_paste_transactionally_rearranges() {
+        let cluster = small_cluster();
+        let c = cluster.client();
+        let mut f = c.create("/recs").unwrap();
+        c.write(&mut f, b"111222333").unwrap();
+        let mut t = c.begin();
+        let src = t.open("/recs").unwrap();
+        let out = t.create("/sorted").unwrap();
+        t.seek(src, SeekFrom::Start(6)).unwrap();
+        let three = t.yank(src, 3).unwrap();
+        t.seek(src, SeekFrom::Start(0)).unwrap();
+        let one = t.yank(src, 3).unwrap();
+        t.paste(out, &three).unwrap();
+        t.paste(out, &one).unwrap();
+        t.commit().unwrap();
+        let out = c.open("/sorted").unwrap();
+        assert_eq!(c.read_at(&out, 0, 6).unwrap(), b"333111");
+    }
+
+    #[test]
+    fn punch_inside_txn() {
+        let cluster = small_cluster();
+        let c = cluster.client();
+        let mut f = c.create("/pt").unwrap();
+        c.write(&mut f, &vec![1u8; 20]).unwrap();
+        let mut t = c.begin();
+        let fd = t.open("/pt").unwrap();
+        t.seek(fd, SeekFrom::Start(5)).unwrap();
+        t.punch(fd, 10).unwrap();
+        t.commit().unwrap();
+        let back = c.read_at(&f, 0, 20).unwrap();
+        assert_eq!(&back[..5], &[1u8; 5][..]);
+        assert_eq!(&back[5..15], &[0u8; 10][..]);
+        assert_eq!(&back[15..], &[1u8; 5][..]);
+    }
+
+    #[test]
+    fn replayed_write_reuses_slices() {
+        let cluster = small_cluster();
+        let c = cluster.client();
+        let mut f = c.create("/reuse").unwrap();
+        c.write(&mut f, b"abc").unwrap();
+
+        let mut t = c.begin();
+        let fd = t.open("/reuse").unwrap();
+        t.seek(fd, SeekFrom::End(0)).unwrap();
+        t.write(fd, b"PAYLOAD").unwrap();
+        let written_after_log = cluster.storage_bytes_written();
+
+        // Trigger a conflict -> replay.
+        c.append_bytes(&f, b"z").unwrap();
+        let concurrent = 1 * c.config().replication as u64;
+        t.commit().unwrap();
+        // Replay did NOT rewrite PAYLOAD to the storage servers.
+        assert_eq!(
+            cluster.storage_bytes_written(),
+            written_after_log + concurrent
+        );
+    }
+}

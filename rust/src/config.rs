@@ -1,0 +1,161 @@
+//! Cluster and filesystem configuration.
+//!
+//! Defaults mirror the paper's evaluation deployment (§4): 64 MB regions
+//! (after the HDFS block-size workaround), 2-way replication, twelve
+//! storage servers with three metadata nodes, ~3 ms metadata transaction
+//! floor.  In-process test clusters shrink these aggressively.
+
+
+use std::path::PathBuf;
+use std::time::Duration;
+
+/// Top-level configuration for an in-process WTF deployment.
+#[derive(Clone, Debug)]
+pub struct Config {
+    /// Size of one file region in bytes (§2.3). Paper evaluation: 64 MB.
+    pub region_size: u64,
+    /// Default replication factor for file slices (§2.9). Paper: 2.
+    pub replication: u8,
+    /// Number of storage servers.
+    pub storage_servers: u32,
+    /// Number of metadata shards (HyperDex partitions).
+    pub meta_shards: u32,
+    /// Replicas per metadata shard (HyperDex tolerates f failures with
+    /// f+1-length value-dependent chains).
+    pub meta_replicas: u8,
+    /// Coordinator replicas (Replicant/Paxos group size).
+    pub coordinator_replicas: u8,
+    /// Backing files maintained per storage server (§2.2).
+    pub backing_files_per_server: u32,
+    /// Virtual nodes per server on the consistent-hash ring (§2.7).
+    pub ring_vnodes: u32,
+    /// Root directory for storage-server backing files; a tempdir when
+    /// `None`.
+    pub data_dir: Option<PathBuf>,
+    /// Simulated latency floor for one metadata transaction (the paper
+    /// observes ~3 ms per HyperDex transaction). Zero for unit tests and
+    /// real-mode benchmarks.
+    pub meta_txn_floor: Duration,
+    /// Max transparent retries of a conflicted transaction before the
+    /// retry layer reports `RetriesExhausted`.
+    pub txn_retry_budget: u32,
+    /// GC: storage servers start collecting above this garbage fraction.
+    pub gc_high_watermark: f64,
+    /// GC: and stop below this one (§2.8: 20%).
+    pub gc_low_watermark: f64,
+}
+
+impl Default for Config {
+    fn default() -> Self {
+        Config {
+            region_size: 64 * 1024 * 1024,
+            replication: 2,
+            storage_servers: 12,
+            meta_shards: 8,
+            meta_replicas: 2,
+            coordinator_replicas: 3,
+            backing_files_per_server: 4,
+            ring_vnodes: 64,
+            data_dir: None,
+            meta_txn_floor: Duration::ZERO,
+            txn_retry_budget: 16,
+            gc_high_watermark: 0.5,
+            gc_low_watermark: 0.2,
+        }
+    }
+}
+
+impl Config {
+    /// A small, fast configuration for unit/integration tests: tiny
+    /// regions so multi-region code paths are exercised with little data.
+    pub fn test() -> Self {
+        Config {
+            region_size: 4096,
+            replication: 2,
+            storage_servers: 4,
+            meta_shards: 4,
+            meta_replicas: 2,
+            coordinator_replicas: 3,
+            backing_files_per_server: 2,
+            ring_vnodes: 16,
+            ..Default::default()
+        }
+    }
+
+    /// Region index + region-relative offset for an absolute file offset.
+    pub fn locate(&self, offset: u64) -> (u32, u64) {
+        ((offset / self.region_size) as u32, offset % self.region_size)
+    }
+
+    /// Validate invariants that the rest of the stack assumes.
+    pub fn validate(&self) -> crate::Result<()> {
+        if self.region_size == 0 {
+            return Err(crate::Error::InvalidArgument("region_size == 0".into()));
+        }
+        if self.replication == 0 {
+            return Err(crate::Error::InvalidArgument("replication == 0".into()));
+        }
+        if self.storage_servers == 0 {
+            return Err(crate::Error::InvalidArgument("storage_servers == 0".into()));
+        }
+        if u32::from(self.replication) > self.storage_servers {
+            return Err(crate::Error::InvalidArgument(format!(
+                "replication {} exceeds storage servers {}",
+                self.replication, self.storage_servers
+            )));
+        }
+        if self.meta_shards == 0 {
+            return Err(crate::Error::InvalidArgument("meta_shards == 0".into()));
+        }
+        if !(0.0..=1.0).contains(&self.gc_low_watermark)
+            || !(0.0..=1.0).contains(&self.gc_high_watermark)
+            || self.gc_low_watermark > self.gc_high_watermark
+        {
+            return Err(crate::Error::InvalidArgument(
+                "gc watermarks must satisfy 0 <= low <= high <= 1".into(),
+            ));
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn defaults_are_paper_shaped() {
+        let c = Config::default();
+        assert_eq!(c.region_size, 64 << 20);
+        assert_eq!(c.replication, 2);
+        assert_eq!(c.storage_servers, 12);
+        c.validate().unwrap();
+    }
+
+    #[test]
+    fn locate_maps_offsets_to_regions() {
+        let c = Config {
+            region_size: 100,
+            ..Config::test()
+        };
+        assert_eq!(c.locate(0), (0, 0));
+        assert_eq!(c.locate(99), (0, 99));
+        assert_eq!(c.locate(100), (1, 0));
+        assert_eq!(c.locate(250), (2, 50));
+    }
+
+    #[test]
+    fn validation_rejects_nonsense() {
+        let mut c = Config::test();
+        c.replication = 9;
+        c.storage_servers = 2;
+        assert!(c.validate().is_err());
+        let mut c = Config::test();
+        c.region_size = 0;
+        assert!(c.validate().is_err());
+        let mut c = Config::test();
+        c.gc_low_watermark = 0.9;
+        c.gc_high_watermark = 0.1;
+        assert!(c.validate().is_err());
+    }
+}

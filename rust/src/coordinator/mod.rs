@@ -1,0 +1,276 @@
+//! The replicated coordinator: rendezvous point for every component (§2,
+//! Fig. 1) and keeper of the storage-server list.
+//!
+//! The paper implements this as a ~960-line replicated object hosted by
+//! Replicant, which Paxos-sequences function calls into the library.  We
+//! do the same shape: [`CoordinatorState`] is the deterministic state
+//! machine, [`paxos`] sequences [`CoordCmd`]s into a replicated log, and
+//! every replica applies the log in order.  Clients read configuration
+//! snapshots ([`ClusterConfig`]) tagged with an epoch; any config change
+//! bumps the epoch.
+
+pub mod paxos;
+
+use crate::error::Result;
+#[cfg(test)]
+use crate::error::Error;
+use crate::types::ServerId;
+use std::sync::Mutex;
+
+use std::collections::BTreeMap;
+
+/// A function call into the replicated coordinator object.
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub enum CoordCmd {
+    /// Placeholder decided when a slot must be filled but no command is
+    /// pending (never emitted by clients).
+    #[default]
+    Noop,
+    /// A storage server announces itself.
+    RegisterServer { id: ServerId, weight: u32 },
+    /// Administratively (or via failure detection) take a server offline.
+    OfflineServer { id: ServerId },
+    /// Bring a previously-offline server back.
+    OnlineServer { id: ServerId },
+}
+
+/// Status of one storage server in the configuration.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct ServerInfo {
+    pub weight: u32,
+    pub online: bool,
+}
+
+/// The deterministic state machine each replica applies.
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct CoordinatorState {
+    pub epoch: u64,
+    pub servers: BTreeMap<ServerId, ServerInfo>,
+}
+
+impl CoordinatorState {
+    fn apply(&mut self, cmd: &CoordCmd) {
+        match cmd {
+            CoordCmd::Noop => {}
+            CoordCmd::RegisterServer { id, weight } => {
+                self.servers.insert(
+                    *id,
+                    ServerInfo {
+                        weight: *weight,
+                        online: true,
+                    },
+                );
+                self.epoch += 1;
+            }
+            CoordCmd::OfflineServer { id } => {
+                if let Some(s) = self.servers.get_mut(id) {
+                    if s.online {
+                        s.online = false;
+                        self.epoch += 1;
+                    }
+                }
+            }
+            CoordCmd::OnlineServer { id } => {
+                if let Some(s) = self.servers.get_mut(id) {
+                    if !s.online {
+                        s.online = true;
+                        self.epoch += 1;
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// The configuration snapshot clients build their placement ring from.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct ClusterConfig {
+    pub epoch: u64,
+    pub online_servers: Vec<ServerId>,
+}
+
+/// A Paxos-replicated coordinator deployment: `n` acceptors, `n` state
+/// machine replicas, one shared command log.
+#[derive(Debug)]
+pub struct Coordinator {
+    acceptors: Vec<paxos::Acceptor<CoordCmd>>,
+    replicas: Vec<Mutex<ReplicaState>>,
+    log: Mutex<Vec<CoordCmd>>,
+}
+
+#[derive(Debug, Default)]
+struct ReplicaState {
+    applied: usize,
+    state: CoordinatorState,
+}
+
+impl Coordinator {
+    /// A coordinator group with `replicas` members (paper default: 3+).
+    pub fn new(replicas: u8) -> Self {
+        let n = replicas.max(1) as usize;
+        Coordinator {
+            acceptors: (0..n).map(|_| paxos::Acceptor::new()).collect(),
+            replicas: (0..n).map(|_| Mutex::new(ReplicaState::default())).collect(),
+            log: Mutex::new(Vec::new()),
+        }
+    }
+
+    /// Sequence `cmd` through Paxos and apply it on every replica.
+    pub fn call(&self, cmd: CoordCmd) -> Result<ClusterConfig> {
+        let slot = {
+            let log = self.log.lock().unwrap();
+            log.len()
+        };
+        let chosen = paxos::propose(&self.acceptors, slot, 0, cmd.clone())?;
+        {
+            let mut log = self.log.lock().unwrap();
+            if log.len() == slot {
+                log.push(chosen.clone());
+            }
+        }
+        // If another proposal raced us into this slot, retry in the next.
+        if chosen != cmd {
+            return self.call(cmd);
+        }
+        self.catch_up_all();
+        self.config()
+    }
+
+    fn catch_up_all(&self) {
+        let log = self.log.lock().unwrap();
+        for replica in &self.replicas {
+            let mut r = replica.lock().unwrap();
+            while r.applied < log.len() {
+                let cmd = log[r.applied].clone();
+                r.state.apply(&cmd);
+                r.applied += 1;
+            }
+        }
+    }
+
+    /// Current configuration as served by the first live replica.
+    pub fn config(&self) -> Result<ClusterConfig> {
+        self.catch_up_all();
+        let r = self.replicas[0].lock().unwrap();
+        Ok(ClusterConfig {
+            epoch: r.state.epoch,
+            online_servers: r
+                .state
+                .servers
+                .iter()
+                .filter(|(_, info)| info.online)
+                .map(|(id, _)| *id)
+                .collect(),
+        })
+    }
+
+    /// Failure injection: kill one acceptor.
+    pub fn kill_acceptor(&self, idx: usize) {
+        if let Some(a) = self.acceptors.get(idx) {
+            a.set_alive(false);
+        }
+    }
+
+    /// Recover one acceptor (its slot state was retained; real Replicant
+    /// would resync from the log, which our shared log models).
+    pub fn recover_acceptor(&self, idx: usize) {
+        if let Some(a) = self.acceptors.get(idx) {
+            a.set_alive(true);
+        }
+    }
+
+    /// All replicas agree on the state (test invariant).
+    pub fn replicas_converged(&self) -> bool {
+        self.catch_up_all();
+        let first = self.replicas[0].lock().unwrap().state.clone();
+        self.replicas.iter().all(|r| r.lock().unwrap().state == first)
+    }
+
+    pub fn quorum_alive(&self) -> bool {
+        let alive = self.acceptors.iter().filter(|a| a.is_alive()).count();
+        alive > self.acceptors.len() / 2
+    }
+}
+
+/// Convenience: register servers `0..servers` and return the coordinator.
+pub fn bootstrap(replicas: u8, servers: u32) -> Result<Coordinator> {
+    let c = Coordinator::new(replicas);
+    for id in 0..servers {
+        c.call(CoordCmd::RegisterServer { id, weight: 1 })?;
+    }
+    Ok(c)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn registration_builds_config_with_epochs() {
+        let c = bootstrap(3, 3).unwrap();
+        let cfg = c.config().unwrap();
+        assert_eq!(cfg.online_servers, vec![0, 1, 2]);
+        assert_eq!(cfg.epoch, 3);
+    }
+
+    #[test]
+    fn offline_online_cycle_bumps_epoch() {
+        let c = bootstrap(3, 2).unwrap();
+        let e0 = c.config().unwrap().epoch;
+        let cfg = c.call(CoordCmd::OfflineServer { id: 1 }).unwrap();
+        assert_eq!(cfg.online_servers, vec![0]);
+        assert_eq!(cfg.epoch, e0 + 1);
+        let cfg = c.call(CoordCmd::OnlineServer { id: 1 }).unwrap();
+        assert_eq!(cfg.online_servers, vec![0, 1]);
+        // Re-onlining an online server is a no-op for the epoch.
+        c.call(CoordCmd::OnlineServer { id: 1 }).unwrap();
+        assert_eq!(c.config().unwrap().epoch, e0 + 2);
+    }
+
+    #[test]
+    fn survives_minority_acceptor_failure() {
+        let c = bootstrap(3, 1).unwrap();
+        c.kill_acceptor(0);
+        c.call(CoordCmd::RegisterServer { id: 9, weight: 1 })
+            .unwrap();
+        assert!(c.config().unwrap().online_servers.contains(&9));
+        assert!(c.replicas_converged());
+    }
+
+    #[test]
+    fn no_quorum_no_progress() {
+        let c = bootstrap(3, 1).unwrap();
+        c.kill_acceptor(0);
+        c.kill_acceptor(1);
+        assert!(!c.quorum_alive());
+        assert!(matches!(
+            c.call(CoordCmd::RegisterServer { id: 9, weight: 1 }),
+            Err(Error::NoQuorum { .. })
+        ));
+        c.recover_acceptor(0);
+        assert!(c.quorum_alive());
+        c.call(CoordCmd::RegisterServer { id: 9, weight: 1 })
+            .unwrap();
+    }
+
+    #[test]
+    fn replicas_converge_after_many_commands() {
+        let c = Coordinator::new(5);
+        for id in 0..20 {
+            c.call(CoordCmd::RegisterServer { id, weight: 1 }).unwrap();
+        }
+        for id in (0..20).step_by(2) {
+            c.call(CoordCmd::OfflineServer { id }).unwrap();
+        }
+        assert!(c.replicas_converged());
+        assert_eq!(c.config().unwrap().online_servers.len(), 10);
+    }
+
+    #[test]
+    fn unknown_server_transitions_are_noops() {
+        let c = bootstrap(3, 1).unwrap();
+        let e = c.config().unwrap().epoch;
+        c.call(CoordCmd::OfflineServer { id: 99 }).unwrap();
+        assert_eq!(c.config().unwrap().epoch, e);
+    }
+}

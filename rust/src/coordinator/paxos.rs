@@ -1,0 +1,224 @@
+//! Single-decree Paxos per log slot — the sequencing substrate under the
+//! replicated coordinator (the paper runs its coordinator as a replicated
+//! object inside Replicant, which uses Paxos to order calls into the
+//! state-machine library [Lamport 1998]).
+//!
+//! In-process acceptors keep real ballot/promise/accept state so the
+//! protocol's invariants (single value chosen per slot, survival of
+//! minority failures, no progress without quorum) hold and are testable,
+//! including with failure injection.
+
+use crate::error::{Error, Result};
+use std::sync::Mutex;
+
+
+/// A ballot number: (round, proposer id) with lexicographic order.
+#[derive(
+    Clone, Copy, Debug, Default, PartialEq, Eq, PartialOrd, Ord,
+)]
+pub struct Ballot {
+    pub round: u64,
+    pub proposer: u32,
+}
+
+/// Acceptor state for one log slot.
+#[derive(Clone, Debug, Default)]
+struct SlotState<C> {
+    promised: Ballot,
+    accepted: Option<(Ballot, C)>,
+}
+
+/// One Paxos acceptor covering a whole log (slot → state).
+#[derive(Debug)]
+pub struct Acceptor<C> {
+    slots: Mutex<Vec<SlotState<C>>>,
+    alive: Mutex<bool>,
+}
+
+/// Phase-1 response.
+pub struct Promise<C> {
+    pub accepted: Option<(Ballot, C)>,
+}
+
+impl<C: Clone> Acceptor<C> {
+    pub fn new() -> Self {
+        Acceptor {
+            slots: Mutex::new(Vec::new()),
+            alive: Mutex::new(true),
+        }
+    }
+
+    pub fn set_alive(&self, alive: bool) {
+        *self.alive.lock().unwrap() = alive;
+    }
+
+    pub fn is_alive(&self) -> bool {
+        *self.alive.lock().unwrap()
+    }
+
+    fn with_slot<R>(&self, slot: usize, f: impl FnOnce(&mut SlotState<C>) -> R) -> Option<R>
+    where
+        C: Default,
+    {
+        if !self.is_alive() {
+            return None;
+        }
+        let mut g = self.slots.lock().unwrap();
+        if g.len() <= slot {
+            g.resize_with(slot + 1, SlotState::default);
+        }
+        Some(f(&mut g[slot]))
+    }
+
+    /// Phase 1: promise not to accept ballots below `b`.
+    pub fn prepare(&self, slot: usize, b: Ballot) -> Option<Result<Promise<C>>>
+    where
+        C: Default,
+    {
+        self.with_slot(slot, |s| {
+            if b <= s.promised {
+                return Err(Error::TxnConflict {
+                    space: crate::types::Space::Sys,
+                    key: format!("paxos slot {slot} promised {:?}", s.promised),
+                });
+            }
+            s.promised = b;
+            Ok(Promise {
+                accepted: s.accepted.clone(),
+            })
+        })
+    }
+
+    /// Phase 2: accept `value` at ballot `b` unless promised higher.
+    pub fn accept(&self, slot: usize, b: Ballot, value: C) -> Option<bool>
+    where
+        C: Default,
+    {
+        self.with_slot(slot, |s| {
+            if b < s.promised {
+                return false;
+            }
+            s.promised = b;
+            s.accepted = Some((b, value));
+            true
+        })
+    }
+}
+
+/// Drive one slot to a decision across `acceptors`.  Returns the chosen
+/// command — which may be a previously-accepted one that must be adopted.
+pub fn propose<C: Clone + Default>(
+    acceptors: &[Acceptor<C>],
+    slot: usize,
+    proposer: u32,
+    value: C,
+) -> Result<C> {
+    let total = acceptors.len();
+    let quorum = total / 2 + 1;
+    let mut round = 1u64;
+    for _attempt in 0..16 {
+        let ballot = Ballot { round, proposer };
+        // Phase 1.
+        let mut promises = Vec::new();
+        let mut alive = 0;
+        for a in acceptors {
+            match a.prepare(slot, ballot) {
+                None => continue, // dead
+                Some(Err(_)) => {
+                    alive += 1;
+                    continue; // promised higher; retry with bigger round
+                }
+                Some(Ok(p)) => {
+                    alive += 1;
+                    promises.push(p);
+                }
+            }
+        }
+        if alive < quorum {
+            return Err(Error::NoQuorum { alive, total });
+        }
+        if promises.len() < quorum {
+            round += 2;
+            continue;
+        }
+        // Adopt the highest previously-accepted value, if any.
+        let chosen = promises
+            .iter()
+            .filter_map(|p| p.accepted.clone())
+            .max_by_key(|(b, _)| *b)
+            .map(|(_, v)| v)
+            .unwrap_or_else(|| value.clone());
+        // Phase 2.
+        let acks = acceptors
+            .iter()
+            .filter_map(|a| a.accept(slot, ballot, chosen.clone()))
+            .filter(|ok| *ok)
+            .count();
+        if acks >= quorum {
+            return Ok(chosen);
+        }
+        round += 2;
+    }
+    Err(Error::NoQuorum {
+        alive: 0,
+        total,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn acceptors(n: usize) -> Vec<Acceptor<u64>> {
+        (0..n).map(|_| Acceptor::new()).collect()
+    }
+
+    #[test]
+    fn single_proposer_decides_its_value() {
+        let a = acceptors(3);
+        assert_eq!(propose(&a, 0, 1, 42).unwrap(), 42);
+    }
+
+    #[test]
+    fn second_proposer_adopts_chosen_value() {
+        let a = acceptors(3);
+        assert_eq!(propose(&a, 0, 1, 42).unwrap(), 42);
+        // A different proposer with a different value must learn 42.
+        assert_eq!(propose(&a, 0, 2, 99).unwrap(), 42);
+    }
+
+    #[test]
+    fn distinct_slots_are_independent() {
+        let a = acceptors(3);
+        assert_eq!(propose(&a, 0, 1, 1).unwrap(), 1);
+        assert_eq!(propose(&a, 1, 1, 2).unwrap(), 2);
+    }
+
+    #[test]
+    fn survives_minority_failure() {
+        let a = acceptors(3);
+        a[2].set_alive(false);
+        assert_eq!(propose(&a, 0, 1, 7).unwrap(), 7);
+    }
+
+    #[test]
+    fn no_progress_without_quorum() {
+        let a = acceptors(3);
+        a[1].set_alive(false);
+        a[2].set_alive(false);
+        assert!(matches!(
+            propose(&a, 0, 1, 7),
+            Err(Error::NoQuorum { alive: 1, total: 3 })
+        ));
+    }
+
+    #[test]
+    fn value_chosen_with_minority_then_visible_after_recovery() {
+        let a = acceptors(3);
+        a[0].set_alive(false);
+        assert_eq!(propose(&a, 0, 1, 5).unwrap(), 5);
+        a[0].set_alive(true);
+        a[2].set_alive(false); // different minority fails
+        assert_eq!(propose(&a, 0, 2, 9).unwrap(), 5, "chosen value is stable");
+    }
+}

@@ -1,0 +1,99 @@
+//! Error taxonomy for the whole stack.
+//!
+//! The split mirrors the paper's failure model: metadata transactions can
+//! *conflict* (retryable by the client-side retry layer, §2.6) or fail a
+//! *conditional append* (the EOF fast-path of §2.5, also retryable with a
+//! fallback); everything else is an environmental or usage error.
+
+use crate::types::{ServerId, Space};
+
+/// Library-wide result alias.
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// Library-wide error type.
+#[derive(Debug, thiserror::Error)]
+pub enum Error {
+    /// A metadata transaction observed a version change in its read set.
+    /// The WTF retry layer replays the op log on this error; it only
+    /// surfaces to applications when replay observes a different outcome.
+    #[error("metadata transaction conflict on {space:?}:{key}")]
+    TxnConflict { space: Space, key: String },
+
+    /// A conditional EOF-relative append exceeded its region's capacity;
+    /// the writer must fall back to an explicit-offset write (§2.5).
+    #[error("conditional append out of region bounds (eof={eof}, len={len}, cap={cap})")]
+    CondAppendFailed { eof: u64, len: u64, cap: u64 },
+
+    /// A transaction replay observed an application-visible divergence and
+    /// must abort to the application (§2.6).
+    #[error("transaction aborted: {reason}")]
+    TxnAborted { reason: String },
+
+    /// Too many consecutive conflict-retries; the transaction gave up.
+    #[error("transaction retry budget exhausted after {attempts} attempts")]
+    RetriesExhausted { attempts: u32 },
+
+    #[error("no such file or directory: {0}")]
+    NotFound(String),
+
+    #[error("file exists: {0}")]
+    AlreadyExists(String),
+
+    #[error("is a directory: {0}")]
+    IsDirectory(String),
+
+    #[error("not a directory: {0}")]
+    NotADirectory(String),
+
+    #[error("directory not empty: {0}")]
+    DirectoryNotEmpty(String),
+
+    #[error("invalid argument: {0}")]
+    InvalidArgument(String),
+
+    #[error("operation not supported: {0}")]
+    Unsupported(String),
+
+    #[error("storage server {0} unavailable")]
+    ServerUnavailable(ServerId),
+
+    #[error("slice not found on server {server}: backing={backing} off={offset} len={len}")]
+    SliceNotFound {
+        server: ServerId,
+        backing: u32,
+        offset: u64,
+        len: u64,
+    },
+
+    #[error("corrupt metadata: {0}")]
+    CorruptMetadata(String),
+
+    #[error("coordinator has no quorum ({alive}/{total} replicas alive)")]
+    NoQuorum { alive: usize, total: usize },
+
+    #[error("artifact error: {0}")]
+    Artifact(String),
+
+    #[error("xla runtime error: {0}")]
+    Xla(String),
+
+    #[error(transparent)]
+    Io(#[from] std::io::Error),
+}
+
+impl Error {
+    /// True when the WTF retry layer may transparently retry the enclosing
+    /// transaction (the state of the system was left unchanged).
+    pub fn is_retryable(&self) -> bool {
+        matches!(
+            self,
+            Error::TxnConflict { .. } | Error::CondAppendFailed { .. }
+        )
+    }
+}
+
+impl From<xla::Error> for Error {
+    fn from(e: xla::Error) -> Self {
+        Error::Xla(e.to_string())
+    }
+}

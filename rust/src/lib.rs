@@ -1,0 +1,65 @@
+//! # WTF — the Wave Transactional Filesystem, reproduced
+//!
+//! A from-scratch reproduction of *"The Design and Implementation of the
+//! Wave Transactional Filesystem"* (Escriva & Sirer, 2015) as a
+//! three-layer rust + JAX + Pallas stack.
+//!
+//! WTF is a distributed, transactional, POSIX-compatible filesystem built
+//! around a *file slicing* API: files are sequences of immutable, byte
+//! addressable **slices** held on storage servers, stitched together by
+//! metadata lists held in a transactional key-value store ("hyperdex-lite"
+//! here, HyperDex+Warp in the paper).  Because the data/metadata split is
+//! total, filesystem-level transactions reduce to metadata transactions,
+//! and applications can rearrange file contents (concat, copy, sort) by
+//! rewriting *pointers*, never bytes.
+//!
+//! ## Layer map
+//!
+//! * [`meta`] — the transactional metadata store (HyperDex+Warp substrate).
+//! * [`storage`] — slice storage servers: backing files, placement, GC.
+//! * [`coordinator`] — the replicated coordinator (Replicant substrate).
+//! * [`client`] — the WTF client library: POSIX + file slicing + txn retry.
+//! * [`baseline`] — "hdfs-lite", the comparison filesystem of the paper.
+//! * [`mapreduce`] — the sort application of §4.1, conventional vs slicing.
+//! * [`runtime`] — PJRT execution of the AOT-compiled JAX/Pallas kernels.
+//! * [`sim`] — discrete-event cluster simulator calibrated to the paper's
+//!   testbed (used by the benchmark harness to regenerate figures).
+//! * [`bench`] — workload generators, statistics and the per-figure harness.
+//!
+//! ## Quickstart
+//!
+//! ```no_run
+//! # fn demo() -> wtf::Result<()> {
+//! use wtf::cluster::Cluster;
+//!
+//! let cluster = Cluster::builder().storage_servers(4).build()?;
+//! let client = cluster.client();
+//! let mut fd = client.create("/hello")?;
+//! client.write(&mut fd, b"Hello World")?;
+//! let back = client.read_at(&fd, 0, 11)?;
+//! assert_eq!(back, b"Hello World");
+//! # Ok(()) }
+//! ```
+
+pub mod baseline;
+pub mod bench;
+pub mod client;
+pub mod cluster;
+pub mod config;
+pub mod coordinator;
+pub mod error;
+pub mod mapreduce;
+pub mod meta;
+pub mod metrics;
+pub mod net;
+pub mod runtime;
+pub mod sim;
+pub mod storage;
+pub mod types;
+pub mod util;
+
+pub use client::WtfClient;
+pub use cluster::Cluster;
+pub use config::Config;
+pub use error::{Error, Result};
+pub use types::{InodeId, RegionId, ServerId, SlicePtr};

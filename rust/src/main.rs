@@ -1,0 +1,266 @@
+//! `repro` — the launcher for the WTF reproduction.
+//!
+//! Subcommands (argument parsing is hand-rolled: offline build, no clap):
+//!
+//! * `repro bench [--exp <id>] [--all] [--quick]` — regenerate the
+//!   paper's tables/figures (DESIGN.md §4 maps ids to the paper).
+//! * `repro sort [--records N] [--record-size B] [--mode slicing|conventional|hdfs] [--xla]`
+//!   — run the §4.1 sort application end-to-end on a real in-process
+//!   cluster and print stage timings + I/O counters.
+//! * `repro smoke` — bring up a cluster, exercise the POSIX + slicing
+//!   APIs, verify, and exit.
+//! * `repro artifacts` — load and list the AOT kernel artifacts.
+
+use std::process::ExitCode;
+use wtf::bench::exps;
+use wtf::bench::stats::{fmt_bytes, fmt_ns};
+use wtf::cluster::Cluster;
+use wtf::config::Config;
+use wtf::mapreduce::bulkfs::BulkFs;
+use wtf::mapreduce::records::{generate_records, is_sorted};
+use wtf::mapreduce::{
+    sort_conventional_probed, sort_slicing_probed, SortJob, SortStats,
+};
+use wtf::runtime::{NativeCompute, SortCompute, XlaRuntime};
+
+fn main() -> ExitCode {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let cmd = args.first().map(String::as_str).unwrap_or("help");
+    let rest = &args[1.min(args.len())..];
+    let result = match cmd {
+        "bench" => cmd_bench(rest),
+        "sort" => cmd_sort(rest),
+        "smoke" => cmd_smoke(),
+        "artifacts" => cmd_artifacts(),
+        "help" | "--help" | "-h" => {
+            print_help();
+            Ok(())
+        }
+        other => {
+            eprintln!("unknown command: {other}\n");
+            print_help();
+            return ExitCode::FAILURE;
+        }
+    };
+    match result {
+        Ok(()) => ExitCode::SUCCESS,
+        Err(e) => {
+            eprintln!("error: {e}");
+            ExitCode::FAILURE
+        }
+    }
+}
+
+fn print_help() {
+    println!(
+        "repro — Wave Transactional Filesystem reproduction\n\n\
+         USAGE:\n  repro bench [--exp <id>] [--all] [--quick]\n  \
+         repro sort [--records N] [--record-size B] [--buckets K] [--mode slicing|conventional|hdfs] [--xla]\n  \
+         repro smoke\n  repro artifacts\n\n\
+         experiments: {}",
+        exps::all_experiments().join(", ")
+    );
+}
+
+fn flag(rest: &[String], name: &str) -> bool {
+    rest.iter().any(|a| a == name)
+}
+
+fn opt<'a>(rest: &'a [String], name: &str) -> Option<&'a str> {
+    rest.iter()
+        .position(|a| a == name)
+        .and_then(|i| rest.get(i + 1))
+        .map(String::as_str)
+}
+
+fn cmd_bench(rest: &[String]) -> wtf::Result<()> {
+    let quick = flag(rest, "--quick");
+    let ids: Vec<&str> = if flag(rest, "--all") || opt(rest, "--exp").is_none() {
+        exps::all_experiments().to_vec()
+    } else {
+        vec![opt(rest, "--exp").unwrap()]
+    };
+    for id in ids {
+        exps::run(id, quick)?.print();
+    }
+    Ok(())
+}
+
+fn cmd_sort(rest: &[String]) -> wtf::Result<()> {
+    let records: u64 = opt(rest, "--records")
+        .map(|v| v.parse().expect("--records"))
+        .unwrap_or(4096);
+    let record_size: usize = opt(rest, "--record-size")
+        .map(|v| v.parse().expect("--record-size"))
+        .unwrap_or(512);
+    let buckets: usize = opt(rest, "--buckets")
+        .map(|v| v.parse().expect("--buckets"))
+        .unwrap_or(16);
+    let mode = opt(rest, "--mode").unwrap_or("slicing");
+    let use_xla = flag(rest, "--xla");
+
+    let xla_runtime;
+    let compute: &dyn SortCompute = if use_xla {
+        xla_runtime = XlaRuntime::load_default()?;
+        &xla_runtime
+    } else {
+        &NativeCompute
+    };
+
+    let mut job = SortJob::new(record_size, buckets);
+    job.chunk_records = 256;
+    let data = generate_records(records, job.fmt, 2015);
+    println!(
+        "sorting {} ({} records x {} B) via `{}` compute, mode={mode}",
+        fmt_bytes(data.len() as u64),
+        records,
+        record_size,
+        compute.name()
+    );
+
+    let (stats, read, written, check) = match mode {
+        "hdfs" => {
+            let cluster = wtf::baseline::HdfsCluster::new(
+                wtf::baseline::HdfsConfig {
+                    block_size: 1 << 20,
+                    ..wtf::baseline::HdfsConfig::default()
+                },
+                None,
+                wtf::net::LinkModel::instant(),
+            )?;
+            let c = cluster.client();
+            c.write_file("/input", &data)?;
+            let (r0, w0) = (cluster.bytes_read(), cluster.bytes_written());
+            let probe = move || (cluster.bytes_read(), cluster.bytes_written());
+            let stats = sort_conventional_probed(
+                &c,
+                compute,
+                "/input",
+                "/output",
+                &job,
+                Some(&probe),
+            )?;
+            let out = c.read_range("/output", 0, data.len() as u64)?;
+            let (r1, w1) = probe();
+            (stats, r1 - r0, w1 - w0, is_sorted(&out, job.fmt))
+        }
+        "conventional" | "slicing" => {
+            let cluster = Cluster::builder()
+                .config(Config {
+                    region_size: 1 << 20,
+                    ..Config::default()
+                })
+                .build()?;
+            let c = cluster.client();
+            c.write_file("/input", &data)?;
+            let (r0, w0) = (cluster.storage_bytes_read(), cluster.storage_bytes_written());
+            let probe = {
+                let cl = &cluster;
+                move || (cl.storage_bytes_read(), cl.storage_bytes_written())
+            };
+            let stats = if mode == "slicing" {
+                sort_slicing_probed(&c, compute, "/input", "/output", &job, Some(&probe))?
+            } else {
+                sort_conventional_probed(
+                    &c,
+                    compute,
+                    "/input",
+                    "/output",
+                    &job,
+                    Some(&probe),
+                )?
+            };
+            let out = c.read_range("/output", 0, data.len() as u64)?;
+            let (r1, w1) = probe();
+            (stats, r1 - r0, w1 - w0, is_sorted(&out, job.fmt))
+        }
+        other => {
+            return Err(wtf::Error::InvalidArgument(format!("bad mode {other}")));
+        }
+    };
+    print_sort_stats(&stats, read, written);
+    println!("output sorted: {check}");
+    if !check {
+        return Err(wtf::Error::InvalidArgument("output NOT sorted".into()));
+    }
+    Ok(())
+}
+
+fn print_sort_stats(stats: &SortStats, read: u64, written: u64) {
+    let pct = |d: std::time::Duration| {
+        100.0 * d.as_secs_f64() / stats.total().as_secs_f64().max(1e-9)
+    };
+    println!(
+        "  bucketing: {:>10}  ({:>5.1}%)  R={} W={}",
+        fmt_ns(stats.bucketing.as_nanos() as u64),
+        pct(stats.bucketing),
+        fmt_bytes(stats.bucketing_io.0),
+        fmt_bytes(stats.bucketing_io.1),
+    );
+    println!(
+        "  sorting:   {:>10}  ({:>5.1}%)  R={} W={}",
+        fmt_ns(stats.sorting.as_nanos() as u64),
+        pct(stats.sorting),
+        fmt_bytes(stats.sorting_io.0),
+        fmt_bytes(stats.sorting_io.1),
+    );
+    println!(
+        "  merging:   {:>10}  ({:>5.1}%)  R={} W={}",
+        fmt_ns(stats.merging.as_nanos() as u64),
+        pct(stats.merging),
+        fmt_bytes(stats.merging_io.0),
+        fmt_bytes(stats.merging_io.1),
+    );
+    println!(
+        "  total:     {:>10}           R={} W={}",
+        fmt_ns(stats.total().as_nanos() as u64),
+        fmt_bytes(read),
+        fmt_bytes(written)
+    );
+}
+
+fn cmd_smoke() -> wtf::Result<()> {
+    let cluster = Cluster::builder().config(Config::test()).build()?;
+    let c = cluster.client();
+    c.mkdir("/demo")?;
+    let mut fd = c.create("/demo/file")?;
+    c.write(&mut fd, b"Hello World")?;
+    assert_eq!(c.read_at(&fd, 0, 11)?, b"Hello World");
+    let slice = c.yank_at(fd.inode(), 6, 5)?;
+    let mut out = c.create("/demo/world")?;
+    c.paste(&mut out, &slice)?;
+    assert_eq!(c.read_at(&out, 0, 5)?, b"World");
+    let mut t = c.begin();
+    let a = t.open("/demo/file")?;
+    let b = t.create("/demo/txn")?;
+    let data = t.read(a, 5)?;
+    t.write(b, &data)?;
+    t.commit()?;
+    assert_eq!(c.read_at(&c.open("/demo/txn")?, 0, 5)?, b"Hello");
+    cluster.run_gc()?;
+    cluster.run_gc()?;
+    println!(
+        "smoke OK: {} storage servers, {} meta shards, coordinator epoch {}",
+        cluster.storage().len(),
+        cluster.meta_shard_stats().len(),
+        cluster.coordinator().config()?.epoch
+    );
+    Ok(())
+}
+
+fn cmd_artifacts() -> wtf::Result<()> {
+    let rt = XlaRuntime::load_default()?;
+    println!("loaded artifacts from {}:", XlaRuntime::default_dir().display());
+    for meta in rt.inventory() {
+        println!(
+            "  {:<28} entry={:<18} n={:<7} buckets={:?} block={:?}",
+            meta.name, meta.entry, meta.n, meta.buckets, meta.block
+        );
+    }
+    // Prove execution works.
+    let (ids, hist) = rt.partition(&[5, 100, 7_000_000], &[10, 1_000_000])?;
+    println!("partition probe: ids={ids:?} hist={hist:?}");
+    let perm = rt.argsort(&[30, 10, 20])?;
+    println!("argsort probe: perm={perm:?}");
+    Ok(())
+}

@@ -1,0 +1,125 @@
+//! A bulk-I/O facade over both filesystems so the *conventional* sorter
+//! is byte-for-byte identical on WTF and hdfs-lite — the apples-to-apples
+//! requirement of §4.
+//!
+//! The facade is append-only + positional-read, i.e. exactly the subset
+//! HDFS supports; the slicing sorter bypasses it and talks to the WTF
+//! client directly.
+
+use crate::baseline::HdfsClient;
+use crate::client::WtfClient;
+use crate::error::Result;
+
+/// Append-only bulk file operations (the HDFS-compatible subset).
+pub trait BulkFs {
+    /// Create `path` and write all of `data` (single-writer, sequential).
+    fn write_file(&self, path: &str, data: &[u8]) -> Result<()>;
+    /// Append `data` to `path`, creating it if missing.
+    fn append_file(&self, path: &str, data: &[u8]) -> Result<()>;
+    /// Positional read.
+    fn read_range(&self, path: &str, offset: u64, len: u64) -> Result<Vec<u8>>;
+    /// Visible length.
+    fn file_len(&self, path: &str) -> Result<u64>;
+    /// Remove a file.
+    fn remove(&self, path: &str) -> Result<()>;
+    /// Backend label for harness output.
+    fn backend(&self) -> &'static str;
+}
+
+impl BulkFs for WtfClient {
+    fn write_file(&self, path: &str, data: &[u8]) -> Result<()> {
+        let mut fd = self.create(path)?;
+        self.write(&mut fd, data)
+    }
+
+    fn append_file(&self, path: &str, data: &[u8]) -> Result<()> {
+        let fd = self.open_or_create(path)?;
+        self.append_bytes(&fd, data)?;
+        Ok(())
+    }
+
+    fn read_range(&self, path: &str, offset: u64, len: u64) -> Result<Vec<u8>> {
+        let fd = self.open(path)?;
+        self.read_at(&fd, offset, len)
+    }
+
+    fn file_len(&self, path: &str) -> Result<u64> {
+        Ok(self.stat(path)?.len)
+    }
+
+    fn remove(&self, path: &str) -> Result<()> {
+        self.unlink(path)
+    }
+
+    fn backend(&self) -> &'static str {
+        "wtf"
+    }
+}
+
+impl BulkFs for HdfsClient {
+    fn write_file(&self, path: &str, data: &[u8]) -> Result<()> {
+        let mut w = self.create(path)?;
+        w.write(data)?;
+        // Match WTF's visibility guarantee per the paper's methodology:
+        // every write is followed by hflush.
+        w.close()
+    }
+
+    fn append_file(&self, path: &str, data: &[u8]) -> Result<()> {
+        let mut w = if self.exists(path) {
+            self.append(path)?
+        } else {
+            self.create(path)?
+        };
+        w.write(data)?;
+        w.close()
+    }
+
+    fn read_range(&self, path: &str, offset: u64, len: u64) -> Result<Vec<u8>> {
+        self.read_at(path, offset, len)
+    }
+
+    fn file_len(&self, path: &str) -> Result<u64> {
+        self.len(path)
+    }
+
+    fn remove(&self, path: &str) -> Result<()> {
+        self.delete(path)
+    }
+
+    fn backend(&self) -> &'static str {
+        "hdfs"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::baseline::{HdfsCluster, HdfsConfig};
+    use crate::client::testutil::small_cluster;
+    use crate::net::LinkModel;
+
+    fn exercise<F: BulkFs>(fs: &F) {
+        fs.write_file("/bulk", b"0123456789").unwrap();
+        assert_eq!(fs.file_len("/bulk").unwrap(), 10);
+        fs.append_file("/bulk", b"ab").unwrap();
+        assert_eq!(fs.read_range("/bulk", 8, 4).unwrap(), b"89ab");
+        fs.append_file("/fresh", b"new").unwrap();
+        assert_eq!(fs.read_range("/fresh", 0, 3).unwrap(), b"new");
+        fs.remove("/bulk").unwrap();
+        assert!(fs.file_len("/bulk").is_err());
+    }
+
+    #[test]
+    fn wtf_facade() {
+        let cluster = small_cluster();
+        exercise(&cluster.client());
+    }
+
+    #[test]
+    fn hdfs_facade() {
+        let cluster =
+            HdfsCluster::new(HdfsConfig::test(), None, LinkModel::instant()).unwrap();
+        exercise(&cluster.client());
+    }
+}

@@ -1,0 +1,26 @@
+//! The map-reduce sort application of the evaluation (§4.1): bucketing →
+//! per-bucket sort → merge, in two implementations.
+//!
+//! * **Conventional** ([`sort::sort_conventional`]) — reads and writes
+//!   record *bytes* at every stage, over any [`bulkfs::BulkFs`] (WTF or
+//!   hdfs-lite).  Table 2's left column: 300 GB read + 300 GB written
+//!   for a 100 GB sort.
+//! * **File slicing** ([`sort::sort_slicing`]) — WTF only: bucketing
+//!   *pastes* record slices, sorting rearranges slices by the kernel's
+//!   permutation, merging is `concat`.  Table 2's right column: 200 GB
+//!   read, **zero** written.
+//!
+//! The compute hot-spots (bucket classification, permutation sort) go
+//! through [`crate::runtime::SortCompute`] — the AOT-compiled
+//! JAX/Pallas kernels in production, the native oracle in unit tests.
+
+pub mod bulkfs;
+pub mod records;
+pub mod sort;
+
+pub use bulkfs::BulkFs;
+pub use records::{extract_keys, generate_records, key_of, RecordFormat};
+pub use sort::{
+    sort_conventional, sort_conventional_probed, sort_slicing, sort_slicing_probed,
+    IoProbe, SortJob, SortStats,
+};

@@ -1,0 +1,387 @@
+//! The sort drivers (§4.1): three stages, two data paths.
+//!
+//! Stage compute (bucket classification, permutation sort) runs through
+//! [`SortCompute`] — the AOT JAX/Pallas kernels in production.  The two
+//! drivers differ only in how bytes move:
+//!
+//! | stage     | conventional       | file slicing                   |
+//! |-----------|--------------------|--------------------------------|
+//! | bucketing | read R, write R    | read R, **paste pointers**     |
+//! | sorting   | read R, write R    | read R, **paste permutation**  |
+//! | merging   | read R, write R    | **concat** (metadata only)     |
+
+use super::bulkfs::BulkFs;
+use super::records::{bucket_bounds, extract_keys, RecordFormat};
+use crate::client::WtfClient;
+use crate::error::{Error, Result};
+use crate::runtime::SortCompute;
+use std::time::{Duration, Instant};
+
+/// Parameters of one sort job.
+#[derive(Clone, Debug)]
+pub struct SortJob {
+    pub fmt: RecordFormat,
+    pub num_buckets: usize,
+    /// Records processed per streaming chunk during bucketing.
+    pub chunk_records: usize,
+}
+
+impl SortJob {
+    pub fn new(record_size: usize, num_buckets: usize) -> Self {
+        SortJob {
+            fmt: RecordFormat::new(record_size),
+            num_buckets,
+            chunk_records: 1024,
+        }
+    }
+}
+
+/// Wall-clock + I/O accounting per stage (Fig. 5's breakdown and
+/// Table 2's R/W columns).  I/O tuples are `(bytes read, bytes written)`
+/// at the storage layer, filled when a probe is supplied.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct SortStats {
+    pub bucketing: Duration,
+    pub sorting: Duration,
+    pub merging: Duration,
+    pub bucketing_io: (u64, u64),
+    pub sorting_io: (u64, u64),
+    pub merging_io: (u64, u64),
+    pub records: u64,
+}
+
+/// Snapshot provider for storage-layer `(bytes_read, bytes_written)` —
+/// usually `Cluster::storage_bytes_read/written`.
+pub type IoProbe<'a> = &'a dyn Fn() -> (u64, u64);
+
+fn stage_io(probe: Option<IoProbe<'_>>, before: (u64, u64)) -> (u64, u64) {
+    match probe {
+        Some(p) => {
+            let now = p();
+            (now.0 - before.0, now.1 - before.1)
+        }
+        None => (0, 0),
+    }
+}
+
+fn probe_now(probe: Option<IoProbe<'_>>) -> (u64, u64) {
+    probe.map(|p| p()).unwrap_or((0, 0))
+}
+
+impl SortStats {
+    pub fn total(&self) -> Duration {
+        self.bucketing + self.sorting + self.merging
+    }
+}
+
+fn bucket_path(base: &str, b: usize) -> String {
+    format!("{base}.bucket{b:04}")
+}
+
+fn sorted_path(base: &str, b: usize) -> String {
+    format!("{base}.sorted{b:04}")
+}
+
+/// Conventional sorter: every stage reads and writes record bytes.
+/// Works on any [`BulkFs`] (WTF and hdfs-lite).
+pub fn sort_conventional<F: BulkFs>(
+    fs: &F,
+    compute: &dyn SortCompute,
+    input: &str,
+    output: &str,
+    job: &SortJob,
+) -> Result<SortStats> {
+    sort_conventional_probed(fs, compute, input, output, job, None)
+}
+
+/// [`sort_conventional`] with a storage I/O probe for per-stage R/W
+/// accounting (Table 2).
+pub fn sort_conventional_probed<F: BulkFs>(
+    fs: &F,
+    compute: &dyn SortCompute,
+    input: &str,
+    output: &str,
+    job: &SortJob,
+    probe: Option<IoProbe<'_>>,
+) -> Result<SortStats> {
+    let mut stats = SortStats::default();
+    let bounds = bucket_bounds(job.num_buckets);
+    let rs = job.fmt.record_size;
+    let input_len = fs.file_len(input)?;
+    let total_records = job.fmt.count(input_len);
+    stats.records = total_records;
+
+    // ---- Stage 1: bucketing (map) — read input, write bucket files.
+    let t0 = Instant::now();
+    let io0 = probe_now(probe);
+    let chunk_bytes = (job.chunk_records * rs) as u64;
+    let mut offset = 0u64;
+    let mut bucket_buffers: Vec<Vec<u8>> = vec![Vec::new(); job.num_buckets];
+    while offset < input_len {
+        let take = chunk_bytes.min(input_len - offset);
+        let data = fs.read_range(input, offset, take)?;
+        let keys = extract_keys(&data, job.fmt);
+        let (ids, _hist) = compute.partition(&keys, &bounds)?;
+        for (r, &b) in ids.iter().enumerate() {
+            bucket_buffers[b as usize]
+                .extend_from_slice(&data[r * rs..(r + 1) * rs]);
+        }
+        for (b, buf) in bucket_buffers.iter_mut().enumerate() {
+            if !buf.is_empty() {
+                fs.append_file(&bucket_path(output, b), buf)?;
+                buf.clear();
+            }
+        }
+        offset += take;
+    }
+    stats.bucketing = t0.elapsed();
+    stats.bucketing_io = stage_io(probe, io0);
+
+    // ---- Stage 2: per-bucket sort — read bucket, write sorted bytes.
+    let t1 = Instant::now();
+    let io1 = probe_now(probe);
+    for b in 0..job.num_buckets {
+        let path = bucket_path(output, b);
+        let len = match fs.file_len(&path) {
+            Ok(l) => l,
+            Err(Error::NotFound(_)) => continue,
+            Err(e) => return Err(e),
+        };
+        let data = fs.read_range(&path, 0, len)?;
+        let keys = extract_keys(&data, job.fmt);
+        let perm = compute.argsort(&keys)?;
+        let mut sorted = vec![0u8; data.len()];
+        for (i, &src) in perm.iter().enumerate() {
+            sorted[i * rs..(i + 1) * rs]
+                .copy_from_slice(&data[src as usize * rs..(src as usize + 1) * rs]);
+        }
+        fs.write_file(&sorted_path(output, b), &sorted)?;
+        fs.remove(&path)?;
+    }
+    stats.sorting = t1.elapsed();
+    stats.sorting_io = stage_io(probe, io1);
+
+    // ---- Stage 3: merge (reduce) — buckets hold disjoint key ranges,
+    // so merging is sequential concatenation ... by copying bytes.
+    let t2 = Instant::now();
+    let io2 = probe_now(probe);
+    for b in 0..job.num_buckets {
+        let path = sorted_path(output, b);
+        let len = match fs.file_len(&path) {
+            Ok(l) => l,
+            Err(Error::NotFound(_)) => continue,
+            Err(e) => return Err(e),
+        };
+        // Stream in chunks to bound memory.
+        let mut off = 0u64;
+        while off < len {
+            let take = chunk_bytes.min(len - off);
+            let data = fs.read_range(&path, off, take)?;
+            fs.append_file(output, &data)?;
+            off += take;
+        }
+        fs.remove(&path)?;
+    }
+    stats.merging = t2.elapsed();
+    stats.merging_io = stage_io(probe, io2);
+    Ok(stats)
+}
+
+/// File-slicing sorter (WTF only): bytes are read exactly once (to see
+/// the keys); every write is a metadata paste; the merge is `concat`.
+pub fn sort_slicing(
+    client: &WtfClient,
+    compute: &dyn SortCompute,
+    input: &str,
+    output: &str,
+    job: &SortJob,
+) -> Result<SortStats> {
+    sort_slicing_probed(client, compute, input, output, job, None)
+}
+
+/// [`sort_slicing`] with a storage I/O probe (Table 2).
+pub fn sort_slicing_probed(
+    client: &WtfClient,
+    compute: &dyn SortCompute,
+    input: &str,
+    output: &str,
+    job: &SortJob,
+    probe: Option<IoProbe<'_>>,
+) -> Result<SortStats> {
+    let mut stats = SortStats::default();
+    let bounds = bucket_bounds(job.num_buckets);
+    let rs = job.fmt.record_size as u64;
+    let in_fd = client.open(input)?;
+    let input_len = client.len(&in_fd)?;
+    stats.records = job.fmt.count(input_len);
+
+    // Intermediate files are unreplicated: "they may easily be recomputed
+    // from the input" (§4.1).
+    for b in 0..job.num_buckets {
+        client.create_with_replication(&bucket_path(output, b), 1)?;
+    }
+
+    // ---- Stage 1: bucketing — read record keys, paste record slices.
+    let t0 = Instant::now();
+    let io0 = probe_now(probe);
+    let chunk_bytes = (job.chunk_records as u64) * rs;
+    let mut offset = 0u64;
+    while offset < input_len {
+        let take = chunk_bytes.min(input_len - offset);
+        let data = client.read_at(&in_fd, offset, take)?;
+        let keys = extract_keys(&data, job.fmt);
+        let chunk_slice = client.yank_at(in_fd.inode(), offset, take)?;
+        let (ids, _hist) = compute.partition(&keys, &bounds)?;
+        // Coalesce runs of same-bucket records into single sub-slices.
+        let mut per_bucket: Vec<crate::client::Slice> =
+            vec![Default::default(); job.num_buckets];
+        let mut run_start = 0usize;
+        for r in 1..=ids.len() {
+            if r == ids.len() || ids[r] != ids[run_start] {
+                let sub = chunk_slice.sub(run_start as u64 * rs, r as u64 * rs);
+                per_bucket[ids[run_start] as usize].extend(&sub);
+                run_start = r;
+            }
+        }
+        for (b, slice) in per_bucket.iter().enumerate() {
+            if !slice.is_empty() {
+                let fd = client.open(&bucket_path(output, b))?;
+                client.append_slice(&fd, slice)?;
+            }
+        }
+        offset += take;
+    }
+    stats.bucketing = t0.elapsed();
+    stats.bucketing_io = stage_io(probe, io0);
+
+    // ---- Stage 2: per-bucket sort — read keys, paste the permutation.
+    let t1 = Instant::now();
+    let io1 = probe_now(probe);
+    for b in 0..job.num_buckets {
+        let path = bucket_path(output, b);
+        let fd = client.open(&path)?;
+        let len = client.len(&fd)?;
+        if len == 0 {
+            continue;
+        }
+        let data = client.read_at(&fd, 0, len)?;
+        let keys = extract_keys(&data, job.fmt);
+        let perm = compute.argsort(&keys)?;
+        let whole = client.yank_at(fd.inode(), 0, len)?;
+        let mut sorted = crate::client::Slice::default();
+        for &src in &perm {
+            sorted.extend(&whole.sub(u64::from(src) * rs, (u64::from(src) + 1) * rs));
+        }
+        let out = client.create_with_replication(&sorted_path(output, b), 1)?;
+        client.append_slice(&out, &sorted)?;
+    }
+    stats.sorting = t1.elapsed();
+    stats.sorting_io = stage_io(probe, io1);
+
+    // ---- Stage 3: merge — concat, under 1% of the runtime in the paper.
+    let t2 = Instant::now();
+    let io2 = probe_now(probe);
+    let sorted_names: Vec<String> = (0..job.num_buckets)
+        .filter(|b| client.exists(&sorted_path(output, *b)))
+        .map(|b| sorted_path(output, b))
+        .collect();
+    let refs: Vec<&str> = sorted_names.iter().map(|s| s.as_str()).collect();
+    client.concat(&refs, output)?;
+    // Intermediates are no longer needed.
+    for b in 0..job.num_buckets {
+        let _ = client.unlink(&bucket_path(output, b));
+        let _ = client.unlink(&sorted_path(output, b));
+    }
+    stats.merging = t2.elapsed();
+    stats.merging_io = stage_io(probe, io2);
+    Ok(stats)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::baseline::{HdfsCluster, HdfsConfig};
+    use crate::client::testutil::small_cluster;
+    use crate::mapreduce::records::{generate_records, is_sorted};
+    use crate::net::LinkModel;
+    use crate::runtime::NativeCompute;
+
+    const RECORDS: u64 = 256;
+    const RSIZE: usize = 32;
+
+    fn job() -> SortJob {
+        let mut j = SortJob::new(RSIZE, 4);
+        j.chunk_records = 64;
+        j
+    }
+
+    #[test]
+    fn conventional_sort_on_wtf_is_correct() {
+        let cluster = small_cluster();
+        let c = cluster.client();
+        let data = generate_records(RECORDS, job().fmt, 42);
+        c.write_file("/input", &data).unwrap();
+        let stats =
+            sort_conventional(&c, &NativeCompute, "/input", "/output", &job()).unwrap();
+        assert_eq!(stats.records, RECORDS);
+        let out = c.read_range("/output", 0, data.len() as u64).unwrap();
+        assert_eq!(out.len(), data.len());
+        assert!(is_sorted(&out, job().fmt));
+    }
+
+    #[test]
+    fn conventional_sort_on_hdfs_is_correct() {
+        let cluster =
+            HdfsCluster::new(HdfsConfig::test(), None, LinkModel::instant()).unwrap();
+        let c = cluster.client();
+        let data = generate_records(RECORDS, job().fmt, 42);
+        c.write_file("/input", &data).unwrap();
+        sort_conventional(&c, &NativeCompute, "/input", "/output", &job()).unwrap();
+        let out = c.read_range("/output", 0, data.len() as u64).unwrap();
+        assert!(is_sorted(&out, job().fmt));
+        assert_eq!(out.len(), data.len());
+    }
+
+    #[test]
+    fn slicing_sort_is_correct_and_writes_nothing() {
+        let cluster = small_cluster();
+        let c = cluster.client();
+        let data = generate_records(RECORDS, job().fmt, 42);
+        c.write_file("/input", &data).unwrap();
+        let written_before = cluster.storage_bytes_written();
+        sort_slicing(&c, &NativeCompute, "/input", "/sorted", &job()).unwrap();
+        // Table 2: W = 0 for every slicing stage.
+        assert_eq!(cluster.storage_bytes_written(), written_before);
+        let fd = c.open("/sorted").unwrap();
+        let out = c.read_at(&fd, 0, data.len() as u64).unwrap();
+        assert_eq!(out.len(), data.len());
+        assert!(is_sorted(&out, job().fmt));
+    }
+
+    #[test]
+    fn slicing_and_conventional_agree() {
+        let cluster = small_cluster();
+        let c = cluster.client();
+        let data = generate_records(RECORDS, job().fmt, 99);
+        c.write_file("/input", &data).unwrap();
+        sort_conventional(&c, &NativeCompute, "/input", "/conv", &job()).unwrap();
+        sort_slicing(&c, &NativeCompute, "/input", "/slice", &job()).unwrap();
+        let a = c.read_range("/conv", 0, data.len() as u64).unwrap();
+        let b = c.read_range("/slice", 0, data.len() as u64).unwrap();
+        assert_eq!(a, b, "both sorters must produce identical output");
+    }
+
+    #[test]
+    fn slicing_sort_reads_input_at_most_twice() {
+        // Table 2: R = 200 GB for a 100 GB sort (bucketing + sorting),
+        // i.e. exactly 2x the input size, vs 3x conventional.
+        let cluster = small_cluster();
+        let c = cluster.client();
+        let data = generate_records(RECORDS, job().fmt, 7);
+        c.write_file("/input", &data).unwrap();
+        let read_before = cluster.storage_bytes_read();
+        sort_slicing(&c, &NativeCompute, "/input", "/out", &job()).unwrap();
+        let read = cluster.storage_bytes_read() - read_before;
+        assert_eq!(read, 2 * data.len() as u64, "slicing reads exactly 2x");
+    }
+}

@@ -1,0 +1,34 @@
+//! "hyperdex-lite": the transactional metadata store WTF builds on.
+//!
+//! The paper stores all filesystem metadata in HyperDex with Warp
+//! transactions (§2.1): linearizable multi-key transactions spanning
+//! independent schemas, atomic list reads/appends, and conditional
+//! operations.  This module reproduces the properties WTF relies on:
+//!
+//! * **Versioned gets** — every read returns `(value, version)`; a commit
+//!   validates its read set against current versions (optimistic
+//!   concurrency, like Warp).
+//! * **Multi-key atomic commit** — all shards touched by a transaction are
+//!   locked in canonical order; validation + apply are all-or-nothing.
+//! * **Blind and conditional ops** — region-list appends, link-count
+//!   deltas, and monotone length updates never conflict; EOF-relative
+//!   appends validate their region-capacity condition at apply time
+//!   (§2.5), and compaction swaps are CAS on the region version (§2.8).
+//! * **Chain replication** — each shard is an f+1 replica chain
+//!   (HyperDex's value-dependent chaining, §2.9); writes flow to every
+//!   live replica, reads are served from the tail, and a recovered
+//!   replica re-syncs from its neighbor.
+//!
+//! [`MetaStore`] is the raw sharded store; [`MetaService`] layers the
+//! simulated transaction latency floor and metrics on top; [`MetaTxn`] is
+//! the builder the WTF client uses to accumulate a read set + op list.
+
+mod ops;
+mod shard;
+mod store;
+mod txn;
+
+pub use ops::{MetaOp, OpOutcome};
+pub use shard::{Shard, ShardStats};
+pub use store::{Commit, MetaService, MetaStore};
+pub use txn::MetaTxn;

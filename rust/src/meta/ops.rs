@@ -1,0 +1,512 @@
+//! Transaction operations and their apply-time semantics.
+//!
+//! Ops are designed so the common filesystem mutations are *blind* or
+//! *conditional* — they carry enough context to validate and apply under
+//! the shard locks without having been preceded by a conflicting read.
+//! This is what lets concurrent appends to one file commute (§2.5) and is
+//! the reason WTF transactions rarely abort.
+
+use crate::error::{Error, Result};
+use crate::types::{InodeId, Key, Placement, RegionEntry, RegionMeta, SliceData, Value};
+
+/// One mutation inside a metadata transaction.
+#[derive(Clone, Debug, PartialEq)]
+pub enum MetaOp {
+    /// Set `key` to `value` unconditionally.
+    Put { key: Key, value: Value },
+    /// Remove `key` (idempotent).
+    Delete { key: Key },
+    /// Blind append of an overlay entry to a region list (§2.1).  The
+    /// entry's placement must be `At(_)`; `Eof` placements go through
+    /// [`MetaOp::RegionAppendEof`].
+    RegionAppend { key: Key, entry: RegionEntry },
+    /// Conditional EOF-relative append (§2.5): appends at the region's
+    /// current end iff `eof + len <= cap`; otherwise the whole transaction
+    /// fails with [`Error::CondAppendFailed`] and the writer falls back to
+    /// an explicit-offset write.
+    RegionAppendEof {
+        key: Key,
+        data: SliceData,
+        len: u64,
+        cap: u64,
+    },
+    /// Compare-and-swap a whole region list — metadata compaction (§2.8).
+    /// Fails the transaction with a conflict if the version moved.
+    RegionSwap {
+        key: Key,
+        expected_version: u64,
+        region: RegionMeta,
+    },
+    /// Blind link-count adjustment on an inode (hardlink/unlink, §2.4).
+    InodeAdjustLinks { key: Key, delta: i64, mtime: u64 },
+    /// Monotone-max update of an inode's length + highest-region hint.
+    /// Concurrent writers race harmlessly: max is commutative.
+    InodeSetLenMax {
+        key: Key,
+        candidate: u64,
+        highest_region: u32,
+        mtime: u64,
+    },
+    /// Set the inode length to `region_base + region.eof` *after* this
+    /// transaction's region ops applied — used by EOF-relative appends
+    /// whose final offset is unknown until commit.
+    InodeSetLenFromRegion {
+        inode_key: Key,
+        region_key: Key,
+        region_base: u64,
+        mtime: u64,
+    },
+    /// Insert `name -> inode` into a directory; with `expect_absent`, fail
+    /// the transaction with `AlreadyExists` if the name is taken.
+    DirInsert {
+        key: Key,
+        name: String,
+        inode: InodeId,
+        expect_absent: bool,
+    },
+    /// Remove `name` from a directory; fails with `NotFound` if absent.
+    DirRemove { key: Key, name: String },
+    /// Insert a path-map entry iff absent (atomic create, §2.4).
+    PathInsert {
+        key: Key,
+        inode: InodeId,
+        expect_absent: bool,
+    },
+}
+
+impl MetaOp {
+    /// The key this op mutates (for `InodeSetLenFromRegion`, the inode).
+    pub fn key(&self) -> &Key {
+        match self {
+            MetaOp::Put { key, .. }
+            | MetaOp::Delete { key }
+            | MetaOp::RegionAppend { key, .. }
+            | MetaOp::RegionAppendEof { key, .. }
+            | MetaOp::RegionSwap { key, .. }
+            | MetaOp::InodeAdjustLinks { key, .. }
+            | MetaOp::InodeSetLenMax { key, .. }
+            | MetaOp::DirInsert { key, .. }
+            | MetaOp::DirRemove { key, .. }
+            | MetaOp::PathInsert { key, .. } => key,
+            MetaOp::InodeSetLenFromRegion { inode_key, .. } => inode_key,
+        }
+    }
+
+    /// All keys whose shards must be locked to apply this op.
+    pub fn keys(&self) -> Vec<&Key> {
+        match self {
+            MetaOp::InodeSetLenFromRegion {
+                inode_key,
+                region_key,
+                ..
+            } => vec![inode_key, region_key],
+            other => vec![other.key()],
+        }
+    }
+}
+
+/// The per-op result surfaced to the committing client.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum OpOutcome {
+    /// Nothing interesting to report.
+    Done,
+    /// An EOF-relative append landed at this region-relative offset.
+    AppendedAt(u64),
+}
+
+/// Validate an op against the current value of its key *before* any
+/// mutation is applied (all-or-nothing commit).  `version` is the current
+/// version of the key (0 = absent).
+pub fn validate(op: &MetaOp, current: Option<&Value>, version: u64) -> Result<()> {
+    match op {
+        MetaOp::Put { .. } | MetaOp::Delete { .. } => Ok(()),
+        MetaOp::RegionAppend { key, entry } => {
+            if matches!(entry.placement, Placement::Eof) {
+                return Err(Error::CorruptMetadata(format!(
+                    "RegionAppend with Eof placement on {key:?}; use RegionAppendEof"
+                )));
+            }
+            expect_region_or_absent(key, current)
+        }
+        MetaOp::RegionAppendEof { key, len, cap, .. } => {
+            let eof = match current {
+                None => 0,
+                Some(v) => region_of(key, v)?.eof,
+            };
+            if eof + len > *cap {
+                return Err(Error::CondAppendFailed {
+                    eof,
+                    len: *len,
+                    cap: *cap,
+                });
+            }
+            Ok(())
+        }
+        MetaOp::RegionSwap {
+            key,
+            expected_version,
+            ..
+        } => {
+            if version != *expected_version {
+                return Err(Error::TxnConflict {
+                    space: key.space,
+                    key: key.key.clone(),
+                });
+            }
+            expect_region_or_absent(key, current)
+        }
+        MetaOp::InodeAdjustLinks { key, .. }
+        | MetaOp::InodeSetLenMax { key, .. }
+        | MetaOp::InodeSetLenFromRegion {
+            inode_key: key, ..
+        } => match current {
+            Some(Value::Inode(_)) => Ok(()),
+            _ => Err(Error::CorruptMetadata(format!(
+                "inode op on non-inode key {key:?}"
+            ))),
+        },
+        MetaOp::DirInsert {
+            key,
+            name,
+            expect_absent,
+            ..
+        } => {
+            let dir = match current {
+                None => return Ok(()), // created on apply
+                Some(v) => dir_of(key, v)?,
+            };
+            if *expect_absent && dir.contains_key(name) {
+                return Err(Error::AlreadyExists(name.clone()));
+            }
+            Ok(())
+        }
+        MetaOp::DirRemove { key, name } => {
+            let dir = match current {
+                None => return Err(Error::NotFound(name.clone())),
+                Some(v) => dir_of(key, v)?,
+            };
+            if !dir.contains_key(name) {
+                return Err(Error::NotFound(name.clone()));
+            }
+            Ok(())
+        }
+        MetaOp::PathInsert {
+            key, expect_absent, ..
+        } => {
+            if *expect_absent && current.is_some() {
+                return Err(Error::AlreadyExists(key.key.clone()));
+            }
+            Ok(())
+        }
+    }
+}
+
+/// Apply a validated op, returning the new value (None = delete) and the
+/// outcome.  `current` is the pre-op value.
+///
+/// `region_peek` resolves the *current-transaction* state of another key
+/// (used by `InodeSetLenFromRegion`, which must observe this commit's own
+/// region appends).
+pub fn apply(
+    op: &MetaOp,
+    current: Option<Value>,
+    region_peek: &dyn Fn(&Key) -> Option<Value>,
+) -> Result<(Option<Value>, OpOutcome)> {
+    match op {
+        MetaOp::Put { value, .. } => Ok((Some(value.clone()), OpOutcome::Done)),
+        MetaOp::Delete { .. } => Ok((None, OpOutcome::Done)),
+        MetaOp::RegionAppend { key, entry } => {
+            let mut region = take_region_or_default(key, current)?;
+            if let Placement::At(at) = entry.placement {
+                region.eof = region.eof.max(at + entry.len);
+            }
+            region.entries.push(entry.clone());
+            Ok((Some(Value::Region(region)), OpOutcome::Done))
+        }
+        MetaOp::RegionAppendEof { key, data, len, .. } => {
+            let mut region = take_region_or_default(key, current)?;
+            let at = region.eof;
+            region.entries.push(RegionEntry {
+                placement: Placement::At(at),
+                len: *len,
+                data: data.clone(),
+            });
+            region.eof = at + len;
+            Ok((Some(Value::Region(region)), OpOutcome::AppendedAt(at)))
+        }
+        MetaOp::RegionSwap { region, .. } => {
+            Ok((Some(Value::Region(region.clone())), OpOutcome::Done))
+        }
+        MetaOp::InodeAdjustLinks { key, delta, mtime } => {
+            let mut inode = take_inode(key, current)?;
+            let links = i64::from(inode.links) + delta;
+            inode.links = u32::try_from(links.max(0)).unwrap_or(0);
+            inode.mtime = inode.mtime.max(*mtime);
+            if inode.links == 0 {
+                // Last link dropped: the inode itself becomes garbage; the
+                // GC scan reclaims its slices (§2.8).
+                return Ok((None, OpOutcome::Done));
+            }
+            Ok((Some(Value::Inode(inode)), OpOutcome::Done))
+        }
+        MetaOp::InodeSetLenMax {
+            key,
+            candidate,
+            highest_region,
+            mtime,
+        } => {
+            let mut inode = take_inode(key, current)?;
+            inode.len = inode.len.max(*candidate);
+            inode.highest_region = inode.highest_region.max(*highest_region);
+            inode.mtime = inode.mtime.max(*mtime);
+            Ok((Some(Value::Inode(inode)), OpOutcome::Done))
+        }
+        MetaOp::InodeSetLenFromRegion {
+            inode_key,
+            region_key,
+            region_base,
+            mtime,
+        } => {
+            let mut inode = take_inode(inode_key, current)?;
+            let eof = region_peek(region_key)
+                .as_ref()
+                .and_then(|v| v.as_region().map(|r| r.eof))
+                .unwrap_or(0);
+            inode.len = inode.len.max(region_base + eof);
+            inode.mtime = inode.mtime.max(*mtime);
+            Ok((Some(Value::Inode(inode)), OpOutcome::Done))
+        }
+        MetaOp::DirInsert {
+            key, name, inode, ..
+        } => {
+            let mut dir = match current {
+                None => Default::default(),
+                Some(v) => match v {
+                    Value::Dir(d) => d,
+                    _ => {
+                        return Err(Error::CorruptMetadata(format!(
+                            "dir op on non-dir key {key:?}"
+                        )))
+                    }
+                },
+            };
+            dir.insert(name.clone(), *inode);
+            Ok((Some(Value::Dir(dir)), OpOutcome::Done))
+        }
+        MetaOp::DirRemove { key, name } => {
+            let mut dir = match current {
+                Some(Value::Dir(d)) => d,
+                _ => {
+                    return Err(Error::CorruptMetadata(format!(
+                        "dir op on non-dir key {key:?}"
+                    )))
+                }
+            };
+            dir.remove(name);
+            Ok((Some(Value::Dir(dir)), OpOutcome::Done))
+        }
+        MetaOp::PathInsert { inode, .. } => {
+            Ok((Some(Value::PathEntry(*inode)), OpOutcome::Done))
+        }
+    }
+}
+
+fn expect_region_or_absent(key: &Key, current: Option<&Value>) -> Result<()> {
+    match current {
+        None | Some(Value::Region(_)) => Ok(()),
+        _ => Err(Error::CorruptMetadata(format!(
+            "region op on non-region key {key:?}"
+        ))),
+    }
+}
+
+fn region_of<'v>(key: &Key, v: &'v Value) -> Result<&'v RegionMeta> {
+    v.as_region().ok_or_else(|| {
+        Error::CorruptMetadata(format!("region op on non-region key {key:?}"))
+    })
+}
+
+fn dir_of<'v>(key: &Key, v: &'v Value) -> Result<&'v crate::types::DirEntries> {
+    v.as_dir()
+        .ok_or_else(|| Error::CorruptMetadata(format!("dir op on non-dir key {key:?}")))
+}
+
+fn take_region_or_default(key: &Key, current: Option<Value>) -> Result<RegionMeta> {
+    match current {
+        None => Ok(RegionMeta::default()),
+        Some(Value::Region(r)) => Ok(r),
+        Some(_) => Err(Error::CorruptMetadata(format!(
+            "region op on non-region key {key:?}"
+        ))),
+    }
+}
+
+fn take_inode(key: &Key, current: Option<Value>) -> Result<crate::types::Inode> {
+    match current {
+        Some(Value::Inode(i)) => Ok(i),
+        _ => Err(Error::CorruptMetadata(format!(
+            "inode op on non-inode key {key:?}"
+        ))),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::types::{Inode, SlicePtr, Space};
+
+    fn rkey() -> Key {
+        Key::new(Space::Region, "r")
+    }
+
+    fn stored(len: u64) -> SliceData {
+        SliceData::Stored(vec![SlicePtr {
+            server: 1,
+            backing: 0,
+            offset: 0,
+            len,
+        }])
+    }
+
+    fn no_peek(_: &Key) -> Option<Value> {
+        None
+    }
+
+    #[test]
+    fn region_append_tracks_eof() {
+        let op = MetaOp::RegionAppend {
+            key: rkey(),
+            entry: RegionEntry {
+                placement: Placement::At(100),
+                len: 50,
+                data: stored(50),
+            },
+        };
+        validate(&op, None, 0).unwrap();
+        let (v, _) = apply(&op, None, &no_peek).unwrap();
+        let r = v.unwrap();
+        assert_eq!(r.as_region().unwrap().eof, 150);
+    }
+
+    #[test]
+    fn eof_append_is_conditional() {
+        let op = MetaOp::RegionAppendEof {
+            key: rkey(),
+            data: stored(60),
+            len: 60,
+            cap: 100,
+        };
+        validate(&op, None, 0).unwrap();
+        let (v, outcome) = apply(&op, None, &no_peek).unwrap();
+        assert_eq!(outcome, OpOutcome::AppendedAt(0));
+        let region = v.clone().unwrap();
+        // Second append of 60 exceeds cap=100 -> CondAppendFailed.
+        let err = validate(&op, Some(&region), 1).unwrap_err();
+        assert!(matches!(err, Error::CondAppendFailed { eof: 60, .. }));
+    }
+
+    #[test]
+    fn region_swap_is_cas() {
+        let op = MetaOp::RegionSwap {
+            key: rkey(),
+            expected_version: 3,
+            region: RegionMeta::default(),
+        };
+        assert!(validate(&op, None, 3).is_ok());
+        assert!(matches!(
+            validate(&op, None, 4),
+            Err(Error::TxnConflict { .. })
+        ));
+    }
+
+    #[test]
+    fn link_count_zero_deletes_inode() {
+        let ikey = Key::inode(7);
+        let inode = Value::Inode(Inode::new_file(7, 0o644, 2));
+        let op = MetaOp::InodeAdjustLinks {
+            key: ikey,
+            delta: -1,
+            mtime: 5,
+        };
+        let (v, _) = apply(&op, Some(inode), &no_peek).unwrap();
+        assert!(v.is_none());
+    }
+
+    #[test]
+    fn len_max_is_monotone() {
+        let ikey = Key::inode(7);
+        let mut inode = Inode::new_file(7, 0o644, 2);
+        inode.len = 100;
+        let op = MetaOp::InodeSetLenMax {
+            key: ikey,
+            candidate: 50,
+            highest_region: 0,
+            mtime: 1,
+        };
+        let (v, _) = apply(&op, Some(Value::Inode(inode)), &no_peek).unwrap();
+        assert_eq!(v.unwrap().as_inode().unwrap().len, 100);
+    }
+
+    #[test]
+    fn dir_insert_expect_absent() {
+        let dkey = Key::dir(1);
+        let op = MetaOp::DirInsert {
+            key: dkey.clone(),
+            name: "a".into(),
+            inode: 2,
+            expect_absent: true,
+        };
+        validate(&op, None, 0).unwrap();
+        let (v, _) = apply(&op, None, &no_peek).unwrap();
+        let err = validate(&op, v.as_ref(), 1).unwrap_err();
+        assert!(matches!(err, Error::AlreadyExists(_)));
+    }
+
+    #[test]
+    fn dir_remove_requires_presence() {
+        let op = MetaOp::DirRemove {
+            key: Key::dir(1),
+            name: "missing".into(),
+        };
+        assert!(matches!(validate(&op, None, 0), Err(Error::NotFound(_))));
+    }
+
+    #[test]
+    fn set_len_from_region_peeks_txn_state() {
+        let ikey = Key::inode(7);
+        let rkey = rkey();
+        let inode = Value::Inode(Inode::new_file(7, 0o644, 2));
+        let op = MetaOp::InodeSetLenFromRegion {
+            inode_key: ikey,
+            region_key: rkey.clone(),
+            region_base: 1000,
+            mtime: 1,
+        };
+        let peek = |k: &Key| {
+            assert_eq!(k, &rkey);
+            Some(Value::Region(RegionMeta {
+                eof: 77,
+                ..Default::default()
+            }))
+        };
+        let (v, _) = apply(&op, Some(inode), &peek).unwrap();
+        assert_eq!(v.unwrap().as_inode().unwrap().len, 1077);
+    }
+
+    #[test]
+    fn type_mismatch_is_corrupt_metadata() {
+        let op = MetaOp::RegionAppend {
+            key: rkey(),
+            entry: RegionEntry {
+                placement: Placement::At(0),
+                len: 1,
+                data: stored(1),
+            },
+        };
+        let bogus = Value::U64(1);
+        assert!(matches!(
+            validate(&op, Some(&bogus), 1),
+            Err(Error::CorruptMetadata(_))
+        ));
+    }
+}

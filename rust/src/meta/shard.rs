@@ -1,0 +1,240 @@
+//! One metadata shard: a versioned key-value map replicated along a chain.
+//!
+//! HyperDex places each partition on an f+1 replica chain coordinated by
+//! value-dependent chaining (§2.9); writes enter at the head and
+//! propagate to the tail, reads are served by the tail.  In-process we
+//! hold the whole chain of one shard under a single lock, which preserves
+//! the observable semantics (linearizable per-shard ops, survival of f
+//! replica failures, resync on recovery) without a wire protocol.
+//!
+//! Versions live beside the replicas and persist across deletions, so a
+//! delete+recreate cannot produce an ABA false-validation of a
+//! transaction's read set.
+
+use crate::types::{Key, Value};
+use std::sync::{Mutex, MutexGuard};
+use std::collections::HashMap;
+
+/// A replica's materialized state.
+#[derive(Clone, Debug, Default)]
+struct Replica {
+    alive: bool,
+    map: HashMap<Key, Value>,
+}
+
+/// Shard interior: the replica chain plus the version history.
+#[derive(Debug, Default)]
+pub struct ShardInner {
+    replicas: Vec<Replica>,
+    /// Mutation counter per key; survives deletion (anti-ABA).
+    versions: HashMap<Key, u64>,
+}
+
+impl ShardInner {
+    /// Current value as observed at the tail of the chain.
+    pub fn get(&self, key: &Key) -> Option<&Value> {
+        self.tail().and_then(|r| r.map.get(key))
+    }
+
+    /// Current version of `key` (0 = never mutated).
+    pub fn version(&self, key: &Key) -> u64 {
+        self.versions.get(key).copied().unwrap_or(0)
+    }
+
+    /// Apply one mutation to every live replica in chain order and bump
+    /// the version.  `None` deletes.
+    pub fn set(&mut self, key: &Key, value: Option<Value>) {
+        for r in self.replicas.iter_mut().filter(|r| r.alive) {
+            match &value {
+                Some(v) => {
+                    r.map.insert(key.clone(), v.clone());
+                }
+                None => {
+                    r.map.remove(key);
+                }
+            }
+        }
+        *self.versions.entry(key.clone()).or_insert(0) += 1;
+    }
+
+    fn tail(&self) -> Option<&Replica> {
+        self.replicas.iter().rev().find(|r| r.alive)
+    }
+
+    fn head(&self) -> Option<&Replica> {
+        self.replicas.iter().find(|r| r.alive)
+    }
+
+    /// Number of live replicas.
+    pub fn alive(&self) -> usize {
+        self.replicas.iter().filter(|r| r.alive).count()
+    }
+
+    /// Keys present at the tail (for GC scans).
+    pub fn iter_tail(&self) -> impl Iterator<Item = (&Key, &Value)> {
+        self.tail().into_iter().flat_map(|r| r.map.iter())
+    }
+}
+
+/// A shard handle; all access goes through [`Shard::lock`] so the
+/// multi-shard commit protocol can hold several shards at once.
+#[derive(Debug)]
+pub struct Shard {
+    inner: Mutex<ShardInner>,
+}
+
+/// Observability snapshot for one shard.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct ShardStats {
+    pub keys: usize,
+    pub live_replicas: usize,
+    pub total_replicas: usize,
+}
+
+impl Shard {
+    /// A shard with `replicas` chain members, all initially alive.
+    pub fn new(replicas: usize) -> Self {
+        assert!(replicas >= 1, "a shard needs at least one replica");
+        Shard {
+            inner: Mutex::new(ShardInner {
+                replicas: (0..replicas)
+                    .map(|_| Replica {
+                        alive: true,
+                        map: HashMap::new(),
+                    })
+                    .collect(),
+                versions: HashMap::new(),
+            }),
+        }
+    }
+
+    pub fn lock(&self) -> MutexGuard<'_, ShardInner> {
+        self.inner.lock().unwrap()
+    }
+
+    /// Fail one chain member.  Ops keep flowing through the survivors; the
+    /// shard is unavailable only when every replica is dead.
+    pub fn kill_replica(&self, idx: usize) {
+        let mut g = self.inner.lock().unwrap();
+        if let Some(r) = g.replicas.get_mut(idx) {
+            r.alive = false;
+            r.map.clear(); // its state is gone
+        }
+    }
+
+    /// Recover a chain member by resyncing its state from a live neighbor
+    /// (the head, per value-dependent chaining's recovery).
+    pub fn recover_replica(&self, idx: usize) {
+        let mut g = self.inner.lock().unwrap();
+        let Some(snapshot) = g.head().map(|h| h.map.clone()) else {
+            return; // nothing alive to resync from
+        };
+        if let Some(r) = g.replicas.get_mut(idx) {
+            r.map = snapshot;
+            r.alive = true;
+        }
+    }
+
+    pub fn stats(&self) -> ShardStats {
+        let g = self.inner.lock().unwrap();
+        ShardStats {
+            keys: g.tail().map(|r| r.map.len()).unwrap_or(0),
+            live_replicas: g.alive(),
+            total_replicas: g.replicas.len(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::types::Space;
+
+    fn k(s: &str) -> Key {
+        Key::new(Space::Sys, s)
+    }
+
+    #[test]
+    fn set_get_version() {
+        let shard = Shard::new(2);
+        let mut g = shard.lock();
+        assert_eq!(g.version(&k("a")), 0);
+        g.set(&k("a"), Some(Value::U64(1)));
+        assert_eq!(g.get(&k("a")), Some(&Value::U64(1)));
+        assert_eq!(g.version(&k("a")), 1);
+        g.set(&k("a"), Some(Value::U64(2)));
+        assert_eq!(g.version(&k("a")), 2);
+    }
+
+    #[test]
+    fn versions_survive_delete_no_aba() {
+        let shard = Shard::new(2);
+        let mut g = shard.lock();
+        g.set(&k("a"), Some(Value::U64(1)));
+        g.set(&k("a"), None);
+        assert_eq!(g.get(&k("a")), None);
+        assert_eq!(g.version(&k("a")), 2);
+        g.set(&k("a"), Some(Value::U64(1)));
+        // A transaction that read version 1 must NOT validate now.
+        assert_eq!(g.version(&k("a")), 3);
+    }
+
+    #[test]
+    fn chain_survives_f_failures() {
+        let shard = Shard::new(3);
+        {
+            let mut g = shard.lock();
+            g.set(&k("a"), Some(Value::U64(7)));
+        }
+        shard.kill_replica(2); // tail dies
+        {
+            let g = shard.lock();
+            assert_eq!(g.get(&k("a")), Some(&Value::U64(7)));
+            assert_eq!(g.alive(), 2);
+        }
+        shard.kill_replica(0); // head dies too
+        {
+            let mut g = shard.lock();
+            assert_eq!(g.get(&k("a")), Some(&Value::U64(7)));
+            g.set(&k("b"), Some(Value::U64(8)));
+            assert_eq!(g.get(&k("b")), Some(&Value::U64(8)));
+        }
+    }
+
+    #[test]
+    fn recovery_resyncs_from_head() {
+        let shard = Shard::new(2);
+        shard.kill_replica(1);
+        {
+            let mut g = shard.lock();
+            g.set(&k("a"), Some(Value::U64(1)));
+            g.set(&k("b"), Some(Value::U64(2)));
+        }
+        shard.recover_replica(1);
+        shard.kill_replica(0); // now only the recovered replica remains
+        {
+            let g = shard.lock();
+            assert_eq!(g.get(&k("a")), Some(&Value::U64(1)));
+            assert_eq!(g.get(&k("b")), Some(&Value::U64(2)));
+        }
+    }
+
+    #[test]
+    fn stats_reflect_chain_state() {
+        let shard = Shard::new(3);
+        {
+            let mut g = shard.lock();
+            g.set(&k("x"), Some(Value::U64(1)));
+        }
+        shard.kill_replica(1);
+        let s = shard.stats();
+        assert_eq!(
+            s,
+            ShardStats {
+                keys: 1,
+                live_replicas: 2,
+                total_replicas: 3
+            }
+        );
+    }
+}

@@ -1,0 +1,477 @@
+//! The sharded metadata store and its multi-key atomic commit.
+//!
+//! A [`Commit`] carries the transaction's read set (key → version
+//! observed) and its ordered op list.  Commit locks every touched shard
+//! in canonical order (no deadlocks), validates the read set and every
+//! conditional op against a staged overlay (so ops in one transaction
+//! observe their predecessors), and applies all-or-nothing.  This mirrors
+//! the guarantee WTF takes from HyperDex Warp: one multi-key transaction
+//! of gets + appends + conditional puts, linearizable, spanning schemas.
+
+use super::ops::{self, MetaOp, OpOutcome};
+use super::shard::{Shard, ShardInner, ShardStats};
+use crate::error::{Error, Result};
+use crate::metrics::Metrics;
+use crate::types::{Key, Space, Value};
+use std::sync::MutexGuard;
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::time::Duration;
+
+/// A metadata transaction ready to commit.
+#[derive(Clone, Debug, Default)]
+pub struct Commit {
+    /// `(key, version observed)` — version 0 means "observed absent and
+    /// never-mutated".
+    pub reads: Vec<(Key, u64)>,
+    /// Mutations, applied in order.
+    pub ops: Vec<MetaOp>,
+}
+
+impl Commit {
+    pub fn is_empty(&self) -> bool {
+        self.reads.is_empty() && self.ops.is_empty()
+    }
+}
+
+/// The sharded, chain-replicated metadata store.
+#[derive(Debug)]
+pub struct MetaStore {
+    shards: Vec<Shard>,
+    next_inode: AtomicU64,
+}
+
+impl MetaStore {
+    pub fn new(shards: u32, replicas_per_shard: u8) -> Self {
+        assert!(shards >= 1);
+        MetaStore {
+            shards: (0..shards)
+                .map(|_| Shard::new(replicas_per_shard.max(1) as usize))
+                .collect(),
+            // inode 1 is reserved for the root directory
+            next_inode: AtomicU64::new(2),
+        }
+    }
+
+    /// Stable FNV-1a shard placement (independent of process hash seeds).
+    fn shard_of(&self, key: &Key) -> usize {
+        let mut h: u64 = 0xcbf29ce484222325;
+        let mut feed = |b: u8| {
+            h ^= u64::from(b);
+            h = h.wrapping_mul(0x100000001b3);
+        };
+        feed(key.space as u8);
+        for b in key.key.as_bytes() {
+            feed(*b);
+        }
+        (h % self.shards.len() as u64) as usize
+    }
+
+    /// Versioned point read (linearizable: served by the shard tail).
+    pub fn get(&self, key: &Key) -> Option<(Value, u64)> {
+        let g = self.shards[self.shard_of(key)].lock();
+        let v = g.version(key);
+        g.get(key).map(|val| (val.clone(), v))
+    }
+
+    /// Version of `key` without copying the value.
+    pub fn version(&self, key: &Key) -> u64 {
+        self.shards[self.shard_of(key)].lock().version(key)
+    }
+
+    /// Allocate a fresh inode id.  Ids allocated by aborted transactions
+    /// are simply never used — the allocator needs no transactionality.
+    pub fn alloc_inode_id(&self) -> u64 {
+        self.next_inode.fetch_add(1, Ordering::Relaxed)
+    }
+
+    /// Atomically commit `commit`.  On success, returns one
+    /// [`OpOutcome`] per op.  On failure nothing is mutated; the error
+    /// distinguishes read-set conflicts (retryable by the WTF retry
+    /// layer) from semantic failures (surfaced to the application).
+    pub fn commit(&self, commit: &Commit) -> Result<Vec<OpOutcome>> {
+        // 1. Canonically ordered shard lock acquisition.
+        let mut shard_ids: Vec<usize> = commit
+            .reads
+            .iter()
+            .map(|(k, _)| self.shard_of(k))
+            .chain(
+                commit
+                    .ops
+                    .iter()
+                    .flat_map(|op| op.keys().into_iter().map(|k| self.shard_of(k))),
+            )
+            .collect();
+        shard_ids.sort_unstable();
+        shard_ids.dedup();
+        let mut guards: HashMap<usize, MutexGuard<'_, ShardInner>> = HashMap::new();
+        for sid in &shard_ids {
+            guards.insert(*sid, self.shards[*sid].lock());
+        }
+
+        // 2. Validate the read set.
+        for (key, observed) in &commit.reads {
+            let g = &guards[&self.shard_of(key)];
+            if g.version(key) != *observed {
+                return Err(Error::TxnConflict {
+                    space: key.space,
+                    key: key.key.clone(),
+                });
+            }
+        }
+
+        // 3. Stage ops against an overlay so each op sees its
+        //    predecessors; validation failures abort with nothing applied.
+        let mut overlay: HashMap<Key, Option<Value>> = HashMap::new();
+        let mut outcomes = Vec::with_capacity(commit.ops.len());
+        for op in &commit.ops {
+            let key = op.key().clone();
+            let committed = |k: &Key| {
+                guards[&self.shard_of(k)].get(k).cloned()
+            };
+            // Take (don't clone) the staged value: repeated ops on one
+            // key — e.g. a concat appending thousands of entries to one
+            // region — must stay O(total entries), not O(n^2).
+            let current: Option<Value> = match overlay.remove(&key) {
+                Some(staged) => staged,
+                None => committed(&key),
+            };
+            // Committed version: conditional (CAS) ops compare against the
+            // pre-transaction version, which is what their reads observed.
+            let version = guards[&self.shard_of(&key)].version(&key);
+            ops::validate(op, current.as_ref(), version)?;
+            let peek = |k: &Key| match overlay.get(k) {
+                Some(staged) => staged.clone(),
+                None => committed(k),
+            };
+            let (next, outcome) = ops::apply(op, current, &peek)?;
+            overlay.insert(key, next);
+            outcomes.push(outcome);
+        }
+
+        // 4. Apply the overlay; one version bump per mutated key.
+        for (key, value) in overlay {
+            guards
+                .get_mut(&self.shard_of(&key))
+                .expect("shard locked")
+                .set(&key, value);
+        }
+        Ok(outcomes)
+    }
+
+    /// Full scan of one space (GC uses this to build the in-use slice
+    /// lists, §2.8).  Not transactional: GC tolerates staleness by design
+    /// (two-consecutive-scan rule).
+    pub fn scan_space(&self, space: Space) -> Vec<(Key, Value)> {
+        let mut out = Vec::new();
+        for shard in &self.shards {
+            let g = shard.lock();
+            for (k, v) in g.iter_tail() {
+                if k.space == space {
+                    out.push((k.clone(), v.clone()));
+                }
+            }
+        }
+        out.sort_by(|a, b| a.0.cmp(&b.0));
+        out
+    }
+
+    /// Kill replica `idx` of every shard (failure injection).
+    pub fn kill_replica(&self, idx: usize) {
+        for s in &self.shards {
+            s.kill_replica(idx);
+        }
+    }
+
+    /// Recover replica `idx` of every shard.
+    pub fn recover_replica(&self, idx: usize) {
+        for s in &self.shards {
+            s.recover_replica(idx);
+        }
+    }
+
+    pub fn shard_stats(&self) -> Vec<ShardStats> {
+        self.shards.iter().map(|s| s.stats()).collect()
+    }
+
+    pub fn num_shards(&self) -> usize {
+        self.shards.len()
+    }
+}
+
+/// [`MetaStore`] plus the deployment concerns: the simulated transaction
+/// latency floor (the paper measures ~3 ms per HyperDex transaction) and
+/// metrics.  All client traffic goes through this type.
+#[derive(Debug)]
+pub struct MetaService {
+    store: MetaStore,
+    txn_floor: Duration,
+    metrics: Metrics,
+}
+
+impl MetaService {
+    pub fn new(store: MetaStore, txn_floor: Duration, metrics: Metrics) -> Self {
+        MetaService {
+            store,
+            txn_floor,
+            metrics,
+        }
+    }
+
+    pub fn store(&self) -> &MetaStore {
+        &self.store
+    }
+
+    pub fn metrics(&self) -> &Metrics {
+        &self.metrics
+    }
+
+    pub fn get(&self, key: &Key) -> Option<(Value, u64)> {
+        self.store.get(key)
+    }
+
+    pub fn alloc_inode_id(&self) -> u64 {
+        self.store.alloc_inode_id()
+    }
+
+    /// Commit with the latency floor charged once per transaction.
+    pub fn commit(&self, commit: &Commit) -> Result<Vec<OpOutcome>> {
+        if self.txn_floor > Duration::ZERO {
+            std::thread::sleep(self.txn_floor);
+        }
+        self.metrics.add_meta_txns(1);
+        let r = self.store.commit(commit);
+        if matches!(r, Err(Error::TxnConflict { .. })) {
+            self.metrics.add_meta_conflicts(1);
+        }
+        r
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::types::{Inode, Placement, RegionEntry, RegionMeta, SliceData, SlicePtr};
+
+    fn store() -> MetaStore {
+        MetaStore::new(4, 2)
+    }
+
+    fn skey(s: &str) -> Key {
+        Key::new(Space::Sys, s)
+    }
+
+    fn put(key: &Key, v: Value) -> Commit {
+        Commit {
+            reads: vec![],
+            ops: vec![MetaOp::Put {
+                key: key.clone(),
+                value: v,
+            }],
+        }
+    }
+
+    fn stored(len: u64) -> SliceData {
+        SliceData::Stored(vec![SlicePtr {
+            server: 1,
+            backing: 0,
+            offset: 0,
+            len,
+        }])
+    }
+
+    #[test]
+    fn put_get_round_trip() {
+        let s = store();
+        let k = skey("a");
+        s.commit(&put(&k, Value::U64(42))).unwrap();
+        assert_eq!(s.get(&k), Some((Value::U64(42), 1)));
+    }
+
+    #[test]
+    fn read_set_validation_conflicts() {
+        let s = store();
+        let k = skey("a");
+        s.commit(&put(&k, Value::U64(1))).unwrap();
+        let (_, v) = s.get(&k).unwrap();
+        // Another writer moves the key.
+        s.commit(&put(&k, Value::U64(2))).unwrap();
+        let stale = Commit {
+            reads: vec![(k.clone(), v)],
+            ops: vec![MetaOp::Put {
+                key: k.clone(),
+                value: Value::U64(3),
+            }],
+        };
+        assert!(matches!(
+            s.commit(&stale),
+            Err(Error::TxnConflict { .. })
+        ));
+        // Nothing applied.
+        assert_eq!(s.get(&k).unwrap().0, Value::U64(2));
+    }
+
+    #[test]
+    fn absent_read_validates_at_version_zero() {
+        let s = store();
+        let k = skey("never");
+        let c = Commit {
+            reads: vec![(k.clone(), 0)],
+            ops: vec![],
+        };
+        s.commit(&c).unwrap();
+        // After a mutation, version-0 reads conflict.
+        s.commit(&put(&k, Value::U64(1))).unwrap();
+        assert!(s.commit(&c).is_err());
+    }
+
+    #[test]
+    fn multi_key_commit_is_atomic_across_shards() {
+        let s = store();
+        // Enough keys that several shards are involved.
+        let keys: Vec<Key> = (0..16).map(|i| skey(&format!("k{i}"))).collect();
+        let ops = keys
+            .iter()
+            .map(|k| MetaOp::Put {
+                key: k.clone(),
+                value: Value::U64(7),
+            })
+            .collect();
+        s.commit(&Commit { reads: vec![], ops }).unwrap();
+        for k in &keys {
+            assert_eq!(s.get(k).unwrap().0, Value::U64(7));
+        }
+    }
+
+    #[test]
+    fn failed_op_rolls_back_entire_commit() {
+        let s = store();
+        let a = skey("a");
+        let c = Commit {
+            reads: vec![],
+            ops: vec![
+                MetaOp::Put {
+                    key: a.clone(),
+                    value: Value::U64(1),
+                },
+                // Fails: inode op against a U64.
+                MetaOp::InodeSetLenMax {
+                    key: a.clone(),
+                    candidate: 1,
+                    highest_region: 0,
+                    mtime: 0,
+                },
+            ],
+        };
+        assert!(s.commit(&c).is_err());
+        assert_eq!(s.get(&a), None); // first op not applied either
+    }
+
+    #[test]
+    fn ops_in_one_txn_observe_predecessors() {
+        let s = store();
+        let r = Key::new(Space::Region, "r");
+        let i = Key::inode(9);
+        s.commit(&put(&i, Value::Inode(Inode::new_file(9, 0o644, 1))))
+            .unwrap();
+        let c = Commit {
+            reads: vec![],
+            ops: vec![
+                MetaOp::RegionAppendEof {
+                    key: r.clone(),
+                    data: stored(10),
+                    len: 10,
+                    cap: 100,
+                },
+                MetaOp::RegionAppendEof {
+                    key: r.clone(),
+                    data: stored(5),
+                    len: 5,
+                    cap: 100,
+                },
+                MetaOp::InodeSetLenFromRegion {
+                    inode_key: i.clone(),
+                    region_key: r.clone(),
+                    region_base: 1000,
+                    mtime: 1,
+                },
+            ],
+        };
+        let outcomes = s.commit(&c).unwrap();
+        assert_eq!(outcomes[0], OpOutcome::AppendedAt(0));
+        assert_eq!(outcomes[1], OpOutcome::AppendedAt(10));
+        assert_eq!(s.get(&i).unwrap().0.as_inode().unwrap().len, 1015);
+        // Region has one version bump despite two ops.
+        assert_eq!(s.version(&r), 1);
+    }
+
+    #[test]
+    fn blind_appends_from_concurrent_writers_both_land() {
+        let s = store();
+        let r = Key::new(Space::Region, "r");
+        let entry = |at: u64| MetaOp::RegionAppend {
+            key: r.clone(),
+            entry: RegionEntry {
+                placement: Placement::At(at),
+                len: 4,
+                data: stored(4),
+            },
+        };
+        s.commit(&Commit {
+            reads: vec![],
+            ops: vec![entry(0)],
+        })
+        .unwrap();
+        s.commit(&Commit {
+            reads: vec![],
+            ops: vec![entry(100)],
+        })
+        .unwrap();
+        let region = s.get(&r).unwrap().0;
+        let region = region.as_region().unwrap().clone();
+        assert_eq!(region.entries.len(), 2);
+        assert_eq!(region.eof, 104);
+    }
+
+    #[test]
+    fn scan_space_sees_only_that_space() {
+        let s = store();
+        s.commit(&put(&skey("a"), Value::U64(1))).unwrap();
+        s.commit(&put(
+            &Key::new(Space::Region, "r"),
+            Value::Region(RegionMeta::default()),
+        ))
+        .unwrap();
+        let sys = s.scan_space(Space::Sys);
+        assert_eq!(sys.len(), 1);
+        let reg = s.scan_space(Space::Region);
+        assert_eq!(reg.len(), 1);
+    }
+
+    #[test]
+    fn survives_replica_failure_and_recovery() {
+        let s = store();
+        let k = skey("a");
+        s.commit(&put(&k, Value::U64(1))).unwrap();
+        s.kill_replica(0);
+        assert_eq!(s.get(&k).unwrap().0, Value::U64(1));
+        s.commit(&put(&k, Value::U64(2))).unwrap();
+        s.recover_replica(0);
+        s.kill_replica(1); // only the recovered replica remains
+        assert_eq!(s.get(&k).unwrap().0, Value::U64(2));
+    }
+
+    #[test]
+    fn service_counts_txns_and_conflicts() {
+        let svc = MetaService::new(store(), Duration::ZERO, Metrics::new());
+        let k = skey("a");
+        svc.commit(&put(&k, Value::U64(1))).unwrap();
+        let stale = Commit {
+            reads: vec![(k.clone(), 0)],
+            ops: vec![],
+        };
+        let _ = svc.commit(&stale);
+        assert_eq!(svc.metrics().meta_txns(), 2);
+        assert_eq!(svc.metrics().meta_conflicts(), 1);
+    }
+}

@@ -1,0 +1,136 @@
+//! Lightweight counters threaded through every layer.
+//!
+//! The evaluation's Table 2 is literally these counters: bytes read and
+//! written by the *storage* layer per application phase.  Counters are
+//! lock-free and cheap enough to leave enabled on the hot path.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+
+/// Byte/op counters for one component (a storage server, a client, a
+/// benchmark phase).  Cloning shares the underlying counters.
+#[derive(Clone, Debug, Default)]
+pub struct Metrics {
+    inner: Arc<Inner>,
+}
+
+#[derive(Debug, Default)]
+struct Inner {
+    bytes_read: AtomicU64,
+    bytes_written: AtomicU64,
+    ops_read: AtomicU64,
+    ops_written: AtomicU64,
+    meta_txns: AtomicU64,
+    meta_conflicts: AtomicU64,
+    txn_retries: AtomicU64,
+    gc_bytes_reclaimed: AtomicU64,
+    gc_bytes_rewritten: AtomicU64,
+}
+
+macro_rules! counter {
+    ($add:ident, $get:ident, $field:ident) => {
+        #[inline]
+        pub fn $add(&self, n: u64) {
+            self.inner.$field.fetch_add(n, Ordering::Relaxed);
+        }
+        #[inline]
+        pub fn $get(&self) -> u64 {
+            self.inner.$field.load(Ordering::Relaxed)
+        }
+    };
+}
+
+impl Metrics {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    counter!(add_bytes_read, bytes_read, bytes_read);
+    counter!(add_bytes_written, bytes_written, bytes_written);
+    counter!(add_ops_read, ops_read, ops_read);
+    counter!(add_ops_written, ops_written, ops_written);
+    counter!(add_meta_txns, meta_txns, meta_txns);
+    counter!(add_meta_conflicts, meta_conflicts, meta_conflicts);
+    counter!(add_txn_retries, txn_retries, txn_retries);
+    counter!(add_gc_reclaimed, gc_bytes_reclaimed, gc_bytes_reclaimed);
+    counter!(add_gc_rewritten, gc_bytes_rewritten, gc_bytes_rewritten);
+
+    /// Snapshot for delta accounting across a benchmark phase.
+    pub fn snapshot(&self) -> MetricsSnapshot {
+        MetricsSnapshot {
+            bytes_read: self.bytes_read(),
+            bytes_written: self.bytes_written(),
+            ops_read: self.ops_read(),
+            ops_written: self.ops_written(),
+            meta_txns: self.meta_txns(),
+            meta_conflicts: self.meta_conflicts(),
+            txn_retries: self.txn_retries(),
+            gc_bytes_reclaimed: self.gc_bytes_reclaimed(),
+            gc_bytes_rewritten: self.gc_bytes_rewritten(),
+        }
+    }
+}
+
+/// Point-in-time copy of the counters.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct MetricsSnapshot {
+    pub bytes_read: u64,
+    pub bytes_written: u64,
+    pub ops_read: u64,
+    pub ops_written: u64,
+    pub meta_txns: u64,
+    pub meta_conflicts: u64,
+    pub txn_retries: u64,
+    pub gc_bytes_reclaimed: u64,
+    pub gc_bytes_rewritten: u64,
+}
+
+impl MetricsSnapshot {
+    /// Per-field difference `self - earlier` (saturating).
+    pub fn delta(&self, earlier: &MetricsSnapshot) -> MetricsSnapshot {
+        MetricsSnapshot {
+            bytes_read: self.bytes_read.saturating_sub(earlier.bytes_read),
+            bytes_written: self.bytes_written.saturating_sub(earlier.bytes_written),
+            ops_read: self.ops_read.saturating_sub(earlier.ops_read),
+            ops_written: self.ops_written.saturating_sub(earlier.ops_written),
+            meta_txns: self.meta_txns.saturating_sub(earlier.meta_txns),
+            meta_conflicts: self.meta_conflicts.saturating_sub(earlier.meta_conflicts),
+            txn_retries: self.txn_retries.saturating_sub(earlier.txn_retries),
+            gc_bytes_reclaimed: self
+                .gc_bytes_reclaimed
+                .saturating_sub(earlier.gc_bytes_reclaimed),
+            gc_bytes_rewritten: self
+                .gc_bytes_rewritten
+                .saturating_sub(earlier.gc_bytes_rewritten),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counters_accumulate_and_share() {
+        let m = Metrics::new();
+        let m2 = m.clone();
+        m.add_bytes_read(10);
+        m2.add_bytes_read(5);
+        assert_eq!(m.bytes_read(), 15);
+        m.add_meta_txns(1);
+        assert_eq!(m2.meta_txns(), 1);
+    }
+
+    #[test]
+    fn snapshot_delta() {
+        let m = Metrics::new();
+        m.add_bytes_written(100);
+        let a = m.snapshot();
+        m.add_bytes_written(50);
+        m.add_txn_retries(2);
+        let d = m.snapshot().delta(&a);
+        assert_eq!(d.bytes_written, 50);
+        assert_eq!(d.txn_retries, 2);
+        assert_eq!(d.bytes_read, 0);
+    }
+}

@@ -1,0 +1,89 @@
+//! In-process "network": latency/bandwidth injection between components.
+//!
+//! The functional deployment runs every server in one process, so RPC is a
+//! method call.  To keep the *shape* of a distributed deployment (and to
+//! let real-mode benchmarks model the paper's GbE testbed), every
+//! cross-component call site threads through a [`LinkModel`] that can
+//! charge latency and bandwidth with thread sleeps.  Unit tests use
+//! [`LinkModel::instant`].
+
+use std::time::Duration;
+
+/// Latency + bandwidth model for one logical link (client ↔ server).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct LinkModel {
+    /// One-way propagation delay charged per message.
+    pub half_rtt: Duration,
+    /// Payload bandwidth in bytes/second; `None` = infinite.
+    pub bandwidth: Option<u64>,
+}
+
+impl LinkModel {
+    /// No simulated cost at all (unit tests, real-perf mode).
+    pub const fn instant() -> Self {
+        LinkModel {
+            half_rtt: Duration::ZERO,
+            bandwidth: None,
+        }
+    }
+
+    /// The paper's testbed: gigabit ethernet through one ToR switch.
+    /// ~0.1 ms one-way, 125 MB/s payload bandwidth.
+    pub const fn gigabit() -> Self {
+        LinkModel {
+            half_rtt: Duration::from_micros(100),
+            bandwidth: Some(125_000_000),
+        }
+    }
+
+    /// Time to move `bytes` across this link, one way.
+    pub fn transfer_time(&self, bytes: u64) -> Duration {
+        let bw = match self.bandwidth {
+            Some(bw) if bw > 0 => {
+                Duration::from_nanos((bytes.saturating_mul(1_000_000_000) / bw).max(0))
+            }
+            _ => Duration::ZERO,
+        };
+        self.half_rtt + bw
+    }
+
+    /// Sleep for the cost of sending `bytes` over this link.  A no-op for
+    /// [`LinkModel::instant`] so unit tests never yield.
+    pub fn charge(&self, bytes: u64) {
+        let t = self.transfer_time(bytes);
+        if t > Duration::ZERO {
+            std::thread::sleep(t);
+        }
+    }
+}
+
+impl Default for LinkModel {
+    fn default() -> Self {
+        LinkModel::instant()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn instant_charges_nothing() {
+        let l = LinkModel::instant();
+        assert_eq!(l.transfer_time(1 << 30), Duration::ZERO);
+    }
+
+    #[test]
+    fn gigabit_transfer_time() {
+        let l = LinkModel::gigabit();
+        // 125 MB at 125 MB/s = 1 s + 0.1 ms propagation.
+        let t = l.transfer_time(125_000_000);
+        assert!(t >= Duration::from_secs(1));
+        assert!(t < Duration::from_millis(1002));
+    }
+
+    #[test]
+    fn charge_is_noop_when_instant() {
+        LinkModel::instant().charge(u64::MAX / 2);
+    }
+}

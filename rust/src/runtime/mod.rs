@@ -1,0 +1,426 @@
+//! PJRT execution of the AOT-compiled JAX/Pallas kernels (L1/L2).
+//!
+//! `make artifacts` lowers the L2 entry points (`python/compile/model.py`,
+//! which call the L1 Pallas kernels) to **HLO text** — the only
+//! interchange format the bundled xla_extension 0.5.1 accepts from
+//! jax ≥ 0.5 — plus a `manifest.json` describing every variant.  This
+//! module loads those artifacts once (`PjRtClient::cpu()` →
+//! `HloModuleProto::from_text_file` → compile) and exposes typed entry
+//! points; Python never runs at request time.
+//!
+//! [`SortCompute`] abstracts the two kernels the §4.1 sort application
+//! needs (bucket partitioning, permutation sort) so unit tests can run
+//! against the pure-rust [`NativeCompute`] oracle while examples and
+//! benches use the real [`XlaRuntime`].
+
+use crate::error::{Error, Result};
+use crate::util::json::{self, Json};
+use std::path::{Path, PathBuf};
+
+/// Parameter/output description from the manifest.
+#[derive(Clone, Debug)]
+pub struct TensorSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+}
+
+/// One AOT artifact's metadata.
+#[derive(Clone, Debug)]
+pub struct ArtifactMeta {
+    pub name: String,
+    pub entry: String,
+    pub file: String,
+    pub params: Vec<TensorSpec>,
+    pub n: usize,
+    pub buckets: Option<usize>,
+    pub block: Option<usize>,
+}
+
+fn tensor_specs(j: &Json) -> Result<Vec<TensorSpec>> {
+    let arr = j
+        .as_arr()
+        .ok_or_else(|| Error::Artifact("params not an array".into()))?;
+    arr.iter()
+        .map(|p| {
+            Ok(TensorSpec {
+                name: p
+                    .get("name")
+                    .and_then(|n| n.as_str())
+                    .unwrap_or("?")
+                    .to_string(),
+                shape: p
+                    .get("shape")
+                    .and_then(|s| s.as_arr())
+                    .map(|dims| {
+                        dims.iter()
+                            .filter_map(|d| d.as_u64())
+                            .map(|d| d as usize)
+                            .collect()
+                    })
+                    .unwrap_or_default(),
+            })
+        })
+        .collect()
+}
+
+/// Parse `manifest.json` into artifact metadata.
+pub fn parse_manifest(text: &str) -> Result<Vec<ArtifactMeta>> {
+    let doc = json::parse(text).map_err(|e| Error::Artifact(e.to_string()))?;
+    let obj = doc
+        .as_obj()
+        .ok_or_else(|| Error::Artifact("manifest is not an object".into()))?;
+    let mut out = Vec::new();
+    for (name, entry) in obj {
+        out.push(ArtifactMeta {
+            name: name.clone(),
+            entry: entry
+                .get("entry")
+                .and_then(|e| e.as_str())
+                .ok_or_else(|| Error::Artifact(format!("{name}: missing entry")))?
+                .to_string(),
+            file: entry
+                .get("file")
+                .and_then(|e| e.as_str())
+                .ok_or_else(|| Error::Artifact(format!("{name}: missing file")))?
+                .to_string(),
+            params: tensor_specs(
+                entry
+                    .get("params")
+                    .ok_or_else(|| Error::Artifact(format!("{name}: missing params")))?,
+            )?,
+            n: entry
+                .get("n")
+                .and_then(|v| v.as_u64())
+                .ok_or_else(|| Error::Artifact(format!("{name}: missing n")))?
+                as usize,
+            buckets: entry
+                .get("buckets")
+                .and_then(|v| v.as_u64())
+                .map(|v| v as usize),
+            block: entry
+                .get("block")
+                .and_then(|v| v.as_u64())
+                .map(|v| v as usize),
+        });
+    }
+    Ok(out)
+}
+
+/// The compute interface of the sort application: classify keys into
+/// buckets, and produce a stable sort permutation.
+pub trait SortCompute {
+    /// `bounds` are ascending bucket boundaries; returns
+    /// `(bucket id per key, histogram of len(bounds)+1)`.
+    fn partition(&self, keys: &[i32], bounds: &[i32]) -> Result<(Vec<u32>, Vec<u64>)>;
+    /// Stable argsort: `perm[i]` = original index of i-th smallest key.
+    fn argsort(&self, keys: &[i32]) -> Result<Vec<u32>>;
+    /// Human-readable backend name (logged by the harness).
+    fn name(&self) -> &'static str;
+}
+
+/// Pure-rust reference implementation — the oracle the XLA path is
+/// validated against, and the fallback when artifacts are absent.
+#[derive(Debug, Default)]
+pub struct NativeCompute;
+
+impl SortCompute for NativeCompute {
+    fn partition(&self, keys: &[i32], bounds: &[i32]) -> Result<(Vec<u32>, Vec<u64>)> {
+        let mut hist = vec![0u64; bounds.len() + 1];
+        let ids = keys
+            .iter()
+            .map(|k| {
+                let b = bounds.partition_point(|bound| bound <= k) as u32;
+                hist[b as usize] += 1;
+                b
+            })
+            .collect();
+        Ok((ids, hist))
+    }
+
+    fn argsort(&self, keys: &[i32]) -> Result<Vec<u32>> {
+        let mut perm: Vec<u32> = (0..keys.len() as u32).collect();
+        perm.sort_by_key(|&i| (keys[i as usize], i));
+        Ok(perm)
+    }
+
+    fn name(&self) -> &'static str {
+        "native"
+    }
+}
+
+/// A compiled artifact ready to execute.
+struct Loaded {
+    meta: ArtifactMeta,
+    exe: xla::PjRtLoadedExecutable,
+}
+
+/// The PJRT runtime: one CPU client, one compiled executable per model
+/// variant, loaded once at startup.
+pub struct XlaRuntime {
+    partition_variants: Vec<Loaded>,
+    sort_variants: Vec<Loaded>,
+}
+
+impl XlaRuntime {
+    /// Default artifact location (relative to the repo root).
+    pub fn default_dir() -> PathBuf {
+        PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+    }
+
+    /// Load every artifact in `dir` per its manifest.
+    pub fn load(dir: &Path) -> Result<XlaRuntime> {
+        let manifest_path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&manifest_path).map_err(|e| {
+            Error::Artifact(format!(
+                "cannot read {} (run `make artifacts`): {e}",
+                manifest_path.display()
+            ))
+        })?;
+        let metas = parse_manifest(&text)?;
+        let client = xla::PjRtClient::cpu()?;
+        let mut partition_variants = Vec::new();
+        let mut sort_variants = Vec::new();
+        for meta in metas {
+            let path = dir.join(&meta.file);
+            let proto = xla::HloModuleProto::from_text_file(
+                path.to_str()
+                    .ok_or_else(|| Error::Artifact("non-utf8 path".into()))?,
+            )?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = client.compile(&comp)?;
+            let loaded = Loaded { meta, exe };
+            match loaded.meta.entry.as_str() {
+                "plan_partition" => partition_variants.push(loaded),
+                "plan_sort" | "plan_sort_blocked" => sort_variants.push(loaded),
+                other => {
+                    return Err(Error::Artifact(format!("unknown entry {other}")));
+                }
+            }
+        }
+        // Prefer the smallest sufficient variant at dispatch time.
+        partition_variants.sort_by_key(|l| l.meta.n);
+        sort_variants.sort_by_key(|l| sort_capacity(&l.meta));
+        if partition_variants.is_empty() || sort_variants.is_empty() {
+            return Err(Error::Artifact(
+                "manifest has no partition/sort variants".into(),
+            ));
+        }
+        Ok(XlaRuntime {
+            partition_variants,
+            sort_variants,
+        })
+    }
+
+    /// Load from the default directory.
+    pub fn load_default() -> Result<XlaRuntime> {
+        Self::load(&Self::default_dir())
+    }
+
+    /// Artifact inventory (for the CLI's `artifacts` subcommand).
+    pub fn inventory(&self) -> Vec<&ArtifactMeta> {
+        self.partition_variants
+            .iter()
+            .chain(self.sort_variants.iter())
+            .map(|l| &l.meta)
+            .collect()
+    }
+
+    fn run2(
+        exe: &xla::PjRtLoadedExecutable,
+        inputs: &[xla::Literal],
+    ) -> Result<(Vec<i32>, Vec<i32>)> {
+        let result = exe.execute::<xla::Literal>(inputs)?[0][0].to_literal_sync()?;
+        // aot.py lowers with return_tuple=True.
+        let t = result.to_tuple()?;
+        if t.len() != 2 {
+            return Err(Error::Artifact(format!(
+                "expected 2 outputs, got {}",
+                t.len()
+            )));
+        }
+        Ok((t[0].to_vec::<i32>()?, t[1].to_vec::<i32>()?))
+    }
+}
+
+/// How many keys one call of a sort artifact can sort independently.
+fn sort_capacity(meta: &ArtifactMeta) -> usize {
+    meta.block.unwrap_or(meta.n)
+}
+
+impl SortCompute for XlaRuntime {
+    fn partition(&self, keys: &[i32], bounds: &[i32]) -> Result<(Vec<u32>, Vec<u64>)> {
+        let logical = bounds.len() + 1;
+        // Smallest variant with at least `logical` buckets; the bounds are
+        // padded with i32::MAX so the surplus buckets receive only pads.
+        let variant = self
+            .partition_variants
+            .iter()
+            .find(|l| l.meta.buckets.unwrap_or(0) >= logical)
+            .ok_or_else(|| {
+                Error::Artifact(format!("no partition artifact with >= {logical} buckets"))
+            })?;
+        let art_buckets = variant.meta.buckets.unwrap();
+        let mut padded_bounds = bounds.to_vec();
+        padded_bounds.resize(art_buckets - 1, i32::MAX);
+        let n = variant.meta.n;
+        let bounds_lit = xla::Literal::vec1(&padded_bounds);
+        let mut ids = Vec::with_capacity(keys.len());
+        let mut hist = vec![0u64; logical];
+        for chunk in keys.chunks(n) {
+            let mut padded = chunk.to_vec();
+            padded.resize(n, i32::MAX);
+            let keys_lit = xla::Literal::vec1(&padded);
+            let (chunk_ids, chunk_hist) =
+                Self::run2(&variant.exe, &[keys_lit, bounds_lit.clone()])?;
+            // Clamp ids into the logical bucket range: a real key that is
+            // >= every real bound may spill past `logical - 1` when the
+            // pad bound equals i32::MAX and the key does too.
+            ids.extend(
+                chunk_ids[..chunk.len()]
+                    .iter()
+                    .map(|&b| (b as u32).min(logical as u32 - 1)),
+            );
+            // Fold the surplus buckets into the logical last one, then
+            // remove the pads (which all land in the artifact's top).
+            for (b, c) in chunk_hist.iter().enumerate() {
+                let lb = b.min(logical - 1);
+                hist[lb] += *c as u64;
+            }
+            let pad = (n - chunk.len()) as u64;
+            hist[logical - 1] -= pad;
+        }
+        Ok((ids, hist))
+    }
+
+    fn argsort(&self, keys: &[i32]) -> Result<Vec<u32>> {
+        if keys.is_empty() {
+            return Ok(Vec::new());
+        }
+        // Smallest variant whose independent tile fits all keys.
+        let variant = self
+            .sort_variants
+            .iter()
+            .find(|l| sort_capacity(&l.meta) >= keys.len())
+            .or_else(|| self.sort_variants.last())
+            .unwrap();
+        let tile = sort_capacity(&variant.meta);
+        if keys.len() > tile {
+            // Merge path: sort tile-sized chunks on the device, then do a
+            // stable k-way merge of the permutations host-side.
+            return merge_argsort(self, keys, tile);
+        }
+        let mut padded = keys.to_vec();
+        padded.resize(variant.meta.n, i32::MAX);
+        let keys_lit = xla::Literal::vec1(&padded);
+        let (_sorted, perm) = Self::run2(&variant.exe, &[keys_lit])?;
+        // Keep only indices of real keys: pads have index >= len and the
+        // composite (key, index) order puts them after every real entry
+        // with the same key.
+        Ok(perm
+            .into_iter()
+            .filter(|&i| (i as usize) < keys.len())
+            .map(|i| i as u32)
+            .take(keys.len())
+            .collect())
+    }
+
+    fn name(&self) -> &'static str {
+        "xla-pjrt"
+    }
+}
+
+/// Stable k-way merge of device-sorted tiles (for inputs larger than the
+/// biggest artifact tile).
+fn merge_argsort(rt: &XlaRuntime, keys: &[i32], tile: usize) -> Result<Vec<u32>> {
+    let mut runs: Vec<Vec<u32>> = Vec::new();
+    for (t, chunk) in keys.chunks(tile).enumerate() {
+        let perm = rt.argsort(chunk)?;
+        runs.push(perm.into_iter().map(|i| i + (t * tile) as u32).collect());
+    }
+    // K-way merge with (key, global index) ordering for stability.
+    let mut heads = vec![0usize; runs.len()];
+    let mut out = Vec::with_capacity(keys.len());
+    loop {
+        let mut best: Option<(i32, u32, usize)> = None;
+        for (r, run) in runs.iter().enumerate() {
+            if heads[r] < run.len() {
+                let idx = run[heads[r]];
+                let cand = (keys[idx as usize], idx, r);
+                if best.map_or(true, |(bk, bi, _)| (cand.0, cand.1) < (bk, bi)) {
+                    best = Some(cand);
+                }
+            }
+        }
+        match best {
+            Some((_, idx, r)) => {
+                out.push(idx);
+                heads[r] += 1;
+            }
+            None => break,
+        }
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn native_partition_matches_definition() {
+        let nc = NativeCompute;
+        let (ids, hist) = nc.partition(&[5, 0, 99, 42, 10], &[10, 50]).unwrap();
+        assert_eq!(ids, vec![0, 0, 2, 1, 1]);
+        assert_eq!(hist, vec![2, 2, 1]);
+        // Empty bounds: one bucket.
+        let (ids, hist) = nc.partition(&[1, 2], &[]).unwrap();
+        assert_eq!(ids, vec![0, 0]);
+        assert_eq!(hist, vec![2]);
+    }
+
+    #[test]
+    fn native_argsort_is_stable() {
+        let nc = NativeCompute;
+        let perm = nc.argsort(&[3, 1, 3, 0]).unwrap();
+        assert_eq!(perm, vec![3, 1, 0, 2]);
+        assert_eq!(nc.argsort(&[]).unwrap(), Vec::<u32>::new());
+    }
+
+    #[test]
+    fn manifest_parses() {
+        let text = r#"{
+            "partition_n16384_b16": {
+                "entry": "plan_partition",
+                "file": "partition_n16384_b16.hlo.txt",
+                "n": 16384, "buckets": 16,
+                "params": [
+                    {"name": "keys", "shape": [16384], "dtype": "i32"},
+                    {"name": "bounds", "shape": [15], "dtype": "i32"}
+                ],
+                "outputs": []
+            },
+            "sort_n1024": {
+                "entry": "plan_sort",
+                "file": "sort_n1024.hlo.txt",
+                "n": 1024,
+                "params": [{"name": "keys", "shape": [1024], "dtype": "i32"}],
+                "outputs": []
+            }
+        }"#;
+        let metas = parse_manifest(text).unwrap();
+        assert_eq!(metas.len(), 2);
+        let p = metas.iter().find(|m| m.entry == "plan_partition").unwrap();
+        assert_eq!(p.n, 16384);
+        assert_eq!(p.buckets, Some(16));
+        assert_eq!(p.params[1].shape, vec![15]);
+    }
+
+    #[test]
+    fn manifest_rejects_garbage() {
+        assert!(parse_manifest("[]").is_err());
+        assert!(parse_manifest(r#"{"x": {"entry": "plan_sort"}}"#).is_err());
+    }
+
+    // The XLA-backed paths are exercised by rust/tests/integration.rs,
+    // which requires `make artifacts` to have run.
+}

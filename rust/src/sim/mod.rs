@@ -1,0 +1,20 @@
+//! Discrete-event simulation of the paper's testbed (DESIGN.md §5).
+//!
+//! The evaluation ran on fifteen 2008-era servers: two Xeon L5420s,
+//! 16 GB RAM, SATA spinning disks (~87 MB/s measured, Fig. 6), gigabit
+//! ethernet through one ToR switch, HyperDex transactions with a ~3 ms
+//! floor.  None of that hardware exists here, so the benchmark harness
+//! regenerates the figures on a calibrated simulator: closed-loop
+//! clients issuing operations against FIFO resources (disks, NICs, the
+//! metadata service), processed in global time order.
+//!
+//! The simulator is intentionally *conservative*: single-server FIFO
+//! resources, no preemption, deterministic RNG.  It reproduces the
+//! paper's **shapes** (who wins, by what factor, where curves cross),
+//! not its absolute numbers — see EXPERIMENTS.md for the comparison.
+
+pub mod engine;
+pub mod model;
+
+pub use engine::{run_closed_loop, Nanos, ResourceId, Sim};
+pub use model::{ClusterModel, Testbed};

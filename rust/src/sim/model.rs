@@ -1,0 +1,455 @@
+//! Calibrated model of the paper's cluster (§4 Setup) and the I/O paths
+//! of both filesystems.
+//!
+//! Calibration constants come from the paper itself where possible:
+//! 87 MB/s single-disk throughput (Fig. 6), ~3 ms HyperDex transaction
+//! floor (§4.2), 4 MB HDFS readahead, gigabit NICs, twelve storage
+//! servers + three metadata nodes.  The rest (seek time, per-op CPU)
+//! are standard numbers for the hardware generation (SATA 7200 rpm,
+//! 2008 Xeons).
+
+use super::engine::{Nanos, ResourceId, Sim};
+use crate::util::Rng;
+
+const MS: u64 = 1_000_000;
+const US: u64 = 1_000;
+
+/// Calibration constants for the simulated testbed.
+#[derive(Clone, Debug)]
+pub struct Testbed {
+    /// Storage servers (paper: 12).
+    pub servers: usize,
+    /// Metadata nodes (paper: 3 — HyperDex or the HDFS name node host).
+    pub meta_nodes: usize,
+    /// Single-disk streaming bandwidth, bytes/s (Fig. 6: 87 MB/s).
+    pub disk_bw: u64,
+    /// Average seek + rotational latency.
+    pub disk_seek: Nanos,
+    /// Per-endpoint NIC bandwidth, bytes/s (GbE payload: ~117 MB/s).
+    pub nic_bw: u64,
+    /// One-way network latency through the ToR switch.
+    pub net_half_rtt: Nanos,
+    /// HyperDex transaction latency floor (§4.2: ~3 ms).
+    pub meta_txn_floor: Nanos,
+    /// Metadata-server CPU occupancy per transaction.
+    pub meta_txn_service: Nanos,
+    /// Metadata GET (read path) service time.
+    pub meta_get_service: Nanos,
+    /// HDFS name-node op service time.
+    pub namenode_service: Nanos,
+    /// HDFS readahead window (§4.2: 4 MB).
+    pub hdfs_readahead: u64,
+    /// Slice replication factor (paper: 2).
+    pub replication: usize,
+}
+
+impl Default for Testbed {
+    fn default() -> Self {
+        Testbed {
+            servers: 12,
+            meta_nodes: 3,
+            disk_bw: 87 * 1_000_000,
+            disk_seek: 8 * MS,
+            nic_bw: 117 * 1_000_000,
+            net_half_rtt: 100 * US,
+            meta_txn_floor: 3 * MS,
+            meta_txn_service: 200 * US,
+            meta_get_service: 300 * US,
+            namenode_service: 300 * US,
+            hdfs_readahead: 4 * 1024 * 1024,
+            replication: 2,
+        }
+    }
+}
+
+impl Testbed {
+    fn disk_xfer(&self, bytes: u64) -> Nanos {
+        bytes.saturating_mul(1_000_000_000) / self.disk_bw
+    }
+    fn nic_xfer(&self, bytes: u64) -> Nanos {
+        bytes.saturating_mul(1_000_000_000) / self.nic_bw
+    }
+}
+
+/// Resource layout for one simulated cluster + per-client stream state.
+pub struct ClusterModel {
+    pub tb: Testbed,
+    sim: Sim,
+    disks: Vec<ResourceId>,
+    server_nics: Vec<ResourceId>,
+    client_nics: Vec<ResourceId>,
+    meta: Vec<ResourceId>,
+    namenode: ResourceId,
+    rng: Rng,
+    /// Per-client prefetch state for the HDFS readahead model:
+    /// (buffered bytes remaining, completion time of the inflight fetch).
+    readahead: Vec<(u64, Nanos)>,
+    /// Round-robin cursor for placement.
+    cursor: usize,
+}
+
+/// What kind of operation a workload step is.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum OpKind {
+    SeqWrite,
+    RandWrite,
+    SeqRead,
+    RandRead,
+}
+
+impl ClusterModel {
+    pub fn new(tb: Testbed, clients: usize, seed: u64) -> ClusterModel {
+        let mut sim = Sim::new();
+        let disks = (0..tb.servers).map(|_| sim.resource()).collect();
+        let server_nics = (0..tb.servers).map(|_| sim.resource()).collect();
+        let client_nics = (0..clients).map(|_| sim.resource()).collect();
+        let meta = (0..tb.meta_nodes).map(|_| sim.resource()).collect();
+        let namenode = sim.resource();
+        ClusterModel {
+            tb,
+            sim,
+            disks,
+            server_nics,
+            client_nics,
+            meta,
+            namenode,
+            rng: Rng::new(seed),
+            readahead: vec![(0, 0); clients],
+            cursor: 0,
+        }
+    }
+
+    pub fn sim(&self) -> &Sim {
+        &self.sim
+    }
+
+    /// Aggregate throughput for `bytes_total` finishing at `makespan`.
+    pub fn throughput(bytes_total: u64, makespan: Nanos) -> f64 {
+        if makespan == 0 {
+            return 0.0;
+        }
+        bytes_total as f64 / (makespan as f64 / 1e9)
+    }
+
+    fn pick_servers(&mut self, n: usize) -> Vec<usize> {
+        // Consistent-hash spreading ≈ round-robin at this granularity;
+        // replicas are spread half a ring apart (as distinct chain
+        // positions are in practice) so consecutive operations' replica
+        // sets do not systematically collide.
+        let spread = (self.tb.servers / n.max(1)).max(1);
+        let mut out = Vec::with_capacity(n);
+        for i in 0..n {
+            out.push((self.cursor + i * spread) % self.tb.servers);
+        }
+        self.cursor = (self.cursor + 1) % self.tb.servers;
+        out
+    }
+
+    /// One WTF write of `bytes` from `client` (§2.1 write path): slices
+    /// to R servers (client NIC serializes the copies; server NIC + disk
+    /// per replica in parallel), then one metadata transaction.
+    pub fn wtf_write(&mut self, client: usize, bytes: u64, kind: OpKind, now: Nanos) -> Nanos {
+        self.wtf_write_op(client, bytes, kind, now).1
+    }
+
+    /// WTF write returning `(advance, completion)` for pipelined clients:
+    /// the next write can be prepared once the data path drains; the
+    /// metadata commit defines the operation's visible completion.
+    pub fn wtf_write_op(
+        &mut self,
+        client: usize,
+        bytes: u64,
+        kind: OpKind,
+        now: Nanos,
+    ) -> (Nanos, Nanos) {
+        let replicas = self.pick_servers(self.tb.replication);
+        let mut data_done = now;
+        let mut send_at = now;
+        for &s in &replicas {
+            // Client NIC sends each copy in turn.
+            let sent = self
+                .sim
+                .serve(self.client_nics[client], send_at, self.tb.nic_xfer(bytes));
+            send_at = sent;
+            let arrived = sent + self.tb.net_half_rtt;
+            let recvd = self
+                .sim
+                .serve(self.server_nics[s], arrived, self.tb.nic_xfer(bytes));
+            // Backing files are append-only: no seek even for random
+            // file offsets (§2.7 — the paper's key disk-layout point).
+            let written = self.sim.serve(self.disks[s], recvd, self.tb.disk_xfer(bytes));
+            data_done = data_done.max(written);
+        }
+        // Metadata transaction (floor + queueing at one of the meta
+        // nodes).  Random-offset workloads hit a cold working set in
+        // HyperDex: occasional slow transactions fatten the tail (§4.2,
+        // Fig. 10).
+        let mut service = self.tb.meta_txn_service;
+        if kind == OpKind::RandWrite && self.rng.next_below(100) < 4 {
+            service += (5 + self.rng.next_below(20)) * MS;
+        }
+        let meta_node = self.rng.next_below(self.meta.len() as u64) as usize;
+        let committed = self.sim.serve(self.meta[meta_node], data_done, service);
+        // Pipelining: the writer's send buffer is free once the client
+        // NIC drains (`send_at`); visibility still waits for the commit.
+        (send_at, committed + self.tb.meta_txn_floor)
+    }
+
+    /// One WTF read of `bytes` (§2.1 read path): metadata GET, then the
+    /// slice from ONE replica (reads consult a single replica, §4.2).
+    pub fn wtf_read(&mut self, client: usize, bytes: u64, kind: OpKind, now: Nanos) -> Nanos {
+        self.wtf_read_op(client, bytes, kind, now).1
+    }
+
+    /// WTF read returning `(advance, completion)`: a double-buffering
+    /// application (which the paper assumes for batch reads, §4.2) can
+    /// issue its next read as soon as the metadata round-trip finishes.
+    pub fn wtf_read_op(
+        &mut self,
+        client: usize,
+        bytes: u64,
+        kind: OpKind,
+        now: Nanos,
+    ) -> (Nanos, Nanos) {
+        let completion = self.wtf_read_inner(client, bytes, kind, now);
+        let advance = now + self.tb.meta_get_service + self.tb.net_half_rtt;
+        (advance, completion)
+    }
+
+    fn wtf_read_inner(&mut self, client: usize, bytes: u64, kind: OpKind, now: Nanos) -> Nanos {
+        // Metadata GETs are served by any replica in HyperDex's chain and
+        // never contend with transaction commits, so they cost latency
+        // but no shared occupancy.
+        let meta_done = now + self.tb.meta_get_service + self.tb.net_half_rtt;
+        let s = self.pick_servers(1)[0];
+        // Sequential streams keep the disk arm in place; random reads pay
+        // the seek.  Twelve interleaved sequential streams still seek
+        // occasionally — charge a fractional seek per op.
+        let seek = match kind {
+            OpKind::RandRead => self.tb.disk_seek,
+            _ => self.tb.disk_seek / 8,
+        };
+        let read = self
+            .sim
+            .serve(self.disks[s], meta_done, seek + self.tb.disk_xfer(bytes));
+        let sent = self
+            .sim
+            .serve(self.server_nics[s], read, self.tb.nic_xfer(bytes));
+        let recvd = self
+            .sim
+            .serve(self.client_nics[client], sent + self.tb.net_half_rtt, 0);
+        recvd
+    }
+
+    /// One HDFS write (append + hflush): pipelined through the replica
+    /// chain, then a name-node publish.  The pipeline streams, so the
+    /// transfer completes at the bottleneck rate plus per-hop latency.
+    pub fn hdfs_write(&mut self, client: usize, bytes: u64, now: Nanos) -> Nanos {
+        self.hdfs_write_op(client, bytes, now).1
+    }
+
+    /// HDFS write returning `(advance, completion)`; see
+    /// [`Self::wtf_write_op`].
+    pub fn hdfs_write_op(&mut self, client: usize, bytes: u64, now: Nanos) -> (Nanos, Nanos) {
+        let replicas = self.pick_servers(self.tb.replication);
+        // Client NIC: one copy (the chain forwards).
+        let sent = self
+            .sim
+            .serve(self.client_nics[client], now, self.tb.nic_xfer(bytes));
+        // The datanode chain STREAMS: each hop forwards packets while
+        // still receiving, so hop N+1's NIC transfer starts one packet
+        // after hop N's, and every replica's disk write overlaps with
+        // the transfer.  Completion is the max over replica disks.
+        let mut nic_free = sent + self.tb.net_half_rtt;
+        let mut done = sent;
+        for &s in &replicas {
+            let nic_done = self
+                .sim
+                .serve(self.server_nics[s], nic_free, self.tb.nic_xfer(bytes));
+            let disk_done = self
+                .sim
+                .serve(self.disks[s], nic_done, self.tb.disk_xfer(bytes));
+            // Next hop starts as soon as this hop begins forwarding
+            // (≈ one packet after its NIC transfer starts).
+            nic_free = nic_done - self.tb.nic_xfer(bytes) + self.tb.net_half_rtt / 4
+                + self.tb.nic_xfer(bytes.min(64 * 1024));
+            nic_free = nic_free.max(sent);
+            done = done.max(disk_done);
+        }
+        // hflush: name-node visibility publish.
+        let published = self.sim.serve(self.namenode, done, self.tb.namenode_service);
+        (sent, published + self.tb.net_half_rtt)
+    }
+
+    /// One HDFS stream read with readahead: ops served from the prefetch
+    /// buffer are nearly free; refills fetch `readahead` bytes and are
+    /// double-buffered (issued one window ahead).
+    pub fn hdfs_seq_read_op(&mut self, client: usize, bytes: u64, now: Nanos) -> (Nanos, Nanos) {
+        let completion = self.hdfs_seq_read(client, bytes, now);
+        (now + self.tb.net_half_rtt, completion)
+    }
+
+    pub fn hdfs_seq_read(&mut self, client: usize, bytes: u64, now: Nanos) -> Nanos {
+        let (mut credit, fetch_done) = self.readahead[client];
+        if credit < bytes {
+            // Wait for the inflight window, then issue the next one.
+            let window = self.tb.hdfs_readahead.max(bytes);
+            let start = now.max(fetch_done);
+            let done = self.fetch_window(client, window, start);
+            credit += window;
+            // Double-buffer: immediately issue the next window too.
+            let next_done = self.fetch_window(client, window, done);
+            self.readahead[client] = (credit + window - bytes, next_done);
+            return done.max(now) + self.tb.nic_xfer(bytes);
+        }
+        self.readahead[client] = (credit - bytes, fetch_done.max(now));
+        // Buffered: client-side copy only.
+        now + self.tb.nic_xfer(bytes) / 4
+    }
+
+    /// One HDFS positional read (pread): no readahead reuse across ops in
+    /// the random benchmark, but the server still fetches a full
+    /// readahead window from disk (§4.2: "the readahead ... adds
+    /// overhead to HDFS that WTF does not incur").
+    pub fn hdfs_rand_read(&mut self, client: usize, bytes: u64, now: Nanos) -> Nanos {
+        let window = bytes.max(self.tb.hdfs_readahead);
+        let s = self.pick_servers(1)[0];
+        let read = self.sim.serve(
+            self.disks[s],
+            now + self.tb.net_half_rtt,
+            self.tb.disk_seek + self.tb.disk_xfer(window),
+        );
+        // Only the requested bytes cross the network.
+        let sent = self
+            .sim
+            .serve(self.server_nics[s], read, self.tb.nic_xfer(bytes));
+        self.sim
+            .serve(self.client_nics[client], sent + self.tb.net_half_rtt, 0)
+    }
+
+    fn fetch_window(&mut self, client: usize, window: u64, at: Nanos) -> Nanos {
+        let s = self.pick_servers(1)[0];
+        let read = self.sim.serve(
+            self.disks[s],
+            at,
+            self.tb.disk_seek / 8 + self.tb.disk_xfer(window),
+        );
+        let sent = self
+            .sim
+            .serve(self.server_nics[s], read, self.tb.nic_xfer(window));
+        let _ = client;
+        sent + self.tb.net_half_rtt
+    }
+
+    /// Reset per-client stream state (between benchmark phases).
+    pub fn reset_streams(&mut self) {
+        for s in &mut self.readahead {
+            *s = (0, 0);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::engine::{run_closed_loop, run_pipelined};
+    use super::*;
+
+    const MB: u64 = 1_000_000;
+
+    fn run_writes(
+        clients: usize,
+        ops: usize,
+        bytes: u64,
+        kind: OpKind,
+        hdfs: bool,
+    ) -> (f64, Vec<Nanos>) {
+        let mut model = ClusterModel::new(Testbed::default(), clients, 42);
+        let (lat, makespan) = run_pipelined(clients, ops, |c, _, now| {
+            if hdfs {
+                model.hdfs_write_op(c, bytes, now)
+            } else {
+                model.wtf_write_op(c, bytes, kind, now)
+            }
+        });
+        let total = (clients * ops) as u64 * bytes;
+        (ClusterModel::throughput(total, makespan), lat)
+    }
+
+    #[test]
+    fn both_systems_deliver_paper_scale_write_throughput() {
+        // Fig. 7: ~400 MB/s goodput for twelve 4 MB writers.
+        let (wtf, _) = run_writes(12, 40, 4 * MB, OpKind::SeqWrite, false);
+        let (hdfs, _) = run_writes(12, 40, 4 * MB, OpKind::SeqWrite, true);
+        assert!(
+            wtf > 250e6 && wtf < 700e6,
+            "wtf seq-write throughput {wtf:.0}"
+        );
+        assert!(
+            hdfs > 250e6 && hdfs < 700e6,
+            "hdfs seq-write throughput {hdfs:.0}"
+        );
+        // Same ballpark (paper: WTF ≈ 97% of HDFS at ≥1 MB).
+        let ratio = wtf / hdfs;
+        assert!((0.6..1.4).contains(&ratio), "ratio {ratio}");
+    }
+
+    #[test]
+    fn small_writes_cost_wtf_more_than_hdfs() {
+        // Fig. 7/8: the 3 ms metadata floor dominates 256 kB writes.
+        let (wtf, _) = run_writes(12, 60, 256 * 1024, OpKind::SeqWrite, false);
+        let (hdfs, _) = run_writes(12, 60, 256 * 1024, OpKind::SeqWrite, true);
+        assert!(wtf < hdfs, "wtf {wtf:.0} should trail hdfs {hdfs:.0} at 256 kB");
+        assert!(wtf / hdfs > 0.5, "but not catastrophically: {}", wtf / hdfs);
+    }
+
+    #[test]
+    fn random_writes_within_2x_of_sequential() {
+        // Fig. 9: random ≥ half of sequential, converging by 8 MB.
+        let (seq_small, _) = run_writes(12, 40, 1 * MB, OpKind::SeqWrite, false);
+        let (rand_small, _) = run_writes(12, 40, 1 * MB, OpKind::RandWrite, false);
+        assert!(rand_small * 2.0 >= seq_small, "{rand_small} vs {seq_small}");
+        let (seq_big, _) = run_writes(12, 30, 8 * MB, OpKind::SeqWrite, false);
+        let (rand_big, _) = run_writes(12, 30, 8 * MB, OpKind::RandWrite, false);
+        assert!(rand_big / seq_big > 0.85, "{}", rand_big / seq_big);
+    }
+
+    #[test]
+    fn random_reads_favor_wtf() {
+        // Fig. 12: HDFS wastes a readahead window per small random read.
+        let clients = 12;
+        let bytes = 1 * MB;
+        let mut model = ClusterModel::new(Testbed::default(), clients, 7);
+        let (_, wtf_makespan) = run_closed_loop(clients, 30, |c, _, now| {
+            model.wtf_read(c, bytes, OpKind::RandRead, now)
+        });
+        let mut model2 = ClusterModel::new(Testbed::default(), clients, 7);
+        let (_, hdfs_makespan) =
+            run_closed_loop(clients, 30, |c, _, now| model2.hdfs_rand_read(c, bytes, now));
+        let total = (clients * 30) as u64 * bytes;
+        let wtf = ClusterModel::throughput(total, wtf_makespan);
+        let hdfs = ClusterModel::throughput(total, hdfs_makespan);
+        assert!(
+            wtf > 1.5 * hdfs,
+            "wtf {wtf:.0} should beat hdfs {hdfs:.0} ~2.4x on 1 MB random reads"
+        );
+    }
+
+    #[test]
+    fn sequential_reads_are_comparable() {
+        // Fig. 11: WTF ≥ 80% of HDFS on streaming reads.
+        let clients = 12;
+        let bytes = 4 * MB;
+        let mut model = ClusterModel::new(Testbed::default(), clients, 7);
+        let (_, wtf_mk) = run_closed_loop(clients, 40, |c, _, now| {
+            model.wtf_read(c, bytes, OpKind::SeqRead, now)
+        });
+        let mut model2 = ClusterModel::new(Testbed::default(), clients, 7);
+        let (_, hdfs_mk) =
+            run_closed_loop(clients, 40, |c, _, now| model2.hdfs_seq_read(c, bytes, now));
+        let total = (clients * 40) as u64 * bytes;
+        let wtf = ClusterModel::throughput(total, wtf_mk);
+        let hdfs = ClusterModel::throughput(total, hdfs_mk);
+        assert!(wtf / hdfs > 0.65, "wtf/hdfs = {}", wtf / hdfs);
+        assert!(wtf / hdfs < 1.5, "wtf/hdfs = {}", wtf / hdfs);
+    }
+}

@@ -1,0 +1,356 @@
+//! Cluster-wide garbage collection (§2.8).
+//!
+//! Storage servers outsource all bookkeeping to the metadata store, so
+//! they cannot know locally which bytes are garbage.  The GC coordinator
+//! periodically scans the entire filesystem metadata, builds the in-use
+//! slice list for each storage server, and hands each server the *live*
+//! extents to keep; the server sparse-rewrites its backing files around
+//! them (cheapest for the most-garbaged files).
+//!
+//! Safety against the create-then-reference race: a byte range is only
+//! collected when it was absent from **two consecutive scans** — a slice
+//! created between scans is still protected by the previous scan's
+//! "everything newer than my horizon is live" rule, implemented here by
+//! keeping each backing's append horizon per scan and treating bytes past
+//! the horizon as live.
+
+use crate::error::Result;
+use crate::meta::MetaStore;
+use crate::types::{ServerId, SliceData, Space, Value};
+use std::collections::HashMap;
+use std::sync::Arc;
+
+use super::server::StorageCluster;
+
+/// Per-run GC accounting — Figure 15's raw numbers.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct GcReport {
+    pub bytes_rewritten: u64,
+    pub bytes_reclaimed: u64,
+    pub servers_collected: u32,
+}
+
+/// Sorted, disjoint `(offset, len)` extents keyed by `(server, backing)`.
+pub type InUseMap = HashMap<(ServerId, u32), Vec<(u64, u64)>>;
+
+/// Merge raw extents into sorted, disjoint form.
+pub fn normalize_extents(mut extents: Vec<(u64, u64)>) -> Vec<(u64, u64)> {
+    extents.retain(|(_, l)| *l > 0);
+    extents.sort_unstable();
+    let mut out: Vec<(u64, u64)> = Vec::with_capacity(extents.len());
+    for (off, len) in extents {
+        match out.last_mut() {
+            Some((loff, llen)) if off <= *loff + *llen => {
+                let end = (off + len).max(*loff + *llen);
+                *llen = end - *loff;
+            }
+            _ => out.push((off, len)),
+        }
+    }
+    out
+}
+
+/// Union of two normalized extent lists.
+pub fn union_extents(a: &[(u64, u64)], b: &[(u64, u64)]) -> Vec<(u64, u64)> {
+    let mut all = a.to_vec();
+    all.extend_from_slice(b);
+    normalize_extents(all)
+}
+
+/// Scan the region space and build the in-use map (§2.8 first phase).
+/// The paper stores these lists in a reserved WTF directory so servers
+/// read them through the client library; in-process we hand the map to
+/// the servers directly (DESIGN.md §5).
+pub fn scan_in_use(meta: &MetaStore) -> InUseMap {
+    scan_in_use_with_spills(meta, None)
+}
+
+/// [`scan_in_use`] that also decodes tier-2 spill slices (fetched from
+/// `cluster`) so the data they reference stays protected.
+pub fn scan_in_use_with_spills(meta: &MetaStore, cluster: Option<&StorageCluster>) -> InUseMap {
+    // Live inodes: regions belonging to unlinked files are garbage too
+    // (§2.8: "as an application overwrites or deletes files, slices
+    // become unused").  Region keys embed the inode id.
+    let live_inodes: std::collections::HashSet<String> = meta
+        .scan_space(Space::Inode)
+        .into_iter()
+        .map(|(k, _)| k.key)
+        .collect();
+    let mut raw: HashMap<(ServerId, u32), Vec<(u64, u64)>> = HashMap::new();
+    for (key, value) in meta.scan_space(Space::Region) {
+        let Value::Region(region) = value else {
+            continue;
+        };
+        let inode_part = key.key.split('#').next().unwrap_or("");
+        if !live_inodes.contains(inode_part) {
+            continue; // orphaned region: everything it points at is dead
+        }
+        // The tier-2 spill slice itself is in use — and so is every
+        // slice the spilled entries reference, which requires decoding
+        // the spill payload.
+        if let Some(replicas) = &region.spill {
+            for p in replicas {
+                raw.entry((p.server, p.backing))
+                    .or_default()
+                    .push((p.offset, p.len));
+            }
+            if let Some(cluster) = cluster {
+                for p in replicas {
+                    let Ok(server) = cluster.get(p.server) else { continue };
+                    let Ok(bytes) = server.retrieve_slice(p) else { continue };
+                    if let Ok(entries) = crate::client::spill::decode_entries(&bytes) {
+                        for e in entries {
+                            if let SliceData::Stored(rs) = e.data {
+                                for r in rs {
+                                    raw.entry((r.server, r.backing))
+                                        .or_default()
+                                        .push((r.offset, r.len));
+                                }
+                            }
+                        }
+                        break; // one replica suffices
+                    }
+                }
+            }
+        }
+        for entry in &region.entries {
+            if let SliceData::Stored(replicas) = &entry.data {
+                for p in replicas {
+                    raw.entry((p.server, p.backing))
+                        .or_default()
+                        .push((p.offset, p.len));
+                }
+            }
+        }
+    }
+    raw.into_iter()
+        .map(|(k, v)| (k, normalize_extents(v)))
+        .collect()
+}
+
+/// The periodic GC driver.
+#[derive(Debug, Default)]
+pub struct GcCoordinator {
+    /// Previous scan's in-use map (two-consecutive-scan rule).
+    previous: Option<InUseMap>,
+    /// Append horizon per (server, backing) at the previous scan: bytes
+    /// written after it are unconditionally live this round.
+    previous_horizon: HashMap<(ServerId, u32), u64>,
+}
+
+impl GcCoordinator {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Run one GC round: scan metadata, protect anything live in either
+    /// of the last two scans or written since the previous scan, and
+    /// sparse-rewrite every backing file on every server.
+    pub fn run(&mut self, meta: &MetaStore, cluster: &StorageCluster) -> Result<GcReport> {
+        let current = scan_in_use_with_spills(meta, Some(cluster));
+        let mut report = GcReport::default();
+
+        // First scan ever: record state, collect nothing (a slice created
+        // before this scan might be referenced after it).
+        let Some(previous) = self.previous.take() else {
+            self.record_horizon(cluster, current);
+            return Ok(report);
+        };
+
+        for server in cluster.iter() {
+            let sid = server.id();
+            let mut live: HashMap<u32, Vec<(u64, u64)>> = HashMap::new();
+            for backing in 0..server.num_backings() {
+                let cur = current
+                    .get(&(sid, backing))
+                    .cloned()
+                    .unwrap_or_default();
+                let prev = previous
+                    .get(&(sid, backing))
+                    .cloned()
+                    .unwrap_or_default();
+                let mut keep = union_extents(&cur, &prev);
+                // Bytes appended after the previous scan's horizon are
+                // live no matter what the metadata says (they may be
+                // referenced by a transaction racing this scan).
+                let horizon = self
+                    .previous_horizon
+                    .get(&(sid, backing))
+                    .copied()
+                    .unwrap_or(0);
+                let end = server_backing_len(server, backing);
+                if end > horizon {
+                    keep = union_extents(&keep, &[(horizon, end - horizon)]);
+                }
+                live.insert(backing, keep);
+            }
+            let (rewritten, reclaimed) = server.gc_backings(&live)?;
+            report.bytes_rewritten += rewritten;
+            report.bytes_reclaimed += reclaimed;
+            if reclaimed > 0 {
+                report.servers_collected += 1;
+            }
+        }
+        self.record_horizon(cluster, current);
+        Ok(report)
+    }
+
+    fn record_horizon(&mut self, cluster: &StorageCluster, scan: InUseMap) {
+        self.previous_horizon.clear();
+        for server in cluster.iter() {
+            for backing in 0..server.num_backings() {
+                self.previous_horizon.insert(
+                    (server.id(), backing),
+                    server_backing_len(server, backing),
+                );
+            }
+        }
+        self.previous = Some(scan);
+    }
+}
+
+fn server_backing_len(server: &Arc<crate::storage::StorageServer>, backing: u32) -> u64 {
+    server.backing_len(backing)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::meta::{Commit, MetaOp};
+    use crate::net::LinkModel;
+    use crate::storage::StorageServer;
+    use crate::types::{Key, Placement, RegionEntry, RegionId};
+
+    #[test]
+    fn normalize_merges_overlaps_and_adjacency() {
+        assert_eq!(
+            normalize_extents(vec![(10, 5), (0, 5), (5, 5), (30, 2), (12, 10)]),
+            vec![(0, 22), (30, 2)]
+        );
+        assert_eq!(normalize_extents(vec![(1, 0)]), vec![]);
+    }
+
+    #[test]
+    fn union_is_commutative_and_merged() {
+        let a = vec![(0u64, 10u64)];
+        let b = vec![(5u64, 10u64), (100, 1)];
+        assert_eq!(union_extents(&a, &b), vec![(0, 15), (100, 1)]);
+        assert_eq!(union_extents(&a, &b), union_extents(&b, &a));
+    }
+
+    fn cluster_with_one_server() -> (MetaStore, StorageCluster) {
+        let meta = MetaStore::new(4, 1);
+        let server =
+            Arc::new(StorageServer::new(0, None, 2, LinkModel::instant()).unwrap());
+        (meta, StorageCluster::new(vec![server]))
+    }
+
+    fn reference_in_meta(meta: &MetaStore, region: RegionId, ptr: crate::types::SlicePtr) {
+        // The region's inode must exist or the scan treats it as orphaned.
+        let _ = meta.commit(&Commit {
+            reads: vec![],
+            ops: vec![MetaOp::Put {
+                key: Key::inode(region.inode),
+                value: crate::types::Value::Inode(crate::types::Inode::new_file(
+                    region.inode,
+                    0o644,
+                    1,
+                )),
+            }],
+        });
+        let c = Commit {
+            reads: vec![],
+            ops: vec![MetaOp::RegionAppend {
+                key: Key::region(region),
+                entry: RegionEntry {
+                    placement: Placement::At(0),
+                    len: ptr.len,
+                    data: SliceData::Stored(vec![ptr]),
+                },
+            }],
+        };
+        meta.commit(&c).unwrap();
+    }
+
+    #[test]
+    fn unreferenced_slices_collected_after_two_scans() {
+        let (meta, cluster) = cluster_with_one_server();
+        let server = cluster.get(0).unwrap().clone();
+        let region = RegionId::new(1, 0);
+        let live = server.create_slice(&[1u8; 128], region).unwrap();
+        let _dead = server.create_slice(&[2u8; 256], region).unwrap();
+        reference_in_meta(&meta, region, live);
+
+        let mut gc = GcCoordinator::new();
+        // Scan 1: records state, collects nothing.
+        let r1 = gc.run(&meta, &cluster).unwrap();
+        assert_eq!(r1.bytes_reclaimed, 0);
+        // Scan 2: the dead slice was absent from both scans AND below the
+        // horizon -> collected.
+        let r2 = gc.run(&meta, &cluster).unwrap();
+        assert_eq!(r2.bytes_reclaimed, 256);
+        // The live slice still reads back.
+        assert_eq!(
+            server.retrieve_slice(&live).unwrap(),
+            vec![1u8; 128]
+        );
+    }
+
+    #[test]
+    fn fresh_writes_survive_the_race_window() {
+        let (meta, cluster) = cluster_with_one_server();
+        let server = cluster.get(0).unwrap().clone();
+        let region = RegionId::new(1, 0);
+        let mut gc = GcCoordinator::new();
+        gc.run(&meta, &cluster).unwrap(); // scan 1
+
+        // Created AFTER scan 1, referenced only after scan 2 runs — the
+        // exact race §2.8 defends against.
+        let racing = server.create_slice(&[3u8; 64], region).unwrap();
+        let r2 = gc.run(&meta, &cluster).unwrap();
+        assert_eq!(r2.bytes_reclaimed, 0, "racing slice must survive");
+        reference_in_meta(&meta, region, racing);
+        assert_eq!(server.retrieve_slice(&racing).unwrap(), vec![3u8; 64]);
+    }
+
+    #[test]
+    fn scan_in_use_collects_all_replicas() {
+        let (meta, cluster) = cluster_with_one_server();
+        let server = cluster.get(0).unwrap().clone();
+        let region = RegionId::new(1, 0);
+        let a = server.create_slice(&[1u8; 10], region).unwrap();
+        let b = server.create_slice(&[1u8; 10], region).unwrap();
+        // The inode must exist or the region counts as orphaned.
+        reference_in_meta(&meta, region, a);
+        let c = Commit {
+            reads: vec![],
+            ops: vec![MetaOp::RegionAppend {
+                key: Key::region(region),
+                entry: RegionEntry {
+                    placement: Placement::At(10),
+                    len: 10,
+                    data: SliceData::Stored(vec![b]),
+                },
+            }],
+        };
+        meta.commit(&c).unwrap();
+        let in_use = scan_in_use(&meta);
+        let extents = &in_use[&(0, a.backing)];
+        assert_eq!(extents.iter().map(|(_, l)| l).sum::<u64>(), 20);
+    }
+
+    #[test]
+    fn empty_metadata_collects_everything_old() {
+        let (meta, cluster) = cluster_with_one_server();
+        let server = cluster.get(0).unwrap().clone();
+        server
+            .create_slice(&[0u8; 512], RegionId::new(1, 0))
+            
+            .unwrap();
+        let mut gc = GcCoordinator::new();
+        gc.run(&meta, &cluster).unwrap();
+        let r = gc.run(&meta, &cluster).unwrap();
+        assert_eq!(r.bytes_reclaimed, 512);
+        let _ = meta; // metadata never referenced the slice
+    }
+}

@@ -1,0 +1,27 @@
+//! Storage servers: where slice bytes live.
+//!
+//! The file-slicing abstraction makes these servers radically simple
+//! (§2.2): they know nothing about files, offsets, or concurrency — the
+//! complete API is *create slice* and *retrieve slice*.  A server owns a
+//! directory of append-only backing files; a created slice's location is
+//! chosen by the server and only then returned to the writer inside a
+//! self-contained [`SlicePtr`](crate::types::SlicePtr).
+//!
+//! * [`backing`] — append-only backing files, pread-style retrieval,
+//!   sparse-rewrite garbage collection.
+//! * [`server`] — the two-call server API + locality-aware backing-file
+//!   selection (§2.7).
+//! * [`placement`] — the consistent-hash ring that routes a region's
+//!   writes to the same servers (§2.7).
+//! * [`gc`] — the cluster-wide three-tier GC protocol (§2.8): scan
+//!   metadata for in-use slices, two-consecutive-scan safety rule,
+//!   most-garbage-first collection order.
+
+pub mod backing;
+pub mod gc;
+pub mod placement;
+pub mod server;
+
+pub use gc::{GcCoordinator, GcReport};
+pub use placement::Ring;
+pub use server::{StorageCluster, StorageServer};

@@ -1,0 +1,188 @@
+//! Locality-aware slice placement (§2.7).
+//!
+//! Two *different* hash functions drive placement, exactly as the paper
+//! prescribes:
+//!
+//! 1. A consistent-hash ring across storage servers maps a metadata
+//!    region to the servers holding its slices — so sequential writes to
+//!    one region land on the same server, and their slices end up
+//!    adjacent on disk (fusable by compaction).
+//! 2. Inside each server, a *different* hash maps the region to one of
+//!    the server's backing files — so two regions that collide onto one
+//!    server are unlikely to interleave within one backing file.
+
+use crate::types::{RegionId, ServerId};
+
+/// Consistent-hash ring over the storage servers ([Karger et al. 1997]).
+#[derive(Clone, Debug)]
+pub struct Ring {
+    /// `(point, server)` sorted by point.
+    points: Vec<(u64, ServerId)>,
+    servers: Vec<ServerId>,
+}
+
+fn hash64(seed: u64, bytes: &[u8]) -> u64 {
+    // FNV-1a with a seed mixed in; stable across processes.
+    let mut h = 0xcbf29ce484222325u64 ^ seed.wrapping_mul(0x9e3779b97f4a7c15);
+    for &b in bytes {
+        h ^= u64::from(b);
+        h = h.wrapping_mul(0x100000001b3);
+    }
+    // Final avalanche (splitmix64 tail) for well-spread ring points.
+    h ^= h >> 30;
+    h = h.wrapping_mul(0xbf58476d1ce4e5b9);
+    h ^= h >> 27;
+    h = h.wrapping_mul(0x94d049bb133111eb);
+    h ^ (h >> 31)
+}
+
+/// Ring hash: used ACROSS servers.
+fn region_point(region: RegionId) -> u64 {
+    hash64(0x5eed_0001, region.key().as_bytes())
+}
+
+/// Backing-file hash: a DIFFERENT function, used WITHIN a server.
+pub fn backing_of(region: RegionId, server: ServerId, num_backings: u32) -> u32 {
+    let mut buf = region.key().into_bytes();
+    buf.extend_from_slice(&server.to_le_bytes());
+    (hash64(0x5eed_0002, &buf) % u64::from(num_backings.max(1))) as u32
+}
+
+impl Ring {
+    /// Build a ring with `vnodes` virtual nodes per server.
+    pub fn new(servers: &[ServerId], vnodes: u32) -> Self {
+        let mut points = Vec::with_capacity(servers.len() * vnodes as usize);
+        for &s in servers {
+            for v in 0..vnodes.max(1) {
+                let mut key = [0u8; 8];
+                key[..4].copy_from_slice(&s.to_le_bytes());
+                key[4..].copy_from_slice(&v.to_le_bytes());
+                points.push((hash64(0x5eed_0003, &key), s));
+            }
+        }
+        points.sort_unstable();
+        let mut servers = servers.to_vec();
+        servers.sort_unstable();
+        servers.dedup();
+        Ring { points, servers }
+    }
+
+    /// The `n` distinct servers responsible for `region`, in preference
+    /// order (primary first).  `n` is capped at the number of servers.
+    pub fn servers_for(&self, region: RegionId, n: usize) -> Vec<ServerId> {
+        let n = n.min(self.servers.len());
+        if n == 0 || self.points.is_empty() {
+            return Vec::new();
+        }
+        let point = region_point(region);
+        let start = self
+            .points
+            .partition_point(|(p, _)| *p < point)
+            .min(self.points.len().saturating_sub(1));
+        let mut out = Vec::with_capacity(n);
+        for i in 0..self.points.len() {
+            let (_, s) = self.points[(start + i) % self.points.len()];
+            if !out.contains(&s) {
+                out.push(s);
+                if out.len() == n {
+                    break;
+                }
+            }
+        }
+        out
+    }
+
+    pub fn servers(&self) -> &[ServerId] {
+        &self.servers
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.servers.is_empty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::collections::HashMap;
+
+    fn ring(n: u32) -> Ring {
+        Ring::new(&(0..n).collect::<Vec<_>>(), 64)
+    }
+
+    #[test]
+    fn placement_is_deterministic() {
+        let r = ring(12);
+        let a = r.servers_for(RegionId::new(42, 7), 2);
+        let b = r.servers_for(RegionId::new(42, 7), 2);
+        assert_eq!(a, b);
+        assert_eq!(a.len(), 2);
+        assert_ne!(a[0], a[1]);
+    }
+
+    #[test]
+    fn same_region_same_servers_different_regions_spread() {
+        let r = ring(12);
+        let mut primaries: HashMap<ServerId, usize> = HashMap::new();
+        for inode in 0..50u64 {
+            for idx in 0..20u32 {
+                let p = r.servers_for(RegionId::new(inode, idx), 1)[0];
+                *primaries.entry(p).or_default() += 1;
+            }
+        }
+        // Every server should get a reasonable share of 1000 regions.
+        assert_eq!(primaries.len(), 12);
+        for (_, count) in primaries {
+            assert!(count > 20, "placement badly skewed: {count}");
+        }
+    }
+
+    #[test]
+    fn replicas_are_distinct_and_capped() {
+        let r = ring(3);
+        let s = r.servers_for(RegionId::new(1, 0), 5);
+        assert_eq!(s.len(), 3);
+        let mut d = s.clone();
+        d.sort_unstable();
+        d.dedup();
+        assert_eq!(d.len(), 3);
+    }
+
+    #[test]
+    fn ring_membership_change_moves_few_regions() {
+        let before = ring(12);
+        let servers: Vec<ServerId> = (0..13).collect();
+        let after = Ring::new(&servers, 64);
+        let total = 1000;
+        let mut moved = 0;
+        for i in 0..total {
+            let region = RegionId::new(i, 0);
+            if before.servers_for(region, 1) != after.servers_for(region, 1) {
+                moved += 1;
+            }
+        }
+        // Consistent hashing: ~1/13 of regions move; allow generous slack.
+        assert!(moved < total / 4, "too many regions moved: {moved}");
+        assert!(moved > 0);
+    }
+
+    #[test]
+    fn backing_hash_differs_from_ring_hash() {
+        // Regions placed on the same server should spread across backings.
+        let r = ring(4);
+        let mut backings = std::collections::HashSet::new();
+        for inode in 0..200u64 {
+            let region = RegionId::new(inode, 0);
+            let primary = r.servers_for(region, 1)[0];
+            backings.insert(backing_of(region, primary, 4));
+        }
+        assert_eq!(backings.len(), 4);
+    }
+
+    #[test]
+    fn empty_ring_yields_nothing() {
+        let r = Ring::new(&[], 8);
+        assert!(r.servers_for(RegionId::new(1, 0), 2).is_empty());
+        assert!(r.is_empty());
+    }
+}

@@ -1,0 +1,330 @@
+//! The storage server: the complete API is two calls (§2.2).
+//!
+//! * `create_slice(data, region_hint)` — write bytes to disk, *then*
+//!   return a self-contained [`SlicePtr`].  The server has total freedom
+//!   in where it puts the bytes because the pointer is minted after the
+//!   write; here it uses the region hint to pick a backing file so writes
+//!   to one region stay sequential on disk (§2.7).
+//! * `retrieve_slice(ptr)` — follow the pointer: open the named backing
+//!   file, positional-read `len` bytes.
+//!
+//! Servers retain no information about the filesystem structure; all
+//! bookkeeping is outsourced to the metadata store.
+
+use super::backing::BackingFile;
+use super::placement::backing_of;
+use crate::error::{Error, Result};
+use crate::metrics::Metrics;
+use crate::net::LinkModel;
+use crate::types::{RegionId, ServerId, SlicePtr};
+use std::collections::HashMap;
+use std::path::PathBuf;
+use std::sync::Arc;
+
+/// One storage server.
+#[derive(Debug)]
+pub struct StorageServer {
+    id: ServerId,
+    /// Keeps a tempdir alive when the server owns its directory.
+    _tempdir: Option<crate::util::TempDir>,
+    dir: PathBuf,
+    backings: Vec<Arc<BackingFile>>,
+    metrics: Metrics,
+    link: LinkModel,
+}
+
+impl StorageServer {
+    /// Create a server over `dir` (a tempdir when `None`) with
+    /// `num_backings` backing files.
+    pub fn new(
+        id: ServerId,
+        dir: Option<PathBuf>,
+        num_backings: u32,
+        link: LinkModel,
+    ) -> Result<Self> {
+        let (tempdir, dir) = match dir {
+            Some(d) => {
+                std::fs::create_dir_all(&d)?;
+                (None, d)
+            }
+            None => {
+                let t = crate::util::TempDir::new(&format!("wtf-storage-{id}"))?;
+                let p = t.path().to_path_buf();
+                (Some(t), p)
+            }
+        };
+        let backings = (0..num_backings.max(1))
+            .map(|b| BackingFile::create(&dir, b).map(Arc::new))
+            .collect::<Result<Vec<_>>>()?;
+        Ok(StorageServer {
+            id,
+            _tempdir: tempdir,
+            dir,
+            backings,
+            metrics: Metrics::new(),
+            link,
+        })
+    }
+
+    pub fn id(&self) -> ServerId {
+        self.id
+    }
+
+    pub fn metrics(&self) -> &Metrics {
+        &self.metrics
+    }
+
+    pub fn dir(&self) -> &PathBuf {
+        &self.dir
+    }
+
+    pub fn num_backings(&self) -> u32 {
+        self.backings.len() as u32
+    }
+
+    /// Create a slice holding `data`; the `hint` names the metadata
+    /// region this write belongs to, steering backing-file selection for
+    /// locality (§2.7).
+    pub fn create_slice(&self, data: &[u8], hint: RegionId) -> Result<SlicePtr> {
+        self.link.charge(data.len() as u64);
+        let backing = &self.backings
+            [backing_of(hint, self.id, self.backings.len() as u32) as usize];
+        let offset = backing.append(data)?;
+        self.metrics.add_bytes_written(data.len() as u64);
+        self.metrics.add_ops_written(1);
+        Ok(SlicePtr {
+            server: self.id,
+            backing: backing.id,
+            offset,
+            len: data.len() as u64,
+        })
+    }
+
+    /// Retrieve the bytes a pointer refers to.
+    pub fn retrieve_slice(&self, ptr: &SlicePtr) -> Result<Vec<u8>> {
+        if ptr.server != self.id {
+            return Err(Error::InvalidArgument(format!(
+                "slice {ptr:?} routed to server {}",
+                self.id
+            )));
+        }
+        let backing = self
+            .backings
+            .get(ptr.backing as usize)
+            .ok_or(Error::SliceNotFound {
+                server: ptr.server,
+                backing: ptr.backing,
+                offset: ptr.offset,
+                len: ptr.len,
+            })?;
+        let data = backing
+            .read_at(ptr.offset, ptr.len)
+            .map_err(|_| Error::SliceNotFound {
+                server: ptr.server,
+                backing: ptr.backing,
+                offset: ptr.offset,
+                len: ptr.len,
+            })?;
+        self.link.charge(data.len() as u64);
+        self.metrics.add_bytes_read(ptr.len);
+        self.metrics.add_ops_read(1);
+        Ok(data)
+    }
+
+    /// Logical length of one backing file (0 for unknown ids).
+    pub fn backing_len(&self, backing: u32) -> u64 {
+        self.backings
+            .get(backing as usize)
+            .map(|b| b.len())
+            .unwrap_or(0)
+    }
+
+    /// Total bytes currently occupying the logical end of all backings.
+    pub fn total_len(&self) -> u64 {
+        self.backings.iter().map(|b| b.len()).sum()
+    }
+
+    /// Total bytes ever appended across all backings.
+    pub fn total_appended(&self) -> u64 {
+        self.backings.iter().map(|b| b.appended()).sum()
+    }
+
+    /// Sparse-rewrite every backing file keeping only `live` extents;
+    /// used by the GC coordinator (§2.8).  `live` maps backing id →
+    /// sorted disjoint `(offset, len)` extents.  Returns
+    /// `(bytes_rewritten, bytes_reclaimed)` totals.
+    pub fn gc_backings(&self, live: &HashMap<u32, Vec<(u64, u64)>>) -> Result<(u64, u64)> {
+        // Most-garbage-first: the file with the least live data reclaims
+        // the most bytes per byte of rewrite I/O (§2.8).
+        let empty: Vec<(u64, u64)> = Vec::new();
+        let mut order: Vec<&Arc<BackingFile>> = self.backings.iter().collect();
+        order.sort_by_key(|b| {
+            let live_bytes: u64 = live
+                .get(&b.id)
+                .unwrap_or(&empty)
+                .iter()
+                .map(|(_, l)| *l)
+                .sum();
+            live_bytes
+        });
+        let mut rewritten = 0;
+        let mut reclaimed = 0;
+        for b in order {
+            let extents = live.get(&b.id).unwrap_or(&empty);
+            let (rw, rc) = b.sparse_rewrite(extents)?;
+            rewritten += rw;
+            reclaimed += rc;
+            self.metrics.add_gc_rewritten(rw);
+            self.metrics.add_gc_reclaimed(rc);
+        }
+        Ok((rewritten, reclaimed))
+    }
+}
+
+/// The set of storage servers a client can reach, indexed by id.
+#[derive(Clone, Debug, Default)]
+pub struct StorageCluster {
+    servers: HashMap<ServerId, Arc<StorageServer>>,
+}
+
+impl StorageCluster {
+    pub fn new(servers: Vec<Arc<StorageServer>>) -> Self {
+        StorageCluster {
+            servers: servers.into_iter().map(|s| (s.id(), s)).collect(),
+        }
+    }
+
+    pub fn get(&self, id: ServerId) -> Result<&Arc<StorageServer>> {
+        self.servers.get(&id).ok_or(Error::ServerUnavailable(id))
+    }
+
+    pub fn ids(&self) -> Vec<ServerId> {
+        let mut v: Vec<ServerId> = self.servers.keys().copied().collect();
+        v.sort_unstable();
+        v
+    }
+
+    pub fn len(&self) -> usize {
+        self.servers.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.servers.is_empty()
+    }
+
+    pub fn iter(&self) -> impl Iterator<Item = &Arc<StorageServer>> {
+        self.servers.values()
+    }
+
+    /// Remove a server (failure injection for replication tests).
+    pub fn remove(&mut self, id: ServerId) -> Option<Arc<StorageServer>> {
+        self.servers.remove(&id)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn server(id: ServerId) -> StorageServer {
+        StorageServer::new(id, None, 3, LinkModel::instant()).unwrap()
+    }
+
+    #[test]
+    fn create_then_retrieve() {
+        let s = server(1);
+        let hint = RegionId::new(7, 0);
+        let ptr = s.create_slice(b"some bytes", hint).unwrap();
+        assert_eq!(ptr.server, 1);
+        assert_eq!(ptr.len, 10);
+        let data = s.retrieve_slice(&ptr).unwrap();
+        assert_eq!(data, b"some bytes");
+        assert_eq!(s.metrics().bytes_written(), 10);
+        assert_eq!(s.metrics().bytes_read(), 10);
+    }
+
+    #[test]
+    fn sub_slice_retrieval_is_pure_arithmetic() {
+        let s = server(1);
+        let ptr = s
+            .create_slice(b"0123456789", RegionId::new(1, 0))
+            
+            .unwrap();
+        let sub = ptr.slice(3, 7);
+        assert_eq!(s.retrieve_slice(&sub).unwrap(), b"3456");
+    }
+
+    #[test]
+    fn same_region_appends_are_adjacent_on_disk() {
+        let s = server(1);
+        let hint = RegionId::new(9, 4);
+        let a = s.create_slice(&[1u8; 100], hint).unwrap();
+        let b = s.create_slice(&[2u8; 50], hint).unwrap();
+        assert!(a.is_adjacent(&b), "{a:?} then {b:?}");
+    }
+
+    #[test]
+    fn different_regions_usually_use_different_backings() {
+        let s = server(1);
+        let mut seen = std::collections::HashSet::new();
+        for inode in 0..50u64 {
+            let p = s
+                .create_slice(b"x", RegionId::new(inode, 0))
+                
+                .unwrap();
+            seen.insert(p.backing);
+        }
+        assert!(seen.len() > 1);
+    }
+
+    #[test]
+    fn retrieval_of_bogus_pointer_fails_cleanly() {
+        let s = server(1);
+        let bogus = SlicePtr {
+            server: 1,
+            backing: 99,
+            offset: 0,
+            len: 4,
+        };
+        assert!(matches!(
+            s.retrieve_slice(&bogus),
+            Err(Error::SliceNotFound { .. })
+        ));
+        let wrong_server = SlicePtr {
+            server: 2,
+            backing: 0,
+            offset: 0,
+            len: 4,
+        };
+        assert!(s.retrieve_slice(&wrong_server).is_err());
+    }
+
+    #[test]
+    fn cluster_lookup() {
+        let cluster = StorageCluster::new(vec![
+            Arc::new(server(0)),
+            Arc::new(server(1)),
+        ]);
+        assert_eq!(cluster.len(), 2);
+        assert!(cluster.get(0).is_ok());
+        assert!(matches!(
+            cluster.get(9),
+            Err(Error::ServerUnavailable(9))
+        ));
+        assert_eq!(cluster.ids(), vec![0, 1]);
+    }
+
+    #[test]
+    fn gc_prefers_most_garbage_and_preserves_live() {
+        let s = server(1);
+        let hint = RegionId::new(3, 0);
+        let live_ptr = s.create_slice(&[9u8; 64], hint).unwrap();
+        s.create_slice(&[0u8; 192], hint).unwrap(); // garbage
+        let mut live = HashMap::new();
+        live.insert(live_ptr.backing, vec![(live_ptr.offset, live_ptr.len)]);
+        let (rewritten, reclaimed) = s.gc_backings(&live).unwrap();
+        assert_eq!(rewritten, 64);
+        assert_eq!(reclaimed, 192);
+        assert_eq!(s.retrieve_slice(&live_ptr).unwrap(), vec![9u8; 64]);
+    }
+}

@@ -1,0 +1,438 @@
+//! Core datatypes shared by every layer: slice pointers, region metadata,
+//! inodes, and the metadata-store key space.
+//!
+//! The paper's central representation (§2.1): a file is a sequence of
+//! *slices* — immutable, byte-addressable, arbitrarily sized byte arrays —
+//! plus the offsets at which they are overlaid.  Everything needed to fetch
+//! a slice lives inside its [`SlicePtr`]; the metadata store holds only
+//! lists of these pointers.
+
+
+use std::collections::BTreeMap;
+use std::fmt;
+
+/// Identifier of a storage server (assigned by the coordinator).
+pub type ServerId = u32;
+/// Identifier of an inode.
+pub type InodeId = u64;
+/// Identifier of a backing file within one storage server.
+pub type BackingId = u32;
+
+/// A pointer to an immutable slice of bytes on a storage server (§2.1).
+///
+/// The tuple `(server, backing file, offset, length)` is self-contained:
+/// no other bookkeeping anywhere in the system is needed to retrieve the
+/// bytes.  Sub-slicing is pure arithmetic ([`SlicePtr::slice`]), which is
+/// what makes yank/paste metadata-only operations.
+#[derive(Clone, Copy, PartialEq, Eq, Hash)]
+pub struct SlicePtr {
+    /// Storage server holding the slice.
+    pub server: ServerId,
+    /// Backing file on that server.
+    pub backing: BackingId,
+    /// Byte offset of the slice within the backing file.
+    pub offset: u64,
+    /// Length of the slice in bytes.
+    pub len: u64,
+}
+
+impl fmt::Debug for SlicePtr {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(
+            f,
+            "s{}:b{}@{}+{}",
+            self.server, self.backing, self.offset, self.len
+        )
+    }
+}
+
+impl SlicePtr {
+    /// Sub-slice `[from, to)` (relative to this slice) by pure arithmetic.
+    ///
+    /// Panics if `from > to || to > len` — callers validate ranges at the
+    /// API boundary.
+    pub fn slice(&self, from: u64, to: u64) -> SlicePtr {
+        assert!(from <= to && to <= self.len, "sub-slice out of range");
+        SlicePtr {
+            server: self.server,
+            backing: self.backing,
+            offset: self.offset + from,
+            len: to - from,
+        }
+    }
+
+    /// True when `other` begins exactly where `self` ends in the same
+    /// backing file — the locality-aware-placement property (§2.7) that
+    /// lets compaction fuse adjacent slices into one pointer.
+    pub fn is_adjacent(&self, other: &SlicePtr) -> bool {
+        self.server == other.server
+            && self.backing == other.backing
+            && self.offset + self.len == other.offset
+    }
+
+    /// Fuse `other` onto the end of `self` (requires [`Self::is_adjacent`]).
+    pub fn fuse(&self, other: &SlicePtr) -> SlicePtr {
+        debug_assert!(self.is_adjacent(other));
+        SlicePtr {
+            len: self.len + other.len,
+            ..*self
+        }
+    }
+}
+
+/// The payload of a region-metadata entry: replicated stored bytes, or a
+/// hole created by `punch` (reads as zeros, occupies no storage).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum SliceData {
+    /// One pointer per replica; all replicas hold identical bytes and a
+    /// reader may use any of them (§2.9).
+    Stored(Vec<SlicePtr>),
+    /// An explicit zero-range (from `punch`), freeing underlying storage.
+    Hole,
+}
+
+impl SliceData {
+    /// Primary replica pointer, if stored.
+    pub fn primary(&self) -> Option<&SlicePtr> {
+        match self {
+            SliceData::Stored(v) => v.first(),
+            SliceData::Hole => None,
+        }
+    }
+
+    /// Length in bytes represented by this payload (replicas are equal).
+    pub fn len(&self) -> Option<u64> {
+        self.primary().map(|p| p.len)
+    }
+
+    pub fn is_hole(&self) -> bool {
+        matches!(self, SliceData::Hole)
+    }
+
+    /// Arithmetic sub-slice of every replica (holes stay holes).
+    pub fn slice(&self, from: u64, to: u64) -> SliceData {
+        match self {
+            SliceData::Stored(v) => {
+                SliceData::Stored(v.iter().map(|p| p.slice(from, to)).collect())
+            }
+            SliceData::Hole => SliceData::Hole,
+        }
+    }
+}
+
+/// Where a region entry is overlaid (§2.1, §2.5).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Placement {
+    /// At an explicit region-relative byte offset.
+    At(u64),
+    /// Relative to the end of the region at apply time — the conditional
+    /// append fast path that lets concurrent appends commute.
+    Eof,
+}
+
+/// One entry in a region's metadata list: a placement, a length, and the
+/// slice payload.  Later entries take precedence over earlier ones where
+/// they overlap (Fig. 2).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct RegionEntry {
+    pub placement: Placement,
+    pub len: u64,
+    pub data: SliceData,
+}
+
+/// The metadata object for one fixed-size region of a file (§2.3), stored
+/// under its own deterministically derived key in the metadata store.
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct RegionMeta {
+    /// Tier-2 garbage collection (§2.8): when a compacted list is still
+    /// too fragmented, its entries are serialized into a slice on the
+    /// storage servers and this replicated pointer replaces them.  The
+    /// spilled entries form the *base* overlay; `entries` apply on top.
+    pub spill: Option<Vec<SlicePtr>>,
+    /// Overlay list, in write order.
+    pub entries: Vec<RegionEntry>,
+    /// Region-relative end of written data — maintained so EOF-relative
+    /// appends can be validated without reading the whole list.
+    pub eof: u64,
+}
+
+impl RegionMeta {
+    /// Number of entries (proxy for metadata size / fragmentation).
+    pub fn fragmentation(&self) -> usize {
+        self.entries.len()
+    }
+}
+
+/// A region of a file: `(inode, index)`; region `i` covers file bytes
+/// `[i * region_size, (i+1) * region_size)`.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct RegionId {
+    pub inode: InodeId,
+    pub index: u32,
+}
+
+impl RegionId {
+    pub fn new(inode: InodeId, index: u32) -> Self {
+        RegionId { inode, index }
+    }
+
+    /// Deterministic metadata-store key (§2.3).
+    pub fn key(&self) -> String {
+        format!("{:016x}#{:08x}", self.inode, self.index)
+    }
+}
+
+/// Inode contents (§2.4): standard POSIX-ish info, plus the
+/// highest-written region so clients can find the end of file in one hop.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Inode {
+    pub id: InodeId,
+    pub kind: InodeKind,
+    /// Hard-link count.
+    pub links: u32,
+    /// File length in bytes (monotone max under concurrent writers).
+    pub len: u64,
+    /// Modification time (seconds since epoch; virtual in sim mode).
+    pub mtime: u64,
+    /// Permissions bits (checked on the inode, not the full path — §2.4).
+    pub mode: u32,
+    pub owner: u32,
+    pub group: u32,
+    /// Highest region index ever written (EOF discovery hint).
+    pub highest_region: u32,
+    /// Replication factor for this file's slices.
+    pub replication: u8,
+}
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum InodeKind {
+    File,
+    Directory,
+}
+
+impl Inode {
+    pub fn new_file(id: InodeId, mode: u32, replication: u8) -> Self {
+        Inode {
+            id,
+            kind: InodeKind::File,
+            links: 1,
+            len: 0,
+            mtime: 0,
+            mode,
+            owner: 0,
+            group: 0,
+            highest_region: 0,
+            replication,
+        }
+    }
+
+    pub fn new_directory(id: InodeId, mode: u32) -> Self {
+        Inode {
+            id,
+            kind: InodeKind::Directory,
+            links: 1,
+            len: 0,
+            mtime: 0,
+            mode,
+            owner: 0,
+            group: 0,
+            highest_region: 0,
+            replication: 1,
+        }
+    }
+
+    pub fn is_dir(&self) -> bool {
+        self.kind == InodeKind::Directory
+    }
+}
+
+/// Directory contents: name → inode.  The paper stores directories as
+/// special files alongside the one-lookup path map (§2.4); we keep them as
+/// a first-class value in the metadata store, updated in the same
+/// transactions — the same atomicity with less indirection (DESIGN.md §5).
+pub type DirEntries = BTreeMap<String, InodeId>;
+
+/// Metadata-store value. One variant per schema ("space" in HyperDex
+/// terms); transactions span spaces freely (§2.4).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum Value {
+    /// `Space::Path`: pathname → inode id (one-lookup open).
+    PathEntry(InodeId),
+    /// `Space::Inode`: the inode.
+    Inode(Inode),
+    /// `Space::Region`: one region's overlay list.
+    Region(RegionMeta),
+    /// `Space::Dir`: directory entries.
+    Dir(DirEntries),
+    /// `Space::Sys`: counters (e.g. the inode-id allocator) and GC state.
+    U64(u64),
+    /// GC scan output and other blobs.
+    Bytes(Vec<u8>),
+}
+
+impl Value {
+    pub fn as_region(&self) -> Option<&RegionMeta> {
+        match self {
+            Value::Region(r) => Some(r),
+            _ => None,
+        }
+    }
+    pub fn as_inode(&self) -> Option<&Inode> {
+        match self {
+            Value::Inode(i) => Some(i),
+            _ => None,
+        }
+    }
+    pub fn as_dir(&self) -> Option<&DirEntries> {
+        match self {
+            Value::Dir(d) => Some(d),
+            _ => None,
+        }
+    }
+    pub fn as_u64(&self) -> Option<u64> {
+        match self {
+            Value::U64(v) => Some(*v),
+            _ => None,
+        }
+    }
+    pub fn as_path_entry(&self) -> Option<InodeId> {
+        match self {
+            Value::PathEntry(i) => Some(*i),
+            _ => None,
+        }
+    }
+}
+
+/// The metadata store's independent schemas.  HyperDex transactions span
+/// multiple keys across independent schemas (§2.4); so do ours.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub enum Space {
+    /// Absolute pathname → inode id.
+    Path,
+    /// Inode id → inode.
+    Inode,
+    /// Region key → region metadata list.
+    Region,
+    /// Directory inode id → entries.
+    Dir,
+    /// System counters, GC scan blobs.
+    Sys,
+}
+
+/// A fully-qualified metadata key.
+#[derive(Clone, Debug, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct Key {
+    pub space: Space,
+    pub key: String,
+}
+
+impl Key {
+    pub fn new(space: Space, key: impl Into<String>) -> Self {
+        Key {
+            space,
+            key: key.into(),
+        }
+    }
+    pub fn path(p: impl Into<String>) -> Self {
+        Key::new(Space::Path, p)
+    }
+    pub fn inode(id: InodeId) -> Self {
+        Key::new(Space::Inode, format!("{id:016x}"))
+    }
+    pub fn region(r: RegionId) -> Self {
+        Key::new(Space::Region, r.key())
+    }
+    pub fn dir(id: InodeId) -> Self {
+        Key::new(Space::Dir, format!("{id:016x}"))
+    }
+    pub fn sys(name: impl Into<String>) -> Self {
+        Key::new(Space::Sys, name)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ptr(server: ServerId, backing: BackingId, offset: u64, len: u64) -> SlicePtr {
+        SlicePtr {
+            server,
+            backing,
+            offset,
+            len,
+        }
+    }
+
+    #[test]
+    fn sub_slice_arithmetic() {
+        let p = ptr(1, 2, 100, 50);
+        let s = p.slice(10, 30);
+        assert_eq!(s, ptr(1, 2, 110, 20));
+        assert_eq!(p.slice(0, 50), p);
+        assert_eq!(p.slice(50, 50).len, 0);
+    }
+
+    #[test]
+    #[should_panic]
+    fn sub_slice_out_of_range_panics() {
+        ptr(1, 2, 100, 50).slice(10, 51);
+    }
+
+    #[test]
+    fn adjacency_and_fuse() {
+        let a = ptr(1, 1, 0, 10);
+        let b = ptr(1, 1, 10, 5);
+        let c = ptr(1, 2, 10, 5);
+        let d = ptr(2, 1, 10, 5);
+        assert!(a.is_adjacent(&b));
+        assert!(!a.is_adjacent(&c));
+        assert!(!a.is_adjacent(&d));
+        assert!(!b.is_adjacent(&a));
+        assert_eq!(a.fuse(&b), ptr(1, 1, 0, 15));
+    }
+
+    #[test]
+    fn slice_data_ops() {
+        let s = SliceData::Stored(vec![ptr(1, 1, 0, 10), ptr(2, 3, 40, 10)]);
+        assert_eq!(s.len(), Some(10));
+        let sub = s.slice(2, 6);
+        match sub {
+            SliceData::Stored(v) => {
+                assert_eq!(v, vec![ptr(1, 1, 2, 4), ptr(2, 3, 42, 4)]);
+            }
+            _ => panic!(),
+        }
+        assert!(SliceData::Hole.is_hole());
+        assert_eq!(SliceData::Hole.len(), None);
+        assert_eq!(SliceData::Hole.slice(1, 2), SliceData::Hole);
+    }
+
+    #[test]
+    fn region_key_is_deterministic_and_distinct() {
+        let a = RegionId::new(7, 0).key();
+        let b = RegionId::new(7, 1).key();
+        let c = RegionId::new(8, 0).key();
+        assert_ne!(a, b);
+        assert_ne!(a, c);
+        assert_eq!(a, RegionId::new(7, 0).key());
+    }
+
+    #[test]
+    fn inode_constructors() {
+        let f = Inode::new_file(1, 0o644, 2);
+        assert!(!f.is_dir());
+        assert_eq!(f.links, 1);
+        assert_eq!(f.replication, 2);
+        let d = Inode::new_directory(2, 0o755);
+        assert!(d.is_dir());
+    }
+
+    #[test]
+    fn value_accessors() {
+        assert_eq!(Value::U64(9).as_u64(), Some(9));
+        assert_eq!(Value::PathEntry(3).as_path_entry(), Some(3));
+        assert!(Value::U64(9).as_inode().is_none());
+        let r = Value::Region(RegionMeta::default());
+        assert!(r.as_region().is_some());
+    }
+}

@@ -1,0 +1,19 @@
+//! In-tree utilities that replace unavailable third-party crates: this
+//! repository builds fully offline (see Cargo.toml), so temp dirs, RNG,
+//! and JSON parsing are implemented here.
+
+pub mod json;
+pub mod rng;
+pub mod tempdir;
+
+pub use rng::Rng;
+pub use tempdir::TempDir;
+
+/// Monotonic "now" in seconds for mtime stamping (coarse is fine: the
+/// paper's inode mtimes are advisory).
+pub fn unix_now() -> u64 {
+    std::time::SystemTime::now()
+        .duration_since(std::time::UNIX_EPOCH)
+        .map(|d| d.as_secs())
+        .unwrap_or(0)
+}

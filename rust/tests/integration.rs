@@ -1,0 +1,202 @@
+//! Cross-module integration tests: full clusters, both filesystems, the
+//! sort application end-to-end, and the PJRT runtime executing the
+//! AOT-compiled Pallas kernels (requires `make artifacts`).
+
+use wtf::baseline::{HdfsCluster, HdfsConfig};
+use wtf::client::SeekFrom;
+use wtf::cluster::Cluster;
+use wtf::config::Config;
+use wtf::mapreduce::bulkfs::BulkFs;
+use wtf::mapreduce::records::{bucket_bounds, generate_records, is_sorted};
+use wtf::mapreduce::{sort_conventional, sort_slicing, SortJob};
+use wtf::net::LinkModel;
+use wtf::runtime::{NativeCompute, SortCompute, XlaRuntime};
+use wtf::util::Rng;
+
+fn small() -> Cluster {
+    Cluster::builder().config(Config::test()).build().unwrap()
+}
+
+fn job() -> SortJob {
+    let mut j = SortJob::new(32, 4);
+    j.chunk_records = 64;
+    j
+}
+
+// ---------------------------------------------------------------- WTF e2e
+
+#[test]
+fn filesystem_end_to_end() {
+    let cluster = small();
+    let c = cluster.client();
+    c.mkdir("/data").unwrap();
+    let mut fd = c.create("/data/f").unwrap();
+    let mut payload = vec![0u8; 20_000]; // spans several 4 KB regions
+    Rng::new(1).fill_bytes(&mut payload);
+    c.write(&mut fd, &payload).unwrap();
+    // Random overwrite in the middle.
+    c.write_at(fd.inode(), 9_000, b"OVERWRITE").unwrap();
+    let mut expect = payload.clone();
+    expect[9_000..9_009].copy_from_slice(b"OVERWRITE");
+    assert_eq!(c.read_at(&fd, 0, 20_000).unwrap(), expect);
+    // Compaction changes nothing observable.
+    c.compact_file(fd.inode(), usize::MAX).unwrap();
+    assert_eq!(c.read_at(&fd, 0, 20_000).unwrap(), expect);
+    // Copy + concat share bytes; reads still correct afterwards.
+    c.copy("/data/f", "/data/g").unwrap();
+    c.concat(&["/data/f", "/data/g"], "/data/both").unwrap();
+    assert_eq!(c.stat("/data/both").unwrap().len, 40_000);
+    c.unlink("/data/f").unwrap();
+    let both = c.open("/data/both").unwrap();
+    assert_eq!(&c.read_at(&both, 0, 9).unwrap()[..], &expect[..9]);
+}
+
+#[test]
+fn transaction_across_files_with_concurrent_conflict() {
+    let cluster = small();
+    let c = cluster.client();
+    let mut src = c.create("/ledger").unwrap();
+    c.write(&mut src, b"100").unwrap();
+
+    // Transfer: read /ledger, write /audit, append marker to /ledger.
+    let mut t = c.begin();
+    let ledger = t.open("/ledger").unwrap();
+    let audit = t.create("/audit").unwrap();
+    let balance = t.read(ledger, 3).unwrap();
+    t.write(audit, &balance).unwrap();
+    t.seek(ledger, SeekFrom::End(0)).unwrap();
+    t.write(ledger, b"#").unwrap();
+
+    // A concurrent append moves the EOF but does NOT touch what we read:
+    // the transaction must retry internally and commit.
+    c.append_bytes(&src, b"???").unwrap();
+    t.commit().unwrap();
+
+    let audit = c.open("/audit").unwrap();
+    assert_eq!(c.read_at(&audit, 0, 3).unwrap(), b"100");
+    // Marker landed after the concurrent append.
+    let ledger = c.open("/ledger").unwrap();
+    let len = c.len(&ledger).unwrap();
+    assert_eq!(c.read_at(&ledger, len - 1, 1).unwrap(), b"#");
+}
+
+// ------------------------------------------------------------- sort + XLA
+
+/// The artifacts directory produced by `make artifacts`.
+fn artifacts_available() -> bool {
+    XlaRuntime::default_dir().join("manifest.json").exists()
+}
+
+#[test]
+fn xla_kernels_match_native_oracle() {
+    if !artifacts_available() {
+        eprintln!("SKIP: artifacts/ missing; run `make artifacts`");
+        return;
+    }
+    let rt = XlaRuntime::load_default().unwrap();
+    let native = NativeCompute;
+    let mut rng = Rng::new(0xA11CE);
+    for &n in &[100usize, 1000, 5000, 16384, 20000] {
+        let keys: Vec<i32> = (0..n)
+            .map(|_| (rng.next_u64() & 0x7fffffff) as i32)
+            .collect();
+        let bounds = bucket_bounds(16);
+        let (xi, xh) = rt.partition(&keys, &bounds).unwrap();
+        let (ni, nh) = native.partition(&keys, &bounds).unwrap();
+        assert_eq!(xi, ni, "partition ids diverge at n={n}");
+        assert_eq!(xh, nh, "histogram diverges at n={n}");
+    }
+    for &n in &[1usize, 7, 512, 1024, 1500, 4096, 5000] {
+        let keys: Vec<i32> = (0..n).map(|_| (rng.next_u64() & 0xffff) as i32).collect();
+        let xp = rt.argsort(&keys).unwrap();
+        let np = native.argsort(&keys).unwrap();
+        assert_eq!(xp, np, "argsort diverges at n={n} (stability included)");
+    }
+}
+
+#[test]
+fn slicing_sort_with_xla_kernels_end_to_end() {
+    if !artifacts_available() {
+        eprintln!("SKIP: artifacts/ missing; run `make artifacts`");
+        return;
+    }
+    let rt = XlaRuntime::load_default().unwrap();
+    let cluster = small();
+    let c = cluster.client();
+    let data = generate_records(256, job().fmt, 2026);
+    c.write_file("/input", &data).unwrap();
+    let written_before = cluster.storage_bytes_written();
+    let stats = sort_slicing(&c, &rt, "/input", "/sorted", &job()).unwrap();
+    assert_eq!(stats.records, 256);
+    assert_eq!(
+        cluster.storage_bytes_written(),
+        written_before,
+        "slicing sort writes zero bytes (Table 2)"
+    );
+    let out = c.read_range("/sorted", 0, data.len() as u64).unwrap();
+    assert_eq!(out.len(), data.len());
+    assert!(is_sorted(&out, job().fmt));
+    // Identical output to the native-compute run.
+    sort_slicing(&c, &NativeCompute, "/input", "/sorted-native", &job()).unwrap();
+    let native_out = c
+        .read_range("/sorted-native", 0, data.len() as u64)
+        .unwrap();
+    assert_eq!(out, native_out);
+}
+
+#[test]
+fn sorters_agree_across_filesystems() {
+    let data = generate_records(192, job().fmt, 5);
+
+    let wtf_cluster = small();
+    let wc = wtf_cluster.client();
+    wc.write_file("/in", &data).unwrap();
+    sort_conventional(&wc, &NativeCompute, "/in", "/out", &job()).unwrap();
+    let wtf_out = wc.read_range("/out", 0, data.len() as u64).unwrap();
+
+    let hdfs_cluster =
+        HdfsCluster::new(HdfsConfig::test(), None, LinkModel::instant()).unwrap();
+    let hc = hdfs_cluster.client();
+    hc.write_file("/in", &data).unwrap();
+    sort_conventional(&hc, &NativeCompute, "/in", "/out", &job()).unwrap();
+    let hdfs_out = hc.read_range("/out", 0, data.len() as u64).unwrap();
+
+    assert_eq!(wtf_out, hdfs_out);
+    assert!(is_sorted(&wtf_out, job().fmt));
+}
+
+// -------------------------------------------------------- Table 2 shapes
+
+#[test]
+fn table2_io_shape_holds_at_test_scale() {
+    let data = generate_records(256, job().fmt, 31);
+    let size = data.len() as u64;
+
+    // Conventional on WTF: bucketing R+W, sorting R+W, merging R+W.
+    let cluster = small();
+    let c = cluster.client();
+    c.write_file("/in", &data).unwrap();
+    let (r0, w0) = (
+        cluster.storage_bytes_read(),
+        cluster.storage_bytes_written(),
+    );
+    sort_conventional(&c, &NativeCompute, "/in", "/out", &job()).unwrap();
+    let conv_read = cluster.storage_bytes_read() - r0;
+    let conv_written = cluster.storage_bytes_written() - w0;
+    // R = 3x input (bucketing + sorting + merging each read it once).
+    assert_eq!(conv_read, 3 * size, "conventional reads 3x the input");
+    // W >= 3x input (every stage writes; replication multiplies).
+    assert!(conv_written >= 3 * size, "conventional writes >= 3x");
+
+    // Slicing: R = 2x, W = 0.
+    let cluster2 = small();
+    let c2 = cluster2.client();
+    c2.write_file("/in", &data).unwrap();
+    let (r1, w1) = (
+        cluster2.storage_bytes_read(),
+        cluster2.storage_bytes_written(),
+    );
+    sort_slicing(&c2, &NativeCompute, "/in", "/out", &job()).unwrap();
+    assert_eq!(cluster2.storage_bytes_read() - r1, 2 * size);
+    assert_eq!(cluster2.storage_bytes_written() - w1, 0);
+}

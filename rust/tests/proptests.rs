@@ -1,0 +1,243 @@
+//! Randomized property tests (in-tree harness; proptest is unavailable
+//! offline).  Each property runs many seeded cases; on failure the seed
+//! is printed so the case replays deterministically.
+//!
+//! Invariants covered:
+//! * filesystem equivalence to a byte-array model under random
+//!   write/overwrite/append/punch/yank-paste/compact sequences
+//! * compaction and spilling never change observable contents
+//! * region metadata eof == max written end
+//! * concat equals manual byte concatenation
+//! * GC never touches live data under random workloads
+//! * placement determinism + replica distinctness on random rings
+
+use wtf::client::WtfClient;
+use wtf::cluster::Cluster;
+use wtf::config::Config;
+use wtf::storage::Ring;
+use wtf::types::RegionId;
+use wtf::util::Rng;
+
+fn cluster() -> Cluster {
+    Cluster::builder().config(Config::test()).build().unwrap()
+}
+
+/// Run `f` for many seeds, reporting the failing seed.
+fn forall(cases: u64, f: impl Fn(u64)) {
+    for seed in 0..cases {
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| f(seed)));
+        if let Err(e) = result {
+            eprintln!("PROPERTY FAILED at seed {seed}");
+            std::panic::resume_unwind(e);
+        }
+    }
+}
+
+/// Apply a random op to both WTF and a plain byte-array model.
+fn random_op(
+    c: &WtfClient,
+    fd: &wtf::client::FileHandle,
+    model: &mut Vec<u8>,
+    rng: &mut Rng,
+) {
+    let file_size_cap = 12_000u64; // spans 3 test regions
+    match rng.next_below(5) {
+        // Random write.
+        0 => {
+            let off = rng.next_below(file_size_cap);
+            let len = 1 + rng.next_below(600) as usize;
+            let mut data = vec![0u8; len];
+            rng.fill_bytes(&mut data);
+            c.write_at(fd.inode(), off, &data).unwrap();
+            if model.len() < off as usize + len {
+                model.resize(off as usize + len, 0);
+            }
+            model[off as usize..off as usize + len].copy_from_slice(&data);
+        }
+        // Append.
+        1 => {
+            let len = 1 + rng.next_below(300) as usize;
+            let mut data = vec![0u8; len];
+            rng.fill_bytes(&mut data);
+            c.append_bytes(fd, &data).unwrap();
+            model.extend_from_slice(&data);
+        }
+        // Punch.
+        2 => {
+            if model.is_empty() {
+                return;
+            }
+            let off = rng.next_below(model.len() as u64);
+            let amount = 1 + rng.next_below(400);
+            let mut h = fd.clone();
+            h.offset = off;
+            c.punch(&mut h, amount).unwrap();
+            let end = (off + amount).min(model.len() as u64) as usize;
+            model[off as usize..end].fill(0);
+        }
+        // yank+paste within the file (copy a range over another).
+        3 => {
+            if model.len() < 2 {
+                return;
+            }
+            let src = rng.next_below(model.len() as u64 - 1);
+            let len = 1 + rng.next_below((model.len() as u64 - src).min(300));
+            let dst = rng.next_below(file_size_cap);
+            let slice = c.yank_at(fd.inode(), src, len).unwrap();
+            c.paste_at(fd.inode(), dst, &slice).unwrap();
+            let bytes: Vec<u8> = model[src as usize..(src + len) as usize].to_vec();
+            if model.len() < (dst + len) as usize {
+                model.resize((dst + len) as usize, 0);
+            }
+            model[dst as usize..(dst + len) as usize].copy_from_slice(&bytes);
+        }
+        // Compact a random region (must be invisible).
+        _ => {
+            let region = rng.next_below(4) as u32;
+            c.compact_region(RegionId::new(fd.inode(), region)).unwrap();
+        }
+    }
+}
+
+fn check_equals_model(c: &WtfClient, fd: &wtf::client::FileHandle, model: &[u8]) {
+    let len = c.len(fd).unwrap();
+    assert_eq!(len, model.len() as u64, "length mismatch");
+    let data = c.read_at(fd, 0, len).unwrap();
+    assert_eq!(data, model, "contents diverged from model");
+}
+
+#[test]
+fn prop_filesystem_matches_byte_model() {
+    forall(12, |seed| {
+        let cl = cluster();
+        let c = cl.client();
+        let fd = c.create("/prop").unwrap();
+        let mut model = Vec::new();
+        let mut rng = Rng::new(seed * 7919 + 13);
+        for _ in 0..40 {
+            random_op(&c, &fd, &mut model, &mut rng);
+        }
+        check_equals_model(&c, &fd, &model);
+    });
+}
+
+#[test]
+fn prop_compaction_and_spill_preserve_contents() {
+    forall(8, |seed| {
+        let cl = cluster();
+        let c = cl.client();
+        let fd = c.create("/spillprop").unwrap();
+        let mut model = Vec::new();
+        let mut rng = Rng::new(seed ^ 0xABCD);
+        for _ in 0..30 {
+            random_op(&c, &fd, &mut model, &mut rng);
+        }
+        // Aggressive tier-2 spill of every region, then more ops.
+        let meta = c.stat("/spillprop").unwrap();
+        for r in 0..=meta.highest_region {
+            c.spill_region(RegionId::new(fd.inode(), r)).unwrap();
+        }
+        check_equals_model(&c, &fd, &model);
+        for _ in 0..15 {
+            random_op(&c, &fd, &mut model, &mut rng);
+        }
+        check_equals_model(&c, &fd, &model);
+    });
+}
+
+#[test]
+fn prop_region_eof_matches_max_extent() {
+    forall(10, |seed| {
+        let cl = cluster();
+        let c = cl.client();
+        let fd = c.create("/eof").unwrap();
+        let mut rng = Rng::new(seed + 31);
+        let region_size = c.config().region_size;
+        let mut max_end = 0u64;
+        for _ in 0..20 {
+            let off = rng.next_below(region_size - 700);
+            let len = 1 + rng.next_below(600);
+            let mut data = vec![0u8; len as usize];
+            rng.fill_bytes(&mut data);
+            c.write_at(fd.inode(), off, &data).unwrap();
+            max_end = max_end.max(off + len);
+        }
+        let (region, _) = c.fetch_region_public(RegionId::new(fd.inode(), 0)).unwrap();
+        assert_eq!(region.eof, max_end);
+        assert_eq!(c.len(&fd).unwrap(), max_end);
+    });
+}
+
+#[test]
+fn prop_concat_equals_manual_concatenation() {
+    forall(8, |seed| {
+        let cl = cluster();
+        let c = cl.client();
+        let mut rng = Rng::new(seed * 3 + 5);
+        let n = 2 + rng.next_below(4) as usize;
+        let mut expected = Vec::new();
+        let mut names = Vec::new();
+        for i in 0..n {
+            let len = 1 + rng.next_below(9000) as usize; // multi-region
+            let mut data = vec![0u8; len];
+            rng.fill_bytes(&mut data);
+            let mut f = c.create(&format!("/part{i}")).unwrap();
+            c.write(&mut f, &data).unwrap();
+            expected.extend_from_slice(&data);
+            names.push(format!("/part{i}"));
+        }
+        let refs: Vec<&str> = names.iter().map(|s| s.as_str()).collect();
+        let out = c.concat(&refs, "/all").unwrap();
+        assert_eq!(c.len(&out).unwrap(), expected.len() as u64);
+        assert_eq!(
+            c.read_at(&out, 0, expected.len() as u64).unwrap(),
+            expected
+        );
+    });
+}
+
+#[test]
+fn prop_gc_never_harms_live_data() {
+    forall(6, |seed| {
+        let cl = cluster();
+        let c = cl.client();
+        let fd = c.create("/gcprop").unwrap();
+        let mut model = Vec::new();
+        let mut rng = Rng::new(seed ^ 0xFEED);
+        for round in 0..3 {
+            for _ in 0..12 {
+                random_op(&c, &fd, &mut model, &mut rng);
+            }
+            c.compact_file(fd.inode(), 24).unwrap();
+            cl.run_gc().unwrap();
+            if round > 0 {
+                // Second+ scans actually collect.
+                cl.run_gc().unwrap();
+            }
+            check_equals_model(&c, &fd, &model);
+        }
+    });
+}
+
+#[test]
+fn prop_ring_placement_properties() {
+    forall(30, |seed| {
+        let mut rng = Rng::new(seed);
+        let n = 1 + rng.next_below(20) as u32;
+        let servers: Vec<u32> = (0..n).collect();
+        let ring = Ring::new(&servers, 16);
+        for _ in 0..20 {
+            let region = RegionId::new(rng.next_u64(), rng.next_below(100) as u32);
+            let want = 1 + rng.next_below(5) as usize;
+            let got = ring.servers_for(region, want);
+            // Deterministic.
+            assert_eq!(got, ring.servers_for(region, want));
+            // Correct count (capped at cluster size) and distinct.
+            assert_eq!(got.len(), want.min(n as usize));
+            let mut d = got.clone();
+            d.sort_unstable();
+            d.dedup();
+            assert_eq!(d.len(), got.len());
+        }
+    });
+}
