@@ -1,11 +1,96 @@
 //! End-to-end client hot paths on a real in-process cluster: the write
 //! path (slices + blind metadata txn), the read path (resolve + fetch),
-//! appends, and the slicing ops whose cost is the paper's headline.
+//! appends, the slicing ops whose cost is the paper's headline, and the
+//! replication fan-out sweep under the simulated GbE link (the transport
+//! scatter-gather's raison d'être).
+//!
+//! Set `WTF_BENCH_JSON=<path>` to also write the fan-out results as
+//! JSON (committed as `BENCH_client_io.json` for cross-PR trajectory).
 
+use wtf::bench::stats::Summary;
 use wtf::bench::Bench;
 use wtf::cluster::Cluster;
 use wtf::config::Config;
+use wtf::net::LinkModel;
 use wtf::util::Rng;
+
+/// Replication sweep under `LinkModel::gigabit()`: with the transport
+/// scattering every replica upload, a replication-r `write_at` should
+/// cost ~1 wire time, not r (acceptance: r=3 within 1.5x of r=1).
+fn fanout_sweep() -> Vec<(u8, Summary)> {
+    let mut payload = vec![0u8; 256 * 1024];
+    Rng::new(9).fill_bytes(&mut payload);
+    let mut rows = Vec::new();
+    for r in [1u8, 2, 3] {
+        let cluster = Cluster::builder()
+            .config(Config {
+                region_size: 1 << 22,
+                storage_servers: 4,
+                replication: r,
+                ..Config::default()
+            })
+            .link(LinkModel::gigabit())
+            .build()
+            .unwrap();
+        let c = cluster.client();
+        let fd = c.create("/fanout").unwrap();
+        let s = Bench::new(format!("client/write_at-256k-gigabit-r{r}"))
+            .warmup(2)
+            .iters(12)
+            .run(|| c.write_at(fd.inode(), 0, &payload).unwrap());
+        rows.push((r, s));
+    }
+    let r1 = rows[0].1.mean;
+    let r3 = rows[2].1.mean;
+    println!(
+        "  └─ fan-out ratio r3/r1 = {:.2}x (serial RPC would be ~3x)",
+        r3 / r1.max(1.0)
+    );
+    rows
+}
+
+/// Emit the fan-out rows in the `BENCH_client_io.json` schema (status
+/// "measured"; re-running this bench is how the committed "modeled"
+/// placeholder gets replaced with real wall-clock rows).
+fn write_json(path: &str, rows: &[(u8, Summary)]) {
+    let wire_ns = LinkModel::gigabit()
+        .transfer_time(256 * 1024)
+        .as_nanos() as u64;
+    let mut out = String::from("{\n  \"bench\": \"client_io/fanout\",\n");
+    out.push_str(
+        "  \"description\": \"Replication sweep of 256 KiB write_at under \
+         LinkModel::gigabit() (0.1 ms half-rtt, 125 MB/s). Produced by \
+         `cargo bench --bench client_io` with WTF_BENCH_JSON set; see \
+         rust/benches/client_io.rs.\",\n",
+    );
+    out.push_str("  \"status\": \"measured\",\n");
+    out.push_str("  \"link\": \"gigabit (0.1 ms half-rtt, 125 MB/s)\",\n");
+    out.push_str("  \"payload_bytes\": 262144,\n");
+    out.push_str(&format!(
+        "  \"wire_time_per_transfer_ns\": {wire_ns},\n  \"rows\": [\n"
+    ));
+    for (i, (r, s)) in rows.iter().enumerate() {
+        // serial_model_ns: what a serial per-replica charge would cost —
+        // the pre-transport baseline the measurement is compared to.
+        out.push_str(&format!(
+            "    {{\"replication\": {r}, \"mean_ns\": {:.0}, \"p50_ns\": {}, \
+             \"p95_ns\": {}, \"serial_model_ns\": {}}}{}\n",
+            s.mean,
+            s.p50,
+            s.p95,
+            wire_ns * u64::from(*r),
+            if i + 1 < rows.len() { "," } else { "" }
+        ));
+    }
+    let r1 = rows.first().map(|(_, s)| s.mean).unwrap_or(1.0);
+    let r3 = rows.last().map(|(_, s)| s.mean).unwrap_or(1.0);
+    out.push_str(&format!(
+        "  ],\n  \"r3_over_r1\": {:.3}\n}}\n",
+        r3 / r1.max(1.0)
+    ));
+    std::fs::write(path, out).expect("write WTF_BENCH_JSON");
+    println!("  └─ wrote {path}");
+}
 
 fn main() {
     let cluster = Cluster::builder()
@@ -80,4 +165,10 @@ fn main() {
         t.write(fd, &data[..4]).unwrap();
         t.commit().unwrap()
     });
+
+    // Replication fan-out under the paper's GbE model.
+    let rows = fanout_sweep();
+    if let Ok(path) = std::env::var("WTF_BENCH_JSON") {
+        write_json(&path, &rows);
+    }
 }

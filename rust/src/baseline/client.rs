@@ -8,15 +8,20 @@ use super::datanode::DataNode;
 use super::namenode::{BlockInfo, NameNode};
 use super::HdfsConfig;
 use crate::error::{Error, Result};
+use crate::net::{Peer, Request, Transport};
 use crate::types::ServerId;
 use std::sync::Arc;
 
-/// Client handle bound to one hdfs-lite deployment.
+/// Client handle bound to one hdfs-lite deployment.  Block I/O goes
+/// through the shared transport; the write pipeline remains a sequential
+/// replica chain (the HDFS protocol under comparison), so unlike WTF it
+/// pays one wire time per replica.
 #[derive(Clone)]
 pub struct HdfsClient {
     config: HdfsConfig,
     namenode: Arc<NameNode>,
     datanodes: Vec<Arc<DataNode>>,
+    transport: Arc<Transport>,
 }
 
 impl HdfsClient {
@@ -24,11 +29,13 @@ impl HdfsClient {
         config: HdfsConfig,
         namenode: Arc<NameNode>,
         datanodes: Vec<Arc<DataNode>>,
+        transport: Arc<Transport>,
     ) -> Self {
         HdfsClient {
             config,
             namenode,
             datanodes,
+            transport,
         }
     }
 
@@ -36,6 +43,22 @@ impl HdfsClient {
         self.datanodes
             .get(id as usize)
             .ok_or(Error::ServerUnavailable(id))
+    }
+
+    /// Append `data` to `block` on data node `id`, as an envelope.
+    fn transport_append(&self, id: ServerId, block: u64, data: Arc<[u8]>) -> Result<u64> {
+        let peer = self.node(id)?.clone() as Peer;
+        self.transport
+            .call(peer, Request::AppendBlock { block, data })?
+            .into_block_len()
+    }
+
+    /// Positional block read on data node `id`, as an envelope.
+    fn transport_read(&self, id: ServerId, block: u64, offset: u64, len: u64) -> Result<Vec<u8>> {
+        let peer = self.node(id)?.clone() as Peer;
+        self.transport
+            .call(peer, Request::ReadBlock { block, offset, len })?
+            .into_bytes()
     }
 
     /// Create a file and return its writer.
@@ -122,7 +145,7 @@ impl HdfsClient {
     fn read_block_failover(&self, block: &BlockInfo, off: u64, len: u64) -> Result<Vec<u8>> {
         let mut last = Error::InvalidArgument("no replicas".into());
         for &r in &block.replicas {
-            match self.node(r).and_then(|dn| dn.read_block(block.id, off, len)) {
+            match self.transport_read(r, block.id, off, len) {
                 Ok(d) => return Ok(d),
                 Err(e) => last = e,
             }
@@ -181,11 +204,14 @@ impl HdfsWriter {
         let cur = self.current.as_ref().unwrap().clone();
         let room = block_size - self.client.node(cur.replicas[0])?.block_len(cur.id);
         let take = (room as usize).min(self.buffer.len());
-        let chunk: Vec<u8> = self.buffer.drain(..take).collect();
-        // Write pipeline: every replica, in order (HDFS datanode chain).
+        let chunk: Arc<[u8]> = self.buffer.drain(..take).collect::<Vec<u8>>().into();
+        // Write pipeline: every replica, in order (HDFS datanode chain) —
+        // deliberately NOT a scatter: store-and-forward replication is
+        // the baseline behavior WTF's parallel fan-out is measured
+        // against.
         let mut new_len = 0;
         for &r in &cur.replicas {
-            new_len = self.client.node(r)?.append_block(cur.id, &chunk)?;
+            new_len = self.client.transport_append(r, cur.id, chunk.clone())?;
         }
         self.client.namenode.publish(&self.path, cur.id, new_len)?;
         if new_len >= block_size {

@@ -1,10 +1,16 @@
 //! HDFS data node: stores blocks as local files, supports append and
 //! positional read.  Server-side readahead is modeled in the client's
 //! read path (one buffer per stream, as HDFS does).
+//!
+//! Like the WTF storage servers, data nodes serve their block I/O as
+//! transport envelopes ([`Handler`]) so the baseline pays the same wire
+//! model — the apples-to-apples requirement of §4.  (The HDFS write
+//! *pipeline* stays sequential per replica in the client: that chain is
+//! the protocol being compared against.)
 
 use crate::error::{Error, Result};
 use crate::metrics::Metrics;
-use crate::net::LinkModel;
+use crate::net::{Handler, Request, Response};
 use crate::types::ServerId;
 use crate::util::TempDir;
 use std::collections::HashMap;
@@ -23,7 +29,6 @@ pub struct DataNode {
     dir: PathBuf,
     blocks: Mutex<HashMap<BlockId, BlockFile>>,
     metrics: Metrics,
-    link: LinkModel,
 }
 
 #[derive(Debug)]
@@ -33,7 +38,7 @@ struct BlockFile {
 }
 
 impl DataNode {
-    pub fn new(id: ServerId, dir: Option<PathBuf>, link: LinkModel) -> Result<Self> {
+    pub fn new(id: ServerId, dir: Option<PathBuf>) -> Result<Self> {
         let (tempdir, dir) = match dir {
             Some(d) => {
                 std::fs::create_dir_all(&d)?;
@@ -51,7 +56,6 @@ impl DataNode {
             dir,
             blocks: Mutex::new(HashMap::new()),
             metrics: Metrics::new(),
-            link,
         })
     }
 
@@ -66,7 +70,6 @@ impl DataNode {
     /// Append `data` to `block` (creating it on first write).  Returns
     /// the block's new length.
     pub fn append_block(&self, block: BlockId, data: &[u8]) -> Result<u64> {
-        self.link.charge(data.len() as u64);
         let mut g = self.blocks.lock().unwrap();
         let entry = match g.get_mut(&block) {
             Some(b) => b,
@@ -102,7 +105,6 @@ impl DataNode {
         let mut buf = vec![0u8; len as usize];
         entry.file.read_exact_at(&mut buf, offset)?;
         drop(g);
-        self.link.charge(len);
         self.metrics.add_bytes_read(len);
         self.metrics.add_ops_read(1);
         Ok(buf)
@@ -123,13 +125,30 @@ impl DataNode {
     }
 }
 
+/// Transport server side: the baseline's block I/O envelopes.
+impl Handler for DataNode {
+    fn serve(&self, req: &Request) -> Result<Response> {
+        match req {
+            Request::AppendBlock { block, data } => {
+                Ok(Response::BlockLen(self.append_block(*block, data)?))
+            }
+            Request::ReadBlock { block, offset, len } => {
+                Ok(Response::Bytes(self.read_block(*block, *offset, *len)?))
+            }
+            other => Err(Error::Unsupported(format!(
+                "data node cannot serve {other:?}"
+            ))),
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
 
     #[test]
     fn append_and_read() {
-        let dn = DataNode::new(0, None, LinkModel::instant()).unwrap();
+        let dn = DataNode::new(0, None).unwrap();
         assert_eq!(dn.append_block(7, b"abc").unwrap(), 3);
         assert_eq!(dn.append_block(7, b"def").unwrap(), 6);
         assert_eq!(dn.read_block(7, 0, 6).unwrap(), b"abcdef");
@@ -141,7 +160,7 @@ mod tests {
 
     #[test]
     fn blocks_are_independent() {
-        let dn = DataNode::new(0, None, LinkModel::instant()).unwrap();
+        let dn = DataNode::new(0, None).unwrap();
         dn.append_block(1, b"one").unwrap();
         dn.append_block(2, b"two").unwrap();
         assert_eq!(dn.read_block(1, 0, 3).unwrap(), b"one");

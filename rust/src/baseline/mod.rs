@@ -24,7 +24,7 @@ pub use datanode::DataNode;
 pub use namenode::{BlockId, BlockInfo, NameNode};
 
 use crate::error::Result;
-use crate::net::LinkModel;
+use crate::net::{LinkModel, Transport};
 use std::path::PathBuf;
 use std::sync::Arc;
 
@@ -36,6 +36,9 @@ pub struct HdfsConfig {
     pub datanodes: u32,
     /// Client/server readahead for sequential reads.
     pub readahead: u64,
+    /// Transport worker-pool size (matches the WTF default so the §4
+    /// comparison runs both stacks on equal plumbing; `0` = inline).
+    pub transport_workers: u32,
 }
 
 impl Default for HdfsConfig {
@@ -45,6 +48,7 @@ impl Default for HdfsConfig {
             replication: 2,
             datanodes: 12,
             readahead: 4 * 1024 * 1024,
+            transport_workers: 8,
         }
     }
 }
@@ -56,29 +60,35 @@ impl HdfsConfig {
             replication: 2,
             datanodes: 4,
             readahead: 1024,
+            ..Default::default()
         }
     }
 }
 
-/// An assembled hdfs-lite deployment.
+/// An assembled hdfs-lite deployment.  Block I/O travels through the
+/// same [`Transport`] the WTF stack uses, so the §4 comparison charges
+/// both filesystems an identical wire model.
 pub struct HdfsCluster {
     config: HdfsConfig,
     namenode: Arc<NameNode>,
     datanodes: Vec<Arc<DataNode>>,
+    transport: Arc<Transport>,
 }
 
 impl HdfsCluster {
     pub fn new(config: HdfsConfig, data_dir: Option<PathBuf>, link: LinkModel) -> Result<Self> {
+        let transport = Arc::new(Transport::new(link, config.transport_workers));
         let mut datanodes = Vec::with_capacity(config.datanodes as usize);
         for id in 0..config.datanodes {
             let dir = data_dir.as_ref().map(|d| d.join(format!("dn-{id}")));
-            datanodes.push(Arc::new(DataNode::new(id, dir, link)?));
+            datanodes.push(Arc::new(DataNode::new(id, dir)?));
         }
         let namenode = Arc::new(NameNode::new(config.block_size, config.replication, config.datanodes));
         Ok(HdfsCluster {
             config,
             namenode,
             datanodes,
+            transport,
         })
     }
 
@@ -87,6 +97,7 @@ impl HdfsCluster {
             self.config.clone(),
             self.namenode.clone(),
             self.datanodes.clone(),
+            self.transport.clone(),
         )
     }
 

@@ -13,7 +13,7 @@ use super::{FileHandle, SeekFrom, Slice, WtfClient};
 use crate::error::{Error, Result};
 use crate::meta::MetaOp;
 use crate::types::{
-    DirEntries, Inode, InodeId, Key, Placement, RegionEntry, RegionId, SliceData, Value,
+    DirEntries, Inode, InodeId, Key, Placement, RegionEntry, RegionId, SliceData, SlicePtr, Value,
 };
 use crate::util::unix_now;
 
@@ -63,7 +63,7 @@ impl WtfClient {
     /// how deeply nested (§2.4).
     pub fn lookup(&self, path: &str) -> Result<InodeId> {
         let path = normalize(path)?;
-        match self.meta.get(&Key::path(&path)) {
+        match self.meta_get(&Key::path(&path)) {
             Some((Value::PathEntry(id), _)) => Ok(id),
             Some(_) => Err(Error::CorruptMetadata(format!("path {path} wrong type"))),
             None => Err(Error::NotFound(path)),
@@ -272,7 +272,7 @@ impl WtfClient {
         if !inode.is_dir() {
             return Err(Error::NotADirectory(path.into()));
         }
-        match self.meta.get(&Key::dir(id)) {
+        match self.meta_get(&Key::dir(id)) {
             Some((Value::Dir(d), _)) => Ok(d.into_iter().collect()),
             _ => Ok(Vec::new()),
         }
@@ -309,8 +309,10 @@ impl WtfClient {
     }
 
     /// Random-access write at an explicit offset (the operation HDFS
-    /// cannot do at all, §4.2).  One storage round per replica per region
-    /// part, then one blind metadata transaction.
+    /// cannot do at all, §4.2).  ONE transport scatter uploads every
+    /// replica of every region part concurrently (§2.1: slices are
+    /// invisible until the commit, so ~1 wire time total), then one blind
+    /// metadata transaction publishes them.
     pub fn write_at(&self, inode: InodeId, offset: u64, data: &[u8]) -> Result<()> {
         if data.is_empty() {
             return Ok(());
@@ -318,14 +320,19 @@ impl WtfClient {
         let replication = self.fetch_inode(inode)?.replication;
         // 1. Slices first (§2.1): visible to nobody until the commit.
         let parts = self.split_range(inode, offset, data.len() as u64);
-        let mut created: Vec<(RegionId, u64, SliceData)> = Vec::with_capacity(parts.len());
+        let mut payloads: Vec<(RegionId, std::sync::Arc<[u8]>)> =
+            Vec::with_capacity(parts.len());
         let mut cursor = 0usize;
-        for (rid, rel, len) in &parts {
-            let chunk = &data[cursor..cursor + *len as usize];
+        for (rid, _rel, len) in &parts {
+            payloads.push((*rid, std::sync::Arc::from(&data[cursor..cursor + *len as usize])));
             cursor += *len as usize;
-            let replicas = self.create_replicated(chunk, *rid, replication)?;
-            created.push((*rid, *rel, SliceData::Stored(replicas)));
         }
+        let replica_sets = self.create_replicated_parts(&payloads, replication)?;
+        let created: Vec<(RegionId, u64, SliceData)> = parts
+            .iter()
+            .zip(replica_sets)
+            .map(|((rid, rel, _), replicas)| (*rid, *rel, SliceData::Stored(replicas)))
+            .collect();
         // 2. Publish with blind appends — no read set, so concurrent
         //    writers never conflict here.
         let end = offset + data.len() as u64;
@@ -458,6 +465,11 @@ impl WtfClient {
         self.read_inode_at(fd.inode, offset, len)
     }
 
+    /// Gather-read: resolve every region's extents first, then fetch ALL
+    /// stored extents — across regions and storage servers — in one
+    /// transport scatter.  Multi-region reads (and the sort's shuffle
+    /// reads, whose buckets are slices spread over many servers) pipeline
+    /// instead of paying one wire time per extent.
     pub(crate) fn read_inode_at(&self, inode: InodeId, offset: u64, len: u64) -> Result<Vec<u8>> {
         let file_len = self.fetch_inode(inode)?.len;
         if offset >= file_len {
@@ -465,6 +477,8 @@ impl WtfClient {
         }
         let len = len.min(file_len - offset);
         let mut out = vec![0u8; len as usize];
+        let mut dsts: Vec<usize> = Vec::new();
+        let mut sets: Vec<Vec<SlicePtr>> = Vec::new();
         for (rid, rel, part_len) in self.split_range(inode, offset, len) {
             let (region, _) = self.fetch_region(rid)?;
             let extents = self.resolve_region(&region)?;
@@ -472,12 +486,14 @@ impl WtfClient {
             let region_base = u64::from(rid.index) * self.config.region_size;
             for e in window {
                 if let SliceData::Stored(replicas) = &e.data {
-                    let bytes = self.fetch_replicated(replicas)?;
-                    let dst = (region_base + e.start - offset) as usize;
-                    out[dst..dst + bytes.len()].copy_from_slice(&bytes);
+                    dsts.push((region_base + e.start - offset) as usize);
+                    sets.push(replicas.clone());
                 }
                 // Holes/gaps: already zero.
             }
+        }
+        for (dst, bytes) in dsts.into_iter().zip(self.fetch_replicated_scatter(sets)?) {
+            out[dst..dst + bytes.len()].copy_from_slice(&bytes);
         }
         Ok(out)
     }

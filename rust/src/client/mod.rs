@@ -22,9 +22,10 @@ use crate::config::Config;
 use crate::error::{Error, Result};
 use crate::meta::{MetaService, MetaTxn};
 use crate::metrics::Metrics;
+use crate::net::{Peer, Request, Transport};
 use crate::storage::{Ring, StorageCluster};
 use crate::types::{
-    Inode, InodeId, Key, RegionId, RegionMeta, SliceData, SlicePtr, Value,
+    Inode, InodeId, Key, RegionId, RegionMeta, ServerId, SliceData, SlicePtr, Value,
 };
 use std::sync::Arc;
 
@@ -114,14 +115,37 @@ pub struct WtfClient {
     pub(crate) storage: Arc<StorageCluster>,
     pub(crate) ring: Ring,
     pub(crate) metrics: Metrics,
+    /// Every cross-component call goes through here: slice I/O scatters
+    /// across replicas/regions, metadata txns travel as envelopes.
+    pub(crate) transport: Arc<Transport>,
 }
 
 impl WtfClient {
+    /// A client with its own instant-link transport (tests, tools).
+    /// Deployments share one transport via [`Self::with_transport`].
     pub fn new(
         config: Config,
         meta: Arc<MetaService>,
         storage: Arc<StorageCluster>,
         ring: Ring,
+    ) -> Self {
+        let workers = config.transport_workers;
+        Self::with_transport(
+            config,
+            meta,
+            storage,
+            ring,
+            Arc::new(Transport::new(crate::net::LinkModel::instant(), workers)),
+        )
+    }
+
+    /// A client bound to an existing deployment transport.
+    pub fn with_transport(
+        config: Config,
+        meta: Arc<MetaService>,
+        storage: Arc<StorageCluster>,
+        ring: Ring,
+        transport: Arc<Transport>,
     ) -> Self {
         WtfClient {
             config,
@@ -129,11 +153,17 @@ impl WtfClient {
             storage,
             ring,
             metrics: Metrics::new(),
+            transport,
         }
     }
 
     pub fn config(&self) -> &Config {
         &self.config
+    }
+
+    /// The transport this client scatters its I/O through.
+    pub fn transport(&self) -> &Arc<Transport> {
+        &self.transport
     }
 
     pub fn metrics(&self) -> &Metrics {
@@ -180,9 +210,26 @@ impl WtfClient {
         }
     }
 
+    /// Non-transactional versioned metadata read, as a transport
+    /// envelope to the metadata service.
+    pub(crate) fn meta_get(&self, key: &Key) -> Option<(Value, u64)> {
+        let via_transport = self
+            .transport
+            .call(
+                self.meta.clone(),
+                Request::MetaGet { key: key.clone() },
+            )
+            .and_then(crate::net::Response::into_meta_value);
+        match via_transport {
+            Ok(v) => v,
+            // Transport-level failure (impossible in-process): direct path.
+            Err(_) => self.meta.get(key),
+        }
+    }
+
     /// Direct (non-transactional) inode fetch.
     pub(crate) fn fetch_inode(&self, id: InodeId) -> Result<Inode> {
-        match self.meta.get(&Key::inode(id)) {
+        match self.meta_get(&Key::inode(id)) {
             Some((Value::Inode(i), _)) => Ok(i),
             Some(_) => Err(Error::CorruptMetadata(format!("inode {id} wrong type"))),
             None => Err(Error::NotFound(format!("inode {id}"))),
@@ -196,7 +243,7 @@ impl WtfClient {
     }
 
     pub(crate) fn fetch_region(&self, rid: RegionId) -> Result<(RegionMeta, u64)> {
-        match self.meta.get(&Key::region(rid)) {
+        match self.meta_get(&Key::region(rid)) {
             Some((Value::Region(r), v)) => Ok((r, v)),
             Some(_) => Err(Error::CorruptMetadata(format!(
                 "region {rid:?} wrong type"
@@ -227,63 +274,178 @@ impl WtfClient {
         Ok(compact::resolve_entries(&self.region_entries(region)?))
     }
 
+    /// Resolve a server id to a transport peer.
+    fn storage_peer(&self, id: ServerId) -> Result<Peer> {
+        Ok(self.storage.get(id)?.clone() as Peer)
+    }
+
     /// Fetch bytes for a replicated slice, failing over across replicas
     /// (§2.9: readers may use any replica).
     pub(crate) fn fetch_replicated(&self, replicas: &[SlicePtr]) -> Result<Vec<u8>> {
-        let mut last_err = Error::InvalidArgument("no replicas".into());
-        for ptr in replicas {
-            match self
-                .storage
-                .get(ptr.server)
-                .and_then(|s| s.retrieve_slice(ptr))
-            {
-                Ok(data) => {
-                    self.metrics.add_bytes_read(data.len() as u64);
-                    return Ok(data);
+        self.fetch_replicated_scatter(vec![replicas.to_vec()])?
+            .pop()
+            .ok_or_else(|| Error::InvalidArgument("no replicas".into()))
+    }
+
+    /// Scatter-gather fetch: issue the primary replica of *every* slice
+    /// concurrently through the transport (one wire time for the whole
+    /// batch), then fail any stragglers over to their remaining replicas.
+    /// Results come back in input order.
+    pub(crate) fn fetch_replicated_scatter(
+        &self,
+        sets: Vec<Vec<SlicePtr>>,
+    ) -> Result<Vec<Vec<u8>>> {
+        // Scatter the primaries.  A dead primary server fails at peer
+        // resolution, before anything is enqueued.
+        let pending: Vec<Result<crate::net::Pending>> = sets
+            .iter()
+            .map(|set| {
+                let first = set
+                    .first()
+                    .ok_or_else(|| Error::InvalidArgument("no replicas".into()))?;
+                let peer = self.storage_peer(first.server)?;
+                Ok(self
+                    .transport
+                    .send(peer, Request::RetrieveSlice { ptr: *first }))
+            })
+            .collect();
+        // Gather; fail over sequentially on the (rare) failures.
+        let mut out = Vec::with_capacity(sets.len());
+        for (i, first_try) in pending.into_iter().enumerate() {
+            let primary = first_try.and_then(|p| p.join()?.into_bytes());
+            let bytes = match primary {
+                Ok(b) => b,
+                Err(mut last_err) => {
+                    let mut recovered = None;
+                    for ptr in &sets[i][1..] {
+                        let attempt = self.storage_peer(ptr.server).and_then(|peer| {
+                            self.transport
+                                .call(peer, Request::RetrieveSlice { ptr: *ptr })?
+                                .into_bytes()
+                        });
+                        match attempt {
+                            Ok(b) => {
+                                recovered = Some(b);
+                                break;
+                            }
+                            Err(e) => last_err = e,
+                        }
+                    }
+                    recovered.ok_or(last_err)?
                 }
-                Err(e) => last_err = e,
-            }
+            };
+            self.metrics.add_bytes_read(bytes.len() as u64);
+            out.push(bytes);
         }
-        Err(last_err)
+        Ok(out)
     }
 
     /// Create `replication` replicas of `data` for `region`, on distinct
     /// servers chosen by the placement ring (§2.7, §2.9), failing over to
-    /// further ring successors when a server is down.
+    /// further ring successors when a server is down.  All replica
+    /// uploads are issued concurrently through the transport.
     pub(crate) fn create_replicated(
         &self,
         data: &[u8],
         region: RegionId,
         replication: u8,
     ) -> Result<Vec<SlicePtr>> {
+        self.create_replicated_parts(&[(region, Arc::from(data))], replication)?
+            .pop()
+            .ok_or_else(|| Error::InvalidArgument("no storage servers".into()))
+    }
+
+    /// Scatter-gather slice creation for a whole operation: every replica
+    /// of every region part is uploaded in ONE transport broadcast (§2.1:
+    /// slices are invisible until the metadata commit, so all uploads are
+    /// safely concurrent — a replication-`r` write costs ~1 wire time,
+    /// not `r`).  Per-part shortfalls fail over to further ring
+    /// successors; degraded replication (fewer live servers than
+    /// replicas) is allowed, as in the paper's failure model.
+    pub(crate) fn create_replicated_parts(
+        &self,
+        parts: &[(RegionId, Arc<[u8]>)],
+        replication: u8,
+    ) -> Result<Vec<Vec<SlicePtr>>> {
         let want = replication.max(1) as usize;
-        // Ask for extra candidates so individual failures can be skipped.
-        let candidates = self
-            .ring
-            .servers_for(region, self.ring.servers().len().min(want + 2));
-        let mut out = Vec::with_capacity(want);
-        let mut last_err = Error::InvalidArgument("no storage servers".into());
-        for sid in candidates {
-            if out.len() == want {
-                break;
-            }
-            match self
-                .storage
-                .get(sid)
-                .and_then(|s| s.create_slice(data, region))
-            {
-                Ok(ptr) => {
-                    self.metrics.add_bytes_written(data.len() as u64);
-                    out.push(ptr);
+        let fanout = self.ring.servers().len().min(want + 2);
+        // Per-part candidate lists; the first `want` live candidates form
+        // the scatter, the rest are failover spares.
+        let mut candidates: Vec<Vec<ServerId>> = Vec::with_capacity(parts.len());
+        for (region, _) in parts {
+            candidates.push(self.ring.servers_for(*region, fanout));
+        }
+        let mut batch: Vec<(Peer, Request)> = Vec::new();
+        let mut routes: Vec<usize> = Vec::new(); // batch index -> part index
+        let mut next_candidate: Vec<usize> = vec![0; parts.len()];
+        let mut last_err: Vec<Option<Error>> = Vec::with_capacity(parts.len());
+        for (i, (region, data)) in parts.iter().enumerate() {
+            let mut err = None;
+            let mut enqueued = 0;
+            while enqueued < want && next_candidate[i] < candidates[i].len() {
+                let sid = candidates[i][next_candidate[i]];
+                next_candidate[i] += 1;
+                match self.storage_peer(sid) {
+                    Ok(peer) => {
+                        batch.push((
+                            peer,
+                            Request::CreateSlice {
+                                hint: *region,
+                                data: data.clone(),
+                            },
+                        ));
+                        routes.push(i);
+                        enqueued += 1;
+                    }
+                    Err(e) => err = Some(e),
                 }
-                Err(e) => last_err = e,
+            }
+            last_err.push(err);
+        }
+        let results = self.transport.broadcast(batch);
+
+        let mut out: Vec<Vec<SlicePtr>> = vec![Vec::new(); parts.len()];
+        for (slot, result) in routes.into_iter().zip(results) {
+            match result.and_then(crate::net::Response::into_slice) {
+                Ok(ptr) => {
+                    self.metrics
+                        .add_bytes_written(parts[slot].1.len() as u64);
+                    out[slot].push(ptr);
+                }
+                Err(e) => last_err[slot] = Some(e),
             }
         }
-        if out.is_empty() {
-            return Err(last_err);
+        // Failover pass: top up parts that fell short, one spare at a
+        // time (rare path, so sequential is fine).
+        for i in 0..parts.len() {
+            while out[i].len() < want && next_candidate[i] < candidates[i].len() {
+                let sid = candidates[i][next_candidate[i]];
+                next_candidate[i] += 1;
+                let attempt = self.storage_peer(sid).and_then(|peer| {
+                    self.transport
+                        .call(
+                            peer,
+                            Request::CreateSlice {
+                                hint: parts[i].0,
+                                data: parts[i].1.clone(),
+                            },
+                        )?
+                        .into_slice()
+                });
+                match attempt {
+                    Ok(ptr) => {
+                        self.metrics.add_bytes_written(parts[i].1.len() as u64);
+                        out[i].push(ptr);
+                    }
+                    Err(e) => last_err[i] = Some(e),
+                }
+            }
+            if out[i].is_empty() {
+                return Err(last_err[i]
+                    .take()
+                    .unwrap_or_else(|| Error::InvalidArgument("no storage servers".into())));
+            }
         }
-        // Degraded replication (fewer live servers than replicas) is
-        // allowed, as in the paper's failure model.
         Ok(out)
     }
 
@@ -307,9 +469,10 @@ impl WtfClient {
         parts
     }
 
-    /// A fresh metadata transaction builder.
+    /// A fresh metadata transaction builder, routed through the
+    /// deployment transport.
     pub(crate) fn meta_txn(&self) -> MetaTxn {
-        MetaTxn::new(self.meta.clone())
+        MetaTxn::with_transport(self.meta.clone(), self.transport.clone())
     }
 }
 

@@ -137,23 +137,28 @@ impl<'c> Transaction<'c> {
             .unwrap_or(self.client.config.replication);
         // Slice creation is offset-independent: split by region size only
         // for placement locality, using the *current* cursor as the hint.
-        let mut pieces = Vec::new();
+        // Every replica of every part uploads in one transport scatter —
+        // nothing is visible until commit, so full concurrency is safe.
+        let mut payloads: Vec<(RegionId, std::sync::Arc<[u8]>)> = Vec::new();
         let mut cursor_off = fd_state.offset;
         let mut consumed = 0usize;
         while consumed < data.len() {
             let (idx, rel) = self.client.config.locate(cursor_off);
             let take = ((self.client.config.region_size - rel) as usize)
                 .min(data.len() - consumed);
-            let rid = RegionId::new(inode, idx);
-            let replicas = self.client.create_replicated(
-                &data[consumed..consumed + take],
-                rid,
-                replication,
-            )?;
-            pieces.push((take as u64, SliceData::Stored(replicas)));
+            payloads.push((
+                RegionId::new(inode, idx),
+                std::sync::Arc::from(&data[consumed..consumed + take]),
+            ));
             consumed += take;
             cursor_off += take as u64;
         }
+        let replica_sets = self.client.create_replicated_parts(&payloads, replication)?;
+        let pieces = payloads
+            .iter()
+            .zip(replica_sets)
+            .map(|((_, chunk), replicas)| (chunk.len() as u64, SliceData::Stored(replicas)))
+            .collect();
         let slice = Slice { pieces };
         Self::exec_paste(self.client, &mut self.state, fd, &slice)?;
         self.log.push(LoggedOp::Write { fd, slice });
@@ -457,14 +462,24 @@ impl<'c> Transaction<'c> {
         }
         let mut data = Vec::new();
         if fetch {
+            // One scatter for every stored piece (cross-server reads
+            // pipeline through the transport).
             data = vec![0u8; len as usize];
+            let mut dsts = Vec::new();
+            let mut sets = Vec::new();
             let mut at = 0usize;
             for (plen, src) in &pieces {
                 if let SliceData::Stored(replicas) = src {
-                    let bytes = client.fetch_replicated(replicas)?;
-                    data[at..at + bytes.len()].copy_from_slice(&bytes);
+                    dsts.push(at);
+                    sets.push(replicas.clone());
                 }
                 at += *plen as usize;
+            }
+            for (dst, bytes) in dsts
+                .into_iter()
+                .zip(client.fetch_replicated_scatter(sets)?)
+            {
+                data[dst..dst + bytes.len()].copy_from_slice(&bytes);
             }
         }
         state.fds[fd].offset += len;

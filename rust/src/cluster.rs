@@ -14,7 +14,7 @@ use crate::error::Result;
 use crate::meta::{MetaService, MetaStore, MetaTxn};
 use crate::meta::MetaOp;
 use crate::metrics::Metrics;
-use crate::net::LinkModel;
+use crate::net::{LinkModel, Transport};
 use crate::storage::{GcCoordinator, GcReport, Ring, StorageCluster, StorageServer};
 use crate::types::{DirEntries, Inode, Key, Value};
 use std::path::PathBuf;
@@ -55,6 +55,12 @@ impl ClusterBuilder {
         self
     }
 
+    /// Size of the transport worker pool (scatter-gather fan-out).
+    pub fn transport_workers(mut self, n: u32) -> Self {
+        self.config.transport_workers = n;
+        self
+    }
+
     /// Put backing files under `dir` instead of a tempdir.
     pub fn data_dir(mut self, dir: PathBuf) -> Self {
         self.data_dir = Some(dir);
@@ -64,6 +70,10 @@ impl ClusterBuilder {
     pub fn build(self) -> Result<Cluster> {
         self.config.validate()?;
         let config = self.config;
+
+        // 0. The deployment transport: all cross-component traffic flows
+        //    through it, and it owns the simulated link cost.
+        let transport = Arc::new(Transport::new(self.link, config.transport_workers));
 
         // 1. Replicated coordinator; storage servers register with it.
         let coordinator = Arc::new(Coordinator::new(config.coordinator_replicas));
@@ -77,7 +87,6 @@ impl ClusterBuilder {
                 id,
                 dir,
                 config.backing_files_per_server,
-                self.link,
             )?));
             coordinator.call(CoordCmd::RegisterServer { id, weight: 1 })?;
         }
@@ -118,6 +127,7 @@ impl ClusterBuilder {
             meta,
             storage,
             ring,
+            transport,
             gc: Mutex::new(GcCoordinator::new()),
         })
     }
@@ -130,6 +140,7 @@ pub struct Cluster {
     meta: Arc<MetaService>,
     storage: Arc<StorageCluster>,
     ring: Ring,
+    transport: Arc<Transport>,
     gc: Mutex<GcCoordinator>,
 }
 
@@ -138,14 +149,21 @@ impl Cluster {
         ClusterBuilder::default()
     }
 
-    /// A new client bound to this deployment.
+    /// A new client bound to this deployment.  All clients share the
+    /// deployment transport (and therefore its worker pool and link).
     pub fn client(&self) -> WtfClient {
-        WtfClient::new(
+        WtfClient::with_transport(
             self.config.clone(),
             self.meta.clone(),
             self.storage.clone(),
             self.ring.clone(),
+            self.transport.clone(),
         )
+    }
+
+    /// The deployment transport.
+    pub fn transport(&self) -> &Arc<Transport> {
+        &self.transport
     }
 
     pub fn config(&self) -> &Config {
@@ -170,7 +188,7 @@ impl Cluster {
         self.gc
             .lock()
             .unwrap()
-            .run(self.meta.store(), &self.storage)
+            .run(self.meta.store(), &self.storage, Some(&self.transport))
     }
 
     /// Aggregate bytes written to all storage servers (Table 2's "W").

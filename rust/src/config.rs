@@ -43,6 +43,10 @@ pub struct Config {
     pub gc_high_watermark: f64,
     /// GC: and stop below this one (§2.8: 20%).
     pub gc_low_watermark: f64,
+    /// Worker threads in the deployment's transport pool — the fan-out
+    /// limit for scatter-gather slice I/O.  `0` degrades to inline
+    /// (serial) execution on the caller thread.
+    pub transport_workers: u32,
 }
 
 impl Default for Config {
@@ -61,6 +65,7 @@ impl Default for Config {
             txn_retry_budget: 16,
             gc_high_watermark: 0.5,
             gc_low_watermark: 0.2,
+            transport_workers: 8,
         }
     }
 }

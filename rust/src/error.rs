@@ -4,60 +4,51 @@
 //! *conflict* (retryable by the client-side retry layer, §2.6) or fail a
 //! *conditional append* (the EOF fast-path of §2.5, also retryable with a
 //! fallback); everything else is an environmental or usage error.
+//!
+//! `Display`/`Error` are implemented by hand: the offline build carries
+//! no third-party crates (no `thiserror`).
 
 use crate::types::{ServerId, Space};
+use std::fmt;
 
 /// Library-wide result alias.
 pub type Result<T, E = Error> = std::result::Result<T, E>;
 
 /// Library-wide error type.
-#[derive(Debug, thiserror::Error)]
+#[derive(Debug)]
 pub enum Error {
     /// A metadata transaction observed a version change in its read set.
     /// The WTF retry layer replays the op log on this error; it only
     /// surfaces to applications when replay observes a different outcome.
-    #[error("metadata transaction conflict on {space:?}:{key}")]
     TxnConflict { space: Space, key: String },
 
     /// A conditional EOF-relative append exceeded its region's capacity;
     /// the writer must fall back to an explicit-offset write (§2.5).
-    #[error("conditional append out of region bounds (eof={eof}, len={len}, cap={cap})")]
     CondAppendFailed { eof: u64, len: u64, cap: u64 },
 
     /// A transaction replay observed an application-visible divergence and
     /// must abort to the application (§2.6).
-    #[error("transaction aborted: {reason}")]
     TxnAborted { reason: String },
 
     /// Too many consecutive conflict-retries; the transaction gave up.
-    #[error("transaction retry budget exhausted after {attempts} attempts")]
     RetriesExhausted { attempts: u32 },
 
-    #[error("no such file or directory: {0}")]
     NotFound(String),
 
-    #[error("file exists: {0}")]
     AlreadyExists(String),
 
-    #[error("is a directory: {0}")]
     IsDirectory(String),
 
-    #[error("not a directory: {0}")]
     NotADirectory(String),
 
-    #[error("directory not empty: {0}")]
     DirectoryNotEmpty(String),
 
-    #[error("invalid argument: {0}")]
     InvalidArgument(String),
 
-    #[error("operation not supported: {0}")]
     Unsupported(String),
 
-    #[error("storage server {0} unavailable")]
     ServerUnavailable(ServerId),
 
-    #[error("slice not found on server {server}: backing={backing} off={offset} len={len}")]
     SliceNotFound {
         server: ServerId,
         backing: u32,
@@ -65,20 +56,74 @@ pub enum Error {
         len: u64,
     },
 
-    #[error("corrupt metadata: {0}")]
     CorruptMetadata(String),
 
-    #[error("coordinator has no quorum ({alive}/{total} replicas alive)")]
     NoQuorum { alive: usize, total: usize },
 
-    #[error("artifact error: {0}")]
     Artifact(String),
 
-    #[error("xla runtime error: {0}")]
     Xla(String),
 
-    #[error(transparent)]
-    Io(#[from] std::io::Error),
+    Io(std::io::Error),
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Error::TxnConflict { space, key } => {
+                write!(f, "metadata transaction conflict on {space:?}:{key}")
+            }
+            Error::CondAppendFailed { eof, len, cap } => write!(
+                f,
+                "conditional append out of region bounds (eof={eof}, len={len}, cap={cap})"
+            ),
+            Error::TxnAborted { reason } => write!(f, "transaction aborted: {reason}"),
+            Error::RetriesExhausted { attempts } => write!(
+                f,
+                "transaction retry budget exhausted after {attempts} attempts"
+            ),
+            Error::NotFound(p) => write!(f, "no such file or directory: {p}"),
+            Error::AlreadyExists(p) => write!(f, "file exists: {p}"),
+            Error::IsDirectory(p) => write!(f, "is a directory: {p}"),
+            Error::NotADirectory(p) => write!(f, "not a directory: {p}"),
+            Error::DirectoryNotEmpty(p) => write!(f, "directory not empty: {p}"),
+            Error::InvalidArgument(m) => write!(f, "invalid argument: {m}"),
+            Error::Unsupported(m) => write!(f, "operation not supported: {m}"),
+            Error::ServerUnavailable(id) => write!(f, "storage server {id} unavailable"),
+            Error::SliceNotFound {
+                server,
+                backing,
+                offset,
+                len,
+            } => write!(
+                f,
+                "slice not found on server {server}: backing={backing} off={offset} len={len}"
+            ),
+            Error::CorruptMetadata(m) => write!(f, "corrupt metadata: {m}"),
+            Error::NoQuorum { alive, total } => write!(
+                f,
+                "coordinator has no quorum ({alive}/{total} replicas alive)"
+            ),
+            Error::Artifact(m) => write!(f, "artifact error: {m}"),
+            Error::Xla(m) => write!(f, "xla runtime error: {m}"),
+            Error::Io(e) => e.fmt(f),
+        }
+    }
+}
+
+impl std::error::Error for Error {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            Error::Io(e) => Some(e),
+            _ => None,
+        }
+    }
+}
+
+impl From<std::io::Error> for Error {
+    fn from(e: std::io::Error) -> Self {
+        Error::Io(e)
+    }
 }
 
 impl Error {
@@ -92,6 +137,7 @@ impl Error {
     }
 }
 
+#[cfg(feature = "xla-runtime")]
 impl From<xla::Error> for Error {
     fn from(e: xla::Error) -> Self {
         Error::Xla(e.to_string())

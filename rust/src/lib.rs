@@ -15,13 +15,27 @@
 //!
 //! ## Layer map
 //!
-//! * [`meta`] — the transactional metadata store (HyperDex+Warp substrate).
-//! * [`storage`] — slice storage servers: backing files, placement, GC.
+//! * [`net`] — the `Transport` RPC layer: request/response envelopes, a
+//!   worker-pool in-process implementation, scatter-gather
+//!   `broadcast`/`join`, and the latency/bandwidth `LinkModel` it
+//!   charges.  Every cross-component call below travels through it, and
+//!   replica fan-out overlaps on its workers (a replication-`r` write
+//!   costs ~1 wire time instead of `r`).
+//! * [`meta`] — the transactional metadata store (HyperDex+Warp
+//!   substrate); serves commits and versioned gets as transport
+//!   envelopes.
+//! * [`storage`] — slice storage servers: backing files, placement, GC;
+//!   serve `CreateSlice`/`RetrieveSlice` envelopes.
 //! * [`coordinator`] — the replicated coordinator (Replicant substrate).
-//! * [`client`] — the WTF client library: POSIX + file slicing + txn retry.
-//! * [`baseline`] — "hdfs-lite", the comparison filesystem of the paper.
+//! * [`client`] — the WTF client library: POSIX + file slicing + txn
+//!   retry; scatters all replica uploads and multi-region reads for one
+//!   operation concurrently through the transport.
+//! * [`baseline`] — "hdfs-lite", the comparison filesystem of the paper,
+//!   ported to the same transport (its write pipeline stays a sequential
+//!   replica chain — that is the protocol under comparison).
 //! * [`mapreduce`] — the sort application of §4.1, conventional vs slicing.
-//! * [`runtime`] — PJRT execution of the AOT-compiled JAX/Pallas kernels.
+//! * [`runtime`] — PJRT execution of the AOT-compiled JAX/Pallas kernels
+//!   (behind the `xla-runtime` feature; a NativeCompute oracle otherwise).
 //! * [`sim`] — discrete-event cluster simulator calibrated to the paper's
 //!   testbed (used by the benchmark harness to regenerate figures).
 //! * [`bench`] — workload generators, statistics and the per-figure harness.

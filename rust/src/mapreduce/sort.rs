@@ -9,6 +9,11 @@
 //! | bucketing | read R, write R    | read R, **paste pointers**     |
 //! | sorting   | read R, write R    | read R, **paste permutation**  |
 //! | merging   | read R, write R    | **concat** (metadata only)     |
+//!
+//! Shuffle reads pipeline across storage servers: a bucket file is a
+//! patchwork of slices scattered over the cluster, and the client's
+//! gather-read issues every extent fetch concurrently through the
+//! transport (one wire time per bucket rather than one per slice).
 
 use super::bulkfs::BulkFs;
 use super::records::{bucket_bounds, extract_keys, RecordFormat};

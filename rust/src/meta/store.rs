@@ -248,6 +248,23 @@ impl MetaService {
     }
 }
 
+/// The transport server side of the metadata plane: commits and
+/// versioned point reads arrive as envelopes, same as storage traffic.
+/// (The metadata plane's cost model is the transaction floor above, so
+/// these envelopes report no wire bytes to the data-plane link.)
+impl crate::net::Handler for MetaService {
+    fn serve(&self, req: &crate::net::Request) -> Result<crate::net::Response> {
+        use crate::net::{Request, Response};
+        match req {
+            Request::MetaCommit { commit } => Ok(Response::Outcomes(self.commit(commit)?)),
+            Request::MetaGet { key } => Ok(Response::MetaValue(self.get(key))),
+            other => Err(Error::Unsupported(format!(
+                "metadata service cannot serve {other:?}"
+            ))),
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;

@@ -8,6 +8,7 @@
 use super::ops::{MetaOp, OpOutcome};
 use super::store::{Commit, MetaService};
 use crate::error::Result;
+use crate::net::{Request, Transport};
 use crate::types::{Key, Value};
 use std::collections::HashMap;
 use std::sync::Arc;
@@ -15,6 +16,10 @@ use std::sync::Arc;
 /// An in-flight metadata transaction.
 pub struct MetaTxn {
     service: Arc<MetaService>,
+    /// When present, reads and the commit travel as transport envelopes
+    /// (the deployment shape); otherwise they are direct method calls
+    /// (bootstrap and unit tests).
+    transport: Option<Arc<Transport>>,
     /// Version observed per key (first read wins; later reads of the same
     /// key are served from the cache for snapshot-consistency within the
     /// transaction).
@@ -27,9 +32,18 @@ impl MetaTxn {
     pub fn new(service: Arc<MetaService>) -> Self {
         MetaTxn {
             service,
+            transport: None,
             reads: HashMap::new(),
             read_order: Vec::new(),
             ops: Vec::new(),
+        }
+    }
+
+    /// A transaction whose reads and commit go through `transport`.
+    pub fn with_transport(service: Arc<MetaService>, transport: Arc<Transport>) -> Self {
+        MetaTxn {
+            transport: Some(transport),
+            ..MetaTxn::new(service)
         }
     }
 
@@ -40,7 +54,22 @@ impl MetaTxn {
         if let Some((v, _)) = self.reads.get(key) {
             return v.clone();
         }
-        let fetched = self.service.get(key);
+        let fetched = match &self.transport {
+            Some(t) => match t
+                .call(
+                    self.service.clone(),
+                    Request::MetaGet { key: key.clone() },
+                )
+                .and_then(crate::net::Response::into_meta_value)
+            {
+                Ok(v) => v,
+                // A transport-level failure (cannot happen for MetaGet in
+                // the in-process deployment) falls back to the direct
+                // path rather than mis-reporting the key as absent.
+                Err(_) => self.service.get(key),
+            },
+            None => self.service.get(key),
+        };
         let (value, version) = match fetched {
             Some((v, ver)) => (Some(v), ver),
             None => (None, self.service.store().version(key)),
@@ -76,7 +105,12 @@ impl MetaTxn {
                 .collect(),
             ops: self.ops,
         };
-        self.service.commit(&commit)
+        match &self.transport {
+            Some(t) => t
+                .call(self.service.clone(), Request::MetaCommit { commit })?
+                .into_outcomes(),
+            None => self.service.commit(&commit),
+        }
     }
 }
 

@@ -1,11 +1,26 @@
-//! In-process "network": latency/bandwidth injection between components.
+//! In-process "network": the [`Transport`] RPC layer plus the
+//! latency/bandwidth [`LinkModel`] it charges.
 //!
-//! The functional deployment runs every server in one process, so RPC is a
-//! method call.  To keep the *shape* of a distributed deployment (and to
-//! let real-mode benchmarks model the paper's GbE testbed), every
-//! cross-component call site threads through a [`LinkModel`] that can
-//! charge latency and bandwidth with thread sleeps.  Unit tests use
-//! [`LinkModel::instant`].
+//! The functional deployment runs every server in one process, so an RPC
+//! bottoms out in a method call — but every cross-component call still
+//! travels as a [`transport::Request`] envelope through a [`Transport`],
+//! which keeps the *shape* of a distributed deployment and lets
+//! real-mode benchmarks model the paper's GbE testbed:
+//!
+//! * [`LinkModel`] prices one logical link (client ↔ server): one-way
+//!   propagation delay plus payload bandwidth, charged with thread
+//!   sleeps.  Unit tests use [`LinkModel::instant`], which never sleeps.
+//! * [`Transport`] executes envelopes on a worker pool and charges the
+//!   link *on the worker*, so a scatter-gather
+//!   ([`Transport::broadcast`]) of `r` replica uploads costs ~one wire
+//!   time instead of `r` — the §2.1 concurrency the slice-first write
+//!   protocol permits.  Storage servers, hdfs-lite data nodes, and the
+//!   metadata service all serve requests through
+//!   [`transport::Handler`] implementations.
+
+pub mod transport;
+
+pub use transport::{Handler, Peer, Pending, Request, Response, Transport};
 
 use std::time::Duration;
 
@@ -37,14 +52,19 @@ impl LinkModel {
     }
 
     /// Time to move `bytes` across this link, one way.
+    ///
+    /// The nanosecond arithmetic runs in u128: `bytes * 1e9` overflows
+    /// u64 for payloads beyond ~18 GB, and the previous `saturating_mul`
+    /// silently under-charged bandwidth for them.
     pub fn transfer_time(&self, bytes: u64) -> Duration {
         let bw = match self.bandwidth {
             Some(bw) if bw > 0 => {
-                Duration::from_nanos((bytes.saturating_mul(1_000_000_000) / bw).max(0))
+                let nanos = (bytes as u128) * 1_000_000_000u128 / bw as u128;
+                Duration::from_nanos(u64::try_from(nanos).unwrap_or(u64::MAX))
             }
             _ => Duration::ZERO,
         };
-        self.half_rtt + bw
+        self.half_rtt.saturating_add(bw)
     }
 
     /// Sleep for the cost of sending `bytes` over this link.  A no-op for
@@ -85,5 +105,17 @@ mod tests {
     #[test]
     fn charge_is_noop_when_instant() {
         LinkModel::instant().charge(u64::MAX / 2);
+    }
+
+    #[test]
+    fn transfer_time_survives_huge_payloads() {
+        // Regression: 32 GB at 125 MB/s is 256 s.  The old u64 nanosecond
+        // product saturated at ~18.4 GB and reported ~147 s instead.
+        let l = LinkModel::gigabit();
+        let t = l.transfer_time(32_000_000_000);
+        assert!(t >= Duration::from_secs(255), "{t:?}");
+        assert!(t <= Duration::from_secs(257), "{t:?}");
+        // Monotone beyond the old saturation point.
+        assert!(l.transfer_time(40_000_000_000) > t);
     }
 }

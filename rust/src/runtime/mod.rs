@@ -149,6 +149,7 @@ impl SortCompute for NativeCompute {
 }
 
 /// A compiled artifact ready to execute.
+#[cfg(feature = "xla-runtime")]
 struct Loaded {
     meta: ArtifactMeta,
     exe: xla::PjRtLoadedExecutable,
@@ -156,11 +157,65 @@ struct Loaded {
 
 /// The PJRT runtime: one CPU client, one compiled executable per model
 /// variant, loaded once at startup.
+#[cfg(feature = "xla-runtime")]
 pub struct XlaRuntime {
     partition_variants: Vec<Loaded>,
     sort_variants: Vec<Loaded>,
 }
 
+/// Stub runtime for builds without the `xla-runtime` feature (the
+/// offline default: the vendored `xla` crate is unavailable).  Loading
+/// always fails cleanly, so every caller falls back to
+/// [`NativeCompute`].
+#[cfg(not(feature = "xla-runtime"))]
+pub struct XlaRuntime {
+    _unconstructible: std::convert::Infallible,
+}
+
+#[cfg(not(feature = "xla-runtime"))]
+impl XlaRuntime {
+    /// Default artifact location (relative to the repo root).
+    pub fn default_dir() -> PathBuf {
+        PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+    }
+
+    /// Always fails: this build has no PJRT backend.
+    pub fn load(dir: &Path) -> Result<XlaRuntime> {
+        let _ = dir;
+        Err(Error::Artifact(
+            "built without the `xla-runtime` feature; rebuild with \
+             --features xla-runtime (requires the vendored xla crate)"
+                .into(),
+        ))
+    }
+
+    /// Always fails: this build has no PJRT backend.
+    pub fn load_default() -> Result<XlaRuntime> {
+        Self::load(&Self::default_dir())
+    }
+
+    /// Artifact inventory (empty: the stub cannot be constructed).
+    pub fn inventory(&self) -> Vec<&ArtifactMeta> {
+        Vec::new()
+    }
+}
+
+#[cfg(not(feature = "xla-runtime"))]
+impl SortCompute for XlaRuntime {
+    fn partition(&self, _keys: &[i32], _bounds: &[i32]) -> Result<(Vec<u32>, Vec<u64>)> {
+        match self._unconstructible {}
+    }
+
+    fn argsort(&self, _keys: &[i32]) -> Result<Vec<u32>> {
+        match self._unconstructible {}
+    }
+
+    fn name(&self) -> &'static str {
+        "xla-unavailable"
+    }
+}
+
+#[cfg(feature = "xla-runtime")]
 impl XlaRuntime {
     /// Default artifact location (relative to the repo root).
     pub fn default_dir() -> PathBuf {
@@ -243,10 +298,12 @@ impl XlaRuntime {
 }
 
 /// How many keys one call of a sort artifact can sort independently.
+#[cfg(feature = "xla-runtime")]
 fn sort_capacity(meta: &ArtifactMeta) -> usize {
     meta.block.unwrap_or(meta.n)
 }
 
+#[cfg(feature = "xla-runtime")]
 impl SortCompute for XlaRuntime {
     fn partition(&self, keys: &[i32], bounds: &[i32]) -> Result<(Vec<u32>, Vec<u64>)> {
         let logical = bounds.len() + 1;
@@ -331,6 +388,7 @@ impl SortCompute for XlaRuntime {
 
 /// Stable k-way merge of device-sorted tiles (for inputs larger than the
 /// biggest artifact tile).
+#[cfg(feature = "xla-runtime")]
 fn merge_argsort(rt: &XlaRuntime, keys: &[i32], tile: usize) -> Result<Vec<u32>> {
     let mut runs: Vec<Vec<u32>> = Vec::new();
     for (t, chunk) in keys.chunks(tile).enumerate() {

@@ -16,6 +16,7 @@
 
 use crate::error::Result;
 use crate::meta::MetaStore;
+use crate::net::{Peer, Request, Transport};
 use crate::types::{ServerId, SliceData, Space, Value};
 use std::collections::HashMap;
 use std::sync::Arc;
@@ -62,12 +63,33 @@ pub fn union_extents(a: &[(u64, u64)], b: &[(u64, u64)]) -> Vec<(u64, u64)> {
 /// read them through the client library; in-process we hand the map to
 /// the servers directly (DESIGN.md §5).
 pub fn scan_in_use(meta: &MetaStore) -> InUseMap {
-    scan_in_use_with_spills(meta, None)
+    scan_in_use_with_spills(meta, None, None)
+}
+
+/// Fetch the bytes behind a spill pointer — through the transport when
+/// one is supplied (so GC traffic pays the same modeled wire cost as
+/// client traffic), directly otherwise (unit tests).
+fn fetch_spill(
+    cluster: &StorageCluster,
+    transport: Option<&Transport>,
+    ptr: &crate::types::SlicePtr,
+) -> Result<Vec<u8>> {
+    let server = cluster.get(ptr.server)?;
+    match transport {
+        Some(t) => t
+            .call(server.clone() as Peer, Request::RetrieveSlice { ptr: *ptr })?
+            .into_bytes(),
+        None => server.retrieve_slice(ptr),
+    }
 }
 
 /// [`scan_in_use`] that also decodes tier-2 spill slices (fetched from
 /// `cluster`) so the data they reference stays protected.
-pub fn scan_in_use_with_spills(meta: &MetaStore, cluster: Option<&StorageCluster>) -> InUseMap {
+pub fn scan_in_use_with_spills(
+    meta: &MetaStore,
+    cluster: Option<&StorageCluster>,
+    transport: Option<&Transport>,
+) -> InUseMap {
     // Live inodes: regions belonging to unlinked files are garbage too
     // (§2.8: "as an application overwrites or deletes files, slices
     // become unused").  Region keys embed the inode id.
@@ -96,8 +118,9 @@ pub fn scan_in_use_with_spills(meta: &MetaStore, cluster: Option<&StorageCluster
             }
             if let Some(cluster) = cluster {
                 for p in replicas {
-                    let Ok(server) = cluster.get(p.server) else { continue };
-                    let Ok(bytes) = server.retrieve_slice(p) else { continue };
+                    let Ok(bytes) = fetch_spill(cluster, transport, p) else {
+                        continue;
+                    };
                     if let Ok(entries) = crate::client::spill::decode_entries(&bytes) {
                         for e in entries {
                             if let SliceData::Stored(rs) = e.data {
@@ -145,9 +168,16 @@ impl GcCoordinator {
 
     /// Run one GC round: scan metadata, protect anything live in either
     /// of the last two scans or written since the previous scan, and
-    /// sparse-rewrite every backing file on every server.
-    pub fn run(&mut self, meta: &MetaStore, cluster: &StorageCluster) -> Result<GcReport> {
-        let current = scan_in_use_with_spills(meta, Some(cluster));
+    /// sparse-rewrite every backing file on every server.  Spill reads
+    /// go through `transport` when supplied, so the scan pays the same
+    /// modeled wire cost as any other reader.
+    pub fn run(
+        &mut self,
+        meta: &MetaStore,
+        cluster: &StorageCluster,
+        transport: Option<&Transport>,
+    ) -> Result<GcReport> {
+        let current = scan_in_use_with_spills(meta, Some(cluster), transport);
         let mut report = GcReport::default();
 
         // First scan ever: record state, collect nothing (a slice created
@@ -217,7 +247,6 @@ fn server_backing_len(server: &Arc<crate::storage::StorageServer>, backing: u32)
 mod tests {
     use super::*;
     use crate::meta::{Commit, MetaOp};
-    use crate::net::LinkModel;
     use crate::storage::StorageServer;
     use crate::types::{Key, Placement, RegionEntry, RegionId};
 
@@ -240,8 +269,7 @@ mod tests {
 
     fn cluster_with_one_server() -> (MetaStore, StorageCluster) {
         let meta = MetaStore::new(4, 1);
-        let server =
-            Arc::new(StorageServer::new(0, None, 2, LinkModel::instant()).unwrap());
+        let server = Arc::new(StorageServer::new(0, None, 2).unwrap());
         (meta, StorageCluster::new(vec![server]))
     }
 
@@ -283,11 +311,11 @@ mod tests {
 
         let mut gc = GcCoordinator::new();
         // Scan 1: records state, collects nothing.
-        let r1 = gc.run(&meta, &cluster).unwrap();
+        let r1 = gc.run(&meta, &cluster, None).unwrap();
         assert_eq!(r1.bytes_reclaimed, 0);
         // Scan 2: the dead slice was absent from both scans AND below the
         // horizon -> collected.
-        let r2 = gc.run(&meta, &cluster).unwrap();
+        let r2 = gc.run(&meta, &cluster, None).unwrap();
         assert_eq!(r2.bytes_reclaimed, 256);
         // The live slice still reads back.
         assert_eq!(
@@ -302,12 +330,12 @@ mod tests {
         let server = cluster.get(0).unwrap().clone();
         let region = RegionId::new(1, 0);
         let mut gc = GcCoordinator::new();
-        gc.run(&meta, &cluster).unwrap(); // scan 1
+        gc.run(&meta, &cluster, None).unwrap(); // scan 1
 
         // Created AFTER scan 1, referenced only after scan 2 runs — the
         // exact race §2.8 defends against.
         let racing = server.create_slice(&[3u8; 64], region).unwrap();
-        let r2 = gc.run(&meta, &cluster).unwrap();
+        let r2 = gc.run(&meta, &cluster, None).unwrap();
         assert_eq!(r2.bytes_reclaimed, 0, "racing slice must survive");
         reference_in_meta(&meta, region, racing);
         assert_eq!(server.retrieve_slice(&racing).unwrap(), vec![3u8; 64]);
@@ -348,8 +376,8 @@ mod tests {
             
             .unwrap();
         let mut gc = GcCoordinator::new();
-        gc.run(&meta, &cluster).unwrap();
-        let r = gc.run(&meta, &cluster).unwrap();
+        gc.run(&meta, &cluster, None).unwrap();
+        let r = gc.run(&meta, &cluster, None).unwrap();
         assert_eq!(r.bytes_reclaimed, 512);
         let _ = meta; // metadata never referenced the slice
     }

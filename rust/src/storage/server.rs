@@ -10,12 +10,18 @@
 //!
 //! Servers retain no information about the filesystem structure; all
 //! bookkeeping is outsourced to the metadata store.
+//!
+//! Clients never call these methods directly: requests arrive as
+//! [`Request`] envelopes through the [`crate::net::Transport`], which
+//! also charges the simulated wire cost (so a scatter of replica creates
+//! overlaps their transfers).  The [`Handler`] impl below is the server
+//! side of that RPC.
 
 use super::backing::BackingFile;
 use super::placement::backing_of;
 use crate::error::{Error, Result};
 use crate::metrics::Metrics;
-use crate::net::LinkModel;
+use crate::net::{Handler, Request, Response};
 use crate::types::{RegionId, ServerId, SlicePtr};
 use std::collections::HashMap;
 use std::path::PathBuf;
@@ -30,18 +36,12 @@ pub struct StorageServer {
     dir: PathBuf,
     backings: Vec<Arc<BackingFile>>,
     metrics: Metrics,
-    link: LinkModel,
 }
 
 impl StorageServer {
     /// Create a server over `dir` (a tempdir when `None`) with
     /// `num_backings` backing files.
-    pub fn new(
-        id: ServerId,
-        dir: Option<PathBuf>,
-        num_backings: u32,
-        link: LinkModel,
-    ) -> Result<Self> {
+    pub fn new(id: ServerId, dir: Option<PathBuf>, num_backings: u32) -> Result<Self> {
         let (tempdir, dir) = match dir {
             Some(d) => {
                 std::fs::create_dir_all(&d)?;
@@ -62,7 +62,6 @@ impl StorageServer {
             dir,
             backings,
             metrics: Metrics::new(),
-            link,
         })
     }
 
@@ -86,7 +85,6 @@ impl StorageServer {
     /// region this write belongs to, steering backing-file selection for
     /// locality (§2.7).
     pub fn create_slice(&self, data: &[u8], hint: RegionId) -> Result<SlicePtr> {
-        self.link.charge(data.len() as u64);
         let backing = &self.backings
             [backing_of(hint, self.id, self.backings.len() as u32) as usize];
         let offset = backing.append(data)?;
@@ -125,7 +123,6 @@ impl StorageServer {
                 offset: ptr.offset,
                 len: ptr.len,
             })?;
-        self.link.charge(data.len() as u64);
         self.metrics.add_bytes_read(ptr.len);
         self.metrics.add_ops_read(1);
         Ok(data)
@@ -181,6 +178,22 @@ impl StorageServer {
     }
 }
 
+/// The transport server side: a storage server understands exactly the
+/// two data-plane envelopes its §2.2 API defines.
+impl Handler for StorageServer {
+    fn serve(&self, req: &Request) -> Result<Response> {
+        match req {
+            Request::CreateSlice { hint, data } => {
+                Ok(Response::Slice(self.create_slice(data, *hint)?))
+            }
+            Request::RetrieveSlice { ptr } => Ok(Response::Bytes(self.retrieve_slice(ptr)?)),
+            other => Err(Error::Unsupported(format!(
+                "storage server cannot serve {other:?}"
+            ))),
+        }
+    }
+}
+
 /// The set of storage servers a client can reach, indexed by id.
 #[derive(Clone, Debug, Default)]
 pub struct StorageCluster {
@@ -227,7 +240,7 @@ mod tests {
     use super::*;
 
     fn server(id: ServerId) -> StorageServer {
-        StorageServer::new(id, None, 3, LinkModel::instant()).unwrap()
+        StorageServer::new(id, None, 3).unwrap()
     }
 
     #[test]
@@ -297,6 +310,29 @@ mod tests {
             len: 4,
         };
         assert!(s.retrieve_slice(&wrong_server).is_err());
+    }
+
+    #[test]
+    fn handler_serves_create_and_retrieve_envelopes() {
+        let s = Arc::new(server(1));
+        let hint = RegionId::new(4, 0);
+        let created = s
+            .serve(&Request::CreateSlice {
+                hint,
+                data: Arc::from(&b"enveloped"[..]),
+            })
+            .unwrap();
+        let Response::Slice(ptr) = created else {
+            panic!("{created:?}")
+        };
+        let fetched = s.serve(&Request::RetrieveSlice { ptr }).unwrap();
+        assert_eq!(fetched, Response::Bytes(b"enveloped".to_vec()));
+        // Envelopes outside the storage plane are rejected.
+        assert!(s
+            .serve(&Request::MetaGet {
+                key: crate::types::Key::sys("x")
+            })
+            .is_err());
     }
 
     #[test]

@@ -82,9 +82,10 @@ fn transaction_across_files_with_concurrent_conflict() {
 
 // ------------------------------------------------------------- sort + XLA
 
-/// The artifacts directory produced by `make artifacts`.
+/// The artifacts directory produced by `make artifacts` — only usable
+/// when the PJRT backend is compiled in.
 fn artifacts_available() -> bool {
-    XlaRuntime::default_dir().join("manifest.json").exists()
+    cfg!(feature = "xla-runtime") && XlaRuntime::default_dir().join("manifest.json").exists()
 }
 
 #[test]
