@@ -1,9 +1,19 @@
 //! Metadata-store hot paths: gets, blind appends, conditional appends,
-//! multi-key commits, conflict detection.  The paper's write path costs
-//! one metadata transaction per write — this is the L3 floor.
+//! multi-key commits, conflict detection — plus the replicated-commit
+//! sweep (unreplicated chain store vs a 3-replica Paxos shard group).
+//! The paper's write path costs one metadata transaction per write —
+//! this is the L3 floor.
+//!
+//! Set `WTF_BENCH_JSON=<path>` to also write the replicated-commit rows
+//! as JSON (committed as `BENCH_meta_store.json` for cross-PR
+//! trajectory).
 
+use std::sync::Arc;
+use wtf::bench::stats::Summary;
 use wtf::bench::Bench;
-use wtf::meta::{Commit, MetaOp, MetaStore};
+use wtf::coordinator::lease::LeaseClock;
+use wtf::meta::{Commit, MetaOp, MetaStore, ReplicatedMetaStore};
+use wtf::net::{LinkModel, Transport};
 use wtf::types::{Key, Placement, RegionEntry, RegionMeta, SliceData, SlicePtr, Value};
 
 fn stored(len: u64) -> SliceData {
@@ -13,6 +23,109 @@ fn stored(len: u64) -> SliceData {
         offset: 0,
         len,
     }])
+}
+
+/// Replicated-commit sweep: the same single-op commit against the
+/// unreplicated chain store and a 3-replica Paxos group (lease fast
+/// path: one scatter-gathered accept round per commit).  Measured
+/// wall-clock is CPU cost (instant link); the JSON also carries the
+/// gigabit wire model, where a quorum commit costs 2 wire rounds vs 1
+/// unreplicated — the ≤2x acceptance bound, and ~1.06x once the
+/// paper's ~3 ms HyperDex transaction floor is included.
+fn replicated_sweep() -> (Summary, Summary) {
+    let unrep = MetaStore::new(8, 2);
+    let mut n = 0u64;
+    let s_un = Bench::new("meta/commit-unreplicated").iters(50).run(|| {
+        n += 1;
+        unrep.commit(&Commit {
+            reads: vec![],
+            ops: vec![MetaOp::Put {
+                key: Key::sys(format!("u{n}")),
+                value: Value::U64(n),
+            }],
+        })
+    });
+    // Long lease so the sweep measures the fast path, not renewals.
+    let rep = ReplicatedMetaStore::new(
+        8,
+        3,
+        Arc::new(Transport::instant()),
+        LeaseClock::auto(),
+        60_000,
+    );
+    let mut m = 0u64;
+    let s_rep = Bench::new("meta/commit-paxos3-quorum").iters(50).run(|| {
+        m += 1;
+        rep.commit(
+            &Commit {
+                reads: vec![],
+                ops: vec![MetaOp::Put {
+                    key: Key::sys(format!("r{m}")),
+                    value: Value::U64(m),
+                }],
+            },
+            true,
+        )
+    });
+    println!(
+        "  └─ quorum/unreplicated (measured CPU): {:.2}x; wire model: 2 rounds vs 1",
+        s_rep.mean / s_un.mean.max(1.0)
+    );
+    (s_un, s_rep)
+}
+
+/// Emit the replicated-commit rows in the `BENCH_meta_store.json`
+/// schema (status "measured"; re-running this bench replaces the
+/// committed "modeled" placeholder with real wall-clock rows).
+fn write_json(path: &str, s_un: &Summary, s_rep: &Summary) {
+    let half_rtt_ns = LinkModel::gigabit().transfer_time(0).as_nanos() as u64;
+    let txn_floor_ns = 3_000_000u64; // the paper's ~3 ms HyperDex floor
+    let wire_un = 2 * half_rtt_ns; // request + response
+    let wire_rep = 4 * half_rtt_ns; // + accept scatter + ack gather
+    let mut out = String::from("{\n  \"bench\": \"meta_store/replicated_commit\",\n");
+    out.push_str(
+        "  \"description\": \"Single-op commit: unreplicated chain store vs \
+         3-replica Paxos shard group on the leader-lease fast path (one \
+         scatter-gathered accept round; learn piggybacks). Produced by \
+         `cargo bench --bench meta_store` with WTF_BENCH_JSON set; see \
+         rust/benches/meta_store.rs.\",\n",
+    );
+    out.push_str("  \"status\": \"measured\",\n");
+    out.push_str("  \"link_model\": \"gigabit (0.1 ms half-rtt, 125 MB/s)\",\n");
+    out.push_str(&format!("  \"txn_floor_ns\": {txn_floor_ns},\n"));
+    out.push_str("  \"rows\": [\n");
+    for (i, (mode, rounds, wire, s)) in [
+        ("unreplicated", 1u32, wire_un, s_un),
+        ("paxos-3-quorum", 2u32, wire_rep, s_rep),
+    ]
+    .iter()
+    .enumerate()
+    {
+        out.push_str(&format!(
+            "    {{\"mode\": \"{mode}\", \"wire_rounds\": {rounds}, \
+             \"model_wire_ns\": {wire}, \"model_with_floor_ns\": {}, \
+             \"mean_ns\": {:.0}, \"p50_ns\": {}, \"p95_ns\": {}}}{}\n",
+            wire + txn_floor_ns,
+            s.mean,
+            s.p50,
+            s.p95,
+            if i == 0 { "," } else { "" }
+        ));
+    }
+    out.push_str(&format!(
+        "  ],\n  \"quorum_over_unreplicated_wire\": {:.3},\n",
+        wire_rep as f64 / wire_un as f64
+    ));
+    out.push_str(&format!(
+        "  \"quorum_over_unreplicated_with_floor\": {:.3},\n",
+        (wire_rep + txn_floor_ns) as f64 / (wire_un + txn_floor_ns) as f64
+    ));
+    out.push_str(&format!(
+        "  \"quorum_over_unreplicated_measured_cpu\": {:.3}\n}}\n",
+        s_rep.mean / s_un.mean.max(1.0)
+    ));
+    std::fs::write(path, out).expect("write WTF_BENCH_JSON");
+    println!("  └─ wrote {path}");
 }
 
 fn main() {
@@ -131,4 +244,10 @@ fn main() {
         };
         let _ = store.commit(&stale);
     });
+
+    // Unreplicated vs quorum-replicated commit latency.
+    let (s_un, s_rep) = replicated_sweep();
+    if let Ok(path) = std::env::var("WTF_BENCH_JSON") {
+        write_json(&path, &s_un, &s_rep);
+    }
 }

@@ -63,8 +63,8 @@ impl WtfClient {
     /// how deeply nested (§2.4).
     pub fn lookup(&self, path: &str) -> Result<InodeId> {
         let path = normalize(path)?;
-        match self.meta_get(&Key::path(&path)) {
-            Some((Value::PathEntry(id), _)) => Ok(id),
+        match self.meta_get(&Key::path(&path))?.0 {
+            Some(Value::PathEntry(id)) => Ok(id),
             Some(_) => Err(Error::CorruptMetadata(format!("path {path} wrong type"))),
             None => Err(Error::NotFound(path)),
         }
@@ -93,11 +93,11 @@ impl WtfClient {
         let id = self.meta.alloc_inode_id();
         self.with_retry(|| {
             let mut t = self.meta_txn();
-            let parent_id = match t.get(&Key::path(&parent)) {
+            let parent_id = match t.get(&Key::path(&parent))? {
                 Some(Value::PathEntry(p)) => p,
                 _ => return Err(Error::NotFound(parent.clone())),
             };
-            let parent_inode = match t.get(&Key::inode(parent_id)) {
+            let parent_inode = match t.get(&Key::inode(parent_id))? {
                 Some(Value::Inode(i)) => i,
                 _ => return Err(Error::CorruptMetadata(parent.clone())),
             };
@@ -136,7 +136,7 @@ impl WtfClient {
         let id = self.meta.alloc_inode_id();
         self.with_retry(|| {
             let mut t = self.meta_txn();
-            let parent_id = match t.get(&Key::path(&parent)) {
+            let parent_id = match t.get(&Key::path(&parent))? {
                 Some(Value::PathEntry(p)) => p,
                 _ => return Err(Error::NotFound(parent.clone())),
             };
@@ -199,11 +199,11 @@ impl WtfClient {
         let existing = normalize(existing)?;
         self.with_retry(|| {
             let mut t = self.meta_txn();
-            let id = match t.get(&Key::path(&existing)) {
+            let id = match t.get(&Key::path(&existing))? {
                 Some(Value::PathEntry(p)) => p,
                 _ => return Err(Error::NotFound(existing.clone())),
             };
-            let parent_id = match t.get(&Key::path(&parent)) {
+            let parent_id = match t.get(&Key::path(&parent))? {
                 Some(Value::PathEntry(p)) => p,
                 _ => return Err(Error::NotFound(parent.clone())),
             };
@@ -235,16 +235,16 @@ impl WtfClient {
         let (parent, name) = split_path(&path)?;
         self.with_retry(|| {
             let mut t = self.meta_txn();
-            let id = match t.get(&Key::path(&path)) {
+            let id = match t.get(&Key::path(&path))? {
                 Some(Value::PathEntry(p)) => p,
                 _ => return Err(Error::NotFound(path.clone())),
             };
-            if let Some(Value::Inode(i)) = t.get(&Key::inode(id)) {
+            if let Some(Value::Inode(i)) = t.get(&Key::inode(id))? {
                 if i.is_dir() {
                     return Err(Error::IsDirectory(path.clone()));
                 }
             }
-            let parent_id = match t.get(&Key::path(&parent)) {
+            let parent_id = match t.get(&Key::path(&parent))? {
                 Some(Value::PathEntry(p)) => p,
                 _ => return Err(Error::NotFound(parent.clone())),
             };
@@ -272,8 +272,8 @@ impl WtfClient {
         if !inode.is_dir() {
             return Err(Error::NotADirectory(path.into()));
         }
-        match self.meta_get(&Key::dir(id)) {
-            Some((Value::Dir(d), _)) => Ok(d.into_iter().collect()),
+        match self.meta_get(&Key::dir(id))?.0 {
+            Some(Value::Dir(d)) => Ok(d.into_iter().collect()),
             _ => Ok(Vec::new()),
         }
     }
@@ -434,7 +434,7 @@ impl WtfClient {
     ) -> Result<u64> {
         self.with_retry(|| {
             let mut t = self.meta_txn();
-            let len = match t.get(&Key::inode(inode)) {
+            let len = match t.get(&Key::inode(inode))? {
                 Some(Value::Inode(i)) => i.len,
                 _ => return Err(Error::NotFound(format!("inode {inode}"))),
             };

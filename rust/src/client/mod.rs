@@ -192,45 +192,59 @@ impl WtfClient {
 
     /// Retry `f` while it fails with a retryable metadata error (§2.6's
     /// guarantee for single-call operations: they never surface spurious
-    /// aborts).
+    /// aborts).  A replicated-metadata `NotLeader` is handled here too:
+    /// the client rediscovers the shard leader (blocking through the
+    /// election) and replays — leader failover must look like a
+    /// transient conflict, not an application error.
     pub(crate) fn with_retry<T>(&self, mut f: impl FnMut() -> Result<T>) -> Result<T> {
         let budget = self.config.txn_retry_budget.max(1);
         let mut attempts = 0;
         loop {
-            match f() {
-                Err(e) if e.is_retryable() => {
-                    attempts += 1;
-                    self.metrics.add_txn_retries(1);
-                    if attempts >= budget {
-                        return Err(Error::RetriesExhausted { attempts });
-                    }
-                }
-                other => return other,
+            let outcome = f();
+            // `Some(Some(shard))`: leaderless shard — heal, then retry.
+            // `Some(None)`: plain retryable conflict.  `None`: done.
+            let retry = match &outcome {
+                Err(Error::NotLeader { shard, .. }) => Some(Some(*shard)),
+                Err(e) if e.is_retryable() => Some(None),
+                _ => None,
+            };
+            let Some(heal_shard) = retry else {
+                return outcome;
+            };
+            attempts += 1;
+            self.metrics.add_txn_retries(1);
+            if attempts >= budget {
+                return Err(Error::RetriesExhausted { attempts });
+            }
+            if let Some(shard) = heal_shard {
+                // Leader discovery: blocks until the old lease runs out
+                // and a successor holds a quorum lease.
+                self.meta.heal(shard);
             }
         }
     }
 
     /// Non-transactional versioned metadata read, as a transport
-    /// envelope to the metadata service.
-    pub(crate) fn meta_get(&self, key: &Key) -> Option<(Value, u64)> {
-        let via_transport = self
-            .transport
-            .call(
-                self.meta.clone(),
-                Request::MetaGet { key: key.clone() },
-            )
-            .and_then(crate::net::Response::into_meta_value);
-        match via_transport {
-            Ok(v) => v,
-            // Transport-level failure (impossible in-process): direct path.
-            Err(_) => self.meta.get(key),
-        }
+    /// envelope to the metadata service.  Rides the shared retry layer:
+    /// a `NotLeader` answer heals the shard and replays; any other
+    /// failure (e.g. `NoQuorum`) SURFACES — a read must never report a
+    /// key absent just because its shard is unreadable.  Value and
+    /// version come from one atomic view read (absent keys included).
+    pub(crate) fn meta_get(&self, key: &Key) -> Result<(Option<Value>, u64)> {
+        self.with_retry(|| {
+            self.transport
+                .call(
+                    self.meta.clone(),
+                    Request::MetaGet { key: key.clone() },
+                )
+                .and_then(crate::net::Response::into_meta_value)
+        })
     }
 
     /// Direct (non-transactional) inode fetch.
     pub(crate) fn fetch_inode(&self, id: InodeId) -> Result<Inode> {
-        match self.meta_get(&Key::inode(id)) {
-            Some((Value::Inode(i), _)) => Ok(i),
+        match self.meta_get(&Key::inode(id))?.0 {
+            Some(Value::Inode(i)) => Ok(i),
             Some(_) => Err(Error::CorruptMetadata(format!("inode {id} wrong type"))),
             None => Err(Error::NotFound(format!("inode {id}"))),
         }
@@ -243,15 +257,16 @@ impl WtfClient {
     }
 
     pub(crate) fn fetch_region(&self, rid: RegionId) -> Result<(RegionMeta, u64)> {
-        match self.meta_get(&Key::region(rid)) {
-            Some((Value::Region(r), v)) => Ok((r, v)),
+        // Absent regions read as empty at the version the SAME view
+        // read reported — no second version round-trip to race against
+        // a concurrent commit.
+        let (value, version) = self.meta_get(&Key::region(rid))?;
+        match value {
+            Some(Value::Region(r)) => Ok((r, version)),
             Some(_) => Err(Error::CorruptMetadata(format!(
                 "region {rid:?} wrong type"
             ))),
-            None => Ok((
-                RegionMeta::default(),
-                self.meta.store().version(&Key::region(rid)),
-            )),
+            None => Ok((RegionMeta::default(), version)),
         }
     }
 
@@ -470,9 +485,10 @@ impl WtfClient {
     }
 
     /// A fresh metadata transaction builder, routed through the
-    /// deployment transport.
+    /// deployment transport and carrying this client's retry budget.
     pub(crate) fn meta_txn(&self) -> MetaTxn {
         MetaTxn::with_transport(self.meta.clone(), self.transport.clone())
+            .heal_budget(self.config.txn_retry_budget)
     }
 }
 

@@ -227,7 +227,7 @@ impl WtfClient {
         let id = self.meta.alloc_inode_id();
         self.with_retry(|| {
             let mut t = self.meta_txn();
-            let parent_id = match t.get(&Key::path(&parent)) {
+            let parent_id = match t.get(&Key::path(&parent))? {
                 Some(Value::PathEntry(p)) => p,
                 _ => return Err(Error::NotFound(parent.clone())),
             };
@@ -237,11 +237,11 @@ impl WtfClient {
             let mut pieces: Vec<(u64, SliceData)> = Vec::new();
             for src in sources {
                 let src = normalize(src)?;
-                let src_id = match t.get(&Key::path(&src)) {
+                let src_id = match t.get(&Key::path(&src))? {
                     Some(Value::PathEntry(p)) => p,
                     _ => return Err(Error::NotFound(src.clone())),
                 };
-                let src_inode = match t.get(&Key::inode(src_id)) {
+                let src_inode = match t.get(&Key::inode(src_id))? {
                     Some(Value::Inode(i)) => i,
                     _ => return Err(Error::CorruptMetadata(src.clone())),
                 };
@@ -249,7 +249,7 @@ impl WtfClient {
                 let mut region_idx = 0u32;
                 while remaining > 0 {
                     let rid = RegionId::new(src_id, region_idx);
-                    let region = match t.get(&Key::region(rid)) {
+                    let region = match t.get(&Key::region(rid))? {
                         Some(Value::Region(r)) => r,
                         _ => Default::default(),
                     };

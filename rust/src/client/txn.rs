@@ -229,7 +229,13 @@ impl<'c> Transaction<'c> {
             let state = std::mem::replace(&mut self.state, TxnState::fresh(self.client));
             match state.meta.commit() {
                 Ok(_) => return Ok(()),
-                Err(e) if e.is_retryable() => {
+                // `NotLeader` is a clean abort (the replicated store
+                // proposes nothing before it has leaders): rediscover
+                // the shard leader, then replay like any conflict.
+                Err(e) if e.is_retryable() || matches!(e, Error::NotLeader { .. }) => {
+                    if let Error::NotLeader { shard, .. } = e {
+                        self.client.meta.heal(shard);
+                    }
                     attempts += 1;
                     self.client.metrics.add_txn_retries(1);
                     if attempts >= budget {
@@ -313,7 +319,7 @@ impl<'c> Transaction<'c> {
         let inode = if let Some(id) = state.pending_paths.get(path) {
             *id
         } else {
-            match state.meta.get(&Key::path(path)) {
+            match state.meta.get(&Key::path(path))? {
                 Some(Value::PathEntry(id)) => id,
                 Some(_) => return Err(Error::CorruptMetadata(path.into())),
                 None => return Err(Error::NotFound(path.into())),
@@ -330,12 +336,12 @@ impl<'c> Transaction<'c> {
         inode_id: InodeId,
     ) -> Result<()> {
         let (parent, name) = split_path(path)?;
-        let parent_id = match state.meta.get(&Key::path(&parent)) {
+        let parent_id = match state.meta.get(&Key::path(&parent))? {
             Some(Value::PathEntry(p)) => p,
             _ => return Err(Error::NotFound(parent)),
         };
         if state.pending_paths.contains_key(path)
-            || state.meta.get(&Key::path(path)).is_some()
+            || state.meta.get(&Key::path(path))?.is_some()
         {
             return Err(Error::AlreadyExists(path.into()));
         }
@@ -370,7 +376,7 @@ impl<'c> Transaction<'c> {
         }
         // Committed inode enters the read set: a concurrent length change
         // conflicts the metadata txn and triggers a replay.
-        let mut i = match state.meta.get(&Key::inode(inode)) {
+        let mut i = match state.meta.get(&Key::inode(inode))? {
             Some(Value::Inode(i)) => i,
             _ => return Err(Error::NotFound(format!("inode {inode}"))),
         };
@@ -417,7 +423,7 @@ impl<'c> Transaction<'c> {
         state: &mut TxnState,
         rid: RegionId,
     ) -> Result<Vec<RegionEntry>> {
-        let committed = match state.meta.get(&Key::region(rid)) {
+        let committed = match state.meta.get(&Key::region(rid))? {
             Some(Value::Region(r)) => client.region_entries(&r)?,
             Some(_) => return Err(Error::CorruptMetadata(format!("region {rid:?}"))),
             None => Vec::new(),

@@ -9,9 +9,10 @@
 
 use crate::client::WtfClient;
 use crate::config::Config;
+use crate::coordinator::lease::LeaseClock;
 use crate::coordinator::{CoordCmd, Coordinator};
 use crate::error::Result;
-use crate::meta::{MetaService, MetaStore, MetaTxn};
+use crate::meta::{MetaService, MetaStore, MetaTxn, ReplicatedMetaStore};
 use crate::meta::MetaOp;
 use crate::metrics::Metrics;
 use crate::net::{LinkModel, Transport};
@@ -61,6 +62,13 @@ impl ClusterBuilder {
         self
     }
 
+    /// Serve metadata from per-shard Paxos groups (leader leases,
+    /// automatic failover) instead of the in-process chains.
+    pub fn replicated_meta(mut self, on: bool) -> Self {
+        self.config.meta_paxos = on;
+        self
+    }
+
     /// Put backing files under `dir` instead of a tempdir.
     pub fn data_dir(mut self, dir: PathBuf) -> Self {
         self.data_dir = Some(dir);
@@ -92,12 +100,28 @@ impl ClusterBuilder {
         }
         let storage = Arc::new(StorageCluster::new(servers));
 
-        // 2. Metadata service (hyperdex-lite).
-        let meta = Arc::new(MetaService::new(
-            MetaStore::new(config.meta_shards, config.meta_replicas),
-            config.meta_txn_floor,
-            Metrics::new(),
-        ));
+        // 2. Metadata service (hyperdex-lite): chain-replicated shards,
+        //    or Paxos shard groups proposing over the deployment
+        //    transport when `meta_paxos` is on.
+        let meta = if config.meta_paxos {
+            Arc::new(MetaService::replicated(
+                ReplicatedMetaStore::new(
+                    config.meta_shards,
+                    config.meta_group_replicas,
+                    transport.clone(),
+                    LeaseClock::auto(),
+                    config.meta_lease.as_millis() as u64,
+                ),
+                config.meta_txn_floor,
+                Metrics::new(),
+            ))
+        } else {
+            Arc::new(MetaService::new(
+                MetaStore::new(config.meta_shards, config.meta_replicas),
+                config.meta_txn_floor,
+                Metrics::new(),
+            ))
+        };
 
         // 3. Root directory.
         let root = Inode::new_directory(1, 0o755);
@@ -188,7 +212,7 @@ impl Cluster {
         self.gc
             .lock()
             .unwrap()
-            .run(self.meta.store(), &self.storage, Some(&self.transport))
+            .run(&*self.meta, &self.storage, Some(&self.transport))
     }
 
     /// Aggregate bytes written to all storage servers (Table 2's "W").
@@ -209,9 +233,9 @@ impl Cluster {
             .sum()
     }
 
-    /// Total inode count allocated so far (observability).
+    /// Per-shard metadata stats (observability).
     pub fn meta_shard_stats(&self) -> Vec<crate::meta::ShardStats> {
-        self.meta.store().shard_stats()
+        self.meta.shard_stats()
     }
 }
 
@@ -232,6 +256,26 @@ mod tests {
         c.write(&mut fd, b"ok").unwrap();
         assert_eq!(c.read_at(&fd, 0, 2).unwrap(), b"ok");
         assert_eq!(cluster.coordinator().config().unwrap().online_servers.len(), 3);
+    }
+
+    #[test]
+    fn replicated_meta_cluster_works_end_to_end() {
+        let cluster = Cluster::builder()
+            .config(Config::replicated_test())
+            .storage_servers(3)
+            .build()
+            .unwrap();
+        let c = cluster.client();
+        let mut fd = c.create("/paxos").unwrap();
+        c.write(&mut fd, b"replicated").unwrap();
+        assert_eq!(c.read_at(&fd, 0, 10).unwrap(), b"replicated");
+        let r = cluster.meta().replicated_store().expect("paxos backend");
+        assert!(r.converged(), "all group replicas agree after the workload");
+        assert!(r.lease_reads() > 0, "reads were leaseholder-local");
+        for s in cluster.meta_shard_stats() {
+            assert_eq!(s.total_replicas, 3);
+            assert_eq!(s.live_replicas, 3);
+        }
     }
 
     #[test]

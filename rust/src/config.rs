@@ -23,6 +23,17 @@ pub struct Config {
     /// Replicas per metadata shard (HyperDex tolerates f failures with
     /// f+1-length value-dependent chains).
     pub meta_replicas: u8,
+    /// Route metadata through per-shard Paxos groups instead of the
+    /// in-process chains: each shard becomes a `meta_group_replicas`-way
+    /// consensus group with leader leases and automatic failover.
+    pub meta_paxos: bool,
+    /// Members per metadata Paxos group (tolerates ⌊n/2⌋ failures;
+    /// paper-shaped default: 3).
+    pub meta_group_replicas: u8,
+    /// Leader lease duration for metadata shard groups.  Reads are
+    /// leader-local inside the lease; failover waits out at most one
+    /// lease window.
+    pub meta_lease: Duration,
     /// Coordinator replicas (Replicant/Paxos group size).
     pub coordinator_replicas: u8,
     /// Backing files maintained per storage server (§2.2).
@@ -57,6 +68,9 @@ impl Default for Config {
             storage_servers: 12,
             meta_shards: 8,
             meta_replicas: 2,
+            meta_paxos: false,
+            meta_group_replicas: 3,
+            meta_lease: Duration::from_millis(50),
             coordinator_replicas: 3,
             backing_files_per_server: 4,
             ring_vnodes: 64,
@@ -87,6 +101,17 @@ impl Config {
         }
     }
 
+    /// [`Config::test`] with metadata served by 3-replica Paxos shard
+    /// groups (short leases so failover tests run quickly).
+    pub fn replicated_test() -> Self {
+        Config {
+            meta_paxos: true,
+            meta_group_replicas: 3,
+            meta_lease: Duration::from_millis(25),
+            ..Config::test()
+        }
+    }
+
     /// Region index + region-relative offset for an absolute file offset.
     pub fn locate(&self, offset: u64) -> (u32, u64) {
         ((offset / self.region_size) as u32, offset % self.region_size)
@@ -111,6 +136,16 @@ impl Config {
         }
         if self.meta_shards == 0 {
             return Err(crate::Error::InvalidArgument("meta_shards == 0".into()));
+        }
+        if self.meta_paxos && self.meta_group_replicas == 0 {
+            return Err(crate::Error::InvalidArgument(
+                "meta_paxos requires meta_group_replicas >= 1".into(),
+            ));
+        }
+        if self.meta_paxos && self.meta_lease.is_zero() {
+            return Err(crate::Error::InvalidArgument(
+                "meta_paxos requires a non-zero meta_lease".into(),
+            ));
         }
         if !(0.0..=1.0).contains(&self.gc_low_watermark)
             || !(0.0..=1.0).contains(&self.gc_high_watermark)
@@ -147,6 +182,20 @@ mod tests {
         assert_eq!(c.locate(99), (0, 99));
         assert_eq!(c.locate(100), (1, 0));
         assert_eq!(c.locate(250), (2, 50));
+    }
+
+    #[test]
+    fn replicated_preset_is_valid_and_paxos_backed() {
+        let c = Config::replicated_test();
+        assert!(c.meta_paxos);
+        assert_eq!(c.meta_group_replicas, 3);
+        c.validate().unwrap();
+        let mut bad = Config::replicated_test();
+        bad.meta_group_replicas = 0;
+        assert!(bad.validate().is_err());
+        let mut bad = Config::replicated_test();
+        bad.meta_lease = Duration::ZERO;
+        assert!(bad.validate().is_err());
     }
 
     #[test]

@@ -1,0 +1,208 @@
+//! Leader leases for replicated metadata shard groups.
+//!
+//! A leader holds a time-bounded lease granted by a quorum of its group.
+//! While the lease is valid the leader may (a) serve reads from its local
+//! state without a quorum round — the read-lease — and (b) skip Paxos
+//! phase 1 for fresh log slots, because no competing proposer can obtain
+//! quorum grants until the lease expires.  Safety therefore rests on two
+//! rules encoded here:
+//!
+//! * a replica never grants overlapping leases to different leaders
+//!   ([`GrantState::grant`]);
+//! * a replica that crashed holds off granting for one full lease window
+//!   after recovery ([`GrantState::hold_off`]), since its pre-crash
+//!   grants are volatile and may still be live.
+//!
+//! Time is a [`LeaseClock`]: wall-clock by default, manually advanced in
+//! unit tests so expiry is deterministic.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+use std::time::Instant;
+
+/// Millisecond clock shared by one shard group (leader, replicas, and the
+/// proposing front-end all read the same instance, which is what makes
+/// in-process lease reasoning sound).
+#[derive(Clone, Debug)]
+pub struct LeaseClock {
+    inner: Arc<ClockInner>,
+}
+
+#[derive(Debug)]
+struct ClockInner {
+    manual: bool,
+    base: Instant,
+    offset_ms: AtomicU64,
+}
+
+impl LeaseClock {
+    /// Wall-clock time (deployments, integration tests).
+    pub fn auto() -> Self {
+        LeaseClock {
+            inner: Arc::new(ClockInner {
+                manual: false,
+                base: Instant::now(),
+                offset_ms: AtomicU64::new(0),
+            }),
+        }
+    }
+
+    /// A clock that only moves via [`LeaseClock::advance`] (unit tests).
+    pub fn manual() -> Self {
+        LeaseClock {
+            inner: Arc::new(ClockInner {
+                manual: true,
+                base: Instant::now(),
+                offset_ms: AtomicU64::new(0),
+            }),
+        }
+    }
+
+    pub fn now_ms(&self) -> u64 {
+        let offset = self.inner.offset_ms.load(Ordering::Relaxed);
+        if self.inner.manual {
+            offset
+        } else {
+            self.inner.base.elapsed().as_millis() as u64 + offset
+        }
+    }
+
+    /// Jump the clock forward (works in both modes; the only mover of a
+    /// manual clock).
+    pub fn advance(&self, ms: u64) {
+        self.inner.offset_ms.fetch_add(ms, Ordering::Relaxed);
+    }
+
+    /// Wait for `ms` to pass: sleeps real time on an auto clock, advances
+    /// a manual clock directly so election loops cannot deadlock in tests.
+    pub fn sleep_ms(&self, ms: u64) {
+        if self.inner.manual {
+            self.advance(ms);
+        } else {
+            std::thread::sleep(std::time::Duration::from_millis(ms.max(1)));
+        }
+    }
+}
+
+impl Default for LeaseClock {
+    fn default() -> Self {
+        LeaseClock::auto()
+    }
+}
+
+/// A granted (or observed) lease: `holder` leads until `until_ms`.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct Lease {
+    pub holder: u32,
+    pub until_ms: u64,
+}
+
+impl Lease {
+    /// True while the lease still covers `now_ms`.
+    pub fn covers(&self, now_ms: u64) -> bool {
+        now_ms < self.until_ms
+    }
+}
+
+/// One replica's grant bookkeeping: at most one live lease at a time,
+/// plus the post-recovery hold-off window.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct GrantState {
+    granted: Option<Lease>,
+    hold_off_until: u64,
+}
+
+impl GrantState {
+    /// Grant (or renew) a lease to `leader` until `until_ms`.  Refused
+    /// while a different leader's grant is unexpired or during the
+    /// post-recovery hold-off.  The same leader may always extend.
+    pub fn grant(&mut self, now_ms: u64, leader: u32, until_ms: u64) -> bool {
+        if now_ms < self.hold_off_until {
+            return false;
+        }
+        match self.granted {
+            Some(l) if l.holder != leader && l.covers(now_ms) => false,
+            prior => {
+                // A same-holder renewal never shrinks the recorded
+                // expiry: concurrent renewals may arrive out of order.
+                let until_ms = match prior {
+                    Some(l) if l.holder == leader => l.until_ms.max(until_ms),
+                    _ => until_ms,
+                };
+                self.granted = Some(Lease {
+                    holder: leader,
+                    until_ms,
+                });
+                true
+            }
+        }
+    }
+
+    /// Refuse all grants until `until_ms` — called on replica recovery,
+    /// because whatever this replica granted before crashing is unknown
+    /// and may still be live.
+    pub fn hold_off(&mut self, until_ms: u64) {
+        self.hold_off_until = until_ms;
+        self.granted = None;
+    }
+
+    /// The current unexpired grant, if any.
+    pub fn live_grant(&self, now_ms: u64) -> Option<Lease> {
+        self.granted.filter(|l| l.covers(now_ms))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn manual_clock_is_deterministic() {
+        let c = LeaseClock::manual();
+        assert_eq!(c.now_ms(), 0);
+        c.advance(25);
+        assert_eq!(c.now_ms(), 25);
+        c.sleep_ms(5); // advances, never blocks
+        assert_eq!(c.now_ms(), 30);
+    }
+
+    #[test]
+    fn auto_clock_moves_forward() {
+        let c = LeaseClock::auto();
+        let a = c.now_ms();
+        c.advance(10);
+        assert!(c.now_ms() >= a + 10);
+    }
+
+    #[test]
+    fn no_overlapping_grants_to_different_leaders() {
+        let mut g = GrantState::default();
+        assert!(g.grant(0, 1, 50));
+        assert!(!g.grant(10, 2, 60), "overlapping grant to another leader");
+        // Same leader renews freely.
+        assert!(g.grant(10, 1, 80));
+        // After expiry anyone may acquire.
+        assert!(g.grant(80, 2, 120));
+        assert_eq!(g.live_grant(90), Some(Lease { holder: 2, until_ms: 120 }));
+    }
+
+    #[test]
+    fn recovery_hold_off_blocks_grants() {
+        let mut g = GrantState::default();
+        assert!(g.grant(0, 1, 50));
+        g.hold_off(100);
+        assert!(!g.grant(60, 1, 120), "hold-off refuses even the old holder");
+        assert_eq!(g.live_grant(60), None, "pre-crash grant forgotten");
+        assert!(g.grant(100, 2, 150));
+    }
+
+    #[test]
+    fn lease_covers_half_open_interval() {
+        let l = Lease {
+            holder: 0,
+            until_ms: 10,
+        };
+        assert!(l.covers(9));
+        assert!(!l.covers(10));
+    }
+}

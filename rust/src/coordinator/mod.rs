@@ -9,6 +9,7 @@
 //! snapshots ([`ClusterConfig`]) tagged with an epoch; any config change
 //! bumps the epoch.
 
+pub mod lease;
 pub mod paxos;
 
 use crate::error::Result;

@@ -60,6 +60,16 @@ pub enum Error {
 
     NoQuorum { alive: usize, total: usize },
 
+    /// The addressed metadata replica is not the current leaseholder of
+    /// its shard group; `hint` names the lowest live replica, the next
+    /// election's candidate.  Clients rediscover the leader and retry.
+    NotLeader { shard: u32, hint: Option<u32> },
+
+    /// A metadata-plane replica crashed (or its handler panicked) while
+    /// serving.  Surfaced as a typed error so a dead replica merely
+    /// degrades its group's quorum instead of poisoning the caller.
+    ReplicaLost { shard: u32, replica: u32 },
+
     Artifact(String),
 
     Xla(String),
@@ -103,6 +113,17 @@ impl fmt::Display for Error {
             Error::NoQuorum { alive, total } => write!(
                 f,
                 "coordinator has no quorum ({alive}/{total} replicas alive)"
+            ),
+            Error::NotLeader { shard, hint } => match hint {
+                Some(h) => write!(
+                    f,
+                    "not the leader of metadata shard {shard} (try replica {h})"
+                ),
+                None => write!(f, "metadata shard {shard} has no live leader"),
+            },
+            Error::ReplicaLost { shard, replica } => write!(
+                f,
+                "metadata replica {replica} of shard {shard} lost mid-request"
             ),
             Error::Artifact(m) => write!(f, "artifact error: {m}"),
             Error::Xla(m) => write!(f, "xla runtime error: {m}"),

@@ -18,17 +18,27 @@
 //!   (HyperDex's value-dependent chaining, §2.9); writes flow to every
 //!   live replica, reads are served from the tail, and a recovered
 //!   replica re-syncs from its neighbor.
+//! * **Paxos-replicated shard groups** — alternatively (selected by
+//!   `Config::meta_paxos`), each shard runs as a 3-replica Paxos group
+//!   over the transport: leader leases serve reads locally, failover
+//!   preserves every quorum-accepted commit, apply is deduplicated by
+//!   transaction id, and a rejoining replica rebuilds by deterministic
+//!   log replay ([`ShardGroup`], [`ReplicatedMetaStore`]).
 //!
 //! [`MetaStore`] is the raw sharded store; [`MetaService`] layers the
 //! simulated transaction latency floor and metrics on top; [`MetaTxn`] is
 //! the builder the WTF client uses to accumulate a read set + op list.
 
+mod group;
 mod ops;
+mod replicated;
 mod shard;
 mod store;
 mod txn;
 
+pub use group::{GroupReplica, LogEntry, ShardGroup};
 pub use ops::{MetaOp, OpOutcome};
-pub use shard::{Shard, ShardStats};
-pub use store::{Commit, MetaService, MetaStore};
+pub use replicated::ReplicatedMetaStore;
+pub use shard::{KvState, Shard, ShardStats};
+pub use store::{Commit, MetaService, MetaSnapshot, MetaStore};
 pub use txn::MetaTxn;

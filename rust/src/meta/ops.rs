@@ -8,6 +8,7 @@
 
 use crate::error::{Error, Result};
 use crate::types::{InodeId, Key, Placement, RegionEntry, RegionMeta, SliceData, Value};
+use std::collections::HashMap;
 
 /// One mutation inside a metadata transaction.
 #[derive(Clone, Debug, PartialEq)]
@@ -112,6 +113,82 @@ pub enum OpOutcome {
     Done,
     /// An EOF-relative append landed at this region-relative offset.
     AppendedAt(u64),
+}
+
+/// Stage `ops_list` against the committed state with an overlay, so each
+/// op observes its predecessors — THE commit semantics, shared by the
+/// chain store's locked commit, the replicated front-end's staging, and
+/// replica-side apply (one implementation, so conflict semantics cannot
+/// diverge between backends).
+///
+/// `committed` resolves a key to its committed `(value, version)` in one
+/// view read; validation always checks the *committed* version (CAS ops
+/// compare against what their reads observed, not the overlay).  The
+/// overlay holds staged values by *take* (not clone), so repeated ops on
+/// one key — e.g. a concat appending thousands of entries to one region
+/// — stay O(total entries), not O(n²).
+///
+/// `on_staged` runs after each op applies, with the overlay-aware peek —
+/// the replicated front-end uses it to rewrite cross-shard ops with
+/// their resolved values.
+///
+/// Returns the final overlay (to flush into the store) and the per-op
+/// outcomes.  Any validation failure aborts with nothing to flush.
+#[allow(clippy::type_complexity)]
+pub(crate) fn stage(
+    ops_list: &[MetaOp],
+    committed: &dyn Fn(&Key) -> Result<(Option<Value>, u64)>,
+    mut on_staged: impl FnMut(&MetaOp, &dyn Fn(&Key) -> Option<Value>),
+) -> Result<(HashMap<Key, Option<Value>>, Vec<OpOutcome>)> {
+    let mut overlay: HashMap<Key, Option<Value>> = HashMap::new();
+    // Committed version per key, cached at first fetch: repeated ops on
+    // one key take their staged value from the overlay and their version
+    // from here — ONE committed read (and one value clone) per distinct
+    // key, keeping bulk single-key transactions O(total entries).
+    let mut versions: HashMap<Key, u64> = HashMap::new();
+    let mut outcomes = Vec::with_capacity(ops_list.len());
+    for op in ops_list {
+        let key = op.key().clone();
+        let (current, version): (Option<Value>, u64) = match overlay.remove(&key) {
+            Some(staged) => {
+                let v = *versions
+                    .get(&key)
+                    .expect("overlay-staged key always has a cached version");
+                (staged, v)
+            }
+            None => {
+                let (cv, v) = committed(&key)?;
+                versions.insert(key.clone(), v);
+                (cv, v)
+            }
+        };
+        validate(op, current.as_ref(), version)?;
+        // `apply`'s peek contract is infallible, so a failing view read
+        // inside it is stashed and re-raised right after — an unreadable
+        // key must abort the staging, never read as absent.
+        let peek_failure: std::cell::RefCell<Option<Error>> = std::cell::RefCell::new(None);
+        let peek = |k: &Key| match overlay.get(k) {
+            Some(staged) => staged.clone(),
+            None => match committed(k) {
+                Ok((v, _)) => v,
+                Err(e) => {
+                    let mut slot = peek_failure.borrow_mut();
+                    if slot.is_none() {
+                        *slot = Some(e);
+                    }
+                    None
+                }
+            },
+        };
+        let (next, outcome) = apply(op, current, &peek)?;
+        on_staged(op, &peek);
+        if let Some(e) = peek_failure.borrow_mut().take() {
+            return Err(e);
+        }
+        overlay.insert(key, next);
+        outcomes.push(outcome);
+    }
+    Ok((overlay, outcomes))
 }
 
 /// Validate an op against the current value of its key *before* any

@@ -1,0 +1,560 @@
+//! The Paxos-replicated metadata store: [`MetaStore`]'s surface, served
+//! by per-shard [`ShardGroup`]s instead of in-process chains.
+//!
+//! A [`Commit`] is validated and staged once at the front-end — under
+//! the commit gates of every shard it touches, taken in canonical order,
+//! which serializes validate→propose exactly like the chain store's
+//! ordered shard locks — then split into per-shard [`LogEntry`] batches
+//! and driven through each group's replicated log.  The one op that
+//! reads across shards (`InodeSetLenFromRegion`) is rewritten at the
+//! gate into its self-contained monotone-max form when its region lives
+//! in a different group, so every entry is locally applicable and
+//! deterministic.
+//!
+//! Invariants (asserted by the fault-injection suite):
+//!
+//! * a quorum-accepted entry survives its leader's death (the next
+//!   leader's prepare rounds adopt it);
+//! * a commit retried across failover applies **exactly once** (apply is
+//!   deduplicated on the transaction id);
+//! * reads are leaseholder-local — no quorum round — and never observe
+//!   state a lease could not vouch for;
+//! * with a majority of a group dead, commits fail with `NoQuorum` and
+//!   nothing is partially visible in that group.
+//!
+//! [`MetaStore`]: super::MetaStore
+
+use super::group::{LogEntry, ShardGroup};
+use super::ops::{self, MetaOp, OpOutcome};
+use super::shard::ShardStats;
+use super::store::Commit;
+use crate::coordinator::lease::LeaseClock;
+use crate::error::{Error, Result};
+use crate::net::Transport;
+use crate::types::{Key, Space, Value};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, MutexGuard};
+
+/// Proposal order for one shard's entry within a multi-shard commit:
+/// namespace-root REMOVALS first (-1), plain data in the middle (0),
+/// namespace-root INSERTS last (+1).  Readers resolve files through
+/// Path/Dir entries and take no commit gate (reads are
+/// leaseholder-local), so inserting those roots *after* their referents
+/// — and removing them *before* — keeps the common create/unlink shapes
+/// free of reader-visible dangling references while a multi-shard
+/// commit is mid-flight.  (Entries mixing both directions cannot be
+/// fully ordered; the residual window is recorded in ROADMAP.md.)
+fn entry_priority(ops: &[&MetaOp]) -> i32 {
+    let mut pri = 0;
+    for op in ops {
+        match op {
+            MetaOp::PathInsert { .. } | MetaOp::DirInsert { .. } => pri = pri.max(1),
+            MetaOp::DirRemove { .. } => pri = pri.min(-1),
+            MetaOp::Delete { key } if key.space == Space::Path => pri = pri.min(-1),
+            _ => {}
+        }
+    }
+    pri
+}
+
+/// The sharded, Paxos-replicated metadata store.
+#[derive(Debug)]
+pub struct ReplicatedMetaStore {
+    groups: Vec<ShardGroup>,
+    next_inode: AtomicU64,
+    next_txn: AtomicU64,
+}
+
+impl ReplicatedMetaStore {
+    /// `shards` groups of `replicas_per_group` members each, proposing
+    /// over `transport` with `lease_ms`-long leader leases.
+    pub fn new(
+        shards: u32,
+        replicas_per_group: u8,
+        transport: Arc<Transport>,
+        clock: LeaseClock,
+        lease_ms: u64,
+    ) -> Self {
+        assert!(shards >= 1);
+        ReplicatedMetaStore {
+            groups: (0..shards)
+                .map(|s| {
+                    ShardGroup::new(
+                        s,
+                        replicas_per_group,
+                        transport.clone(),
+                        clock.clone(),
+                        lease_ms,
+                    )
+                })
+                .collect(),
+            // inode 1 is reserved for the root directory
+            next_inode: AtomicU64::new(2),
+            // txn 0 is the noop filler id
+            next_txn: AtomicU64::new(1),
+        }
+    }
+
+    /// Stable FNV-1a shard placement (the same helper the chain store
+    /// uses — both backends place every key identically).
+    fn shard_of(&self, key: &Key) -> usize {
+        super::shard::shard_of_key(key, self.groups.len())
+    }
+
+    pub fn num_shards(&self) -> usize {
+        self.groups.len()
+    }
+
+    /// The group serving `key`'s shard (tests, observability).
+    pub fn group_of(&self, key: &Key) -> &ShardGroup {
+        &self.groups[self.shard_of(key)]
+    }
+
+    pub fn groups(&self) -> &[ShardGroup] {
+        &self.groups
+    }
+
+    /// Allocate a fresh inode id.  Ids allocated by aborted transactions
+    /// are simply never used — the allocator needs no transactionality
+    /// (and therefore no quorum round).
+    pub fn alloc_inode_id(&self) -> u64 {
+        self.next_inode.fetch_add(1, Ordering::Relaxed)
+    }
+
+    /// Versioned point read from the shard leader's read-leased local
+    /// state.  `auto_elect` controls leader discovery: on (direct calls)
+    /// blocks through an election; off (the envelope path) surfaces
+    /// [`Error::NotLeader`] for the client to handle.
+    pub fn get(&self, key: &Key, auto_elect: bool) -> Result<Option<(Value, u64)>> {
+        self.groups[self.shard_of(key)].local_get(key, auto_elect)
+    }
+
+    /// Version of `key` without copying the value.
+    pub fn version(&self, key: &Key, auto_elect: bool) -> Result<u64> {
+        self.groups[self.shard_of(key)].local_version(key, auto_elect)
+    }
+
+    /// Value AND version in one leaseholder read (absent keys still
+    /// report their version).
+    pub fn entry(&self, key: &Key, auto_elect: bool) -> Result<(Option<Value>, u64)> {
+        self.groups[self.shard_of(key)].local_entry(key, auto_elect)
+    }
+
+    /// Atomically commit `commit` through the replicated logs of every
+    /// shard it touches.  See the module docs for the protocol.
+    pub fn commit(&self, commit: &Commit, auto_elect: bool) -> Result<Vec<OpOutcome>> {
+        if commit.is_empty() {
+            return Ok(Vec::new());
+        }
+        // 1. Canonically ordered commit-gate acquisition over the
+        //    touched shards (serializes validate→propose; no deadlocks).
+        let mut shard_ids: Vec<usize> = commit
+            .reads
+            .iter()
+            .map(|(k, _)| self.shard_of(k))
+            .chain(
+                commit
+                    .ops
+                    .iter()
+                    .flat_map(|op| op.keys().into_iter().map(|k| self.shard_of(k))),
+            )
+            .collect();
+        shard_ids.sort_unstable();
+        shard_ids.dedup();
+        let _gates: Vec<MutexGuard<'_, ()>> = shard_ids
+            .iter()
+            .map(|&sid| self.groups[sid].gate.lock().unwrap())
+            .collect();
+
+        // 2. Pre-flight: every touched group must have a live leased
+        //    leader BEFORE anything is proposed — a leaderless or
+        //    quorum-less group must abort the commit while it is still
+        //    clean, not midway through the per-group proposals (the
+        //    residual window, a quorum dying mid-propose, is the known
+        //    gap recorded in ROADMAP.md).  Then validate the read set
+        //    against the leaders' leased state.
+        for &sid in &shard_ids {
+            self.groups[sid].ensure(auto_elect)?;
+        }
+        for (key, observed) in &commit.reads {
+            let v = self.groups[self.shard_of(key)].local_version(key, auto_elect)?;
+            if v != *observed {
+                return Err(Error::TxnConflict {
+                    space: key.space,
+                    key: key.key.clone(),
+                });
+            }
+        }
+
+        // 3. Stage ops through the shared overlay staging ([`ops::stage`]
+        //    — one value+version leader read per distinct key); a validation
+        //    failure aborts with nothing proposed anywhere.  Cross-shard
+        //    `InodeSetLenFromRegion` is rewritten into its
+        //    self-contained monotone-max form via the staging hook,
+        //    while this commit's own region appends are visible through
+        //    the overlay-aware peek.
+        let mut routed: Vec<MetaOp> = Vec::with_capacity(commit.ops.len());
+        let committed =
+            |k: &Key| self.groups[self.shard_of(k)].local_entry(k, auto_elect);
+        let (_overlay, outcomes) = ops::stage(&commit.ops, &committed, |op, peek| {
+            let routed_op = match op {
+                MetaOp::InodeSetLenFromRegion {
+                    inode_key,
+                    region_key,
+                    region_base,
+                    mtime,
+                } if self.shard_of(region_key) != self.shard_of(inode_key) => {
+                    let eof = peek(region_key)
+                        .as_ref()
+                        .and_then(|v| v.as_region().map(|r| r.eof))
+                        .unwrap_or(0);
+                    MetaOp::InodeSetLenMax {
+                        key: inode_key.clone(),
+                        candidate: *region_base + eof,
+                        highest_region: 0,
+                        mtime: *mtime,
+                    }
+                }
+                other => other.clone(),
+            };
+            routed.push(routed_op);
+        })?;
+
+        // 4. One log entry per touched shard, proposed in dependency
+        //    order (gates stay held throughout, so proposal order is
+        //    free to differ from the canonical gate-acquisition order).
+        //    `commit_entry` survives leader failover and applies exactly
+        //    once (txn-id dedup), so a retry after a mid-commit crash
+        //    cannot double-apply.
+        //
+        //    NOTE: the proposals always run with blocking leader
+        //    discovery, regardless of `auto_elect`.  `NotLeader` may
+        //    only escape this function while nothing has been proposed
+        //    (steps 2–3) — once the first entry is in flight, the commit
+        //    must drive to completion through any election, or a client
+        //    replay under a fresh transaction id could re-apply the
+        //    groups that already accepted.
+        let txn_id = self.next_txn.fetch_add(1, Ordering::Relaxed);
+        let mut final_outcomes = outcomes;
+        // Plan the per-shard entries, then propose them in dependency
+        // order (namespace roots last on insert, first on remove) so
+        // gate-free readers never resolve a dangling reference through a
+        // half-committed transaction.
+        let mut planned: Vec<(i32, usize, Vec<usize>)> = Vec::new();
+        for &sid in &shard_ids {
+            let idxs: Vec<usize> = routed
+                .iter()
+                .enumerate()
+                .filter(|(_, op)| self.shard_of(op.key()) == sid)
+                .map(|(i, _)| i)
+                .collect();
+            if idxs.is_empty() {
+                continue; // read-only in this shard: validated above
+            }
+            let shard_ops: Vec<&MetaOp> = idxs.iter().map(|&i| &routed[i]).collect();
+            planned.push((entry_priority(&shard_ops), sid, idxs));
+        }
+        planned.sort_by_key(|(pri, sid, _)| (*pri, *sid));
+        for (_, sid, idxs) in planned {
+            let entry = LogEntry {
+                txn_id,
+                reads: commit
+                    .reads
+                    .iter()
+                    .filter(|(k, _)| self.shard_of(k) == sid)
+                    .cloned()
+                    .collect(),
+                ops: idxs.iter().map(|&i| routed[i].clone()).collect(),
+            };
+            let applied = self.groups[sid].commit_entry(&entry, true)?;
+            // Report what the replicated apply actually recorded — it
+            // diverges from the staging above only when an indeterminate
+            // earlier commit was recovered ahead of this entry (in which
+            // case an abort already surfaced as `TxnAborted` from
+            // `commit_entry`).
+            for (&i, o) in idxs.iter().zip(applied) {
+                final_outcomes[i] = o;
+            }
+        }
+        Ok(final_outcomes)
+    }
+
+    /// Full scan of one space from the shard leaders (GC; not
+    /// transactional — GC tolerates staleness by design).  An
+    /// unreadable shard is an ERROR, never an empty result: GC decides
+    /// slice liveness from this scan, and treating a quorum-less
+    /// shard's keyspace as absent would reclaim live data.
+    pub fn scan_space(&self, space: Space) -> Result<Vec<(Key, Value)>> {
+        let mut out = Vec::new();
+        for g in &self.groups {
+            out.append(&mut g.local_scan(space, true)?);
+        }
+        out.sort_by(|a, b| a.0.cmp(&b.0));
+        Ok(out)
+    }
+
+    /// Crash replica `idx` of every shard group (failure injection).  If
+    /// it led a group, that group stalls until the lease expires, then
+    /// fails over.
+    pub fn kill_replica(&self, idx: usize) {
+        for g in &self.groups {
+            g.kill_replica(idx);
+        }
+    }
+
+    /// Rejoin replica `idx` of every group by deterministic log replay.
+    /// Best-effort across groups: every group is attempted even when an
+    /// earlier one has no live replay source; the first error is
+    /// reported after the sweep.
+    pub fn recover_replica(&self, idx: usize) -> Result<()> {
+        let mut first_err = None;
+        for g in &self.groups {
+            if let Err(e) = g.recover_replica(idx) {
+                if first_err.is_none() {
+                    first_err = Some(e);
+                }
+            }
+        }
+        match first_err {
+            Some(e) => Err(e),
+            None => Ok(()),
+        }
+    }
+
+    /// Blocking leader (re-)discovery for one shard — what a client does
+    /// after [`Error::NotLeader`].
+    pub fn heal(&self, shard: u32) -> Result<u32> {
+        match self.groups.get(shard as usize) {
+            Some(g) => g.heal(),
+            None => Err(Error::InvalidArgument(format!(
+                "no metadata shard {shard}"
+            ))),
+        }
+    }
+
+    /// All live replicas of every group agree (test invariant).
+    pub fn converged(&self) -> bool {
+        self.groups.iter().all(|g| g.converged())
+    }
+
+    pub fn shard_stats(&self) -> Vec<ShardStats> {
+        self.groups.iter().map(|g| g.stats()).collect()
+    }
+
+    /// Total leaseholder-local reads across groups (observability).
+    pub fn lease_reads(&self) -> u64 {
+        self.groups.iter().map(|g| g.lease_reads()).sum()
+    }
+
+    /// Total leader elections across groups (observability).
+    pub fn elections(&self) -> u64 {
+        self.groups.iter().map(|g| g.elections()).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::types::{Inode, Placement, RegionEntry, SliceData, SlicePtr};
+
+    fn store() -> ReplicatedMetaStore {
+        ReplicatedMetaStore::new(
+            4,
+            3,
+            Arc::new(Transport::instant()),
+            LeaseClock::manual(),
+            20,
+        )
+    }
+
+    fn skey(s: &str) -> Key {
+        Key::sys(s)
+    }
+
+    fn put(key: &Key, v: Value) -> Commit {
+        Commit {
+            reads: vec![],
+            ops: vec![MetaOp::Put {
+                key: key.clone(),
+                value: v,
+            }],
+        }
+    }
+
+    fn stored(len: u64) -> SliceData {
+        SliceData::Stored(vec![SlicePtr {
+            server: 1,
+            backing: 0,
+            offset: 0,
+            len,
+        }])
+    }
+
+    #[test]
+    fn put_get_round_trip() {
+        let s = store();
+        let k = skey("a");
+        s.commit(&put(&k, Value::U64(42)), true).unwrap();
+        assert_eq!(s.get(&k, true).unwrap(), Some((Value::U64(42), 1)));
+        assert!(s.converged());
+    }
+
+    #[test]
+    fn multi_shard_commit_lands_everywhere() {
+        let s = store();
+        let keys: Vec<Key> = (0..16).map(|i| skey(&format!("k{i}"))).collect();
+        let ops = keys
+            .iter()
+            .map(|k| MetaOp::Put {
+                key: k.clone(),
+                value: Value::U64(7),
+            })
+            .collect();
+        s.commit(&Commit { reads: vec![], ops }, true).unwrap();
+        for k in &keys {
+            assert_eq!(s.get(k, true).unwrap().unwrap().0, Value::U64(7));
+        }
+        // Several distinct groups were involved.
+        let touched: std::collections::HashSet<usize> =
+            keys.iter().map(|k| s.shard_of(k)).collect();
+        assert!(touched.len() > 1);
+        assert!(s.converged());
+    }
+
+    #[test]
+    fn stale_read_aborts_with_nothing_applied() {
+        let s = store();
+        let k = skey("a");
+        s.commit(&put(&k, Value::U64(1)), true).unwrap();
+        let stale = Commit {
+            reads: vec![(k.clone(), 0)],
+            ops: vec![MetaOp::Put {
+                key: k.clone(),
+                value: Value::U64(9),
+            }],
+        };
+        assert!(matches!(
+            s.commit(&stale, true),
+            Err(Error::TxnConflict { .. })
+        ));
+        assert_eq!(s.get(&k, true).unwrap().unwrap().0, Value::U64(1));
+    }
+
+    #[test]
+    fn failed_op_rolls_back_entire_commit() {
+        let s = store();
+        let a = skey("a");
+        let c = Commit {
+            reads: vec![],
+            ops: vec![
+                MetaOp::Put {
+                    key: a.clone(),
+                    value: Value::U64(1),
+                },
+                // Fails validation: inode op against a U64.
+                MetaOp::InodeSetLenMax {
+                    key: a.clone(),
+                    candidate: 1,
+                    highest_region: 0,
+                    mtime: 0,
+                },
+            ],
+        };
+        assert!(s.commit(&c, true).is_err());
+        assert_eq!(s.get(&a, true).unwrap(), None);
+    }
+
+    #[test]
+    fn cross_shard_set_len_from_region_is_rewritten() {
+        let s = store();
+        // Find a region key on a different shard than the inode key.
+        let ikey = Key::inode(9);
+        let ishard = s.shard_of(&ikey);
+        let rkey = (0..64)
+            .map(|i| Key::new(Space::Region, format!("r{i}")))
+            .find(|k| s.shard_of(k) != ishard)
+            .expect("some region key lands on another shard");
+        s.commit(&put(&ikey, Value::Inode(Inode::new_file(9, 0o644, 1))), true)
+            .unwrap();
+        let c = Commit {
+            reads: vec![],
+            ops: vec![
+                MetaOp::RegionAppendEof {
+                    key: rkey.clone(),
+                    data: stored(10),
+                    len: 10,
+                    cap: 100,
+                },
+                MetaOp::InodeSetLenFromRegion {
+                    inode_key: ikey.clone(),
+                    region_key: rkey.clone(),
+                    region_base: 1000,
+                    mtime: 1,
+                },
+            ],
+        };
+        let outcomes = s.commit(&c, true).unwrap();
+        assert_eq!(outcomes[0], OpOutcome::AppendedAt(0));
+        // The inode observed this commit's own append through the overlay
+        // even though the region lives in another group.
+        let inode = s.get(&ikey, true).unwrap().unwrap().0;
+        assert_eq!(inode.as_inode().unwrap().len, 1010);
+        assert!(s.converged());
+    }
+
+    #[test]
+    fn same_shard_set_len_from_region_stays_native() {
+        let s = store();
+        let ikey = Key::inode(7);
+        let ishard = s.shard_of(&ikey);
+        let rkey = (0..64)
+            .map(|i| Key::new(Space::Region, format!("q{i}")))
+            .find(|k| s.shard_of(k) == ishard)
+            .expect("some region key lands on the inode's shard");
+        s.commit(&put(&ikey, Value::Inode(Inode::new_file(7, 0o644, 1))), true)
+            .unwrap();
+        let c = Commit {
+            reads: vec![],
+            ops: vec![
+                MetaOp::RegionAppend {
+                    key: rkey.clone(),
+                    entry: RegionEntry {
+                        placement: Placement::At(0),
+                        len: 25,
+                        data: stored(25),
+                    },
+                },
+                MetaOp::InodeSetLenFromRegion {
+                    inode_key: ikey.clone(),
+                    region_key: rkey.clone(),
+                    region_base: 0,
+                    mtime: 1,
+                },
+            ],
+        };
+        s.commit(&c, true).unwrap();
+        let inode = s.get(&ikey, true).unwrap().unwrap().0;
+        assert_eq!(inode.as_inode().unwrap().len, 25);
+    }
+
+    #[test]
+    fn scan_space_aggregates_across_groups() {
+        let s = store();
+        for i in 0..12 {
+            s.commit(&put(&skey(&format!("s{i}")), Value::U64(i)), true)
+                .unwrap();
+        }
+        let all = s.scan_space(Space::Sys).unwrap();
+        assert_eq!(all.len(), 12);
+        assert!(all.windows(2).all(|w| w[0].0 <= w[1].0), "sorted");
+    }
+
+    #[test]
+    fn inode_ids_are_unique_and_start_past_root() {
+        let s = store();
+        let a = s.alloc_inode_id();
+        let b = s.alloc_inode_id();
+        assert!(a >= 2);
+        assert_ne!(a, b);
+    }
+}

@@ -15,6 +15,71 @@ use crate::types::{Key, Value};
 use std::sync::{Mutex, MutexGuard};
 use std::collections::HashMap;
 
+/// Stable FNV-1a shard placement, shared by the chain store and the
+/// Paxos-replicated store — both backends MUST place a key identically
+/// (independent of process hash seeds).
+pub(crate) fn shard_of_key(key: &Key, shards: usize) -> usize {
+    let mut h: u64 = 0xcbf29ce484222325;
+    let mut feed = |b: u8| {
+        h ^= u64::from(b);
+        h = h.wrapping_mul(0x100000001b3);
+    };
+    feed(key.space as u8);
+    for b in key.key.as_bytes() {
+        feed(*b);
+    }
+    (h % shards as u64) as usize
+}
+
+/// A single replica's versioned key-value state: one map plus the
+/// per-key mutation counter (which survives deletion — anti-ABA, same
+/// rule as the chain's shared version history below).
+///
+/// This is the unit a *Paxos group* replica materializes from its log
+/// ([`crate::meta::ShardGroup`]); the chain replicas of [`ShardInner`]
+/// keep their original shared-version layout.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct KvState {
+    map: HashMap<Key, Value>,
+    versions: HashMap<Key, u64>,
+}
+
+impl KvState {
+    pub fn get(&self, key: &Key) -> Option<&Value> {
+        self.map.get(key)
+    }
+
+    /// Current version of `key` (0 = never mutated).
+    pub fn version(&self, key: &Key) -> u64 {
+        self.versions.get(key).copied().unwrap_or(0)
+    }
+
+    /// Apply one mutation (`None` deletes) and bump the version.
+    pub fn set(&mut self, key: &Key, value: Option<Value>) {
+        match value {
+            Some(v) => {
+                self.map.insert(key.clone(), v);
+            }
+            None => {
+                self.map.remove(key);
+            }
+        }
+        *self.versions.entry(key.clone()).or_insert(0) += 1;
+    }
+
+    pub fn len(&self) -> usize {
+        self.map.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.map.is_empty()
+    }
+
+    pub fn iter(&self) -> impl Iterator<Item = (&Key, &Value)> {
+        self.map.iter()
+    }
+}
+
 /// A replica's materialized state.
 #[derive(Clone, Debug, Default)]
 struct Replica {
@@ -152,6 +217,22 @@ mod tests {
 
     fn k(s: &str) -> Key {
         Key::new(Space::Sys, s)
+    }
+
+    #[test]
+    fn kv_state_versions_survive_delete() {
+        let mut s = KvState::default();
+        assert_eq!(s.version(&k("a")), 0);
+        s.set(&k("a"), Some(Value::U64(1)));
+        assert_eq!(s.get(&k("a")), Some(&Value::U64(1)));
+        assert_eq!(s.version(&k("a")), 1);
+        s.set(&k("a"), None);
+        assert_eq!(s.get(&k("a")), None);
+        assert_eq!(s.version(&k("a")), 2, "version outlives deletion");
+        assert!(s.is_empty());
+        s.set(&k("a"), Some(Value::U64(1)));
+        assert_eq!(s.version(&k("a")), 3, "no ABA after recreate");
+        assert_eq!(s.len(), 1);
     }
 
     #[test]

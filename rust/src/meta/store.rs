@@ -53,18 +53,9 @@ impl MetaStore {
         }
     }
 
-    /// Stable FNV-1a shard placement (independent of process hash seeds).
+    /// Stable FNV-1a shard placement (shared with the replicated store).
     fn shard_of(&self, key: &Key) -> usize {
-        let mut h: u64 = 0xcbf29ce484222325;
-        let mut feed = |b: u8| {
-            h ^= u64::from(b);
-            h = h.wrapping_mul(0x100000001b3);
-        };
-        feed(key.space as u8);
-        for b in key.key.as_bytes() {
-            feed(*b);
-        }
-        (h % self.shards.len() as u64) as usize
+        super::shard::shard_of_key(key, self.shards.len())
     }
 
     /// Versioned point read (linearizable: served by the shard tail).
@@ -72,6 +63,13 @@ impl MetaStore {
         let g = self.shards[self.shard_of(key)].lock();
         let v = g.version(key);
         g.get(key).map(|val| (val.clone(), v))
+    }
+
+    /// Value AND version in one shard-locked read (absent keys still
+    /// report their version — read sets need the version of absence).
+    pub fn entry(&self, key: &Key) -> (Option<Value>, u64) {
+        let g = self.shards[self.shard_of(key)].lock();
+        (g.get(key).cloned(), g.version(key))
     }
 
     /// Version of `key` without copying the value.
@@ -121,33 +119,13 @@ impl MetaStore {
         }
 
         // 3. Stage ops against an overlay so each op sees its
-        //    predecessors; validation failures abort with nothing applied.
-        let mut overlay: HashMap<Key, Option<Value>> = HashMap::new();
-        let mut outcomes = Vec::with_capacity(commit.ops.len());
-        for op in &commit.ops {
-            let key = op.key().clone();
-            let committed = |k: &Key| {
-                guards[&self.shard_of(k)].get(k).cloned()
-            };
-            // Take (don't clone) the staged value: repeated ops on one
-            // key — e.g. a concat appending thousands of entries to one
-            // region — must stay O(total entries), not O(n^2).
-            let current: Option<Value> = match overlay.remove(&key) {
-                Some(staged) => staged,
-                None => committed(&key),
-            };
-            // Committed version: conditional (CAS) ops compare against the
-            // pre-transaction version, which is what their reads observed.
-            let version = guards[&self.shard_of(&key)].version(&key);
-            ops::validate(op, current.as_ref(), version)?;
-            let peek = |k: &Key| match overlay.get(k) {
-                Some(staged) => staged.clone(),
-                None => committed(k),
-            };
-            let (next, outcome) = ops::apply(op, current, &peek)?;
-            overlay.insert(key, next);
-            outcomes.push(outcome);
-        }
+        //    predecessors; validation failures abort with nothing applied
+        //    (the shared staging of [`ops::stage`]).
+        let committed = |k: &Key| {
+            let g = &guards[&self.shard_of(k)];
+            Ok((g.get(k).cloned(), g.version(k)))
+        };
+        let (overlay, outcomes) = ops::stage(&commit.ops, &committed, |_, _| {})?;
 
         // 4. Apply the overlay; one version bump per mutated key.
         for (key, value) in overlay {
@@ -199,52 +177,176 @@ impl MetaStore {
     }
 }
 
-/// [`MetaStore`] plus the deployment concerns: the simulated transaction
-/// latency floor (the paper measures ~3 ms per HyperDex transaction) and
-/// metrics.  All client traffic goes through this type.
+/// A read-only snapshot view of the metadata — what GC scans.  Served by
+/// the raw chain store (unit tests) or the deployed [`MetaService`],
+/// whichever backend it runs.  Fallible on purpose: GC decides slice
+/// liveness from these scans, so an unreadable shard must abort the
+/// round, never read as empty.
+pub trait MetaSnapshot {
+    fn scan_space(&self, space: Space) -> Result<Vec<(Key, Value)>>;
+}
+
+impl MetaSnapshot for MetaStore {
+    fn scan_space(&self, space: Space) -> Result<Vec<(Key, Value)>> {
+        Ok(MetaStore::scan_space(self, space))
+    }
+}
+
+impl MetaSnapshot for MetaService {
+    fn scan_space(&self, space: Space) -> Result<Vec<(Key, Value)>> {
+        MetaService::scan_space(self, space)
+    }
+}
+
+/// Which engine holds the metadata: the in-process chain-replicated
+/// store, or the Paxos-replicated shard groups.
+#[derive(Debug)]
+enum MetaBackend {
+    Chain(MetaStore),
+    Paxos(super::ReplicatedMetaStore),
+}
+
+/// The metadata engine plus the deployment concerns: the simulated
+/// transaction latency floor (the paper measures ~3 ms per HyperDex
+/// transaction) and metrics.  All client traffic goes through this type.
+///
+/// Direct method calls (`get_checked`, `commit`, …) perform blocking
+/// leader discovery on the replicated backend; the transport envelope
+/// path ([`crate::net::Handler`]) does not, surfacing
+/// [`Error::NotLeader`] for the client's retry layer to handle.
 #[derive(Debug)]
 pub struct MetaService {
-    store: MetaStore,
+    backend: MetaBackend,
     txn_floor: Duration,
     metrics: Metrics,
 }
 
 impl MetaService {
+    /// A service over the chain-replicated store.
     pub fn new(store: MetaStore, txn_floor: Duration, metrics: Metrics) -> Self {
         MetaService {
-            store,
+            backend: MetaBackend::Chain(store),
             txn_floor,
             metrics,
         }
     }
 
-    pub fn store(&self) -> &MetaStore {
-        &self.store
+    /// A service over Paxos-replicated shard groups.
+    pub fn replicated(
+        store: super::ReplicatedMetaStore,
+        txn_floor: Duration,
+        metrics: Metrics,
+    ) -> Self {
+        MetaService {
+            backend: MetaBackend::Paxos(store),
+            txn_floor,
+            metrics,
+        }
+    }
+
+    /// The replicated backend, when this service runs one (tests, fault
+    /// injection, leader introspection).
+    pub fn replicated_store(&self) -> Option<&super::ReplicatedMetaStore> {
+        match &self.backend {
+            MetaBackend::Chain(_) => None,
+            MetaBackend::Paxos(r) => Some(r),
+        }
     }
 
     pub fn metrics(&self) -> &Metrics {
         &self.metrics
     }
 
-    pub fn get(&self, key: &Key) -> Option<(Value, u64)> {
-        self.store.get(key)
+    /// Envelope-path read: no blocking leader discovery — a leaderless
+    /// shard surfaces [`Error::NotLeader`] for the client to handle.
+    /// Returns value AND version in one atomic view read (absent keys
+    /// still report their version).
+    pub fn try_get(&self, key: &Key) -> Result<(Option<Value>, u64)> {
+        match &self.backend {
+            MetaBackend::Chain(s) => Ok(s.entry(key)),
+            MetaBackend::Paxos(r) => r.entry(key, false),
+        }
+    }
+
+    /// Auto-electing versioned read.  There is deliberately NO
+    /// infallible `get` on this service: an unreadable replicated shard
+    /// must surface as an error, never read as "absent".
+    pub fn get_checked(&self, key: &Key) -> Result<(Option<Value>, u64)> {
+        match &self.backend {
+            MetaBackend::Chain(s) => Ok(s.entry(key)),
+            MetaBackend::Paxos(r) => r.entry(key, true),
+        }
     }
 
     pub fn alloc_inode_id(&self) -> u64 {
-        self.store.alloc_inode_id()
+        match &self.backend {
+            MetaBackend::Chain(s) => s.alloc_inode_id(),
+            MetaBackend::Paxos(r) => r.alloc_inode_id(),
+        }
     }
 
     /// Commit with the latency floor charged once per transaction.
     pub fn commit(&self, commit: &Commit) -> Result<Vec<OpOutcome>> {
+        self.commit_with(commit, true)
+    }
+
+    fn commit_with(&self, commit: &Commit, auto_elect: bool) -> Result<Vec<OpOutcome>> {
         if self.txn_floor > Duration::ZERO {
             std::thread::sleep(self.txn_floor);
         }
         self.metrics.add_meta_txns(1);
-        let r = self.store.commit(commit);
+        let r = match &self.backend {
+            MetaBackend::Chain(s) => s.commit(commit),
+            MetaBackend::Paxos(rs) => rs.commit(commit, auto_elect),
+        };
         if matches!(r, Err(Error::TxnConflict { .. })) {
             self.metrics.add_meta_conflicts(1);
         }
         r
+    }
+
+    /// Full scan of one space (GC's view; not transactional).  Errors —
+    /// rather than reading as empty — when a replicated shard cannot
+    /// serve (no leader electable / quorum gone).
+    pub fn scan_space(&self, space: Space) -> Result<Vec<(Key, Value)>> {
+        match &self.backend {
+            MetaBackend::Chain(s) => Ok(s.scan_space(space)),
+            MetaBackend::Paxos(r) => r.scan_space(space),
+        }
+    }
+
+    /// Kill replica `idx` of every shard (chain member or group member).
+    pub fn kill_replica(&self, idx: usize) {
+        match &self.backend {
+            MetaBackend::Chain(s) => s.kill_replica(idx),
+            MetaBackend::Paxos(r) => r.kill_replica(idx),
+        }
+    }
+
+    /// Recover replica `idx` of every shard (chain resync, or Paxos log
+    /// replay; best-effort when a group has no quorum to replay from).
+    pub fn recover_replica(&self, idx: usize) {
+        match &self.backend {
+            MetaBackend::Chain(s) => s.recover_replica(idx),
+            MetaBackend::Paxos(r) => {
+                let _ = r.recover_replica(idx);
+            }
+        }
+    }
+
+    /// Blocking leader rediscovery for `shard` — the client's follow-up
+    /// to [`Error::NotLeader`].  No-op on the chain backend.
+    pub fn heal(&self, shard: u32) {
+        if let MetaBackend::Paxos(r) = &self.backend {
+            let _ = r.heal(shard);
+        }
+    }
+
+    pub fn shard_stats(&self) -> Vec<ShardStats> {
+        match &self.backend {
+            MetaBackend::Chain(s) => s.shard_stats(),
+            MetaBackend::Paxos(r) => r.shard_stats(),
+        }
     }
 }
 
@@ -252,12 +354,24 @@ impl MetaService {
 /// versioned point reads arrive as envelopes, same as storage traffic.
 /// (The metadata plane's cost model is the transaction floor above, so
 /// these envelopes report no wire bytes to the data-plane link.)
+///
+/// No fail-stop wrapper here on purpose: the service front-end is not a
+/// quorum member — a panic in it (or the chain store) is a bug that
+/// should stay loud on the caller.  The per-replica conversion to
+/// [`Error::ReplicaLost`] lives on [`crate::meta::GroupReplica`], where
+/// real (shard, replica) ids exist and a crash genuinely just degrades
+/// a quorum.
 impl crate::net::Handler for MetaService {
     fn serve(&self, req: &crate::net::Request) -> Result<crate::net::Response> {
         use crate::net::{Request, Response};
         match req {
-            Request::MetaCommit { commit } => Ok(Response::Outcomes(self.commit(commit)?)),
-            Request::MetaGet { key } => Ok(Response::MetaValue(self.get(key))),
+            Request::MetaCommit { commit } => {
+                Ok(Response::Outcomes(self.commit_with(commit, false)?))
+            }
+            Request::MetaGet { key } => {
+                let (value, version) = self.try_get(key)?;
+                Ok(Response::MetaValue { value, version })
+            }
             other => Err(Error::Unsupported(format!(
                 "metadata service cannot serve {other:?}"
             ))),

@@ -7,7 +7,7 @@
 
 use super::ops::{MetaOp, OpOutcome};
 use super::store::{Commit, MetaService};
-use crate::error::Result;
+use crate::error::{Error, Result};
 use crate::net::{Request, Transport};
 use crate::types::{Key, Value};
 use std::collections::HashMap;
@@ -26,6 +26,9 @@ pub struct MetaTxn {
     reads: HashMap<Key, (Option<Value>, u64)>,
     read_order: Vec<Key>,
     ops: Vec<MetaOp>,
+    /// Max NotLeader heal-retries per read (the deployment threads
+    /// `Config::txn_retry_budget` through here).
+    heal_budget: u32,
 }
 
 impl MetaTxn {
@@ -36,6 +39,7 @@ impl MetaTxn {
             reads: HashMap::new(),
             read_order: Vec::new(),
             ops: Vec::new(),
+            heal_budget: 16,
         }
     }
 
@@ -47,37 +51,54 @@ impl MetaTxn {
         }
     }
 
+    /// Override the per-read NotLeader heal-retry budget.
+    pub fn heal_budget(mut self, budget: u32) -> Self {
+        self.heal_budget = budget.max(1);
+        self
+    }
+
     /// Read `key`, recording its version in the read set.  Re-reads are
     /// answered from the transaction's cache so the transaction observes
     /// a stable snapshot of every key it touches.
-    pub fn get(&mut self, key: &Key) -> Option<Value> {
+    ///
+    /// `NotLeader` answers trigger a blocking heal of the shard and a
+    /// retry; any other failure (e.g. `NoQuorum`) SURFACES — a
+    /// transactional read must never record a key as absent just
+    /// because its shard is unreadable.
+    pub fn get(&mut self, key: &Key) -> Result<Option<Value>> {
         if let Some((v, _)) = self.reads.get(key) {
-            return v.clone();
+            return Ok(v.clone());
         }
-        let fetched = match &self.transport {
-            Some(t) => match t
-                .call(
-                    self.service.clone(),
-                    Request::MetaGet { key: key.clone() },
-                )
-                .and_then(crate::net::Response::into_meta_value)
-            {
-                Ok(v) => v,
-                // A transport-level failure (cannot happen for MetaGet in
-                // the in-process deployment) falls back to the direct
-                // path rather than mis-reporting the key as absent.
-                Err(_) => self.service.get(key),
-            },
-            None => self.service.get(key),
-        };
-        let (value, version) = match fetched {
-            Some((v, ver)) => (Some(v), ver),
-            None => (None, self.service.store().version(key)),
+        // Value + version arrive from ONE atomic view read (absent keys
+        // included): a separate version fetch could race a concurrent
+        // commit and record an (absence, version) pair that never
+        // coexisted.
+        let (value, version) = match &self.transport {
+            Some(t) => {
+                let mut attempts = 0u32;
+                loop {
+                    match t
+                        .call(
+                            self.service.clone(),
+                            Request::MetaGet { key: key.clone() },
+                        )
+                        .and_then(crate::net::Response::into_meta_value)
+                    {
+                        Ok(pair) => break pair,
+                        Err(Error::NotLeader { shard, .. }) if attempts < self.heal_budget => {
+                            attempts += 1;
+                            self.service.heal(shard);
+                        }
+                        Err(e) => return Err(e),
+                    }
+                }
+            }
+            None => self.service.get_checked(key)?,
         };
         self.reads
             .insert(key.clone(), (value.clone(), version));
         self.read_order.push(key.clone());
-        value
+        Ok(value)
     }
 
     /// Queue a mutation.
@@ -138,13 +159,13 @@ mod tests {
     fn read_then_write_commits() {
         let svc = service();
         let mut t = MetaTxn::new(svc.clone());
-        assert_eq!(t.get(&k("a")), None);
+        assert_eq!(t.get(&k("a")).unwrap(), None);
         t.push(MetaOp::Put {
             key: k("a"),
             value: Value::U64(1),
         });
         t.commit().unwrap();
-        assert_eq!(svc.get(&k("a")).unwrap().0, Value::U64(1));
+        assert_eq!(svc.get_checked(&k("a")).unwrap().0, Some(Value::U64(1)));
     }
 
     #[test]
@@ -164,14 +185,14 @@ mod tests {
             value: Value::U64(1),
         });
         assert!(t.commit().is_err());
-        assert_eq!(svc.get(&k("a")).unwrap().0, Value::U64(9));
+        assert_eq!(svc.get_checked(&k("a")).unwrap().0, Some(Value::U64(9)));
     }
 
     #[test]
     fn rereads_are_snapshot_stable() {
         let svc = service();
         let mut t = MetaTxn::new(svc.clone());
-        assert_eq!(t.get(&k("a")), None);
+        assert_eq!(t.get(&k("a")).unwrap(), None);
         // Another writer commits in between.
         let mut w = MetaTxn::new(svc.clone());
         w.push(MetaOp::Put {
@@ -180,7 +201,7 @@ mod tests {
         });
         w.commit().unwrap();
         // The transaction still sees its snapshot.
-        assert_eq!(t.get(&k("a")), None);
+        assert_eq!(t.get(&k("a")).unwrap(), None);
     }
 
     #[test]

@@ -29,8 +29,9 @@
 //! behavior).
 
 use super::LinkModel;
+use crate::coordinator::paxos::Ballot;
 use crate::error::{Error, Result};
-use crate::meta::{Commit, OpOutcome};
+use crate::meta::{Commit, LogEntry, OpOutcome};
 use crate::types::{Key, RegionId, SlicePtr, Value};
 use std::fmt;
 use std::sync::mpsc;
@@ -54,6 +55,36 @@ pub enum Request {
     MetaCommit { commit: Commit },
     /// Versioned metadata point read.
     MetaGet { key: Key },
+    /// Paxos phase 1 for one shard-group log slot.  Served by a
+    /// [`crate::meta::GroupReplica`].
+    PaxosPrepare {
+        shard: u32,
+        slot: u64,
+        ballot: Ballot,
+    },
+    /// Paxos phase 2: accept `entry` at `slot` unless promised higher.
+    PaxosAccept {
+        shard: u32,
+        slot: u64,
+        ballot: Ballot,
+        entry: LogEntry,
+    },
+    /// Teach a replica a chosen entry (it appends and applies in order).
+    PaxosLearn {
+        shard: u32,
+        slot: u64,
+        entry: LogEntry,
+    },
+    /// A replica's chosen-log length (leader catch-up after election).
+    PaxosStatus { shard: u32 },
+    /// Chosen-log suffix from slot `from` (rejoining-replica replay).
+    PaxosPull { shard: u32, from: u64 },
+    /// Ask a replica to grant `leader` a lease until `until_ms`.
+    LeaseRequest {
+        shard: u32,
+        leader: u32,
+        until_ms: u64,
+    },
 }
 
 impl fmt::Debug for Request {
@@ -73,6 +104,36 @@ impl fmt::Debug for Request {
                 write!(f, "MetaCommit({} ops)", commit.ops.len())
             }
             Request::MetaGet { key } => write!(f, "MetaGet({:?}:{})", key.space, key.key),
+            Request::PaxosPrepare { shard, slot, ballot } => {
+                write!(f, "PaxosPrepare(shard {shard}, slot {slot}, {ballot:?})")
+            }
+            Request::PaxosAccept {
+                shard,
+                slot,
+                ballot,
+                entry,
+            } => write!(
+                f,
+                "PaxosAccept(shard {shard}, slot {slot}, {ballot:?}, txn {})",
+                entry.txn_id
+            ),
+            Request::PaxosLearn { shard, slot, entry } => write!(
+                f,
+                "PaxosLearn(shard {shard}, slot {slot}, txn {})",
+                entry.txn_id
+            ),
+            Request::PaxosStatus { shard } => write!(f, "PaxosStatus(shard {shard})"),
+            Request::PaxosPull { shard, from } => {
+                write!(f, "PaxosPull(shard {shard}, from {from})")
+            }
+            Request::LeaseRequest {
+                shard,
+                leader,
+                until_ms,
+            } => write!(
+                f,
+                "LeaseRequest(shard {shard}, leader {leader}, until {until_ms} ms)"
+            ),
         }
     }
 }
@@ -97,7 +158,14 @@ impl Request {
             Request::CreateSlice { data, .. } => WireCost::Upload(data.len() as u64),
             Request::AppendBlock { data, .. } => WireCost::Upload(data.len() as u64),
             Request::RetrieveSlice { .. } | Request::ReadBlock { .. } => WireCost::Download,
-            Request::MetaCommit { .. } | Request::MetaGet { .. } => WireCost::Free,
+            Request::MetaCommit { .. }
+            | Request::MetaGet { .. }
+            | Request::PaxosPrepare { .. }
+            | Request::PaxosAccept { .. }
+            | Request::PaxosLearn { .. }
+            | Request::PaxosStatus { .. }
+            | Request::PaxosPull { .. }
+            | Request::LeaseRequest { .. } => WireCost::Free,
         }
     }
 }
@@ -113,8 +181,29 @@ pub enum Response {
     BlockLen(u64),
     /// `MetaCommit`: one outcome per op.
     Outcomes(Vec<OpOutcome>),
-    /// `MetaGet`: value + version when present.
-    MetaValue(Option<(Value, u64)>),
+    /// `MetaGet`: current value plus the key's version — carried even
+    /// for absent keys (version of absence matters to read sets; a
+    /// separate version round-trip would race concurrent commits).
+    MetaValue {
+        value: Option<Value>,
+        version: u64,
+    },
+    /// `PaxosPrepare`: promise granted? plus any previously accepted
+    /// entry the proposer must adopt.
+    Promised {
+        granted: bool,
+        accepted: Option<(Ballot, LogEntry)>,
+    },
+    /// `PaxosAccept`: accepted under the offered ballot?
+    Accepted(bool),
+    /// `PaxosLearn`: acknowledged.
+    Learned,
+    /// `PaxosStatus`: the replica's chosen-log length.
+    LogLen(u64),
+    /// `PaxosPull`: chosen entries from the requested slot on.
+    LogSuffix(Vec<LogEntry>),
+    /// `LeaseRequest`: grant outcome.
+    LeaseGranted(bool),
 }
 
 impl Response {
@@ -154,10 +243,45 @@ impl Response {
         }
     }
 
-    pub fn into_meta_value(self) -> Result<Option<(Value, u64)>> {
+    pub fn into_meta_value(self) -> Result<(Option<Value>, u64)> {
         match self {
-            Response::MetaValue(v) => Ok(v),
+            Response::MetaValue { value, version } => Ok((value, version)),
             other => Err(protocol_error("MetaValue", &other)),
+        }
+    }
+
+    pub fn into_promised(self) -> Result<(bool, Option<(Ballot, LogEntry)>)> {
+        match self {
+            Response::Promised { granted, accepted } => Ok((granted, accepted)),
+            other => Err(protocol_error("Promised", &other)),
+        }
+    }
+
+    pub fn into_accepted(self) -> Result<bool> {
+        match self {
+            Response::Accepted(ok) => Ok(ok),
+            other => Err(protocol_error("Accepted", &other)),
+        }
+    }
+
+    pub fn into_log_len(self) -> Result<u64> {
+        match self {
+            Response::LogLen(n) => Ok(n),
+            other => Err(protocol_error("LogLen", &other)),
+        }
+    }
+
+    pub fn into_log_suffix(self) -> Result<Vec<LogEntry>> {
+        match self {
+            Response::LogSuffix(v) => Ok(v),
+            other => Err(protocol_error("LogSuffix", &other)),
+        }
+    }
+
+    pub fn into_lease_granted(self) -> Result<bool> {
+        match self {
+            Response::LeaseGranted(ok) => Ok(ok),
+            other => Err(protocol_error("LeaseGranted", &other)),
         }
     }
 }
@@ -166,6 +290,22 @@ fn protocol_error(expected: &str, got: &Response) -> Error {
     Error::CorruptMetadata(format!(
         "transport protocol violation: expected {expected}, got {got:?}"
     ))
+}
+
+/// Run a metadata-plane handler body fail-stop: a panic becomes a typed
+/// [`Error::ReplicaLost`] for (`shard`, `replica`) instead of being
+/// resumed on the joining caller.  Metadata replicas are quorum members —
+/// one crashing must merely degrade its group's quorum, not poison the
+/// client thread that happened to scatter a Paxos round to it.
+/// (Data-plane handlers keep the resume-on-caller behavior of
+/// [`Pending::join`]: a storage-server bug should stay loud.)
+pub fn serve_fail_stop(
+    shard: u32,
+    replica: u32,
+    f: impl FnOnce() -> Result<Response>,
+) -> Result<Response> {
+    std::panic::catch_unwind(std::panic::AssertUnwindSafe(f))
+        .unwrap_or_else(|_panic| Err(Error::ReplicaLost { shard, replica }))
 }
 
 /// The server side of the transport: anything that can serve envelopes.
@@ -210,7 +350,10 @@ impl Slot {
 impl Pending {
     /// Block until the response (or error) arrives.  A handler panic is
     /// resumed here, on the caller, exactly as a direct call would have
-    /// panicked — the transport never converts bugs into `Err`s.
+    /// panicked — the transport itself never converts bugs into `Err`s.
+    /// (Metadata-plane handlers opt into fail-stop conversion via
+    /// [`serve_fail_stop`], so a crashed quorum member degrades its
+    /// group instead of taking the client thread with it.)
     pub fn join(self) -> Result<Response> {
         let mut g = self.slot.result.lock().unwrap();
         while g.is_none() {

@@ -404,7 +404,11 @@ fn merge_argsort(rt: &XlaRuntime, keys: &[i32], tile: usize) -> Result<Vec<u32>>
             if heads[r] < run.len() {
                 let idx = run[heads[r]];
                 let cand = (keys[idx as usize], idx, r);
-                if best.map_or(true, |(bk, bi, _)| (cand.0, cand.1) < (bk, bi)) {
+                let better = match best {
+                    Some((bk, bi, _)) => (cand.0, cand.1) < (bk, bi),
+                    None => true,
+                };
+                if better {
                     best = Some(cand);
                 }
             }

@@ -15,7 +15,7 @@
 //! the horizon as live.
 
 use crate::error::Result;
-use crate::meta::MetaStore;
+use crate::meta::MetaSnapshot;
 use crate::net::{Peer, Request, Transport};
 use crate::types::{ServerId, SliceData, Space, Value};
 use std::collections::HashMap;
@@ -62,7 +62,7 @@ pub fn union_extents(a: &[(u64, u64)], b: &[(u64, u64)]) -> Vec<(u64, u64)> {
 /// The paper stores these lists in a reserved WTF directory so servers
 /// read them through the client library; in-process we hand the map to
 /// the servers directly (DESIGN.md §5).
-pub fn scan_in_use(meta: &MetaStore) -> InUseMap {
+pub fn scan_in_use(meta: &dyn MetaSnapshot) -> Result<InUseMap> {
     scan_in_use_with_spills(meta, None, None)
 }
 
@@ -86,20 +86,22 @@ fn fetch_spill(
 /// [`scan_in_use`] that also decodes tier-2 spill slices (fetched from
 /// `cluster`) so the data they reference stays protected.
 pub fn scan_in_use_with_spills(
-    meta: &MetaStore,
+    meta: &dyn MetaSnapshot,
     cluster: Option<&StorageCluster>,
     transport: Option<&Transport>,
-) -> InUseMap {
+) -> Result<InUseMap> {
     // Live inodes: regions belonging to unlinked files are garbage too
     // (§2.8: "as an application overwrites or deletes files, slices
-    // become unused").  Region keys embed the inode id.
+    // become unused").  Region keys embed the inode id.  A failed scan
+    // aborts the whole round: an unreadable shard must never be
+    // mistaken for an empty one, or its live slices get reclaimed.
     let live_inodes: std::collections::HashSet<String> = meta
-        .scan_space(Space::Inode)
+        .scan_space(Space::Inode)?
         .into_iter()
         .map(|(k, _)| k.key)
         .collect();
     let mut raw: HashMap<(ServerId, u32), Vec<(u64, u64)>> = HashMap::new();
-    for (key, value) in meta.scan_space(Space::Region) {
+    for (key, value) in meta.scan_space(Space::Region)? {
         let Value::Region(region) = value else {
             continue;
         };
@@ -146,9 +148,10 @@ pub fn scan_in_use_with_spills(
             }
         }
     }
-    raw.into_iter()
+    Ok(raw
+        .into_iter()
         .map(|(k, v)| (k, normalize_extents(v)))
-        .collect()
+        .collect())
 }
 
 /// The periodic GC driver.
@@ -173,11 +176,13 @@ impl GcCoordinator {
     /// modeled wire cost as any other reader.
     pub fn run(
         &mut self,
-        meta: &MetaStore,
+        meta: &dyn MetaSnapshot,
         cluster: &StorageCluster,
         transport: Option<&Transport>,
     ) -> Result<GcReport> {
-        let current = scan_in_use_with_spills(meta, Some(cluster), transport);
+        // An unreadable shard aborts the round before anything is
+        // touched — GC must never collect against a partial scan.
+        let current = scan_in_use_with_spills(meta, Some(cluster), transport)?;
         let mut report = GcReport::default();
 
         // First scan ever: record state, collect nothing (a slice created
@@ -246,7 +251,7 @@ fn server_backing_len(server: &Arc<crate::storage::StorageServer>, backing: u32)
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::meta::{Commit, MetaOp};
+    use crate::meta::{Commit, MetaOp, MetaStore};
     use crate::storage::StorageServer;
     use crate::types::{Key, Placement, RegionEntry, RegionId};
 
@@ -362,7 +367,7 @@ mod tests {
             }],
         };
         meta.commit(&c).unwrap();
-        let in_use = scan_in_use(&meta);
+        let in_use = scan_in_use(&meta).unwrap();
         let extents = &in_use[&(0, a.backing)];
         assert_eq!(extents.iter().map(|(_, l)| l).sum::<u64>(), 20);
     }

@@ -22,15 +22,15 @@ fn metadata_survives_chain_replica_failure_mid_workload() {
     c.write(&mut fd, b"before failure").unwrap();
 
     // Kill one replica of EVERY metadata shard (f=1 tolerance).
-    cl.meta().store().kill_replica(0);
+    cl.meta().kill_replica(0);
     assert_eq!(c.read_at(&fd, 0, 14).unwrap(), b"before failure");
     c.append_bytes(&fd, b" and after").unwrap();
     assert_eq!(c.read_at(&fd, 0, 24).unwrap(), b"before failure and after");
 
     // Recover; then kill the OTHER replica: the recovered one must have
     // the post-failure writes.
-    cl.meta().store().recover_replica(0);
-    cl.meta().store().kill_replica(1);
+    cl.meta().recover_replica(0);
+    cl.meta().kill_replica(1);
     assert_eq!(c.read_at(&fd, 0, 24).unwrap(), b"before failure and after");
     for s in cl.meta_shard_stats() {
         assert_eq!(s.live_replicas, 1);
@@ -114,14 +114,14 @@ fn concurrent_writer_storm_with_meta_replica_flapping() {
             let mut i = 0;
             while !stop.load(std::sync::atomic::Ordering::Relaxed) {
                 if i % 2 == 0 {
-                    cl.meta().store().kill_replica(0);
+                    cl.meta().kill_replica(0);
                 } else {
-                    cl.meta().store().recover_replica(0);
+                    cl.meta().recover_replica(0);
                 }
                 i += 1;
                 std::thread::sleep(std::time::Duration::from_micros(200));
             }
-            cl.meta().store().recover_replica(0);
+            cl.meta().recover_replica(0);
         })
     };
 
@@ -154,6 +154,163 @@ fn concurrent_writer_storm_with_meta_replica_flapping() {
         counts[(rec[0] - b'a') as usize] += 1;
     }
     assert!(counts.iter().all(|&n| n == 24), "{counts:?}");
+}
+
+// ---------------------------------------------------------------------
+// Paxos-replicated metadata: leader failover, lease reads, exactly-once.
+// ---------------------------------------------------------------------
+
+fn replicated_cluster() -> Cluster {
+    Cluster::builder()
+        .config(Config::replicated_test())
+        .build()
+        .unwrap()
+}
+
+#[test]
+fn replicated_meta_survives_follower_loss_and_rejoins() {
+    let cl = replicated_cluster();
+    let c = cl.client();
+    let mut fd = c.create("/f").unwrap();
+    c.write(&mut fd, b"before failure").unwrap();
+
+    // Replica 0 leads every group at bootstrap, so replica 2 is a
+    // follower everywhere: killing it must not stall anything.
+    cl.meta().kill_replica(2);
+    assert_eq!(c.read_at(&fd, 0, 14).unwrap(), b"before failure");
+    c.append_bytes(&fd, b" and after").unwrap();
+    assert_eq!(c.read_at(&fd, 0, 24).unwrap(), b"before failure and after");
+
+    // Rejoin: deterministic log replay rebuilds the replica's state.
+    cl.meta().recover_replica(2);
+    let r = cl.meta().replicated_store().unwrap();
+    assert!(r.converged(), "rejoined replica replayed to the same state");
+    for s in cl.meta_shard_stats() {
+        assert_eq!(s.live_replicas, 3);
+    }
+}
+
+#[test]
+fn replicated_client_heals_after_leader_kill() {
+    let cl = replicated_cluster();
+    let c = cl.client();
+    let fd = c.create("/heal").unwrap();
+    c.append_bytes(&fd, b"one").unwrap();
+    let elections_before = cl.meta().replicated_store().unwrap().elections();
+
+    cl.meta().kill_replica(0); // every group's leader
+
+    // The next op hits NotLeader on the envelope path; the client's
+    // retry layer rediscovers the leader (waiting out the dead leader's
+    // lease) and replays to success.
+    c.append_bytes(&fd, b" two").unwrap();
+    assert_eq!(c.read_at(&fd, 0, 7).unwrap(), b"one two");
+
+    let r = cl.meta().replicated_store().unwrap();
+    assert!(r.elections() > elections_before, "a failover election ran");
+    assert!(r.converged());
+}
+
+#[test]
+fn replicated_leader_failover_mid_transaction_is_exactly_once() {
+    use std::sync::atomic::{AtomicBool, Ordering};
+
+    let cl = Arc::new(replicated_cluster());
+    let c = cl.client();
+    c.create("/a").unwrap();
+    c.create("/b").unwrap();
+
+    // Crash every group's leader while multi-file transactions are in
+    // flight.
+    let started = Arc::new(AtomicBool::new(false));
+    let killer = {
+        let cl = cl.clone();
+        let started = started.clone();
+        std::thread::spawn(move || {
+            while !started.load(Ordering::Relaxed) {
+                std::thread::yield_now();
+            }
+            std::thread::sleep(std::time::Duration::from_millis(2));
+            cl.meta().kill_replica(0);
+        })
+    };
+
+    let mut committed = Vec::new();
+    for i in 0..26u8 {
+        let rec = [b'a' + i; 16];
+        let mut t = c.begin();
+        let fa = t.open("/a").unwrap();
+        let fb = t.open("/b").unwrap();
+        t.seek(fa, wtf::client::SeekFrom::End(0)).unwrap();
+        t.write(fa, &rec).unwrap();
+        t.seek(fb, wtf::client::SeekFrom::End(0)).unwrap();
+        t.write(fb, &rec).unwrap();
+        started.store(true, Ordering::Relaxed);
+        // Stretch the stream so the kill lands between commits, not
+        // after them all.
+        std::thread::sleep(std::time::Duration::from_micros(300));
+        match t.commit() {
+            Ok(()) => committed.push(i),
+            // A clean abort is acceptable under failover; losing or
+            // double-applying a committed op is not (checked below).
+            Err(e) => assert!(
+                matches!(
+                    e,
+                    wtf::Error::TxnAborted { .. } | wtf::Error::RetriesExhausted { .. }
+                ),
+                "unexpected commit error under failover: {e}"
+            ),
+        }
+    }
+    killer.join().unwrap();
+
+    // Every marker a successful commit wrote appears in BOTH files
+    // exactly once; aborted markers appear in neither.
+    for path in ["/a", "/b"] {
+        let fd = c.open(path).unwrap();
+        let len = c.len(&fd).unwrap();
+        assert_eq!(len % 16, 0, "torn append in {path}");
+        let data = c.read_at(&fd, 0, len).unwrap();
+        let mut counts = [0u32; 26];
+        for rec in data.chunks(16) {
+            assert!(rec.iter().all(|&b| b == rec[0]), "torn record in {path}");
+            counts[(rec[0] - b'a') as usize] += 1;
+        }
+        for i in 0..26u8 {
+            let expect = u32::from(committed.contains(&i));
+            assert_eq!(
+                counts[i as usize], expect,
+                "marker {i} in {path}: committed MetaOp lost or applied twice"
+            );
+        }
+    }
+    let r = cl.meta().replicated_store().unwrap();
+    assert!(r.converged(), "all live replicas agree after failover");
+}
+
+#[test]
+fn replicated_no_quorum_halts_commits_until_rejoin() {
+    let cl = replicated_cluster();
+    let c = cl.client();
+    let fd = c.create("/nq").unwrap();
+    c.append_bytes(&fd, b"safe").unwrap();
+
+    cl.meta().kill_replica(1);
+    cl.meta().kill_replica(2);
+    assert!(
+        c.append_bytes(&fd, b"lost").is_err(),
+        "majority dead: commits must fail"
+    );
+
+    // A learner rejoins from the survivor's log (no quorum needed), and
+    // service resumes.
+    cl.meta().recover_replica(1);
+    c.append_bytes(&fd, b" back").unwrap();
+    let len = c.len(&fd).unwrap();
+    let data = c.read_at(&fd, 0, len).unwrap();
+    assert!(data.starts_with(b"safe"), "{data:?}");
+    assert!(data.ends_with(b" back"), "{data:?}");
+    assert!(cl.meta().replicated_store().unwrap().converged());
 }
 
 #[test]

@@ -1,0 +1,128 @@
+//! Compile-only stub of the `xla` (xla_extension 0.5.x) API surface the
+//! WTF reproduction uses.  Everything type-checks; every fallible entry
+//! point returns [`Error`], so `XlaRuntime::load` fails cleanly at
+//! runtime and callers fall back to the pure-rust `NativeCompute`
+//! oracle.  Replace the `vendor/xla-stub` path dependency with the real
+//! bindings to run the AOT-compiled Pallas kernels through PJRT.
+
+use std::fmt;
+
+/// The bindings' error type.
+#[derive(Debug)]
+pub struct Error(String);
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.0)
+    }
+}
+
+impl std::error::Error for Error {}
+
+fn unavailable<T>() -> Result<T, Error> {
+    Err(Error(
+        "xla stub: PJRT backend unavailable (the real xla_extension \
+         bindings are not vendored in this build)"
+            .to_string(),
+    ))
+}
+
+/// Element types a [`Literal`] can carry.
+pub trait NativeType: Copy {}
+impl NativeType for i32 {}
+impl NativeType for i64 {}
+impl NativeType for f32 {}
+impl NativeType for f64 {}
+impl NativeType for u32 {}
+impl NativeType for u64 {}
+
+/// A host-side tensor.
+#[derive(Clone, Debug)]
+pub struct Literal;
+
+impl Literal {
+    /// Build a rank-1 literal from a slice.
+    pub fn vec1<T: NativeType>(_values: &[T]) -> Literal {
+        Literal
+    }
+
+    /// Destructure a tuple literal.
+    pub fn to_tuple(self) -> Result<Vec<Literal>, Error> {
+        unavailable()
+    }
+
+    /// Copy the elements out.
+    pub fn to_vec<T: NativeType>(&self) -> Result<Vec<T>, Error> {
+        unavailable()
+    }
+}
+
+/// An HLO module parsed from text.
+#[derive(Debug)]
+pub struct HloModuleProto;
+
+impl HloModuleProto {
+    pub fn from_text_file(_path: &str) -> Result<HloModuleProto, Error> {
+        unavailable()
+    }
+}
+
+/// A computation ready to compile.
+#[derive(Debug)]
+pub struct XlaComputation;
+
+impl XlaComputation {
+    pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation
+    }
+}
+
+/// A device-resident buffer produced by an execution.
+#[derive(Debug)]
+pub struct PjRtBuffer;
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal, Error> {
+        unavailable()
+    }
+}
+
+/// A compiled, loaded executable.
+#[derive(Debug)]
+pub struct PjRtLoadedExecutable;
+
+impl PjRtLoadedExecutable {
+    /// Execute with one replica/partition; returns per-device outputs.
+    pub fn execute<T: Clone>(&self, _inputs: &[T]) -> Result<Vec<Vec<PjRtBuffer>>, Error> {
+        unavailable()
+    }
+}
+
+/// A PJRT client bound to one platform.
+#[derive(Debug)]
+pub struct PjRtClient;
+
+impl PjRtClient {
+    /// The CPU platform client.
+    pub fn cpu() -> Result<PjRtClient, Error> {
+        unavailable()
+    }
+
+    pub fn compile(&self, _comp: &XlaComputation) -> Result<PjRtLoadedExecutable, Error> {
+        unavailable()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn every_entry_point_fails_cleanly() {
+        assert!(PjRtClient::cpu().is_err());
+        assert!(HloModuleProto::from_text_file("x.hlo.txt").is_err());
+        assert!(Literal::vec1(&[1i32, 2]).to_vec::<i32>().is_err());
+        let err = PjRtClient::cpu().unwrap_err();
+        assert!(err.to_string().contains("stub"));
+    }
+}
