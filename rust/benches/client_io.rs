@@ -9,9 +9,13 @@
 
 use wtf::bench::stats::Summary;
 use wtf::bench::Bench;
+use wtf::client::WtfClient;
 use wtf::cluster::Cluster;
 use wtf::config::Config;
+use wtf::mapreduce::records::generate_records;
+use wtf::mapreduce::{sort_slicing, BulkFs, SortJob};
 use wtf::net::LinkModel;
+use wtf::runtime::NativeCompute;
 use wtf::util::Rng;
 
 /// Replication sweep under `LinkModel::gigabit()`: with the transport
@@ -89,6 +93,199 @@ fn write_json(path: &str, rows: &[(u8, Summary)]) {
         r3 / r1.max(1.0)
     ));
     std::fs::write(path, out).expect("write WTF_BENCH_JSON");
+    println!("  └─ wrote {path}");
+}
+
+/// One row of the read-path sweep (BENCH_read_path.json).
+struct ReadRow {
+    row: &'static str,
+    config: &'static str,
+    envelopes: u64,
+    mean_ns: f64,
+}
+
+/// Build a 4 MiB file of 64 KiB writes over 256 KiB regions on a
+/// cluster with the given read-path knobs: 16 regions x 4 extents.
+fn read_path_cluster(cache: bool, coalesce: bool, readahead: u64) -> Cluster {
+    let cluster = Cluster::builder()
+        .config(Config {
+            region_size: 256 * 1024,
+            storage_servers: 4,
+            metadata_cache: cache,
+            read_coalescing: coalesce,
+            readahead,
+            ..Config::default()
+        })
+        .build()
+        .unwrap();
+    let c = cluster.client();
+    let mut fd = c.create("/seq").unwrap();
+    let mut chunk = vec![0u8; 64 * 1024];
+    Rng::new(11).fill_bytes(&mut chunk);
+    for _ in 0..64 {
+        c.write(&mut fd, &chunk).unwrap();
+    }
+    cluster
+}
+
+/// Read-path sweep: cache on/off x coalescing x readahead over a
+/// multi-region, multi-extent file.  Reports the warm-pass envelope
+/// count (deterministic) and wall time for (a) one whole-file
+/// `read_at` and (b) a sequential 64 KiB `read()` stream.
+fn read_path_sweep() -> Vec<ReadRow> {
+    let total: u64 = 4 * 1024 * 1024;
+    let variants: [(&str, bool, bool, u64); 4] = [
+        ("seed", false, false, 0),
+        ("cache", true, false, 0),
+        ("cache+coalesce", true, true, 0),
+        ("cache+coalesce+readahead", true, true, 1 << 20),
+    ];
+    let mut rows = Vec::new();
+    for (name, cache, coalesce, ra) in variants {
+        let cluster = read_path_cluster(cache, coalesce, ra);
+        let c = cluster.client();
+        let fd = c.open("/seq").unwrap();
+
+        // (a) whole-file read_at: the coalescing showcase.
+        let whole = |c: &WtfClient| c.read_at(&fd, 0, total).unwrap();
+        let _ = whole(&c); // cold pass warms the cache
+        let e0 = cluster.transport_envelopes();
+        let data = whole(&c);
+        assert_eq!(data.len() as u64, total);
+        let whole_env = cluster.transport_envelopes() - e0;
+        let s = Bench::new(format!("client/read_at-4MiB [{name}]"))
+            .warmup(1)
+            .iters(8)
+            .run(|| whole(&c));
+        println!("  └─ warm envelopes/pass: {whole_env}");
+        rows.push(ReadRow {
+            row: "seq-read-whole-warm",
+            config: name,
+            envelopes: whole_env,
+            mean_ns: s.mean,
+        });
+
+        // (b) sequential 64 KiB read() stream: the readahead showcase.
+        let stream = |c: &WtfClient| {
+            let mut fd = c.open("/seq").unwrap();
+            let mut n = 0u64;
+            loop {
+                let got = c.read(&mut fd, 64 * 1024).unwrap();
+                if got.is_empty() {
+                    break;
+                }
+                n += got.len() as u64;
+            }
+            assert_eq!(n, total);
+        };
+        stream(&c);
+        let e1 = cluster.transport_envelopes();
+        stream(&c);
+        let stream_env = cluster.transport_envelopes() - e1;
+        let s = Bench::new(format!("client/read-stream-4MiB [{name}]"))
+            .warmup(1)
+            .iters(8)
+            .run(|| stream(&c));
+        println!("  └─ warm envelopes/pass: {stream_env}");
+        rows.push(ReadRow {
+            row: "seq-read-stepped-warm",
+            config: name,
+            envelopes: stream_env,
+            mean_ns: s.mean,
+        });
+    }
+    rows
+}
+
+/// The §4.1 sort under the paper's GbE link, seed vs fast-read config:
+/// the shuffle's bucket files are patchworks of slices scattered over
+/// the cluster, so coalescing their fetches cuts the wire rounds.
+fn sort_read_path() -> Vec<ReadRow> {
+    let run = |name: &'static str, fast: bool| -> ReadRow {
+        let mut cfg = Config::test();
+        if fast {
+            cfg.metadata_cache = true;
+            cfg.read_coalescing = true;
+            cfg.readahead = 2 * cfg.region_size;
+        }
+        let cluster = Cluster::builder()
+            .config(cfg)
+            .link(LinkModel::gigabit())
+            .build()
+            .unwrap();
+        let c = cluster.client();
+        let mut job = SortJob::new(64, 8);
+        job.chunk_records = 128;
+        let data = generate_records(2048, job.fmt, 2015);
+        c.write_file("/input", &data).unwrap();
+        let mut n = 0u32;
+        // One instrumented pass for the envelope count...
+        let e0 = cluster.transport_envelopes();
+        sort_slicing(&c, &NativeCompute, "/input", "/warm", &job).unwrap();
+        let envelopes = cluster.transport_envelopes() - e0;
+        // ...then timed passes.
+        let s = Bench::new(format!("client/sort-128KiB-gigabit [{name}]"))
+            .warmup(0)
+            .iters(3)
+            .run(|| {
+                n += 1;
+                sort_slicing(&c, &NativeCompute, "/input", &format!("/out{n}"), &job).unwrap()
+            });
+        println!("  └─ envelopes/sort: {envelopes}");
+        ReadRow {
+            row: "sort-small",
+            config: name,
+            envelopes,
+            mean_ns: s.mean,
+        }
+    };
+    vec![run("seed", false), run("fast-read", true)]
+}
+
+/// Emit the read-path rows as `BENCH_read_path.json` (status
+/// "measured"); the committed modeled placeholder is overwritten by
+/// running this bench with `WTF_BENCH_READ_JSON` set.
+fn write_read_json(path: &str, rows: &[ReadRow]) {
+    // A missing row is a bug in the sweep, not a 1 — silently
+    // defaulting would feed bogus ratios into the CI regression gate.
+    let env_of = |row: &str, config: &str| {
+        rows.iter()
+            .find(|r| r.row == row && r.config == config)
+            .map(|r| r.envelopes.max(1))
+            .unwrap_or_else(|| panic!("read-path sweep produced no row {row} [{config}]"))
+    };
+    let seq_ratio = env_of("seq-read-whole-warm", "seed") as f64
+        / env_of("seq-read-whole-warm", "cache+coalesce") as f64;
+    let stepped_ratio = env_of("seq-read-stepped-warm", "seed") as f64
+        / env_of("seq-read-stepped-warm", "cache+coalesce+readahead") as f64;
+    let sort_ratio =
+        env_of("sort-small", "seed") as f64 / env_of("sort-small", "fast-read") as f64;
+    let mut out = String::from("{\n  \"bench\": \"client_io/read_path\",\n");
+    out.push_str(
+        "  \"description\": \"Hot read path: versioned metadata cache x per-server \
+         RetrieveMany coalescing x readahead, over a 4 MiB file of 16 regions x 4 \
+         extents (envelopes counted per warm pass), plus the §4.1 slicing sort under \
+         LinkModel::gigabit(). Produced by `cargo bench --bench client_io` with \
+         WTF_BENCH_READ_JSON set; see rust/benches/client_io.rs.\",\n",
+    );
+    out.push_str("  \"status\": \"measured\",\n  \"rows\": [\n");
+    for (i, r) in rows.iter().enumerate() {
+        out.push_str(&format!(
+            "    {{\"row\": \"{}\", \"config\": \"{}\", \"envelopes\": {}, \"mean_ns\": {:.0}}}{}\n",
+            r.row,
+            r.config,
+            r.envelopes,
+            r.mean_ns,
+            if i + 1 < rows.len() { "," } else { "" }
+        ));
+    }
+    out.push_str(&format!(
+        "  ],\n  \"envelope_ratio_seq\": {seq_ratio:.3},\n  \
+         \"envelope_ratio_stepped\": {stepped_ratio:.3},\n  \
+         \"envelope_ratio_sort\": {sort_ratio:.3},\n  \
+         \"acceptance\": \"envelope_ratio_seq >= 4.0; envelope_ratio_sort >= 1.0\"\n}}\n"
+    ));
+    std::fs::write(path, out).expect("write WTF_BENCH_READ_JSON");
     println!("  └─ wrote {path}");
 }
 
@@ -170,5 +367,12 @@ fn main() {
     let rows = fanout_sweep();
     if let Ok(path) = std::env::var("WTF_BENCH_JSON") {
         write_json(&path, &rows);
+    }
+
+    // Hot read path: cache x coalescing x readahead, plus the §4.1 sort.
+    let mut read_rows = read_path_sweep();
+    read_rows.extend(sort_read_path());
+    if let Ok(path) = std::env::var("WTF_BENCH_READ_JSON") {
+        write_read_json(&path, &read_rows);
     }
 }

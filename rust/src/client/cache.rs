@@ -1,0 +1,561 @@
+//! The client's versioned metadata cache and readahead buffer — the hot
+//! read path's answer to the per-`fetch_inode`/`fetch_region` metadata
+//! wire round (`Config::metadata_cache`, `Config::readahead`).
+//!
+//! Every entry is stored with the authoritative version the `MetaGet`
+//! envelope carried, so a cached value is always "this key at version v"
+//! — never an unverifiable guess.  Serving policy and the coherence
+//! contract (also recorded in ROADMAP "Hot read path"):
+//!
+//! * **What may be stale.**  Plain (non-transactional) reads —
+//!   `read_at`, `yank_at`, `len`, `stat` — may serve metadata another
+//!   client has since changed, bounded by the invalidation triggers
+//!   below.  Lengths only ever grow (monotone max), so a cached length
+//!   is always a length the file *had*; a reader's view never moves
+//!   backwards.
+//! * **What is never stale.**  Transactional reads ([`crate::meta::MetaTxn::get`]
+//!   and everything inside a WTF [`crate::client::Transaction`]) bypass
+//!   this cache entirely and validate their versions at commit — §3
+//!   serializability is untouched.  CAS maintenance (compact/spill) uses
+//!   uncached region fetches for the same reason.
+//! * **Snapshot rule.**  A freshly fetched inode drops the file's cached
+//!   regions ([`MetaCache::put_inode`]): a read then never pairs a new
+//!   length with older region metadata, exactly matching the uncached
+//!   path's fetch order (inode first, regions after).  Torn tails —
+//!   a length that claims bytes its regions don't yet show — cannot
+//!   happen.
+//! * **Invalidation.**  (1) Own-txn commit: every key a committed
+//!   transaction mutated is dropped, so a client always reads its own
+//!   writes.  (2) `NotLeader`/heal: leadership moved, the whole cache is
+//!   dropped before the shard is healed.  (3) Version mismatch at
+//!   validation time: a `TxnConflict` names the stale key; it is dropped
+//!   before the retry re-reads.
+//!
+//! The readahead buffer holds *data* bytes fetched past a sequential
+//! cursor read; it obeys the same invalidation triggers (a buffer is a
+//! cached snapshot of one consistent fetch, so it can never serve a torn
+//! record).
+
+use crate::config::Config;
+use crate::types::{Inode, InodeId, Key, RegionId, RegionMeta, Space};
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+/// Most readahead buffers kept at once (one per actively streamed file).
+const MAX_READAHEAD_BUFFERS: usize = 8;
+
+/// One cached value plus the authoritative version it was read at.
+/// Values are `Arc`-shared so a cache hit is O(1) — no deep clone of a
+/// fragmented region's entry list under the cache mutex.
+#[derive(Clone, Debug)]
+struct Cached<T> {
+    value: Arc<T>,
+    version: u64,
+    /// LRU clock tick of the last touch.
+    used: u64,
+}
+
+/// One file's readahead surplus: bytes `[start, start + data.len())`.
+#[derive(Clone, Debug)]
+struct ReadAhead {
+    start: u64,
+    data: Vec<u8>,
+    used: u64,
+}
+
+#[derive(Debug, Default)]
+struct Inner {
+    inodes: HashMap<InodeId, Cached<Inode>>,
+    regions: HashMap<RegionId, Cached<RegionMeta>>,
+    readahead: HashMap<InodeId, ReadAhead>,
+    tick: u64,
+    /// Bumped by every invalidation/clear.  Fetches snapshot it BEFORE
+    /// going to the wire and their put is dropped if it moved — an
+    /// in-flight fetch racing a same-client commit must never
+    /// re-install pre-commit state (clones share this cache).
+    epoch: u64,
+}
+
+impl Inner {
+    fn bump(&mut self) -> u64 {
+        self.tick += 1;
+        self.tick
+    }
+
+    /// Keep the metadata maps under `capacity` entries by dropping the
+    /// least-recently-used quarter when they overflow.
+    fn evict(&mut self, capacity: usize) {
+        let total = self.inodes.len() + self.regions.len();
+        if total <= capacity.max(1) {
+            return;
+        }
+        let mut ticks: Vec<u64> = self
+            .inodes
+            .values()
+            .map(|c| c.used)
+            .chain(self.regions.values().map(|c| c.used))
+            .collect();
+        ticks.sort_unstable();
+        let cut = ticks[total / 4];
+        self.inodes.retain(|_, c| c.used > cut);
+        self.regions.retain(|_, c| c.used > cut);
+    }
+
+    fn drop_inode_state(&mut self, id: InodeId) {
+        self.inodes.remove(&id);
+        self.regions.retain(|rid, _| rid.inode != id);
+        self.readahead.remove(&id);
+    }
+}
+
+/// The per-client cache.  Clones of one [`crate::client::WtfClient`]
+/// share it; independent clients each own their own (the invalidation
+/// triggers are client-local by design).
+#[derive(Debug)]
+pub struct MetaCache {
+    meta_enabled: bool,
+    readahead_window: u64,
+    capacity: usize,
+    inner: Mutex<Inner>,
+    hits: AtomicU64,
+    misses: AtomicU64,
+    invalidations: AtomicU64,
+}
+
+impl MetaCache {
+    pub fn new(config: &Config) -> MetaCache {
+        MetaCache {
+            meta_enabled: config.metadata_cache,
+            readahead_window: config.readahead,
+            capacity: config.metadata_cache_entries.max(1),
+            inner: Mutex::new(Inner::default()),
+            hits: AtomicU64::new(0),
+            misses: AtomicU64::new(0),
+            invalidations: AtomicU64::new(0),
+        }
+    }
+
+    /// True when any cached state can exist (metadata entries or
+    /// readahead bytes) — commit sites skip key bookkeeping otherwise.
+    pub fn is_active(&self) -> bool {
+        self.meta_enabled || self.readahead_window > 0
+    }
+
+    /// Cache hits served so far (tests/observability).
+    pub fn hits(&self) -> u64 {
+        self.hits.load(Ordering::Relaxed)
+    }
+
+    pub fn misses(&self) -> u64 {
+        self.misses.load(Ordering::Relaxed)
+    }
+
+    pub fn invalidations(&self) -> u64 {
+        self.invalidations.load(Ordering::Relaxed)
+    }
+
+    // ------------------------------------------------------- metadata
+
+    /// Invalidation epoch to snapshot BEFORE a fetch whose result will
+    /// be `put_*` — the put is dropped if any invalidation lands in
+    /// between (see `Inner::epoch`).
+    pub fn epoch(&self) -> u64 {
+        if !self.is_active() {
+            return 0;
+        }
+        self.inner.lock().unwrap().epoch
+    }
+
+    pub fn get_inode(&self, id: InodeId) -> Option<Arc<Inode>> {
+        if !self.meta_enabled {
+            return None;
+        }
+        let mut g = self.inner.lock().unwrap();
+        let tick = g.bump();
+        match g.inodes.get_mut(&id) {
+            Some(c) => {
+                c.used = tick;
+                self.hits.fetch_add(1, Ordering::Relaxed);
+                Some(c.value.clone())
+            }
+            None => {
+                self.misses.fetch_add(1, Ordering::Relaxed);
+                None
+            }
+        }
+    }
+
+    /// Record a freshly fetched inode.  When the observed version moved
+    /// (or the inode was not cached), the file's cached regions are
+    /// dropped — the snapshot rule: region metadata served after this
+    /// point must be at least as new as the inode, as in the uncached
+    /// fetch order.
+    /// `as_of` is the [`MetaCache::epoch`] snapshotted before the
+    /// fetch; a stale snapshot drops the put (an invalidation won the
+    /// race and this value may predate the invalidating commit).
+    pub fn put_inode(&self, id: InodeId, inode: &Arc<Inode>, version: u64, as_of: u64) {
+        if !self.meta_enabled {
+            return;
+        }
+        let mut g = self.inner.lock().unwrap();
+        if g.epoch != as_of {
+            return;
+        }
+        // Versions are per-key monotone in the store: never let a
+        // slower, OLDER concurrent fetch overwrite a newer cached value
+        // (a reader's view must not move backwards).
+        if g.inodes.get(&id).is_some_and(|c| c.version > version) {
+            return;
+        }
+        let same = g.inodes.get(&id).is_some_and(|c| c.version == version);
+        if !same {
+            g.regions.retain(|rid, _| rid.inode != id);
+        }
+        let used = g.bump();
+        g.inodes.insert(
+            id,
+            Cached {
+                value: Arc::clone(inode),
+                version,
+                used,
+            },
+        );
+        g.evict(self.capacity);
+    }
+
+    pub fn get_region(&self, rid: RegionId) -> Option<(Arc<RegionMeta>, u64)> {
+        if !self.meta_enabled {
+            return None;
+        }
+        let mut g = self.inner.lock().unwrap();
+        let tick = g.bump();
+        match g.regions.get_mut(&rid) {
+            Some(c) => {
+                c.used = tick;
+                self.hits.fetch_add(1, Ordering::Relaxed);
+                Some((c.value.clone(), c.version))
+            }
+            None => {
+                self.misses.fetch_add(1, Ordering::Relaxed);
+                None
+            }
+        }
+    }
+
+    pub fn put_region(&self, rid: RegionId, region: &Arc<RegionMeta>, version: u64, as_of: u64) {
+        if !self.meta_enabled {
+            return;
+        }
+        let mut g = self.inner.lock().unwrap();
+        if g.epoch != as_of {
+            return;
+        }
+        // Same monotonicity guard as `put_inode`: an older concurrent
+        // fetch must not shadow a newer cached region (tile_window
+        // would synthesize holes for bytes a newer length claims).
+        if g.regions.get(&rid).is_some_and(|c| c.version > version) {
+            return;
+        }
+        let used = g.bump();
+        g.regions.insert(
+            rid,
+            Cached {
+                value: Arc::clone(region),
+                version,
+                used,
+            },
+        );
+        g.evict(self.capacity);
+    }
+
+    // ---------------------------------------------------- invalidation
+
+    /// Drop the cached state behind one metadata key.  An inode key
+    /// drops the inode, all its regions, and its readahead; a region key
+    /// drops that region and the file's readahead (its bytes may now be
+    /// stale).  Non-inode/region spaces are never cached.
+    pub fn invalidate_key(&self, key: &Key) {
+        if !self.is_active() {
+            return;
+        }
+        let mut g = self.inner.lock().unwrap();
+        self.invalidate_locked(&mut g, key);
+    }
+
+    /// Drop every key a committed transaction mutated (own-commit
+    /// read-your-writes).
+    pub fn invalidate_keys(&self, keys: &[Key]) {
+        if !self.is_active() || keys.is_empty() {
+            return;
+        }
+        let mut g = self.inner.lock().unwrap();
+        for key in keys {
+            self.invalidate_locked(&mut g, key);
+        }
+    }
+
+    fn invalidate_locked(&self, g: &mut Inner, key: &Key) {
+        match key.space {
+            Space::Inode => {
+                if let Some(id) = parse_inode_key(&key.key) {
+                    g.epoch += 1;
+                    g.drop_inode_state(id);
+                    self.invalidations.fetch_add(1, Ordering::Relaxed);
+                }
+            }
+            Space::Region => {
+                if let Some(rid) = parse_region_key(&key.key) {
+                    g.epoch += 1;
+                    g.regions.remove(&rid);
+                    g.readahead.remove(&rid.inode);
+                    self.invalidations.fetch_add(1, Ordering::Relaxed);
+                }
+            }
+            // Path / Dir / Sys values are never cached here.
+            _ => {}
+        }
+    }
+
+    /// Drop everything — the `NotLeader`/heal trigger: once leadership
+    /// moved, every answer from the old leader's tenure is suspect.
+    pub fn clear(&self) {
+        if !self.is_active() {
+            return;
+        }
+        let mut g = self.inner.lock().unwrap();
+        g.epoch += 1;
+        if !g.inodes.is_empty() || !g.regions.is_empty() || !g.readahead.is_empty() {
+            self.invalidations.fetch_add(1, Ordering::Relaxed);
+        }
+        g.inodes.clear();
+        g.regions.clear();
+        g.readahead.clear();
+    }
+
+    // ------------------------------------------------------- readahead
+
+    /// Serve `[offset, offset + len)` of `inode` from the readahead
+    /// buffer when it is fully covered.  A partial overlap is a miss
+    /// (the caller refetches, extending the buffer past the new cursor).
+    pub fn readahead_take(&self, inode: InodeId, offset: u64, len: u64) -> Option<Vec<u8>> {
+        if self.readahead_window == 0 || len == 0 {
+            return None;
+        }
+        let mut g = self.inner.lock().unwrap();
+        let tick = g.bump();
+        let buf = g.readahead.get_mut(&inode)?;
+        let end = buf.start + buf.data.len() as u64;
+        if offset < buf.start || offset + len > end {
+            return None;
+        }
+        buf.used = tick;
+        let from = (offset - buf.start) as usize;
+        self.hits.fetch_add(1, Ordering::Relaxed);
+        Some(buf.data[from..from + len as usize].to_vec())
+    }
+
+    /// Stash the surplus bytes of an over-fetch for the next sequential
+    /// read.  One buffer per inode, bounded count, LRU-evicted.
+    pub fn readahead_put(&self, inode: InodeId, start: u64, data: Vec<u8>, as_of: u64) {
+        if self.readahead_window == 0 || data.is_empty() {
+            return;
+        }
+        let mut g = self.inner.lock().unwrap();
+        if g.epoch != as_of {
+            return;
+        }
+        let used = g.bump();
+        g.readahead.insert(inode, ReadAhead { start, data, used });
+        if g.readahead.len() > MAX_READAHEAD_BUFFERS {
+            let oldest = g
+                .readahead
+                .iter()
+                .min_by_key(|(_, b)| b.used)
+                .map(|(&id, _)| id);
+            if let Some(oldest) = oldest {
+                g.readahead.remove(&oldest);
+            }
+        }
+    }
+}
+
+/// Inverse of [`Key::inode`]'s `{id:016x}` encoding.
+fn parse_inode_key(key: &str) -> Option<InodeId> {
+    u64::from_str_radix(key, 16).ok()
+}
+
+/// Inverse of [`RegionId::key`]'s `{inode:016x}#{index:08x}` encoding.
+fn parse_region_key(key: &str) -> Option<RegionId> {
+    let (inode, index) = key.split_once('#')?;
+    Some(RegionId::new(
+        u64::from_str_radix(inode, 16).ok()?,
+        u32::from_str_radix(index, 16).ok()?,
+    ))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cache() -> MetaCache {
+        MetaCache::new(&Config::fast_read_test())
+    }
+
+    fn inode(id: InodeId) -> Arc<Inode> {
+        Arc::new(Inode::new_file(id, 0o644, 2))
+    }
+
+    fn region() -> Arc<RegionMeta> {
+        Arc::new(RegionMeta::default())
+    }
+
+    #[test]
+    fn disabled_cache_is_inert() {
+        let c = MetaCache::new(&Config::test());
+        assert!(!c.is_active());
+        c.put_inode(1, &inode(1), 5, c.epoch());
+        assert!(c.get_inode(1).is_none());
+        c.put_region(RegionId::new(1, 0), &region(), 1, c.epoch());
+        assert!(c.get_region(RegionId::new(1, 0)).is_none());
+        c.readahead_put(1, 0, vec![1, 2, 3], c.epoch());
+        assert!(c.readahead_take(1, 0, 2).is_none());
+        assert_eq!(c.hits() + c.misses(), 0);
+    }
+
+    #[test]
+    fn put_get_round_trips_with_versions() {
+        let c = cache();
+        let mut i = Inode::new_file(7, 0o644, 2);
+        i.len = 42;
+        c.put_inode(7, &Arc::new(i), 3, c.epoch());
+        assert_eq!(c.get_inode(7).unwrap().len, 42);
+        let rid = RegionId::new(7, 1);
+        c.put_region(rid, &region(), 9, c.epoch());
+        assert_eq!(c.get_region(rid).unwrap().1, 9);
+        assert_eq!(c.hits(), 2);
+        assert!(c.get_inode(8).is_none());
+        assert_eq!(c.misses(), 1);
+    }
+
+    #[test]
+    fn fresh_inode_version_drops_the_files_regions() {
+        let c = cache();
+        c.put_inode(7, &inode(7), 1, c.epoch());
+        c.put_region(RegionId::new(7, 0), &region(), 1, c.epoch());
+        c.put_region(RegionId::new(8, 0), &region(), 1, c.epoch());
+        // Same version: regions survive.
+        c.put_inode(7, &inode(7), 1, c.epoch());
+        assert!(c.get_region(RegionId::new(7, 0)).is_some());
+        // New version: this file's regions are dropped, other files' stay.
+        c.put_inode(7, &inode(7), 2, c.epoch());
+        assert!(c.get_region(RegionId::new(7, 0)).is_none());
+        assert!(c.get_region(RegionId::new(8, 0)).is_some());
+    }
+
+    #[test]
+    fn key_invalidation_parses_the_store_encoding() {
+        let c = cache();
+        c.put_inode(0xab, &inode(0xab), 1, c.epoch());
+        c.put_region(RegionId::new(0xab, 3), &region(), 1, c.epoch());
+        c.readahead_put(0xab, 0, vec![1; 8], c.epoch());
+        // A region key drops the region and the readahead, not the inode.
+        c.invalidate_key(&Key::region(RegionId::new(0xab, 3)));
+        assert!(c.get_region(RegionId::new(0xab, 3)).is_none());
+        assert!(c.readahead_take(0xab, 0, 1).is_none());
+        assert!(c.get_inode(0xab).is_some());
+        // An inode key drops everything for the file.
+        c.put_region(RegionId::new(0xab, 3), &region(), 2, c.epoch());
+        c.invalidate_keys(&[Key::inode(0xab)]);
+        assert!(c.get_inode(0xab).is_none());
+        assert!(c.get_region(RegionId::new(0xab, 3)).is_none());
+        assert!(c.invalidations() >= 2);
+    }
+
+    #[test]
+    fn clear_drops_everything() {
+        let c = cache();
+        c.put_inode(1, &inode(1), 1, c.epoch());
+        c.readahead_put(1, 0, vec![0; 4], c.epoch());
+        c.clear();
+        assert!(c.get_inode(1).is_none());
+        assert!(c.readahead_take(1, 0, 4).is_none());
+    }
+
+    #[test]
+    fn capacity_is_bounded() {
+        let mut cfg = Config::fast_read_test();
+        cfg.metadata_cache_entries = 64;
+        let c = MetaCache::new(&cfg);
+        for id in 0..1000u64 {
+            c.put_inode(id, &inode(id), 1, c.epoch());
+        }
+        let g = c.inner.lock().unwrap();
+        assert!(g.inodes.len() <= 64, "{} entries retained", g.inodes.len());
+        // The most recent entries survive eviction.
+        assert!(g.inodes.contains_key(&999));
+    }
+
+    #[test]
+    fn older_concurrent_puts_never_downgrade_a_newer_version() {
+        // Two threads of one clone-shared client fetch concurrently;
+        // the older fetch's put lands last — it must be dropped, along
+        // with its would-be region wipe.
+        let c = cache();
+        let e = c.epoch();
+        c.put_inode(7, &inode(7), 5, e);
+        c.put_region(RegionId::new(7, 0), &region(), 4, e);
+        c.put_inode(7, &inode(7), 3, e); // slower, older fetch
+        let g = c.inner.lock().unwrap();
+        assert_eq!(g.inodes[&7].version, 5, "older inode put won");
+        assert!(g.regions.contains_key(&RegionId::new(7, 0)), "regions wiped by stale put");
+        drop(g);
+        c.put_region(RegionId::new(7, 0), &region(), 2, e);
+        assert_eq!(c.get_region(RegionId::new(7, 0)).unwrap().1, 4);
+    }
+
+    #[test]
+    fn stale_epoch_puts_are_dropped() {
+        // An in-flight fetch that started before an invalidation must
+        // not re-install pre-commit state after it (clone-shared
+        // clients race their own commits against reads).
+        let c = cache();
+        let as_of = c.epoch();
+        c.invalidate_key(&Key::inode(7)); // the commit wins the race
+        c.put_inode(7, &inode(7), 1, as_of); // the fetch's late put
+        assert!(c.get_inode(7).is_none(), "stale put survived");
+        c.put_region(RegionId::new(7, 0), &region(), 1, as_of);
+        assert!(c.get_region(RegionId::new(7, 0)).is_none());
+        c.readahead_put(7, 0, vec![1; 4], as_of);
+        assert!(c.readahead_take(7, 0, 4).is_none());
+        // A put with the CURRENT epoch lands.
+        c.put_inode(7, &inode(7), 1, c.epoch());
+        assert!(c.get_inode(7).is_some());
+        // clear() also moves the epoch.
+        let as_of = c.epoch();
+        c.clear();
+        c.put_inode(8, &inode(8), 1, as_of);
+        assert!(c.get_inode(8).is_none());
+    }
+
+    #[test]
+    fn readahead_serves_only_fully_covered_windows() {
+        let c = cache();
+        c.readahead_put(5, 100, (0..50u8).collect(), c.epoch());
+        assert_eq!(c.readahead_take(5, 110, 5).unwrap(), vec![10, 11, 12, 13, 14]);
+        assert_eq!(c.readahead_take(5, 100, 50).unwrap().len(), 50);
+        assert!(c.readahead_take(5, 99, 5).is_none(), "before the buffer");
+        assert!(c.readahead_take(5, 148, 5).is_none(), "past the end");
+        assert!(c.readahead_take(6, 100, 5).is_none(), "other file");
+    }
+
+    #[test]
+    fn readahead_buffer_count_is_bounded() {
+        let c = cache();
+        for id in 0..(MAX_READAHEAD_BUFFERS as u64 + 4) {
+            c.readahead_put(id, 0, vec![id as u8; 4], c.epoch());
+        }
+        let g = c.inner.lock().unwrap();
+        assert!(g.readahead.len() <= MAX_READAHEAD_BUFFERS);
+    }
+}

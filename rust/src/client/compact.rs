@@ -175,6 +175,36 @@ pub fn clip_extents(extents: &[Extent], from: u64, to: u64) -> Vec<Extent> {
     extents.iter().filter_map(|e| e.clip(from, to)).collect()
 }
 
+/// Tile the window `[from, to)` of a resolved extent list: the clipped
+/// stored/hole extents plus synthesized `Hole` tiles for every gap, so
+/// the result covers the window exactly, in order, with no overlap.
+/// This is the one extent-window walk shared by the read and yank paths
+/// (`read_inode_at` / `yank_at` build on it via
+/// [`crate::client::WtfClient`]'s `resolve_window`).
+pub fn tile_window(extents: &[Extent], from: u64, to: u64) -> Vec<Extent> {
+    let mut out = Vec::new();
+    let mut cursor = from;
+    for e in clip_extents(extents, from, to) {
+        if e.start > cursor {
+            out.push(Extent {
+                start: cursor,
+                len: e.start - cursor,
+                data: SliceData::Hole,
+            });
+        }
+        cursor = e.end();
+        out.push(e);
+    }
+    if cursor < to {
+        out.push(Extent {
+            start: cursor,
+            len: to - cursor,
+            data: SliceData::Hole,
+        });
+    }
+    out
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -396,6 +426,34 @@ mod tests {
         }
         assert!(clip_extents(&extents, 100, 200).is_empty());
         assert!(clip_extents(&extents, 60, 60).is_empty());
+    }
+
+    #[test]
+    fn tile_window_covers_exactly_with_holes() {
+        let entries = vec![entry(10, 5, 0, 0), entry(50, 5, 0, 100)];
+        let extents = resolve_entries(&entries);
+        let tiles = tile_window(&extents, 0, 60);
+        // hole[0,10) + stored[10,15) + hole[15,50) + stored[50,55) + hole[55,60)
+        assert_eq!(tiles.len(), 5);
+        let mut cursor = 0;
+        for t in &tiles {
+            assert_eq!(t.start, cursor, "tiles must cover without gaps");
+            cursor = t.end();
+        }
+        assert_eq!(cursor, 60);
+        assert!(tiles[0].data.is_hole() && tiles[2].data.is_hole() && tiles[4].data.is_hole());
+        assert!(!tiles[1].data.is_hole() && !tiles[3].data.is_hole());
+        // A window fully inside one extent tiles to just the clip.
+        let inner = tile_window(&extents, 11, 14);
+        assert_eq!(inner.len(), 1);
+        assert_eq!((inner[0].start, inner[0].len), (11, 3));
+        // An empty window tiles to nothing.
+        assert!(tile_window(&extents, 20, 20).is_empty());
+        // A window past every extent is one hole.
+        let past = tile_window(&extents, 100, 110);
+        assert_eq!(past.len(), 1);
+        assert!(past[0].data.is_hole());
+        assert_eq!((past[0].start, past[0].len), (100, 10));
     }
 
     #[test]

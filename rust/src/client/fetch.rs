@@ -1,0 +1,228 @@
+//! The read-side fetch planner (`Config::read_coalescing`).
+//!
+//! A gather-read resolves to a list of stored extents, each with a
+//! replica list.  The seed path shipped one `RetrieveSlice` envelope per
+//! extent; this planner instead:
+//!
+//! 1. **Dedupes** identical replica lists — a slice pasted into a file
+//!    twice (the §4.1 sort's shuffled records constantly alias input
+//!    slices) is fetched once and copied to every destination;
+//! 2. **Groups** the unique extents by primary storage server and ships
+//!    ONE [`Request::RetrieveMany`] envelope per server — scatter across
+//!    servers, coalesce within a server;
+//! 3. **Fails over per extent**: an unreachable server or a rejected
+//!    pointer defers only the affected extents to their remaining
+//!    replicas (§2.9: any replica serves), never the whole batch.
+//!
+//! Results come back in input order; bytes, failover semantics, and
+//! error surface are identical to the per-extent path — only the
+//! envelope count changes.
+
+use super::WtfClient;
+use crate::error::{Error, Result};
+use crate::net::{Peer, Request, Response};
+use crate::types::{ServerId, SlicePtr};
+use std::collections::{BTreeMap, HashMap};
+use std::sync::Arc;
+
+impl WtfClient {
+    /// Coalesced scatter-fetch: one `RetrieveMany` envelope per primary
+    /// server, per-extent replica failover, results in input order.
+    pub(crate) fn fetch_coalesced(&self, sets: Vec<Vec<SlicePtr>>) -> Result<Vec<Vec<u8>>> {
+        // 1. Dedupe identical replica lists.
+        let mut index_of: HashMap<&[SlicePtr], usize> = HashMap::new();
+        let mut unique: Vec<usize> = Vec::new(); // representative input index
+        let mut route: Vec<usize> = Vec::with_capacity(sets.len());
+        for (i, set) in sets.iter().enumerate() {
+            if set.is_empty() {
+                return Err(Error::InvalidArgument("no replicas".into()));
+            }
+            let next = unique.len();
+            let u = *index_of.entry(set.as_slice()).or_insert_with(|| {
+                unique.push(i);
+                next
+            });
+            route.push(u);
+        }
+
+        // 2. Group unique extents by primary server (BTreeMap for a
+        //    deterministic envelope order).
+        let mut by_server: BTreeMap<ServerId, Vec<usize>> = BTreeMap::new();
+        for (u, &i) in unique.iter().enumerate() {
+            by_server.entry(sets[i][0].server).or_default().push(u);
+        }
+
+        // 3. One envelope per reachable server; a dead server defers its
+        //    whole group to per-extent failover.  Each deferred extent
+        //    carries the error its primary actually produced, so the
+        //    surface matches the per-extent path when all replicas fail.
+        let slice_not_found = |ptr: &SlicePtr| Error::SliceNotFound {
+            server: ptr.server,
+            backing: ptr.backing,
+            offset: ptr.offset,
+            len: ptr.len,
+        };
+        let mut batch: Vec<(Peer, Request)> = Vec::new();
+        let mut members: Vec<Vec<usize>> = Vec::new();
+        let mut deferred: Vec<(usize, Error)> = Vec::new();
+        for (server, us) in by_server {
+            match self.storage_peer(server) {
+                Ok(peer) => {
+                    let ptrs: Arc<[SlicePtr]> =
+                        us.iter().map(|&u| sets[unique[u]][0]).collect();
+                    batch.push((peer, Request::RetrieveMany { ptrs }));
+                    members.push(us);
+                }
+                Err(_) => {
+                    deferred
+                        .extend(us.into_iter().map(|u| (u, Error::ServerUnavailable(server))));
+                }
+            }
+        }
+        let mut fetched: Vec<Option<Vec<u8>>> = vec![None; unique.len()];
+        for (resp, us) in self.transport.broadcast(batch).into_iter().zip(members) {
+            match resp.and_then(Response::into_bytes_many) {
+                Ok(mut items) => {
+                    for (slot, &u) in us.iter().enumerate() {
+                        match items.get_mut(slot).and_then(Option::take) {
+                            Some(b) => fetched[u] = Some(b),
+                            // The server answered but rejected this
+                            // pointer — the same failure retrieve_slice
+                            // reports on the per-extent path.
+                            None => deferred.push((u, slice_not_found(&sets[unique[u]][0]))),
+                        }
+                    }
+                }
+                // Envelope-level failure (server died mid-request):
+                // every member fails over individually.
+                Err(_) => {
+                    let server = sets[unique[us[0]]][0].server;
+                    deferred
+                        .extend(us.into_iter().map(|u| (u, Error::ServerUnavailable(server))));
+                }
+            }
+        }
+
+        // 4. Per-extent failover across the remaining replicas (the
+        //    ladder shared with the legacy scatter path).
+        for (u, primary_err) in deferred {
+            let bytes = self.fail_over_replicas(&sets[unique[u]], primary_err)?;
+            fetched[u] = Some(bytes);
+        }
+
+        // 5. Deliver in input order.  Metrics count wire bytes, so a
+        //    deduped slice is charged once however many destinations
+        //    copy it; each buffer is MOVED to its last destination and
+        //    cloned only for genuine duplicates.
+        for b in fetched.iter().flatten() {
+            self.metrics.add_bytes_read(b.len() as u64);
+        }
+        let mut refs = vec![0usize; unique.len()];
+        for &u in &route {
+            refs[u] += 1;
+        }
+        let mut out = Vec::with_capacity(route.len());
+        for u in route {
+            refs[u] -= 1;
+            let b = if refs[u] == 0 {
+                fetched[u].take()
+            } else {
+                fetched[u].clone()
+            };
+            out.push(b.expect("every unique extent resolved"));
+        }
+        Ok(out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use crate::client::WtfClient;
+    use crate::cluster::Cluster;
+    use crate::config::Config;
+    use crate::storage::StorageCluster;
+    use crate::types::SliceData;
+    use crate::util::Rng;
+    use std::sync::Arc;
+
+    fn fast_cluster() -> Cluster {
+        Cluster::builder()
+            .config(Config::fast_read_test())
+            .build()
+            .unwrap()
+    }
+
+    #[test]
+    fn coalesced_fetch_matches_per_extent_fetch() {
+        let cluster = fast_cluster();
+        let c = cluster.client();
+        let mut fd = c.create("/f").unwrap();
+        let mut data = vec![0u8; 10_000];
+        Rng::new(21).fill_bytes(&mut data);
+        c.write(&mut fd, &data).unwrap();
+        // Same bytes whether or not the envelopes coalesce.
+        assert_eq!(c.read_at(&fd, 0, 10_000).unwrap(), data);
+        assert_eq!(c.read_at(&fd, 3_000, 4_000).unwrap(), &data[3_000..7_000]);
+    }
+
+    #[test]
+    fn duplicate_slices_are_fetched_once() {
+        let cluster = fast_cluster();
+        let c = cluster.client();
+        let mut src = c.create("/src").unwrap();
+        c.write(&mut src, &[7u8; 512]).unwrap();
+        // Paste the same slice four times: the destination is four
+        // aliases of one stored extent.
+        let slice = c.yank_at(src.inode(), 0, 512).unwrap();
+        let mut dst = c.create("/dst").unwrap();
+        for _ in 0..4 {
+            c.paste(&mut dst, &slice).unwrap();
+        }
+        let read_before = cluster.storage_bytes_read();
+        let back = c.read_at(&dst, 0, 4 * 512).unwrap();
+        assert!(back.iter().all(|&b| b == 7));
+        // The storage layer served the aliased extent ONCE, not four
+        // times (dedup), so it read 512 bytes, not 2048.
+        assert_eq!(cluster.storage_bytes_read() - read_before, 512);
+    }
+
+    #[test]
+    fn coalesced_fetch_fails_over_per_extent() {
+        let cluster = Cluster::builder()
+            .config(Config::fast_read_test())
+            .storage_servers(4)
+            .replication(2)
+            .build()
+            .unwrap();
+        let c = cluster.client();
+        let mut fd = c.create("/dur").unwrap();
+        let mut data = vec![0u8; 9_000];
+        Rng::new(33).fill_bytes(&mut data);
+        c.write(&mut fd, &data).unwrap();
+        // Find a primary server actually referenced by the file, then
+        // read through a degraded view without it: every extent whose
+        // primary died must fail over to its second replica.
+        let (region, _) = c
+            .fetch_region_public(crate::types::RegionId::new(fd.inode(), 0))
+            .unwrap();
+        let primary = match &region.entries[0].data {
+            SliceData::Stored(v) => v[0].server,
+            _ => panic!("expected stored entry"),
+        };
+        let survivors: Vec<_> = cluster
+            .storage()
+            .iter()
+            .filter(|s| s.id() != primary)
+            .cloned()
+            .collect();
+        let degraded = Arc::new(StorageCluster::new(survivors));
+        let c2 = WtfClient::new(
+            cluster.config().clone(),
+            cluster.meta().clone(),
+            degraded,
+            cluster.client().ring().clone(),
+        );
+        let fd2 = c2.open("/dur").unwrap();
+        assert_eq!(c2.read_at(&fd2, 0, 9_000).unwrap(), data);
+    }
+}

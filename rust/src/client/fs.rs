@@ -13,7 +13,7 @@ use super::{FileHandle, SeekFrom, Slice, WtfClient};
 use crate::error::{Error, Result};
 use crate::meta::MetaOp;
 use crate::types::{
-    DirEntries, Inode, InodeId, Key, Placement, RegionEntry, RegionId, SliceData, SlicePtr, Value,
+    DirEntries, Inode, InodeId, Key, Placement, RegionEntry, RegionId, SliceData, Value,
 };
 use crate::util::unix_now;
 
@@ -76,7 +76,7 @@ impl WtfClient {
 
     /// `stat`: the inode for a path.
     pub fn stat(&self, path: &str) -> Result<Inode> {
-        self.fetch_inode(self.lookup(path)?)
+        Ok(self.fetch_inode(self.lookup(path)?)?.as_ref().clone())
     }
 
     /// Create a regular file.  One transaction: path-map insert (atomic
@@ -119,7 +119,7 @@ impl WtfClient {
                 inode: id,
                 expect_absent: true,
             });
-            t.commit()?;
+            self.commit_txn(t)?;
             Ok(())
         })?;
         Ok(FileHandle {
@@ -159,7 +159,7 @@ impl WtfClient {
                 inode: id,
                 expect_absent: true,
             });
-            t.commit()?;
+            self.commit_txn(t)?;
             Ok(())
         })
     }
@@ -223,7 +223,7 @@ impl WtfClient {
                 inode: id,
                 expect_absent: true,
             });
-            t.commit()?;
+            self.commit_txn(t)?;
             Ok(())
         })
     }
@@ -260,7 +260,7 @@ impl WtfClient {
                 key: Key::dir(parent_id),
                 name: name.clone(),
             });
-            t.commit()?;
+            self.commit_txn(t)?;
             Ok(())
         })
     }
@@ -355,7 +355,7 @@ impl WtfClient {
                 highest_region: highest,
                 mtime: unix_now(),
             });
-            t.commit()?;
+            self.commit_txn(t)?;
             Ok(())
         })
     }
@@ -367,7 +367,10 @@ impl WtfClient {
         if data.is_empty() {
             return self.len(fd);
         }
-        let inode = self.fetch_inode(fd.inode)?;
+        // Fresh fetch on purpose: aiming an EOF-relative append with a
+        // stale `highest_region` at an old, non-full region would land
+        // the bytes mid-file instead of at EOF.
+        let inode = self.fetch_inode_fresh(fd.inode)?;
         let region_idx = inode.highest_region;
         let replication = inode.replication;
         loop {
@@ -393,7 +396,7 @@ impl WtfClient {
                 region_base,
                 mtime: unix_now(),
             });
-            match t.commit() {
+            match self.commit_txn(t) {
                 Ok(outcomes) => {
                     let at = outcomes
                         .iter()
@@ -414,6 +417,14 @@ impl WtfClient {
                         pieces: vec![(data.len() as u64, SliceData::Stored(replicas))],
                     };
                     return self.append_at_eof_validated(fd.inode, &slice);
+                }
+                Err(Error::NotLeader { shard, .. }) => {
+                    // Leadership moved mid-commit (commit_txn already
+                    // dropped the cache): rediscover the leader and
+                    // replay.
+                    self.metrics.add_txn_retries(1);
+                    self.meta.heal(shard);
+                    continue;
                 }
                 Err(e) if e.is_retryable() => {
                     self.metrics.add_txn_retries(1);
@@ -445,16 +456,33 @@ impl WtfClient {
                 highest_region: highest,
                 mtime: unix_now(),
             });
-            t.commit()?;
+            self.commit_txn(t)?;
             Ok(len)
         })
     }
 
     // ------------------------------------------------------------ read
 
-    /// Read at the cursor and advance it.  Short reads happen only at EOF.
+    /// Read at the cursor and advance it.  Short reads happen only at
+    /// EOF.  With `Config::readahead > 0`, each fetch extends past the
+    /// requested range and the surplus serves subsequent sequential
+    /// reads with zero metadata or storage envelopes; the buffer obeys
+    /// the cache's invalidation triggers (own commit, heal, conflict).
     pub fn read(&self, fd: &mut FileHandle, len: u64) -> Result<Vec<u8>> {
-        let out = self.read_at(fd, fd.offset, len)?;
+        let ra = self.config.readahead;
+        let out = if ra == 0 {
+            self.read_inode_at(fd.inode, fd.offset, len)?
+        } else if let Some(buffered) = self.cache.readahead_take(fd.inode, fd.offset, len) {
+            buffered
+        } else {
+            let as_of = self.cache.epoch();
+            let fetched = self.read_inode_at(fd.inode, fd.offset, len + ra)?;
+            let serve = (len as usize).min(fetched.len());
+            let (head, tail) = fetched.split_at(serve);
+            self.cache
+                .readahead_put(fd.inode, fd.offset + serve as u64, tail.to_vec(), as_of);
+            head.to_vec()
+        };
         fd.offset += out.len() as u64;
         Ok(out)
     }
@@ -465,37 +493,21 @@ impl WtfClient {
         self.read_inode_at(fd.inode, offset, len)
     }
 
-    /// Gather-read: resolve every region's extents first, then fetch ALL
-    /// stored extents — across regions and storage servers — in one
-    /// transport scatter.  Multi-region reads (and the sort's shuffle
-    /// reads, whose buckets are slices spread over many servers) pipeline
-    /// instead of paying one wire time per extent.
+    /// Gather-read: resolve every region's extents (from the cache when
+    /// warm — zero metadata rounds), then fetch ALL stored extents —
+    /// across regions and storage servers — in one transport scatter,
+    /// coalesced per server when `Config::read_coalescing` is on.
+    /// Multi-region reads (and the sort's shuffle reads, whose buckets
+    /// are slices spread over many servers) pipeline instead of paying
+    /// one wire time per extent.
     pub(crate) fn read_inode_at(&self, inode: InodeId, offset: u64, len: u64) -> Result<Vec<u8>> {
         let file_len = self.fetch_inode(inode)?.len;
         if offset >= file_len {
             return Ok(Vec::new());
         }
         let len = len.min(file_len - offset);
-        let mut out = vec![0u8; len as usize];
-        let mut dsts: Vec<usize> = Vec::new();
-        let mut sets: Vec<Vec<SlicePtr>> = Vec::new();
-        for (rid, rel, part_len) in self.split_range(inode, offset, len) {
-            let (region, _) = self.fetch_region(rid)?;
-            let extents = self.resolve_region(&region)?;
-            let window = super::compact::clip_extents(&extents, rel, rel + part_len);
-            let region_base = u64::from(rid.index) * self.config.region_size;
-            for e in window {
-                if let SliceData::Stored(replicas) = &e.data {
-                    dsts.push((region_base + e.start - offset) as usize);
-                    sets.push(replicas.clone());
-                }
-                // Holes/gaps: already zero.
-            }
-        }
-        for (dst, bytes) in dsts.into_iter().zip(self.fetch_replicated_scatter(sets)?) {
-            out[dst..dst + bytes.len()].copy_from_slice(&bytes);
-        }
-        Ok(out)
+        let tiles = self.resolve_window(inode, offset, len)?;
+        self.fetch_window(&tiles, offset, len)
     }
 }
 
@@ -676,6 +688,100 @@ mod tests {
         let a = c.open_or_create("/x").unwrap();
         let b = c.open_or_create("/x").unwrap();
         assert_eq!(a.inode(), b.inode());
+    }
+
+    #[test]
+    fn cached_coalesced_read_issues_4x_fewer_envelopes() {
+        // The acceptance bound: a warm cached+coalesced read of a
+        // multi-region, multi-extent file must issue >= 4x fewer
+        // transport envelopes than the seed path.
+        use crate::cluster::Cluster;
+        use crate::config::Config;
+        let measure = |cfg: Config| {
+            let cluster = Cluster::builder().config(cfg).build().unwrap();
+            let c = cluster.client();
+            let mut fd = c.create("/f").unwrap();
+            // 4 regions x 4 extents: 16 x 1 KiB chunks into 4 KiB regions.
+            for i in 0..16u8 {
+                c.write(&mut fd, &[i; 1024]).unwrap();
+            }
+            let fd = c.open("/f").unwrap();
+            let cold = c.read_at(&fd, 0, 16 * 1024).unwrap();
+            let before = cluster.transport_envelopes();
+            let warm = c.read_at(&fd, 0, 16 * 1024).unwrap();
+            assert_eq!(cold, warm);
+            (cluster.transport_envelopes() - before, warm)
+        };
+        let (seed_env, seed_data) = measure(Config::test());
+        let (fast_env, fast_data) = measure(Config::fast_read_test());
+        assert_eq!(seed_data, fast_data, "coalescing must not change bytes");
+        // Seed: 1 inode MetaGet + 4 region MetaGets + 16 RetrieveSlice.
+        assert_eq!(seed_env, 21, "seed warm-read envelope count moved");
+        assert!(
+            fast_env * 4 <= seed_env,
+            "warm read envelopes: fast {fast_env} vs seed {seed_env} (< 4x)"
+        );
+    }
+
+    #[test]
+    fn readahead_serves_sequential_reads_without_envelopes() {
+        use crate::cluster::Cluster;
+        use crate::config::Config;
+        let cluster = Cluster::builder()
+            .config(Config::fast_read_test())
+            .build()
+            .unwrap();
+        let c = cluster.client();
+        let mut fd = c.create("/ra").unwrap();
+        let mut data = vec![0u8; 12 * 1024];
+        crate::util::Rng::new(3).fill_bytes(&mut data);
+        c.write(&mut fd, &data).unwrap();
+
+        let mut fd = c.open("/ra").unwrap();
+        // First read fetches 1 KiB + the 8 KiB readahead window.
+        let mut out = c.read(&mut fd, 1024).unwrap();
+        assert_eq!(out.len(), 1024);
+        let before = cluster.transport_envelopes();
+        for _ in 0..8 {
+            out.extend(c.read(&mut fd, 1024).unwrap());
+        }
+        assert_eq!(
+            cluster.transport_envelopes(),
+            before,
+            "buffered sequential reads must issue no envelopes"
+        );
+        for _ in 0..3 {
+            out.extend(c.read(&mut fd, 1024).unwrap());
+        }
+        assert_eq!(out, data);
+        assert_eq!(c.read(&mut fd, 1024).unwrap(), b"", "clean EOF");
+    }
+
+    #[test]
+    fn own_writes_invalidate_cache_and_readahead() {
+        use crate::cluster::Cluster;
+        use crate::config::Config;
+        let cluster = Cluster::builder()
+            .config(Config::fast_read_test())
+            .build()
+            .unwrap();
+        let c = cluster.client();
+        let mut fd = c.create("/rw").unwrap();
+        c.write(&mut fd, &[b'a'; 4096]).unwrap();
+        // Populate the metadata cache and the readahead buffer.
+        let mut rfd = c.open("/rw").unwrap();
+        assert_eq!(c.read(&mut rfd, 16).unwrap(), vec![b'a'; 16]);
+        assert!(c.metadata_cache().hits() + c.metadata_cache().misses() > 0);
+        // Overwrite through the SAME client: the commit must drop the
+        // cached inode/region/readahead state...
+        c.write_at(fd.inode(), 0, &[b'B'; 32]).unwrap();
+        // ...so subsequent reads observe the write immediately.
+        assert_eq!(c.read_at(&rfd, 0, 32).unwrap(), vec![b'B'; 32]);
+        assert_eq!(c.read(&mut rfd, 16).unwrap(), vec![b'B'; 16]);
+        // Length updates are read-your-writes too.
+        c.append_bytes(&rfd, &[b'z'; 10]).unwrap();
+        assert_eq!(c.len(&rfd).unwrap(), 4096 + 10);
+        assert!(c.metadata_cache().invalidations() > 0);
     }
 
     #[test]

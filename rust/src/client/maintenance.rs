@@ -26,9 +26,11 @@ pub struct CompactReport {
 
 impl WtfClient {
     /// Tier-1 compaction of one region.  Retries the CAS on conflict.
+    /// The fetch bypasses the read cache: a CAS against a cached
+    /// version could never succeed once the region moved.
     pub fn compact_region(&self, rid: RegionId) -> Result<CompactReport> {
         self.with_retry(|| {
-            let (region, version) = self.fetch_region(rid)?;
+            let (region, version) = self.fetch_region_fresh(rid)?;
             let before = region.entries.len();
             let compacted = compact::compact(&region);
             let report = CompactReport {
@@ -45,7 +47,7 @@ impl WtfClient {
                 expected_version: version,
                 region: compacted,
             });
-            t.commit()?;
+            self.commit_txn(t)?;
             Ok(report)
         })
     }
@@ -55,7 +57,7 @@ impl WtfClient {
     /// and swap the region for a pointer + empty list.
     pub fn spill_region(&self, rid: RegionId) -> Result<CompactReport> {
         self.with_retry(|| {
-            let (region, version) = self.fetch_region(rid)?;
+            let (region, version) = self.fetch_region_fresh(rid)?;
             let before = region.entries.len();
             // Materialize the full view (spilled base + live list), then
             // compact it to the minimal form.
@@ -83,7 +85,7 @@ impl WtfClient {
                 expected_version: version,
                 region: swapped,
             });
-            t.commit()?;
+            self.commit_txn(t)?;
             Ok(CompactReport {
                 entries_before: before,
                 entries_after: 0,

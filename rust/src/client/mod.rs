@@ -8,13 +8,16 @@
 //! transaction with its conflict-replay retry layer ([`txn`], §2.6), and
 //! metadata compaction/spilling ([`compact`], [`spill`], §2.8).
 
+pub mod cache;
 pub mod compact;
+pub mod fetch;
 pub mod maintenance;
 pub mod fs;
 pub mod slicing;
 pub mod spill;
 pub mod txn;
 
+pub use cache::MetaCache;
 pub use compact::Extent;
 pub use txn::Transaction;
 
@@ -118,6 +121,10 @@ pub struct WtfClient {
     /// Every cross-component call goes through here: slice I/O scatters
     /// across replicas/regions, metadata txns travel as envelopes.
     pub(crate) transport: Arc<Transport>,
+    /// The hot-read-path cache (`Config::metadata_cache` /
+    /// `Config::readahead`) — inert unless enabled.  Shared by clones
+    /// of this client, private to it otherwise.
+    pub(crate) cache: Arc<MetaCache>,
 }
 
 impl WtfClient {
@@ -147,6 +154,7 @@ impl WtfClient {
         ring: Ring,
         transport: Arc<Transport>,
     ) -> Self {
+        let cache = Arc::new(MetaCache::new(&config));
         WtfClient {
             config,
             meta,
@@ -154,6 +162,7 @@ impl WtfClient {
             ring,
             metrics: Metrics::new(),
             transport,
+            cache,
         }
     }
 
@@ -168,6 +177,11 @@ impl WtfClient {
 
     pub fn metrics(&self) -> &Metrics {
         &self.metrics
+    }
+
+    /// The client's read-path cache (observability/tests).
+    pub fn metadata_cache(&self) -> &MetaCache {
+        &self.cache
     }
 
     pub fn meta_service(&self) -> &Arc<MetaService> {
@@ -203,6 +217,9 @@ impl WtfClient {
             let outcome = f();
             // `Some(Some(shard))`: leaderless shard — heal, then retry.
             // `Some(None)`: plain retryable conflict.  `None`: done.
+            // Commit-side cache invalidation (stale-key drop on a
+            // conflict, whole-cache drop on NotLeader) already happened
+            // inside commit_txn; this layer owns only heal/replay.
             let retry = match &outcome {
                 Err(Error::NotLeader { shard, .. }) => Some(Some(*shard)),
                 Err(e) if e.is_retryable() => Some(None),
@@ -217,8 +234,11 @@ impl WtfClient {
                 return Err(Error::RetriesExhausted { attempts });
             }
             if let Some(shard) = heal_shard {
-                // Leader discovery: blocks until the old lease runs out
-                // and a successor holds a quorum lease.
+                // Leadership moved: every cached answer from the old
+                // leader's tenure is suspect — drop the lot, then
+                // rediscover (blocks until the old lease runs out and a
+                // successor holds a quorum lease).
+                self.cache.clear();
                 self.meta.heal(shard);
             }
         }
@@ -241,22 +261,60 @@ impl WtfClient {
         })
     }
 
-    /// Direct (non-transactional) inode fetch.
-    pub(crate) fn fetch_inode(&self, id: InodeId) -> Result<Inode> {
-        match self.meta_get(&Key::inode(id))?.0 {
-            Some(Value::Inode(i)) => Ok(i),
-            Some(_) => Err(Error::CorruptMetadata(format!("inode {id} wrong type"))),
-            None => Err(Error::NotFound(format!("inode {id}"))),
+    /// Direct (non-transactional) inode fetch, served from the read
+    /// cache when enabled.  A fresh fetch records the inode at its
+    /// authoritative version (and, via the cache's snapshot rule, drops
+    /// the file's older cached regions).
+    pub(crate) fn fetch_inode(&self, id: InodeId) -> Result<Arc<Inode>> {
+        if let Some(i) = self.cache.get_inode(id) {
+            return Ok(i);
+        }
+        self.fetch_inode_fresh(id)
+    }
+
+    /// Uncached inode fetch (it still refreshes the cache).  The append
+    /// fast paths use this: an EOF-relative append aimed by a stale
+    /// `highest_region` at an old, non-full region would land bytes in
+    /// the file's interior instead of at EOF — so appends always aim
+    /// with a fresh inode, exactly like the seed path.
+    pub(crate) fn fetch_inode_fresh(&self, id: InodeId) -> Result<Arc<Inode>> {
+        let as_of = self.cache.epoch();
+        match self.meta_get(&Key::inode(id))? {
+            (Some(Value::Inode(i)), version) => {
+                let i = Arc::new(i);
+                self.cache.put_inode(id, &i, version, as_of);
+                Ok(i)
+            }
+            (Some(_), _) => Err(Error::CorruptMetadata(format!("inode {id} wrong type"))),
+            (None, _) => Err(Error::NotFound(format!("inode {id}"))),
         }
     }
 
     /// Direct region fetch; absent regions read as empty.
     /// Public (observability/tests): a region's metadata + version.
     pub fn fetch_region_public(&self, rid: RegionId) -> Result<(RegionMeta, u64)> {
-        self.fetch_region(rid)
+        let (region, version) = self.fetch_region(rid)?;
+        Ok((region.as_ref().clone(), version))
     }
 
-    pub(crate) fn fetch_region(&self, rid: RegionId) -> Result<(RegionMeta, u64)> {
+    /// Cached region fetch (the hot read path).  Absence is cached too —
+    /// the version of absence is authoritative, same as a value's.
+    /// `Arc`-shared: a warm hit never deep-clones the entry list.
+    pub(crate) fn fetch_region(&self, rid: RegionId) -> Result<(Arc<RegionMeta>, u64)> {
+        if let Some(hit) = self.cache.get_region(rid) {
+            return Ok(hit);
+        }
+        let as_of = self.cache.epoch();
+        let (region, version) = self.fetch_region_fresh(rid)?;
+        let region = Arc::new(region);
+        self.cache.put_region(rid, &region, version, as_of);
+        Ok((region, version))
+    }
+
+    /// Uncached region fetch.  CAS maintenance (compact/spill) must see
+    /// the authoritative version, or its `RegionSwap` could never
+    /// succeed against a warm cache.
+    pub(crate) fn fetch_region_fresh(&self, rid: RegionId) -> Result<(RegionMeta, u64)> {
         // Absent regions read as empty at the version the SAME view
         // read reported — no second version round-trip to race against
         // a concurrent commit.
@@ -289,6 +347,53 @@ impl WtfClient {
         Ok(compact::resolve_entries(&self.region_entries(region)?))
     }
 
+    /// THE extent-window walk shared by `read_inode_at` and `yank_at`:
+    /// resolve `[offset, offset + len)` of a file into file-absolute
+    /// tiles (stored extents and holes) that exactly cover the range,
+    /// in order.  One region metadata round per region — zero with a
+    /// warm cache.
+    pub(crate) fn resolve_window(
+        &self,
+        inode: InodeId,
+        offset: u64,
+        len: u64,
+    ) -> Result<Vec<Extent>> {
+        let mut tiles = Vec::new();
+        for (rid, rel, part_len) in self.split_range(inode, offset, len) {
+            let (region, _) = self.fetch_region(rid)?;
+            let extents = self.resolve_region(&region)?;
+            let region_base = u64::from(rid.index) * self.config.region_size;
+            for mut e in compact::tile_window(&extents, rel, rel + part_len) {
+                e.start += region_base;
+                tiles.push(e);
+            }
+        }
+        Ok(tiles)
+    }
+
+    /// Fetch the stored tiles of a resolved window into a zero-filled
+    /// buffer covering `[offset, offset + len)` (holes stay zero).
+    pub(crate) fn fetch_window(
+        &self,
+        tiles: &[Extent],
+        offset: u64,
+        len: u64,
+    ) -> Result<Vec<u8>> {
+        let mut out = vec![0u8; len as usize];
+        let mut dsts: Vec<usize> = Vec::new();
+        let mut sets: Vec<Vec<SlicePtr>> = Vec::new();
+        for e in tiles {
+            if let SliceData::Stored(replicas) = &e.data {
+                dsts.push((e.start - offset) as usize);
+                sets.push(replicas.clone());
+            }
+        }
+        for (dst, bytes) in dsts.into_iter().zip(self.fetch_replicated_scatter(sets)?) {
+            out[dst..dst + bytes.len()].copy_from_slice(&bytes);
+        }
+        Ok(out)
+    }
+
     /// Resolve a server id to a transport peer.
     fn storage_peer(&self, id: ServerId) -> Result<Peer> {
         Ok(self.storage.get(id)?.clone() as Peer)
@@ -302,14 +407,42 @@ impl WtfClient {
             .ok_or_else(|| Error::InvalidArgument("no replicas".into()))
     }
 
+    /// THE per-extent replica-failover ladder, shared by the coalesced
+    /// planner and the legacy scatter path: after the primary failed
+    /// with `last_err`, try the remaining replicas in order (§2.9: any
+    /// replica serves); surface the most recent error when all fail.
+    pub(crate) fn fail_over_replicas(
+        &self,
+        set: &[SlicePtr],
+        mut last_err: Error,
+    ) -> Result<Vec<u8>> {
+        for ptr in set.iter().skip(1) {
+            let attempt = self.storage_peer(ptr.server).and_then(|peer| {
+                self.transport
+                    .call(peer, Request::RetrieveSlice { ptr: *ptr })?
+                    .into_bytes()
+            });
+            match attempt {
+                Ok(b) => return Ok(b),
+                Err(e) => last_err = e,
+            }
+        }
+        Err(last_err)
+    }
+
     /// Scatter-gather fetch: issue the primary replica of *every* slice
     /// concurrently through the transport (one wire time for the whole
     /// batch), then fail any stragglers over to their remaining replicas.
-    /// Results come back in input order.
+    /// Results come back in input order.  With `Config::read_coalescing`
+    /// the same contract is served by the fetch planner instead: dedupe
+    /// repeated pointers, one `RetrieveMany` envelope per server.
     pub(crate) fn fetch_replicated_scatter(
         &self,
         sets: Vec<Vec<SlicePtr>>,
     ) -> Result<Vec<Vec<u8>>> {
+        if self.config.read_coalescing {
+            return self.fetch_coalesced(sets);
+        }
         // Scatter the primaries.  A dead primary server fails at peer
         // resolution, before anything is enqueued.
         let pending: Vec<Result<crate::net::Pending>> = sets
@@ -330,24 +463,10 @@ impl WtfClient {
             let primary = first_try.and_then(|p| p.join()?.into_bytes());
             let bytes = match primary {
                 Ok(b) => b,
-                Err(mut last_err) => {
-                    let mut recovered = None;
-                    for ptr in &sets[i][1..] {
-                        let attempt = self.storage_peer(ptr.server).and_then(|peer| {
-                            self.transport
-                                .call(peer, Request::RetrieveSlice { ptr: *ptr })?
-                                .into_bytes()
-                        });
-                        match attempt {
-                            Ok(b) => {
-                                recovered = Some(b);
-                                break;
-                            }
-                            Err(e) => last_err = e,
-                        }
-                    }
-                    recovered.ok_or(last_err)?
-                }
+                // Per-extent failover through the shared ladder (an
+                // empty list has nothing to try and surfaces the
+                // primary's error — no out-of-bounds slice).
+                Err(last_err) => self.fail_over_replicas(&sets[i], last_err)?,
             };
             self.metrics.add_bytes_read(bytes.len() as u64);
             out.push(bytes);
@@ -486,9 +605,42 @@ impl WtfClient {
 
     /// A fresh metadata transaction builder, routed through the
     /// deployment transport and carrying this client's retry budget.
+    /// Its internal NotLeader heals clear this client's read cache
+    /// first — a heal the transaction performs on its own must honor
+    /// the same invalidation trigger as every other heal path.
     pub(crate) fn meta_txn(&self) -> MetaTxn {
-        MetaTxn::with_transport(self.meta.clone(), self.transport.clone())
-            .heal_budget(self.config.txn_retry_budget)
+        let mut t = MetaTxn::with_transport(self.meta.clone(), self.transport.clone())
+            .heal_budget(self.config.txn_retry_budget);
+        if self.cache.is_active() {
+            let cache = self.cache.clone();
+            t = t.on_heal(Arc::new(move |_shard| cache.clear()));
+        }
+        t
+    }
+
+    /// Commit a metadata transaction; ALL commit-side cache
+    /// invalidation lives here so every commit loop gets it for free:
+    /// on success, drop every key the ops mutated (own-commit
+    /// read-your-writes); on `NotLeader`, drop the whole cache (the
+    /// caller will heal and retry); on `TxnConflict`, drop the named
+    /// stale key before the caller's retry re-reads.  Every
+    /// client-side commit routes through here.
+    pub(crate) fn commit_txn(&self, t: MetaTxn) -> Result<Vec<crate::meta::OpOutcome>> {
+        let keys = if self.cache.is_active() {
+            t.mutated_keys()
+        } else {
+            Vec::new()
+        };
+        let out = t.commit();
+        match &out {
+            Ok(_) => self.cache.invalidate_keys(&keys),
+            Err(Error::NotLeader { .. }) => self.cache.clear(),
+            Err(Error::TxnConflict { space, key }) => {
+                self.cache.invalidate_key(&Key::new(*space, key.clone()))
+            }
+            Err(_) => {}
+        }
+        out
     }
 }
 

@@ -28,41 +28,38 @@ impl WtfClient {
         Ok(s)
     }
 
-    /// Yank an explicit range (clamped to EOF).
+    /// Yank an explicit range (clamped to EOF).  Rides the same
+    /// extent-window walk as the read path (`resolve_window`): the tiles
+    /// exactly cover the range, with gaps and unwritten tails as holes,
+    /// so the slice's length is exact.
     pub fn yank_at(&self, inode: InodeId, offset: u64, sz: u64) -> Result<Slice> {
         let file_len = self.fetch_inode(inode)?.len;
         if offset >= file_len {
             return Ok(Slice::default());
         }
         let sz = sz.min(file_len - offset);
-        let mut pieces: Vec<(u64, SliceData)> = Vec::new();
-        for (rid, rel, part_len) in self.split_range(inode, offset, sz) {
-            let (region, _) = self.fetch_region(rid)?;
-            let extents = self.resolve_region(&region)?;
-            let window = clip_extents(&extents, rel, rel + part_len);
-            // Fill gaps with holes so the slice's length is exact.
-            let mut cursor = rel;
-            for e in window {
-                if e.start > cursor {
-                    pieces.push((e.start - cursor, SliceData::Hole));
-                }
-                pieces.push((e.len, e.data.clone()));
-                cursor = e.end();
-            }
-            if cursor < rel + part_len {
-                pieces.push((rel + part_len - cursor, SliceData::Hole));
-            }
-        }
-        Ok(Slice { pieces })
+        let tiles = self.resolve_window(inode, offset, sz)?;
+        Ok(Slice {
+            pieces: tiles.into_iter().map(|e| (e.len, e.data)).collect(),
+        })
     }
 
     /// Yank and also fetch the underlying bytes (`yank` returns "slice
-    /// pointers and optionally the data", Table 1).
+    /// pointers and optionally the data", Table 1).  ONE window resolve
+    /// feeds both the slice and the data fetch — the pointers and bytes
+    /// come from the same snapshot, and the metadata is walked once.
     pub fn yank_with_data(&self, fd: &mut FileHandle, sz: u64) -> Result<(Slice, Vec<u8>)> {
         let offset = fd.offset;
-        let s = self.yank(fd, sz)?;
-        let data = self.read_inode_at(fd.inode, offset, s.len())?;
-        Ok((s, data))
+        let file_len = self.fetch_inode(fd.inode)?.len;
+        if offset >= file_len {
+            return Ok((Slice::default(), Vec::new()));
+        }
+        let sz = sz.min(file_len - offset);
+        let tiles = self.resolve_window(fd.inode, offset, sz)?;
+        let data = self.fetch_window(&tiles, offset, sz)?;
+        let pieces = tiles.into_iter().map(|e| (e.len, e.data)).collect();
+        fd.offset += sz;
+        Ok((Slice { pieces }, data))
     }
 
     // --------------------------------------------------------------- paste
@@ -89,7 +86,7 @@ impl WtfClient {
                 highest_region: highest,
                 mtime: unix_now(),
             });
-            t.commit()?;
+            self.commit_txn(t)?;
             Ok(())
         })
     }
@@ -146,7 +143,7 @@ impl WtfClient {
             self.with_retry(|| {
                 let mut t = self.meta_txn();
                 self.push_paste_ops(&mut t, fd.inode, fd.offset, &hole);
-                t.commit()?;
+                self.commit_txn(t)?;
                 Ok(())
             })?;
         }
@@ -163,7 +160,9 @@ impl WtfClient {
         if slice.is_empty() {
             return self.len(fd);
         }
-        let inode = self.fetch_inode(fd.inode)?;
+        // Fresh fetch for the same reason as `append_bytes`: a stale
+        // `highest_region` must not aim the append into the interior.
+        let inode = self.fetch_inode_fresh(fd.inode)?;
         let region_idx = inode.highest_region;
         loop {
             let rid = RegionId::new(fd.inode, region_idx);
@@ -190,7 +189,7 @@ impl WtfClient {
                 region_base,
                 mtime: unix_now(),
             });
-            match t.commit() {
+            match self.commit_txn(t) {
                 Ok(outcomes) => {
                     let at = outcomes
                         .iter()
@@ -206,6 +205,13 @@ impl WtfClient {
                     // validated transaction and paste at that offset,
                     // filling the current region's remainder.
                     return self.append_at_eof_validated(fd.inode, slice);
+                }
+                Err(Error::NotLeader { shard, .. }) => {
+                    // Same as `append_bytes`: commit_txn dropped the
+                    // cache; rediscover the leader and replay.
+                    self.metrics.add_txn_retries(1);
+                    self.meta.heal(shard);
+                    continue;
                 }
                 Err(e) if e.is_retryable() => {
                     self.metrics.add_txn_retries(1);
@@ -293,7 +299,7 @@ impl WtfClient {
                 inode: id,
                 expect_absent: true,
             });
-            t.commit()?;
+            self.commit_txn(t)?;
             Ok(())
         })?;
         Ok(FileHandle {

@@ -227,11 +227,15 @@ impl<'c> Transaction<'c> {
         let mut attempts = 0u32;
         loop {
             let state = std::mem::replace(&mut self.state, TxnState::fresh(self.client));
-            match state.meta.commit() {
+            match self.client.commit_txn(state.meta) {
                 Ok(_) => return Ok(()),
                 // `NotLeader` is a clean abort (the replicated store
                 // proposes nothing before it has leaders): rediscover
                 // the shard leader, then replay like any conflict.
+                // Cache invalidation for both cases already happened
+                // inside commit_txn (whole-cache drop on NotLeader,
+                // stale-key drop on conflict); only heal/replay control
+                // flow lives here.
                 Err(e) if e.is_retryable() || matches!(e, Error::NotLeader { .. }) => {
                     if let Error::NotLeader { shard, .. } = e {
                         self.client.meta.heal(shard);

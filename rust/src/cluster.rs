@@ -215,6 +215,14 @@ impl Cluster {
             .run(&*self.meta, &self.storage, Some(&self.transport))
     }
 
+    /// Total transport envelopes sent through this deployment — the
+    /// read-path coalescing benchmarks and tests count these (one
+    /// `RetrieveMany` replaces many `RetrieveSlice`s; a warm metadata
+    /// cache sends no `MetaGet` at all).
+    pub fn transport_envelopes(&self) -> u64 {
+        self.transport.envelopes_sent()
+    }
+
     /// Aggregate bytes written to all storage servers (Table 2's "W").
     pub fn storage_bytes_written(&self) -> u64 {
         self.storage.iter().map(|s| s.metrics().bytes_written()).sum()

@@ -58,6 +58,28 @@ pub struct Config {
     /// limit for scatter-gather slice I/O.  `0` degrades to inline
     /// (serial) execution on the caller thread.
     pub transport_workers: u32,
+    /// Client-side versioned metadata cache for the hot read path:
+    /// inode and region entries keyed by the authoritative versions
+    /// `MetaGet` carries, invalidated on own-txn commit, on a
+    /// `NotLeader` heal, and on a commit-time version mismatch.  Off by
+    /// default — when enabled, *plain* (non-transactional) reads may
+    /// serve another client's state as of the last invalidation point;
+    /// transactional reads always validate real versions at commit.
+    /// See ROADMAP "Hot read path" for the full coherence contract.
+    pub metadata_cache: bool,
+    /// Bounded entry count (inodes + regions) for the metadata cache.
+    pub metadata_cache_entries: usize,
+    /// Group resolved extent fetches by storage server and ship one
+    /// `RetrieveMany` envelope per server (deduping repeated slice
+    /// pointers) instead of one `RetrieveSlice` envelope per extent.
+    /// Same bytes, same per-extent replica failover — strictly fewer
+    /// transport envelopes.
+    pub read_coalescing: bool,
+    /// Readahead window in bytes for sequential cursor reads
+    /// ([`crate::client::WtfClient::read`]): each fetch extends past the
+    /// requested range by this much and the surplus serves subsequent
+    /// sequential reads with zero envelopes.  `0` disables.
+    pub readahead: u64,
 }
 
 impl Default for Config {
@@ -80,6 +102,10 @@ impl Default for Config {
             gc_high_watermark: 0.5,
             gc_low_watermark: 0.2,
             transport_workers: 8,
+            metadata_cache: false,
+            metadata_cache_entries: 4096,
+            read_coalescing: false,
+            readahead: 0,
         }
     }
 }
@@ -108,6 +134,19 @@ impl Config {
             meta_paxos: true,
             meta_group_replicas: 3,
             meta_lease: Duration::from_millis(25),
+            ..Config::test()
+        }
+    }
+
+    /// [`Config::test`] with the whole hot read path enabled: metadata
+    /// caching, per-server fetch coalescing, and a two-region readahead
+    /// window.  The preset the read-path coherence tests and benchmarks
+    /// exercise.
+    pub fn fast_read_test() -> Self {
+        Config {
+            metadata_cache: true,
+            read_coalescing: true,
+            readahead: 8192,
             ..Config::test()
         }
     }
@@ -145,6 +184,11 @@ impl Config {
         if self.meta_paxos && self.meta_lease.is_zero() {
             return Err(crate::Error::InvalidArgument(
                 "meta_paxos requires a non-zero meta_lease".into(),
+            ));
+        }
+        if self.metadata_cache && self.metadata_cache_entries == 0 {
+            return Err(crate::Error::InvalidArgument(
+                "metadata_cache requires metadata_cache_entries >= 1".into(),
             ));
         }
         if !(0.0..=1.0).contains(&self.gc_low_watermark)
@@ -195,6 +239,23 @@ mod tests {
         assert!(bad.validate().is_err());
         let mut bad = Config::replicated_test();
         bad.meta_lease = Duration::ZERO;
+        assert!(bad.validate().is_err());
+    }
+
+    #[test]
+    fn defaults_leave_the_read_path_uncached() {
+        let c = Config::default();
+        assert!(!c.metadata_cache);
+        assert!(!c.read_coalescing);
+        assert_eq!(c.readahead, 0);
+        let t = Config::test();
+        assert!(!t.metadata_cache && !t.read_coalescing && t.readahead == 0);
+        let f = Config::fast_read_test();
+        assert!(f.metadata_cache && f.read_coalescing);
+        assert_eq!(f.readahead, 2 * f.region_size);
+        f.validate().unwrap();
+        let mut bad = Config::fast_read_test();
+        bad.metadata_cache_entries = 0;
         assert!(bad.validate().is_err());
     }
 

@@ -29,6 +29,11 @@ pub struct MetaTxn {
     /// Max NotLeader heal-retries per read (the deployment threads
     /// `Config::txn_retry_budget` through here).
     heal_budget: u32,
+    /// Called with the shard id BEFORE every internal NotLeader heal.
+    /// The client installs its read-cache clear here: every heal must
+    /// drop the cache, including the ones this transaction performs on
+    /// its own (the coherence contract's second trigger).
+    heal_hook: Option<Arc<dyn Fn(u32) + Send + Sync>>,
 }
 
 impl MetaTxn {
@@ -40,6 +45,7 @@ impl MetaTxn {
             read_order: Vec::new(),
             ops: Vec::new(),
             heal_budget: 16,
+            heal_hook: None,
         }
     }
 
@@ -54,6 +60,13 @@ impl MetaTxn {
     /// Override the per-read NotLeader heal-retry budget.
     pub fn heal_budget(mut self, budget: u32) -> Self {
         self.heal_budget = budget.max(1);
+        self
+    }
+
+    /// Install a hook run (with the shard id) before every internal
+    /// NotLeader heal this transaction performs.
+    pub fn on_heal(mut self, hook: Arc<dyn Fn(u32) + Send + Sync>) -> Self {
+        self.heal_hook = Some(hook);
         self
     }
 
@@ -87,6 +100,9 @@ impl MetaTxn {
                         Ok(pair) => break pair,
                         Err(Error::NotLeader { shard, .. }) if attempts < self.heal_budget => {
                             attempts += 1;
+                            if let Some(hook) = &self.heal_hook {
+                                hook(shard);
+                            }
                             self.service.heal(shard);
                         }
                         Err(e) => return Err(e),
@@ -109,6 +125,20 @@ impl MetaTxn {
     /// Number of queued ops.
     pub fn num_ops(&self) -> usize {
         self.ops.len()
+    }
+
+    /// Every key the queued ops will mutate, deduplicated — the
+    /// committing client invalidates its read cache with these
+    /// (own-commit read-your-writes).
+    pub fn mutated_keys(&self) -> Vec<Key> {
+        let mut keys: Vec<Key> = self
+            .ops
+            .iter()
+            .flat_map(|op| op.keys().into_iter().cloned())
+            .collect();
+        keys.sort_unstable();
+        keys.dedup();
+        keys
     }
 
     /// True when the transaction would commit nothing.

@@ -47,6 +47,12 @@ pub enum Request {
     /// Fetch the bytes behind a slice pointer.  Served by a storage
     /// server.
     RetrieveSlice { ptr: SlicePtr },
+    /// Fetch the bytes behind MANY slice pointers in one envelope — the
+    /// per-server half of the client's coalesced fetch plan
+    /// (`Config::read_coalescing`).  Served by a storage server;
+    /// per-pointer failures come back as `None` so the caller can fail
+    /// that extent over to another replica without losing the batch.
+    RetrieveMany { ptrs: Arc<[SlicePtr]> },
     /// Append to an hdfs-lite block (baseline data node).
     AppendBlock { block: u64, data: Arc<[u8]> },
     /// Positional read from an hdfs-lite block (baseline data node).
@@ -94,6 +100,12 @@ impl fmt::Debug for Request {
                 write!(f, "CreateSlice({:?}, {} B)", hint, data.len())
             }
             Request::RetrieveSlice { ptr } => write!(f, "RetrieveSlice({ptr:?})"),
+            Request::RetrieveMany { ptrs } => write!(
+                f,
+                "RetrieveMany({} ptrs, {} B)",
+                ptrs.len(),
+                ptrs.iter().map(|p| p.len).sum::<u64>()
+            ),
             Request::AppendBlock { block, data } => {
                 write!(f, "AppendBlock(blk_{block:x}, {} B)", data.len())
             }
@@ -157,7 +169,9 @@ impl Request {
         match self {
             Request::CreateSlice { data, .. } => WireCost::Upload(data.len() as u64),
             Request::AppendBlock { data, .. } => WireCost::Upload(data.len() as u64),
-            Request::RetrieveSlice { .. } | Request::ReadBlock { .. } => WireCost::Download,
+            Request::RetrieveSlice { .. }
+            | Request::RetrieveMany { .. }
+            | Request::ReadBlock { .. } => WireCost::Download,
             Request::MetaCommit { .. }
             | Request::MetaGet { .. }
             | Request::PaxosPrepare { .. }
@@ -177,6 +191,10 @@ pub enum Response {
     Slice(SlicePtr),
     /// `RetrieveSlice` / `ReadBlock`: the payload bytes.
     Bytes(Vec<u8>),
+    /// `RetrieveMany`: one payload per requested pointer, in request
+    /// order; `None` marks a pointer the server could not serve (the
+    /// caller fails that extent over to another replica).
+    BytesMany(Vec<Option<Vec<u8>>>),
     /// `AppendBlock`: the block's new visible length.
     BlockLen(u64),
     /// `MetaCommit`: one outcome per op.
@@ -210,6 +228,11 @@ impl Response {
     fn payload_len(&self) -> u64 {
         match self {
             Response::Bytes(b) => b.len() as u64,
+            Response::BytesMany(items) => items
+                .iter()
+                .flatten()
+                .map(|b| b.len() as u64)
+                .sum(),
             _ => 0,
         }
     }
@@ -226,6 +249,13 @@ impl Response {
         match self {
             Response::Bytes(b) => Ok(b),
             other => Err(protocol_error("Bytes", &other)),
+        }
+    }
+
+    pub fn into_bytes_many(self) -> Result<Vec<Option<Vec<u8>>>> {
+        match self {
+            Response::BytesMany(v) => Ok(v),
+            other => Err(protocol_error("BytesMany", &other)),
         }
     }
 
@@ -375,6 +405,9 @@ pub struct Transport {
     /// `None` when `workers == 0`: inline serial execution.
     sender: Option<Mutex<mpsc::Sender<Job>>>,
     workers: u32,
+    /// Envelopes ever sent — the read-path coalescing benchmarks count
+    /// these (one `RetrieveMany` replaces many `RetrieveSlice`s).
+    envelopes: std::sync::atomic::AtomicU64,
 }
 
 impl fmt::Debug for Transport {
@@ -417,6 +450,7 @@ impl Transport {
             link,
             sender,
             workers,
+            envelopes: std::sync::atomic::AtomicU64::new(0),
         }
     }
 
@@ -431,6 +465,11 @@ impl Transport {
 
     pub fn workers(&self) -> u32 {
         self.workers
+    }
+
+    /// Total envelopes ever sent through this transport.
+    pub fn envelopes_sent(&self) -> u64 {
+        self.envelopes.load(std::sync::atomic::Ordering::Relaxed)
     }
 
     /// Serve one envelope, charging the wire exactly once.  Runs on a
@@ -458,6 +497,8 @@ impl Transport {
     /// the pool would both add per-op overhead and let data-plane wire
     /// sleeps head-of-line-block metadata traffic.
     pub fn send(&self, to: Peer, req: Request) -> Pending {
+        self.envelopes
+            .fetch_add(1, std::sync::atomic::Ordering::Relaxed);
         let slot = Slot::new();
         let inline = self.sender.is_none() || matches!(req.wire_cost(), WireCost::Free);
         if inline {
@@ -594,6 +635,32 @@ mod tests {
         assert_eq!(*results[0].as_ref().unwrap(), Response::Bytes(vec![7u8; 1]));
         assert!(results[1].is_err());
         assert_eq!(*results[2].as_ref().unwrap(), Response::Bytes(vec![7u8; 3]));
+    }
+
+    #[test]
+    fn envelope_counter_counts_every_send() {
+        let t = Transport::new(LinkModel::instant(), 2);
+        let e = echo();
+        assert_eq!(t.envelopes_sent(), 0);
+        for i in 0..3 {
+            let _ = t.call(
+                e.clone(),
+                Request::ReadBlock {
+                    block: i,
+                    offset: 0,
+                    len: 1,
+                },
+            );
+        }
+        assert_eq!(t.envelopes_sent(), 3);
+    }
+
+    #[test]
+    fn bytes_many_payload_sums_served_items() {
+        let r = Response::BytesMany(vec![Some(vec![0u8; 10]), None, Some(vec![0u8; 5])]);
+        assert_eq!(r.payload_len(), 15);
+        assert_eq!(r.clone().into_bytes_many().unwrap().len(), 3);
+        assert!(Response::Learned.into_bytes_many().is_err());
     }
 
     /// A handler that sleeps, standing in for wire time, to prove the

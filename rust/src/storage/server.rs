@@ -128,6 +128,15 @@ impl StorageServer {
         Ok(data)
     }
 
+    /// Server-side multi-get: one envelope's worth of slice fetches
+    /// (the coalesced read path groups extents by server and ships a
+    /// single `RetrieveMany` instead of one envelope per extent).
+    /// Failures are reported per pointer — the client owns per-extent
+    /// replica failover, so one bad pointer must not sink the batch.
+    pub fn retrieve_many(&self, ptrs: &[SlicePtr]) -> Vec<Option<Vec<u8>>> {
+        ptrs.iter().map(|p| self.retrieve_slice(p).ok()).collect()
+    }
+
     /// Logical length of one backing file (0 for unknown ids).
     pub fn backing_len(&self, backing: u32) -> u64 {
         self.backings
@@ -187,6 +196,9 @@ impl Handler for StorageServer {
                 Ok(Response::Slice(self.create_slice(data, *hint)?))
             }
             Request::RetrieveSlice { ptr } => Ok(Response::Bytes(self.retrieve_slice(ptr)?)),
+            Request::RetrieveMany { ptrs } => {
+                Ok(Response::BytesMany(self.retrieve_many(ptrs)))
+            }
             other => Err(Error::Unsupported(format!(
                 "storage server cannot serve {other:?}"
             ))),
@@ -333,6 +345,36 @@ mod tests {
                 key: crate::types::Key::sys("x")
             })
             .is_err());
+    }
+
+    #[test]
+    fn retrieve_many_reports_per_pointer_failures() {
+        let s = server(1);
+        let hint = RegionId::new(2, 0);
+        let a = s.create_slice(b"first", hint).unwrap();
+        let b = s.create_slice(b"second", hint).unwrap();
+        let bogus = SlicePtr {
+            server: 1,
+            backing: 99,
+            offset: 0,
+            len: 4,
+        };
+        let got = s.retrieve_many(&[a, bogus, b]);
+        assert_eq!(got.len(), 3);
+        assert_eq!(got[0].as_deref(), Some(b"first".as_ref()));
+        assert!(got[1].is_none(), "bad pointer must not sink the batch");
+        assert_eq!(got[2].as_deref(), Some(b"second".as_ref()));
+        // And through the envelope path.
+        let resp = s
+            .serve(&Request::RetrieveMany {
+                ptrs: Arc::from(vec![a, b].as_slice()),
+            })
+            .unwrap();
+        let Response::BytesMany(items) = resp else {
+            panic!("{resp:?}")
+        };
+        assert_eq!(items.len(), 2);
+        assert!(items.iter().all(|i| i.is_some()));
     }
 
     #[test]

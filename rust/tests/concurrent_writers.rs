@@ -157,6 +157,198 @@ fn replicated_fanout_matches_serial_transport_results() {
 }
 
 #[test]
+fn cached_reader_storm_never_observes_stale_length_or_torn_records() {
+    // Cache-coherence storm (mirrors the appends test above, with the
+    // whole hot read path ON): writers append fixed-size records while
+    // readers stream the file through their private caches.  The
+    // contract under test: a reader's length view is always a length
+    // the file actually had (monotone, record-aligned — never "stale"
+    // in the sense of torn or retrograde), and every record it returns
+    // is intact.  After the storm, a fresh client sees every append
+    // exactly once.
+    let mut cfg = Config::fast_read_test();
+    cfg.replication = 2;
+    let cl = Arc::new(Cluster::builder().config(cfg).build().unwrap());
+    let c = cl.client();
+    c.create("/storm").unwrap();
+    let stop = Arc::new(std::sync::atomic::AtomicBool::new(false));
+
+    const REC: u64 = 16; // divides the 4 KiB region: appends never tear
+    let writers: Vec<_> = (0..4u64)
+        .map(|w| {
+            let cl = cl.clone();
+            std::thread::spawn(move || {
+                let c = cl.client();
+                let fd = c.open("/storm").unwrap();
+                for _ in 0..24 {
+                    c.append_bytes(&fd, &[b'a' + w as u8; REC as usize]).unwrap();
+                }
+            })
+        })
+        .collect();
+    let readers: Vec<_> = (0..3u64)
+        .map(|r| {
+            let cl = cl.clone();
+            let stop = stop.clone();
+            std::thread::spawn(move || {
+                let c = cl.client();
+                let fd = c.open("/storm").unwrap();
+                let marker = b'x' + r as u8;
+                let mut prev_len = 0u64;
+                let mut observations = 0u64;
+                let mut appended = 0u64;
+                while !stop.load(std::sync::atomic::Ordering::Relaxed) {
+                    let len = c.len(&fd).unwrap();
+                    assert_eq!(len % REC, 0, "stale/torn length {len}");
+                    assert!(len >= prev_len, "length went backwards: {prev_len} -> {len}");
+                    prev_len = len;
+                    let data = c.read_at(&fd, 0, len).unwrap();
+                    // The cached view may lag the writers (allowed), but
+                    // whatever it returns must be record-intact.
+                    assert!(data.len() as u64 % REC == 0, "torn read of {} B", data.len());
+                    for rec in data.chunks(REC as usize) {
+                        assert!(
+                            rec.iter().all(|&b| b == rec[0]),
+                            "torn record through the cache: {rec:?}"
+                        );
+                    }
+                    // Every 8th pass, append a record of our own: the
+                    // commit invalidates our cache, so the next len()
+                    // MUST include it (read-your-writes through the
+                    // cache, mid-storm).
+                    if observations % 8 == 0 {
+                        let at = c.append_bytes(&fd, &[marker; REC as usize]).unwrap();
+                        appended += 1;
+                        let fresh = c.len(&fd).unwrap();
+                        assert!(
+                            fresh >= at + REC,
+                            "own append at {at} invisible: len {fresh}"
+                        );
+                        prev_len = prev_len.max(fresh);
+                    }
+                    observations += 1;
+                }
+                (observations, appended)
+            })
+        })
+        .collect();
+    for w in writers {
+        w.join().unwrap();
+    }
+    stop.store(true, std::sync::atomic::Ordering::Relaxed);
+    let mut reader_appends = [0u64; 3];
+    for (r, h) in readers.into_iter().enumerate() {
+        let (observations, appended) = h.join().unwrap();
+        assert!(observations > 0, "reader made no observations");
+        reader_appends[r] = appended;
+    }
+
+    // A fresh client (cold cache) sees the exact final state.
+    let c = cl.client();
+    let fd = c.open("/storm").unwrap();
+    let len = c.len(&fd).unwrap();
+    let total_appends = 4 * 24 + reader_appends.iter().sum::<u64>();
+    assert_eq!(len, total_appends * REC);
+    let data = c.read_at(&fd, 0, len).unwrap();
+    let mut counts = std::collections::HashMap::new();
+    for rec in data.chunks(REC as usize) {
+        assert!(rec.iter().all(|&b| b == rec[0]), "torn record");
+        *counts.entry(rec[0]).or_insert(0u64) += 1;
+    }
+    for w in 0..4u8 {
+        assert_eq!(counts.get(&(b'a' + w)).copied().unwrap_or(0), 24);
+    }
+    for r in 0..3usize {
+        assert_eq!(
+            counts.get(&(b'x' + r as u8)).copied().unwrap_or(0),
+            reader_appends[r],
+            "reader {r} appends lost or duplicated"
+        );
+    }
+}
+
+#[test]
+fn cached_reader_storm_with_disjoint_overwrites_is_never_torn() {
+    // The paste/overwrite flavor: writers overwrite their own disjoint
+    // stripes in place while cached readers stream.  Every stripe a
+    // reader returns must be all-one-writer's-byte or still-zero —
+    // never a mix (a torn paste).
+    let mut cfg = Config::fast_read_test();
+    cfg.replication = 2;
+    let cl = Arc::new(Cluster::builder().config(cfg).build().unwrap());
+    let c = cl.client();
+    let fd = c.create("/stripes").unwrap();
+    let inode = fd.inode();
+    const STRIPE: usize = 128;
+    const STRIPES: u64 = 32;
+    let stop = Arc::new(std::sync::atomic::AtomicBool::new(false));
+
+    let writers: Vec<_> = (0..4u64)
+        .map(|w| {
+            let cl = cl.clone();
+            std::thread::spawn(move || {
+                let c = cl.client();
+                for round in 0..6u64 {
+                    for k in 0..(STRIPES / 4) {
+                        let stripe = k * 4 + w;
+                        let fill = b'A' + ((w + round) % 8) as u8;
+                        c.write_at(inode, stripe * STRIPE as u64, &[fill; STRIPE])
+                            .unwrap();
+                    }
+                }
+            })
+        })
+        .collect();
+    // One warm reader (a single client whose cache serves the storm)
+    // and one cold reader (a fresh client — and cache — every pass).
+    let readers: Vec<_> = [true, false]
+        .into_iter()
+        .map(|warm| {
+            let cl = cl.clone();
+            let stop = stop.clone();
+            std::thread::spawn(move || {
+                let warm_client = cl.client();
+                while !stop.load(std::sync::atomic::Ordering::Relaxed) {
+                    let cold_client;
+                    let c = if warm {
+                        &warm_client
+                    } else {
+                        cold_client = cl.client();
+                        &cold_client
+                    };
+                    let fd = c.open("/stripes").unwrap();
+                    let len = c.len(&fd).unwrap();
+                    let data = c.read_at(&fd, 0, len).unwrap();
+                    for (i, stripe) in data.chunks(STRIPE).enumerate() {
+                        assert!(
+                            stripe.iter().all(|&b| b == stripe[0]),
+                            "torn paste in stripe {i}: {} vs {}",
+                            stripe[0],
+                            stripe[STRIPE - 1]
+                        );
+                    }
+                }
+            })
+        })
+        .collect();
+    for w in writers {
+        w.join().unwrap();
+    }
+    stop.store(true, std::sync::atomic::Ordering::Relaxed);
+    for r in readers {
+        r.join().unwrap();
+    }
+    // Final state: every stripe intact and written.
+    let c = cl.client();
+    let fd = c.open("/stripes").unwrap();
+    let data = c.read_at(&fd, 0, STRIPES * STRIPE as u64).unwrap();
+    for (i, stripe) in data.chunks(STRIPE).enumerate() {
+        assert!(stripe[0] != 0, "stripe {i} never written");
+        assert!(stripe.iter().all(|&b| b == stripe[0]), "stripe {i} torn");
+    }
+}
+
+#[test]
 fn replication_three_write_hides_wire_time() {
     // The acceptance check at test scale: under a measurable link, a
     // replication-3 write_at must land well under 3x the replication-1

@@ -289,6 +289,94 @@ fn replicated_leader_failover_mid_transaction_is_exactly_once() {
 }
 
 #[test]
+fn notleader_failover_invalidates_the_read_cache() {
+    // The read-cache heal trigger: a client whose cache is warm issues
+    // no metadata rounds at all, so a leader failover is only noticed
+    // when some operation finally hits `NotLeader`.  That operation
+    // must clear the cache before replaying — afterwards the client
+    // observes everything committed through the new leader, including
+    // writes by OTHER clients that its cached view had been allowed to
+    // lag behind.
+    let mut cfg = Config::replicated_test();
+    cfg.metadata_cache = true;
+    cfg.read_coalescing = true;
+    let cl = Cluster::builder().config(cfg).build().unwrap();
+    let a = cl.client();
+    let b = cl.client();
+
+    let fda = a.create("/c").unwrap();
+    a.append_bytes(&fda, b"base").unwrap();
+    // Warm A's cache; prove the next read actually serves from it.
+    assert_eq!(a.read_at(&fda, 0, 4).unwrap(), b"base");
+    let hits_before = a.metadata_cache().hits();
+    assert_eq!(a.read_at(&fda, 0, 4).unwrap(), b"base");
+    assert!(a.metadata_cache().hits() > hits_before, "cache not serving");
+
+    // B extends the file; A's cached view may lag (the documented
+    // contract for plain reads).
+    let fdb = b.open("/c").unwrap();
+    b.append_bytes(&fdb, b"+more").unwrap();
+
+    // Kill every group's leader.  A's warm cache means its plain reads
+    // issue no metadata rounds at all — the failover is first noticed
+    // by the next operation that does go to the wire (here the
+    // append's fresh inode read, or its commit), which heals and must
+    // drop the cache.
+    cl.meta().kill_replica(0);
+    let invalidations_before = a.metadata_cache().invalidations();
+    a.append_bytes(&fda, b"+mine").unwrap();
+    assert!(
+        a.metadata_cache().invalidations() > invalidations_before,
+        "NotLeader heal did not invalidate the cache"
+    );
+
+    // Post-heal, A sees the full history: base + B's write + its own.
+    let len = a.len(&fda).unwrap();
+    assert_eq!(len, 4 + 5 + 5);
+    assert_eq!(a.read_at(&fda, 0, len).unwrap(), b"base+more+mine");
+    assert!(cl.meta().replicated_store().unwrap().converged());
+}
+
+#[test]
+fn transactional_read_heal_also_invalidates_the_cache() {
+    // The other heal path: `MetaTxn::get` heals NotLeader INTERNALLY
+    // (the error never surfaces to with_retry or a commit arm), so the
+    // cache clear must ride the transaction's heal hook.  After a
+    // failover first noticed by a transactional read, the client's
+    // plain reads must observe everything committed through the new
+    // leader.
+    let mut cfg = Config::replicated_test();
+    cfg.metadata_cache = true;
+    cfg.read_coalescing = true;
+    let cl = Cluster::builder().config(cfg).build().unwrap();
+    let a = cl.client();
+    let b = cl.client();
+
+    let fda = a.create("/t").unwrap();
+    a.append_bytes(&fda, b"base").unwrap();
+    assert_eq!(a.read_at(&fda, 0, 4).unwrap(), b"base"); // warm A's cache
+    b.append_bytes(&b.open("/t").unwrap(), b"+more").unwrap();
+
+    cl.meta().kill_replica(0); // every group's leader
+    // concat's FIRST metadata round is a transactional get: it hits
+    // NotLeader, heals in place, and must clear A's cache on the way.
+    let inv_before = a.metadata_cache().invalidations();
+    let copy = a.concat(&["/t"], "/t2").unwrap();
+    assert!(
+        a.metadata_cache().invalidations() > inv_before,
+        "internal MetaTxn heal did not invalidate the cache"
+    );
+    // /t's inode was NOT mutated by the concat commit, so seeing the
+    // new length proves the heal hook (not own-commit invalidation)
+    // dropped the stale entry.
+    let len = a.len(&fda).unwrap();
+    assert_eq!(len, 9);
+    assert_eq!(a.read_at(&fda, 0, len).unwrap(), b"base+more");
+    assert_eq!(a.read_at(&copy, 0, 9).unwrap(), b"base+more");
+    assert!(cl.meta().replicated_store().unwrap().converged());
+}
+
+#[test]
 fn replicated_no_quorum_halts_commits_until_rejoin() {
     let cl = replicated_cluster();
     let c = cl.client();

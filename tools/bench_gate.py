@@ -1,0 +1,118 @@
+#!/usr/bin/env python3
+"""Read-path bench regression gate (CI bench-smoke job).
+
+Checks a freshly produced BENCH_read_path.json for regressions.  All
+hard checks are SAME-RUN comparisons, so they are immune to cross-host
+wall-clock variance (the committed baseline may have been produced on a
+different machine, or be modeled — the authoring container has no Rust
+toolchain):
+
+1. Envelope ratios (deterministic counts, always enforced):
+     - envelope_ratio_seq  >= --min-seq-ratio (default 4.0, the
+       acceptance bound: cached+coalesced whole-file read must issue
+       >= 4x fewer transport envelopes than seed);
+     - envelope_ratio_sort >= 1.0 (the fast-read sort must not issue
+       more envelopes than seed).
+2. Wall clock, within the fresh file only (enforced when the fresh rows
+   are measured, i.e. mean_ns > 0): for each row name present in both
+   configs, the fast config must not be more than --max-slowdown
+   (default 1.25, i.e. >25%) slower than the seed config measured in
+   the SAME run on the SAME machine.
+
+The committed baseline is still loaded and any drift is printed for
+trend-watching, but cross-file wall-clock differences never fail the
+gate.
+"""
+
+import argparse
+import json
+import sys
+
+# (row, fast config, seed config) pairs compared within one run.
+SAME_RUN_PAIRS = [
+    ("seq-read-whole-warm", "cache+coalesce", "seed"),
+    ("seq-read-stepped-warm", "cache+coalesce+readahead", "seed"),
+    ("sort-small", "fast-read", "seed"),
+]
+
+
+def load(path):
+    with open(path) as f:
+        return json.load(f)
+
+
+def rows_by_key(doc):
+    return {(r.get("row", ""), r.get("config", "")): r for r in doc.get("rows", [])}
+
+
+def main():
+    p = argparse.ArgumentParser(description=__doc__)
+    p.add_argument("--baseline", required=True, help="committed BENCH_read_path.json")
+    p.add_argument("--fresh", required=True, help="freshly produced BENCH_read_path.json")
+    p.add_argument("--max-slowdown", type=float, default=1.25)
+    p.add_argument("--min-seq-ratio", type=float, default=4.0)
+    a = p.parse_args()
+
+    base, fresh = load(a.baseline), load(a.fresh)
+    failures = []
+
+    # 1. Envelope ratios (scale-free, deterministic).
+    seq = float(fresh.get("envelope_ratio_seq", 0.0))
+    if seq < a.min_seq_ratio:
+        failures.append(
+            f"envelope_ratio_seq {seq:.2f} < {a.min_seq_ratio} "
+            "(cached+coalesced read no longer >=4x fewer envelopes than seed)"
+        )
+    sort_ratio = float(fresh.get("envelope_ratio_sort", 0.0))
+    if sort_ratio < 1.0:
+        failures.append(
+            f"envelope_ratio_sort {sort_ratio:.2f} < 1.0 "
+            "(fast-read sort issues MORE envelopes than seed)"
+        )
+
+    # 2. Same-run wall clock: fast config vs seed config, one machine.
+    fresh_rows = rows_by_key(fresh)
+    clock_checked = 0
+    for row, fast_cfg, seed_cfg in SAME_RUN_PAIRS:
+        f_row = fresh_rows.get((row, fast_cfg))
+        s_row = fresh_rows.get((row, seed_cfg))
+        if not f_row or not s_row:
+            continue
+        f_ns, s_ns = f_row.get("mean_ns", 0), s_row.get("mean_ns", 0)
+        if not f_ns or not s_ns:
+            continue  # modeled rows carry mean_ns = 0
+        clock_checked += 1
+        slowdown = f_ns / s_ns
+        if slowdown > a.max_slowdown:
+            failures.append(
+                f"{row}: [{fast_cfg}] is {slowdown:.2f}x [{seed_cfg}] in the same "
+                f"run ({f_ns:.0f} ns vs {s_ns:.0f} ns; limit {a.max_slowdown}x)"
+            )
+
+    # 3. Informational only: drift vs the committed baseline.
+    base_rows = rows_by_key(base)
+    for key, row in fresh_rows.items():
+        b = base_rows.get(key)
+        if b and b.get("mean_ns") and row.get("mean_ns"):
+            drift = row["mean_ns"] / b["mean_ns"]
+            if drift > a.max_slowdown or drift < 1.0 / a.max_slowdown:
+                print(
+                    f"bench_gate: note: {key[0]} [{key[1]}] wall clock {drift:.2f}x "
+                    "the committed baseline (informational; cross-host)"
+                )
+
+    if failures:
+        print("bench_gate: FAIL")
+        for f in failures:
+            print(f"  - {f}")
+        return 1
+    print(
+        f"bench_gate: OK (envelope_ratio_seq {seq:.2f}, "
+        f"envelope_ratio_sort {sort_ratio:.2f}, "
+        f"same-run wall-clock pairs checked: {clock_checked})"
+    )
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
