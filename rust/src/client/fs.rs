@@ -228,6 +228,77 @@ impl WtfClient {
         })
     }
 
+    /// Atomically move `old_path` to `new_path` (files only; `new_path`
+    /// must not exist).  One metadata transaction inserts the new path
+    /// mapping and directory entry while removing the old ones — the
+    /// canonical commit MIXING namespace inserts and removes, usually
+    /// across shard groups.  On the replicated backend its atomicity is
+    /// what the reader-isolation machinery guarantees (entry holds on
+    /// the direct path, intent locks under `meta_2pc`): a concurrent
+    /// reader observes the file at the old name or the new one, never
+    /// at neither.
+    pub fn rename(&self, old_path: &str, new_path: &str) -> Result<()> {
+        let old_path = normalize(old_path)?;
+        let new_path = normalize(new_path)?;
+        let (old_parent, old_name) = split_path(&old_path)?;
+        let (new_parent, new_name) = split_path(&new_path)?;
+        self.with_retry(|| {
+            let mut t = self.meta_txn();
+            let id = match t.get(&Key::path(&old_path))? {
+                Some(Value::PathEntry(p)) => p,
+                _ => return Err(Error::NotFound(old_path.clone())),
+            };
+            if old_path == new_path {
+                // Self-rename of an EXISTING file is a no-op (checking
+                // existence first, so a missing path still errors).
+                return Ok(());
+            }
+            if let Some(Value::Inode(i)) = t.get(&Key::inode(id))? {
+                if i.is_dir() {
+                    return Err(Error::IsDirectory(old_path.clone()));
+                }
+            }
+            if t.get(&Key::path(&new_path))?.is_some() {
+                return Err(Error::AlreadyExists(new_path.clone()));
+            }
+            let old_parent_id = match t.get(&Key::path(&old_parent))? {
+                Some(Value::PathEntry(p)) => p,
+                _ => return Err(Error::NotFound(old_parent.clone())),
+            };
+            let new_parent_id = match t.get(&Key::path(&new_parent))? {
+                Some(Value::PathEntry(p)) => p,
+                _ => return Err(Error::NotFound(new_parent.clone())),
+            };
+            let new_parent_inode = match t.get(&Key::inode(new_parent_id))? {
+                Some(Value::Inode(i)) => i,
+                _ => return Err(Error::CorruptMetadata(new_parent.clone())),
+            };
+            if !new_parent_inode.is_dir() {
+                return Err(Error::NotADirectory(new_parent.clone()));
+            }
+            t.push(MetaOp::PathInsert {
+                key: Key::path(&new_path),
+                inode: id,
+                expect_absent: true,
+            });
+            t.push(MetaOp::Delete {
+                key: Key::path(&old_path),
+            });
+            t.push(MetaOp::DirInsert {
+                key: Key::dir(new_parent_id),
+                name: new_name.clone(),
+                inode: id,
+                expect_absent: true,
+            });
+            t.push(MetaOp::DirRemove {
+                key: Key::dir(old_parent_id),
+                name: old_name.clone(),
+            });
+            self.commit_txn(t)?;
+            Ok(())
+        })
+    }
+
     /// Remove a path; the inode is deleted when its last link drops and
     /// its slices become garbage for the GC scan (§2.8).
     pub fn unlink(&self, path: &str) -> Result<()> {
@@ -679,6 +750,46 @@ mod tests {
         c.mkdir("/d").unwrap();
         assert!(matches!(c.unlink("/d"), Err(Error::IsDirectory(_))));
         assert!(matches!(c.open("/d"), Err(Error::IsDirectory(_))));
+    }
+
+    #[test]
+    fn rename_moves_atomically_across_directories() {
+        let cluster = small_cluster();
+        let c = cluster.client();
+        c.mkdir("/src").unwrap();
+        c.mkdir("/dst").unwrap();
+        let mut fd = c.create("/src/f").unwrap();
+        c.write(&mut fd, b"moved").unwrap();
+        c.rename("/src/f", "/dst/g").unwrap();
+        assert!(!c.exists("/src/f"));
+        let fd2 = c.open("/dst/g").unwrap();
+        assert_eq!(fd2.inode(), fd.inode(), "same inode, new name");
+        assert_eq!(c.read_at(&fd2, 0, 5).unwrap(), b"moved");
+        assert!(c.readdir("/src").unwrap().is_empty());
+        assert_eq!(c.readdir("/dst").unwrap(), vec![("g".into(), fd.inode())]);
+        // Error surface: missing source, taken destination, directories.
+        assert!(matches!(c.rename("/src/f", "/x"), Err(Error::NotFound(_))));
+        c.create("/taken").unwrap();
+        assert!(matches!(
+            c.rename("/dst/g", "/taken"),
+            Err(Error::AlreadyExists(_))
+        ));
+        assert!(matches!(c.rename("/src", "/d2"), Err(Error::IsDirectory(_))));
+        // The destination parent must be a directory, not a file.
+        assert!(matches!(
+            c.rename("/dst/g", "/taken/x"),
+            Err(Error::NotADirectory(_))
+        ));
+        // Same-directory rename and self-rename.
+        c.rename("/dst/g", "/dst/h").unwrap();
+        assert!(c.exists("/dst/h") && !c.exists("/dst/g"));
+        c.rename("/dst/h", "/dst/h").unwrap();
+        assert!(c.exists("/dst/h"));
+        // Self-rename of a MISSING path is still an error.
+        assert!(matches!(
+            c.rename("/dst/nope", "/dst/nope"),
+            Err(Error::NotFound(_))
+        ));
     }
 
     #[test]

@@ -623,8 +623,14 @@ impl WtfClient {
     /// on success, drop every key the ops mutated (own-commit
     /// read-your-writes); on `NotLeader`, drop the whole cache (the
     /// caller will heal and retry); on `TxnConflict`, drop the named
-    /// stale key before the caller's retry re-reads.  Every
-    /// client-side commit routes through here.
+    /// stale key before the caller's retry re-reads; on an
+    /// INDETERMINATE failure (`NoQuorum`/`ReplicaLost`/
+    /// `RetriesExhausted` mid-commit, or a 2PC left unresolved) the
+    /// mutated keys are dropped too — the
+    /// transaction may yet resolve to committed when the shard heals
+    /// (an orphaned decision record can be adopted), and own-commit
+    /// read-your-writes must hold even for that late resolution.
+    /// Every client-side commit routes through here.
     pub(crate) fn commit_txn(&self, t: MetaTxn) -> Result<Vec<crate::meta::OpOutcome>> {
         let keys = if self.cache.is_active() {
             t.mutated_keys()
@@ -638,6 +644,9 @@ impl WtfClient {
             Err(Error::TxnConflict { space, key }) => {
                 self.cache.invalidate_key(&Key::new(*space, key.clone()))
             }
+            Err(Error::NoQuorum { .. })
+            | Err(Error::ReplicaLost { .. })
+            | Err(Error::RetriesExhausted { .. }) => self.cache.invalidate_keys(&keys),
             Err(_) => {}
         }
         out

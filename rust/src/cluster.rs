@@ -69,6 +69,14 @@ impl ClusterBuilder {
         self
     }
 
+    /// Run multi-shard metadata commits as an intent-logged 2PC over
+    /// the Paxos groups (implies nothing by itself — `meta_paxos` must
+    /// be on; `Config::validate` enforces the pairing).
+    pub fn meta_2pc(mut self, on: bool) -> Self {
+        self.config.meta_2pc = on;
+        self
+    }
+
     /// Put backing files under `dir` instead of a tempdir.
     pub fn data_dir(mut self, dir: PathBuf) -> Self {
         self.data_dir = Some(dir);
@@ -111,7 +119,8 @@ impl ClusterBuilder {
                     transport.clone(),
                     LeaseClock::auto(),
                     config.meta_lease.as_millis() as u64,
-                ),
+                )
+                .two_pc(config.meta_2pc),
                 config.meta_txn_floor,
                 Metrics::new(),
             ))
@@ -287,10 +296,33 @@ mod tests {
     }
 
     #[test]
+    fn two_pc_meta_cluster_works_end_to_end() {
+        let cluster = Cluster::builder()
+            .config(Config::replicated_2pc_test())
+            .storage_servers(3)
+            .build()
+            .unwrap();
+        let c = cluster.client();
+        // Multi-file writes exercise multi-shard commits through the
+        // intent-logged protocol; bootstrap (root dir) already did.
+        let mut fd = c.create("/twopc").unwrap();
+        c.write(&mut fd, b"atomic across groups").unwrap();
+        assert_eq!(c.read_at(&fd, 0, 20).unwrap(), b"atomic across groups");
+        let r = cluster.meta().replicated_store().expect("paxos backend");
+        assert!(r.is_two_pc());
+        assert!(r.pending_intents().is_empty(), "no intent outlives commit");
+        assert!(r.converged());
+    }
+
+    #[test]
     fn invalid_config_is_rejected() {
         let mut cfg = Config::test();
         cfg.replication = 10;
         cfg.storage_servers = 2;
+        assert!(Cluster::builder().config(cfg).build().is_err());
+        // 2PC without the Paxos backend is a config error too.
+        let mut cfg = Config::test();
+        cfg.meta_2pc = true;
         assert!(Cluster::builder().config(cfg).build().is_err());
     }
 

@@ -30,6 +30,16 @@ pub struct Config {
     /// Members per metadata Paxos group (tolerates ⌊n/2⌋ failures;
     /// paper-shaped default: 3).
     pub meta_group_replicas: u8,
+    /// Run multi-shard metadata commits as an intent-logged two-phase
+    /// commit over the Paxos groups (requires `meta_paxos`): durable
+    /// `Prepare` intents in every touched group, a decision record in
+    /// the lowest-numbered participant group, exactly-once phase-2
+    /// apply.  Closes the cross-group atomicity and reader-isolation
+    /// gaps of the direct per-shard path — a quorum dying mid-commit
+    /// can no longer strand applied entries in earlier groups, and
+    /// leaseholder reads never observe a half-committed transaction.
+    /// Off by default; single-shard commits stay one-phase either way.
+    pub meta_2pc: bool,
     /// Leader lease duration for metadata shard groups.  Reads are
     /// leader-local inside the lease; failover waits out at most one
     /// lease window.
@@ -92,6 +102,7 @@ impl Default for Config {
             meta_replicas: 2,
             meta_paxos: false,
             meta_group_replicas: 3,
+            meta_2pc: false,
             meta_lease: Duration::from_millis(50),
             coordinator_replicas: 3,
             backing_files_per_server: 4,
@@ -135,6 +146,16 @@ impl Config {
             meta_group_replicas: 3,
             meta_lease: Duration::from_millis(25),
             ..Config::test()
+        }
+    }
+
+    /// [`Config::replicated_test`] with cross-group 2PC on: multi-shard
+    /// commits run the intent-logged two-phase protocol.  The preset
+    /// the fault-schedule and reader-isolation suites exercise.
+    pub fn replicated_2pc_test() -> Self {
+        Config {
+            meta_2pc: true,
+            ..Config::replicated_test()
         }
     }
 
@@ -186,6 +207,11 @@ impl Config {
                 "meta_paxos requires a non-zero meta_lease".into(),
             ));
         }
+        if self.meta_2pc && !self.meta_paxos {
+            return Err(crate::Error::InvalidArgument(
+                "meta_2pc layers on the Paxos groups; enable meta_paxos".into(),
+            ));
+        }
         if self.metadata_cache && self.metadata_cache_entries == 0 {
             return Err(crate::Error::InvalidArgument(
                 "metadata_cache requires metadata_cache_entries >= 1".into(),
@@ -232,6 +258,7 @@ mod tests {
     fn replicated_preset_is_valid_and_paxos_backed() {
         let c = Config::replicated_test();
         assert!(c.meta_paxos);
+        assert!(!c.meta_2pc, "2PC is opt-in on top of the Paxos preset");
         assert_eq!(c.meta_group_replicas, 3);
         c.validate().unwrap();
         let mut bad = Config::replicated_test();
@@ -240,6 +267,17 @@ mod tests {
         let mut bad = Config::replicated_test();
         bad.meta_lease = Duration::ZERO;
         assert!(bad.validate().is_err());
+    }
+
+    #[test]
+    fn two_pc_preset_requires_paxos() {
+        let c = Config::replicated_2pc_test();
+        assert!(c.meta_paxos && c.meta_2pc);
+        c.validate().unwrap();
+        assert!(!Config::default().meta_2pc, "deployment default stays off");
+        let mut bad = Config::replicated_2pc_test();
+        bad.meta_paxos = false;
+        assert!(bad.validate().is_err(), "2PC without Paxos groups");
     }
 
     #[test]

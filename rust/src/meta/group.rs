@@ -39,6 +39,32 @@ use std::collections::{BTreeMap, HashMap, HashSet};
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Mutex};
 
+/// How a [`LogEntry`] behaves when a replica applies it — the 2PC
+/// layering over the plain replicated log.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub enum EntryKind {
+    /// Validate + apply immediately (single-group commits, and every
+    /// multi-group commit when `Config::meta_2pc` is off).
+    #[default]
+    Apply,
+    /// Phase 1 of a cross-group commit: stage the entry as a durable
+    /// *intent* — validated and overlaid, but not applied — and lock its
+    /// keys against readers and other entries until a decision record
+    /// resolves it.  `participants` are every shard the transaction
+    /// touches; `coordinator` (the lowest participant) is the group whose
+    /// log holds the authoritative decision record.
+    Prepare {
+        participants: Vec<u32>,
+        coordinator: u32,
+    },
+    /// The decision record / phase 2: resolve the pending intent for
+    /// `txn_id` — flush its staged overlay on `commit`, discard it
+    /// otherwise.  The FIRST `Decide` entry for a transaction in the
+    /// coordinator group's log is the authoritative outcome; replays are
+    /// absorbed by the txn-id dedup.
+    Decide { commit: bool },
+}
+
 /// One replicated-log entry: a (sub-)transaction routed to this shard.
 /// `txn_id` 0 is reserved for no-op filler entries.
 #[derive(Clone, Debug, Default, PartialEq)]
@@ -48,6 +74,8 @@ pub struct LogEntry {
     pub reads: Vec<(Key, u64)>,
     /// Shard-local mutations, applied in order.
     pub ops: Vec<MetaOp>,
+    /// Apply immediately, stage an intent, or resolve one.
+    pub kind: EntryKind,
 }
 
 impl LogEntry {
@@ -56,17 +84,42 @@ impl LogEntry {
         LogEntry::default()
     }
 
+    /// A directly-applying entry (the pre-2PC shape).
+    pub fn apply(txn_id: u64, reads: Vec<(Key, u64)>, ops: Vec<MetaOp>) -> LogEntry {
+        LogEntry {
+            txn_id,
+            reads,
+            ops,
+            kind: EntryKind::Apply,
+        }
+    }
+
+    /// A phase-2 decision entry (no reads/ops of its own — it resolves
+    /// the staged intent recorded by the matching `Prepare`).
+    pub fn decide(txn_id: u64, commit: bool) -> LogEntry {
+        LogEntry {
+            txn_id,
+            reads: Vec::new(),
+            ops: Vec::new(),
+            kind: EntryKind::Decide { commit },
+        }
+    }
+
     pub fn is_noop(&self) -> bool {
         self.txn_id == 0
     }
 }
 
-/// Deterministically validate + apply one entry to a replica's state,
-/// using the same shared staging as every other commit path
-/// ([`ops::stage`]).  All-or-nothing: a validation failure is a
-/// deterministic abort (the same on every replica) that leaves `state`
-/// untouched.
-pub(crate) fn apply_entry(state: &mut KvState, entry: &LogEntry) -> Result<Vec<OpOutcome>> {
+/// Deterministically validate + stage one entry against a replica's
+/// state, using the same shared staging as every other commit path
+/// ([`ops::stage`]).  Returns the overlay to flush plus the per-op
+/// outcomes; a validation failure is a deterministic abort (the same on
+/// every replica) that stages nothing.
+#[allow(clippy::type_complexity)]
+pub(crate) fn stage_entry(
+    state: &KvState,
+    entry: &LogEntry,
+) -> Result<(Vec<(Key, Option<Value>)>, Vec<OpOutcome>)> {
     for (key, observed) in &entry.reads {
         if state.version(key) != *observed {
             return Err(Error::TxnConflict {
@@ -77,10 +130,56 @@ pub(crate) fn apply_entry(state: &mut KvState, entry: &LogEntry) -> Result<Vec<O
     }
     let committed = |k: &Key| Ok((state.get(k).cloned(), state.version(k)));
     let (overlay, outcomes) = ops::stage(&entry.ops, &committed, |_, _| {})?;
+    Ok((overlay.into_iter().collect(), outcomes))
+}
+
+/// Stage + flush in one step — the direct-apply path.
+pub(crate) fn apply_entry(state: &mut KvState, entry: &LogEntry) -> Result<Vec<OpOutcome>> {
+    let (overlay, outcomes) = stage_entry(state, entry)?;
     for (key, value) in overlay {
         state.set(&key, value);
     }
     Ok(outcomes)
+}
+
+/// A staged-but-undecided cross-group transaction on one replica: the
+/// durable phase-1 intent.  `staged` is `Some((overlay, outcomes))` for a
+/// yes vote — the exact mutation a commit decision will flush — and
+/// `None` when staging deterministically failed (a no vote, identical on
+/// every replica).  `participants` (from the Prepare entry) lets a
+/// resolver settle the transaction's sibling groups in the same pass.
+#[derive(Clone, Debug, PartialEq)]
+struct Intent {
+    coordinator: u32,
+    participants: Vec<u32>,
+    #[allow(clippy::type_complexity)]
+    staged: Option<(Vec<(Key, Option<Value>)>, Vec<OpOutcome>)>,
+}
+
+/// What a proposed entry settled to, once it (or a competitor with the
+/// same transaction id) was found in the log.
+#[derive(Clone, Debug)]
+pub(crate) enum Landed {
+    /// The transaction applied (`Some`) or deterministically aborted /
+    /// was decided-abort (`None`).
+    Applied(Option<Vec<OpOutcome>>),
+    /// A `Prepare` staged its intent; the participant's vote is `Some`
+    /// (yes, with the outcomes a commit will record) or `None` (no).
+    Voted(Option<Vec<OpOutcome>>),
+}
+
+/// A leaseholder read that may instead find the key covered by a pending
+/// 2PC intent — the caller resolves the intent (via the coordinator
+/// group's decision record, propagating to every participant) and
+/// retries.
+#[derive(Clone, Debug)]
+pub(crate) enum LockedRead<R> {
+    Clear(R),
+    Locked {
+        txn_id: u64,
+        coordinator: u32,
+        participants: Vec<u32>,
+    },
 }
 
 /// Volatile replica state: lost on a crash, rebuilt by log replay.
@@ -101,8 +200,54 @@ struct ReplicaInner {
     /// staging — an indeterminate earlier commit recovered ahead of us
     /// can change what our entry actually did.
     txn_results: HashMap<u64, Option<Vec<OpOutcome>>>,
+    /// Staged-but-undecided cross-group transactions (phase-1 intents),
+    /// by transaction id.  Rebuilt by log replay like everything else.
+    intents: HashMap<u64, Intent>,
+    /// Key → pending intent holding it locked.  Leaseholder reads of a
+    /// locked key resolve the intent (via its coordinator's decision
+    /// record) instead of serving state the transaction may be about to
+    /// change; other log entries touching a locked key deterministically
+    /// abort, which is what lets a commit decision flush the prepare-time
+    /// overlay verbatim.
+    intent_locks: HashMap<Key, u64>,
+    /// Decision records: transaction id → committed?  First `Decide`
+    /// entry in the log wins; authoritative only in the transaction's
+    /// coordinator group, informational elsewhere.
+    decisions: HashMap<u64, bool>,
     /// Lease grant bookkeeping (volatile; hold-off applied on recovery).
     grant: GrantState,
+}
+
+impl ReplicaInner {
+    /// True when `entry` touches a key locked by a DIFFERENT pending
+    /// intent (the deterministic-abort condition for interlopers).
+    fn crosses_lock(&self, entry: &LogEntry) -> bool {
+        if self.intent_locks.is_empty() {
+            return false;
+        }
+        entry
+            .reads
+            .iter()
+            .map(|(k, _)| k)
+            .chain(entry.ops.iter().flat_map(|op| op.keys()))
+            .any(|k| {
+                self.intent_locks
+                    .get(k)
+                    .is_some_and(|&txn| txn != entry.txn_id)
+            })
+    }
+
+    fn wipe(&mut self) {
+        self.log.clear();
+        self.pending.clear();
+        self.state = KvState::default();
+        self.applied_txns.clear();
+        self.txn_results.clear();
+        self.intents.clear();
+        self.intent_locks.clear();
+        self.decisions.clear();
+        self.grant = GrantState::default();
+    }
 }
 
 /// One member of a shard group: Paxos acceptor + learner + materialized
@@ -152,12 +297,7 @@ impl GroupReplica {
                 let mut g = poisoned.into_inner();
                 if g.alive {
                     g.alive = false;
-                    g.log.clear();
-                    g.pending.clear();
-                    g.state = KvState::default();
-                    g.applied_txns.clear();
-                    g.txn_results.clear();
-                    g.grant = GrantState::default();
+                    g.wipe();
                 }
                 g
             }
@@ -174,12 +314,7 @@ impl GroupReplica {
     fn kill(&self) {
         let mut g = self.lock_inner();
         g.alive = false;
-        g.log.clear();
-        g.pending.clear();
-        g.state = KvState::default();
-        g.applied_txns.clear();
-        g.txn_results.clear();
-        g.grant = GrantState::default();
+        g.wipe();
     }
 
     /// Rejoin with `entries` (the leader's chosen log), replayed
@@ -188,12 +323,7 @@ impl GroupReplica {
     /// unknown and may still be live.
     fn restore(&self, entries: Vec<LogEntry>, now_ms: u64, lease_ms: u64) {
         let mut g = self.lock_inner();
-        g.log.clear();
-        g.pending.clear();
-        g.state = KvState::default();
-        g.applied_txns.clear();
-        g.txn_results.clear();
-        g.grant = GrantState::default();
+        g.wipe();
         g.grant.hold_off(now_ms + lease_ms);
         for e in entries {
             Self::push_apply(&mut g, e);
@@ -201,14 +331,90 @@ impl GroupReplica {
         g.alive = true;
     }
 
+    /// Apply one chosen entry in log order.  Every branch is a pure
+    /// function of (state so far, entry), so replicas replaying the same
+    /// log converge bit-for-bit — including the 2PC intents and decision
+    /// records.
     fn push_apply(g: &mut ReplicaInner, entry: LogEntry) {
-        let dup = !entry.is_noop() && g.applied_txns.contains(&entry.txn_id);
-        if !dup && !entry.is_noop() {
-            // A deterministic apply-time abort leaves state untouched and
-            // is identical on every replica.
-            let result = apply_entry(&mut g.state, &entry).ok();
-            g.applied_txns.insert(entry.txn_id);
-            g.txn_results.insert(entry.txn_id, result);
+        if entry.is_noop() {
+            g.log.push(entry);
+            return;
+        }
+        match &entry.kind {
+            EntryKind::Apply => {
+                if !g.applied_txns.contains(&entry.txn_id) {
+                    // A deterministic apply-time abort (stale reads, a
+                    // validation failure, or a key held by a pending
+                    // intent) leaves state untouched and is identical on
+                    // every replica.
+                    let result = if g.crosses_lock(&entry) {
+                        None
+                    } else {
+                        apply_entry(&mut g.state, &entry).ok()
+                    };
+                    g.applied_txns.insert(entry.txn_id);
+                    g.txn_results.insert(entry.txn_id, result);
+                }
+            }
+            EntryKind::Prepare {
+                coordinator,
+                participants,
+            } => {
+                // Stage exactly once: a prepare replayed into a second
+                // slot (failover retry), or arriving after the decision
+                // already resolved the transaction, changes nothing.
+                if !g.applied_txns.contains(&entry.txn_id)
+                    && !g.intents.contains_key(&entry.txn_id)
+                {
+                    let staged = if g.crosses_lock(&entry) {
+                        None // vote no: another transaction holds a key
+                    } else {
+                        stage_entry(&g.state, &entry).ok()
+                    };
+                    if staged.is_some() {
+                        for op in &entry.ops {
+                            for k in op.keys() {
+                                g.intent_locks.insert(k.clone(), entry.txn_id);
+                            }
+                        }
+                    }
+                    g.intents.insert(
+                        entry.txn_id,
+                        Intent {
+                            coordinator: *coordinator,
+                            participants: participants.clone(),
+                            staged,
+                        },
+                    );
+                }
+            }
+            EntryKind::Decide { commit } => {
+                // First decision for a transaction wins (log order is
+                // identical on every replica, so "first" is well-defined
+                // group-wide).
+                let commit = *g.decisions.entry(entry.txn_id).or_insert(*commit);
+                if !g.applied_txns.contains(&entry.txn_id) {
+                    let intent = g.intents.remove(&entry.txn_id);
+                    g.intent_locks.retain(|_, txn| *txn != entry.txn_id);
+                    let result = match intent {
+                        Some(Intent {
+                            staged: Some((overlay, outcomes)),
+                            ..
+                        }) if commit => {
+                            for (key, value) in overlay {
+                                g.state.set(&key, value);
+                            }
+                            Some(outcomes)
+                        }
+                        // Abort decision, a no-vote intent, or (never in
+                        // a well-formed log) a decide without its
+                        // prepare: nothing flushes.
+                        _ => None,
+                    };
+                    g.applied_txns.insert(entry.txn_id);
+                    g.txn_results.insert(entry.txn_id, result);
+                }
+            }
         }
         g.log.push(entry);
     }
@@ -260,10 +466,41 @@ impl GroupReplica {
         g.txn_results.get(&txn_id).cloned()
     }
 
+    /// Has `entry`'s transaction settled here?  Kind-aware: an applied or
+    /// decided transaction settles any proposal for its id; a `Prepare`
+    /// additionally settles once its intent is staged (its vote is the
+    /// answer).  `None` = not landed yet (or this replica is dead).
+    fn landed(&self, entry: &LogEntry) -> Option<Landed> {
+        if entry.is_noop() {
+            return None;
+        }
+        let g = self.lock_inner();
+        if !g.alive {
+            return None;
+        }
+        if let Some(result) = g.txn_results.get(&entry.txn_id) {
+            return Some(Landed::Applied(result.clone()));
+        }
+        if matches!(entry.kind, EntryKind::Prepare { .. }) {
+            if let Some(intent) = g.intents.get(&entry.txn_id) {
+                return Some(Landed::Voted(
+                    intent.staged.as_ref().map(|(_, outcomes)| outcomes.clone()),
+                ));
+            }
+        }
+        None
+    }
+
     /// Read through the materialized state while alive.
     fn read_state<R>(&self, f: impl FnOnce(&KvState) -> R) -> Option<R> {
+        self.read_inner(|g| f(&g.state))
+    }
+
+    /// Read through the whole volatile view while alive (state plus the
+    /// 2PC intent/decision bookkeeping).
+    fn read_inner<R>(&self, f: impl FnOnce(&ReplicaInner) -> R) -> Option<R> {
         let g = self.lock_inner();
-        g.alive.then(|| f(&g.state))
+        g.alive.then(|| f(&g))
     }
 
     fn dispatch(&self, req: &Request) -> Result<Response> {
@@ -741,13 +978,29 @@ impl ShardGroup {
     /// Fast path (valid lease, settled log): skip phase 1 — one
     /// scatter-gathered accept round is the whole quorum commit.
     pub fn commit_entry(&self, entry: &LogEntry, auto_elect: bool) -> Result<Vec<OpOutcome>> {
+        match self.propose_entry(entry, auto_elect)? {
+            Landed::Applied(result) => Self::applied_or_aborted(result, entry),
+            // Unreachable for Apply/Decide kinds (landed() only votes on
+            // Prepare proposals); surface loudly rather than guessing.
+            Landed::Voted(_) => Err(Error::CorruptMetadata(format!(
+                "txn {} landed as a vote on a non-prepare proposal",
+                entry.txn_id
+            ))),
+        }
+    }
+
+    /// The kind-aware proposal driver shared by direct commits, 2PC
+    /// prepares, and 2PC decisions: drive `entry` into the replicated
+    /// log through any failover, then report how its transaction settled
+    /// on the leader.
+    pub(crate) fn propose_entry(&self, entry: &LogEntry, auto_elect: bool) -> Result<Landed> {
         assert!(!entry.is_noop(), "txn_id 0 is reserved for noop filler");
         for _attempt in 0..64 {
             let leader_id = self.ensure_leader(auto_elect)?;
             let leader = &self.replicas[leader_id as usize];
-            if let Some(result) = leader.txn_result(entry.txn_id) {
+            if let Some(landed) = leader.landed(entry) {
                 // A previous attempt already landed (exactly-once).
-                return Self::applied_or_aborted(result, entry);
+                return Ok(landed);
             }
             let Some(slot) = leader.log_len_if_alive() else {
                 self.invalidate_leader(leader_id);
@@ -783,12 +1036,13 @@ impl ShardGroup {
             self.learn_all(slot, &chosen);
             self.view.lock().unwrap().needs_prepare = false;
             if chosen.txn_id == entry.txn_id {
-                if let Some(result) = self.replicas[leader_id as usize].txn_result(entry.txn_id)
-                {
-                    return Self::applied_or_aborted(result, entry);
+                if let Some(landed) = self.replicas[leader_id as usize].landed(entry) {
+                    return Ok(landed);
                 }
-                // Leader died between accept and learn: loop — the next
-                // leader learned the entry and holds its result.
+                // Leader died between accept and learn, or the chosen
+                // entry was a different KIND for the same transaction
+                // (e.g. an adopted orphan prepare owning the slot our
+                // decide aimed at): loop — the next round settles it.
                 continue;
             }
             // A recovered in-flight entry owned this slot; ours goes next.
@@ -839,9 +1093,17 @@ impl ShardGroup {
     }
 
     fn local_read<R>(&self, auto_elect: bool, f: impl Fn(&KvState) -> R) -> Result<R> {
+        self.local_read_inner(auto_elect, |g| f(&g.state))
+    }
+
+    fn local_read_inner<R>(
+        &self,
+        auto_elect: bool,
+        f: impl Fn(&ReplicaInner) -> R,
+    ) -> Result<R> {
         loop {
             let leader = self.ensure_leader(auto_elect)?;
-            match self.replicas[leader as usize].read_state(&f) {
+            match self.replicas[leader as usize].read_inner(&f) {
                 Some(out) => {
                     self.lease_reads.fetch_add(1, Ordering::Relaxed);
                     return Ok(out);
@@ -849,6 +1111,66 @@ impl ShardGroup {
                 None => self.invalidate_leader(leader), // died under us
             }
         }
+    }
+
+    /// Leaseholder read that honors 2PC intent locks: if `key` is covered
+    /// by a pending intent, return the lock (transaction id + its
+    /// coordinator shard) instead of state the transaction is about to
+    /// decide — the probe and the read are one atomic view, so a lock
+    /// can never slip in between them.
+    pub(crate) fn local_locked<R>(
+        &self,
+        key: &Key,
+        auto_elect: bool,
+        f: impl Fn(&KvState) -> R,
+    ) -> Result<LockedRead<R>> {
+        self.local_read_inner(auto_elect, |g| match g.intent_locks.get(key) {
+            Some(&txn_id) => {
+                let intent = g.intents.get(&txn_id);
+                LockedRead::Locked {
+                    txn_id,
+                    coordinator: intent.map(|i| i.coordinator).unwrap_or(self.shard),
+                    participants: intent.map(|i| i.participants.clone()).unwrap_or_default(),
+                }
+            }
+            None => LockedRead::Clear(f(&g.state)),
+        })
+    }
+
+    /// The recorded decision for `txn_id`, if any (authoritative in the
+    /// transaction's coordinator group — the first `Decide` entry wins).
+    pub(crate) fn decision(&self, txn_id: u64, auto_elect: bool) -> Result<Option<bool>> {
+        self.local_read_inner(auto_elect, |g| g.decisions.get(&txn_id).copied())
+    }
+
+    /// How `txn_id` settled in this group, per the leaseholder:
+    /// `Some(true)` = applied (mutations flushed), `Some(false)` =
+    /// applied as an abort, `None` = not settled here (never proposed,
+    /// or its intent is still pending).  Test/observability surface for
+    /// the fault-schedule agreement assertions.
+    pub(crate) fn txn_settled(&self, txn_id: u64, auto_elect: bool) -> Result<Option<bool>> {
+        self.local_read_inner(auto_elect, |g| {
+            g.txn_results.get(&txn_id).map(|r| r.is_some())
+        })
+    }
+
+    /// Every pending (undecided) intent in this group, as
+    /// `(txn_id, coordinator shard, participants)` — the
+    /// orphan-resolution sweep and test observability.
+    #[allow(clippy::type_complexity)]
+    pub(crate) fn pending_intents(
+        &self,
+        auto_elect: bool,
+    ) -> Result<Vec<(u64, u32, Vec<u32>)>> {
+        self.local_read_inner(auto_elect, |g| {
+            let mut out: Vec<(u64, u32, Vec<u32>)> = g
+                .intents
+                .iter()
+                .map(|(&txn, i)| (txn, i.coordinator, i.participants.clone()))
+                .collect();
+            out.sort_unstable();
+            out
+        })
     }
 
     /// Fail one replica (crash-stop).  Its lease, if it led, must expire
@@ -968,21 +1290,21 @@ mod tests {
     }
 
     fn put_entry(txn_id: u64, key: &Key, v: u64) -> LogEntry {
-        LogEntry {
+        LogEntry::apply(
             txn_id,
-            reads: vec![],
-            ops: vec![MetaOp::Put {
+            vec![],
+            vec![MetaOp::Put {
                 key: key.clone(),
                 value: Value::U64(v),
             }],
-        }
+        )
     }
 
     fn eof_append_entry(txn_id: u64, key: &Key) -> LogEntry {
-        LogEntry {
+        LogEntry::apply(
             txn_id,
-            reads: vec![],
-            ops: vec![MetaOp::RegionAppendEof {
+            vec![],
+            vec![MetaOp::RegionAppendEof {
                 key: key.clone(),
                 data: SliceData::Stored(vec![SlicePtr {
                     server: 1,
@@ -993,6 +1315,18 @@ mod tests {
                 len: 8,
                 cap: 1 << 20,
             }],
+        )
+    }
+
+    fn prepare_entry(txn_id: u64, ops: Vec<MetaOp>, coordinator: u32) -> LogEntry {
+        LogEntry {
+            txn_id,
+            reads: vec![],
+            ops,
+            kind: EntryKind::Prepare {
+                participants: vec![coordinator, 1],
+                coordinator,
+            },
         }
     }
 
@@ -1150,17 +1484,210 @@ mod tests {
         // A stale read set aborts deterministically at apply on every
         // replica — surfaced to the proposer as TxnAborted — and state
         // and versions stay identical everywhere.
-        let stale = LogEntry {
-            txn_id: 2,
-            reads: vec![(k("a"), 0)],
-            ops: vec![MetaOp::Put {
+        let stale = LogEntry::apply(
+            2,
+            vec![(k("a"), 0)],
+            vec![MetaOp::Put {
                 key: k("a"),
                 value: Value::U64(9),
             }],
-        };
+        );
         let err = g.commit_entry(&stale, true).unwrap_err();
         assert!(matches!(err, Error::TxnAborted { .. }), "{err:?}");
         assert!(g.converged());
         assert_eq!(g.local_get(&k("a"), true).unwrap(), Some((Value::U64(1), 1)));
+    }
+
+    // -----------------------------------------------------------------
+    // 2PC entries: prepare stages + locks, decide resolves exactly once.
+    // -----------------------------------------------------------------
+
+    #[test]
+    fn prepare_stages_without_applying_and_locks_the_key() {
+        let g = group();
+        let r = Key::new(Space::Region, "r");
+        let prep = prepare_entry(
+            7,
+            vec![MetaOp::RegionAppendEof {
+                key: r.clone(),
+                data: SliceData::Stored(vec![SlicePtr {
+                    server: 1,
+                    backing: 0,
+                    offset: 0,
+                    len: 8,
+                }]),
+                len: 8,
+                cap: 1 << 20,
+            }],
+            0,
+        );
+        let landed = g.propose_entry(&prep, true).unwrap();
+        assert!(
+            matches!(landed, Landed::Voted(Some(ref o)) if o == &vec![OpOutcome::AppendedAt(0)]),
+            "{landed:?}"
+        );
+        // Nothing applied, but the key is locked against reads...
+        assert!(matches!(
+            g.local_locked(&r, true, |s| s.version(&r)).unwrap(),
+            LockedRead::Locked {
+                txn_id: 7,
+                coordinator: 0,
+                ..
+            }
+        ));
+        // ...and the lock-blind read still sees pre-transaction state.
+        assert_eq!(g.local_get(&r, true).unwrap(), None);
+        assert_eq!(
+            g.pending_intents(true).unwrap(),
+            vec![(7, 0, vec![0, 1])],
+            "intent carries its participant list"
+        );
+
+        // Commit decision flushes the staged overlay; replaying it (and
+        // the prepare) changes nothing — exactly-once via txn-id dedup.
+        let applied = g.commit_entry(&LogEntry::decide(7, true), true).unwrap();
+        assert_eq!(applied, vec![OpOutcome::AppendedAt(0)]);
+        let (v, ver) = g.local_get(&r, true).unwrap().unwrap();
+        assert_eq!(v.as_region().unwrap().eof, 8);
+        assert_eq!(ver, 1);
+        let replay = g.commit_entry(&LogEntry::decide(7, true), true).unwrap();
+        assert_eq!(replay, applied);
+        assert!(matches!(
+            g.propose_entry(&prep, true).unwrap(),
+            Landed::Applied(Some(_))
+        ));
+        let (v, ver) = g.local_get(&r, true).unwrap().unwrap();
+        assert_eq!(v.as_region().unwrap().eof, 8, "applied exactly once");
+        assert_eq!(ver, 1);
+        assert!(matches!(
+            g.local_locked(&r, true, |_| ()).unwrap(),
+            LockedRead::Clear(())
+        ));
+        assert!(g.pending_intents(true).unwrap().is_empty());
+        assert_eq!(g.decision(7, true).unwrap(), Some(true));
+        assert!(g.converged());
+    }
+
+    #[test]
+    fn decide_abort_discards_the_intent_and_unlocks() {
+        let g = group();
+        let a = k("a");
+        g.commit_entry(&put_entry(1, &a, 1), true).unwrap();
+        let prep = prepare_entry(
+            2,
+            vec![MetaOp::Put {
+                key: a.clone(),
+                value: Value::U64(9),
+            }],
+            0,
+        );
+        assert!(matches!(
+            g.propose_entry(&prep, true).unwrap(),
+            Landed::Voted(Some(_))
+        ));
+        let err = g.commit_entry(&LogEntry::decide(2, false), true).unwrap_err();
+        assert!(matches!(err, Error::TxnAborted { .. }), "{err:?}");
+        assert_eq!(g.local_get(&a, true).unwrap(), Some((Value::U64(1), 1)));
+        assert!(matches!(
+            g.local_locked(&a, true, |_| ()).unwrap(),
+            LockedRead::Clear(())
+        ));
+        assert_eq!(g.decision(2, true).unwrap(), Some(false));
+        assert!(g.converged());
+    }
+
+    #[test]
+    fn first_decision_wins_over_a_replayed_opposite() {
+        let g = group();
+        let a = k("a");
+        let prep = prepare_entry(
+            3,
+            vec![MetaOp::Put {
+                key: a.clone(),
+                value: Value::U64(5),
+            }],
+            0,
+        );
+        g.propose_entry(&prep, true).unwrap();
+        let _ = g.commit_entry(&LogEntry::decide(3, false), true);
+        // A later commit-direction replay must NOT flip the outcome.
+        let err = g.commit_entry(&LogEntry::decide(3, true), true).unwrap_err();
+        assert!(matches!(err, Error::TxnAborted { .. }), "{err:?}");
+        assert_eq!(g.decision(3, true).unwrap(), Some(false));
+        assert_eq!(g.local_get(&a, true).unwrap(), None);
+        assert!(g.converged());
+    }
+
+    #[test]
+    fn interloper_on_a_locked_key_aborts_deterministically() {
+        let g = group();
+        let a = k("a");
+        let prep = prepare_entry(
+            4,
+            vec![MetaOp::Put {
+                key: a.clone(),
+                value: Value::U64(1),
+            }],
+            0,
+        );
+        g.propose_entry(&prep, true).unwrap();
+        // A direct-apply entry touching the locked key aborts (state is
+        // frozen so the eventual commit decision can flush the staged
+        // overlay verbatim); an entry on OTHER keys sails through.
+        let err = g.commit_entry(&put_entry(5, &a, 9), true).unwrap_err();
+        assert!(matches!(err, Error::TxnAborted { .. }), "{err:?}");
+        g.commit_entry(&put_entry(6, &k("b"), 2), true).unwrap();
+        g.commit_entry(&LogEntry::decide(4, true), true).unwrap();
+        assert_eq!(g.local_get(&a, true).unwrap(), Some((Value::U64(1), 1)));
+        assert_eq!(g.local_get(&k("b"), true).unwrap(), Some((Value::U64(2), 1)));
+        assert!(g.converged());
+    }
+
+    #[test]
+    fn rejoining_replica_replays_pending_intents_and_resolutions() {
+        let g = group();
+        let a = k("a");
+        let b = k("b");
+        // One resolved and one still-pending intent in the log.
+        g.propose_entry(
+            &prepare_entry(
+                8,
+                vec![MetaOp::Put {
+                    key: a.clone(),
+                    value: Value::U64(1),
+                }],
+                0,
+            ),
+            true,
+        )
+        .unwrap();
+        g.commit_entry(&LogEntry::decide(8, true), true).unwrap();
+        g.propose_entry(
+            &prepare_entry(
+                9,
+                vec![MetaOp::Put {
+                    key: b.clone(),
+                    value: Value::U64(2),
+                }],
+                0,
+            ),
+            true,
+        )
+        .unwrap();
+
+        g.kill_replica(2);
+        g.recover_replica(2).unwrap();
+        assert!(g.converged(), "replayed log rebuilds intents identically");
+        let r2 = g.replica(2).unwrap();
+        assert!(r2.is_alive());
+        // The rejoined replica holds the pending intent (txn 9) and the
+        // resolved state of txn 8.
+        let locked = g.local_locked(&b, true, |_| ()).unwrap();
+        assert!(matches!(locked, LockedRead::Locked { txn_id: 9, .. }));
+        assert_eq!(g.local_get(&a, true).unwrap(), Some((Value::U64(1), 1)));
+        // Resolve the straggler; everyone agrees.
+        g.commit_entry(&LogEntry::decide(9, true), true).unwrap();
+        assert_eq!(g.local_get(&b, true).unwrap(), Some((Value::U64(2), 1)));
+        assert!(g.converged());
     }
 }

@@ -24,6 +24,15 @@
 //!   preserves every quorum-accepted commit, apply is deduplicated by
 //!   transaction id, and a rejoining replica rebuilds by deterministic
 //!   log replay ([`ShardGroup`], [`ReplicatedMetaStore`]).
+//! * **Cross-group atomic commit** — with `Config::meta_2pc`, a
+//!   multi-shard commit runs an intent-logged two-phase commit over
+//!   the replicated logs: durable `Prepare` intents in every touched
+//!   group, a decision record in the lowest-numbered participant
+//!   group, and exactly-once phase-2 apply; leaseholder reads treat
+//!   intent-locked keys as unreadable until the intent resolves, so a
+//!   half-committed create/unlink is never observable (see
+//!   [`ReplicatedMetaStore`] module docs for the protocol and its
+//!   invariants, and [`CommitPhase`] for the fault-schedule surface).
 //!
 //! [`MetaStore`] is the raw sharded store; [`MetaService`] layers the
 //! simulated transaction latency floor and metrics on top; [`MetaTxn`] is
@@ -36,9 +45,9 @@ mod shard;
 mod store;
 mod txn;
 
-pub use group::{GroupReplica, LogEntry, ShardGroup};
+pub use group::{EntryKind, GroupReplica, LogEntry, ShardGroup};
 pub use ops::{MetaOp, OpOutcome};
-pub use replicated::ReplicatedMetaStore;
+pub use replicated::{CommitPhase, FaultAction, FaultHook, ReplicatedMetaStore};
 pub use shard::{KvState, Shard, ShardStats};
 pub use store::{Commit, MetaService, MetaSnapshot, MetaStore};
 pub use txn::MetaTxn;

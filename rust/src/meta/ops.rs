@@ -104,6 +104,40 @@ impl MetaOp {
             other => vec![other.key()],
         }
     }
+
+    /// True when this op PUBLISHES a namespace root (a Path or Dir
+    /// entry) that readers resolve other objects through.  Multi-shard
+    /// commits propose such entries LAST so a gate-free read can never
+    /// follow a fresh root to a referent that has not landed yet.
+    pub(crate) fn inserts_namespace_root(&self) -> bool {
+        matches!(
+            self,
+            MetaOp::PathInsert { .. } | MetaOp::DirInsert { .. }
+        )
+    }
+
+    /// True when this op RETIRES a namespace root.  Multi-shard commits
+    /// propose such entries FIRST, so the root disappears before its
+    /// referent does.
+    pub(crate) fn removes_namespace_root(&self) -> bool {
+        match self {
+            MetaOp::DirRemove { .. } => true,
+            MetaOp::Delete { key } => key.space == crate::types::Space::Path,
+            _ => false,
+        }
+    }
+
+    /// True for ops on the namespace keyspaces themselves (Path/Dir) —
+    /// the keys the reader-isolation entry hold covers while a mixed
+    /// insert+remove multi-shard commit is in flight.
+    pub(crate) fn touches_namespace(&self) -> bool {
+        self.keys().iter().any(|k| {
+            matches!(
+                k.space,
+                crate::types::Space::Path | crate::types::Space::Dir
+            )
+        })
+    }
 }
 
 /// The per-op result surfaced to the committing client.

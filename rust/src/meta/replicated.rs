@@ -11,6 +11,30 @@
 //! in a different group, so every entry is locally applicable and
 //! deterministic.
 //!
+//! **Cross-group atomicity** comes in two strengths:
+//!
+//! * With `Config::meta_2pc` OFF (the default), multi-shard entries are
+//!   proposed directly in dependency order (namespace-root inserts last,
+//!   removals first), and a commit mixing insert+remove directions in
+//!   one entry additionally registers a front-end *entry hold* on its
+//!   namespace keys so gate-free reads cannot resolve a dangling
+//!   reference mid-flight.  A quorum dying mid-sequence can still strand
+//!   earlier groups' applied entries (surfaced, not hidden).
+//! * With `Config::meta_2pc` ON, multi-shard commits run an
+//!   intent-logged two-phase commit over the same replicated logs:
+//!   phase 1 proposes a durable `Prepare` intent into every touched
+//!   group (staged + key-locked, nothing applied), a `Decide` record
+//!   replicated in the LOWEST-numbered participant group fixes the
+//!   outcome (first decision in its log wins), and phase 2 flushes or
+//!   discards each staged intent exactly once via the txn-id dedup.
+//!   Leaseholder reads treat intent-locked keys as unreadable until
+//!   they resolve the intent through the decision record — acquiring
+//!   the coordinator group's commit gate with no decision recorded
+//!   proves the coordinator died pre-decision (prepares are only ever
+//!   proposed while that gate is held), so presumed-abort is safe.  A
+//!   group that loses its quorum mid-commit therefore rejoins to the
+//!   recorded decision instead of stranding a phantom entry.
+//!
 //! Invariants (asserted by the fault-injection suite):
 //!
 //! * a quorum-accepted entry survives its leader's death (the next
@@ -18,13 +42,21 @@
 //! * a commit retried across failover applies **exactly once** (apply is
 //!   deduplicated on the transaction id);
 //! * reads are leaseholder-local — no quorum round — and never observe
-//!   state a lease could not vouch for;
+//!   state a lease could not vouch for, nor a key a pending intent has
+//!   locked;
 //! * with a majority of a group dead, commits fail with `NoQuorum` and
-//!   nothing is partially visible in that group.
+//!   nothing is partially visible in that group;
+//! * under `meta_2pc`, every participant of a cross-group transaction
+//!   eventually agrees with its decision record — through coordinator
+//!   death, participant quorum loss, and decision replay.
+//!
+//! (`scan_space` stays lock-blind on purpose: a pending intent has not
+//! mutated state, so GC scans see the pre-transaction view — tolerable
+//! staleness under the two-consecutive-scan rule.)
 //!
 //! [`MetaStore`]: super::MetaStore
 
-use super::group::{LogEntry, ShardGroup};
+use super::group::{Landed, LockedRead, LogEntry, EntryKind, ShardGroup};
 use super::ops::{self, MetaOp, OpOutcome};
 use super::shard::ShardStats;
 use super::store::Commit;
@@ -32,8 +64,10 @@ use crate::coordinator::lease::LeaseClock;
 use crate::error::{Error, Result};
 use crate::net::Transport;
 use crate::types::{Key, Space, Value};
-use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::{Arc, MutexGuard};
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex, MutexGuard};
+use std::time::Duration;
 
 /// Proposal order for one shard's entry within a multi-shard commit:
 /// namespace-root REMOVALS first (-1), plain data in the middle (0),
@@ -42,27 +76,183 @@ use std::sync::{Arc, MutexGuard};
 /// leaseholder-local), so inserting those roots *after* their referents
 /// — and removing them *before* — keeps the common create/unlink shapes
 /// free of reader-visible dangling references while a multi-shard
-/// commit is mid-flight.  (Entries mixing both directions cannot be
-/// fully ordered; the residual window is recorded in ROADMAP.md.)
+/// commit is mid-flight.  (An entry mixing both directions cannot be
+/// fully ordered; the non-2PC path covers it with an entry hold, and
+/// the 2PC path with intent locks.)
 fn entry_priority(ops: &[&MetaOp]) -> i32 {
     let mut pri = 0;
     for op in ops {
-        match op {
-            MetaOp::PathInsert { .. } | MetaOp::DirInsert { .. } => pri = pri.max(1),
-            MetaOp::DirRemove { .. } => pri = pri.min(-1),
-            MetaOp::Delete { key } if key.space == Space::Path => pri = pri.min(-1),
-            _ => {}
+        if op.inserts_namespace_root() {
+            pri = pri.max(1);
+        }
+        if op.removes_namespace_root() {
+            pri = pri.min(-1);
         }
     }
     pri
 }
 
+/// Named instants of a multi-shard commit, exposed to the deterministic
+/// fault-schedule driver in `tests/`.  The hook installed via
+/// [`ReplicatedMetaStore::set_fault_hook`] fires at each point with the
+/// transaction id; returning [`FaultAction::Abandon`] makes the
+/// front-end stop dead (simulated coordinator death) with the commit's
+/// gates released and its intents orphaned.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum CommitPhase {
+    /// Gates held, read set validated, ops staged; nothing proposed yet.
+    Staged,
+    /// (non-2PC path) the shard's direct-apply entry is in its log.
+    Proposed { shard: u32 },
+    /// (2PC) the `Prepared` intent for `shard` is in its group's log.
+    Prepared { shard: u32 },
+    /// (2PC) every participant's intent is logged; no decision yet —
+    /// the classic window a coordinator can die in.
+    AllPrepared,
+    /// (2PC) the decision record is replicated in the coordinator group.
+    Decided { commit: bool },
+    /// (2PC) the decision has been applied in `shard` (phase 2).
+    Applied { shard: u32 },
+}
+
+/// What the fault hook tells the committing front-end to do next.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FaultAction {
+    Continue,
+    /// Stop the commit here, as if the coordinating front-end died.
+    /// Only honored between 2PC phases (the direct path must drive to
+    /// completion once proposing — that gap is exactly what `meta_2pc`
+    /// exists to close).
+    Abandon,
+}
+
+/// The fault-schedule hook type (tests only; `None` in deployments).
+pub type FaultHook = Arc<dyn Fn(CommitPhase, u64) -> FaultAction + Send + Sync>;
+
+/// One gate-holding commit attempt's result: done, or blocked on an
+/// orphaned intent that must be resolved outside the gates.
+enum Attempt {
+    Done(Vec<OpOutcome>),
+    Blocked {
+        txn_id: u64,
+        coordinator: u32,
+        shard: u32,
+        participants: Vec<u32>,
+    },
+}
+
+/// Front-end *entry holds*: while a non-2PC multi-shard commit whose
+/// entries mix namespace inserts and removals is proposing, its
+/// namespace keys are held here and gate-free reads wait the hold out —
+/// the reader-isolation fix for the one shape dependency ordering
+/// cannot cover.  (In-process state, like the commit gates themselves:
+/// the wire-free metadata plane executes on the caller's thread, so a
+/// blocked reader never starves the transport pool.)
+#[derive(Debug, Default)]
+struct Holds {
+    /// Fast path: readers skip the map entirely while nothing is held.
+    active: AtomicUsize,
+    map: Mutex<HashMap<Key, u32>>,
+    released: Condvar,
+}
+
+impl Holds {
+    fn acquire(&self, keys: Vec<Key>) -> HoldGuard<'_> {
+        if !keys.is_empty() {
+            let mut g = self.map.lock().unwrap();
+            self.active.fetch_add(1, Ordering::SeqCst);
+            for k in &keys {
+                *g.entry(k.clone()).or_insert(0) += 1;
+            }
+        }
+        HoldGuard { holds: self, keys }
+    }
+
+    /// Is `key` held right now?  The reader's post-read validation: the
+    /// writer inserts its hold keys BEFORE its first proposal (and the
+    /// reader's leaseholder read synchronizes with the writer's apply
+    /// through the replica lock), so a read that observed any
+    /// mid-commit state of a held key is guaranteed to still find the
+    /// key here — unless the commit already finished, in which case the
+    /// read's value composes with post-commit state anyway.
+    fn held(&self, key: &Key) -> bool {
+        if self.active.load(Ordering::SeqCst) == 0 {
+            return false;
+        }
+        self.map.lock().unwrap().contains_key(key)
+    }
+
+    /// Block while `key` is held.  Bounded (the hold window spans a few
+    /// in-process log proposals — microseconds) so a bug can never hang
+    /// a reader forever; on timeout the reader proceeds with the
+    /// pre-hold semantics.
+    fn wait_out(&self, key: &Key) {
+        if self.active.load(Ordering::SeqCst) == 0 {
+            return;
+        }
+        let mut g = self.map.lock().unwrap();
+        let mut rounds = 0u32;
+        while g.contains_key(key) && rounds < 400 {
+            let (ng, _) = self
+                .released
+                .wait_timeout(g, Duration::from_millis(5))
+                .unwrap();
+            g = ng;
+            rounds += 1;
+        }
+    }
+}
+
+struct HoldGuard<'h> {
+    holds: &'h Holds,
+    keys: Vec<Key>,
+}
+
+impl Drop for HoldGuard<'_> {
+    fn drop(&mut self) {
+        if self.keys.is_empty() {
+            return;
+        }
+        let mut g = self.holds.map.lock().unwrap();
+        for k in &self.keys {
+            if let Some(n) = g.get_mut(k) {
+                *n -= 1;
+                if *n == 0 {
+                    g.remove(k);
+                }
+            }
+        }
+        self.holds.active.fetch_sub(1, Ordering::SeqCst);
+        self.holds.released.notify_all();
+    }
+}
+
 /// The sharded, Paxos-replicated metadata store.
-#[derive(Debug)]
 pub struct ReplicatedMetaStore {
     groups: Vec<ShardGroup>,
     next_inode: AtomicU64,
     next_txn: AtomicU64,
+    /// Route multi-shard commits through the intent-logged 2PC
+    /// (`Config::meta_2pc`).  Single-shard commits stay one-phase — one
+    /// log entry is already atomic.
+    two_pc: bool,
+    /// Reader-isolation entry holds for the non-2PC path.
+    holds: Holds,
+    /// Test-only fault-schedule hook (see [`CommitPhase`]).
+    fault_hook: Mutex<Option<FaultHook>>,
+    /// Fast path for [`Self::fire`]: deployments never install a hook,
+    /// so commits must not contend on the `fault_hook` mutex (a global
+    /// serialization point) just to find it `None`.
+    hook_installed: std::sync::atomic::AtomicBool,
+}
+
+impl std::fmt::Debug for ReplicatedMetaStore {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("ReplicatedMetaStore")
+            .field("groups", &self.groups)
+            .field("two_pc", &self.two_pc)
+            .finish_non_exhaustive()
+    }
 }
 
 impl ReplicatedMetaStore {
@@ -92,6 +282,51 @@ impl ReplicatedMetaStore {
             next_inode: AtomicU64::new(2),
             // txn 0 is the noop filler id
             next_txn: AtomicU64::new(1),
+            two_pc: false,
+            holds: Holds::default(),
+            fault_hook: Mutex::new(None),
+            hook_installed: std::sync::atomic::AtomicBool::new(false),
+        }
+    }
+
+    /// Route multi-shard commits through the intent-logged two-phase
+    /// commit (`Config::meta_2pc`).  Builder-style so existing
+    /// construction sites stay unchanged.
+    pub fn two_pc(mut self, on: bool) -> Self {
+        self.two_pc = on;
+        self
+    }
+
+    /// Whether multi-shard commits run the intent-logged 2PC.
+    pub fn is_two_pc(&self) -> bool {
+        self.two_pc
+    }
+
+    /// Install (or clear) the deterministic fault-schedule hook.  Test
+    /// infrastructure only: deployments leave it `None`.
+    pub fn set_fault_hook(&self, hook: Option<FaultHook>) {
+        let mut g = self.fault_hook.lock().unwrap();
+        self.hook_installed
+            .store(hook.is_some(), Ordering::SeqCst);
+        *g = hook;
+    }
+
+    fn fire(&self, phase: CommitPhase, txn_id: u64) -> FaultAction {
+        if !self.hook_installed.load(Ordering::Relaxed) {
+            return FaultAction::Continue;
+        }
+        let hook = self.fault_hook.lock().unwrap().clone();
+        match hook {
+            Some(h) => h(phase, txn_id),
+            None => FaultAction::Continue,
+        }
+    }
+
+    fn abandoned(txn_id: u64, phase: CommitPhase) -> Error {
+        Error::TxnAborted {
+            reason: format!(
+                "txn {txn_id}: commit abandoned at {phase:?} by the fault schedule"
+            ),
         }
     }
 
@@ -126,26 +361,241 @@ impl ReplicatedMetaStore {
     /// blocks through an election; off (the envelope path) surfaces
     /// [`Error::NotLeader`] for the client to handle.
     pub fn get(&self, key: &Key, auto_elect: bool) -> Result<Option<(Value, u64)>> {
-        self.groups[self.shard_of(key)].local_get(key, auto_elect)
+        self.locked_read(key, auto_elect, |s| {
+            s.get(key).map(|v| (v.clone(), s.version(key)))
+        })
     }
 
     /// Version of `key` without copying the value.
     pub fn version(&self, key: &Key, auto_elect: bool) -> Result<u64> {
-        self.groups[self.shard_of(key)].local_version(key, auto_elect)
+        self.locked_read(key, auto_elect, |s| s.version(key))
     }
 
     /// Value AND version in one leaseholder read (absent keys still
     /// report their version).
     pub fn entry(&self, key: &Key, auto_elect: bool) -> Result<(Option<Value>, u64)> {
-        self.groups[self.shard_of(key)].local_entry(key, auto_elect)
+        self.locked_read(key, auto_elect, |s| (s.get(key).cloned(), s.version(key)))
+    }
+
+    /// The isolation-aware leaseholder read behind `get`/`entry`/
+    /// `version`: wait out any front-end entry hold on `key` (non-2PC
+    /// mixed-direction commits), then read through the leaseholder —
+    /// and if the key is covered by a pending 2PC intent, resolve that
+    /// intent through its coordinator group's decision record and
+    /// retry, so the read observes either the whole transaction or none
+    /// of it, never a staged half.
+    fn locked_read<R>(
+        &self,
+        key: &Key,
+        auto_elect: bool,
+        f: impl Fn(&super::shard::KvState) -> R,
+    ) -> Result<R> {
+        let gid = self.shard_of(key);
+        for _ in 0..64 {
+            self.holds.wait_out(key);
+            match self.groups[gid].local_locked(key, auto_elect, &f)? {
+                LockedRead::Clear(r) => {
+                    // Validate AFTER the read: a hold on `key` still
+                    // active now means a mixed-direction commit may
+                    // have been mid-apply when we read (the wait-out
+                    // above races the writer's acquire) — retry, which
+                    // blocks the hold out.  If the hold was already
+                    // released, the commit finished before this check,
+                    // and the value composes with post-commit state
+                    // like any read racing a completed atomic commit.
+                    // The 2PC intent probe needs no such dance: the
+                    // lock check and the read are one atomic view
+                    // under the replica lock.
+                    if !self.holds.held(key) {
+                        return Ok(r);
+                    }
+                }
+                LockedRead::Locked {
+                    txn_id,
+                    coordinator,
+                    participants,
+                } => {
+                    self.resolve_intent(
+                        txn_id,
+                        coordinator,
+                        gid as u32,
+                        &participants,
+                        auto_elect,
+                    )?;
+                }
+            }
+        }
+        Err(Error::RetriesExhausted { attempts: 64 })
+    }
+
+    /// Resolve one pending intent in `shard` by consulting (and if
+    /// necessary fixing) the decision record in the transaction's
+    /// `coordinator` group, then propagating the decision to `shard`
+    /// (fallibly — the caller needs it resolved) and to every other
+    /// recorded participant (best-effort — a quorum-less sibling
+    /// resolves on a later pass).  Returns the decision.
+    ///
+    /// MUST be called with no commit gates held: it takes the gates of
+    /// the coordinator, the observing shard, and the sibling
+    /// participants itself, in ascending order (the same global gate
+    /// order every commit uses, so no deadlocks).  Holding them
+    /// serializes this resolution against every proposer to those
+    /// groups, which is what keeps one-value-per-ballot intact, and it
+    /// is also the presumed-abort proof: prepares and decisions are
+    /// only ever proposed while the coordinator's gate is held, so
+    /// observing "gate acquired, no decision recorded" means the
+    /// coordinating front-end died before deciding and can never decide
+    /// later.
+    fn resolve_intent(
+        &self,
+        txn_id: u64,
+        coordinator: u32,
+        shard: u32,
+        participants: &[u32],
+        auto_elect: bool,
+    ) -> Result<bool> {
+        let c = coordinator as usize;
+        let s = shard as usize;
+        if c >= self.groups.len() {
+            return Err(Error::CorruptMetadata(format!(
+                "intent for txn {txn_id} names unknown coordinator shard {coordinator}"
+            )));
+        }
+        let mut gated: Vec<usize> = participants
+            .iter()
+            .map(|&p| p as usize)
+            .filter(|&p| p < self.groups.len())
+            .chain([c, s])
+            .collect();
+        gated.sort_unstable();
+        gated.dedup();
+        let _gates: Vec<MutexGuard<'_, ()>> = gated
+            .iter()
+            .map(|&gid| self.groups[gid].gate.lock().unwrap())
+            .collect();
+        let commit = match self.groups[c].decision(txn_id, auto_elect)? {
+            Some(d) => d,
+            None => {
+                // Record the presumed abort durably FIRST — the first
+                // decision in the coordinator's log wins, so once this
+                // lands no replayed decide can flip the outcome.
+                self.groups[c].propose_entry(&LogEntry::decide(txn_id, false), auto_elect)?;
+                // Re-read rather than assuming `false`: our proposal's
+                // prepare rounds may have adopted a minority-accepted
+                // `Decide(commit)` left behind by the dead front-end —
+                // in which case THAT is the recorded (first) decision.
+                self.groups[c]
+                    .decision(txn_id, auto_elect)?
+                    .unwrap_or(false)
+            }
+        };
+        let decide = LogEntry::decide(txn_id, commit);
+        if s != c {
+            self.groups[s].propose_entry(&decide, auto_elect)?;
+        }
+        for &gid in &gated {
+            if gid != c && gid != s {
+                let _ = self.groups[gid].propose_entry(&decide, auto_elect);
+            }
+        }
+        Ok(commit)
+    }
+
+    /// Sweep every group for pending intents and resolve each through
+    /// its coordinator's decision record (presumed abort when the
+    /// record is absent).  Best-effort per intent — a group without a
+    /// quorum is skipped and retried by the next sweep.  Returns how
+    /// many intents were resolved.  Called after failover recovery so a
+    /// quorum-loss mid-commit leaves no group permanently holding a
+    /// phantom entry; also a test surface.
+    pub fn resolve_orphans(&self) -> usize {
+        let mut resolved = 0usize;
+        for g in &self.groups {
+            let Ok(pending) = g.pending_intents(true) else {
+                continue;
+            };
+            for (txn_id, coordinator, participants) in pending {
+                if self
+                    .resolve_intent(txn_id, coordinator, g.shard(), &participants, true)
+                    .is_ok()
+                {
+                    resolved += 1;
+                }
+            }
+        }
+        resolved
+    }
+
+    /// Every pending (undecided) intent across groups, as
+    /// `(shard, txn_id, coordinator)` — test observability.
+    pub fn pending_intents(&self) -> Vec<(u32, u64, u32)> {
+        let mut out = Vec::new();
+        for g in &self.groups {
+            if let Ok(pending) = g.pending_intents(true) {
+                out.extend(pending.into_iter().map(|(t, c, _)| (g.shard(), t, c)));
+            }
+        }
+        out
+    }
+
+    /// How `txn_id` settled in `shard`: `Some(true)` applied,
+    /// `Some(false)` applied as an abort, `None` not settled there
+    /// (test observability for the agreement assertions).
+    pub fn txn_outcome(&self, shard: u32, txn_id: u64) -> Option<bool> {
+        self.groups
+            .get(shard as usize)?
+            .txn_settled(txn_id, true)
+            .ok()
+            .flatten()
+    }
+
+    /// The recorded decision for `txn_id` in `coordinator`'s log
+    /// (authoritative there; test observability).
+    pub fn decision_of(&self, coordinator: u32, txn_id: u64) -> Option<bool> {
+        self.groups
+            .get(coordinator as usize)?
+            .decision(txn_id, true)
+            .ok()
+            .flatten()
     }
 
     /// Atomically commit `commit` through the replicated logs of every
     /// shard it touches.  See the module docs for the protocol.
+    ///
+    /// Retries around pending intents: an intent observed on a touched
+    /// key under the commit gates always belongs to an ORPHANED
+    /// cross-group transaction (a live one would itself be holding one
+    /// of the gates we hold), so the commit releases its gates, resolves
+    /// the orphan through its decision record, and starts over.
     pub fn commit(&self, commit: &Commit, auto_elect: bool) -> Result<Vec<OpOutcome>> {
         if commit.is_empty() {
             return Ok(Vec::new());
         }
+        let mut attempts = 0u32;
+        loop {
+            match self.try_commit(commit, auto_elect)? {
+                Attempt::Done(outcomes) => return Ok(outcomes),
+                Attempt::Blocked {
+                    txn_id,
+                    coordinator,
+                    shard,
+                    participants,
+                } => {
+                    attempts += 1;
+                    if attempts > 16 {
+                        return Err(Error::RetriesExhausted { attempts });
+                    }
+                    self.resolve_intent(txn_id, coordinator, shard, &participants, auto_elect)?;
+                }
+            }
+        }
+    }
+
+    /// One gate-holding commit attempt.  `Attempt::Blocked` means an
+    /// orphaned intent covers a touched key; the caller resolves it
+    /// outside the gates (its coordinator's gate may be ordered before
+    /// ours) and retries.
+    fn try_commit(&self, commit: &Commit, auto_elect: bool) -> Result<Attempt> {
         // 1. Canonically ordered commit-gate acquisition over the
         //    touched shards (serializes validate→propose; no deadlocks).
         let mut shard_ids: Vec<usize> = commit
@@ -169,12 +619,44 @@ impl ReplicatedMetaStore {
         // 2. Pre-flight: every touched group must have a live leased
         //    leader BEFORE anything is proposed — a leaderless or
         //    quorum-less group must abort the commit while it is still
-        //    clean, not midway through the per-group proposals (the
-        //    residual window, a quorum dying mid-propose, is the known
-        //    gap recorded in ROADMAP.md).  Then validate the read set
+        //    clean, not midway through the per-group proposals.  (Under
+        //    `meta_2pc` a quorum dying mid-protocol is recoverable
+        //    anyway; without it, this pre-flight is what shrinks the
+        //    partial multi-shard window.)  Then check every touched key
+        //    for a pending intent: any hit is an orphan — resolve it
+        //    outside the gates and retry — and validate the read set
         //    against the leaders' leased state.
         for &sid in &shard_ids {
             self.groups[sid].ensure(auto_elect)?;
+        }
+        // (Probe only when 2PC can have left intents behind: with it
+        // off, `Prepare` entries are never proposed, so the probe would
+        // be a pure leader-read tax on every commit.)
+        if self.two_pc {
+            let mut probe_keys: Vec<&Key> = commit
+                .reads
+                .iter()
+                .map(|(k, _)| k)
+                .chain(commit.ops.iter().flat_map(|op| op.keys()))
+                .collect();
+            probe_keys.sort_unstable();
+            probe_keys.dedup();
+            for key in probe_keys {
+                let gid = self.shard_of(key);
+                if let LockedRead::Locked {
+                    txn_id,
+                    coordinator,
+                    participants,
+                } = self.groups[gid].local_locked(key, auto_elect, |_| ())?
+                {
+                    return Ok(Attempt::Blocked {
+                        txn_id,
+                        coordinator,
+                        shard: gid as u32,
+                        participants,
+                    });
+                }
+            }
         }
         for (key, observed) in &commit.reads {
             let v = self.groups[self.shard_of(key)].local_version(key, auto_elect)?;
@@ -220,10 +702,8 @@ impl ReplicatedMetaStore {
             routed.push(routed_op);
         })?;
 
-        // 4. One log entry per touched shard, proposed in dependency
-        //    order (gates stay held throughout, so proposal order is
-        //    free to differ from the canonical gate-acquisition order).
-        //    `commit_entry` survives leader failover and applies exactly
+        // 4. Plan one log entry per touched shard.  `commit_entry` /
+        //    `propose_entry` survive leader failover and apply exactly
         //    once (txn-id dedup), so a retry after a mid-commit crash
         //    cannot double-apply.
         //
@@ -235,11 +715,6 @@ impl ReplicatedMetaStore {
         //    replay under a fresh transaction id could re-apply the
         //    groups that already accepted.
         let txn_id = self.next_txn.fetch_add(1, Ordering::Relaxed);
-        let mut final_outcomes = outcomes;
-        // Plan the per-shard entries, then propose them in dependency
-        // order (namespace roots last on insert, first on remove) so
-        // gate-free readers never resolve a dangling reference through a
-        // half-committed transaction.
         let mut planned: Vec<(i32, usize, Vec<usize>)> = Vec::new();
         for &sid in &shard_ids {
             let idxs: Vec<usize> = routed
@@ -254,19 +729,51 @@ impl ReplicatedMetaStore {
             let shard_ops: Vec<&MetaOp> = idxs.iter().map(|&i| &routed[i]).collect();
             planned.push((entry_priority(&shard_ops), sid, idxs));
         }
+        if self.fire(CommitPhase::Staged, txn_id) == FaultAction::Abandon {
+            // Nothing proposed yet: the "death" is a clean abort.
+            return Err(Self::abandoned(txn_id, CommitPhase::Staged));
+        }
+        if self.two_pc && planned.len() > 1 {
+            return self.commit_two_phase(txn_id, commit, &routed, planned, outcomes);
+        }
+
+        // 4a. Direct path: propose per-shard entries in dependency
+        //     order (namespace roots last on insert, first on remove) so
+        //     gate-free readers never resolve a dangling reference
+        //     through a half-committed transaction — and when one commit
+        //     mixes both directions (the shape no order can cover), hold
+        //     its namespace keys so gate-free reads wait the whole
+        //     proposal sequence out.
         planned.sort_by_key(|(pri, sid, _)| (*pri, *sid));
+        let mixed = routed.iter().any(|op| op.inserts_namespace_root())
+            && routed.iter().any(|op| op.removes_namespace_root());
+        let _hold = (planned.len() > 1 && mixed).then(|| {
+            let mut held: Vec<Key> = routed
+                .iter()
+                .filter(|op| op.touches_namespace())
+                .flat_map(|op| op.keys().into_iter().cloned())
+                .collect();
+            held.sort_unstable();
+            held.dedup();
+            self.holds.acquire(held)
+        });
+        let mut final_outcomes = outcomes;
         for (_, sid, idxs) in planned {
-            let entry = LogEntry {
+            let entry = LogEntry::apply(
                 txn_id,
-                reads: commit
+                commit
                     .reads
                     .iter()
                     .filter(|(k, _)| self.shard_of(k) == sid)
                     .cloned()
                     .collect(),
-                ops: idxs.iter().map(|&i| routed[i].clone()).collect(),
-            };
+                idxs.iter().map(|&i| routed[i].clone()).collect(),
+            );
             let applied = self.groups[sid].commit_entry(&entry, true)?;
+            // Observability only on the direct path: once proposing, the
+            // commit must drive to completion (that gap is exactly what
+            // `meta_2pc` exists to close), so Abandon is not honored.
+            let _ = self.fire(CommitPhase::Proposed { shard: sid as u32 }, txn_id);
             // Report what the replicated apply actually recorded — it
             // diverges from the staging above only when an indeterminate
             // earlier commit was recovered ahead of this entry (in which
@@ -276,7 +783,151 @@ impl ReplicatedMetaStore {
                 final_outcomes[i] = o;
             }
         }
-        Ok(final_outcomes)
+        Ok(Attempt::Done(final_outcomes))
+    }
+
+    /// The intent-logged two-phase commit for a multi-shard transaction
+    /// (`Config::meta_2pc`).  Phase 1 stages a durable `Prepare` intent
+    /// in every participant's log (validated + key-locked, nothing
+    /// applied); the `Decide` record replicated in the lowest-numbered
+    /// participant group fixes the outcome; phase 2 flushes or discards
+    /// each staged intent exactly once via the txn-id dedup.  A
+    /// participant unreachable during phase 2 resolves later — through
+    /// [`Self::resolve_orphans`] or a reader's intent resolution —
+    /// because the decision record is already durable.
+    fn commit_two_phase(
+        &self,
+        txn_id: u64,
+        commit: &Commit,
+        routed: &[MetaOp],
+        planned: Vec<(i32, usize, Vec<usize>)>,
+        mut outcomes: Vec<OpOutcome>,
+    ) -> Result<Attempt> {
+        let mut by_shard: Vec<(usize, Vec<usize>)> =
+            planned.into_iter().map(|(_, sid, idxs)| (sid, idxs)).collect();
+        by_shard.sort_unstable_by_key(|(sid, _)| *sid);
+        let participants: Vec<u32> = by_shard.iter().map(|(sid, _)| *sid as u32).collect();
+        let coordinator = participants[0];
+
+        // Phase 1: durable intents, in shard order.  Order is free here
+        // — nothing applies until the decision, and the intent locks
+        // keep every staged key unreadable until then.
+        let mut vote_yes = true;
+        let mut abort_cause: Option<Error> = None;
+        for (sid, idxs) in &by_shard {
+            let entry = LogEntry {
+                txn_id,
+                reads: commit
+                    .reads
+                    .iter()
+                    .filter(|(k, _)| self.shard_of(k) == *sid)
+                    .cloned()
+                    .collect(),
+                ops: idxs.iter().map(|&i| routed[i].clone()).collect(),
+                kind: EntryKind::Prepare {
+                    participants: participants.clone(),
+                    coordinator,
+                },
+            };
+            match self.groups[*sid].propose_entry(&entry, true) {
+                Ok(Landed::Voted(Some(shard_outcomes))) => {
+                    for (&i, o) in idxs.iter().zip(shard_outcomes) {
+                        outcomes[i] = o;
+                    }
+                }
+                // A deterministic no-vote (stale reads or a key locked
+                // by another intent, identical on every replica).
+                Ok(Landed::Voted(None)) => vote_yes = false,
+                Ok(Landed::Applied(_)) => {
+                    return Err(Error::CorruptMetadata(format!(
+                        "txn {txn_id} was resolved before its own prepare"
+                    )));
+                }
+                // The group cannot durably stage (quorum gone mid-phase
+                // 1): decide abort so no other participant strands a
+                // phantom entry — the close of ROADMAP gap (a).
+                Err(e) => {
+                    vote_yes = false;
+                    abort_cause = Some(e);
+                }
+            }
+            let phase = CommitPhase::Prepared { shard: *sid as u32 };
+            if self.fire(phase, txn_id) == FaultAction::Abandon {
+                return Err(Self::abandoned(txn_id, phase));
+            }
+            if !vote_yes {
+                break; // further prepares would be pointless
+            }
+        }
+        if vote_yes && self.fire(CommitPhase::AllPrepared, txn_id) == FaultAction::Abandon {
+            return Err(Self::abandoned(txn_id, CommitPhase::AllPrepared));
+        }
+
+        // The decision record: replicated in the coordinator group.
+        // The moment it is chosen there, the transaction's outcome is
+        // fixed cluster-wide (first decision in that log wins).
+        let decide = LogEntry::decide(txn_id, vote_yes);
+        match self.groups[coordinator as usize].propose_entry(&decide, true) {
+            Ok(Landed::Applied(result)) => {
+                // The coordinator is itself a participant: its decide IS
+                // its phase 2.  Record the authoritative outcomes.
+                if let Some(shard_outcomes) = result {
+                    let idxs = &by_shard
+                        .iter()
+                        .find(|(sid, _)| *sid as u32 == coordinator)
+                        .expect("coordinator is a participant")
+                        .1;
+                    for (&i, o) in idxs.iter().zip(shard_outcomes) {
+                        outcomes[i] = o;
+                    }
+                }
+            }
+            Ok(Landed::Voted(_)) => {
+                return Err(Error::CorruptMetadata(format!(
+                    "txn {txn_id}: decision landed as a vote"
+                )));
+            }
+            // The decision could not be replicated (coordinator quorum
+            // gone): the transaction is UNRESOLVED — a minority-accepted
+            // decide may yet be adopted — so intents stay pending and
+            // resolution runs against the healed coordinator group.
+            Err(e) => return Err(abort_cause.unwrap_or(e)),
+        }
+        let phase = CommitPhase::Decided { commit: vote_yes };
+        if self.fire(phase, txn_id) == FaultAction::Abandon {
+            return Err(Self::abandoned(txn_id, phase));
+        }
+
+        // Phase 2: resolve every other participant.  The decision is
+        // durable, so a group unreachable here merely resolves later
+        // (recovery sweep or reader resolution) — its per-op outcomes
+        // below are the vote-time staging, which is exactly what its
+        // eventual commit flush applies.
+        for (sid, idxs) in &by_shard {
+            if *sid as u32 == coordinator {
+                continue;
+            }
+            match self.groups[*sid].propose_entry(&decide, true) {
+                Ok(Landed::Applied(Some(shard_outcomes))) => {
+                    for (&i, o) in idxs.iter().zip(shard_outcomes) {
+                        outcomes[i] = o;
+                    }
+                }
+                // Aborted there, or (Err) unreachable — resolved later.
+                Ok(_) | Err(_) => {}
+            }
+            let phase = CommitPhase::Applied { shard: *sid as u32 };
+            if self.fire(phase, txn_id) == FaultAction::Abandon {
+                return Err(Self::abandoned(txn_id, phase));
+            }
+        }
+        if vote_yes {
+            Ok(Attempt::Done(outcomes))
+        } else {
+            Err(abort_cause.unwrap_or(Error::TxnAborted {
+                reason: format!("txn {txn_id}: a participant voted to abort at prepare"),
+            }))
+        }
     }
 
     /// Full scan of one space from the shard leaders (GC; not
@@ -556,5 +1207,227 @@ mod tests {
         let b = s.alloc_inode_id();
         assert!(a >= 2);
         assert_ne!(a, b);
+    }
+
+    // -----------------------------------------------------------------
+    // Intent-logged 2PC (`meta_2pc` on).
+    // -----------------------------------------------------------------
+
+    fn store_2pc() -> ReplicatedMetaStore {
+        ReplicatedMetaStore::new(
+            4,
+            3,
+            Arc::new(Transport::instant()),
+            LeaseClock::manual(),
+            20,
+        )
+        .two_pc(true)
+    }
+
+    /// Two keys guaranteed to live in different shard groups.
+    fn cross_shard_keys(s: &ReplicatedMetaStore) -> (Key, Key) {
+        let a = skey("a");
+        let b = (0..64)
+            .map(|i| skey(&format!("b{i}")))
+            .find(|k| s.shard_of(k) != s.shard_of(&a))
+            .expect("some key lands on another shard");
+        (a, b)
+    }
+
+    fn put_both(a: &Key, b: &Key) -> Commit {
+        Commit {
+            reads: vec![],
+            ops: vec![
+                MetaOp::Put {
+                    key: a.clone(),
+                    value: Value::U64(1),
+                },
+                MetaOp::Put {
+                    key: b.clone(),
+                    value: Value::U64(2),
+                },
+            ],
+        }
+    }
+
+    /// Install a hook that records the txn id and abandons at `at`.
+    fn abandon_at(
+        s: &ReplicatedMetaStore,
+        at: fn(&CommitPhase) -> bool,
+    ) -> Arc<Mutex<Option<u64>>> {
+        let seen = Arc::new(Mutex::new(None));
+        let tx = seen.clone();
+        s.set_fault_hook(Some(Arc::new(move |phase, txn| {
+            *tx.lock().unwrap() = Some(txn);
+            if at(&phase) {
+                FaultAction::Abandon
+            } else {
+                FaultAction::Continue
+            }
+        })));
+        seen
+    }
+
+    #[test]
+    fn two_pc_multi_shard_commit_applies_everywhere_and_unlocks() {
+        let s = store_2pc();
+        let keys: Vec<Key> = (0..16).map(|i| skey(&format!("k{i}"))).collect();
+        let ops = keys
+            .iter()
+            .map(|k| MetaOp::Put {
+                key: k.clone(),
+                value: Value::U64(7),
+            })
+            .collect();
+        s.commit(&Commit { reads: vec![], ops }, true).unwrap();
+        for k in &keys {
+            assert_eq!(s.get(k, true).unwrap().unwrap().0, Value::U64(7));
+        }
+        assert!(s.pending_intents().is_empty(), "every intent resolved");
+        assert!(s.converged());
+    }
+
+    #[test]
+    fn two_pc_coordinator_death_after_prepare_presumed_aborts_on_read() {
+        let s = store_2pc();
+        let (a, b) = cross_shard_keys(&s);
+        let seen = abandon_at(&s, |p| matches!(p, CommitPhase::AllPrepared));
+        let err = s.commit(&put_both(&a, &b), true).unwrap_err();
+        assert!(matches!(err, Error::TxnAborted { .. }), "{err:?}");
+        s.set_fault_hook(None);
+        let txn = seen.lock().unwrap().expect("hook saw the txn");
+        assert_eq!(s.pending_intents().len(), 2, "both intents orphaned");
+
+        // A plain read of a locked key resolves the orphan: no decision
+        // is recorded, so the resolution writes presumed-abort — and
+        // the read then observes the pre-transaction state.  The intent
+        // carries the participant list, so ONE resolution settles the
+        // sibling group too.
+        assert_eq!(s.get(&a, true).unwrap(), None);
+        let coordinator = (s.shard_of(&a).min(s.shard_of(&b))) as u32;
+        assert_eq!(s.decision_of(coordinator, txn), Some(false));
+        assert!(
+            s.pending_intents().is_empty(),
+            "resolution propagated to every participant"
+        );
+        assert_eq!(s.get(&b, true).unwrap(), None);
+        assert_eq!(s.txn_outcome(s.shard_of(&a) as u32, txn), Some(false));
+        assert_eq!(s.txn_outcome(s.shard_of(&b) as u32, txn), Some(false));
+        assert!(s.converged());
+    }
+
+    #[test]
+    fn two_pc_death_after_decision_commits_via_resolution() {
+        let s = store_2pc();
+        let (a, b) = cross_shard_keys(&s);
+        let seen = abandon_at(&s, |p| matches!(p, CommitPhase::Decided { .. }));
+        let err = s.commit(&put_both(&a, &b), true).unwrap_err();
+        assert!(matches!(err, Error::TxnAborted { .. }), "{err:?}");
+        s.set_fault_hook(None);
+        let txn = seen.lock().unwrap().unwrap();
+
+        // The decision record made it into the coordinator group, so
+        // the transaction IS committed — readers of every touched key
+        // resolve to the new values, never a half state.
+        assert_eq!(s.get(&a, true).unwrap().unwrap().0, Value::U64(1));
+        assert_eq!(s.get(&b, true).unwrap().unwrap().0, Value::U64(2));
+        assert!(s.pending_intents().is_empty());
+        let coordinator = (s.shard_of(&a).min(s.shard_of(&b))) as u32;
+        assert_eq!(s.decision_of(coordinator, txn), Some(true));
+        assert!(s.converged());
+    }
+
+    #[test]
+    fn two_pc_replayed_opposite_decision_cannot_flip_the_outcome() {
+        let s = store_2pc();
+        let (a, b) = cross_shard_keys(&s);
+        let seen = abandon_at(&s, |p| matches!(p, CommitPhase::AllPrepared));
+        let _ = s.commit(&put_both(&a, &b), true).unwrap_err();
+        s.set_fault_hook(None);
+        let txn = seen.lock().unwrap().unwrap();
+        s.resolve_orphans();
+        let coordinator = (s.shard_of(&a).min(s.shard_of(&b))) as u32;
+        assert_eq!(s.decision_of(coordinator, txn), Some(false));
+
+        // Replaying a commit-direction decide (e.g. a partitioned
+        // front-end waking up) must not resurrect the transaction:
+        // the FIRST decision in the coordinator's log won.
+        for g in s.groups() {
+            let _ = g.propose_entry(&LogEntry::decide(txn, true), true);
+        }
+        assert_eq!(s.decision_of(coordinator, txn), Some(false));
+        assert_eq!(s.get(&a, true).unwrap(), None);
+        assert_eq!(s.get(&b, true).unwrap(), None);
+        assert!(s.converged());
+    }
+
+    #[test]
+    fn two_pc_interrupted_commit_does_not_block_later_commits() {
+        let s = store_2pc();
+        let (a, b) = cross_shard_keys(&s);
+        abandon_at(&s, |p| matches!(p, CommitPhase::AllPrepared));
+        let _ = s.commit(&put_both(&a, &b), true).unwrap_err();
+        s.set_fault_hook(None);
+
+        // A later commit touching the same keys finds the orphaned
+        // intents, resolves them (presumed abort), and lands.
+        let c = Commit {
+            reads: vec![],
+            ops: vec![
+                MetaOp::Put {
+                    key: a.clone(),
+                    value: Value::U64(10),
+                },
+                MetaOp::Put {
+                    key: b.clone(),
+                    value: Value::U64(20),
+                },
+            ],
+        };
+        s.commit(&c, true).unwrap();
+        assert_eq!(s.get(&a, true).unwrap().unwrap().0, Value::U64(10));
+        assert_eq!(s.get(&b, true).unwrap().unwrap().0, Value::U64(20));
+        assert!(s.pending_intents().is_empty());
+        assert!(s.converged());
+    }
+
+    #[test]
+    fn two_pc_single_shard_commit_stays_one_phase() {
+        let s = store_2pc();
+        let k = skey("solo");
+        // A single-shard commit proposes a plain Apply entry: no intent,
+        // no decision record.
+        s.commit(&put(&k, Value::U64(9)), true).unwrap();
+        assert_eq!(s.get(&k, true).unwrap().unwrap().0, Value::U64(9));
+        assert!(s.pending_intents().is_empty());
+        let g = s.group_of(&k);
+        assert_eq!(g.decision(1, true).unwrap(), None, "no decision record");
+    }
+
+    #[test]
+    fn two_pc_stale_read_set_aborts_with_no_intents() {
+        let s = store_2pc();
+        let (a, b) = cross_shard_keys(&s);
+        s.commit(&put(&a, Value::U64(1)), true).unwrap();
+        let stale = Commit {
+            reads: vec![(a.clone(), 0)], // stale: a is at version 1
+            ops: vec![
+                MetaOp::Put {
+                    key: a.clone(),
+                    value: Value::U64(5),
+                },
+                MetaOp::Put {
+                    key: b.clone(),
+                    value: Value::U64(5),
+                },
+            ],
+        };
+        assert!(matches!(
+            s.commit(&stale, true),
+            Err(Error::TxnConflict { .. })
+        ));
+        assert_eq!(s.get(&a, true).unwrap().unwrap().0, Value::U64(1));
+        assert_eq!(s.get(&b, true).unwrap(), None);
+        assert!(s.pending_intents().is_empty());
     }
 }

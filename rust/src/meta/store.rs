@@ -325,11 +325,17 @@ impl MetaService {
 
     /// Recover replica `idx` of every shard (chain resync, or Paxos log
     /// replay; best-effort when a group has no quorum to replay from).
+    /// On the Paxos backend, recovery also sweeps for orphaned 2PC
+    /// intents the rejoining replica replayed back in — each resolves
+    /// through its coordinator's decision record (presumed abort when
+    /// none is recorded), so a quorum-loss mid-commit leaves no group
+    /// permanently holding a phantom entry.
     pub fn recover_replica(&self, idx: usize) {
         match &self.backend {
             MetaBackend::Chain(s) => s.recover_replica(idx),
             MetaBackend::Paxos(r) => {
                 let _ = r.recover_replica(idx);
+                let _ = r.resolve_orphans();
             }
         }
     }

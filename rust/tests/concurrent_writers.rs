@@ -3,11 +3,20 @@
 //! concurrent explicit-offset writes to disjoint ranges never lose
 //! updates, and the file length is the monotone max of every writer's
 //! end — with replication > 1 so every operation actually scatters.
+//! Plus the reader-isolation storms: gate-free `readdir`/`get` readers
+//! hammering the metadata plane while mixed create+unlink transactions
+//! commit across shard groups must never observe an intermediate state
+//! (a namespace root resolving to a referent the same transaction
+//! removed or has not yet published).
 
+use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::Arc;
 use wtf::cluster::Cluster;
 use wtf::config::Config;
-use wtf::net::LinkModel;
+use wtf::coordinator::lease::LeaseClock;
+use wtf::meta::{MetaOp, MetaTxn, ReplicatedMetaStore};
+use wtf::net::{LinkModel, Transport};
+use wtf::types::{Inode, Key, Value};
 
 fn cluster_r3() -> Cluster {
     let mut cfg = Config::test(); // 4 KB regions, 4 servers
@@ -346,6 +355,382 @@ fn cached_reader_storm_with_disjoint_overwrites_is_never_torn() {
         assert!(stripe[0] != 0, "stripe {i} never written");
         assert!(stripe.iter().all(|&b| b == stripe[0]), "stripe {i} torn");
     }
+}
+
+// ---------------------------------------------------------------------
+// Reader isolation under mixed create+unlink transactions.
+//
+// The oracle is the one cross-key invariant sequential gate-free reads
+// CAN soundly assert (single-key reads are linearizable and monotone;
+// names and inode ids are never reused): if a reader resolves a
+// namespace root (a path entry or a directory entry) and then finds its
+// referent inode ABSENT, re-reading the root must show it gone too.
+// "Root still present, referent deleted" can only be a half-applied
+// transaction — the intermediate state the entry holds (direct path)
+// and the intent locks (`meta_2pc`) both exist to make unobservable.
+// ---------------------------------------------------------------------
+
+fn mixed_namespace_storm(cfg: Config) {
+    const WRITERS: usize = 3;
+    const ROUNDS: usize = 24;
+    let cl = Arc::new(Cluster::builder().config(cfg).build().unwrap());
+    let c = cl.client();
+    c.mkdir("/d").unwrap();
+    let d_id = c.lookup("/d").unwrap();
+    let done = Arc::new(AtomicBool::new(false));
+
+    // Each writer ping-pongs one logical file through a chain of fresh
+    // names: round r commits ONE metadata transaction that creates
+    // /d/w{w}-{r+1} (path + inode + direntry) and unlinks /d/w{w}-{r}
+    // (all three removed) — namespace inserts and removes mixed, spread
+    // across shard groups by key hash.
+    let writers: Vec<_> = (0..WRITERS)
+        .map(|w| {
+            let cl = cl.clone();
+            std::thread::spawn(move || {
+                let meta = cl.meta().clone();
+                let seed_id = meta.alloc_inode_id();
+                let mut t = MetaTxn::new(meta.clone());
+                t.push(MetaOp::PathInsert {
+                    key: Key::path(format!("/d/w{w}-0")),
+                    inode: seed_id,
+                    expect_absent: true,
+                });
+                t.push(MetaOp::Put {
+                    key: Key::inode(seed_id),
+                    value: Value::Inode(Inode::new_file(seed_id, 0o644, 1)),
+                });
+                t.push(MetaOp::DirInsert {
+                    key: Key::dir(d_id),
+                    name: format!("w{w}-0"),
+                    inode: seed_id,
+                    expect_absent: true,
+                });
+                t.commit().unwrap();
+                let mut old_id = seed_id;
+                for r in 0..ROUNDS {
+                    let new_id = meta.alloc_inode_id();
+                    let mut t = MetaTxn::new(meta.clone());
+                    t.push(MetaOp::PathInsert {
+                        key: Key::path(format!("/d/w{w}-{}", r + 1)),
+                        inode: new_id,
+                        expect_absent: true,
+                    });
+                    t.push(MetaOp::Put {
+                        key: Key::inode(new_id),
+                        value: Value::Inode(Inode::new_file(new_id, 0o644, 1)),
+                    });
+                    t.push(MetaOp::DirInsert {
+                        key: Key::dir(d_id),
+                        name: format!("w{w}-{}", r + 1),
+                        inode: new_id,
+                        expect_absent: true,
+                    });
+                    t.push(MetaOp::Delete {
+                        key: Key::path(format!("/d/w{w}-{r}")),
+                    });
+                    t.push(MetaOp::Delete {
+                        key: Key::inode(old_id),
+                    });
+                    t.push(MetaOp::DirRemove {
+                        key: Key::dir(d_id),
+                        name: format!("w{w}-{r}"),
+                    });
+                    t.commit().unwrap();
+                    old_id = new_id;
+                }
+            })
+        })
+        .collect();
+
+    let readers: Vec<_> = (0..2)
+        .map(|_| {
+            let cl = cl.clone();
+            let done = done.clone();
+            std::thread::spawn(move || {
+                let meta = cl.meta().clone();
+                let c = cl.client();
+                let mut probes = 0u64;
+                loop {
+                    let finished = done.load(Ordering::Relaxed);
+                    // readdir oracle: every listed entry must resolve,
+                    // or vanish from an immediate re-list.
+                    for (name, ino) in c.readdir("/d").unwrap() {
+                        probes += 1;
+                        if meta.get_checked(&Key::inode(ino)).unwrap().0.is_none() {
+                            let still = c
+                                .readdir("/d")
+                                .unwrap()
+                                .into_iter()
+                                .any(|(n, i)| n == name && i == ino);
+                            assert!(
+                                !still,
+                                "intermediate state: direntry {name} still lists \
+                                 deleted inode {ino}"
+                            );
+                        }
+                    }
+                    // path-map oracle over the whole name universe.
+                    for w in 0..WRITERS {
+                        for r in 0..=ROUNDS {
+                            let pkey = Key::path(format!("/d/w{w}-{r}"));
+                            let id = match meta.get_checked(&pkey).unwrap().0 {
+                                Some(Value::PathEntry(id)) => id,
+                                _ => continue,
+                            };
+                            probes += 1;
+                            if meta.get_checked(&Key::inode(id)).unwrap().0.is_some() {
+                                continue;
+                            }
+                            let again = matches!(
+                                meta.get_checked(&pkey).unwrap().0,
+                                Some(Value::PathEntry(i2)) if i2 == id
+                            );
+                            assert!(
+                                !again,
+                                "intermediate state: path {pkey:?} still resolves \
+                                 to deleted inode {id}"
+                            );
+                        }
+                    }
+                    if finished {
+                        return probes;
+                    }
+                }
+            })
+        })
+        .collect();
+
+    for w in writers {
+        w.join().unwrap();
+    }
+    done.store(true, Ordering::Relaxed);
+    for r in readers {
+        assert!(r.join().unwrap() > 0, "reader probed nothing");
+    }
+
+    // Final state: each writer's last name, resolving to a live inode.
+    let entries = c.readdir("/d").unwrap();
+    assert_eq!(entries.len(), WRITERS, "{entries:?}");
+    for w in 0..WRITERS {
+        assert!(c.exists(&format!("/d/w{w}-{ROUNDS}")));
+    }
+    let r = cl.meta().replicated_store().expect("paxos backend");
+    assert!(r.pending_intents().is_empty(), "no intent outlives the storm");
+    assert!(r.converged());
+}
+
+#[test]
+fn mixed_create_unlink_storm_direct_path_holds_protect_readers() {
+    mixed_namespace_storm(Config::replicated_test());
+}
+
+#[test]
+fn mixed_create_unlink_storm_2pc_intents_protect_readers() {
+    mixed_namespace_storm(Config::replicated_2pc_test());
+}
+
+/// The unorderable shape, forced: both path keys co-located in ONE
+/// group (so its entry mixes a namespace insert and a remove — no
+/// proposal order can protect it) with both inode keys in ANOTHER.
+/// Only the entry hold (direct path) or the intent locks (2PC) keep
+/// the mid-commit state invisible; this is the regression test for the
+/// pre-existing reader-isolation hole.
+fn colocated_mixed_entry_storm(two_pc: bool) {
+    const ROUNDS: usize = 160;
+    let store = Arc::new(
+        ReplicatedMetaStore::new(
+            4,
+            3,
+            Arc::new(Transport::instant()),
+            LeaseClock::auto(),
+            25,
+        )
+        .two_pc(two_pc),
+    );
+    // A pool of path keys on one group...
+    let p_shard = store.group_of(&Key::path("/m0")).shard();
+    let paths: Vec<Key> = (0..40_000u64)
+        .map(|j| Key::path(format!("/m{j}")))
+        .filter(|k| store.group_of(k).shard() == p_shard)
+        .take(ROUNDS + 1)
+        .collect();
+    assert_eq!(paths.len(), ROUNDS + 1);
+    // ...and a pool of inode keys on a different group.
+    let i_shard = (2u64..)
+        .map(|id| store.group_of(&Key::inode(id)).shard())
+        .find(|s| *s != p_shard)
+        .unwrap();
+    let inodes: Vec<(u64, Key)> = (2..200_000u64)
+        .map(|id| (id, Key::inode(id)))
+        .filter(|(_, k)| store.group_of(k).shard() == i_shard)
+        .take(ROUNDS + 1)
+        .collect();
+    assert_eq!(inodes.len(), ROUNDS + 1);
+
+    // Seed round 0.
+    let seed = wtf::meta::Commit {
+        reads: vec![],
+        ops: vec![
+            MetaOp::PathInsert {
+                key: paths[0].clone(),
+                inode: inodes[0].0,
+                expect_absent: true,
+            },
+            MetaOp::Put {
+                key: inodes[0].1.clone(),
+                value: Value::Inode(Inode::new_file(inodes[0].0, 0o644, 1)),
+            },
+        ],
+    };
+    store.commit(&seed, true).unwrap();
+
+    let done = Arc::new(AtomicBool::new(false));
+    let writer = {
+        let store = store.clone();
+        let paths = paths.clone();
+        let inodes = inodes.clone();
+        std::thread::spawn(move || {
+            for r in 0..ROUNDS {
+                let c = wtf::meta::Commit {
+                    reads: vec![],
+                    ops: vec![
+                        MetaOp::PathInsert {
+                            key: paths[r + 1].clone(),
+                            inode: inodes[r + 1].0,
+                            expect_absent: true,
+                        },
+                        MetaOp::Put {
+                            key: inodes[r + 1].1.clone(),
+                            value: Value::Inode(Inode::new_file(
+                                inodes[r + 1].0,
+                                0o644,
+                                1,
+                            )),
+                        },
+                        MetaOp::Delete {
+                            key: paths[r].clone(),
+                        },
+                        MetaOp::Delete {
+                            key: inodes[r].1.clone(),
+                        },
+                    ],
+                };
+                store.commit(&c, true).unwrap();
+            }
+        })
+    };
+    let reader = {
+        let store = store.clone();
+        let paths = paths.clone();
+        let done = done.clone();
+        std::thread::spawn(move || {
+            let mut probes = 0u64;
+            loop {
+                let finished = done.load(Ordering::Relaxed);
+                for p in &paths {
+                    let id = match store.get(p, true).unwrap() {
+                        Some((Value::PathEntry(id), _)) => id,
+                        _ => continue,
+                    };
+                    probes += 1;
+                    if store.get(&Key::inode(id), true).unwrap().is_some() {
+                        continue;
+                    }
+                    // Referent gone: with atomic visibility the root
+                    // must be gone too on an immediate re-read.
+                    let again = matches!(
+                        store.get(p, true).unwrap(),
+                        Some((Value::PathEntry(i2), _)) if i2 == id
+                    );
+                    assert!(
+                        !again,
+                        "mid-commit state visible: {p:?} still maps to \
+                         deleted inode {id} (two_pc={two_pc})"
+                    );
+                }
+                if finished {
+                    return probes;
+                }
+            }
+        })
+    };
+    writer.join().unwrap();
+    done.store(true, Ordering::Relaxed);
+    assert!(reader.join().unwrap() > 0);
+    // End state: only the last (path, inode) pair survives.
+    assert!(matches!(
+        store.get(&paths[ROUNDS], true).unwrap(),
+        Some((Value::PathEntry(_), _))
+    ));
+    assert_eq!(store.get(&paths[ROUNDS - 1], true).unwrap(), None);
+    assert!(store.pending_intents().is_empty());
+    assert!(store.converged());
+}
+
+#[test]
+fn colocated_mixed_entry_direct_path_entry_hold_protects_readers() {
+    colocated_mixed_entry_storm(false);
+}
+
+#[test]
+fn colocated_mixed_entry_2pc_intent_locks_protect_readers() {
+    colocated_mixed_entry_storm(true);
+}
+
+#[test]
+fn rename_churn_is_atomic_to_other_clients() {
+    // The client-level face of the same contract: rename is one mixed
+    // insert+remove transaction, and another client's reads resolve
+    // the file at SOME name with a live inode at every probe.
+    let cl = Arc::new(
+        Cluster::builder()
+            .config(Config::replicated_2pc_test())
+            .build()
+            .unwrap(),
+    );
+    let c = cl.client();
+    c.mkdir("/r").unwrap();
+    let mut fd = c.create("/r/f-0").unwrap();
+    c.write(&mut fd, b"payload").unwrap();
+    let inode = fd.inode();
+    const MOVES: usize = 40;
+    let mover = {
+        let cl = cl.clone();
+        std::thread::spawn(move || {
+            let c = cl.client();
+            for r in 0..MOVES {
+                c.rename(&format!("/r/f-{r}"), &format!("/r/f-{}", r + 1))
+                    .unwrap();
+            }
+        })
+    };
+    let prober = {
+        let cl = cl.clone();
+        std::thread::spawn(move || {
+            let meta = cl.meta().clone();
+            let c = cl.client();
+            for _ in 0..200 {
+                // The direntry oracle: whatever name the file currently
+                // lists under, its inode is live (rename never drops it).
+                for (name, ino) in c.readdir("/r").unwrap() {
+                    assert_eq!(ino, inode, "foreign entry {name}");
+                    assert!(
+                        meta.get_checked(&Key::inode(ino)).unwrap().0.is_some(),
+                        "direntry {name} dangles"
+                    );
+                }
+            }
+        })
+    };
+    mover.join().unwrap();
+    prober.join().unwrap();
+    // Exactly one name remains, the data moved with it.
+    let entries = c.readdir("/r").unwrap();
+    assert_eq!(entries.len(), 1);
+    let fd = c.open(&format!("/r/f-{MOVES}")).unwrap();
+    assert_eq!(c.read_at(&fd, 0, 7).unwrap(), b"payload");
+    assert!(cl.meta().replicated_store().unwrap().converged());
 }
 
 #[test]

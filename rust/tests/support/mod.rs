@@ -1,0 +1,294 @@
+//! Shared test support: the deterministic fault-schedule driver for the
+//! cross-group 2PC suites.
+//!
+//! A [`Schedule`] is a list of `(At, Fault)` steps.  The driver installs
+//! a fault hook on a [`ReplicatedMetaStore`] and runs one commit; each
+//! time the commit passes a named protocol instant ([`At::matches`] a
+//! [`CommitPhase`]), the matching steps fire — crashing replica quorums
+//! and/or abandoning the coordinating front-end at exactly that point.
+//! Schedules are plain data, so the property suite derives them from a
+//! seeded [`Rng`] and every failure replays from its printed seed.
+//!
+//! After a run, [`heal_all`] rejoins every crashed replica and
+//! [`assert_all_or_nothing`] checks the §3 contract: every participant
+//! settles to the decision record's outcome (presumed abort when the
+//! coordinator died before deciding), no intent stays pending, no
+//! duplicate applies, and all live replicas converge.
+
+#![allow(dead_code)] // each test crate uses a subset of this toolkit
+
+use std::sync::{Arc, Mutex};
+use wtf::coordinator::lease::LeaseClock;
+use wtf::error::Result;
+use wtf::meta::{Commit, CommitPhase, FaultAction, MetaOp, OpOutcome, ReplicatedMetaStore};
+use wtf::net::Transport;
+use wtf::types::{Key, SliceData, SlicePtr, Space};
+use wtf::util::Rng;
+
+/// Replicas per shard group in driver-built stores (quorum = 2).
+pub const GROUP_REPLICAS: usize = 3;
+
+/// Base seed for the seeded suites, taken from the CI matrix via
+/// `WTF_TEST_SEED` (0 when unset).  Failures print this base seed (and
+/// the case number derived from it), so re-exporting the printed
+/// `WTF_TEST_SEED` value replays the exact failing schedule.
+pub fn base_seed() -> u64 {
+    std::env::var("WTF_TEST_SEED")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(0)
+}
+
+/// A fresh `shards`-group, 3-replica, manually-clocked replicated store
+/// with the intent-logged 2PC enabled — the fault-schedule testbed
+/// (manual clock: lease waits advance deterministically, never block).
+pub fn store_2pc(shards: u32) -> Arc<ReplicatedMetaStore> {
+    Arc::new(
+        ReplicatedMetaStore::new(
+            shards,
+            GROUP_REPLICAS as u8,
+            Arc::new(Transport::instant()),
+            LeaseClock::manual(),
+            20,
+        )
+        .two_pc(true),
+    )
+}
+
+/// Named instants of the 2PC protocol a scripted fault can fire at
+/// (matched against the store's [`CommitPhase`] events).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum At {
+    /// Gates held, ops staged, nothing proposed.
+    Staged,
+    /// This shard's `Prepare` intent just landed in its group's log.
+    Prepared(u32),
+    /// Every participant's intent is logged; no decision yet.
+    AllPrepared,
+    /// The decision record is replicated in the coordinator group.
+    Decided,
+    /// Phase 2 just resolved this (non-coordinator) shard.
+    Applied(u32),
+}
+
+impl At {
+    pub fn matches(self, phase: &CommitPhase) -> bool {
+        match (self, phase) {
+            (At::Staged, CommitPhase::Staged) => true,
+            (At::Prepared(s), CommitPhase::Prepared { shard }) => s == *shard,
+            (At::AllPrepared, CommitPhase::AllPrepared) => true,
+            (At::Decided, CommitPhase::Decided { .. }) => true,
+            (At::Applied(s), CommitPhase::Applied { shard }) => s == *shard,
+            _ => false,
+        }
+    }
+}
+
+/// What a scripted step does when its instant fires.
+#[derive(Clone, Copy, Debug)]
+pub enum Fault {
+    /// Crash the `count` highest-numbered replicas of `shard`'s group
+    /// (count 2 of 3 = quorum loss; the lowest replica stays alive so
+    /// the group is recoverable by log replay and keeps a leader view).
+    Kill { shard: u32, count: usize },
+    /// The coordinating front-end dies right here: the commit call
+    /// returns an error with its gates released and any intents
+    /// orphaned, exactly like a crashed client machine.
+    Abandon,
+}
+
+/// A deterministic fault schedule: steps fire (and are consumed) in the
+/// order their instants occur during the commit.
+pub type Schedule = Vec<(At, Fault)>;
+
+/// Run `commit` against `store` under `schedule`.  Returns the commit's
+/// result and the transaction id the fault hook observed (0 when the
+/// commit never reached the staging hook).
+pub fn run_scheduled_commit(
+    store: &Arc<ReplicatedMetaStore>,
+    schedule: Schedule,
+    commit: &Commit,
+) -> (Result<Vec<OpOutcome>>, u64) {
+    let seen_txn = Arc::new(Mutex::new(0u64));
+    let remaining = Arc::new(Mutex::new(schedule));
+    // The hook lives inside the store; a weak ref avoids an Arc cycle.
+    let weak = Arc::downgrade(store);
+    let hook_txn = seen_txn.clone();
+    store.set_fault_hook(Some(Arc::new(move |phase, txn| {
+        *hook_txn.lock().unwrap() = txn;
+        let mut rem = remaining.lock().unwrap();
+        let mut action = FaultAction::Continue;
+        let mut i = 0;
+        while i < rem.len() {
+            if rem[i].0.matches(&phase) {
+                let (_, fault) = rem.remove(i);
+                match fault {
+                    Fault::Kill { shard, count } => {
+                        if let Some(s) = weak.upgrade() {
+                            let group = &s.groups()[shard as usize];
+                            for r in (GROUP_REPLICAS - count)..GROUP_REPLICAS {
+                                group.kill_replica(r);
+                            }
+                        }
+                    }
+                    Fault::Abandon => action = FaultAction::Abandon,
+                }
+            } else {
+                i += 1;
+            }
+        }
+        action
+    })));
+    let result = store.commit(commit, true);
+    store.set_fault_hook(None);
+    let txn = *seen_txn.lock().unwrap();
+    (result, txn)
+}
+
+/// Rejoin every crashed replica of every group by deterministic log
+/// replay (best-effort, like the deployment's recovery sweep), then
+/// resolve any orphaned intents the replay brought back.
+pub fn heal_all(store: &ReplicatedMetaStore) {
+    for idx in 0..GROUP_REPLICAS {
+        let _ = store.recover_replica(idx);
+    }
+    store.resolve_orphans();
+}
+
+/// The all-or-nothing agreement assertion: after healing, every
+/// participant must settle to the coordinator's decision record —
+/// `Some(true)` means every participant applied, anything else means no
+/// participant applied — with no pending intents and converged
+/// replicas.  Returns the decision for outcome-specific assertions.
+pub fn assert_all_or_nothing(
+    store: &ReplicatedMetaStore,
+    txn_id: u64,
+    participants: &[u32],
+) -> Option<bool> {
+    store.resolve_orphans();
+    assert!(
+        store.pending_intents().is_empty(),
+        "intents left pending after resolution: {:?}",
+        store.pending_intents()
+    );
+    let coordinator = *participants.iter().min().expect("participants nonempty");
+    let decision = store.decision_of(coordinator, txn_id);
+    for &s in participants {
+        let outcome = store.txn_outcome(s, txn_id);
+        match decision {
+            Some(true) => assert_eq!(
+                outcome,
+                Some(true),
+                "shard {s} did not apply committed txn {txn_id}"
+            ),
+            Some(false) => assert_ne!(
+                outcome,
+                Some(true),
+                "shard {s} applied txn {txn_id} against an abort decision"
+            ),
+            None => assert_ne!(
+                outcome,
+                Some(true),
+                "shard {s} applied txn {txn_id} with no decision recorded"
+            ),
+        }
+    }
+    assert!(store.converged(), "live replicas diverged");
+    decision
+}
+
+/// `n` keys in `space` guaranteed to live in `n` distinct shard groups.
+pub fn keys_on_distinct_groups(store: &ReplicatedMetaStore, space: Space, n: usize) -> Vec<Key> {
+    let mut found: Vec<(u32, Key)> = Vec::new();
+    for i in 0..10_000 {
+        let k = Key::new(space, format!("fs{i}"));
+        let shard = store.group_of(&k).shard();
+        if !found.iter().any(|(s, _)| *s == shard) {
+            found.push((shard, k));
+            if found.len() == n {
+                break;
+            }
+        }
+    }
+    assert_eq!(found.len(), n, "store has fewer than {n} shard groups");
+    found.into_iter().map(|(_, k)| k).collect()
+}
+
+/// The participant shard ids a commit over `keys` touches, ascending.
+pub fn participants_of(store: &ReplicatedMetaStore, keys: &[Key]) -> Vec<u32> {
+    let mut p: Vec<u32> = keys.iter().map(|k| store.group_of(k).shard()).collect();
+    p.sort_unstable();
+    p.dedup();
+    p
+}
+
+/// A commit appending one 8-byte extent to every key's region — the
+/// duplicate-apply canary: a committed run leaves every region at
+/// eof 8 / version 1; any replayed apply would double both.
+pub fn append_commit(keys: &[Key]) -> Commit {
+    Commit {
+        reads: vec![],
+        ops: keys
+            .iter()
+            .map(|k| MetaOp::RegionAppendEof {
+                key: k.clone(),
+                data: SliceData::Stored(vec![SlicePtr {
+                    server: 1,
+                    backing: 0,
+                    offset: 0,
+                    len: 8,
+                }]),
+                len: 8,
+                cap: 1 << 20,
+            })
+            .collect(),
+    }
+}
+
+/// Assert the exactly-once outcome of an [`append_commit`] after its
+/// transaction resolved: committed ⇒ every region is at eof 8, version
+/// 1 (applied once, never twice); aborted ⇒ every key is untouched.
+pub fn assert_append_exactly_once(
+    store: &ReplicatedMetaStore,
+    keys: &[Key],
+    committed: bool,
+) {
+    for k in keys {
+        let got = store.get(k, true).unwrap();
+        if committed {
+            let (v, ver) = got.expect("committed append missing");
+            assert_eq!(v.as_region().unwrap().eof, 8, "applied other than once");
+            assert_eq!(ver, 1, "version bumped more than once");
+        } else {
+            assert!(got.is_none(), "aborted append left state behind at {k:?}");
+        }
+    }
+}
+
+/// Derive a random-but-reproducible schedule for one commit over
+/// `participants`: at each protocol instant, maybe crash a random
+/// participant's replicas (1 = follower loss, 2 = quorum loss) or kill
+/// the coordinating front-end (after which nothing later can fire).
+pub fn random_schedule(rng: &mut Rng, participants: &[u32]) -> Schedule {
+    let mut points: Vec<At> = vec![At::Staged];
+    points.extend(participants.iter().map(|&p| At::Prepared(p)));
+    points.push(At::AllPrepared);
+    points.push(At::Decided);
+    points.extend(participants.iter().map(|&p| At::Applied(p)));
+    let mut steps = Schedule::new();
+    for at in points {
+        match rng.next_below(6) {
+            0 => {
+                let victim = participants[rng.next_below(participants.len() as u64) as usize];
+                let count = 1 + rng.next_below(2) as usize;
+                steps.push((at, Fault::Kill { shard: victim, count }));
+            }
+            1 => {
+                steps.push((at, Fault::Abandon));
+                break; // the dead front-end reaches no later instant
+            }
+            _ => {}
+        }
+    }
+    steps
+}
