@@ -1,0 +1,336 @@
+//! Write-path symmetry sweep (PR 6): Paxos group commit x single-scatter
+//! prepare batching x client write-behind.
+//!
+//! Three independent measurements, each against its unbatched seed:
+//!
+//! * `commit-storm`: N=8 concurrent single-shard commits.  With group
+//!   commit on, the concurrently-arriving proposals pack into shared
+//!   `Batch` log entries — fewer Paxos commit rounds and fewer
+//!   Paxos-plane envelopes for the same N durable transactions.
+//! * `2pc-cross-shard`: one two-participant 2PC commit.  With prepare
+//!   batching on, each phase's per-group proposals collapse into shared
+//!   transport scatters (envelope count identical by construction —
+//!   the win is scatter/wakeup rounds, not wire bytes).
+//! * `append-burst`: 8 client appends to one file.  With write-behind
+//!   on, the queue aims ONCE for the whole burst (one fresh inode fetch
+//!   plus one flush fence) where the synchronous path pays a fresh
+//!   fetch per append.
+//!
+//! Set `WTF_BENCH_WRITE_JSON=<path>` to emit the results as JSON
+//! (committed as `BENCH_write_path.json` for the CI regression gate).
+
+use std::sync::{Arc, Barrier};
+use std::time::Duration;
+use wtf::bench::Bench;
+use wtf::cluster::Cluster;
+use wtf::config::Config;
+use wtf::coordinator::lease::LeaseClock;
+use wtf::meta::{Commit, MetaOp, ReplicatedMetaStore};
+use wtf::net::{Plane, Transport};
+use wtf::types::{Key, SliceData, SlicePtr, Space};
+
+const STORM: usize = 8;
+
+struct Row {
+    row: &'static str,
+    config: &'static str,
+    rounds: u64,
+    envelopes: u64,
+    scatters: u64,
+    mean_ns: f64,
+}
+
+fn append_commit(key: &Key) -> Commit {
+    Commit {
+        reads: vec![],
+        ops: vec![MetaOp::RegionAppendEof {
+            key: key.clone(),
+            data: SliceData::Stored(vec![SlicePtr {
+                server: 1,
+                backing: 0,
+                offset: 0,
+                len: 8,
+            }]),
+            len: 8,
+            cap: 1 << 30,
+        }],
+    }
+}
+
+/// `n` keys guaranteed to land on ONE shard group (single-shard commits
+/// are what group commit can pack).
+fn same_shard_keys(store: &ReplicatedMetaStore, n: usize, tag: &str) -> Vec<Key> {
+    let mut found: Vec<Key> = Vec::new();
+    let mut shard = None;
+    for i in 0..100_000 {
+        let k = Key::new(Space::Region, format!("{tag}{i}"));
+        let s = store.group_of(&k).shard();
+        match shard {
+            None => {
+                shard = Some(s);
+                found.push(k);
+            }
+            Some(t) if t == s => found.push(k),
+            _ => {}
+        }
+        if found.len() == n {
+            break;
+        }
+    }
+    assert_eq!(found.len(), n, "could not find {n} same-shard keys");
+    found
+}
+
+/// Two keys on distinct shard groups (a cross-shard 2PC commit).
+fn cross_shard_keys(store: &ReplicatedMetaStore, tag: &str) -> Vec<Key> {
+    let mut found: Vec<(u32, Key)> = Vec::new();
+    for i in 0..100_000 {
+        let k = Key::new(Space::Region, format!("{tag}{i}"));
+        let s = store.group_of(&k).shard();
+        if !found.iter().any(|(t, _)| *t == s) {
+            found.push((s, k));
+            if found.len() == 2 {
+                break;
+            }
+        }
+    }
+    found.into_iter().map(|(_, k)| k).collect()
+}
+
+fn storm_store(batched: bool) -> (Arc<ReplicatedMetaStore>, Arc<Transport>) {
+    let transport = Arc::new(Transport::instant());
+    let mut store = ReplicatedMetaStore::new(4, 3, transport.clone(), LeaseClock::manual(), 20)
+        .two_pc(true);
+    if batched {
+        store = store
+            .group_commit(Duration::from_millis(2), STORM)
+            .prepare_batching(true);
+    }
+    (Arc::new(store), transport)
+}
+
+/// One storm pass: N threads, one single-shard commit each, released by
+/// a barrier so the arrivals genuinely overlap.
+fn run_storm(store: &Arc<ReplicatedMetaStore>, keys: &[Key]) {
+    let barrier = Arc::new(Barrier::new(keys.len()));
+    let threads: Vec<_> = keys
+        .iter()
+        .cloned()
+        .map(|k| {
+            let store = store.clone();
+            let barrier = barrier.clone();
+            std::thread::spawn(move || {
+                barrier.wait();
+                store.commit(&append_commit(&k), true).unwrap();
+            })
+        })
+        .collect();
+    for t in threads {
+        t.join().unwrap();
+    }
+}
+
+fn commit_storm(config: &'static str, batched: bool) -> Row {
+    let (store, transport) = storm_store(batched);
+    let keys = same_shard_keys(&store, STORM, "storm");
+    // Warm the group: elections and first-proposal prepares happen
+    // here, not inside the measured window.
+    store.commit(&append_commit(&keys[0]), true).unwrap();
+
+    // One instrumented storm for rounds + Paxos-plane envelopes...
+    let r0 = store.commit_rounds();
+    let e0 = transport.envelopes_sent_on(Plane::Paxos);
+    run_storm(&store, &keys);
+    let rounds = store.commit_rounds() - r0;
+    let envelopes = transport.envelopes_sent_on(Plane::Paxos) - e0;
+    assert!(store.converged(), "storm diverged [{config}]");
+
+    // ...then timed passes.
+    let s = Bench::new(format!("write_path/commit-storm-x{STORM} [{config}]"))
+        .warmup(1)
+        .iters(8)
+        .run(|| run_storm(&store, &keys));
+    println!("  └─ storm rounds: {rounds}, paxos envelopes: {envelopes}");
+    Row {
+        row: "commit-storm",
+        config,
+        rounds,
+        envelopes,
+        scatters: 0,
+        mean_ns: s.mean,
+    }
+}
+
+fn two_pc_commit(config: &'static str, batched: bool) -> Row {
+    let transport = Arc::new(Transport::instant());
+    let mut store = ReplicatedMetaStore::new(4, 3, transport.clone(), LeaseClock::manual(), 20)
+        .two_pc(true);
+    if batched {
+        store = store.prepare_batching(true);
+    }
+    let store = Arc::new(store);
+    let keys = cross_shard_keys(&store, "xs");
+    // Warm BOTH participant groups: a fresh group's first proposal
+    // takes the slow (prepare) path, which isn't what this measures.
+    for k in &keys {
+        store.commit(&append_commit(k), true).unwrap();
+    }
+
+    let commit = Commit {
+        reads: vec![],
+        ops: keys
+            .iter()
+            .map(|k| {
+                let mut one = append_commit(k);
+                one.ops.remove(0)
+            })
+            .collect(),
+    };
+    let e0 = transport.envelopes_sent_on(Plane::Paxos);
+    let s0 = transport.scatters_sent();
+    store.commit(&commit, true).unwrap();
+    let envelopes = transport.envelopes_sent_on(Plane::Paxos) - e0;
+    let scatters = transport.scatters_sent() - s0;
+
+    let s = Bench::new(format!("write_path/2pc-cross-shard [{config}]"))
+        .warmup(2)
+        .iters(16)
+        .run(|| store.commit(&commit, true).unwrap());
+    println!("  └─ 2pc scatters: {scatters}, paxos envelopes: {envelopes}");
+    Row {
+        row: "2pc-cross-shard",
+        config,
+        rounds: 0,
+        envelopes,
+        scatters,
+        mean_ns: s.mean,
+    }
+}
+
+fn append_burst(config: &'static str, write_behind: bool) -> Row {
+    let mut cfg = Config::replicated_test();
+    cfg.write_behind = write_behind;
+    let cl = Cluster::builder().config(cfg).build().unwrap();
+    let c = cl.client();
+    let fd = c.create("/burst").unwrap();
+    let payload = [7u8; 256];
+    // Warm (and drain, so the instrumented window is only the burst).
+    c.append_bytes(&fd, &payload).unwrap();
+    c.flush().unwrap();
+
+    let e0 = cl.transport_envelopes_on(Plane::Meta);
+    for _ in 0..8 {
+        c.append_bytes(&fd, &payload).unwrap();
+    }
+    c.flush().unwrap();
+    let envelopes = cl.transport_envelopes_on(Plane::Meta) - e0;
+
+    let s = Bench::new(format!("write_path/append-burst-x8 [{config}]"))
+        .warmup(1)
+        .iters(8)
+        .run(|| {
+            for _ in 0..8 {
+                c.append_bytes(&fd, &payload).unwrap();
+            }
+            c.flush().unwrap();
+        });
+    println!("  └─ burst meta envelopes: {envelopes}");
+    Row {
+        row: "append-burst",
+        config,
+        rounds: 0,
+        envelopes,
+        scatters: 0,
+        mean_ns: s.mean,
+    }
+}
+
+/// Emit `BENCH_write_path.json` (status "measured"); running this bench
+/// with `WTF_BENCH_WRITE_JSON` set replaces the committed modeled
+/// placeholder with real rows.
+fn write_json(path: &str, rows: &[Row]) {
+    let find = |row: &str, config: &str| {
+        rows.iter()
+            .find(|r| r.row == row && r.config == config)
+            .unwrap_or_else(|| panic!("write-path sweep produced no row {row} [{config}]"))
+    };
+    let storm_seed = find("commit-storm", "seed");
+    let storm_batched = find("commit-storm", "group-commit");
+    let rounds_ratio = storm_seed.rounds as f64 / storm_batched.rounds.max(1) as f64;
+    let envelope_ratio =
+        storm_seed.envelopes as f64 / storm_batched.envelopes.max(1) as f64;
+    let scatter_ratio = find("2pc-cross-shard", "seed").scatters as f64
+        / find("2pc-cross-shard", "prepare-batching").scatters.max(1) as f64;
+    let meta_ratio = find("append-burst", "seed").envelopes as f64
+        / find("append-burst", "write-behind").envelopes.max(1) as f64;
+    let mut out = String::from("{\n  \"bench\": \"write_path/symmetry\",\n");
+    out.push_str(
+        "  \"description\": \"Write path: Paxos group commit (N=8 same-shard commit \
+         storm, rounds + Paxos-plane envelopes per storm), single-scatter 2PC prepare \
+         batching (transport scatters per cross-shard commit; envelopes identical by \
+         construction), and client write-behind (metadata-plane envelopes per 8-append \
+         burst; one hoisted aim fetch per queue). Produced by `cargo bench --bench \
+         write_path` with WTF_BENCH_WRITE_JSON set; see rust/benches/write_path.rs.\",\n",
+    );
+    out.push_str("  \"status\": \"measured\",\n  \"rows\": [\n");
+    for (i, r) in rows.iter().enumerate() {
+        out.push_str(&format!(
+            "    {{\"row\": \"{}\", \"config\": \"{}\", \"rounds\": {}, \"envelopes\": {}, \
+             \"scatters\": {}, \"mean_ns\": {:.0}}}{}\n",
+            r.row,
+            r.config,
+            r.rounds,
+            r.envelopes,
+            r.scatters,
+            r.mean_ns,
+            if i + 1 < rows.len() { "," } else { "" }
+        ));
+    }
+    out.push_str(&format!(
+        "  ],\n  \"commit_rounds_ratio_storm\": {rounds_ratio:.3},\n  \
+         \"envelope_ratio_batched\": {envelope_ratio:.3},\n  \
+         \"scatter_ratio_2pc\": {scatter_ratio:.3},\n  \
+         \"meta_envelope_ratio_write_behind\": {meta_ratio:.3},\n  \
+         \"acceptance\": \"commit_rounds_ratio_storm > 1.0; envelope_ratio_batched >= 2.0; \
+         scatter_ratio_2pc > 1.0\"\n}}\n"
+    ));
+    std::fs::write(path, out).expect("write WTF_BENCH_WRITE_JSON");
+    println!("  └─ wrote {path}");
+}
+
+fn main() {
+    let rows = vec![
+        commit_storm("seed", false),
+        commit_storm("group-commit", true),
+        two_pc_commit("seed", false),
+        two_pc_commit("prepare-batching", true),
+        append_burst("seed", false),
+        append_burst("write-behind", true),
+    ];
+
+    // The tentpole claim, asserted where the numbers are made: a storm
+    // of N concurrent commits consumes measurably fewer Paxos commit
+    // rounds and envelopes batched than N independent commits do.
+    let seed = rows.iter().find(|r| r.row == "commit-storm" && r.config == "seed");
+    let batched = rows
+        .iter()
+        .find(|r| r.row == "commit-storm" && r.config == "group-commit");
+    if let (Some(seed), Some(batched)) = (seed, batched) {
+        assert!(
+            batched.rounds < seed.rounds,
+            "group commit must pack rounds: {} !< {}",
+            batched.rounds,
+            seed.rounds
+        );
+        assert!(
+            batched.envelopes < seed.envelopes,
+            "group commit must save Paxos envelopes: {} !< {}",
+            batched.envelopes,
+            seed.envelopes
+        );
+    }
+
+    if let Ok(path) = std::env::var("WTF_BENCH_WRITE_JSON") {
+        write_json(&path, &rows);
+    }
+}

@@ -388,6 +388,15 @@ impl WtfClient {
         if data.is_empty() {
             return Ok(());
         }
+        if let Some(wb) = &self.write_behind {
+            return wb.enqueue_write_at(self, inode, offset, data.to_vec()).map(|_| ());
+        }
+        self.write_at_direct(inode, offset, data)
+    }
+
+    /// The synchronous body of [`Self::write_at`] — also the flush path
+    /// the write-behind worker drains queued writes through.
+    pub(crate) fn write_at_direct(&self, inode: InodeId, offset: u64, data: &[u8]) -> Result<()> {
         let replication = self.fetch_inode(inode)?.replication;
         // 1. Slices first (§2.1): visible to nobody until the commit.
         let parts = self.split_range(inode, offset, data.len() as u64);
@@ -438,14 +447,41 @@ impl WtfClient {
         if data.is_empty() {
             return self.len(fd);
         }
+        if let Some(wb) = &self.write_behind {
+            return wb.enqueue_append(self, fd.inode, data.to_vec());
+        }
         // Fresh fetch on purpose: aiming an EOF-relative append with a
         // stale `highest_region` at an old, non-full region would land
         // the bytes mid-file instead of at EOF.
-        let inode = self.fetch_inode_fresh(fd.inode)?;
-        let region_idx = inode.highest_region;
-        let replication = inode.replication;
+        let aim = self.append_aim(fd.inode)?;
+        self.append_bytes_aimed(fd.inode, data, aim)
+    }
+
+    /// One fresh inode fetch distilled to what an EOF append needs.
+    /// Separated from [`Self::append_bytes_aimed`] so a write-behind
+    /// flush of K queued appends can aim once for the whole queue.
+    pub(crate) fn append_aim(&self, inode: InodeId) -> Result<super::AppendAim> {
+        let i = self.fetch_inode_fresh(inode)?;
+        Ok(super::AppendAim {
+            region_idx: i.highest_region,
+            replication: i.replication,
+        })
+    }
+
+    /// The aimed body of [`Self::append_bytes`]: the conditional-append
+    /// loop, with the region validation at commit keeping a stale `aim`
+    /// safe (it falls back to the validated-EOF slow path, never lands
+    /// bytes mid-file).
+    pub(crate) fn append_bytes_aimed(
+        &self,
+        inode: InodeId,
+        data: &[u8],
+        aim: super::AppendAim,
+    ) -> Result<u64> {
+        let region_idx = aim.region_idx;
+        let replication = aim.replication;
         loop {
-            let rid = RegionId::new(fd.inode, region_idx);
+            let rid = RegionId::new(inode, region_idx);
             let replicas = self.create_replicated(data, rid, replication)?;
             let region_base = u64::from(region_idx) * self.config.region_size;
             let mut t = self.meta_txn();
@@ -456,13 +492,13 @@ impl WtfClient {
                 cap: self.config.region_size,
             });
             t.push(MetaOp::InodeSetLenMax {
-                key: Key::inode(fd.inode),
+                key: Key::inode(inode),
                 candidate: 0,
                 highest_region: region_idx,
                 mtime: unix_now(),
             });
             t.push(MetaOp::InodeSetLenFromRegion {
-                inode_key: Key::inode(fd.inode),
+                inode_key: Key::inode(inode),
                 region_key: Key::region(rid),
                 region_base,
                 mtime: unix_now(),
@@ -487,7 +523,7 @@ impl WtfClient {
                     let slice = Slice {
                         pieces: vec![(data.len() as u64, SliceData::Stored(replicas))],
                     };
-                    return self.append_at_eof_validated(fd.inode, &slice);
+                    return self.append_at_eof_validated(inode, &slice);
                 }
                 Err(Error::NotLeader { shard, .. }) => {
                     // Leadership moved mid-commit (commit_txn already

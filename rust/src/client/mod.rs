@@ -16,6 +16,7 @@ pub mod fs;
 pub mod slicing;
 pub mod spill;
 pub mod txn;
+pub(crate) mod write_behind;
 
 pub use cache::MetaCache;
 pub use compact::Extent;
@@ -125,6 +126,20 @@ pub struct WtfClient {
     /// `Config::readahead`) — inert unless enabled.  Shared by clones
     /// of this client, private to it otherwise.
     pub(crate) cache: Arc<MetaCache>,
+    /// Opt-in write-behind pipeline (`Config::write_behind`): `None`
+    /// unless enabled.  Shared by clones, like the cache, so the
+    /// background flusher (itself a clone) feeds the same queues.
+    pub(crate) write_behind: Option<Arc<write_behind::WriteBehind>>,
+}
+
+/// The EOF aim for an append: `highest_region` + replication captured
+/// from a FRESH inode fetch (a stale aim lands bytes mid-file under the
+/// sparse-file EOF rules).  Hoisted out of the append loops so a
+/// write-behind flush of K queued appends pays ONE aim fetch, not K.
+#[derive(Clone, Copy, Debug)]
+pub(crate) struct AppendAim {
+    pub(crate) region_idx: u32,
+    pub(crate) replication: u8,
 }
 
 impl WtfClient {
@@ -155,6 +170,9 @@ impl WtfClient {
         transport: Arc<Transport>,
     ) -> Self {
         let cache = Arc::new(MetaCache::new(&config));
+        let wb = config
+            .write_behind
+            .then(|| Arc::new(write_behind::WriteBehind::new(config.write_behind_max_ops)));
         WtfClient {
             config,
             meta,
@@ -163,7 +181,26 @@ impl WtfClient {
             metrics: Metrics::new(),
             transport,
             cache,
+            write_behind: wb,
         }
+    }
+
+    /// Write-behind reconciliation boundary: block until every queued
+    /// write has flushed and surface the first deferred failure.  A
+    /// no-op `Ok(())` when write-behind is off (every write was
+    /// already synchronous).
+    pub fn flush(&self) -> Result<()> {
+        match &self.write_behind {
+            Some(wb) => wb.drain(),
+            None => Ok(()),
+        }
+    }
+
+    /// Close a handle.  Handles are plain values, so the only work is
+    /// the write-behind contract: `close` is a reconciliation boundary
+    /// and reports any failure the flusher deferred.
+    pub fn close(&self, _fd: FileHandle) -> Result<()> {
+        self.flush()
     }
 
     pub fn config(&self) -> &Config {

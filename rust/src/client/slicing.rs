@@ -160,12 +160,26 @@ impl WtfClient {
         if slice.is_empty() {
             return self.len(fd);
         }
+        if let Some(wb) = &self.write_behind {
+            return wb.enqueue_append_slice(self, fd.inode, slice.clone());
+        }
         // Fresh fetch for the same reason as `append_bytes`: a stale
         // `highest_region` must not aim the append into the interior.
-        let inode = self.fetch_inode_fresh(fd.inode)?;
-        let region_idx = inode.highest_region;
+        let aim = self.append_aim(fd.inode)?;
+        self.append_slice_aimed(fd.inode, slice, aim)
+    }
+
+    /// The aimed body of [`Self::append_slice`] — shared with the
+    /// write-behind flusher, which aims once per queued-file batch.
+    pub(crate) fn append_slice_aimed(
+        &self,
+        inode: InodeId,
+        slice: &Slice,
+        aim: super::AppendAim,
+    ) -> Result<u64> {
+        let region_idx = aim.region_idx;
         loop {
-            let rid = RegionId::new(fd.inode, region_idx);
+            let rid = RegionId::new(inode, region_idx);
             let region_base = u64::from(region_idx) * self.config.region_size;
             let mut t = self.meta_txn();
             // All pieces go in one transaction: the append is atomic.
@@ -178,13 +192,13 @@ impl WtfClient {
                 });
             }
             t.push(MetaOp::InodeSetLenMax {
-                key: Key::inode(fd.inode),
+                key: Key::inode(inode),
                 candidate: 0,
                 highest_region: region_idx,
                 mtime: unix_now(),
             });
             t.push(MetaOp::InodeSetLenFromRegion {
-                inode_key: Key::inode(fd.inode),
+                inode_key: Key::inode(inode),
                 region_key: Key::region(rid),
                 region_base,
                 mtime: unix_now(),
@@ -204,7 +218,7 @@ impl WtfClient {
                     // Region full: §2.5 fallback — read the EOF inside a
                     // validated transaction and paste at that offset,
                     // filling the current region's remainder.
-                    return self.append_at_eof_validated(fd.inode, slice);
+                    return self.append_at_eof_validated(inode, slice);
                 }
                 Err(Error::NotLeader { shard, .. }) => {
                     // Same as `append_bytes`: commit_txn dropped the

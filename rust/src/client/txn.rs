@@ -223,6 +223,10 @@ impl<'c> Transaction<'c> {
     /// the op log (§2.6); aborts to the application only when a replayed
     /// call's outcome diverges.
     pub fn commit(mut self) -> Result<()> {
+        // Write-behind reconciliation boundary: a WTF transaction must
+        // not commit over writes the background flusher hasn't landed
+        // (or silently swallowed a failure for).
+        self.client.flush()?;
         let budget = self.client.config.txn_retry_budget.max(1);
         let mut attempts = 0u32;
         loop {

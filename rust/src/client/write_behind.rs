@@ -1,0 +1,381 @@
+//! Opt-in client write-behind (`Config::write_behind`), after CannyFS
+//! (arXiv 1612.06830): batch workloads tolerate assume-success writes
+//! as long as failures reconcile at well-defined boundaries.
+//!
+//! `append_bytes` / `append_slice` / `write_at` enqueue to a background
+//! flusher and return immediately with the offset the write is ASSUMED
+//! to land at; the flusher performs the real storage uploads and
+//! metadata commits off the caller's thread.  The contract:
+//!
+//! * **Visibility**: a reader (including this client) may observe the
+//!   file WITHOUT queued writes until they flush; the returned offsets
+//!   are only promises.  Write-behind is for single-writer batch
+//!   pipelines, not shared mutable files.
+//! * **Durability**: [`WtfClient::flush`] (and `close`, and a WTF
+//!   transaction commit) blocks until the pipeline is empty and
+//!   surfaces the FIRST deferred failure; after `Ok(())` every
+//!   previously enqueued write is durably committed.
+//! * **Fencing**: each file's queue captures the inode version at its
+//!   first enqueue (the same single fetch that aims its appends —
+//!   one aim fetch for K queued writes, not K).  If another writer
+//!   moved the inode before the flush, the whole queue surfaces
+//!   [`Error::TxnConflict`] at the boundary and the file's cached
+//!   metadata is dropped, rather than landing writes against a file
+//!   the caller never saw.
+
+use super::{AppendAim, Slice, WtfClient};
+use crate::error::{Error, Result};
+use crate::types::{InodeId, Key, RegionId, Value};
+use std::collections::HashMap;
+use std::sync::{Arc, Condvar, Mutex};
+
+/// One queued write operation.
+pub(crate) enum QueuedWrite {
+    /// EOF-relative byte append (aimed by the queue's shared aim).
+    Append { data: Vec<u8> },
+    /// EOF-relative zero-copy slice append.
+    AppendSlice { slice: Slice },
+    /// Explicit-offset write.
+    WriteAt { offset: u64, data: Vec<u8> },
+}
+
+/// Per-file queue: ONE fresh inode fetch at first enqueue provides the
+/// append aim, the version fence, and the assumed EOF for every write
+/// queued behind it.
+struct InodeQueue {
+    aim: AppendAim,
+    /// Inode version observed at the aim fetch — the flush fence.
+    expected_version: u64,
+    /// The EOF this client assumes after its queued writes.
+    assumed_eof: u64,
+    ops: Vec<QueuedWrite>,
+}
+
+#[derive(Default)]
+struct WbState {
+    queues: HashMap<InodeId, InodeQueue>,
+    /// FIFO across files.
+    order: Vec<InodeId>,
+    /// Total queued (not yet taken) ops, for backpressure.
+    queued_ops: usize,
+    /// Ops the worker is currently flushing.
+    inflight: usize,
+    /// The file currently being flushed: enqueues to it wait, so a new
+    /// queue never captures a version fence mid-flush (which would
+    /// conflict against this client's own writes).
+    inflight_inode: Option<InodeId>,
+    /// First deferred failure since the last reconciliation.
+    first_err: Option<Error>,
+    worker_running: bool,
+}
+
+/// The shared write-behind pipeline (one per client family — clones of
+/// a client share it, like the metadata cache).
+pub(crate) struct WriteBehind {
+    /// Pipeline bound (`Config::write_behind_max_ops`): enqueues block
+    /// while this many writes are queued or in flight.
+    max_ops: usize,
+    state: Mutex<WbState>,
+    /// Wakes the worker (new work) and enqueuers (room / fence clear).
+    work: Condvar,
+    /// Wakes [`WriteBehind::drain`] waiters when the pipeline empties.
+    idle: Condvar,
+}
+
+impl WriteBehind {
+    pub(crate) fn new(max_ops: usize) -> Self {
+        WriteBehind {
+            max_ops: max_ops.max(1),
+            state: Mutex::new(WbState::default()),
+            work: Condvar::new(),
+            idle: Condvar::new(),
+        }
+    }
+
+    pub(crate) fn enqueue_append(
+        &self,
+        client: &WtfClient,
+        inode: InodeId,
+        data: Vec<u8>,
+    ) -> Result<u64> {
+        self.enqueue(client, inode, QueuedWrite::Append { data })
+    }
+
+    pub(crate) fn enqueue_append_slice(
+        &self,
+        client: &WtfClient,
+        inode: InodeId,
+        slice: Slice,
+    ) -> Result<u64> {
+        self.enqueue(client, inode, QueuedWrite::AppendSlice { slice })
+    }
+
+    pub(crate) fn enqueue_write_at(
+        &self,
+        client: &WtfClient,
+        inode: InodeId,
+        offset: u64,
+        data: Vec<u8>,
+    ) -> Result<u64> {
+        self.enqueue(client, inode, QueuedWrite::WriteAt { offset, data })
+    }
+
+    /// Queue `op`, creating the file's queue (one fresh fetch for aim +
+    /// fence + assumed EOF) on first use.  Returns the assumed offset
+    /// the op lands at (for appends: the assumed EOF before it).
+    fn enqueue(&self, client: &WtfClient, inode: InodeId, op: QueuedWrite) -> Result<u64> {
+        let mut st = self.state.lock().unwrap();
+        loop {
+            let full = st.queued_ops + st.inflight >= self.max_ops;
+            let fenced = st.inflight_inode == Some(inode);
+            if !full && !fenced {
+                break;
+            }
+            st = self.work.wait(st).unwrap();
+        }
+        if !st.queues.contains_key(&inode) {
+            // The single fetch that serves every write queued behind it
+            // (the aim-hoist: K queued appends, one aim fetch).
+            let (value, version) = client.meta_get(&Key::inode(inode))?;
+            let i = match value {
+                Some(Value::Inode(i)) => i,
+                Some(_) => {
+                    return Err(Error::CorruptMetadata(format!("inode {inode} wrong type")))
+                }
+                None => return Err(Error::NotFound(format!("inode {inode}"))),
+            };
+            st.queues.insert(
+                inode,
+                InodeQueue {
+                    aim: AppendAim {
+                        region_idx: i.highest_region,
+                        replication: i.replication,
+                    },
+                    expected_version: version,
+                    assumed_eof: i.len,
+                    ops: Vec::new(),
+                },
+            );
+            st.order.push(inode);
+        }
+        let q = st.queues.get_mut(&inode).unwrap();
+        let at = match &op {
+            QueuedWrite::Append { data } => {
+                let at = q.assumed_eof;
+                q.assumed_eof += data.len() as u64;
+                at
+            }
+            QueuedWrite::AppendSlice { slice } => {
+                let at = q.assumed_eof;
+                q.assumed_eof += slice.len();
+                at
+            }
+            QueuedWrite::WriteAt { offset, data } => {
+                q.assumed_eof = q.assumed_eof.max(offset + data.len() as u64);
+                *offset
+            }
+        };
+        q.ops.push(op);
+        st.queued_ops += 1;
+        if !st.worker_running {
+            st.worker_running = true;
+            let me = client
+                .write_behind
+                .clone()
+                .expect("enqueue implies write-behind enabled");
+            let flusher = client.clone();
+            std::thread::spawn(move || me.worker(flusher));
+        }
+        drop(st);
+        self.work.notify_all();
+        Ok(at)
+    }
+
+    /// Block until every queued write has flushed, then surface (and
+    /// clear) the first deferred failure — THE reconciliation boundary
+    /// (`flush()` / `close()` / transaction commit).
+    pub(crate) fn drain(&self) -> Result<()> {
+        let mut st = self.state.lock().unwrap();
+        while st.queued_ops > 0 || st.inflight > 0 {
+            st = self.idle.wait(st).unwrap();
+        }
+        match st.first_err.take() {
+            Some(e) => Err(e),
+            None => Ok(()),
+        }
+    }
+
+    /// The background flusher.  Detached and parked on the condvar when
+    /// idle; it dies with the process (clients are deployment-scoped).
+    fn worker(self: Arc<Self>, client: WtfClient) {
+        loop {
+            let (inode, queue) = {
+                let mut st = self.state.lock().unwrap();
+                loop {
+                    if !st.order.is_empty() {
+                        let inode = st.order.remove(0);
+                        let q = st.queues.remove(&inode).expect("ordered queue exists");
+                        st.queued_ops -= q.ops.len();
+                        st.inflight = q.ops.len();
+                        st.inflight_inode = Some(inode);
+                        break (inode, q);
+                    }
+                    st = self.work.wait(st).unwrap();
+                }
+            };
+            let flushed = Self::flush_queue(&client, inode, queue);
+            let mut st = self.state.lock().unwrap();
+            st.inflight = 0;
+            st.inflight_inode = None;
+            if let Err(e) = flushed {
+                if st.first_err.is_none() {
+                    st.first_err = Some(e);
+                }
+            }
+            let empty = st.queued_ops == 0;
+            drop(st);
+            self.work.notify_all();
+            if empty {
+                self.idle.notify_all();
+            }
+        }
+    }
+
+    /// Flush one file's queue on the worker: check the version fence,
+    /// then run each write through the DIRECT paths (the worker's
+    /// client never re-enqueues) sharing the queue's single aim.
+    fn flush_queue(client: &WtfClient, inode: InodeId, q: InodeQueue) -> Result<()> {
+        let (_, version) = client.meta_get(&Key::inode(inode))?;
+        if version != q.expected_version {
+            // Another writer moved the file while the queue formed: the
+            // deferred writes would land somewhere the caller never
+            // intended.  Fail the whole queue and drop the file's
+            // cached metadata so post-reconciliation reads refetch.
+            let mut keys = vec![Key::inode(inode)];
+            for op in &q.ops {
+                match op {
+                    QueuedWrite::Append { .. } | QueuedWrite::AppendSlice { .. } => {
+                        keys.push(Key::region(RegionId::new(inode, q.aim.region_idx)));
+                    }
+                    QueuedWrite::WriteAt { offset, data } => {
+                        for (rid, _, _) in
+                            client.split_range(inode, *offset, data.len() as u64)
+                        {
+                            keys.push(Key::region(rid));
+                        }
+                    }
+                }
+            }
+            client.metadata_cache().invalidate_keys(&keys);
+            let k = Key::inode(inode);
+            return Err(Error::TxnConflict {
+                space: k.space,
+                key: k.key.clone(),
+            });
+        }
+        for op in q.ops {
+            match op {
+                QueuedWrite::Append { data } => {
+                    client.append_bytes_aimed(inode, &data, q.aim)?;
+                }
+                QueuedWrite::AppendSlice { slice } => {
+                    client.append_slice_aimed(inode, &slice, q.aim)?;
+                }
+                QueuedWrite::WriteAt { offset, data } => {
+                    client.write_at_direct(inode, offset, &data)?;
+                }
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::Cluster;
+    use crate::config::Config;
+
+    fn wb_cluster() -> Cluster {
+        let mut cfg = Config::test();
+        cfg.write_behind = true;
+        cfg.metadata_cache = true;
+        Cluster::builder().config(cfg).build().unwrap()
+    }
+
+    #[test]
+    fn flush_fence_surfaces_txn_conflict_and_drops_cached_keys() {
+        let cl = wb_cluster();
+        let c = cl.client();
+        let fd = c.create("/wb").unwrap();
+
+        // A queue exactly as enqueue would have built it: aim + fence
+        // version captured from the file's CURRENT state.
+        let (_, fence) = c.meta_get(&Key::inode(fd.inode())).unwrap();
+        let aim = c.append_aim(fd.inode()).unwrap();
+        let q = InodeQueue {
+            aim,
+            expected_version: fence,
+            assumed_eof: 0,
+            ops: vec![QueuedWrite::Append {
+                data: b"deferred".to_vec(),
+            }],
+        };
+
+        // Another writer moves the file before the flush runs (direct
+        // path: the intruder is a synchronous client in this story).
+        c.write_at_direct(fd.inode(), 0, b"intruder").unwrap();
+        c.fetch_inode(fd.inode()).unwrap(); // warm the cache post-intrusion
+        let inv_before = c.metadata_cache().invalidations();
+
+        // The fence must fail the whole queue as a conflict and drop the
+        // file's cached metadata — NOT land "deferred" against a file
+        // the enqueuer never saw.
+        let err = WriteBehind::flush_queue(&c, fd.inode(), q).unwrap_err();
+        assert!(
+            matches!(err, Error::TxnConflict { .. }),
+            "fence failure must surface as TxnConflict, got {err}"
+        );
+        assert!(
+            c.metadata_cache().invalidations() > inv_before,
+            "fence failure must invalidate the file's cached keys"
+        );
+        assert_eq!(
+            c.len(&c.open("/wb").unwrap()).unwrap(),
+            8,
+            "the fenced queue must not have written anything"
+        );
+    }
+
+    #[test]
+    fn drain_surfaces_the_first_deferred_failure_exactly_once() {
+        let wb = WriteBehind::new(4);
+        wb.state.lock().unwrap().first_err = Some(Error::TxnAborted {
+            reason: "deferred by the flusher".into(),
+        });
+        assert!(
+            matches!(wb.drain(), Err(Error::TxnAborted { .. })),
+            "the boundary must report the hidden failure"
+        );
+        // Consumed: the NEXT boundary starts clean.
+        wb.drain().unwrap();
+    }
+
+    #[test]
+    fn pipeline_lands_appends_in_order_with_one_shared_aim() {
+        let cl = wb_cluster();
+        let c = cl.client();
+        let fd = c.create("/pipe").unwrap();
+
+        let mut expect = Vec::new();
+        for i in 0..10u8 {
+            let rec = [b'a' + i; 7];
+            let at = c.append_bytes(&fd, &rec).unwrap();
+            assert_eq!(at, u64::from(i) * 7, "assumed offset drifted");
+            expect.extend_from_slice(&rec);
+        }
+        c.flush().unwrap();
+        assert_eq!(c.read_at(&fd, 0, 70).unwrap(), expect);
+        c.close(fd).unwrap();
+    }
+}

@@ -77,6 +77,28 @@ impl ClusterBuilder {
         self
     }
 
+    /// Pack concurrently-arriving single-shard metadata commits into
+    /// shared Paxos rounds (`Duration::ZERO` = off).
+    pub fn group_commit(mut self, window: std::time::Duration, max_txns: usize) -> Self {
+        self.config.group_commit_window = window;
+        self.config.group_commit_max_txns = max_txns;
+        self
+    }
+
+    /// Collapse 2PC phase-1/phase-2 proposals into shared transport
+    /// scatters (requires `meta_2pc`).
+    pub fn prepare_batching(mut self, on: bool) -> Self {
+        self.config.prepare_batching = on;
+        self
+    }
+
+    /// Queue client writes behind a background flusher, reconciling at
+    /// flush/commit/close boundaries (CannyFS-style; defaults off).
+    pub fn write_behind(mut self, on: bool) -> Self {
+        self.config.write_behind = on;
+        self
+    }
+
     /// Put backing files under `dir` instead of a tempdir.
     pub fn data_dir(mut self, dir: PathBuf) -> Self {
         self.data_dir = Some(dir);
@@ -120,7 +142,9 @@ impl ClusterBuilder {
                     LeaseClock::auto(),
                     config.meta_lease.as_millis() as u64,
                 )
-                .two_pc(config.meta_2pc),
+                .two_pc(config.meta_2pc)
+                .prepare_batching(config.prepare_batching)
+                .group_commit(config.group_commit_window, config.group_commit_max_txns),
                 config.meta_txn_floor,
                 Metrics::new(),
             ))
@@ -230,6 +254,19 @@ impl Cluster {
     /// cache sends no `MetaGet` at all).
     pub fn transport_envelopes(&self) -> u64 {
         self.transport.envelopes_sent()
+    }
+
+    /// Envelopes sent on one plane (data, metadata, or Paxos) — the
+    /// write-path benchmarks report these separately so a batching win
+    /// on the Paxos plane is not diluted by data traffic.
+    pub fn transport_envelopes_on(&self, plane: crate::net::Plane) -> u64 {
+        self.transport.envelopes_sent_on(plane)
+    }
+
+    /// Scatter-gather broadcasts issued through the deployment
+    /// transport (prepare batching collapses several per commit).
+    pub fn transport_scatters(&self) -> u64 {
+        self.transport.scatters_sent()
     }
 
     /// Aggregate bytes written to all storage servers (Table 2's "W").

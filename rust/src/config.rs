@@ -90,6 +90,40 @@ pub struct Config {
     /// requested range by this much and the surplus serves subsequent
     /// sequential reads with zero envelopes.  `0` disables.
     pub readahead: u64,
+    /// Group-commit accumulation window for single-shard metadata
+    /// commits (requires `meta_paxos`): commits to the same shard group
+    /// that arrive within this window are packed into ONE shared log
+    /// entry — one Paxos round for the whole batch — while each
+    /// constituent transaction keeps its own id, exactly-once dedup,
+    /// and individually recorded outcome.  `Duration::ZERO` (the
+    /// default) disables batching entirely; multi-shard commits are
+    /// never batched.
+    pub group_commit_window: Duration,
+    /// Upper bound on transactions packed into one group-commit entry;
+    /// a full batch flushes immediately instead of waiting out the
+    /// window.
+    pub group_commit_max_txns: usize,
+    /// Collapse a 2PC commit's per-group phase-1 `Prepare` proposals
+    /// into a single transport scatter-gather across all participant
+    /// groups (and likewise the phase-2 `Decide` fan-out), instead of
+    /// one serial proposal round per group (requires `meta_2pc`).
+    /// Protocol-equivalent: the same entries land in the same logs with
+    /// the same intent/decision semantics — only the scatter shape
+    /// changes.  Off by default.
+    pub prepare_batching: bool,
+    /// Opt-in client write-behind: `append_bytes` / `append_slice` /
+    /// `write_at` enqueue to a per-client background flusher and return
+    /// assuming success; the flusher batches the queued writes
+    /// (sharing one inode aim fetch per file) and the client reconciles
+    /// — surfacing the first hidden failure and dropping the affected
+    /// cache keys — at `flush()` / `commit_txn()` / `close()`
+    /// boundaries.  Off by default: it trades read-your-writes
+    /// visibility for batch throughput (see ROADMAP "Write path").
+    pub write_behind: bool,
+    /// Bounded depth of the write-behind queue; an enqueue past this
+    /// bound blocks until the flusher drains (backpressure, so a slow
+    /// flusher cannot buffer unbounded dirty data).
+    pub write_behind_max_ops: usize,
 }
 
 impl Default for Config {
@@ -117,6 +151,11 @@ impl Default for Config {
             metadata_cache_entries: 4096,
             read_coalescing: false,
             readahead: 0,
+            group_commit_window: Duration::ZERO,
+            group_commit_max_txns: 8,
+            prepare_batching: false,
+            write_behind: false,
+            write_behind_max_ops: 64,
         }
     }
 }
@@ -172,6 +211,21 @@ impl Config {
         }
     }
 
+    /// [`Config::replicated_2pc_test`] with the whole batched write
+    /// path enabled: Paxos group commit (short window so lone commits
+    /// flush fast) and single-scatter 2PC prepare/decide batching.
+    /// `write_behind` stays OFF here — it changes client-visible
+    /// read-after-write semantics, so the dedicated write-behind suites
+    /// opt into it explicitly.
+    pub fn write_path_test() -> Self {
+        Config {
+            group_commit_window: Duration::from_millis(1),
+            group_commit_max_txns: 8,
+            prepare_batching: true,
+            ..Config::replicated_2pc_test()
+        }
+    }
+
     /// Region index + region-relative offset for an absolute file offset.
     pub fn locate(&self, offset: u64) -> (u32, u64) {
         ((offset / self.region_size) as u32, offset % self.region_size)
@@ -210,6 +264,26 @@ impl Config {
         if self.meta_2pc && !self.meta_paxos {
             return Err(crate::Error::InvalidArgument(
                 "meta_2pc layers on the Paxos groups; enable meta_paxos".into(),
+            ));
+        }
+        if !self.group_commit_window.is_zero() && !self.meta_paxos {
+            return Err(crate::Error::InvalidArgument(
+                "group_commit_window batches Paxos rounds; enable meta_paxos".into(),
+            ));
+        }
+        if !self.group_commit_window.is_zero() && self.group_commit_max_txns < 2 {
+            return Err(crate::Error::InvalidArgument(
+                "group commit requires group_commit_max_txns >= 2".into(),
+            ));
+        }
+        if self.prepare_batching && !self.meta_2pc {
+            return Err(crate::Error::InvalidArgument(
+                "prepare_batching batches the 2PC scatters; enable meta_2pc".into(),
+            ));
+        }
+        if self.write_behind && self.write_behind_max_ops == 0 {
+            return Err(crate::Error::InvalidArgument(
+                "write_behind requires write_behind_max_ops >= 1".into(),
             ));
         }
         if self.metadata_cache && self.metadata_cache_entries == 0 {
@@ -295,6 +369,39 @@ mod tests {
         let mut bad = Config::fast_read_test();
         bad.metadata_cache_entries = 0;
         assert!(bad.validate().is_err());
+    }
+
+    #[test]
+    fn write_path_preset_batches_but_defaults_stay_off() {
+        let d = Config::default();
+        assert!(d.group_commit_window.is_zero(), "group commit defaults off");
+        assert!(!d.prepare_batching && !d.write_behind);
+        let t = Config::test();
+        assert!(t.group_commit_window.is_zero() && !t.prepare_batching && !t.write_behind);
+
+        let w = Config::write_path_test();
+        assert!(w.meta_paxos && w.meta_2pc);
+        assert!(!w.group_commit_window.is_zero());
+        assert!(w.group_commit_max_txns >= 2);
+        assert!(w.prepare_batching);
+        assert!(!w.write_behind, "write-behind is a separate opt-in");
+        w.validate().unwrap();
+
+        let mut bad = Config::write_path_test();
+        bad.meta_paxos = false;
+        bad.meta_2pc = false;
+        bad.prepare_batching = false;
+        assert!(bad.validate().is_err(), "group commit without Paxos groups");
+        let mut bad = Config::write_path_test();
+        bad.group_commit_max_txns = 1;
+        assert!(bad.validate().is_err(), "a 1-txn batch is no batch");
+        let mut bad = Config::write_path_test();
+        bad.meta_2pc = false;
+        assert!(bad.validate().is_err(), "prepare batching without 2PC");
+        let mut bad = Config::test();
+        bad.write_behind = true;
+        bad.write_behind_max_ops = 0;
+        assert!(bad.validate().is_err(), "unbounded write-behind queue");
     }
 
     #[test]

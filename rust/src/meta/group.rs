@@ -63,6 +63,14 @@ pub enum EntryKind {
     /// coordinator group's log is the authoritative outcome; replays are
     /// absorbed by the txn-id dedup.
     Decide { commit: bool },
+    /// A group commit: several concurrently-submitted single-shard
+    /// transactions packed into ONE log slot — one Paxos round for the
+    /// whole batch (`Config::group_commit_window`).  Each constituent
+    /// entry is a plain `Apply` and is unpacked at apply time in order,
+    /// with its own txn-id dedup and its own recorded outcome, exactly
+    /// as if it had arrived alone; the wrapper entry carries its own
+    /// transaction id so a retried batch dedups like any other entry.
+    Batch(Vec<LogEntry>),
 }
 
 /// One replicated-log entry: a (sub-)transaction routed to this shard.
@@ -102,6 +110,18 @@ impl LogEntry {
             reads: Vec::new(),
             ops: Vec::new(),
             kind: EntryKind::Decide { commit },
+        }
+    }
+
+    /// A group-commit batch wrapping `txns` (each an `Apply`-kind entry
+    /// carrying its own transaction id).  The wrapper takes a fresh id
+    /// of its own so batch retries dedup like any other entry.
+    pub fn batch(txn_id: u64, txns: Vec<LogEntry>) -> LogEntry {
+        LogEntry {
+            txn_id,
+            reads: Vec::new(),
+            ops: Vec::new(),
+            kind: EntryKind::Batch(txns),
         }
     }
 
@@ -166,6 +186,31 @@ pub(crate) enum Landed {
     /// A `Prepare` staged its intent; the participant's vote is `Some`
     /// (yes, with the outcomes a commit will record) or `None` (no).
     Voted(Option<Vec<OpOutcome>>),
+}
+
+/// One group's share of a cross-group batched proposal
+/// (`Config::prepare_batching`): the phase-1-skipping accept is "armed"
+/// — leader, slot, and ballot fixed under the commit gate — so the 2PC
+/// front-end can ship EVERY participant group's accepts in one shared
+/// transport scatter, then seal each group's slice of the responses.
+#[derive(Debug)]
+pub(crate) struct ArmedAccept {
+    pub(crate) entry: LogEntry,
+    leader_id: u32,
+    slot: u64,
+    ballot: Ballot,
+}
+
+/// What [`ShardGroup::arm_fast_accept`] found.
+#[derive(Debug)]
+pub(crate) enum ArmOutcome {
+    /// The entry's transaction already settled here (dedup hit).
+    Settled(Landed),
+    /// Fast path armed: scatter the accepts, then seal.
+    Armed(ArmedAccept),
+    /// No fast path available (a fresh leader still owes a prepare
+    /// round); the caller uses [`ShardGroup::propose_entry`].
+    Slow,
 }
 
 /// A leaseholder read that may instead find the key covered by a pending
@@ -413,6 +458,32 @@ impl GroupReplica {
                     };
                     g.applied_txns.insert(entry.txn_id);
                     g.txn_results.insert(entry.txn_id, result);
+                }
+            }
+            EntryKind::Batch(txns) => {
+                // Unpack in order, each constituent with its OWN dedup
+                // and its own recorded outcome — deterministic on every
+                // replica because the sub-entries ride in one chosen
+                // slot.  A member that already landed alone (a failover
+                // replay) is skipped; the rest apply exactly as if they
+                // had occupied consecutive slots.
+                if !g.applied_txns.contains(&entry.txn_id) {
+                    for sub in txns {
+                        if sub.is_noop() || g.applied_txns.contains(&sub.txn_id) {
+                            continue;
+                        }
+                        let result = if g.crosses_lock(sub) {
+                            None
+                        } else {
+                            apply_entry(&mut g.state, sub).ok()
+                        };
+                        g.applied_txns.insert(sub.txn_id);
+                        g.txn_results.insert(sub.txn_id, result);
+                    }
+                    g.applied_txns.insert(entry.txn_id);
+                    // The wrapper itself always "succeeds"; per-member
+                    // verdicts live under the members' own ids.
+                    g.txn_results.insert(entry.txn_id, Some(Vec::new()));
                 }
             }
         }
@@ -1063,6 +1134,158 @@ impl ShardGroup {
         })
     }
 
+    /// Try to arm the phase-1-skipping fast path for `entry` WITHOUT
+    /// touching the wire: resolve the leaseholder, check the dedup, and
+    /// fix the slot and ballot.  The caller then ships this group's
+    /// [`ArmedAccept::accept_requests`] in a transport scatter SHARED
+    /// with other groups' armed proposals (`Config::prepare_batching`),
+    /// seals the gathered responses, and learns — two cross-group
+    /// scatters where sequential proposals would pay two per group.
+    /// `Slow` (a just-elected leader still owes a prepare round, or the
+    /// leader died under us) leaves nothing in flight; the caller falls
+    /// back to [`ShardGroup::propose_entry`].
+    ///
+    /// MUST be called with this group's commit gate held, like any
+    /// proposal — the gate is what keeps the armed slot stable.
+    pub(crate) fn arm_fast_accept(
+        &self,
+        entry: &LogEntry,
+        auto_elect: bool,
+    ) -> Result<ArmOutcome> {
+        assert!(!entry.is_noop(), "txn_id 0 is reserved for noop filler");
+        let leader_id = self.ensure_leader(auto_elect)?;
+        let leader = &self.replicas[leader_id as usize];
+        if let Some(landed) = leader.landed(entry) {
+            return Ok(ArmOutcome::Settled(landed));
+        }
+        let Some(slot) = leader.log_len_if_alive() else {
+            self.invalidate_leader(leader_id);
+            return Ok(ArmOutcome::Slow);
+        };
+        let v = self.view.lock().unwrap();
+        if v.needs_prepare {
+            return Ok(ArmOutcome::Slow);
+        }
+        let ballot = Ballot {
+            round: v.term,
+            proposer: leader_id,
+        };
+        drop(v);
+        Ok(ArmOutcome::Armed(ArmedAccept {
+            entry: entry.clone(),
+            leader_id,
+            slot,
+            ballot,
+        }))
+    }
+
+    /// The accept envelopes an armed proposal scatters — one per
+    /// replica, in replica order (the order [`ShardGroup::seal_fast_accept`]
+    /// expects the responses back in).
+    pub(crate) fn accept_requests(&self, armed: &ArmedAccept) -> Vec<(Peer, Request)> {
+        self.replicas
+            .iter()
+            .map(|r| {
+                (
+                    r.clone() as Peer,
+                    Request::PaxosAccept {
+                        shard: self.shard,
+                        slot: armed.slot,
+                        ballot: armed.ballot,
+                        entry: armed.entry.clone(),
+                    },
+                )
+            })
+            .collect()
+    }
+
+    /// Tally this group's slice of the shared accept scatter, mirroring
+    /// the fast path of [`ShardGroup::propose_entry`] exactly.
+    /// `Ok(true)`: quorum accepted — learn next.  `Ok(false)`: the round
+    /// lost cleanly (a reachable quorum, not enough accepts) — fall back
+    /// to `propose_entry`, which may re-send the SAME ballot/value or
+    /// run a full round.  `Err`: fewer than a quorum reachable — the
+    /// accept may have landed on a minority, so the next proposal here
+    /// MUST run phase 1 at a fresh ballot (one value per ballot).
+    pub(crate) fn seal_fast_accept(
+        &self,
+        responses: Vec<Result<Response>>,
+    ) -> Result<bool> {
+        let mut acks = 0usize;
+        let mut reachable = 0usize;
+        for res in responses {
+            match res.and_then(Response::into_accepted) {
+                Ok(true) => {
+                    acks += 1;
+                    reachable += 1;
+                }
+                Ok(false) => reachable += 1,
+                Err(_) => {}
+            }
+        }
+        if reachable < self.quorum() {
+            self.view.lock().unwrap().needs_prepare = true;
+            return Err(Error::NoQuorum {
+                alive: reachable,
+                total: self.replicas.len(),
+            });
+        }
+        Ok(acks >= self.quorum())
+    }
+
+    /// The learn envelopes that follow a quorum-accepted armed proposal.
+    pub(crate) fn learn_requests(&self, armed: &ArmedAccept) -> Vec<(Peer, Request)> {
+        self.replicas
+            .iter()
+            .map(|r| {
+                (
+                    r.clone() as Peer,
+                    Request::PaxosLearn {
+                        shard: self.shard,
+                        slot: armed.slot,
+                        entry: armed.entry.clone(),
+                    },
+                )
+            })
+            .collect()
+    }
+
+    /// How the armed proposal's transaction settled after the learn
+    /// scatter.  `None` = the leader died between accept and learn; the
+    /// caller falls back to `propose_entry` (the dedup keeps the retry
+    /// exactly-once).
+    pub(crate) fn settled_after_learn(&self, armed: &ArmedAccept) -> Option<Landed> {
+        self.replicas[armed.leader_id as usize].landed(&armed.entry)
+    }
+
+    /// The recorded apply result for `txn_id` per the leaseholder: outer
+    /// `None` = not settled here; `Some(None)` = applied as a
+    /// deterministic abort; `Some(Some(outcomes))` = applied cleanly.
+    /// The group-commit front-end reads each batched transaction's
+    /// individual verdict through this after the shared entry lands.
+    #[allow(clippy::type_complexity)]
+    pub(crate) fn txn_outcomes(
+        &self,
+        txn_id: u64,
+        auto_elect: bool,
+    ) -> Result<Option<Option<Vec<OpOutcome>>>> {
+        self.local_read_inner(auto_elect, |g| g.txn_results.get(&txn_id).cloned())
+    }
+
+    /// Chosen-log length at the leaseholder.  Observability: one slot is
+    /// one Paxos commit round consumed, so the delta across a workload
+    /// counts its commit rounds (group commit packs many transactions
+    /// into one slot).
+    pub fn log_len(&self, auto_elect: bool) -> Result<u64> {
+        self.local_read_inner(auto_elect, |g| g.log.len() as u64)
+    }
+
+    /// The transport every replica of this group is served through
+    /// (shared deployment-wide; cross-group scatter batching rides it).
+    pub(crate) fn transport(&self) -> &Arc<Transport> {
+        &self.transport
+    }
+
     /// Versioned point read served by the leaseholder's local state — the
     /// read-lease fast path: no quorum round.
     pub fn local_get(&self, key: &Key, auto_elect: bool) -> Result<Option<(Value, u64)>> {
@@ -1688,6 +1911,68 @@ mod tests {
         // Resolve the straggler; everyone agrees.
         g.commit_entry(&LogEntry::decide(9, true), true).unwrap();
         assert_eq!(g.local_get(&b, true).unwrap(), Some((Value::U64(2), 1)));
+        assert!(g.converged());
+    }
+
+    #[test]
+    fn batch_entry_applies_members_individually_in_one_slot() {
+        let g = group();
+        let a = k("a");
+        let b = k("b");
+        // Txn 1 lands alone first — the batch replay of it must dedup.
+        g.commit_entry(&put_entry(1, &a, 1), true).unwrap();
+        let before = g.log_len(true).unwrap();
+        // One batch: a dup of txn 1 (tries to clobber a=99), a fresh
+        // txn 2, and a txn 3 whose read-set is stale (deterministic
+        // per-member abort).
+        let stale = LogEntry::apply(
+            3,
+            vec![(a.clone(), 0)], // a is at version 1 → conflict
+            vec![MetaOp::Put {
+                key: b.clone(),
+                value: Value::U64(30),
+            }],
+        );
+        let batch = LogEntry::batch(
+            100,
+            vec![put_entry(1, &a, 99), put_entry(2, &b, 2), stale],
+        );
+        assert_eq!(g.commit_entry(&batch, true).unwrap(), Vec::new());
+        // Three member verdicts, ONE Paxos slot.
+        assert_eq!(g.log_len(true).unwrap(), before + 1);
+        // Dedup: txn 1's original apply stands, the replay was skipped.
+        assert_eq!(g.local_get(&a, true).unwrap(), Some((Value::U64(1), 1)));
+        assert_eq!(g.txn_outcomes(1, true).unwrap(), Some(Some(vec![OpOutcome::Done])));
+        // Fresh member applied; aborted member recorded as Some(None).
+        assert_eq!(g.local_get(&b, true).unwrap(), Some((Value::U64(2), 1)));
+        assert!(matches!(g.txn_outcomes(2, true).unwrap(), Some(Some(_))));
+        assert_eq!(g.txn_outcomes(3, true).unwrap(), Some(None));
+        // The wrapper settles under its own id and the replicas agree.
+        assert_eq!(g.txn_outcomes(100, true).unwrap(), Some(Some(Vec::new())));
+        assert!(g.converged());
+        // Retrying the whole batch is absorbed by the wrapper dedup.
+        g.commit_entry(&batch, true).unwrap();
+        assert_eq!(g.log_len(true).unwrap(), before + 1);
+        assert_eq!(g.local_get(&b, true).unwrap(), Some((Value::U64(2), 1)));
+    }
+
+    #[test]
+    fn batch_survives_leader_death_with_member_dedup() {
+        let g = group();
+        let a = k("a");
+        let b = k("b");
+        // Member txn 2 already applied alone on the group.
+        g.commit_entry(&put_entry(2, &b, 7), true).unwrap();
+        let batch = LogEntry::batch(50, vec![put_entry(1, &a, 1), put_entry(2, &b, 99)]);
+        g.commit_entry(&batch, true).unwrap();
+        // Kill the leader; the survivors already learned the batch.
+        g.kill_replica(0);
+        assert_eq!(g.local_get(&a, true).unwrap(), Some((Value::U64(1), 1)));
+        assert_eq!(g.local_get(&b, true).unwrap(), Some((Value::U64(7), 1)));
+        // A failover replay of the same batch changes nothing.
+        g.commit_entry(&batch, true).unwrap();
+        assert_eq!(g.local_get(&b, true).unwrap(), Some((Value::U64(7), 1)));
+        g.recover_replica(0).unwrap();
         assert!(g.converged());
     }
 }

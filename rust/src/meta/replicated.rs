@@ -56,18 +56,20 @@
 //!
 //! [`MetaStore`]: super::MetaStore
 
-use super::group::{Landed, LockedRead, LogEntry, EntryKind, ShardGroup};
+use super::group::{
+    ArmOutcome, ArmedAccept, Landed, LockedRead, LogEntry, EntryKind, ShardGroup,
+};
 use super::ops::{self, MetaOp, OpOutcome};
 use super::shard::ShardStats;
 use super::store::Commit;
 use crate::coordinator::lease::LeaseClock;
 use crate::error::{Error, Result};
-use crate::net::Transport;
+use crate::net::{Peer, Request, Transport};
 use crate::types::{Key, Space, Value};
 use std::collections::HashMap;
 use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 use std::sync::{Arc, Condvar, Mutex, MutexGuard};
-use std::time::Duration;
+use std::time::{Duration, Instant};
 
 /// Proposal order for one shard's entry within a multi-shard commit:
 /// namespace-root REMOVALS first (-1), plain data in the middle (0),
@@ -227,6 +229,111 @@ impl Drop for HoldGuard<'_> {
     }
 }
 
+/// One shard group's group-commit accumulator
+/// (`Config::group_commit_window`): single-shard commits that arrive
+/// while a batch is forming ride the SAME Paxos round.  The first
+/// enqueuer of a batch becomes its collector — it waits out the window
+/// (or a full batch), takes the queue, and flushes one shared
+/// [`EntryKind::Batch`] entry under the group's commit gate; every
+/// member then picks up its own individually-recorded outcome.  There is
+/// no background thread: batching borrows the member threads themselves,
+/// so an idle store costs nothing.
+struct Batcher {
+    window: Duration,
+    max_txns: usize,
+    state: Mutex<BatcherState>,
+    /// Signals both queue growth (to the collecting member) and result
+    /// publication (to waiting members).
+    signal: Condvar,
+}
+
+#[derive(Default)]
+struct BatcherState {
+    /// Commits waiting for the forming batch.
+    queue: Vec<QueuedCommit>,
+    /// Is some member thread currently collecting + flushing?
+    flushing: bool,
+    /// Published outcomes by member transaction id.
+    done: HashMap<u64, MemberOutcome>,
+}
+
+struct QueuedCommit {
+    txn_id: u64,
+    commit: Commit,
+    auto_elect: bool,
+}
+
+enum MemberOutcome {
+    /// The member rode a batch to its verdict.
+    Done(Result<Vec<OpOutcome>>),
+    /// The member could not ride this batch (an orphaned intent covers
+    /// one of its keys); it re-runs through the unbatched path, which
+    /// resolves the orphan and retries.
+    Fallback,
+}
+
+/// How one queued commit fared while the collector staged its batch.
+enum MemberPrep {
+    /// Validated and staged: ride the shared entry as this sub-entry.
+    Sub(LogEntry),
+    /// An orphaned intent covers a touched key — unbatched fallback.
+    Fallback,
+    /// Deterministic rejection (stale read set, validation failure):
+    /// the member fails without ever reaching the log.
+    Fail(Error),
+}
+
+impl Batcher {
+    fn new(window: Duration, max_txns: usize) -> Self {
+        Batcher {
+            window,
+            max_txns,
+            state: Mutex::new(BatcherState::default()),
+            signal: Condvar::new(),
+        }
+    }
+}
+
+/// Duplicate a commit-path error for every member of a shared batch.
+/// [`Error`] is not `Clone` (it can wrap an `io::Error`), but every
+/// variant the metadata commit path produces is duplicable; anything
+/// else degrades to a described [`Error::TxnAborted`].
+fn dup_error(e: &Error) -> Error {
+    match e {
+        Error::TxnConflict { space, key } => Error::TxnConflict {
+            space: *space,
+            key: key.clone(),
+        },
+        Error::TxnAborted { reason } => Error::TxnAborted {
+            reason: reason.clone(),
+        },
+        Error::RetriesExhausted { attempts } => Error::RetriesExhausted {
+            attempts: *attempts,
+        },
+        Error::NoQuorum { alive, total } => Error::NoQuorum {
+            alive: *alive,
+            total: *total,
+        },
+        Error::NotLeader { shard, hint } => Error::NotLeader {
+            shard: *shard,
+            hint: *hint,
+        },
+        Error::ReplicaLost { shard, replica } => Error::ReplicaLost {
+            shard: *shard,
+            replica: *replica,
+        },
+        Error::CorruptMetadata(msg) => Error::CorruptMetadata(msg.clone()),
+        Error::CondAppendFailed { eof, len, cap } => Error::CondAppendFailed {
+            eof: *eof,
+            len: *len,
+            cap: *cap,
+        },
+        other => Error::TxnAborted {
+            reason: format!("group-commit batch failed: {other}"),
+        },
+    }
+}
+
 /// The sharded, Paxos-replicated metadata store.
 pub struct ReplicatedMetaStore {
     groups: Vec<ShardGroup>,
@@ -236,6 +343,12 @@ pub struct ReplicatedMetaStore {
     /// (`Config::meta_2pc`).  Single-shard commits stay one-phase — one
     /// log entry is already atomic.
     two_pc: bool,
+    /// Collapse one 2PC commit's per-group phase-1/phase-2 proposals
+    /// into shared transport scatters (`Config::prepare_batching`).
+    prepare_batching: bool,
+    /// Per-shard group-commit accumulators
+    /// (`Config::group_commit_window`); `None` = group commit off.
+    batchers: Option<Vec<Batcher>>,
     /// Reader-isolation entry holds for the non-2PC path.
     holds: Holds,
     /// Test-only fault-schedule hook (see [`CommitPhase`]).
@@ -283,6 +396,8 @@ impl ReplicatedMetaStore {
             // txn 0 is the noop filler id
             next_txn: AtomicU64::new(1),
             two_pc: false,
+            prepare_batching: false,
+            batchers: None,
             holds: Holds::default(),
             fault_hook: Mutex::new(None),
             hook_installed: std::sync::atomic::AtomicBool::new(false),
@@ -300,6 +415,51 @@ impl ReplicatedMetaStore {
     /// Whether multi-shard commits run the intent-logged 2PC.
     pub fn is_two_pc(&self) -> bool {
         self.two_pc
+    }
+
+    /// Collapse one 2PC commit's per-group phase-1 prepares (and its
+    /// phase-2 decides) into shared transport scatters
+    /// (`Config::prepare_batching`).  Builder-style, like
+    /// [`Self::two_pc`].
+    pub fn prepare_batching(mut self, on: bool) -> Self {
+        self.prepare_batching = on;
+        self
+    }
+
+    /// Whether 2PC phases batch their cross-group scatters.
+    pub fn is_prepare_batching(&self) -> bool {
+        self.prepare_batching
+    }
+
+    /// Enable Paxos group commit (`Config::group_commit_window`):
+    /// single-shard commits arriving within `window` of each other are
+    /// packed into ONE shared log entry — one Paxos round for the whole
+    /// batch — bounded at `max_txns` members (a full batch flushes
+    /// early).  `Duration::ZERO` turns it off.  Builder-style, like
+    /// [`Self::two_pc`].
+    pub fn group_commit(mut self, window: Duration, max_txns: usize) -> Self {
+        self.batchers = (!window.is_zero()).then(|| {
+            (0..self.groups.len())
+                .map(|_| Batcher::new(window, max_txns.max(2)))
+                .collect()
+        });
+        self
+    }
+
+    /// Whether single-shard commits ride the group-commit accumulator.
+    pub fn is_group_commit(&self) -> bool {
+        self.batchers.is_some()
+    }
+
+    /// Total chosen-log slots across every shard group — the Paxos
+    /// commit rounds this store has consumed (observability: group
+    /// commit packs many transactions into one slot, so the delta
+    /// across a workload is the headline write-path metric).
+    pub fn commit_rounds(&self) -> u64 {
+        self.groups
+            .iter()
+            .map(|g| g.log_len(true).unwrap_or(0))
+            .sum()
     }
 
     /// Install (or clear) the deterministic fault-schedule hook.  Test
@@ -571,6 +731,17 @@ impl ReplicatedMetaStore {
         if commit.is_empty() {
             return Ok(Vec::new());
         }
+        if let Some(sid) = self.batchable_shard(commit) {
+            return self.commit_batched(sid, commit, auto_elect);
+        }
+        self.commit_unbatched(commit, auto_elect)
+    }
+
+    /// The pre-group-commit path: gate-holding attempts with orphaned
+    /// intents resolved between them.  Also the fallback when a batch
+    /// member finds its keys covered by an orphan (resolution cannot run
+    /// under the gate the collector holds).
+    fn commit_unbatched(&self, commit: &Commit, auto_elect: bool) -> Result<Vec<OpOutcome>> {
         let mut attempts = 0u32;
         loop {
             match self.try_commit(commit, auto_elect)? {
@@ -588,6 +759,277 @@ impl ReplicatedMetaStore {
                     self.resolve_intent(txn_id, coordinator, shard, &participants, auto_elect)?;
                 }
             }
+        }
+    }
+
+    /// `Some(shard)` when group commit is on and every key `commit`
+    /// touches (reads and ops) lives in one shard group — the only shape
+    /// the accumulator packs.  Multi-shard commits keep their existing
+    /// direct/2PC paths untouched.
+    fn batchable_shard(&self, commit: &Commit) -> Option<usize> {
+        self.batchers.as_ref()?;
+        let mut sid: Option<usize> = None;
+        for key in commit
+            .reads
+            .iter()
+            .map(|(k, _)| k)
+            .chain(commit.ops.iter().flat_map(|op| op.keys()))
+        {
+            let s = self.shard_of(key);
+            if *sid.get_or_insert(s) != s {
+                return None;
+            }
+        }
+        sid
+    }
+
+    /// Commit through the shard's group-commit accumulator: enqueue, let
+    /// one member thread collect the window and propose ONE shared
+    /// [`EntryKind::Batch`] entry, then pick up this transaction's
+    /// individually recorded outcome.  Exactly-once dedup and abort
+    /// reporting are per member — each queued commit keeps its own
+    /// transaction id through the batch.
+    fn commit_batched(
+        &self,
+        sid: usize,
+        commit: &Commit,
+        auto_elect: bool,
+    ) -> Result<Vec<OpOutcome>> {
+        let b = &self.batchers.as_ref().expect("routed here only when enabled")[sid];
+        let txn_id = self.next_txn.fetch_add(1, Ordering::Relaxed);
+        let collect = {
+            let mut st = b.state.lock().unwrap();
+            st.queue.push(QueuedCommit {
+                txn_id,
+                commit: commit.clone(),
+                auto_elect,
+            });
+            let collect = !st.flushing;
+            if collect {
+                st.flushing = true;
+            }
+            // Wake the collector: a filling queue can close the window
+            // early once it reaches `max_txns`.
+            b.signal.notify_all();
+            collect
+        };
+        if collect {
+            self.run_batches(sid, b);
+        }
+        let outcome = {
+            let mut st = b.state.lock().unwrap();
+            loop {
+                if let Some(out) = st.done.remove(&txn_id) {
+                    break out;
+                }
+                st = b.signal.wait(st).unwrap();
+            }
+        };
+        match outcome {
+            MemberOutcome::Done(result) => result,
+            MemberOutcome::Fallback => self.commit_unbatched(commit, auto_elect),
+        }
+    }
+
+    /// The collector loop: wait out the window (or a full batch), take
+    /// the queue, flush it as one shared entry, repeat while new members
+    /// arrived during the flush.  Runs on the first enqueuer's thread.
+    fn run_batches(&self, sid: usize, b: &Batcher) {
+        loop {
+            let members: Vec<QueuedCommit> = {
+                let mut st = b.state.lock().unwrap();
+                let deadline = Instant::now() + b.window;
+                while st.queue.len() < b.max_txns {
+                    let now = Instant::now();
+                    if now >= deadline {
+                        break;
+                    }
+                    let (g, _) = b.signal.wait_timeout(st, deadline - now).unwrap();
+                    st = g;
+                }
+                let take = st.queue.len().min(b.max_txns);
+                st.queue.drain(..take).collect()
+            };
+            if !members.is_empty() {
+                self.flush_batch(sid, members);
+            }
+            let mut st = b.state.lock().unwrap();
+            if st.queue.is_empty() {
+                // Hand the collector role back before leaving: a member
+                // enqueueing after this sees `flushing == false` and
+                // collects its own batch.
+                st.flushing = false;
+                return;
+            }
+        }
+    }
+
+    /// Validate, stage, and propose one collected batch as a single
+    /// shared log entry, then publish each member's individually
+    /// recorded outcome.  Runs on the collecting member's thread,
+    /// holding only the shard's commit gate (like any commit there).
+    fn flush_batch(&self, sid: usize, members: Vec<QueuedCommit>) {
+        let b = &self.batchers.as_ref().expect("enabled")[sid];
+        let auto_elect = members.iter().any(|m| m.auto_elect);
+        let mut results: Vec<(u64, MemberOutcome)> = Vec::with_capacity(members.len());
+        'flush: {
+            let _gate = self.groups[sid].gate.lock().unwrap();
+            // Pre-flight exactly like the unbatched path: a leaderless
+            // group aborts every member while nothing is proposed.
+            if let Err(e) = self.groups[sid].ensure(auto_elect) {
+                for m in &members {
+                    results.push((m.txn_id, MemberOutcome::Done(Err(dup_error(&e)))));
+                }
+                break 'flush;
+            }
+            // Per-member validation + staging against the leader state
+            // PLUS the batch's own overlay — the exact view the replicas
+            // will apply the sub-entries under, in the same order.
+            let mut overlay: HashMap<Key, (Option<Value>, u64)> = HashMap::new();
+            let mut subs: Vec<LogEntry> = Vec::new();
+            for m in &members {
+                // Fault-schedule visibility: each member passes Staged
+                // under the gate, exactly like an unbatched commit.
+                if self.fire(CommitPhase::Staged, m.txn_id) == FaultAction::Abandon {
+                    results.push((
+                        m.txn_id,
+                        MemberOutcome::Done(Err(Self::abandoned(
+                            m.txn_id,
+                            CommitPhase::Staged,
+                        ))),
+                    ));
+                    continue;
+                }
+                match self.prep_member(sid, m, &mut overlay, auto_elect) {
+                    MemberPrep::Sub(entry) => subs.push(entry),
+                    MemberPrep::Fallback => {
+                        results.push((m.txn_id, MemberOutcome::Fallback));
+                    }
+                    MemberPrep::Fail(e) => {
+                        results.push((m.txn_id, MemberOutcome::Done(Err(e))));
+                    }
+                }
+            }
+            if subs.is_empty() {
+                break 'flush;
+            }
+            // ONE shared Paxos round for every surviving member.
+            let batch_txn = self.next_txn.fetch_add(1, Ordering::Relaxed);
+            let entry = LogEntry::batch(batch_txn, subs.clone());
+            match self.groups[sid].commit_entry(&entry, true) {
+                Ok(_) => {
+                    for sub in &subs {
+                        let out = match self.groups[sid].txn_outcomes(sub.txn_id, true) {
+                            Ok(Some(Some(outcomes))) => Ok(outcomes),
+                            // Applied as a deterministic abort (a
+                            // recovered entry raced ahead of the batch).
+                            Ok(Some(None)) | Ok(None) => Err(Error::TxnAborted {
+                                reason: format!(
+                                    "txn {} aborted at replicated apply \
+                                     (group-commit batch {batch_txn})",
+                                    sub.txn_id
+                                ),
+                            }),
+                            Err(e) => Err(e),
+                        };
+                        let _ = self.fire(
+                            CommitPhase::Proposed { shard: sid as u32 },
+                            sub.txn_id,
+                        );
+                        results.push((sub.txn_id, MemberOutcome::Done(out)));
+                    }
+                }
+                Err(e) => {
+                    // The shared entry may or may not have been chosen
+                    // (quorum lost mid-round): indeterminate, exactly
+                    // like a direct commit failing at propose.  Every
+                    // member gets the error; none may replay under a
+                    // fresh transaction id.
+                    for sub in &subs {
+                        results.push((sub.txn_id, MemberOutcome::Done(Err(dup_error(&e)))));
+                    }
+                }
+            }
+        }
+        let mut st = b.state.lock().unwrap();
+        for (txn, out) in results {
+            st.done.insert(txn, out);
+        }
+        drop(st);
+        b.signal.notify_all();
+    }
+
+    /// Validate and stage one queued member against the leader state
+    /// plus `overlay` (the writes of earlier members in the same batch),
+    /// mirroring the order the replicas will apply the sub-entries in.
+    fn prep_member(
+        &self,
+        sid: usize,
+        m: &QueuedCommit,
+        overlay: &mut HashMap<Key, (Option<Value>, u64)>,
+        auto_elect: bool,
+    ) -> MemberPrep {
+        // Orphaned-intent probe, as in the unbatched pre-flight.  A hit
+        // cannot be resolved while the collector holds the gate, so the
+        // member falls back to the unbatched path (which resolves it).
+        if self.two_pc {
+            let mut probe: Vec<&Key> = m
+                .commit
+                .reads
+                .iter()
+                .map(|(k, _)| k)
+                .chain(m.commit.ops.iter().flat_map(|op| op.keys()))
+                .collect();
+            probe.sort_unstable();
+            probe.dedup();
+            for key in probe {
+                match self.groups[sid].local_locked(key, auto_elect, |_| ()) {
+                    Ok(LockedRead::Clear(())) => {}
+                    Ok(LockedRead::Locked { .. }) => return MemberPrep::Fallback,
+                    Err(e) => return MemberPrep::Fail(e),
+                }
+            }
+        }
+        // Read-set validation against this member's view: committed
+        // state as amended by the batch members ahead of it.
+        for (key, observed) in &m.commit.reads {
+            let version = match overlay.get(key) {
+                Some((_, v)) => *v,
+                None => match self.groups[sid].local_version(key, auto_elect) {
+                    Ok(v) => v,
+                    Err(e) => return MemberPrep::Fail(e),
+                },
+            };
+            if version != *observed {
+                return MemberPrep::Fail(Error::TxnConflict {
+                    space: key.space,
+                    key: key.key.clone(),
+                });
+            }
+        }
+        // Stage through the shared overlay staging.  No cross-shard
+        // rewrite can apply here (every key lives in `sid` — that is
+        // what made the commit batchable).
+        let committed = |k: &Key| match overlay.get(k) {
+            Some(entry) => Ok(entry.clone()),
+            None => self.groups[sid].local_entry(k, auto_elect),
+        };
+        match ops::stage(&m.commit.ops, &committed, |_, _| {}) {
+            Ok((delta, _outcomes)) => {
+                for (k, v) in delta {
+                    let version = match overlay.get(&k) {
+                        Some((_, ver)) => *ver,
+                        None => self.groups[sid].local_version(&k, auto_elect).unwrap_or(0),
+                    };
+                    overlay.insert(k, (v, version + 1));
+                }
+                MemberPrep::Sub(LogEntry::apply(
+                    m.txn_id,
+                    m.commit.reads.clone(),
+                    m.commit.ops.clone(),
+                ))
+            }
+            Err(e) => MemberPrep::Fail(e),
         }
     }
 
@@ -814,8 +1256,9 @@ impl ReplicatedMetaStore {
         // keep every staged key unreadable until then.
         let mut vote_yes = true;
         let mut abort_cause: Option<Error> = None;
-        for (sid, idxs) in &by_shard {
-            let entry = LogEntry {
+        let prepares: Vec<LogEntry> = by_shard
+            .iter()
+            .map(|(sid, idxs)| LogEntry {
                 txn_id,
                 reads: commit
                     .reads
@@ -828,35 +1271,79 @@ impl ReplicatedMetaStore {
                     participants: participants.clone(),
                     coordinator,
                 },
-            };
-            match self.groups[*sid].propose_entry(&entry, true) {
-                Ok(Landed::Voted(Some(shard_outcomes))) => {
-                    for (&i, o) in idxs.iter().zip(shard_outcomes) {
-                        outcomes[i] = o;
+            })
+            .collect();
+        if self.prepare_batching {
+            // Batched phase 1 (`Config::prepare_batching`): every
+            // participant's prepare rides ONE shared accept scatter and
+            // ONE shared learn scatter instead of two per group.  The
+            // per-group protocol — entry contents, intents, votes — is
+            // identical; only the scatter shape changes.  Every
+            // participant gets its intent even when another votes no
+            // (the decide-abort below resolves them all), which the
+            // sequential path's early break merely short-circuited.
+            let targets: Vec<(usize, LogEntry)> = by_shard
+                .iter()
+                .map(|(sid, _)| *sid)
+                .zip(prepares.iter().cloned())
+                .collect();
+            let landed = self.propose_scatter(targets);
+            for ((sid, idxs), result) in by_shard.iter().zip(landed) {
+                match result {
+                    Ok(Landed::Voted(Some(shard_outcomes))) => {
+                        for (&i, o) in idxs.iter().zip(shard_outcomes) {
+                            outcomes[i] = o;
+                        }
+                    }
+                    Ok(Landed::Voted(None)) => vote_yes = false,
+                    Ok(Landed::Applied(_)) => {
+                        return Err(Error::CorruptMetadata(format!(
+                            "txn {txn_id} was resolved before its own prepare"
+                        )));
+                    }
+                    Err(e) => {
+                        vote_yes = false;
+                        if abort_cause.is_none() {
+                            abort_cause = Some(e);
+                        }
                     }
                 }
-                // A deterministic no-vote (stale reads or a key locked
-                // by another intent, identical on every replica).
-                Ok(Landed::Voted(None)) => vote_yes = false,
-                Ok(Landed::Applied(_)) => {
-                    return Err(Error::CorruptMetadata(format!(
-                        "txn {txn_id} was resolved before its own prepare"
-                    )));
-                }
-                // The group cannot durably stage (quorum gone mid-phase
-                // 1): decide abort so no other participant strands a
-                // phantom entry — the close of ROADMAP gap (a).
-                Err(e) => {
-                    vote_yes = false;
-                    abort_cause = Some(e);
+                let phase = CommitPhase::Prepared { shard: *sid as u32 };
+                if self.fire(phase, txn_id) == FaultAction::Abandon {
+                    return Err(Self::abandoned(txn_id, phase));
                 }
             }
-            let phase = CommitPhase::Prepared { shard: *sid as u32 };
-            if self.fire(phase, txn_id) == FaultAction::Abandon {
-                return Err(Self::abandoned(txn_id, phase));
-            }
-            if !vote_yes {
-                break; // further prepares would be pointless
+        } else {
+            for ((sid, idxs), entry) in by_shard.iter().zip(&prepares) {
+                match self.groups[*sid].propose_entry(entry, true) {
+                    Ok(Landed::Voted(Some(shard_outcomes))) => {
+                        for (&i, o) in idxs.iter().zip(shard_outcomes) {
+                            outcomes[i] = o;
+                        }
+                    }
+                    // A deterministic no-vote (stale reads or a key locked
+                    // by another intent, identical on every replica).
+                    Ok(Landed::Voted(None)) => vote_yes = false,
+                    Ok(Landed::Applied(_)) => {
+                        return Err(Error::CorruptMetadata(format!(
+                            "txn {txn_id} was resolved before its own prepare"
+                        )));
+                    }
+                    // The group cannot durably stage (quorum gone mid-phase
+                    // 1): decide abort so no other participant strands a
+                    // phantom entry — the close of ROADMAP gap (a).
+                    Err(e) => {
+                        vote_yes = false;
+                        abort_cause = Some(e);
+                    }
+                }
+                let phase = CommitPhase::Prepared { shard: *sid as u32 };
+                if self.fire(phase, txn_id) == FaultAction::Abandon {
+                    return Err(Self::abandoned(txn_id, phase));
+                }
+                if !vote_yes {
+                    break; // further prepares would be pointless
+                }
             }
         }
         if vote_yes && self.fire(CommitPhase::AllPrepared, txn_id) == FaultAction::Abandon {
@@ -903,22 +1390,48 @@ impl ReplicatedMetaStore {
         // (recovery sweep or reader resolution) — its per-op outcomes
         // below are the vote-time staging, which is exactly what its
         // eventual commit flush applies.
-        for (sid, idxs) in &by_shard {
-            if *sid as u32 == coordinator {
-                continue;
-            }
-            match self.groups[*sid].propose_entry(&decide, true) {
-                Ok(Landed::Applied(Some(shard_outcomes))) => {
+        if self.prepare_batching {
+            // Batched phase 2: every non-coordinator decide rides one
+            // shared accept scatter + one shared learn scatter.  A
+            // participant that misses it (aborted there, unreachable)
+            // resolves later, same as the sequential path.
+            let others: Vec<(usize, &Vec<usize>)> = by_shard
+                .iter()
+                .filter(|(sid, _)| *sid as u32 != coordinator)
+                .map(|(sid, idxs)| (*sid, idxs))
+                .collect();
+            let landed = self.propose_scatter(
+                others.iter().map(|(sid, _)| (*sid, decide.clone())).collect(),
+            );
+            for ((sid, idxs), result) in others.iter().zip(landed) {
+                if let Ok(Landed::Applied(Some(shard_outcomes))) = result {
                     for (&i, o) in idxs.iter().zip(shard_outcomes) {
                         outcomes[i] = o;
                     }
                 }
-                // Aborted there, or (Err) unreachable — resolved later.
-                Ok(_) | Err(_) => {}
+                let phase = CommitPhase::Applied { shard: *sid as u32 };
+                if self.fire(phase, txn_id) == FaultAction::Abandon {
+                    return Err(Self::abandoned(txn_id, phase));
+                }
             }
-            let phase = CommitPhase::Applied { shard: *sid as u32 };
-            if self.fire(phase, txn_id) == FaultAction::Abandon {
-                return Err(Self::abandoned(txn_id, phase));
+        } else {
+            for (sid, idxs) in &by_shard {
+                if *sid as u32 == coordinator {
+                    continue;
+                }
+                match self.groups[*sid].propose_entry(&decide, true) {
+                    Ok(Landed::Applied(Some(shard_outcomes))) => {
+                        for (&i, o) in idxs.iter().zip(shard_outcomes) {
+                            outcomes[i] = o;
+                        }
+                    }
+                    // Aborted there, or (Err) unreachable — resolved later.
+                    Ok(_) | Err(_) => {}
+                }
+                let phase = CommitPhase::Applied { shard: *sid as u32 };
+                if self.fire(phase, txn_id) == FaultAction::Abandon {
+                    return Err(Self::abandoned(txn_id, phase));
+                }
             }
         }
         if vote_yes {
@@ -928,6 +1441,93 @@ impl ReplicatedMetaStore {
                 reason: format!("txn {txn_id}: a participant voted to abort at prepare"),
             }))
         }
+    }
+
+    /// Propose one entry per group with the fast-path accept and learn
+    /// scatters COLLAPSED across groups (`Config::prepare_batching`):
+    /// arm every group's phase-1-skipping accept, ship ALL the accepts
+    /// in one transport broadcast, then all the learns in a second — two
+    /// scatters for P groups where sequential proposals pay two per
+    /// group.  Any group that cannot fast-path (fresh leader, dedup hit,
+    /// lost round, leader death mid-flight) falls back to its own
+    /// sequential [`ShardGroup::propose_entry`], preserving the
+    /// per-group protocol exactly.  MUST run with the commit gates of
+    /// every target group held, like any proposal.
+    ///
+    /// Returns one result per target, in target order.
+    fn propose_scatter(&self, targets: Vec<(usize, LogEntry)>) -> Vec<Result<Landed>> {
+        let n = targets.len();
+        let mut results: Vec<Option<Result<Landed>>> = (0..n).map(|_| None).collect();
+        // 1. Arm: fix (leader, slot, ballot) per group; no wire traffic.
+        let mut armed: Vec<(usize, usize, ArmedAccept)> = Vec::new();
+        let mut slow: Vec<(usize, usize, LogEntry)> = Vec::new();
+        for (t, (sid, entry)) in targets.into_iter().enumerate() {
+            match self.groups[sid].arm_fast_accept(&entry, true) {
+                Ok(ArmOutcome::Settled(landed)) => results[t] = Some(Ok(landed)),
+                Ok(ArmOutcome::Armed(a)) => armed.push((t, sid, a)),
+                Ok(ArmOutcome::Slow) => slow.push((t, sid, entry)),
+                Err(e) => results[t] = Some(Err(e)),
+            }
+        }
+        if !armed.is_empty() {
+            // 2. ONE shared accept scatter across every armed group.
+            let mut batch: Vec<(Peer, Request)> = Vec::new();
+            let mut lens: Vec<usize> = Vec::with_capacity(armed.len());
+            for (_, sid, a) in &armed {
+                let reqs = self.groups[*sid].accept_requests(a);
+                lens.push(reqs.len());
+                batch.extend(reqs);
+            }
+            let mut responses = self
+                .transport()
+                .broadcast(batch)
+                .into_iter();
+            // 3. Seal per group; quorum-accepted groups share ONE learn
+            //    scatter.
+            let mut learned: Vec<(usize, usize, ArmedAccept)> = Vec::new();
+            let mut learn_batch: Vec<(Peer, Request)> = Vec::new();
+            for ((t, sid, a), len) in armed.into_iter().zip(lens) {
+                let slice: Vec<_> = responses.by_ref().take(len).collect();
+                match self.groups[sid].seal_fast_accept(slice) {
+                    Ok(true) => {
+                        learn_batch.extend(self.groups[sid].learn_requests(&a));
+                        learned.push((t, sid, a));
+                    }
+                    // Lost cleanly: the sequential driver may re-send
+                    // the SAME ballot/value or run a full round.
+                    Ok(false) => slow.push((t, sid, a.entry)),
+                    Err(e) => results[t] = Some(Err(e)),
+                }
+            }
+            if !learn_batch.is_empty() {
+                for res in self.transport().broadcast(learn_batch) {
+                    let _ = res;
+                }
+            }
+            for (t, sid, a) in learned {
+                match self.groups[sid].settled_after_learn(&a) {
+                    Some(landed) => results[t] = Some(Ok(landed)),
+                    // Leader died between accept and learn: the
+                    // sequential driver settles it (dedup keeps the
+                    // retry exactly-once).
+                    None => slow.push((t, sid, a.entry)),
+                }
+            }
+        }
+        // 4. Sequential fallback for everything that missed the fast
+        //    path — identical to the unbatched proposals.
+        for (t, sid, entry) in slow {
+            results[t] = Some(self.groups[sid].propose_entry(&entry, true));
+        }
+        results
+            .into_iter()
+            .map(|r| r.expect("every scatter target resolves"))
+            .collect()
+    }
+
+    /// The deployment-wide transport (all groups share one).
+    fn transport(&self) -> &Arc<Transport> {
+        self.groups[0].transport()
     }
 
     /// Full scan of one space from the shard leaders (GC; not
@@ -1429,5 +2029,194 @@ mod tests {
         assert_eq!(s.get(&a, true).unwrap().unwrap().0, Value::U64(1));
         assert_eq!(s.get(&b, true).unwrap(), None);
         assert!(s.pending_intents().is_empty());
+    }
+
+    /// `n` distinct keys all living in the same shard group as `seed`.
+    fn same_shard_keys(s: &ReplicatedMetaStore, seed: &str, n: usize) -> Vec<Key> {
+        let sid = s.shard_of(&skey(seed));
+        (0..)
+            .map(|i| skey(&format!("{seed}{i}")))
+            .filter(|k| s.shard_of(k) == sid)
+            .take(n)
+            .collect()
+    }
+
+    #[test]
+    fn group_commit_single_caller_still_commits() {
+        let s = store().group_commit(Duration::from_millis(2), 8);
+        assert!(s.is_group_commit());
+        let k = skey("a");
+        // Routed through the accumulator (single-shard), still lands
+        // with its own outcome and the usual read-your-write semantics.
+        s.commit(&put(&k, Value::U64(42)), true).unwrap();
+        assert_eq!(s.get(&k, true).unwrap(), Some((Value::U64(42), 1)));
+        // Multi-shard commits bypass the accumulator entirely.
+        let keys: Vec<Key> = (0..16).map(|i| skey(&format!("k{i}"))).collect();
+        assert!(s
+            .batchable_shard(&Commit {
+                reads: vec![],
+                ops: keys
+                    .iter()
+                    .map(|k| MetaOp::Put {
+                        key: k.clone(),
+                        value: Value::U64(7),
+                    })
+                    .collect(),
+            })
+            .is_none());
+        assert!(s.converged());
+    }
+
+    #[test]
+    fn group_commit_batch_applies_members_individually_in_one_round() {
+        let s = store().group_commit(Duration::from_millis(2), 8);
+        let keys = same_shard_keys(&s, "g", 3);
+        let sid = s.shard_of(&keys[0]);
+        // Key 0 starts at version 1.
+        s.commit(&put(&keys[0], Value::U64(1)), true).unwrap();
+        let rounds_before = s.groups[sid].log_len(true).unwrap();
+        // Three members, staged as ONE batch: a clean overwrite of key
+        // 0, a member whose read set is stale BECAUSE of the first
+        // member (the in-batch overlay bumps key 0 to version 2), and
+        // an independent put.
+        let members = vec![
+            QueuedCommit {
+                txn_id: s.next_txn.fetch_add(1, Ordering::Relaxed),
+                commit: Commit {
+                    reads: vec![(keys[0].clone(), 1)],
+                    ops: vec![MetaOp::Put {
+                        key: keys[0].clone(),
+                        value: Value::U64(10),
+                    }],
+                },
+                auto_elect: true,
+            },
+            QueuedCommit {
+                txn_id: s.next_txn.fetch_add(1, Ordering::Relaxed),
+                commit: Commit {
+                    reads: vec![(keys[0].clone(), 1)],
+                    ops: vec![MetaOp::Put {
+                        key: keys[1].clone(),
+                        value: Value::U64(20),
+                    }],
+                },
+                auto_elect: true,
+            },
+            QueuedCommit {
+                txn_id: s.next_txn.fetch_add(1, Ordering::Relaxed),
+                commit: put(&keys[2], Value::U64(30)),
+                auto_elect: true,
+            },
+        ];
+        let ids: Vec<u64> = members.iter().map(|m| m.txn_id).collect();
+        s.flush_batch(sid, members);
+        let mut st = s.batchers.as_ref().unwrap()[sid].state.lock().unwrap();
+        assert!(matches!(
+            st.done.remove(&ids[0]),
+            Some(MemberOutcome::Done(Ok(_)))
+        ));
+        match st.done.remove(&ids[1]) {
+            Some(MemberOutcome::Done(Err(Error::TxnConflict { .. }))) => {}
+            _ => panic!("expected the in-batch overlay to fail member 1's stale read"),
+        }
+        assert!(matches!(
+            st.done.remove(&ids[2]),
+            Some(MemberOutcome::Done(Ok(_)))
+        ));
+        drop(st);
+        // One Paxos slot for the whole batch; per-member effects exact.
+        assert_eq!(s.groups[sid].log_len(true).unwrap(), rounds_before + 1);
+        assert_eq!(s.get(&keys[0], true).unwrap(), Some((Value::U64(10), 2)));
+        assert_eq!(s.get(&keys[1], true).unwrap(), None);
+        assert_eq!(s.get(&keys[2], true).unwrap(), Some((Value::U64(30), 1)));
+        assert!(s.converged());
+    }
+
+    #[test]
+    fn group_commit_storm_packs_rounds() {
+        // 8 concurrent single-shard commits share far fewer Paxos
+        // rounds than 8 sequential ones would (the tentpole claim).
+        let s = Arc::new(store().group_commit(Duration::from_millis(200), 8));
+        let keys = same_shard_keys(&s, "w", 8);
+        let sid = s.shard_of(&keys[0]);
+        s.groups[sid].ensure(true).unwrap(); // warm the leader lease
+        let rounds_before = s.groups[sid].log_len(true).unwrap();
+        let handles: Vec<_> = keys
+            .iter()
+            .map(|k| {
+                let s = s.clone();
+                let c = put(k, Value::U64(9));
+                std::thread::spawn(move || s.commit(&c, true).map(|_| ()))
+            })
+            .collect();
+        for h in handles {
+            h.join().unwrap().unwrap();
+        }
+        let rounds = s.groups[sid].log_len(true).unwrap() - rounds_before;
+        assert!(rounds >= 1);
+        assert!(
+            rounds < 8,
+            "8 concurrent commits consumed {rounds} rounds — group commit never packed"
+        );
+        for k in &keys {
+            assert_eq!(s.get(k, true).unwrap(), Some((Value::U64(9), 1)));
+        }
+        assert!(s.converged());
+    }
+
+    #[test]
+    fn prepare_batched_2pc_uses_fewer_scatters_than_sequential() {
+        let run = |batched: bool| -> (u64, u64) {
+            let t = Arc::new(Transport::instant());
+            let s = ReplicatedMetaStore::new(
+                4,
+                3,
+                t.clone(),
+                LeaseClock::manual(),
+                20,
+            )
+            .two_pc(true)
+            .prepare_batching(batched);
+            let (a, b) = cross_shard_keys(&s);
+            // Warm both groups (election + first proposal run phase 1;
+            // the fast path only exists on a settled leader).
+            s.commit(&put(&a, Value::U64(1)), true).unwrap();
+            s.commit(&put(&b, Value::U64(1)), true).unwrap();
+            let before = (t.scatters_sent(), t.envelopes_sent());
+            s.commit(&put_both(&a, &b), true).unwrap();
+            assert_eq!(s.get(&a, true).unwrap().unwrap().0, Value::U64(1));
+            assert!(s.pending_intents().is_empty());
+            assert!(s.converged());
+            (
+                t.scatters_sent() - before.0,
+                t.envelopes_sent() - before.1,
+            )
+        };
+        let (seq_scatters, seq_env) = run(false);
+        let (bat_scatters, bat_env) = run(true);
+        // Same envelope count (the protocol is unchanged), strictly
+        // fewer scatters (phases collapse into shared broadcasts).
+        assert_eq!(seq_env, bat_env);
+        assert!(
+            bat_scatters < seq_scatters,
+            "batched 2PC sent {bat_scatters} scatters vs sequential {seq_scatters}"
+        );
+    }
+
+    #[test]
+    fn prepare_batched_2pc_survives_leader_kill() {
+        let s = store_2pc().prepare_batching(true);
+        let (a, b) = cross_shard_keys(&s);
+        s.commit(&put(&a, Value::U64(1)), true).unwrap();
+        // Kill every group's replica 0: the batched phases must fall
+        // back through elections (arm finds `needs_prepare` and defers
+        // to the sequential driver) and still commit atomically.
+        s.kill_replica(0);
+        s.commit(&put_both(&a, &b), true).unwrap();
+        assert_eq!(s.get(&a, true).unwrap().unwrap().0, Value::U64(1));
+        assert_eq!(s.get(&b, true).unwrap().unwrap().0, Value::U64(1));
+        assert!(s.pending_intents().is_empty());
+        s.recover_replica(0).unwrap();
+        assert!(s.converged());
     }
 }

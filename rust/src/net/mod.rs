@@ -20,7 +20,7 @@
 
 pub mod transport;
 
-pub use transport::{serve_fail_stop, Handler, Peer, Pending, Request, Response, Transport};
+pub use transport::{serve_fail_stop, Handler, Peer, Pending, Plane, Request, Response, Transport};
 
 use std::time::Duration;
 

@@ -164,7 +164,39 @@ enum WireCost {
     Free,
 }
 
+/// Which plane an envelope belongs to, for the per-kind counters next
+/// to [`Transport::envelopes_sent`] — benches report metadata, data,
+/// and Paxos traffic separately (the write-path ratios compare Paxos
+/// rounds, which total counts alone cannot isolate).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Plane {
+    /// Slice/block payload traffic (the storage servers).
+    Data,
+    /// Client-facing metadata envelopes (`MetaCommit` / `MetaGet`).
+    Meta,
+    /// Consensus traffic between a shard group's front-end and its
+    /// replicas (prepare/accept/learn/status/pull/lease).
+    Paxos,
+}
+
 impl Request {
+    fn plane(&self) -> Plane {
+        match self {
+            Request::CreateSlice { .. }
+            | Request::RetrieveSlice { .. }
+            | Request::RetrieveMany { .. }
+            | Request::AppendBlock { .. }
+            | Request::ReadBlock { .. } => Plane::Data,
+            Request::MetaCommit { .. } | Request::MetaGet { .. } => Plane::Meta,
+            Request::PaxosPrepare { .. }
+            | Request::PaxosAccept { .. }
+            | Request::PaxosLearn { .. }
+            | Request::PaxosStatus { .. }
+            | Request::PaxosPull { .. }
+            | Request::LeaseRequest { .. } => Plane::Paxos,
+        }
+    }
+
     fn wire_cost(&self) -> WireCost {
         match self {
             Request::CreateSlice { data, .. } => WireCost::Upload(data.len() as u64),
@@ -408,6 +440,16 @@ pub struct Transport {
     /// Envelopes ever sent — the read-path coalescing benchmarks count
     /// these (one `RetrieveMany` replaces many `RetrieveSlice`s).
     envelopes: std::sync::atomic::AtomicU64,
+    /// Per-plane splits of `envelopes` (data / metadata / Paxos), so the
+    /// write-path benches can report consensus traffic separately.
+    /// Strictly additive: `envelopes` keeps its exact PR-3 semantics.
+    data_envelopes: std::sync::atomic::AtomicU64,
+    meta_envelopes: std::sync::atomic::AtomicU64,
+    paxos_envelopes: std::sync::atomic::AtomicU64,
+    /// `broadcast` calls ever issued — one scatter-gather, whatever its
+    /// width.  Prepare batching collapses a 2PC commit's per-group
+    /// scatters; this counter is what proves it.
+    scatters: std::sync::atomic::AtomicU64,
 }
 
 impl fmt::Debug for Transport {
@@ -451,6 +493,10 @@ impl Transport {
             sender,
             workers,
             envelopes: std::sync::atomic::AtomicU64::new(0),
+            data_envelopes: std::sync::atomic::AtomicU64::new(0),
+            meta_envelopes: std::sync::atomic::AtomicU64::new(0),
+            paxos_envelopes: std::sync::atomic::AtomicU64::new(0),
+            scatters: std::sync::atomic::AtomicU64::new(0),
         }
     }
 
@@ -470,6 +516,23 @@ impl Transport {
     /// Total envelopes ever sent through this transport.
     pub fn envelopes_sent(&self) -> u64 {
         self.envelopes.load(std::sync::atomic::Ordering::Relaxed)
+    }
+
+    /// Envelopes ever sent on one plane (data / metadata / Paxos).  The
+    /// three planes partition [`Transport::envelopes_sent`] exactly.
+    pub fn envelopes_sent_on(&self, plane: Plane) -> u64 {
+        let c = match plane {
+            Plane::Data => &self.data_envelopes,
+            Plane::Meta => &self.meta_envelopes,
+            Plane::Paxos => &self.paxos_envelopes,
+        };
+        c.load(std::sync::atomic::Ordering::Relaxed)
+    }
+
+    /// Scatter-gather batches ever issued via [`Transport::broadcast`]
+    /// (a batch of any width counts once; single `send`s count zero).
+    pub fn scatters_sent(&self) -> u64 {
+        self.scatters.load(std::sync::atomic::Ordering::Relaxed)
     }
 
     /// Serve one envelope, charging the wire exactly once.  Runs on a
@@ -499,6 +562,12 @@ impl Transport {
     pub fn send(&self, to: Peer, req: Request) -> Pending {
         self.envelopes
             .fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+        let plane_counter = match req.plane() {
+            Plane::Data => &self.data_envelopes,
+            Plane::Meta => &self.meta_envelopes,
+            Plane::Paxos => &self.paxos_envelopes,
+        };
+        plane_counter.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
         let slot = Slot::new();
         let inline = self.sender.is_none() || matches!(req.wire_cost(), WireCost::Free);
         if inline {
@@ -531,6 +600,8 @@ impl Transport {
     /// the *maximum* single-envelope cost, not the sum; per-envelope
     /// failures are returned in place for caller-side failover.
     pub fn broadcast(&self, batch: Vec<(Peer, Request)>) -> Vec<Result<Response>> {
+        self.scatters
+            .fetch_add(1, std::sync::atomic::Ordering::Relaxed);
         let pending: Vec<Pending> = batch
             .into_iter()
             .map(|(to, req)| self.send(to, req))
@@ -653,6 +724,45 @@ mod tests {
             );
         }
         assert_eq!(t.envelopes_sent(), 3);
+    }
+
+    #[test]
+    fn per_plane_counters_partition_the_total() {
+        let t = Transport::new(LinkModel::instant(), 0);
+        let e = echo();
+        // One data-plane envelope...
+        let _ = t.call(
+            e.clone(),
+            Request::ReadBlock {
+                block: 0,
+                offset: 0,
+                len: 1,
+            },
+        );
+        // ...one metadata envelope (unsupported by Echo, still counted)...
+        let _ = t.call(
+            e.clone(),
+            Request::MetaGet {
+                key: Key::sys("k"),
+            },
+        );
+        // ...and two Paxos-plane envelopes in one scatter.
+        let _ = t.broadcast(vec![
+            (e.clone() as Peer, Request::PaxosStatus { shard: 0 }),
+            (e.clone() as Peer, Request::PaxosStatus { shard: 1 }),
+        ]);
+        assert_eq!(t.envelopes_sent(), 4);
+        assert_eq!(t.envelopes_sent_on(Plane::Data), 1);
+        assert_eq!(t.envelopes_sent_on(Plane::Meta), 1);
+        assert_eq!(t.envelopes_sent_on(Plane::Paxos), 2);
+        assert_eq!(
+            t.envelopes_sent_on(Plane::Data)
+                + t.envelopes_sent_on(Plane::Meta)
+                + t.envelopes_sent_on(Plane::Paxos),
+            t.envelopes_sent(),
+            "planes partition the total exactly"
+        );
+        assert_eq!(t.scatters_sent(), 1, "one broadcast = one scatter");
     }
 
     #[test]

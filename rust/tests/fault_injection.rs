@@ -584,6 +584,129 @@ fn two_pc_decision_replay_through_crash_recovery_is_exactly_once() {
     support::assert_append_exactly_once(&store, &keys, true);
 }
 
+// ---------------------------------------------------------------------
+// Write-path symmetry (PR 6): group commit and write-behind under faults.
+// ---------------------------------------------------------------------
+
+#[test]
+fn group_commit_batch_from_two_clients_survives_leader_death_mid_batch() {
+    use std::collections::HashMap;
+    use std::sync::atomic::{AtomicBool, Ordering};
+    use std::time::Duration;
+    use wtf::coordinator::lease::LeaseClock;
+    use wtf::meta::{CommitPhase, FaultAction, ReplicatedMetaStore};
+    use wtf::net::Transport;
+    use wtf::types::Key;
+
+    // A 2PC store with group commit on: a generous window and a batch
+    // size of exactly two, so the first committer (the collector)
+    // waits for the second and both ride ONE shared log entry.
+    let store = Arc::new(
+        ReplicatedMetaStore::new(
+            4,
+            support::GROUP_REPLICAS as u8,
+            Arc::new(Transport::instant()),
+            LeaseClock::manual(),
+            20,
+        )
+        .two_pc(true)
+        .group_commit(Duration::from_millis(200), 2),
+    );
+
+    // Two keys on the SAME shard: both commits are single-shard and
+    // eligible for the same group's batch.
+    let (sid, keys) = {
+        let mut by_shard: HashMap<u32, Vec<Key>> = HashMap::new();
+        let mut found = None;
+        for i in 0..10_000 {
+            let k = Key::new(Space::Region, format!("gc{i}"));
+            let s = store.group_of(&k).shard();
+            let bucket = by_shard.entry(s).or_default();
+            bucket.push(k);
+            if bucket.len() == 2 {
+                found = Some((s, bucket.clone()));
+                break;
+            }
+        }
+        found.expect("two same-shard keys")
+    };
+
+    // Kill the shard's bootstrap leader (replica 0) the first time a
+    // member stages inside the batch flush — mid-batch, before the
+    // shared proposal goes to the wire.
+    let killed = Arc::new(AtomicBool::new(false));
+    {
+        let weak = Arc::downgrade(&store);
+        let killed = killed.clone();
+        store.set_fault_hook(Some(Arc::new(move |phase, _txn| {
+            if matches!(phase, CommitPhase::Staged) && !killed.swap(true, Ordering::SeqCst) {
+                if let Some(s) = weak.upgrade() {
+                    s.groups()[sid as usize].kill_replica(0);
+                }
+            }
+            FaultAction::Continue
+        })));
+    }
+
+    let threads: Vec<_> = keys
+        .iter()
+        .cloned()
+        .map(|k| {
+            let store = store.clone();
+            std::thread::spawn(move || store.commit(&support::append_commit(&[k]), true))
+        })
+        .collect();
+    let results: Vec<_> = threads.into_iter().map(|t| t.join().unwrap()).collect();
+    store.set_fault_hook(None);
+    assert!(killed.load(Ordering::SeqCst), "the fault hook never fired");
+    for r in results {
+        r.expect("a mid-batch leader death must elect through, not lose txns");
+    }
+
+    // Exactly-once per member: each key appended once (eof 8, version
+    // 1), never doubled by the election-replayed batch entry.
+    support::heal_all(&store);
+    support::assert_append_exactly_once(&store, &keys, true);
+    assert!(store.converged(), "live replicas diverged after the batch");
+}
+
+#[test]
+fn write_behind_flush_boundary_publishes_queued_appends() {
+    let mut cfg = Config::replicated_test();
+    cfg.write_behind = true;
+    let cl = Cluster::builder().config(cfg).build().unwrap();
+    let c = cl.client();
+    let fd = c.create("/wb").unwrap();
+
+    // Enqueues return the ASSUMED offsets immediately — the pipeline's
+    // promise, validated below once the flush boundary makes it real.
+    for i in 0..8u8 {
+        let at = c.append_bytes(&fd, &[b'a' + i; 16]).unwrap();
+        assert_eq!(at, u64::from(i) * 16, "assumed offset drifted");
+    }
+    c.flush().unwrap();
+    let data = c.read_at(&fd, 0, 128).unwrap();
+    for (i, rec) in data.chunks(16).enumerate() {
+        assert!(
+            rec.iter().all(|&b| b == b'a' + i as u8),
+            "append {i} landed out of order or torn"
+        );
+    }
+
+    // A WTF transaction commit is also a reconciliation boundary: after
+    // it returns, earlier queued writes are durably published.
+    c.append_bytes(&fd, &[b'z'; 16]).unwrap();
+    let mut t = c.begin();
+    let tf = t.create("/wb-marker").unwrap();
+    t.write(tf, b"marker").unwrap();
+    t.commit().unwrap();
+    assert_eq!(c.len(&c.open("/wb").unwrap()).unwrap(), 144);
+    assert!(cl.meta().replicated_store().unwrap().converged());
+
+    // close() is the third boundary (a no-op here: already drained).
+    c.close(fd).unwrap();
+}
+
 #[test]
 fn transaction_retry_budget_exhaustion_is_clean() {
     let mut cfg = Config::test();

@@ -42,17 +42,26 @@ pub fn base_seed() -> u64 {
 /// A fresh `shards`-group, 3-replica, manually-clocked replicated store
 /// with the intent-logged 2PC enabled — the fault-schedule testbed
 /// (manual clock: lease waits advance deterministically, never block).
+///
+/// With `WTF_TEST_WRITE_PATH=1` (a CI matrix dimension), the PR-6
+/// write-path knobs ride along — group commit with a 1 ms window and
+/// prepare batching — so every fault schedule also exercises the
+/// batched proposal paths without changing any test.
 pub fn store_2pc(shards: u32) -> Arc<ReplicatedMetaStore> {
-    Arc::new(
-        ReplicatedMetaStore::new(
-            shards,
-            GROUP_REPLICAS as u8,
-            Arc::new(Transport::instant()),
-            LeaseClock::manual(),
-            20,
-        )
-        .two_pc(true),
+    let mut store = ReplicatedMetaStore::new(
+        shards,
+        GROUP_REPLICAS as u8,
+        Arc::new(Transport::instant()),
+        LeaseClock::manual(),
+        20,
     )
+    .two_pc(true);
+    if std::env::var("WTF_TEST_WRITE_PATH").as_deref() == Ok("1") {
+        store = store
+            .group_commit(std::time::Duration::from_millis(1), 8)
+            .prepare_batching(true);
+    }
+    Arc::new(store)
 }
 
 /// Named instants of the 2PC protocol a scripted fault can fire at

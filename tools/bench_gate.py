@@ -1,25 +1,35 @@
 #!/usr/bin/env python3
-"""Read-path bench regression gate (CI bench-smoke job).
+"""Read/write-path bench regression gate (CI bench-smoke job).
 
-Checks a freshly produced BENCH_read_path.json for regressions.  All
+Checks a freshly produced BENCH_read_path.json (and, when
+--write-fresh is given, BENCH_write_path.json) for regressions.  All
 hard checks are SAME-RUN comparisons, so they are immune to cross-host
 wall-clock variance (the committed baseline may have been produced on a
 different machine, or be modeled — the authoring container has no Rust
 toolchain):
 
-1. Envelope ratios (deterministic counts, always enforced):
+1. Read-path envelope ratios (deterministic counts, always enforced):
      - envelope_ratio_seq  >= --min-seq-ratio (default 4.0, the
        acceptance bound: cached+coalesced whole-file read must issue
        >= 4x fewer transport envelopes than seed);
      - envelope_ratio_sort >= 1.0 (the fast-read sort must not issue
        more envelopes than seed).
-2. Wall clock, within the fresh file only (enforced when the fresh rows
-   are measured, i.e. mean_ns > 0): for each row name present in both
-   configs, the fast config must not be more than --max-slowdown
+2. Write-path batching ratios (deterministic counts, enforced when
+   --write-fresh is given):
+     - envelope_ratio_batched >= --min-batch-ratio (default 2.0: a
+       group-committed N=8 storm must issue >= 2x fewer Paxos-plane
+       envelopes than N independent commits);
+     - commit_rounds_ratio_storm > 1.0 (the storm must consume fewer
+       Paxos commit rounds batched than sequential);
+     - scatter_ratio_2pc > 1.0 (prepare batching must issue fewer
+       transport scatters, never more).
+3. Wall clock, within each fresh file only (enforced when the fresh
+   rows are measured, i.e. mean_ns > 0): for each row name present in
+   both configs, the fast config must not be more than --max-slowdown
    (default 1.25, i.e. >25%) slower than the seed config measured in
    the SAME run on the SAME machine.
 
-The committed baseline is still loaded and any drift is printed for
+The committed baselines are still loaded and any drift is printed for
 trend-watching, but cross-file wall-clock differences never fail the
 gate.
 """
@@ -35,6 +45,13 @@ SAME_RUN_PAIRS = [
     ("sort-small", "fast-read", "seed"),
 ]
 
+# Same-run pairs for the write-path sweep (BENCH_write_path.json).
+WRITE_SAME_RUN_PAIRS = [
+    ("commit-storm", "group-commit", "seed"),
+    ("2pc-cross-shard", "prepare-batching", "seed"),
+    ("append-burst", "write-behind", "seed"),
+]
+
 
 def load(path):
     with open(path) as f:
@@ -45,12 +62,50 @@ def rows_by_key(doc):
     return {(r.get("row", ""), r.get("config", "")): r for r in doc.get("rows", [])}
 
 
+def clock_pairs(fresh_rows, pairs, max_slowdown, failures):
+    """Same-run fast-vs-seed wall clock; returns pairs actually checked."""
+    checked = 0
+    for row, fast_cfg, seed_cfg in pairs:
+        f_row = fresh_rows.get((row, fast_cfg))
+        s_row = fresh_rows.get((row, seed_cfg))
+        if not f_row or not s_row:
+            continue
+        f_ns, s_ns = f_row.get("mean_ns", 0), s_row.get("mean_ns", 0)
+        if not f_ns or not s_ns:
+            continue  # modeled rows carry mean_ns = 0
+        checked += 1
+        slowdown = f_ns / s_ns
+        if slowdown > max_slowdown:
+            failures.append(
+                f"{row}: [{fast_cfg}] is {slowdown:.2f}x [{seed_cfg}] in the same "
+                f"run ({f_ns:.0f} ns vs {s_ns:.0f} ns; limit {max_slowdown}x)"
+            )
+    return checked
+
+
+def drift_notes(base, fresh_rows, max_slowdown):
+    """Informational only: drift vs the committed baseline."""
+    base_rows = rows_by_key(base)
+    for key, row in fresh_rows.items():
+        b = base_rows.get(key)
+        if b and b.get("mean_ns") and row.get("mean_ns"):
+            drift = row["mean_ns"] / b["mean_ns"]
+            if drift > max_slowdown or drift < 1.0 / max_slowdown:
+                print(
+                    f"bench_gate: note: {key[0]} [{key[1]}] wall clock {drift:.2f}x "
+                    "the committed baseline (informational; cross-host)"
+                )
+
+
 def main():
     p = argparse.ArgumentParser(description=__doc__)
     p.add_argument("--baseline", required=True, help="committed BENCH_read_path.json")
     p.add_argument("--fresh", required=True, help="freshly produced BENCH_read_path.json")
+    p.add_argument("--write-baseline", help="committed BENCH_write_path.json")
+    p.add_argument("--write-fresh", help="freshly produced BENCH_write_path.json")
     p.add_argument("--max-slowdown", type=float, default=1.25)
     p.add_argument("--min-seq-ratio", type=float, default=4.0)
+    p.add_argument("--min-batch-ratio", type=float, default=2.0)
     a = p.parse_args()
 
     base, fresh = load(a.baseline), load(a.fresh)
@@ -70,45 +125,60 @@ def main():
             "(fast-read sort issues MORE envelopes than seed)"
         )
 
-    # 2. Same-run wall clock: fast config vs seed config, one machine.
-    fresh_rows = rows_by_key(fresh)
-    clock_checked = 0
-    for row, fast_cfg, seed_cfg in SAME_RUN_PAIRS:
-        f_row = fresh_rows.get((row, fast_cfg))
-        s_row = fresh_rows.get((row, seed_cfg))
-        if not f_row or not s_row:
-            continue
-        f_ns, s_ns = f_row.get("mean_ns", 0), s_row.get("mean_ns", 0)
-        if not f_ns or not s_ns:
-            continue  # modeled rows carry mean_ns = 0
-        clock_checked += 1
-        slowdown = f_ns / s_ns
-        if slowdown > a.max_slowdown:
+    # 2. Write-path batching ratios (when a write-path file was produced).
+    batch_ratio = rounds_ratio = scatter_ratio = None
+    write_fresh_rows = {}
+    write_base = {}
+    if a.write_fresh:
+        write_fresh = load(a.write_fresh)
+        write_base = load(a.write_baseline) if a.write_baseline else {}
+        write_fresh_rows = rows_by_key(write_fresh)
+        batch_ratio = float(write_fresh.get("envelope_ratio_batched", 0.0))
+        if batch_ratio < a.min_batch_ratio:
             failures.append(
-                f"{row}: [{fast_cfg}] is {slowdown:.2f}x [{seed_cfg}] in the same "
-                f"run ({f_ns:.0f} ns vs {s_ns:.0f} ns; limit {a.max_slowdown}x)"
+                f"envelope_ratio_batched {batch_ratio:.2f} < {a.min_batch_ratio} "
+                "(group-committed storm no longer saves Paxos-plane envelopes)"
+            )
+        rounds_ratio = float(write_fresh.get("commit_rounds_ratio_storm", 0.0))
+        if rounds_ratio <= 1.0:
+            failures.append(
+                f"commit_rounds_ratio_storm {rounds_ratio:.2f} <= 1.0 "
+                "(batched storm consumes as many Paxos rounds as sequential)"
+            )
+        scatter_ratio = float(write_fresh.get("scatter_ratio_2pc", 0.0))
+        if scatter_ratio <= 1.0:
+            failures.append(
+                f"scatter_ratio_2pc {scatter_ratio:.2f} <= 1.0 "
+                "(prepare batching issues as many transport scatters as sequential)"
             )
 
-    # 3. Informational only: drift vs the committed baseline.
-    base_rows = rows_by_key(base)
-    for key, row in fresh_rows.items():
-        b = base_rows.get(key)
-        if b and b.get("mean_ns") and row.get("mean_ns"):
-            drift = row["mean_ns"] / b["mean_ns"]
-            if drift > a.max_slowdown or drift < 1.0 / a.max_slowdown:
-                print(
-                    f"bench_gate: note: {key[0]} [{key[1]}] wall clock {drift:.2f}x "
-                    "the committed baseline (informational; cross-host)"
-                )
+    # 3. Same-run wall clock: fast config vs seed config, one machine.
+    fresh_rows = rows_by_key(fresh)
+    clock_checked = clock_pairs(fresh_rows, SAME_RUN_PAIRS, a.max_slowdown, failures)
+    clock_checked += clock_pairs(
+        write_fresh_rows, WRITE_SAME_RUN_PAIRS, a.max_slowdown, failures
+    )
+
+    # 4. Informational only: drift vs the committed baselines.
+    drift_notes(base, fresh_rows, a.max_slowdown)
+    if write_fresh_rows:
+        drift_notes(write_base, write_fresh_rows, a.max_slowdown)
 
     if failures:
         print("bench_gate: FAIL")
         for f in failures:
             print(f"  - {f}")
         return 1
+    write_part = (
+        f", envelope_ratio_batched {batch_ratio:.2f}, "
+        f"commit_rounds_ratio_storm {rounds_ratio:.2f}, "
+        f"scatter_ratio_2pc {scatter_ratio:.2f}"
+        if batch_ratio is not None
+        else ""
+    )
     print(
         f"bench_gate: OK (envelope_ratio_seq {seq:.2f}, "
-        f"envelope_ratio_sort {sort_ratio:.2f}, "
+        f"envelope_ratio_sort {sort_ratio:.2f}{write_part}, "
         f"same-run wall-clock pairs checked: {clock_checked})"
     )
     return 0
