@@ -1,0 +1,237 @@
+//! Durable WAL sweep (PR 7): what durability costs on the commit path
+//! and what checkpointing buys back at restart.
+//!
+//! Three measurements:
+//!
+//! * `commit`: mean latency of a single-shard durable commit, by fsync
+//!   policy (`in-memory` seed, then `sync-none`, `sync-batch`,
+//!   `sync-always`).  Every durable mode writes the record BEFORE the
+//!   ack; the modes differ only in when the write is forced to media.
+//! * `replay`: wall-clock to reopen a replica WAL, against log length
+//!   (100 vs 300 chosen records, no checkpoint).  Replay cost is linear
+//!   in the un-checkpointed suffix.
+//! * `replay-checkpointed`: the same 300-record history with a
+//!   checkpoint every 64 chosen records: recovery loads one image and
+//!   replays only the 44-record suffix.  The deterministic record-count
+//!   ratio (`replay_ratio_checkpointed`) is what the CI gate checks —
+//!   checkpointed replay must beat full replay.
+//!
+//! Set `WTF_BENCH_WAL_JSON=<path>` to emit the results as JSON
+//! (committed as `BENCH_wal.json` for the CI regression gate).
+
+use std::path::Path;
+use std::sync::Arc;
+use wtf::bench::Bench;
+use wtf::config::WalSync;
+use wtf::coordinator::lease::LeaseClock;
+use wtf::meta::{Checkpoint, Commit, LogEntry, MetaOp, ReplicatedMetaStore};
+use wtf::meta::{ReplicaWal, WalRecord, WalSetup};
+use wtf::net::Transport;
+use wtf::types::{Key, SliceData, SlicePtr, Space, Value};
+use wtf::util::TempDir;
+
+struct Row {
+    row: &'static str,
+    config: &'static str,
+    /// Chosen records in the history this row measured.
+    records: u64,
+    /// Records a restart replays beyond the checkpoint image.
+    replayed: u64,
+    mean_ns: f64,
+}
+
+fn append_commit(key: &Key) -> Commit {
+    Commit {
+        reads: vec![],
+        ops: vec![MetaOp::RegionAppendEof {
+            key: key.clone(),
+            data: SliceData::Stored(vec![SlicePtr {
+                server: 1,
+                backing: 0,
+                offset: 0,
+                len: 8,
+            }]),
+            len: 8,
+            cap: 1 << 30,
+        }],
+    }
+}
+
+/// Mean single-shard commit latency with the given durability mode
+/// (`None` = the in-memory seed).  A huge checkpoint interval keeps
+/// checkpoint installs out of the measured window: this row is the cost
+/// of the append+sync discipline alone.
+fn commit_latency(config: &'static str, sync: Option<WalSync>) -> Row {
+    let dir = TempDir::new("wtf-bench-wal-commit").unwrap();
+    let mut store = ReplicatedMetaStore::new(
+        2,
+        3,
+        Arc::new(Transport::instant()),
+        LeaseClock::manual(),
+        20,
+    )
+    .two_pc(true);
+    if let Some(s) = sync {
+        store = store.durable(dir.path(), s, 1 << 30).unwrap();
+    }
+    let store = Arc::new(store);
+    let key = Key::new(Space::Region, "walbench");
+    // Warm: the election and first-proposal prepare happen here.
+    store.commit(&append_commit(&key), true).unwrap();
+
+    let s = Bench::new(format!("wal/commit [{config}]"))
+        .warmup(8)
+        .iters(64)
+        .run(|| store.commit(&append_commit(&key), true).unwrap());
+    assert!(store.converged(), "commit sweep diverged [{config}]");
+    Row {
+        row: "commit",
+        config,
+        records: 64,
+        replayed: 0,
+        mean_ns: s.mean,
+    }
+}
+
+fn chosen(slot: u64) -> WalRecord {
+    WalRecord::Chosen {
+        slot,
+        entry: LogEntry::apply(
+            slot + 1,
+            vec![],
+            vec![MetaOp::Put {
+                key: Key::new(Space::Region, format!("r{slot}")),
+                value: Value::U64(slot),
+            }],
+        ),
+    }
+}
+
+/// Write `n` chosen records (checkpointing per `checkpoint_every`),
+/// then measure the wall-clock of reopening the directory — the replay
+/// a restarted replica pays before it can vote again.
+fn replay(
+    row: &'static str,
+    config: &'static str,
+    n: u64,
+    checkpoint_every: u64,
+) -> Row {
+    let dir = TempDir::new("wtf-bench-wal-replay").unwrap();
+    let setup = WalSetup {
+        dir: dir.path().to_path_buf(),
+        sync: WalSync::None, // replay cost is read-side; don't meter fsync
+        checkpoint_every,
+    };
+    let (mut wal, recovered) = ReplicaWal::open(setup.clone(), 0, 0).unwrap();
+    assert!(recovered.fresh);
+    for slot in 0..n {
+        wal.append(&chosen(slot)).unwrap();
+        if wal.checkpoint_due() {
+            // The image's exact content is the replica's business; the
+            // replay path only cares that loading it replaces replaying
+            // the truncated prefix.
+            wal.install_checkpoint(&Checkpoint::default()).unwrap();
+        }
+    }
+    drop(wal);
+
+    let (_, recovered) = ReplicaWal::open(setup.clone(), 0, 0).unwrap();
+    let replayed = recovered.records.len() as u64;
+    assert_eq!(
+        replayed,
+        n % checkpoint_every.min(n + 1),
+        "unexpected post-checkpoint suffix [{config}]"
+    );
+    let s = Bench::new(format!("wal/{row} [{config}]"))
+        .warmup(2)
+        .iters(16)
+        .run(|| {
+            ReplicaWal::open(setup.clone(), 0, 0).unwrap();
+        });
+    println!("  └─ {config}: {n} records, {replayed} replayed");
+    Row {
+        row,
+        config,
+        records: n,
+        replayed,
+        mean_ns: s.mean,
+    }
+}
+
+/// Emit `BENCH_wal.json` (status "measured"); running this bench with
+/// `WTF_BENCH_WAL_JSON` set replaces the committed modeled placeholder
+/// with real rows.
+fn write_json(path: &str, rows: &[Row]) {
+    let find = |row: &str, config: &str| {
+        rows.iter()
+            .find(|r| r.row == row && r.config == config)
+            .unwrap_or_else(|| panic!("wal sweep produced no row {row} [{config}]"))
+    };
+    let full = find("replay", "full-300");
+    let ckpt = find("replay-checkpointed", "checkpointed-300");
+    let ratio = full.replayed as f64 / ckpt.replayed.max(1) as f64;
+    let mut out = String::from("{\n  \"bench\": \"wal/durability\",\n");
+    out.push_str(
+        "  \"description\": \"Durable replica WAL: single-shard commit latency by fsync \
+         policy (in-memory seed vs sync-none/batch/always; the record is written before \
+         every ack in all durable modes), replay wall-clock vs log length, and \
+         checkpoint-amortized replay (checkpoint every 64 chosen records truncates the \
+         replayable prefix).  Produced by `cargo bench --bench wal` with \
+         WTF_BENCH_WAL_JSON set; see rust/benches/wal.rs.\",\n",
+    );
+    out.push_str("  \"status\": \"measured\",\n  \"rows\": [\n");
+    for (i, r) in rows.iter().enumerate() {
+        out.push_str(&format!(
+            "    {{\"row\": \"{}\", \"config\": \"{}\", \"records\": {}, \
+             \"replayed\": {}, \"mean_ns\": {:.0}}}{}\n",
+            r.row,
+            r.config,
+            r.records,
+            r.replayed,
+            r.mean_ns,
+            if i + 1 < rows.len() { "," } else { "" }
+        ));
+    }
+    out.push_str(&format!(
+        "  ],\n  \"replay_ratio_checkpointed\": {ratio:.3},\n  \
+         \"acceptance\": \"replay_ratio_checkpointed > 1.0 (a checkpointed restart \
+         replays strictly fewer records than a full-log restart of the same history)\"\
+         \n}}\n"
+    ));
+    std::fs::write(path, out).expect("write WTF_BENCH_WAL_JSON");
+    println!("  └─ wrote {path}");
+}
+
+fn main() {
+    let rows = vec![
+        commit_latency("in-memory", None),
+        commit_latency("sync-none", Some(WalSync::None)),
+        commit_latency("sync-batch", Some(WalSync::Batch)),
+        commit_latency("sync-always", Some(WalSync::Always)),
+        replay("replay", "full-100", 100, u64::MAX),
+        replay("replay", "full-300", 300, u64::MAX),
+        replay("replay-checkpointed", "checkpointed-300", 300, 64),
+    ];
+
+    // The tentpole claim, asserted where the numbers are made: the same
+    // 300-record history restarts by replaying only its post-checkpoint
+    // suffix when checkpoints ran.
+    let full = rows
+        .iter()
+        .find(|r| r.row == "replay" && r.config == "full-300")
+        .unwrap();
+    let ckpt = rows
+        .iter()
+        .find(|r| r.row == "replay-checkpointed")
+        .unwrap();
+    assert_eq!(full.replayed, 300);
+    assert_eq!(ckpt.replayed, 44, "300 records, checkpoint every 64");
+    assert!(
+        ckpt.replayed < full.replayed,
+        "checkpointing must shrink the replayable prefix"
+    );
+
+    if let Ok(path) = std::env::var("WTF_BENCH_WAL_JSON") {
+        write_json(&path, &rows);
+    }
+}

@@ -99,6 +99,16 @@ impl ClusterBuilder {
         self
     }
 
+    /// Give every metadata replica an on-disk write-ahead log under
+    /// `dir`, so replicas restart from disk instead of rejoining by
+    /// peer replay (requires `meta_paxos`; `Config::validate` enforces
+    /// the pairing).
+    pub fn durable_meta(mut self, dir: PathBuf) -> Self {
+        self.config.meta_durable = true;
+        self.config.wal_dir = Some(dir);
+        self
+    }
+
     /// Put backing files under `dir` instead of a tempdir.
     pub fn data_dir(mut self, dir: PathBuf) -> Self {
         self.data_dir = Some(dir);
@@ -134,17 +144,26 @@ impl ClusterBuilder {
         //    or Paxos shard groups proposing over the deployment
         //    transport when `meta_paxos` is on.
         let meta = if config.meta_paxos {
+            let mut store = ReplicatedMetaStore::new(
+                config.meta_shards,
+                config.meta_group_replicas,
+                transport.clone(),
+                LeaseClock::auto(),
+                config.meta_lease.as_millis() as u64,
+            )
+            .two_pc(config.meta_2pc)
+            .prepare_batching(config.prepare_batching)
+            .group_commit(config.group_commit_window, config.group_commit_max_txns);
+            if config.meta_durable {
+                let dir = config.wal_dir.as_ref().ok_or_else(|| {
+                    crate::error::Error::InvalidArgument(
+                        "meta_durable requires wal_dir".into(),
+                    )
+                })?;
+                store = store.durable(dir, config.wal_sync, config.wal_checkpoint_every)?;
+            }
             Arc::new(MetaService::replicated(
-                ReplicatedMetaStore::new(
-                    config.meta_shards,
-                    config.meta_group_replicas,
-                    transport.clone(),
-                    LeaseClock::auto(),
-                    config.meta_lease.as_millis() as u64,
-                )
-                .two_pc(config.meta_2pc)
-                .prepare_batching(config.prepare_batching)
-                .group_commit(config.group_commit_window, config.group_commit_max_txns),
+                store,
                 config.meta_txn_floor,
                 Metrics::new(),
             ))
@@ -361,6 +380,36 @@ mod tests {
         let mut cfg = Config::test();
         cfg.meta_2pc = true;
         assert!(Cluster::builder().config(cfg).build().is_err());
+        // Durability without a WAL directory has nowhere to log.
+        assert!(Cluster::builder().config(Config::durable_test()).build().is_err());
+    }
+
+    #[test]
+    fn durable_meta_cluster_survives_replica_restart() {
+        let dir = crate::util::TempDir::new("wtf-durable-cluster").unwrap();
+        let mut cfg = Config::durable_test();
+        cfg.wal_dir = Some(dir.path().to_path_buf());
+        let cluster = Cluster::builder()
+            .config(cfg)
+            .storage_servers(3)
+            .build()
+            .unwrap();
+        let c = cluster.client();
+        let mut fd = c.create("/durable").unwrap();
+        c.write(&mut fd, b"persisted").unwrap();
+        let r = cluster.meta().replicated_store().expect("paxos backend");
+        assert!(r.is_durable());
+        // Tear replica 0 down to its WAL directory and rebuild it from
+        // disk alone; the cluster keeps serving and reconverges.
+        cluster.meta().restart_replica(0).unwrap();
+        assert_eq!(c.read_at(&fd, 0, 9).unwrap(), b"persisted");
+        assert!(r.converged(), "restarted replica caught back up");
+        // Pointing a differently-shaped cluster at the same WAL root is
+        // refused by the cluster marker.
+        let mut other = Config::durable_test();
+        other.wal_dir = Some(dir.path().to_path_buf());
+        other.meta_shards += 1;
+        assert!(Cluster::builder().config(other).build().is_err());
     }
 
     #[test]

@@ -9,6 +9,24 @@
 use std::path::PathBuf;
 use std::time::Duration;
 
+/// When the metadata replica WAL fsyncs ([`Config::wal_sync`]).  In
+/// every mode the record is *written* before the acknowledgment it
+/// enables; the modes only choose how much an OS crash can lose (a
+/// process crash loses nothing — the page cache survives it).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum WalSync {
+    /// fsync every record before acknowledging (durable against power
+    /// loss; the paper-faithful default).
+    #[default]
+    Always,
+    /// fsync on chosen (client-visible) records and every 32 appends,
+    /// amortizing the sync cost across a group's promise/accept chatter.
+    Batch,
+    /// Never fsync explicitly; rely on the OS writeback.  For benches
+    /// and tests that only model process crashes.
+    None,
+}
+
 /// Top-level configuration for an in-process WTF deployment.
 #[derive(Clone, Debug)]
 pub struct Config {
@@ -124,6 +142,22 @@ pub struct Config {
     /// bound blocks until the flusher drains (backpressure, so a slow
     /// flusher cannot buffer unbounded dirty data).
     pub write_behind_max_ops: usize,
+    /// Give every metadata Paxos replica a real on-disk write-ahead log
+    /// (requires `meta_paxos` and `wal_dir`): promises, accepts, and
+    /// chosen entries are logged before acknowledgment and replayed on
+    /// restart, so a replica recovers from its WAL directory alone
+    /// instead of rejoining by state pull.  Off by default — in-memory
+    /// mode stays byte-identical to the pre-WAL behavior.
+    pub meta_durable: bool,
+    /// Root directory for replica WALs (one
+    /// `shard-<s>/replica-<r>` subtree per replica, stamped with a
+    /// cluster marker).  Required when `meta_durable` is on.
+    pub wal_dir: Option<PathBuf>,
+    /// fsync policy for WAL appends.
+    pub wal_sync: WalSync,
+    /// Checkpoint (snapshot state + truncate the log) every this many
+    /// chosen records per replica.  Must be >= 1 when `meta_durable`.
+    pub wal_checkpoint_every: u64,
 }
 
 impl Default for Config {
@@ -156,6 +190,10 @@ impl Default for Config {
             prepare_batching: false,
             write_behind: false,
             write_behind_max_ops: 64,
+            meta_durable: false,
+            wal_dir: None,
+            wal_sync: WalSync::Always,
+            wal_checkpoint_every: 128,
         }
     }
 }
@@ -226,6 +264,20 @@ impl Config {
         }
     }
 
+    /// [`Config::replicated_2pc_test`] with durable replica WALs on and
+    /// an aggressive checkpoint cadence (so truncation paths are
+    /// exercised by short tests).  `wal_dir` is deliberately left
+    /// `None`: each test supplies its own temp directory, and
+    /// validation fails loudly if one forgets.
+    pub fn durable_test() -> Self {
+        Config {
+            meta_durable: true,
+            wal_sync: WalSync::Always,
+            wal_checkpoint_every: 8,
+            ..Config::replicated_2pc_test()
+        }
+    }
+
     /// Region index + region-relative offset for an absolute file offset.
     pub fn locate(&self, offset: u64) -> (u32, u64) {
         ((offset / self.region_size) as u32, offset % self.region_size)
@@ -284,6 +336,21 @@ impl Config {
         if self.write_behind && self.write_behind_max_ops == 0 {
             return Err(crate::Error::InvalidArgument(
                 "write_behind requires write_behind_max_ops >= 1".into(),
+            ));
+        }
+        if self.meta_durable && !self.meta_paxos {
+            return Err(crate::Error::InvalidArgument(
+                "meta_durable logs the Paxos groups; enable meta_paxos".into(),
+            ));
+        }
+        if self.meta_durable && self.wal_dir.is_none() {
+            return Err(crate::Error::InvalidArgument(
+                "meta_durable requires wal_dir (nowhere to put the WAL)".into(),
+            ));
+        }
+        if self.meta_durable && self.wal_checkpoint_every == 0 {
+            return Err(crate::Error::InvalidArgument(
+                "meta_durable requires wal_checkpoint_every >= 1".into(),
             ));
         }
         if self.metadata_cache && self.metadata_cache_entries == 0 {
@@ -402,6 +469,36 @@ mod tests {
         bad.write_behind = true;
         bad.write_behind_max_ops = 0;
         assert!(bad.validate().is_err(), "unbounded write-behind queue");
+    }
+
+    #[test]
+    fn durable_preset_requires_a_wal_dir() {
+        let d = Config::default();
+        assert!(!d.meta_durable, "durability defaults off");
+        assert_eq!(d.wal_sync, WalSync::Always);
+        let t = Config::replicated_2pc_test();
+        assert!(!t.meta_durable, "2PC preset stays in-memory");
+
+        let c = Config::durable_test();
+        assert!(c.meta_paxos && c.meta_2pc && c.meta_durable);
+        assert_eq!(c.wal_checkpoint_every, 8);
+        assert!(
+            c.validate().is_err(),
+            "durable without wal_dir must fail loudly"
+        );
+        let mut ok = Config::durable_test();
+        ok.wal_dir = Some(std::env::temp_dir());
+        ok.validate().unwrap();
+
+        let mut bad = Config::durable_test();
+        bad.wal_dir = Some(std::env::temp_dir());
+        bad.meta_paxos = false;
+        bad.meta_2pc = false;
+        assert!(bad.validate().is_err(), "durable without Paxos groups");
+        let mut bad = Config::durable_test();
+        bad.wal_dir = Some(std::env::temp_dir());
+        bad.wal_checkpoint_every = 0;
+        assert!(bad.validate().is_err(), "checkpoint interval 0");
     }
 
     #[test]

@@ -35,6 +35,10 @@ pub struct Acceptor<C> {
     alive: Mutex<bool>,
 }
 
+/// One slot's durable image: (promised ballot, accepted value if any).
+/// The WAL checkpoints these and restores them on replica restart.
+pub type SlotSnapshot<C> = (Ballot, Option<(Ballot, C)>);
+
 /// Phase-1 response.
 pub struct Promise<C> {
     pub accepted: Option<(Ballot, C)>,
@@ -102,6 +106,34 @@ impl<C: Clone> Acceptor<C> {
             s.accepted = Some((b, value));
             true
         })
+    }
+
+    /// Copy every slot's (promised, accepted) state — the image a WAL
+    /// checkpoint persists.  Ignores liveness: checkpointing happens
+    /// under the owning replica's own aliveness guard.
+    pub fn snapshot_slots(&self) -> Vec<SlotSnapshot<C>> {
+        self.slots
+            .lock()
+            .unwrap()
+            .iter()
+            .map(|s| (s.promised, s.accepted.clone()))
+            .collect()
+    }
+
+    /// Replace the whole slot table with a recovered image (restart
+    /// from WAL replay).  Anything not in `slots` never survived the
+    /// crash and must not be resurrected.
+    pub fn restore_slots(&self, slots: Vec<SlotSnapshot<C>>) {
+        *self.slots.lock().unwrap() = slots
+            .into_iter()
+            .map(|(promised, accepted)| SlotState { promised, accepted })
+            .collect();
+    }
+
+    /// Forget all promises and accepts: a real (durable-mode) crash —
+    /// whatever the WAL cannot re-derive is gone.
+    pub fn wipe(&self) {
+        self.slots.lock().unwrap().clear();
     }
 }
 

@@ -70,6 +70,17 @@ pub enum Error {
     /// degrades its group's quorum instead of poisoning the caller.
     ReplicaLost { shard: u32, replica: u32 },
 
+    /// A replica's on-disk write-ahead log failed integrity checks on
+    /// restart (truncated frame, CRC mismatch, foreign marker, missing
+    /// checkpoint).  The replica must refuse to vote — rejoining with
+    /// partial state could re-promise a lower ballot (equivocation) —
+    /// so it stays dead and merely degrades its group's quorum.
+    WalCorrupt {
+        shard: u32,
+        replica: u32,
+        detail: String,
+    },
+
     Artifact(String),
 
     Xla(String),
@@ -124,6 +135,15 @@ impl fmt::Display for Error {
             Error::ReplicaLost { shard, replica } => write!(
                 f,
                 "metadata replica {replica} of shard {shard} lost mid-request"
+            ),
+            Error::WalCorrupt {
+                shard,
+                replica,
+                detail,
+            } => write!(
+                f,
+                "write-ahead log of replica {replica} (shard {shard}) is corrupt, \
+                 refusing to vote: {detail}"
             ),
             Error::Artifact(m) => write!(f, "artifact error: {m}"),
             Error::Xla(m) => write!(f, "xla runtime error: {m}"),

@@ -30,12 +30,18 @@
 
 use super::ops::{self, MetaOp, OpOutcome};
 use super::shard::{KvState, ShardStats};
+use super::wal::{
+    Checkpoint, CkptIntent, CkptKv, CkptResult, CkptSlot, CkptStaged, ReplicaWal, WalRecord,
+    WalSetup,
+};
+use crate::config::WalSync;
 use crate::coordinator::lease::{GrantState, LeaseClock};
-use crate::coordinator::paxos::{Acceptor, Ballot};
+use crate::coordinator::paxos::{Acceptor, Ballot, SlotSnapshot};
 use crate::error::{Error, Result};
 use crate::net::{Handler, Peer, Request, Response, Transport};
 use crate::types::{Key, Space, Value};
 use std::collections::{BTreeMap, HashMap, HashSet};
+use std::path::Path;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Mutex};
 
@@ -302,10 +308,18 @@ pub struct GroupReplica {
     shard: u32,
     id: u32,
     clock: LeaseClock,
-    /// Modeled as stable storage: promises/accepts survive a crash, as
-    /// Paxos requires.
+    /// In-memory mode: MODELED as stable storage (promises/accepts
+    /// survive a crash, as Paxos requires).  In durable mode the model
+    /// becomes real — every promise/accept is WAL-logged before it is
+    /// acknowledged, and a durable crash wipes this too.
     acceptor: Acceptor<LogEntry>,
     inner: Mutex<ReplicaInner>,
+    /// Open WAL handle in durable mode, `None` in in-memory mode (and
+    /// while crashed).  Lock order: `inner` before `wal`.
+    wal: Mutex<Option<ReplicaWal>>,
+    /// Durable-mode configuration, retained across crashes so the
+    /// replica can be rebuilt from its WAL directory alone.
+    wal_setup: Mutex<Option<WalSetup>>,
 }
 
 impl GroupReplica {
@@ -319,6 +333,8 @@ impl GroupReplica {
                 alive: true,
                 ..ReplicaInner::default()
             }),
+            wal: Mutex::new(None),
+            wal_setup: Mutex::new(None),
         }
     }
 
@@ -508,6 +524,286 @@ impl GroupReplica {
         }
     }
 
+    /// Append `rec` durably BEFORE acknowledging the event it records.
+    /// A no-op in in-memory mode (the WAL slot is `None`), so the
+    /// durability-off behavior is byte-identical to pre-WAL builds.  An
+    /// append failure is fail-stop: a replica that cannot log must not
+    /// acknowledge — it crashes (degrading the quorum) rather than risk
+    /// forgetting an acknowledged promise after a restart.
+    fn wal_log(&self, g: &mut ReplicaInner, rec: WalRecord) -> Result<()> {
+        let mut wal = self.wal.lock().unwrap();
+        let Some(w) = wal.as_mut() else {
+            return Ok(());
+        };
+        match w.append(&rec) {
+            Ok(()) => Ok(()),
+            Err(e) => {
+                *wal = None;
+                drop(wal);
+                g.alive = false;
+                g.wipe();
+                Err(e)
+            }
+        }
+    }
+
+    /// Learn one chosen entry with the durability hook: the `Chosen`
+    /// record is appended (and synced per policy) BEFORE the learn is
+    /// acknowledged.  Re-learns of already-chosen or already-parked
+    /// slots change nothing and are not re-logged.
+    fn learn_with_wal(&self, g: &mut ReplicaInner, slot: u64, entry: LogEntry) -> Result<()> {
+        let novel = slot >= g.log.len() as u64 && !g.pending.contains_key(&slot);
+        if novel {
+            self.wal_log(
+                g,
+                WalRecord::Chosen {
+                    slot,
+                    entry: entry.clone(),
+                },
+            )?;
+        }
+        Self::learn_locked(g, slot, entry);
+        if novel {
+            self.maybe_checkpoint(g)?;
+        }
+        Ok(())
+    }
+
+    /// Checkpoint + truncate once enough chosen records accumulated
+    /// (durable mode only).  A checkpoint failure is fail-stop like any
+    /// other WAL error.
+    fn maybe_checkpoint(&self, g: &mut ReplicaInner) -> Result<()> {
+        let due = self
+            .wal
+            .lock()
+            .unwrap()
+            .as_ref()
+            .is_some_and(|w| w.checkpoint_due());
+        if !due {
+            return Ok(());
+        }
+        let image = self.checkpoint_image(g);
+        let mut wal = self.wal.lock().unwrap();
+        let Some(w) = wal.as_mut() else {
+            return Ok(());
+        };
+        match w.install_checkpoint(&image) {
+            Ok(()) => Ok(()),
+            Err(e) => {
+                *wal = None;
+                drop(wal);
+                g.alive = false;
+                g.wipe();
+                Err(e)
+            }
+        }
+    }
+
+    /// Serialize this replica's whole durable image: acceptor slots plus
+    /// everything materialized from the chosen log.  Unordered in-memory
+    /// containers are sorted so identical replicas produce identical
+    /// images.
+    fn checkpoint_image(&self, g: &ReplicaInner) -> Checkpoint {
+        let mut slots: Vec<CkptSlot> = self
+            .acceptor
+            .snapshot_slots()
+            .into_iter()
+            .map(|(promised, accepted)| CkptSlot { promised, accepted })
+            .collect();
+        // Canonicalize: a REJECTED prepare/accept extends the in-memory
+        // slot table with default entries but is never logged (nothing
+        // was acknowledged), so a replayed table can be shorter.  Trim
+        // the meaningless tail so identical acknowledged states produce
+        // identical images.
+        while slots
+            .last()
+            .is_some_and(|s| s.promised == Ballot::default() && s.accepted.is_none())
+        {
+            slots.pop();
+        }
+        let mut kv: Vec<CkptKv> = g
+            .state
+            .iter_versions()
+            .map(|(key, value, version)| CkptKv {
+                key: key.clone(),
+                value: value.cloned(),
+                version,
+            })
+            .collect();
+        kv.sort_by(|a, b| a.key.cmp(&b.key));
+        let mut applied: Vec<u64> = g.applied_txns.iter().copied().collect();
+        applied.sort_unstable();
+        let mut results: Vec<CkptResult> = g
+            .txn_results
+            .iter()
+            .map(|(&txn_id, outcomes)| CkptResult {
+                txn_id,
+                outcomes: outcomes.clone(),
+            })
+            .collect();
+        results.sort_by_key(|r| r.txn_id);
+        let mut intents: Vec<CkptIntent> = g
+            .intents
+            .iter()
+            .map(|(&txn_id, i)| CkptIntent {
+                txn_id,
+                coordinator: i.coordinator,
+                participants: i.participants.clone(),
+                staged: i.staged.as_ref().map(|(overlay, outcomes)| CkptStaged {
+                    overlay: overlay.clone(),
+                    outcomes: outcomes.clone(),
+                }),
+            })
+            .collect();
+        intents.sort_by_key(|i| i.txn_id);
+        let mut locks: Vec<(Key, u64)> = g
+            .intent_locks
+            .iter()
+            .map(|(k, &txn)| (k.clone(), txn))
+            .collect();
+        locks.sort();
+        let mut decisions: Vec<(u64, bool)> =
+            g.decisions.iter().map(|(&t, &c)| (t, c)).collect();
+        decisions.sort_unstable();
+        Checkpoint {
+            slots,
+            log: g.log.clone(),
+            pending: g.pending.iter().map(|(&s, e)| (s, e.clone())).collect(),
+            kv,
+            applied,
+            results,
+            intents,
+            locks,
+            decisions,
+        }
+    }
+
+    /// The replica's full durable image — what a checkpoint taken right
+    /// now would persist, sorted so identical acknowledged states
+    /// produce identical images.  `None` while crashed.  Test
+    /// observability for the bit-for-bit restart assertions.
+    pub fn durable_image(&self) -> Option<Checkpoint> {
+        let g = self.lock_inner();
+        g.alive.then(|| self.checkpoint_image(&g))
+    }
+
+    /// Durable-mode crash: EVERYTHING in memory dies — the volatile
+    /// state, the acceptor (its "modeled stable storage" is now the real
+    /// WAL), and the open WAL handle.  Only the directory survives.
+    fn crash_to_disk(&self) {
+        let mut g = self.lock_inner();
+        g.alive = false;
+        g.wipe();
+        self.acceptor.wipe();
+        *self.wal.lock().unwrap() = None;
+    }
+
+    /// Enable durability: remember `setup` and bring the replica up from
+    /// its WAL directory (a first boot stamps a fresh one).
+    fn attach_wal(&self, setup: WalSetup, now_ms: u64, lease_ms: u64) -> Result<()> {
+        *self.wal_setup.lock().unwrap() = Some(setup);
+        self.recover_from_disk(now_ms, lease_ms)
+    }
+
+    fn has_wal_setup(&self) -> bool {
+        self.wal_setup.lock().unwrap().is_some()
+    }
+
+    /// Restart from the WAL directory alone: load the newest checkpoint
+    /// image, replay the post-checkpoint records in append order, and
+    /// restore the acceptor table — a state indistinguishable from the
+    /// pre-crash replica's acknowledged history.  On ANY integrity
+    /// failure ([`Error::WalCorrupt`]) the replica stays dead: rejoining
+    /// with partial state could re-promise a lower ballot.
+    fn recover_from_disk(&self, now_ms: u64, lease_ms: u64) -> Result<()> {
+        let setup = self.wal_setup.lock().unwrap().clone().ok_or_else(|| {
+            Error::InvalidArgument(format!(
+                "replica {} of shard {} has no WAL configured",
+                self.id, self.shard
+            ))
+        })?;
+        let (wal, recovered) = ReplicaWal::open(setup, self.shard, self.id)?;
+        let mut g = self.lock_inner();
+        g.wipe();
+        let mut slots: Vec<SlotSnapshot<LogEntry>> = Vec::new();
+        if let Some(c) = recovered.checkpoint {
+            slots = c
+                .slots
+                .into_iter()
+                .map(|s| (s.promised, s.accepted))
+                .collect();
+            g.log = c.log;
+            g.pending = c.pending.into_iter().collect();
+            for kv in c.kv {
+                g.state.restore_entry(&kv.key, kv.value, kv.version);
+            }
+            g.applied_txns = c.applied.into_iter().collect();
+            g.txn_results = c
+                .results
+                .into_iter()
+                .map(|r| (r.txn_id, r.outcomes))
+                .collect();
+            for i in c.intents {
+                g.intents.insert(
+                    i.txn_id,
+                    Intent {
+                        coordinator: i.coordinator,
+                        participants: i.participants,
+                        staged: i.staged.map(|s| (s.overlay, s.outcomes)),
+                    },
+                );
+            }
+            g.intent_locks = c.locks.into_iter().collect();
+            g.decisions = c.decisions.into_iter().collect();
+        }
+        // Replay the post-checkpoint suffix.  Nothing re-appends to the
+        // WAL here — every record being replayed is already on disk.
+        for rec in recovered.records {
+            match rec {
+                WalRecord::Promise { slot, ballot } => {
+                    let s = slot as usize;
+                    if slots.len() <= s {
+                        slots.resize_with(s + 1, Default::default);
+                    }
+                    slots[s].0 = slots[s].0.max(ballot);
+                }
+                WalRecord::Accept { slot, ballot, entry } => {
+                    let s = slot as usize;
+                    if slots.len() <= s {
+                        slots.resize_with(s + 1, Default::default);
+                    }
+                    slots[s].0 = slots[s].0.max(ballot);
+                    // Later accepts overwrite earlier ones — records
+                    // replay in append order, so the last one stands.
+                    slots[s].1 = Some((ballot, entry));
+                }
+                WalRecord::Chosen { slot, entry } => {
+                    Self::learn_locked(&mut g, slot, entry);
+                }
+            }
+        }
+        self.acceptor.restore_slots(slots);
+        // Pre-crash lease grants are unknowable, so hold off one lease
+        // window — unless the directory was freshly stamped (nothing was
+        // ever granted).
+        if !recovered.fresh {
+            g.grant.hold_off(now_ms + lease_ms);
+        }
+        g.alive = true;
+        *self.wal.lock().unwrap() = Some(wal);
+        Ok(())
+    }
+
+    /// Feed one chosen entry from a live peer during durable-recovery
+    /// catch-up — the same path as a transport learn, WAL included.
+    pub(crate) fn learn_chosen(&self, slot: u64, entry: LogEntry) -> Result<()> {
+        let mut g = self.lock_inner();
+        if !g.alive {
+            return Err(self.lost());
+        }
+        self.learn_with_wal(&mut g, slot, entry)
+    }
+
     fn lost(&self) -> Error {
         Error::ReplicaLost {
             shard: self.shard,
@@ -579,7 +875,7 @@ impl GroupReplica {
         // the action, so a kill() cannot interleave between them.
         match req {
             Request::PaxosPrepare { slot, ballot, .. } => {
-                let g = self.lock_inner();
+                let mut g = self.lock_inner();
                 if !g.alive {
                     return Err(self.lost());
                 }
@@ -589,10 +885,22 @@ impl GroupReplica {
                         granted: false,
                         accepted: None,
                     }),
-                    Some(Ok(p)) => Ok(Response::Promised {
-                        granted: true,
-                        accepted: p.accepted,
-                    }),
+                    Some(Ok(p)) => {
+                        // Durability boundary: the promise is on disk
+                        // BEFORE it is granted — a restarted replica
+                        // re-promises at least this ballot, never lower.
+                        self.wal_log(
+                            &mut g,
+                            WalRecord::Promise {
+                                slot: *slot,
+                                ballot: *ballot,
+                            },
+                        )?;
+                        Ok(Response::Promised {
+                            granted: true,
+                            accepted: p.accepted,
+                        })
+                    }
                 }
             }
             Request::PaxosAccept {
@@ -601,13 +909,29 @@ impl GroupReplica {
                 entry,
                 ..
             } => {
-                let g = self.lock_inner();
+                let mut g = self.lock_inner();
                 if !g.alive {
                     return Err(self.lost());
                 }
                 match self.acceptor.accept(*slot as usize, *ballot, entry.clone()) {
                     None => Err(self.lost()),
-                    Some(ok) => Ok(Response::Accepted(ok)),
+                    Some(ok) => {
+                        if ok {
+                            // Logged before the ack; a logged accept also
+                            // implies promised >= ballot on replay.
+                            // Refused accepts change nothing and are not
+                            // logged.
+                            self.wal_log(
+                                &mut g,
+                                WalRecord::Accept {
+                                    slot: *slot,
+                                    ballot: *ballot,
+                                    entry: entry.clone(),
+                                },
+                            )?;
+                        }
+                        Ok(Response::Accepted(ok))
+                    }
                 }
             }
             Request::PaxosLearn { slot, entry, .. } => {
@@ -615,7 +939,7 @@ impl GroupReplica {
                 if !g.alive {
                     return Err(self.lost());
                 }
-                Self::learn_locked(&mut g, *slot, entry.clone());
+                self.learn_with_wal(&mut g, *slot, entry.clone())?;
                 Ok(Response::Learned)
             }
             Request::PaxosStatus { .. } => {
@@ -1404,8 +1728,62 @@ impl ShardGroup {
         }
     }
 
-    /// Rejoin a crashed replica: pull a chosen log through the transport
-    /// and replay it deterministically into a fresh state.  Any live
+    /// Turn on durability for every replica of this group: each gets
+    /// `<dir>/replica-<id>` and comes up from whatever that directory
+    /// holds (a first boot stamps fresh markers; a restart replays).
+    pub fn enable_wal(&self, dir: &Path, sync: WalSync, checkpoint_every: u64) -> Result<()> {
+        let now = self.clock.now_ms();
+        for r in &self.replicas {
+            let setup = WalSetup {
+                dir: dir.join(format!("replica-{}", r.id())),
+                sync,
+                checkpoint_every,
+            };
+            r.attach_wal(setup, now, self.lease_ms)?;
+        }
+        Ok(())
+    }
+
+    /// Whether this group's replicas carry on-disk WALs.
+    pub fn is_durable(&self) -> bool {
+        self.replicas.iter().any(|r| r.has_wal_setup())
+    }
+
+    /// Replica `idx`'s durable image (test observability; `None` while
+    /// crashed or out of range).
+    pub fn replica_durable_image(&self, idx: usize) -> Option<Checkpoint> {
+        self.replicas.get(idx).and_then(|r| r.durable_image())
+    }
+
+    /// Restart one replica the durable way: tear it down to its WAL
+    /// directory — memory AND the acceptor's modeled stable storage both
+    /// die — then rebuild it from disk alone (plus best-effort catch-up
+    /// on entries chosen while it was down).
+    pub fn restart_replica(&self, idx: usize) -> Result<()> {
+        let Some(r) = self.replicas.get(idx) else {
+            return Ok(());
+        };
+        if !r.has_wal_setup() {
+            return Err(Error::InvalidArgument(format!(
+                "replica {idx} of shard {} has no WAL to restart from",
+                self.shard
+            )));
+        }
+        r.crash_to_disk();
+        self.recover_replica(idx)
+    }
+
+    /// Rejoin a crashed replica.
+    ///
+    /// Durable mode: the WAL directory is the authority — the replica
+    /// restarts from disk alone (a corrupt WAL is a typed error and the
+    /// replica stays dead), then best-effort catches up on entries
+    /// chosen while it was down by pulling its log suffix from the
+    /// longest live peer (no live peer is fine: the disk state is a
+    /// consistent prefix, and leader catch-up recovers the rest).
+    ///
+    /// In-memory mode: pull a chosen log through the transport and
+    /// replay it deterministically into a fresh state.  Any live
     /// replica's log is a prefix of the group log, so the longest one is
     /// a safe replay source — rejoining a learner needs no quorum (its
     /// acceptor state survived the crash; only materialized state is
@@ -1418,22 +1796,32 @@ impl ShardGroup {
         if r.is_alive() {
             return Ok(());
         }
-        let mut source: Option<(u64, usize)> = None;
-        for (i, rep) in self.replicas.iter().enumerate() {
-            if i == idx {
-                continue;
-            }
-            if let Some(len) = rep.log_len_if_alive() {
-                let better = match source {
-                    Some((best, _)) => len > best,
-                    None => true,
-                };
-                if better {
-                    source = Some((len, i));
+        if r.has_wal_setup() {
+            r.recover_from_disk(self.clock.now_ms(), self.lease_ms)?;
+            let Some(from) = r.log_len_if_alive() else {
+                return Ok(());
+            };
+            if let Some((len, src)) = self.longest_live_log(idx) {
+                if len > from {
+                    let peer = self.replicas[src].clone() as Peer;
+                    let entries = self
+                        .transport
+                        .call(
+                            peer,
+                            Request::PaxosPull {
+                                shard: self.shard,
+                                from,
+                            },
+                        )?
+                        .into_log_suffix()?;
+                    for (i, e) in entries.into_iter().enumerate() {
+                        r.learn_chosen(from + i as u64, e)?;
+                    }
                 }
             }
+            return Ok(());
         }
-        let Some((_, src)) = source else {
+        let Some((_, src)) = self.longest_live_log(idx) else {
             return Err(Error::NoQuorum {
                 alive: 0,
                 total: self.replicas.len(),
@@ -1452,6 +1840,27 @@ impl ShardGroup {
             .into_log_suffix()?;
         r.restore(entries, self.clock.now_ms(), self.lease_ms);
         Ok(())
+    }
+
+    /// The longest chosen log among live replicas other than `except`:
+    /// the safest replay/catch-up source.
+    fn longest_live_log(&self, except: usize) -> Option<(u64, usize)> {
+        let mut best: Option<(u64, usize)> = None;
+        for (i, rep) in self.replicas.iter().enumerate() {
+            if i == except {
+                continue;
+            }
+            if let Some(len) = rep.log_len_if_alive() {
+                let better = match best {
+                    Some((b, _)) => len > b,
+                    None => true,
+                };
+                if better {
+                    best = Some((len, i));
+                }
+            }
+        }
+        best
     }
 
     /// Blocking leader discovery/renewal — what a client's retry layer

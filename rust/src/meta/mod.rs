@@ -44,6 +44,7 @@ mod replicated;
 mod shard;
 mod store;
 mod txn;
+mod wal;
 
 pub use group::{EntryKind, GroupReplica, LogEntry, ShardGroup};
 pub use ops::{MetaOp, OpOutcome};
@@ -51,3 +52,4 @@ pub use replicated::{CommitPhase, FaultAction, FaultHook, ReplicatedMetaStore};
 pub use shard::{KvState, Shard, ShardStats};
 pub use store::{Commit, MetaService, MetaSnapshot, MetaStore};
 pub use txn::MetaTxn;
+pub use wal::{Checkpoint, Recovered, ReplicaWal, WalRecord, WalSetup};

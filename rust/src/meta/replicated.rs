@@ -62,11 +62,15 @@ use super::group::{
 use super::ops::{self, MetaOp, OpOutcome};
 use super::shard::ShardStats;
 use super::store::Commit;
+use super::wal;
+use crate::config::WalSync;
 use crate::coordinator::lease::LeaseClock;
 use crate::error::{Error, Result};
 use crate::net::{Peer, Request, Transport};
 use crate::types::{Key, Space, Value};
 use std::collections::HashMap;
+use std::io::{Read as _, Write as _};
+use std::path::Path;
 use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 use std::sync::{Arc, Condvar, Mutex, MutexGuard};
 use std::time::{Duration, Instant};
@@ -449,6 +453,54 @@ impl ReplicatedMetaStore {
     /// Whether single-shard commits ride the group-commit accumulator.
     pub fn is_group_commit(&self) -> bool {
         self.batchers.is_some()
+    }
+
+    /// Turn on durability (`Config::meta_durable`): every replica of
+    /// every shard group gets an on-disk write-ahead log under `root`
+    /// (`root/shard-<s>/replica-<r>/`) and comes up from whatever those
+    /// directories already hold — a first boot stamps fresh markers, a
+    /// restart replays.  Builder-style but fallible: the WAL root is
+    /// stamped with a cluster marker (magic, format version, shard
+    /// count, replicas per group) on first use, and a mismatching marker
+    /// is refused so two differently-shaped clusters can never
+    /// interleave their segments in one directory.
+    pub fn durable(self, root: &Path, sync: WalSync, checkpoint_every: u64) -> Result<Self> {
+        let replicas = self
+            .groups
+            .first()
+            .map(|g| g.num_replicas() as u32)
+            .unwrap_or(0);
+        std::fs::create_dir_all(root)?;
+        let expect = wal::cluster_marker(self.groups.len() as u32, replicas);
+        let marker = root.join("CLUSTER");
+        match std::fs::File::open(&marker) {
+            Ok(mut f) => {
+                let mut found = Vec::new();
+                f.read_to_end(&mut found)?;
+                if found != expect {
+                    return Err(Error::InvalidArgument(format!(
+                        "WAL root {} belongs to a different cluster \
+                         (marker mismatch); refusing to interleave segments",
+                        root.display()
+                    )));
+                }
+            }
+            Err(e) if e.kind() == std::io::ErrorKind::NotFound => {
+                let mut f = std::fs::File::create(&marker)?;
+                f.write_all(&expect)?;
+                f.sync_all()?;
+            }
+            Err(e) => return Err(e.into()),
+        }
+        for (s, g) in self.groups.iter().enumerate() {
+            g.enable_wal(&root.join(format!("shard-{s}")), sync, checkpoint_every)?;
+        }
+        Ok(self)
+    }
+
+    /// Whether the shard groups carry on-disk WALs.
+    pub fn is_durable(&self) -> bool {
+        self.groups.iter().any(|g| g.is_durable())
     }
 
     /// Total chosen-log slots across every shard group — the Paxos
@@ -1561,6 +1613,28 @@ impl ReplicatedMetaStore {
         let mut first_err = None;
         for g in &self.groups {
             if let Err(e) = g.recover_replica(idx) {
+                if first_err.is_none() {
+                    first_err = Some(e);
+                }
+            }
+        }
+        match first_err {
+            Some(e) => Err(e),
+            None => Ok(()),
+        }
+    }
+
+    /// Restart replica `idx` of every group the durable way: tear each
+    /// incarnation down to its WAL directory — memory and modeled
+    /// acceptor storage both die — and rebuild it from disk alone.
+    /// Best-effort across groups, like [`Self::recover_replica`]: every
+    /// group is attempted and the first error is reported after the
+    /// sweep (a corrupt WAL kills one replica of one group, not the
+    /// whole restart).
+    pub fn restart_replica(&self, idx: usize) -> Result<()> {
+        let mut first_err = None;
+        for g in &self.groups {
+            if let Err(e) = g.restart_replica(idx) {
                 if first_err.is_none() {
                     first_err = Some(e);
                 }

@@ -78,6 +78,25 @@ impl KvState {
     pub fn iter(&self) -> impl Iterator<Item = (&Key, &Value)> {
         self.map.iter()
     }
+
+    /// Every key that ever mutated, with its current value (`None` =
+    /// deleted) and version — the full durable image, including the
+    /// deletion tombstones `iter()` cannot see.  WAL checkpoints
+    /// persist exactly this so anti-ABA validation survives a restart.
+    pub fn iter_versions(&self) -> impl Iterator<Item = (&Key, Option<&Value>, u64)> {
+        self.versions
+            .iter()
+            .map(|(k, v)| (k, self.map.get(k), *v))
+    }
+
+    /// Restore one key from a checkpoint image WITHOUT bumping the
+    /// version counter (the inverse of [`KvState::iter_versions`]).
+    pub fn restore_entry(&mut self, key: &Key, value: Option<Value>, version: u64) {
+        if let Some(v) = value {
+            self.map.insert(key.clone(), v);
+        }
+        self.versions.insert(key.clone(), version);
+    }
 }
 
 /// A replica's materialized state.

@@ -340,6 +340,26 @@ impl MetaService {
         }
     }
 
+    /// Restart replica `idx` of every group from its write-ahead log:
+    /// the in-memory incarnation — modeled acceptor storage included —
+    /// is torn down and the on-disk WAL directory alone rebuilds it.
+    /// Paxos backend only (the chain store has no WAL); errors are typed
+    /// and surfaced — a replica whose WAL fails integrity checks refuses
+    /// to vote and stays dead, degrading its group's quorum.  The same
+    /// orphaned-intent sweep as [`Self::recover_replica`] runs after.
+    pub fn restart_replica(&self, idx: usize) -> Result<()> {
+        match &self.backend {
+            MetaBackend::Chain(_) => Err(Error::Unsupported(
+                "restart_replica needs the durable Paxos backend".into(),
+            )),
+            MetaBackend::Paxos(r) => {
+                let out = r.restart_replica(idx);
+                let _ = r.resolve_orphans();
+                out
+            }
+        }
+    }
+
     /// Blocking leader rediscovery for `shard` — the client's follow-up
     /// to [`Error::NotLeader`].  No-op on the chain backend.
     pub fn heal(&self, shard: u32) {

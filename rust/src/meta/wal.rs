@@ -1,0 +1,1711 @@
+//! Durable per-replica write-ahead log for the metadata shard groups.
+//!
+//! Until PR 7 the Paxos acceptor was "modeled as stable storage" in
+//! memory: promises and accepts survived a simulated crash only because
+//! the simulation chose not to wipe them.  This module makes the model
+//! real, following the crash-recovery discipline of Malachite's ADR-007
+//! (log every input that determines a promise; replay to a state
+//! indistinguishable from the pre-crash replica) and the durable-commit
+//! framing of DurableFS:
+//!
+//! * **Record format** — an append-only segment of CRC-framed records:
+//!   `[len: u32 LE][crc32: u32 LE][payload]`.  The payload is a
+//!   [`WalRecord`]: a `Promise` (slot + ballot), an `Accept` (slot +
+//!   ballot + entry), or a `Chosen` (slot + entry).  2PC `Prepare`
+//!   intents and `Decide` records are chosen log entries, so `Chosen`
+//!   records carry them; replay rebuilds intents and locks through the
+//!   same deterministic apply the live path uses.
+//! * **Durability boundary** — the replica appends (and fsyncs, per
+//!   [`WalSync`]) the record *before* the acknowledgment that depends
+//!   on it: a `Promise` before `granted: true`, an `Accept` before
+//!   `Accepted(true)`, a `Chosen` before `Learned`.  Lease grants are
+//!   deliberately NOT logged: recovery re-applies the one-lease-window
+//!   hold-off instead, which is strictly more conservative.
+//! * **Checkpoint + truncation** — every `checkpoint_every` chosen
+//!   records the replica serializes its whole durable image (acceptor
+//!   slots, chosen log, materialized state, 2PC bookkeeping) into
+//!   `ckpt-<gen>.bin`, opens a fresh `seg-<gen>.wal`, and deletes the
+//!   previous generation, so logs do not grow without bound and replay
+//!   cost is amortized to one generation's suffix.
+//! * **Refuse-to-vote** — recovery is strict: a truncated frame, a CRC
+//!   mismatch, a decode error, or a missing checkpoint is
+//!   [`Error::WalCorrupt`], and the replica stays dead (degraded
+//!   quorum) rather than rejoin with amnesia and re-promise a lower
+//!   ballot (equivocation).
+//!
+//! Each replica owns one directory (`<wal_root>/shard-<s>/replica-<r>`)
+//! stamped with a `MARKER` file (magic, format version, shard and
+//! replica ids) so segments from two clusters — or two replicas — can
+//! never be interleaved in one directory.
+
+use super::group::{EntryKind, LogEntry};
+use super::ops::{MetaOp, OpOutcome};
+use crate::config::WalSync;
+use crate::coordinator::paxos::Ballot;
+use crate::error::{Error, Result};
+use crate::types::{
+    DirEntries, Inode, InodeKind, Key, Placement, RegionEntry, RegionMeta, SliceData, SlicePtr,
+    Space, Value,
+};
+use std::fs::{self, File, OpenOptions};
+use std::io::Write;
+use std::path::{Path, PathBuf};
+
+/// Magic prefix of the per-replica `MARKER` file.
+const MAGIC: &[u8; 6] = b"WTFWAL";
+/// On-disk format version (bump on any incompatible codec change).
+const FORMAT_VERSION: u16 = 1;
+/// Upper bound on one framed record/checkpoint payload — anything
+/// larger is treated as corruption, not an allocation request.
+const MAX_FRAME: u32 = 64 << 20;
+/// `WalSync::Batch`: force an fsync at least every this many appends
+/// even when no `Chosen` record arrives to trigger one.
+const BATCH_SYNC_EVERY: u64 = 32;
+
+// ---------------------------------------------------------------------
+// CRC32 (IEEE), table-driven; no external crates in the offline build.
+// ---------------------------------------------------------------------
+
+const fn crc_table() -> [u32; 256] {
+    let mut table = [0u32; 256];
+    let mut i = 0;
+    while i < 256 {
+        let mut c = i as u32;
+        let mut k = 0;
+        while k < 8 {
+            c = if c & 1 != 0 { 0xEDB8_8320 ^ (c >> 1) } else { c >> 1 };
+            k += 1;
+        }
+        table[i] = c;
+        i += 1;
+    }
+    table
+}
+
+const CRC_TABLE: [u32; 256] = crc_table();
+
+/// IEEE CRC-32 of `bytes` (the frame integrity check).
+pub fn crc32(bytes: &[u8]) -> u32 {
+    let mut c = 0xFFFF_FFFFu32;
+    for &b in bytes {
+        c = CRC_TABLE[((c ^ b as u32) & 0xFF) as usize] ^ (c >> 8);
+    }
+    !c
+}
+
+// ---------------------------------------------------------------------
+// Binary codec: hand-rolled (offline build — no serde), little-endian,
+// length-prefixed strings and sequences, one tag byte per enum.
+// ---------------------------------------------------------------------
+
+type Corrupt = String;
+
+fn put_u8(o: &mut Vec<u8>, v: u8) {
+    o.push(v);
+}
+
+fn put_u16(o: &mut Vec<u8>, v: u16) {
+    o.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_u32(o: &mut Vec<u8>, v: u32) {
+    o.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_u64(o: &mut Vec<u8>, v: u64) {
+    o.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_i64(o: &mut Vec<u8>, v: i64) {
+    o.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_bool(o: &mut Vec<u8>, v: bool) {
+    put_u8(o, v as u8);
+}
+
+fn put_str(o: &mut Vec<u8>, s: &str) {
+    put_u32(o, s.len() as u32);
+    o.extend_from_slice(s.as_bytes());
+}
+
+fn put_blob(o: &mut Vec<u8>, b: &[u8]) {
+    put_u32(o, b.len() as u32);
+    o.extend_from_slice(b);
+}
+
+/// A strict decoding cursor: every read is bounds-checked and every
+/// failure carries the byte position, so corruption reports are exact.
+struct Dec<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Dec<'a> {
+    fn new(buf: &'a [u8]) -> Self {
+        Dec { buf, pos: 0 }
+    }
+
+    fn take(&mut self, n: usize) -> std::result::Result<&'a [u8], Corrupt> {
+        if self.buf.len() - self.pos < n {
+            return Err(format!(
+                "payload truncated: need {n} bytes at offset {}, have {}",
+                self.pos,
+                self.buf.len() - self.pos
+            ));
+        }
+        let s = &self.buf[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(s)
+    }
+
+    fn u8(&mut self) -> std::result::Result<u8, Corrupt> {
+        Ok(self.take(1)?[0])
+    }
+
+    fn u16(&mut self) -> std::result::Result<u16, Corrupt> {
+        Ok(u16::from_le_bytes(self.take(2)?.try_into().unwrap()))
+    }
+
+    fn u32(&mut self) -> std::result::Result<u32, Corrupt> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+
+    fn u64(&mut self) -> std::result::Result<u64, Corrupt> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+
+    fn i64(&mut self) -> std::result::Result<i64, Corrupt> {
+        Ok(i64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+
+    fn bool(&mut self) -> std::result::Result<bool, Corrupt> {
+        match self.u8()? {
+            0 => Ok(false),
+            1 => Ok(true),
+            v => Err(format!("invalid bool byte {v}")),
+        }
+    }
+
+    fn str(&mut self) -> std::result::Result<String, Corrupt> {
+        let n = self.seq()?;
+        let bytes = self.take(n)?;
+        String::from_utf8(bytes.to_vec()).map_err(|_| "invalid utf-8 string".to_string())
+    }
+
+    fn blob(&mut self) -> std::result::Result<Vec<u8>, Corrupt> {
+        let n = self.seq()?;
+        Ok(self.take(n)?.to_vec())
+    }
+
+    /// Sequence length, sanity-bounded by the bytes actually remaining
+    /// (every element costs >= 1 byte) so a corrupt length can never
+    /// turn into a giant allocation.
+    fn seq(&mut self) -> std::result::Result<usize, Corrupt> {
+        let n = self.u32()? as usize;
+        if n > self.buf.len() - self.pos {
+            return Err(format!(
+                "sequence length {n} exceeds remaining payload {}",
+                self.buf.len() - self.pos
+            ));
+        }
+        Ok(n)
+    }
+
+    fn done(&self) -> std::result::Result<(), Corrupt> {
+        if self.pos != self.buf.len() {
+            return Err(format!(
+                "{} trailing bytes after a complete payload",
+                self.buf.len() - self.pos
+            ));
+        }
+        Ok(())
+    }
+}
+
+fn enc_ballot(o: &mut Vec<u8>, b: &Ballot) {
+    put_u64(o, b.round);
+    put_u32(o, b.proposer);
+}
+
+fn dec_ballot(d: &mut Dec) -> std::result::Result<Ballot, Corrupt> {
+    Ok(Ballot {
+        round: d.u64()?,
+        proposer: d.u32()?,
+    })
+}
+
+fn enc_space(o: &mut Vec<u8>, s: Space) {
+    put_u8(
+        o,
+        match s {
+            Space::Path => 0,
+            Space::Inode => 1,
+            Space::Region => 2,
+            Space::Dir => 3,
+            Space::Sys => 4,
+        },
+    );
+}
+
+fn dec_space(d: &mut Dec) -> std::result::Result<Space, Corrupt> {
+    match d.u8()? {
+        0 => Ok(Space::Path),
+        1 => Ok(Space::Inode),
+        2 => Ok(Space::Region),
+        3 => Ok(Space::Dir),
+        4 => Ok(Space::Sys),
+        t => Err(format!("invalid Space tag {t}")),
+    }
+}
+
+fn enc_key(o: &mut Vec<u8>, k: &Key) {
+    enc_space(o, k.space);
+    put_str(o, &k.key);
+}
+
+fn dec_key(d: &mut Dec) -> std::result::Result<Key, Corrupt> {
+    Ok(Key {
+        space: dec_space(d)?,
+        key: d.str()?,
+    })
+}
+
+fn enc_slice_ptr(o: &mut Vec<u8>, p: &SlicePtr) {
+    put_u32(o, p.server);
+    put_u32(o, p.backing);
+    put_u64(o, p.offset);
+    put_u64(o, p.len);
+}
+
+fn dec_slice_ptr(d: &mut Dec) -> std::result::Result<SlicePtr, Corrupt> {
+    Ok(SlicePtr {
+        server: d.u32()?,
+        backing: d.u32()?,
+        offset: d.u64()?,
+        len: d.u64()?,
+    })
+}
+
+fn enc_slice_ptrs(o: &mut Vec<u8>, ptrs: &[SlicePtr]) {
+    put_u32(o, ptrs.len() as u32);
+    for p in ptrs {
+        enc_slice_ptr(o, p);
+    }
+}
+
+fn dec_slice_ptrs(d: &mut Dec) -> std::result::Result<Vec<SlicePtr>, Corrupt> {
+    let n = d.seq()?;
+    let mut v = Vec::with_capacity(n);
+    for _ in 0..n {
+        v.push(dec_slice_ptr(d)?);
+    }
+    Ok(v)
+}
+
+fn enc_slice_data(o: &mut Vec<u8>, s: &SliceData) {
+    match s {
+        SliceData::Stored(ptrs) => {
+            put_u8(o, 0);
+            enc_slice_ptrs(o, ptrs);
+        }
+        SliceData::Hole => put_u8(o, 1),
+    }
+}
+
+fn dec_slice_data(d: &mut Dec) -> std::result::Result<SliceData, Corrupt> {
+    match d.u8()? {
+        0 => Ok(SliceData::Stored(dec_slice_ptrs(d)?)),
+        1 => Ok(SliceData::Hole),
+        t => Err(format!("invalid SliceData tag {t}")),
+    }
+}
+
+fn enc_placement(o: &mut Vec<u8>, p: &Placement) {
+    match p {
+        Placement::At(off) => {
+            put_u8(o, 0);
+            put_u64(o, *off);
+        }
+        Placement::Eof => put_u8(o, 1),
+    }
+}
+
+fn dec_placement(d: &mut Dec) -> std::result::Result<Placement, Corrupt> {
+    match d.u8()? {
+        0 => Ok(Placement::At(d.u64()?)),
+        1 => Ok(Placement::Eof),
+        t => Err(format!("invalid Placement tag {t}")),
+    }
+}
+
+fn enc_region_entry(o: &mut Vec<u8>, e: &RegionEntry) {
+    enc_placement(o, &e.placement);
+    put_u64(o, e.len);
+    enc_slice_data(o, &e.data);
+}
+
+fn dec_region_entry(d: &mut Dec) -> std::result::Result<RegionEntry, Corrupt> {
+    Ok(RegionEntry {
+        placement: dec_placement(d)?,
+        len: d.u64()?,
+        data: dec_slice_data(d)?,
+    })
+}
+
+fn enc_region(o: &mut Vec<u8>, r: &RegionMeta) {
+    match &r.spill {
+        Some(ptrs) => {
+            put_u8(o, 1);
+            enc_slice_ptrs(o, ptrs);
+        }
+        None => put_u8(o, 0),
+    }
+    put_u32(o, r.entries.len() as u32);
+    for e in &r.entries {
+        enc_region_entry(o, e);
+    }
+    put_u64(o, r.eof);
+}
+
+fn dec_region(d: &mut Dec) -> std::result::Result<RegionMeta, Corrupt> {
+    let spill = match d.u8()? {
+        0 => None,
+        1 => Some(dec_slice_ptrs(d)?),
+        t => return Err(format!("invalid spill tag {t}")),
+    };
+    let n = d.seq()?;
+    let mut entries = Vec::with_capacity(n);
+    for _ in 0..n {
+        entries.push(dec_region_entry(d)?);
+    }
+    Ok(RegionMeta {
+        spill,
+        entries,
+        eof: d.u64()?,
+    })
+}
+
+fn enc_inode(o: &mut Vec<u8>, i: &Inode) {
+    put_u64(o, i.id);
+    put_u8(
+        o,
+        match i.kind {
+            InodeKind::File => 0,
+            InodeKind::Directory => 1,
+        },
+    );
+    put_u32(o, i.links);
+    put_u64(o, i.len);
+    put_u64(o, i.mtime);
+    put_u32(o, i.mode);
+    put_u32(o, i.owner);
+    put_u32(o, i.group);
+    put_u32(o, i.highest_region);
+    put_u8(o, i.replication);
+}
+
+fn dec_inode(d: &mut Dec) -> std::result::Result<Inode, Corrupt> {
+    Ok(Inode {
+        id: d.u64()?,
+        kind: match d.u8()? {
+            0 => InodeKind::File,
+            1 => InodeKind::Directory,
+            t => return Err(format!("invalid InodeKind tag {t}")),
+        },
+        links: d.u32()?,
+        len: d.u64()?,
+        mtime: d.u64()?,
+        mode: d.u32()?,
+        owner: d.u32()?,
+        group: d.u32()?,
+        highest_region: d.u32()?,
+        replication: d.u8()?,
+    })
+}
+
+fn enc_value(o: &mut Vec<u8>, v: &Value) {
+    match v {
+        Value::PathEntry(id) => {
+            put_u8(o, 0);
+            put_u64(o, *id);
+        }
+        Value::Inode(i) => {
+            put_u8(o, 1);
+            enc_inode(o, i);
+        }
+        Value::Region(r) => {
+            put_u8(o, 2);
+            enc_region(o, r);
+        }
+        Value::Dir(entries) => {
+            put_u8(o, 3);
+            put_u32(o, entries.len() as u32);
+            for (name, id) in entries {
+                put_str(o, name);
+                put_u64(o, *id);
+            }
+        }
+        Value::U64(n) => {
+            put_u8(o, 4);
+            put_u64(o, *n);
+        }
+        Value::Bytes(b) => {
+            put_u8(o, 5);
+            put_blob(o, b);
+        }
+    }
+}
+
+fn dec_value(d: &mut Dec) -> std::result::Result<Value, Corrupt> {
+    match d.u8()? {
+        0 => Ok(Value::PathEntry(d.u64()?)),
+        1 => Ok(Value::Inode(dec_inode(d)?)),
+        2 => Ok(Value::Region(dec_region(d)?)),
+        3 => {
+            let n = d.seq()?;
+            let mut entries = DirEntries::new();
+            for _ in 0..n {
+                let name = d.str()?;
+                entries.insert(name, d.u64()?);
+            }
+            Ok(Value::Dir(entries))
+        }
+        4 => Ok(Value::U64(d.u64()?)),
+        5 => Ok(Value::Bytes(d.blob()?)),
+        t => Err(format!("invalid Value tag {t}")),
+    }
+}
+
+fn enc_opt_value(o: &mut Vec<u8>, v: &Option<Value>) {
+    match v {
+        Some(v) => {
+            put_u8(o, 1);
+            enc_value(o, v);
+        }
+        None => put_u8(o, 0),
+    }
+}
+
+fn dec_opt_value(d: &mut Dec) -> std::result::Result<Option<Value>, Corrupt> {
+    match d.u8()? {
+        0 => Ok(None),
+        1 => Ok(Some(dec_value(d)?)),
+        t => Err(format!("invalid Option<Value> tag {t}")),
+    }
+}
+
+fn enc_outcome(o: &mut Vec<u8>, oc: &OpOutcome) {
+    match oc {
+        OpOutcome::Done => put_u8(o, 0),
+        OpOutcome::AppendedAt(off) => {
+            put_u8(o, 1);
+            put_u64(o, *off);
+        }
+    }
+}
+
+fn dec_outcome(d: &mut Dec) -> std::result::Result<OpOutcome, Corrupt> {
+    match d.u8()? {
+        0 => Ok(OpOutcome::Done),
+        1 => Ok(OpOutcome::AppendedAt(d.u64()?)),
+        t => Err(format!("invalid OpOutcome tag {t}")),
+    }
+}
+
+fn enc_outcomes(o: &mut Vec<u8>, ocs: &[OpOutcome]) {
+    put_u32(o, ocs.len() as u32);
+    for oc in ocs {
+        enc_outcome(o, oc);
+    }
+}
+
+fn dec_outcomes(d: &mut Dec) -> std::result::Result<Vec<OpOutcome>, Corrupt> {
+    let n = d.seq()?;
+    let mut v = Vec::with_capacity(n);
+    for _ in 0..n {
+        v.push(dec_outcome(d)?);
+    }
+    Ok(v)
+}
+
+fn enc_op(o: &mut Vec<u8>, op: &MetaOp) {
+    match op {
+        MetaOp::Put { key, value } => {
+            put_u8(o, 0);
+            enc_key(o, key);
+            enc_value(o, value);
+        }
+        MetaOp::Delete { key } => {
+            put_u8(o, 1);
+            enc_key(o, key);
+        }
+        MetaOp::RegionAppend { key, entry } => {
+            put_u8(o, 2);
+            enc_key(o, key);
+            enc_region_entry(o, entry);
+        }
+        MetaOp::RegionAppendEof { key, data, len, cap } => {
+            put_u8(o, 3);
+            enc_key(o, key);
+            enc_slice_data(o, data);
+            put_u64(o, *len);
+            put_u64(o, *cap);
+        }
+        MetaOp::RegionSwap {
+            key,
+            expected_version,
+            region,
+        } => {
+            put_u8(o, 4);
+            enc_key(o, key);
+            put_u64(o, *expected_version);
+            enc_region(o, region);
+        }
+        MetaOp::InodeAdjustLinks { key, delta, mtime } => {
+            put_u8(o, 5);
+            enc_key(o, key);
+            put_i64(o, *delta);
+            put_u64(o, *mtime);
+        }
+        MetaOp::InodeSetLenMax {
+            key,
+            candidate,
+            highest_region,
+            mtime,
+        } => {
+            put_u8(o, 6);
+            enc_key(o, key);
+            put_u64(o, *candidate);
+            put_u32(o, *highest_region);
+            put_u64(o, *mtime);
+        }
+        MetaOp::InodeSetLenFromRegion {
+            inode_key,
+            region_key,
+            region_base,
+            mtime,
+        } => {
+            put_u8(o, 7);
+            enc_key(o, inode_key);
+            enc_key(o, region_key);
+            put_u64(o, *region_base);
+            put_u64(o, *mtime);
+        }
+        MetaOp::DirInsert {
+            key,
+            name,
+            inode,
+            expect_absent,
+        } => {
+            put_u8(o, 8);
+            enc_key(o, key);
+            put_str(o, name);
+            put_u64(o, *inode);
+            put_bool(o, *expect_absent);
+        }
+        MetaOp::DirRemove { key, name } => {
+            put_u8(o, 9);
+            enc_key(o, key);
+            put_str(o, name);
+        }
+        MetaOp::PathInsert {
+            key,
+            inode,
+            expect_absent,
+        } => {
+            put_u8(o, 10);
+            enc_key(o, key);
+            put_u64(o, *inode);
+            put_bool(o, *expect_absent);
+        }
+    }
+}
+
+fn dec_op(d: &mut Dec) -> std::result::Result<MetaOp, Corrupt> {
+    match d.u8()? {
+        0 => Ok(MetaOp::Put {
+            key: dec_key(d)?,
+            value: dec_value(d)?,
+        }),
+        1 => Ok(MetaOp::Delete { key: dec_key(d)? }),
+        2 => Ok(MetaOp::RegionAppend {
+            key: dec_key(d)?,
+            entry: dec_region_entry(d)?,
+        }),
+        3 => Ok(MetaOp::RegionAppendEof {
+            key: dec_key(d)?,
+            data: dec_slice_data(d)?,
+            len: d.u64()?,
+            cap: d.u64()?,
+        }),
+        4 => Ok(MetaOp::RegionSwap {
+            key: dec_key(d)?,
+            expected_version: d.u64()?,
+            region: dec_region(d)?,
+        }),
+        5 => Ok(MetaOp::InodeAdjustLinks {
+            key: dec_key(d)?,
+            delta: d.i64()?,
+            mtime: d.u64()?,
+        }),
+        6 => Ok(MetaOp::InodeSetLenMax {
+            key: dec_key(d)?,
+            candidate: d.u64()?,
+            highest_region: d.u32()?,
+            mtime: d.u64()?,
+        }),
+        7 => Ok(MetaOp::InodeSetLenFromRegion {
+            inode_key: dec_key(d)?,
+            region_key: dec_key(d)?,
+            region_base: d.u64()?,
+            mtime: d.u64()?,
+        }),
+        8 => Ok(MetaOp::DirInsert {
+            key: dec_key(d)?,
+            name: d.str()?,
+            inode: d.u64()?,
+            expect_absent: d.bool()?,
+        }),
+        9 => Ok(MetaOp::DirRemove {
+            key: dec_key(d)?,
+            name: d.str()?,
+        }),
+        10 => Ok(MetaOp::PathInsert {
+            key: dec_key(d)?,
+            inode: d.u64()?,
+            expect_absent: d.bool()?,
+        }),
+        t => Err(format!("invalid MetaOp tag {t}")),
+    }
+}
+
+fn enc_entry(o: &mut Vec<u8>, e: &LogEntry) {
+    put_u64(o, e.txn_id);
+    put_u32(o, e.reads.len() as u32);
+    for (k, v) in &e.reads {
+        enc_key(o, k);
+        put_u64(o, *v);
+    }
+    put_u32(o, e.ops.len() as u32);
+    for op in &e.ops {
+        enc_op(o, op);
+    }
+    match &e.kind {
+        EntryKind::Apply => put_u8(o, 0),
+        EntryKind::Prepare {
+            participants,
+            coordinator,
+        } => {
+            put_u8(o, 1);
+            put_u32(o, *coordinator);
+            put_u32(o, participants.len() as u32);
+            for p in participants {
+                put_u32(o, *p);
+            }
+        }
+        EntryKind::Decide { commit } => {
+            put_u8(o, 2);
+            put_bool(o, *commit);
+        }
+        EntryKind::Batch(txns) => {
+            put_u8(o, 3);
+            put_u32(o, txns.len() as u32);
+            for t in txns {
+                enc_entry(o, t);
+            }
+        }
+    }
+}
+
+fn dec_entry(d: &mut Dec) -> std::result::Result<LogEntry, Corrupt> {
+    let txn_id = d.u64()?;
+    let n = d.seq()?;
+    let mut reads = Vec::with_capacity(n);
+    for _ in 0..n {
+        let k = dec_key(d)?;
+        reads.push((k, d.u64()?));
+    }
+    let n = d.seq()?;
+    let mut ops = Vec::with_capacity(n);
+    for _ in 0..n {
+        ops.push(dec_op(d)?);
+    }
+    let kind = match d.u8()? {
+        0 => EntryKind::Apply,
+        1 => {
+            let coordinator = d.u32()?;
+            let n = d.seq()?;
+            let mut participants = Vec::with_capacity(n);
+            for _ in 0..n {
+                participants.push(d.u32()?);
+            }
+            EntryKind::Prepare {
+                participants,
+                coordinator,
+            }
+        }
+        2 => EntryKind::Decide { commit: d.bool()? },
+        3 => {
+            let n = d.seq()?;
+            let mut txns = Vec::with_capacity(n);
+            for _ in 0..n {
+                txns.push(dec_entry(d)?);
+            }
+            EntryKind::Batch(txns)
+        }
+        t => return Err(format!("invalid EntryKind tag {t}")),
+    };
+    Ok(LogEntry {
+        txn_id,
+        reads,
+        ops,
+        kind,
+    })
+}
+
+// ---------------------------------------------------------------------
+// WAL records and the checkpoint image.
+// ---------------------------------------------------------------------
+
+/// One durable event, logged before the acknowledgment it enables.
+#[derive(Clone, Debug, PartialEq)]
+pub enum WalRecord {
+    /// Phase 1 granted: this replica promised `ballot` for `slot` and
+    /// must never grant a lower ballot there again.
+    Promise { slot: u64, ballot: Ballot },
+    /// Phase 2 accepted: `entry` at `ballot` in `slot`; the value a
+    /// later prepare round must adopt.
+    Accept {
+        slot: u64,
+        ballot: Ballot,
+        entry: LogEntry,
+    },
+    /// `slot` was decided as `entry` (the learn path, including 2PC
+    /// `Prepare` intents and `Decide` records).
+    Chosen { slot: u64, entry: LogEntry },
+}
+
+fn enc_record(o: &mut Vec<u8>, r: &WalRecord) {
+    match r {
+        WalRecord::Promise { slot, ballot } => {
+            put_u8(o, 1);
+            put_u64(o, *slot);
+            enc_ballot(o, ballot);
+        }
+        WalRecord::Accept { slot, ballot, entry } => {
+            put_u8(o, 2);
+            put_u64(o, *slot);
+            enc_ballot(o, ballot);
+            enc_entry(o, entry);
+        }
+        WalRecord::Chosen { slot, entry } => {
+            put_u8(o, 3);
+            put_u64(o, *slot);
+            enc_entry(o, entry);
+        }
+    }
+}
+
+fn dec_record(payload: &[u8]) -> std::result::Result<WalRecord, Corrupt> {
+    let mut d = Dec::new(payload);
+    let rec = match d.u8()? {
+        1 => WalRecord::Promise {
+            slot: d.u64()?,
+            ballot: dec_ballot(&mut d)?,
+        },
+        2 => WalRecord::Accept {
+            slot: d.u64()?,
+            ballot: dec_ballot(&mut d)?,
+            entry: dec_entry(&mut d)?,
+        },
+        3 => WalRecord::Chosen {
+            slot: d.u64()?,
+            entry: dec_entry(&mut d)?,
+        },
+        t => return Err(format!("invalid WalRecord tag {t}")),
+    };
+    d.done()?;
+    Ok(rec)
+}
+
+/// One acceptor slot's durable image.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct CkptSlot {
+    pub promised: Ballot,
+    pub accepted: Option<(Ballot, LogEntry)>,
+}
+
+/// One materialized key: value (`None` = deleted) plus its version
+/// counter, which survives deletion (anti-ABA) and must be restored
+/// exactly.
+#[derive(Clone, Debug, PartialEq)]
+pub struct CkptKv {
+    pub key: Key,
+    pub value: Option<Value>,
+    pub version: u64,
+}
+
+/// One recorded apply result (`None` = deterministic abort).
+#[derive(Clone, Debug, PartialEq)]
+pub struct CkptResult {
+    pub txn_id: u64,
+    pub outcomes: Option<Vec<OpOutcome>>,
+}
+
+/// A staged yes-vote: the overlay a commit decision will flush.
+#[derive(Clone, Debug, PartialEq)]
+pub struct CkptStaged {
+    pub overlay: Vec<(Key, Option<Value>)>,
+    pub outcomes: Vec<OpOutcome>,
+}
+
+/// One pending 2PC intent.
+#[derive(Clone, Debug, PartialEq)]
+pub struct CkptIntent {
+    pub txn_id: u64,
+    pub coordinator: u32,
+    pub participants: Vec<u32>,
+    pub staged: Option<CkptStaged>,
+}
+
+/// The whole durable image of one replica at a checkpoint: acceptor
+/// slots plus everything [`super::group::GroupReplica`] materializes
+/// from its chosen log.  Loading a checkpoint and replaying the
+/// post-checkpoint WAL suffix is indistinguishable from replaying the
+/// full history.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct Checkpoint {
+    pub slots: Vec<CkptSlot>,
+    pub log: Vec<LogEntry>,
+    pub pending: Vec<(u64, LogEntry)>,
+    pub kv: Vec<CkptKv>,
+    pub applied: Vec<u64>,
+    pub results: Vec<CkptResult>,
+    pub intents: Vec<CkptIntent>,
+    pub locks: Vec<(Key, u64)>,
+    pub decisions: Vec<(u64, bool)>,
+}
+
+fn enc_checkpoint(o: &mut Vec<u8>, c: &Checkpoint) {
+    put_u32(o, c.slots.len() as u32);
+    for s in &c.slots {
+        enc_ballot(o, &s.promised);
+        match &s.accepted {
+            Some((b, e)) => {
+                put_u8(o, 1);
+                enc_ballot(o, b);
+                enc_entry(o, e);
+            }
+            None => put_u8(o, 0),
+        }
+    }
+    put_u32(o, c.log.len() as u32);
+    for e in &c.log {
+        enc_entry(o, e);
+    }
+    put_u32(o, c.pending.len() as u32);
+    for (slot, e) in &c.pending {
+        put_u64(o, *slot);
+        enc_entry(o, e);
+    }
+    put_u32(o, c.kv.len() as u32);
+    for kv in &c.kv {
+        enc_key(o, &kv.key);
+        enc_opt_value(o, &kv.value);
+        put_u64(o, kv.version);
+    }
+    put_u32(o, c.applied.len() as u32);
+    for t in &c.applied {
+        put_u64(o, *t);
+    }
+    put_u32(o, c.results.len() as u32);
+    for r in &c.results {
+        put_u64(o, r.txn_id);
+        match &r.outcomes {
+            Some(ocs) => {
+                put_u8(o, 1);
+                enc_outcomes(o, ocs);
+            }
+            None => put_u8(o, 0),
+        }
+    }
+    put_u32(o, c.intents.len() as u32);
+    for i in &c.intents {
+        put_u64(o, i.txn_id);
+        put_u32(o, i.coordinator);
+        put_u32(o, i.participants.len() as u32);
+        for p in &i.participants {
+            put_u32(o, *p);
+        }
+        match &i.staged {
+            Some(s) => {
+                put_u8(o, 1);
+                put_u32(o, s.overlay.len() as u32);
+                for (k, v) in &s.overlay {
+                    enc_key(o, k);
+                    enc_opt_value(o, v);
+                }
+                enc_outcomes(o, &s.outcomes);
+            }
+            None => put_u8(o, 0),
+        }
+    }
+    put_u32(o, c.locks.len() as u32);
+    for (k, txn) in &c.locks {
+        enc_key(o, k);
+        put_u64(o, *txn);
+    }
+    put_u32(o, c.decisions.len() as u32);
+    for (txn, commit) in &c.decisions {
+        put_u64(o, *txn);
+        put_bool(o, *commit);
+    }
+}
+
+fn dec_checkpoint(payload: &[u8]) -> std::result::Result<Checkpoint, Corrupt> {
+    let mut d = Dec::new(payload);
+    let mut c = Checkpoint::default();
+    let n = d.seq()?;
+    for _ in 0..n {
+        let promised = dec_ballot(&mut d)?;
+        let accepted = match d.u8()? {
+            0 => None,
+            1 => {
+                let b = dec_ballot(&mut d)?;
+                Some((b, dec_entry(&mut d)?))
+            }
+            t => return Err(format!("invalid accepted tag {t}")),
+        };
+        c.slots.push(CkptSlot { promised, accepted });
+    }
+    let n = d.seq()?;
+    for _ in 0..n {
+        c.log.push(dec_entry(&mut d)?);
+    }
+    let n = d.seq()?;
+    for _ in 0..n {
+        let slot = d.u64()?;
+        c.pending.push((slot, dec_entry(&mut d)?));
+    }
+    let n = d.seq()?;
+    for _ in 0..n {
+        let key = dec_key(&mut d)?;
+        let value = dec_opt_value(&mut d)?;
+        c.kv.push(CkptKv {
+            key,
+            value,
+            version: d.u64()?,
+        });
+    }
+    let n = d.seq()?;
+    for _ in 0..n {
+        c.applied.push(d.u64()?);
+    }
+    let n = d.seq()?;
+    for _ in 0..n {
+        let txn_id = d.u64()?;
+        let outcomes = match d.u8()? {
+            0 => None,
+            1 => Some(dec_outcomes(&mut d)?),
+            t => return Err(format!("invalid outcomes tag {t}")),
+        };
+        c.results.push(CkptResult { txn_id, outcomes });
+    }
+    let n = d.seq()?;
+    for _ in 0..n {
+        let txn_id = d.u64()?;
+        let coordinator = d.u32()?;
+        let np = d.seq()?;
+        let mut participants = Vec::with_capacity(np);
+        for _ in 0..np {
+            participants.push(d.u32()?);
+        }
+        let staged = match d.u8()? {
+            0 => None,
+            1 => {
+                let no = d.seq()?;
+                let mut overlay = Vec::with_capacity(no);
+                for _ in 0..no {
+                    let k = dec_key(&mut d)?;
+                    overlay.push((k, dec_opt_value(&mut d)?));
+                }
+                Some(CkptStaged {
+                    overlay,
+                    outcomes: dec_outcomes(&mut d)?,
+                })
+            }
+            t => return Err(format!("invalid staged tag {t}")),
+        };
+        c.intents.push(CkptIntent {
+            txn_id,
+            coordinator,
+            participants,
+            staged,
+        });
+    }
+    let n = d.seq()?;
+    for _ in 0..n {
+        let k = dec_key(&mut d)?;
+        c.locks.push((k, d.u64()?));
+    }
+    let n = d.seq()?;
+    for _ in 0..n {
+        let txn = d.u64()?;
+        c.decisions.push((txn, d.bool()?));
+    }
+    d.done()?;
+    Ok(c)
+}
+
+// ---------------------------------------------------------------------
+// Segment files, marker, checkpoint rotation, strict recovery.
+// ---------------------------------------------------------------------
+
+/// Where and how one replica logs: directory, fsync policy, checkpoint
+/// cadence.  Plain data, retained across a crash so the replica can be
+/// rebuilt from its directory alone.
+#[derive(Clone, Debug)]
+pub struct WalSetup {
+    pub dir: PathBuf,
+    pub sync: WalSync,
+    /// Checkpoint (and truncate the WAL) every this many chosen
+    /// records.  Must be >= 1 (validated by `Config::validate`).
+    pub checkpoint_every: u64,
+}
+
+/// What [`ReplicaWal::open`] found on disk.
+#[derive(Debug, Default)]
+pub struct Recovered {
+    /// True when the directory was newly stamped (nothing to replay and
+    /// no pre-crash grants to hold off for).
+    pub fresh: bool,
+    /// The newest checkpoint image, if one was taken.
+    pub checkpoint: Option<Checkpoint>,
+    /// The post-checkpoint records, in append order.
+    pub records: Vec<WalRecord>,
+}
+
+/// The open, append-position WAL of one replica.
+#[derive(Debug)]
+pub struct ReplicaWal {
+    setup: WalSetup,
+    shard: u32,
+    replica: u32,
+    /// Checkpoint generation: the live files are `seg-<gen>.wal` and
+    /// (for gen > 0) `ckpt-<gen>.bin`.
+    gen: u64,
+    seg: File,
+    chosen_since_ckpt: u64,
+    unsynced: u64,
+}
+
+fn wal_corrupt(shard: u32, replica: u32, detail: impl Into<String>) -> Error {
+    Error::WalCorrupt {
+        shard,
+        replica,
+        detail: detail.into(),
+    }
+}
+
+fn seg_path(dir: &Path, gen: u64) -> PathBuf {
+    dir.join(format!("seg-{gen}.wal"))
+}
+
+fn ckpt_path(dir: &Path, gen: u64) -> PathBuf {
+    dir.join(format!("ckpt-{gen}.bin"))
+}
+
+/// Root-level cluster marker payload: magic + format version + cluster
+/// shape (shard count, replicas per group).  The store stamps this into
+/// the WAL root on first boot so a differently-shaped cluster pointed at
+/// the same directory refuses to interleave its segments with a
+/// stranger's.
+pub fn cluster_marker(shards: u32, replicas: u32) -> Vec<u8> {
+    let mut out = Vec::with_capacity(16);
+    out.extend_from_slice(MAGIC);
+    put_u16(&mut out, FORMAT_VERSION);
+    put_u32(&mut out, shards);
+    put_u32(&mut out, replicas);
+    out
+}
+
+/// Encode one marker payload (magic + version + identity).
+fn marker_bytes(shard: u32, replica: u32) -> Vec<u8> {
+    let mut out = Vec::with_capacity(16);
+    out.extend_from_slice(MAGIC);
+    put_u16(&mut out, FORMAT_VERSION);
+    put_u32(&mut out, shard);
+    put_u32(&mut out, replica);
+    out
+}
+
+/// Frame `payload` as `[len][crc][payload]` and append it to `file`.
+fn write_frame(file: &mut File, payload: &[u8]) -> std::io::Result<()> {
+    let mut frame = Vec::with_capacity(payload.len() + 8);
+    put_u32(&mut frame, payload.len() as u32);
+    put_u32(&mut frame, crc32(payload));
+    frame.extend_from_slice(payload);
+    file.write_all(&frame)
+}
+
+/// Split a segment's bytes into validated frame payloads.  Strict: a
+/// truncated header, a truncated payload, an oversized length, or a CRC
+/// mismatch is corruption — the caller refuses to vote rather than
+/// guess which suffix of its promises went missing.
+fn decode_frames(buf: &[u8]) -> std::result::Result<Vec<&[u8]>, Corrupt> {
+    let mut out = Vec::new();
+    let mut pos = 0usize;
+    while pos < buf.len() {
+        if buf.len() - pos < 8 {
+            return Err(format!("truncated frame header at offset {pos}"));
+        }
+        let len = u32::from_le_bytes(buf[pos..pos + 4].try_into().unwrap());
+        let crc = u32::from_le_bytes(buf[pos + 4..pos + 8].try_into().unwrap());
+        if len > MAX_FRAME {
+            return Err(format!("oversized frame ({len} bytes) at offset {pos}"));
+        }
+        let start = pos + 8;
+        let end = start + len as usize;
+        if end > buf.len() {
+            return Err(format!(
+                "truncated frame payload at offset {pos}: need {len} bytes, have {}",
+                buf.len() - start
+            ));
+        }
+        let payload = &buf[start..end];
+        if crc32(payload) != crc {
+            return Err(format!("crc mismatch at offset {pos}"));
+        }
+        out.push(payload);
+        pos = end;
+    }
+    Ok(out)
+}
+
+/// Fsync a directory so renames/creates inside it are durable.
+fn sync_dir(dir: &Path) -> std::io::Result<()> {
+    File::open(dir)?.sync_all()
+}
+
+impl ReplicaWal {
+    /// Open (creating if absent) the WAL directory of `shard`/`replica`
+    /// and strictly replay what it holds.  Any integrity failure —
+    /// foreign or damaged marker, missing checkpoint, truncated or
+    /// bit-flipped frame, undecodable payload — is
+    /// [`Error::WalCorrupt`]; the caller must leave the replica dead.
+    pub fn open(setup: WalSetup, shard: u32, replica: u32) -> Result<(ReplicaWal, Recovered)> {
+        fs::create_dir_all(&setup.dir)?;
+        let marker = setup.dir.join("MARKER");
+        let expected = marker_bytes(shard, replica);
+        let fresh = !marker.exists();
+        if fresh {
+            let mut f = File::create(&marker)?;
+            f.write_all(&expected)?;
+            f.sync_all()?;
+            sync_dir(&setup.dir)?;
+        } else {
+            let found = fs::read(&marker)?;
+            if found != expected {
+                return Err(wal_corrupt(
+                    shard,
+                    replica,
+                    format!(
+                        "marker mismatch in {}: directory belongs to another \
+                         replica, cluster, or format version",
+                        setup.dir.display()
+                    ),
+                ));
+            }
+        }
+
+        // The live generation is the highest numbered segment or
+        // checkpoint present (they rotate together).
+        let mut gen = 0u64;
+        for entry in fs::read_dir(&setup.dir)? {
+            let name = entry?.file_name();
+            let name = name.to_string_lossy();
+            let parsed = name
+                .strip_prefix("seg-")
+                .and_then(|s| s.strip_suffix(".wal"))
+                .or_else(|| name.strip_prefix("ckpt-").and_then(|s| s.strip_suffix(".bin")));
+            if let Some(n) = parsed.and_then(|s| s.parse::<u64>().ok()) {
+                gen = gen.max(n);
+            }
+        }
+
+        let checkpoint = {
+            let path = ckpt_path(&setup.dir, gen);
+            if path.exists() {
+                let buf = fs::read(&path)?;
+                let frames = decode_frames(&buf)
+                    .map_err(|d| wal_corrupt(shard, replica, format!("checkpoint: {d}")))?;
+                if frames.len() != 1 {
+                    return Err(wal_corrupt(
+                        shard,
+                        replica,
+                        format!("checkpoint holds {} frames, expected 1", frames.len()),
+                    ));
+                }
+                let c = dec_checkpoint(frames[0])
+                    .map_err(|d| wal_corrupt(shard, replica, format!("checkpoint: {d}")))?;
+                Some(c)
+            } else if gen > 0 {
+                return Err(wal_corrupt(
+                    shard,
+                    replica,
+                    format!("segment generation {gen} present but its checkpoint is missing"),
+                ));
+            } else {
+                None
+            }
+        };
+
+        let seg_file = seg_path(&setup.dir, gen);
+        let mut records = Vec::new();
+        if seg_file.exists() {
+            let buf = fs::read(&seg_file)?;
+            let frames = decode_frames(&buf)
+                .map_err(|d| wal_corrupt(shard, replica, format!("segment {gen}: {d}")))?;
+            for payload in frames {
+                let rec = dec_record(payload)
+                    .map_err(|d| wal_corrupt(shard, replica, format!("segment {gen}: {d}")))?;
+                records.push(rec);
+            }
+        }
+        let chosen_since_ckpt = records
+            .iter()
+            .filter(|r| matches!(r, WalRecord::Chosen { .. }))
+            .count() as u64;
+
+        let seg = OpenOptions::new().create(true).append(true).open(&seg_file)?;
+        let wal = ReplicaWal {
+            setup,
+            shard,
+            replica,
+            gen,
+            seg,
+            chosen_since_ckpt,
+            unsynced: 0,
+        };
+        let recovered = Recovered {
+            fresh,
+            checkpoint,
+            records,
+        };
+        Ok((wal, recovered))
+    }
+
+    /// Append one record, fsyncing per the configured [`WalSync`]
+    /// policy, BEFORE the caller acknowledges the event it describes.
+    pub fn append(&mut self, rec: &WalRecord) -> Result<()> {
+        let mut payload = Vec::new();
+        enc_record(&mut payload, rec);
+        write_frame(&mut self.seg, &payload)?;
+        self.unsynced += 1;
+        let chosen = matches!(rec, WalRecord::Chosen { .. });
+        if chosen {
+            self.chosen_since_ckpt += 1;
+        }
+        let sync = match self.setup.sync {
+            WalSync::Always => true,
+            // Batch: amortize — sync on decided entries (the client-
+            // visible acks) and every BATCH_SYNC_EVERY appends; the
+            // write itself still precedes every ack, so only an OS
+            // crash inside the window can lose a suffix.
+            WalSync::Batch => chosen || self.unsynced >= BATCH_SYNC_EVERY,
+            WalSync::None => false,
+        };
+        if sync {
+            self.seg.sync_data()?;
+            self.unsynced = 0;
+        }
+        Ok(())
+    }
+
+    /// True once enough chosen records accumulated that the owner
+    /// should take a checkpoint.
+    pub fn checkpoint_due(&self) -> bool {
+        self.chosen_since_ckpt >= self.setup.checkpoint_every
+    }
+
+    /// Chosen records appended since the last checkpoint (the records a
+    /// restart would replay beyond the checkpoint image).
+    pub fn chosen_since_checkpoint(&self) -> u64 {
+        self.chosen_since_ckpt
+    }
+
+    /// Current checkpoint generation (observability/tests).
+    pub fn generation(&self) -> u64 {
+        self.gen
+    }
+
+    /// Write `image` as the next checkpoint generation and truncate:
+    /// tmp-write + fsync + rename the checkpoint, open a fresh segment,
+    /// fsync the directory, then delete the previous generation.  After
+    /// this, recovery loads the image and replays only the new
+    /// segment's records.
+    pub fn install_checkpoint(&mut self, image: &Checkpoint) -> Result<()> {
+        let next = self.gen + 1;
+        let mut payload = Vec::new();
+        enc_checkpoint(&mut payload, image);
+        let tmp = self.setup.dir.join(format!("ckpt-{next}.tmp"));
+        {
+            let mut f = File::create(&tmp)?;
+            write_frame(&mut f, &payload)?;
+            f.sync_all()?;
+        }
+        fs::rename(&tmp, ckpt_path(&self.setup.dir, next))?;
+        let seg = OpenOptions::new()
+            .create(true)
+            .write(true)
+            .truncate(true)
+            .open(seg_path(&self.setup.dir, next))?;
+        sync_dir(&self.setup.dir)?;
+        let _ = fs::remove_file(seg_path(&self.setup.dir, self.gen));
+        if self.gen > 0 {
+            let _ = fs::remove_file(ckpt_path(&self.setup.dir, self.gen));
+        }
+        self.gen = next;
+        self.seg = seg;
+        self.chosen_since_ckpt = 0;
+        self.unsynced = 0;
+        Ok(())
+    }
+
+    /// The identity this WAL was stamped with.
+    pub fn identity(&self) -> (u32, u32) {
+        (self.shard, self.replica)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::TempDir;
+
+    fn setup(dir: &Path) -> WalSetup {
+        WalSetup {
+            dir: dir.to_path_buf(),
+            sync: WalSync::Always,
+            checkpoint_every: 4,
+        }
+    }
+
+    fn rich_entry(txn_id: u64) -> LogEntry {
+        let ptrs = vec![SlicePtr {
+            server: 3,
+            backing: 1,
+            offset: 4096,
+            len: 128,
+        }];
+        let mut dir = DirEntries::new();
+        dir.insert("a".into(), 7);
+        dir.insert("b".into(), 9);
+        LogEntry {
+            txn_id,
+            reads: vec![(Key::sys("r"), 5)],
+            ops: vec![
+                MetaOp::Put {
+                    key: Key::sys("p"),
+                    value: Value::Inode(Inode::new_file(11, 0o644, 2)),
+                },
+                MetaOp::Delete { key: Key::sys("d") },
+                MetaOp::RegionAppend {
+                    key: Key::new(Space::Region, "rg".into()),
+                    entry: RegionEntry {
+                        placement: Placement::At(64),
+                        len: 128,
+                        data: SliceData::Stored(ptrs.clone()),
+                    },
+                },
+                MetaOp::RegionAppendEof {
+                    key: Key::new(Space::Region, "rg".into()),
+                    data: SliceData::Hole,
+                    len: 32,
+                    cap: 4096,
+                },
+                MetaOp::RegionSwap {
+                    key: Key::new(Space::Region, "rg".into()),
+                    expected_version: 3,
+                    region: RegionMeta {
+                        spill: Some(ptrs),
+                        entries: vec![RegionEntry {
+                            placement: Placement::Eof,
+                            len: 16,
+                            data: SliceData::Hole,
+                        }],
+                        eof: 144,
+                    },
+                },
+                MetaOp::InodeAdjustLinks {
+                    key: Key::new(Space::Inode, "i".into()),
+                    delta: -1,
+                    mtime: 99,
+                },
+                MetaOp::InodeSetLenMax {
+                    key: Key::new(Space::Inode, "i".into()),
+                    candidate: 1 << 20,
+                    highest_region: 4,
+                    mtime: 100,
+                },
+                MetaOp::InodeSetLenFromRegion {
+                    inode_key: Key::new(Space::Inode, "i".into()),
+                    region_key: Key::new(Space::Region, "rg".into()),
+                    region_base: 1 << 16,
+                    mtime: 101,
+                },
+                MetaOp::DirInsert {
+                    key: Key::new(Space::Dir, "dd".into()),
+                    name: "child".into(),
+                    inode: 12,
+                    expect_absent: true,
+                },
+                MetaOp::DirRemove {
+                    key: Key::new(Space::Dir, "dd".into()),
+                    name: "old".into(),
+                },
+                MetaOp::PathInsert {
+                    key: Key::new(Space::Path, "/x".into()),
+                    inode: 12,
+                    expect_absent: false,
+                },
+            ],
+            kind: EntryKind::Apply,
+        }
+    }
+
+    fn roundtrip_entry(e: &LogEntry) -> LogEntry {
+        let mut buf = Vec::new();
+        enc_entry(&mut buf, e);
+        let mut d = Dec::new(&buf);
+        let back = dec_entry(&mut d).unwrap();
+        d.done().unwrap();
+        back
+    }
+
+    #[test]
+    fn codec_roundtrips_every_op_and_kind() {
+        let apply = rich_entry(1);
+        assert_eq!(roundtrip_entry(&apply), apply);
+
+        let prepare = LogEntry {
+            kind: EntryKind::Prepare {
+                participants: vec![0, 2, 5],
+                coordinator: 0,
+            },
+            ..rich_entry(2)
+        };
+        assert_eq!(roundtrip_entry(&prepare), prepare);
+
+        let decide = LogEntry::decide(2, true);
+        assert_eq!(roundtrip_entry(&decide), decide);
+
+        let batch = LogEntry::batch(9, vec![rich_entry(3), LogEntry::noop()]);
+        assert_eq!(roundtrip_entry(&batch), batch);
+
+        let dir_value = {
+            let mut m = DirEntries::new();
+            m.insert("n".into(), 42);
+            Value::Dir(m)
+        };
+        for v in [
+            Value::PathEntry(5),
+            dir_value,
+            Value::U64(77),
+            Value::Bytes(vec![0, 255, 3]),
+        ] {
+            let mut buf = Vec::new();
+            enc_value(&mut buf, &v);
+            let mut d = Dec::new(&buf);
+            assert_eq!(dec_value(&mut d).unwrap(), v);
+        }
+    }
+
+    #[test]
+    fn checkpoint_roundtrips() {
+        let c = Checkpoint {
+            slots: vec![
+                CkptSlot {
+                    promised: Ballot {
+                        round: 3,
+                        proposer: 1,
+                    },
+                    accepted: Some((
+                        Ballot {
+                            round: 3,
+                            proposer: 1,
+                        },
+                        rich_entry(4),
+                    )),
+                },
+                CkptSlot::default(),
+            ],
+            log: vec![rich_entry(1), LogEntry::decide(1, false)],
+            pending: vec![(7, rich_entry(5))],
+            kv: vec![
+                CkptKv {
+                    key: Key::sys("k"),
+                    value: Some(Value::U64(9)),
+                    version: 2,
+                },
+                CkptKv {
+                    key: Key::sys("gone"),
+                    value: None,
+                    version: 5,
+                },
+            ],
+            applied: vec![1, 4],
+            results: vec![
+                CkptResult {
+                    txn_id: 1,
+                    outcomes: Some(vec![OpOutcome::Done, OpOutcome::AppendedAt(64)]),
+                },
+                CkptResult {
+                    txn_id: 4,
+                    outcomes: None,
+                },
+            ],
+            intents: vec![CkptIntent {
+                txn_id: 8,
+                coordinator: 0,
+                participants: vec![0, 1],
+                staged: Some(CkptStaged {
+                    overlay: vec![(Key::sys("k"), Some(Value::U64(10)))],
+                    outcomes: vec![OpOutcome::Done],
+                }),
+            }],
+            locks: vec![(Key::sys("k"), 8)],
+            decisions: vec![(1, false)],
+        };
+        let mut buf = Vec::new();
+        enc_checkpoint(&mut buf, &c);
+        assert_eq!(dec_checkpoint(&buf).unwrap(), c);
+    }
+
+    #[test]
+    fn fresh_open_append_reopen_replays_in_order() {
+        let t = TempDir::new("wtf-wal").unwrap();
+        let (mut wal, rec) = ReplicaWal::open(setup(t.path()), 0, 1).unwrap();
+        assert!(rec.fresh);
+        assert!(rec.checkpoint.is_none() && rec.records.is_empty());
+
+        let b = Ballot {
+            round: 1,
+            proposer: 0,
+        };
+        let records = vec![
+            WalRecord::Promise { slot: 0, ballot: b },
+            WalRecord::Accept {
+                slot: 0,
+                ballot: b,
+                entry: rich_entry(1),
+            },
+            WalRecord::Chosen {
+                slot: 0,
+                entry: rich_entry(1),
+            },
+        ];
+        for r in &records {
+            wal.append(r).unwrap();
+        }
+        drop(wal);
+
+        let (wal, rec) = ReplicaWal::open(setup(t.path()), 0, 1).unwrap();
+        assert!(!rec.fresh, "a stamped directory is a restart");
+        assert_eq!(rec.records, records);
+        assert_eq!(wal.chosen_since_checkpoint(), 1);
+    }
+
+    #[test]
+    fn marker_refuses_a_foreign_replica() {
+        let t = TempDir::new("wtf-wal").unwrap();
+        let (wal, _) = ReplicaWal::open(setup(t.path()), 0, 1).unwrap();
+        drop(wal);
+        let err = ReplicaWal::open(setup(t.path()), 0, 2).unwrap_err();
+        assert!(
+            matches!(err, Error::WalCorrupt { shard: 0, replica: 2, .. }),
+            "foreign marker must be typed corruption, got {err:?}"
+        );
+    }
+
+    #[test]
+    fn bit_flip_and_truncation_are_corruption() {
+        let t = TempDir::new("wtf-wal").unwrap();
+        let (mut wal, _) = ReplicaWal::open(setup(t.path()), 0, 0).unwrap();
+        for i in 0..3 {
+            wal.append(&WalRecord::Chosen {
+                slot: i,
+                entry: rich_entry(i + 1),
+            })
+            .unwrap();
+        }
+        drop(wal);
+        let seg = seg_path(t.path(), 0);
+        let pristine = fs::read(&seg).unwrap();
+
+        // Flip one payload byte mid-file.
+        let mut flipped = pristine.clone();
+        let mid = flipped.len() / 2;
+        flipped[mid] ^= 0x40;
+        fs::write(&seg, &flipped).unwrap();
+        let err = ReplicaWal::open(setup(t.path()), 0, 0).unwrap_err();
+        assert!(matches!(err, Error::WalCorrupt { .. }), "bit flip: {err:?}");
+
+        // Truncate mid-record.
+        fs::write(&seg, &pristine[..pristine.len() - 5]).unwrap();
+        let err = ReplicaWal::open(setup(t.path()), 0, 0).unwrap_err();
+        assert!(matches!(err, Error::WalCorrupt { .. }), "truncation: {err:?}");
+    }
+
+    #[test]
+    fn checkpoint_rotates_and_truncates() {
+        let t = TempDir::new("wtf-wal").unwrap();
+        let (mut wal, _) = ReplicaWal::open(setup(t.path()), 2, 0).unwrap();
+        for i in 0..4 {
+            wal.append(&WalRecord::Chosen {
+                slot: i,
+                entry: rich_entry(i + 1),
+            })
+            .unwrap();
+        }
+        assert!(wal.checkpoint_due());
+        let image = Checkpoint {
+            log: (0..4).map(|i| rich_entry(i + 1)).collect(),
+            ..Checkpoint::default()
+        };
+        wal.install_checkpoint(&image).unwrap();
+        assert_eq!(wal.generation(), 1);
+        assert!(!wal.checkpoint_due());
+        assert!(
+            !seg_path(t.path(), 0).exists(),
+            "previous generation not truncated"
+        );
+        wal.append(&WalRecord::Chosen {
+            slot: 4,
+            entry: rich_entry(5),
+        })
+        .unwrap();
+        drop(wal);
+
+        let (_, rec) = ReplicaWal::open(setup(t.path()), 2, 0).unwrap();
+        assert_eq!(rec.checkpoint, Some(image));
+        assert_eq!(rec.records.len(), 1, "only the post-checkpoint suffix replays");
+    }
+
+    #[test]
+    fn missing_checkpoint_for_a_rotated_segment_is_corruption() {
+        let t = TempDir::new("wtf-wal").unwrap();
+        let (mut wal, _) = ReplicaWal::open(setup(t.path()), 0, 0).unwrap();
+        wal.append(&WalRecord::Chosen {
+            slot: 0,
+            entry: rich_entry(1),
+        })
+        .unwrap();
+        wal.install_checkpoint(&Checkpoint::default()).unwrap();
+        drop(wal);
+        fs::remove_file(ckpt_path(t.path(), 1)).unwrap();
+        let err = ReplicaWal::open(setup(t.path()), 0, 0).unwrap_err();
+        assert!(matches!(err, Error::WalCorrupt { .. }), "{err:?}");
+    }
+}

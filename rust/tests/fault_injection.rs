@@ -719,3 +719,253 @@ fn transaction_retry_budget_exhaustion_is_clean() {
     c.append_bytes(&fd, b"y").unwrap();
     assert_eq!(c.read_at(&fd, 0, 2).unwrap(), b"xy");
 }
+
+// ---------------------------------------------------------------------
+// Durable WAL (PR 7): restart-from-disk recovery, mid-2PC intent
+// replay, and refuse-to-vote on a damaged log.  The `durable_` name
+// prefix is the crash-recovery CI job's test filter.
+// ---------------------------------------------------------------------
+
+/// The largest WAL artifact (segment or checkpoint) under
+/// `replica_dir` — the one whose damage a restart cannot miss.
+fn largest_wal_file(replica_dir: &std::path::Path) -> std::path::PathBuf {
+    let mut largest: Option<(u64, std::path::PathBuf)> = None;
+    for entry in std::fs::read_dir(replica_dir).unwrap() {
+        let path = entry.unwrap().path();
+        let name = path.file_name().unwrap().to_string_lossy().into_owned();
+        if !(name.starts_with("seg-") || name.starts_with("ckpt-")) {
+            continue;
+        }
+        let len = std::fs::metadata(&path).unwrap().len();
+        if largest.as_ref().is_none_or(|(l, _)| len > *l) {
+            largest = Some((len, path));
+        }
+    }
+    let (len, path) = largest.expect("replica dir holds WAL artifacts");
+    assert!(len > 3, "an acknowledged history cannot be this short");
+    path
+}
+
+/// Flip one byte in the middle of the largest WAL artifact under
+/// `replica_dir`.
+fn corrupt_largest_wal_file(replica_dir: &std::path::Path) {
+    let path = largest_wal_file(replica_dir);
+    let mut bytes = std::fs::read(&path).unwrap();
+    let mid = bytes.len() / 2;
+    bytes[mid] ^= 0x40;
+    std::fs::write(&path, bytes).unwrap();
+}
+
+#[test]
+fn durable_restart_from_disk_alone_converges_exactly_once() {
+    let wal_root = wtf::util::TempDir::new("wtf-durable-restart").unwrap();
+    let store = support::store_durable(4, wal_root.path());
+    let keys = support::keys_on_distinct_groups(&store, Space::Region, 3);
+    let participants = support::participants_of(&store, &keys);
+    let (result, txn) =
+        support::run_scheduled_commit(&store, Vec::new(), &support::append_commit(&keys));
+    result.expect("fault-free durable commit");
+
+    // Kill followers first (quorum loss), then restart the survivor
+    // from its WAL directory with NO live peer: the disk alone must
+    // rebuild the acknowledged history.
+    for g in store.groups() {
+        for r in 1..support::GROUP_REPLICAS {
+            g.kill_replica(r);
+        }
+        g.restart_replica(0).expect("restart from disk alone");
+    }
+    for idx in 1..support::GROUP_REPLICAS {
+        store.recover_replica(idx).unwrap();
+    }
+    assert_eq!(
+        support::assert_all_or_nothing(&store, txn, &participants),
+        Some(true)
+    );
+    support::assert_append_exactly_once(&store, &keys, true);
+
+    // The restarted store keeps serving: a second transaction commits
+    // and the WAL keeps absorbing it (liveness after recovery).
+    let keys2 = support::keys_on_distinct_groups(&store, Space::Inode, 2);
+    let (result2, txn2) =
+        support::run_scheduled_commit(&store, Vec::new(), &support::append_commit(&keys2));
+    result2.expect("durable commit after restart");
+    assert_ne!(txn2, txn);
+    support::assert_append_exactly_once(&store, &keys2, true);
+    assert!(store.converged());
+}
+
+#[test]
+fn durable_restart_mid_2pc_replays_prepare_intent_bit_for_bit() {
+    let wal_root = wtf::util::TempDir::new("wtf-durable-intent").unwrap();
+    let store = support::store_durable(4, wal_root.path());
+    let keys = support::keys_on_distinct_groups(&store, Space::Region, 3);
+    let participants = support::participants_of(&store, &keys);
+    let target = participants[1]; // a non-coordinator participant
+
+    // Abandon the front-end once every Prepare intent is logged: the
+    // target group is left holding a durable, undecided intent.
+    let schedule = vec![(support::At::AllPrepared, support::Fault::Abandon)];
+    let (result, txn) =
+        support::run_scheduled_commit(&store, schedule, &support::append_commit(&keys));
+    assert!(result.is_err(), "an abandoned commit must not report success");
+
+    // Restart the target group's follower from its WAL directory while
+    // the intent is pending.  ADR-007's contract: the replayed replica
+    // is indistinguishable — intent, locks, acceptor state and all.
+    let group = &store.groups()[target as usize];
+    let victim = support::GROUP_REPLICAS - 1;
+    let before = group
+        .replica_durable_image(victim)
+        .expect("live replica has an image");
+    assert!(
+        before.intents.iter().any(|i| i.txn_id == txn),
+        "the Prepare intent must be staged before the restart"
+    );
+    assert!(
+        !before.locks.is_empty(),
+        "a staged intent holds its key locks"
+    );
+    group.restart_replica(victim).expect("durable restart");
+    let after = group
+        .replica_durable_image(victim)
+        .expect("restarted replica is alive");
+    assert_eq!(before, after, "WAL replay must be bit-for-bit");
+
+    // Resolution still works on the replayed state: presumed abort
+    // (the coordinator never decided), exactly once, nothing applied.
+    support::heal_all(&store);
+    assert_eq!(
+        support::assert_all_or_nothing(&store, txn, &participants),
+        Some(false)
+    );
+    support::assert_append_exactly_once(&store, &keys, false);
+}
+
+#[test]
+fn durable_restart_mid_2pc_fault_schedule_commits_exactly_once() {
+    let wal_root = wtf::util::TempDir::new("wtf-durable-sched").unwrap();
+    let store = support::store_durable(4, wal_root.path());
+    let keys = support::keys_on_distinct_groups(&store, Space::Region, 3);
+    let participants = support::participants_of(&store, &keys);
+    let target = participants[1];
+    // Restart the target group's follower the instant its Prepare
+    // lands — a full tear-down-to-disk mid-protocol, not just a kill.
+    let schedule = vec![(
+        support::At::Prepared(target),
+        support::Fault::Restart {
+            shard: target,
+            count: 1,
+        },
+    )];
+    let (result, txn) =
+        support::run_scheduled_commit(&store, schedule, &support::append_commit(&keys));
+    result.expect("a follower restart must not lose the commit");
+    support::heal_all(&store);
+    assert_eq!(
+        support::assert_all_or_nothing(&store, txn, &participants),
+        Some(true)
+    );
+    support::assert_append_exactly_once(&store, &keys, true);
+}
+
+#[test]
+fn durable_seeded_restart_schedule_smoke() {
+    // WTF_TEST_SEED-derived restart schedules (the CI crash-recovery
+    // matrix varies them per seed entry): replicas are torn down to
+    // their WAL directories and rebuilt from disk at random protocol
+    // instants, sometimes alongside an abandoned front-end.  Whatever
+    // the schedule, the decision oracles must hold — a replica that
+    // recovers from its log alone is indistinguishable from one that
+    // never went away.  Prints the effective seed on failure so the
+    // schedule reproduces.
+    let base = support::base_seed();
+    for case in 0..3u64 {
+        let seed = base.wrapping_mul(0x9E37_79B9) ^ (0xD15C + case);
+        let mut rng = Rng::new(seed);
+        let wal_root = wtf::util::TempDir::new("wtf-durable-seeded").unwrap();
+        let store = support::store_durable(4, wal_root.path());
+        let keys = support::keys_on_distinct_groups(&store, Space::Region, 2);
+        let participants = support::participants_of(&store, &keys);
+        let schedule = support::random_restart_schedule(&mut rng, &participants);
+        let (_, txn) =
+            support::run_scheduled_commit(&store, schedule, &support::append_commit(&keys));
+        support::heal_all(&store);
+        let decision = support::assert_all_or_nothing(&store, txn, &participants);
+        support::assert_append_exactly_once(&store, &keys, decision == Some(true));
+        println!("durable seeded schedule ok: WTF_TEST_SEED={base} case {case} (seed {seed})");
+    }
+}
+
+#[test]
+fn durable_corrupt_wal_refuses_to_vote_and_degrades_quorum() {
+    let wal_root = wtf::util::TempDir::new("wtf-durable-corrupt").unwrap();
+    let store = support::store_durable(2, wal_root.path());
+    let keys = support::keys_on_distinct_groups(&store, Space::Region, 2);
+    let (result, _) =
+        support::run_scheduled_commit(&store, Vec::new(), &support::append_commit(&keys));
+    result.expect("fault-free durable commit");
+
+    // Crash shard 0's highest replica to disk, then flip one bit in its
+    // largest WAL artifact.
+    let victim = support::GROUP_REPLICAS - 1;
+    store.groups()[0].kill_replica(victim);
+    let replica_dir = wal_root
+        .path()
+        .join("shard-0")
+        .join(format!("replica-{victim}"));
+    corrupt_largest_wal_file(&replica_dir);
+
+    // Restart must fail typed — and the replica must stay dead rather
+    // than rejoin with partial state (it could re-promise a lower
+    // ballot).  Shard 1's same-numbered replica restarts fine, so the
+    // sweep reports exactly the corruption.
+    let err = store.restart_replica(victim).expect_err("corrupt WAL");
+    assert!(
+        matches!(err, wtf::Error::WalCorrupt { shard: 0, .. }),
+        "want WalCorrupt for shard 0, got {err:?}"
+    );
+    let stats = store.shard_stats();
+    assert_eq!(stats[0].live_replicas, support::GROUP_REPLICAS - 1);
+    assert_eq!(stats[1].live_replicas, support::GROUP_REPLICAS);
+
+    // The degraded group still holds a 2/3 quorum: commits keep working.
+    let keys2 = support::keys_on_distinct_groups(&store, Space::Inode, 2);
+    let (result2, _) =
+        support::run_scheduled_commit(&store, Vec::new(), &support::append_commit(&keys2));
+    result2.expect("2/3 quorum still commits");
+    support::assert_append_exactly_once(&store, &keys2, true);
+}
+
+#[test]
+fn durable_truncated_wal_refuses_to_vote() {
+    let wal_root = wtf::util::TempDir::new("wtf-durable-trunc").unwrap();
+    let store = support::store_durable(2, wal_root.path());
+    let keys = support::keys_on_distinct_groups(&store, Space::Region, 2);
+    let (result, _) =
+        support::run_scheduled_commit(&store, Vec::new(), &support::append_commit(&keys));
+    result.expect("fault-free durable commit");
+
+    let victim = support::GROUP_REPLICAS - 1;
+    store.groups()[0].kill_replica(victim);
+    // Chop the tail off the replica's segment: a mid-frame truncation,
+    // as a crashed kernel write would leave it.
+    let replica_dir = wal_root
+        .path()
+        .join("shard-0")
+        .join(format!("replica-{victim}"));
+    let path = largest_wal_file(&replica_dir);
+    let bytes = std::fs::read(&path).unwrap();
+    std::fs::write(&path, &bytes[..bytes.len() - 3]).unwrap();
+
+    let err = store.restart_replica(victim).expect_err("truncated WAL");
+    assert!(
+        matches!(err, wtf::Error::WalCorrupt { shard: 0, .. }),
+        "want WalCorrupt for shard 0, got {err:?}"
+    );
+    assert_eq!(
+        store.shard_stats()[0].live_replicas,
+        support::GROUP_REPLICAS - 1,
+        "the damaged replica must stay dead"
+    );
+}

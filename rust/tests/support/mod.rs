@@ -17,7 +17,9 @@
 
 #![allow(dead_code)] // each test crate uses a subset of this toolkit
 
+use std::path::Path;
 use std::sync::{Arc, Mutex};
+use wtf::config::WalSync;
 use wtf::coordinator::lease::LeaseClock;
 use wtf::error::Result;
 use wtf::meta::{Commit, CommitPhase, FaultAction, MetaOp, OpOutcome, ReplicatedMetaStore};
@@ -64,6 +66,31 @@ pub fn store_2pc(shards: u32) -> Arc<ReplicatedMetaStore> {
     Arc::new(store)
 }
 
+/// A [`store_2pc`]-shaped store whose replicas additionally carry
+/// on-disk write-ahead logs under `wal_root` — the crash-recovery
+/// testbed.  `WalSync::Always` and a small checkpoint interval so every
+/// schedule exercises both replay-from-segment and
+/// replay-from-checkpoint within a handful of commits.
+pub fn store_durable(shards: u32, wal_root: &Path) -> Arc<ReplicatedMetaStore> {
+    let mut store = ReplicatedMetaStore::new(
+        shards,
+        GROUP_REPLICAS as u8,
+        Arc::new(Transport::instant()),
+        LeaseClock::manual(),
+        20,
+    )
+    .two_pc(true);
+    if std::env::var("WTF_TEST_WRITE_PATH").as_deref() == Ok("1") {
+        store = store
+            .group_commit(std::time::Duration::from_millis(1), 8)
+            .prepare_batching(true);
+    }
+    let store = store
+        .durable(wal_root, WalSync::Always, 4)
+        .expect("enable durable WALs");
+    Arc::new(store)
+}
+
 /// Named instants of the 2PC protocol a scripted fault can fire at
 /// (matched against the store's [`CommitPhase`] events).
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -100,6 +127,11 @@ pub enum Fault {
     /// (count 2 of 3 = quorum loss; the lowest replica stays alive so
     /// the group is recoverable by log replay and keeps a leader view).
     Kill { shard: u32, count: usize },
+    /// Restart the `count` highest-numbered replicas of `shard`'s group
+    /// the durable way: each is torn down to its WAL directory —
+    /// memory and modeled acceptor storage both die — and rebuilt from
+    /// disk alone, mid-protocol.  Requires a [`store_durable`] store.
+    Restart { shard: u32, count: usize },
     /// The coordinating front-end dies right here: the commit call
     /// returns an error with its gates released and any intents
     /// orphaned, exactly like a crashed client machine.
@@ -137,6 +169,16 @@ pub fn run_scheduled_commit(
                             let group = &s.groups()[shard as usize];
                             for r in (GROUP_REPLICAS - count)..GROUP_REPLICAS {
                                 group.kill_replica(r);
+                            }
+                        }
+                    }
+                    Fault::Restart { shard, count } => {
+                        if let Some(s) = weak.upgrade() {
+                            let group = &s.groups()[shard as usize];
+                            for r in (GROUP_REPLICAS - count)..GROUP_REPLICAS {
+                                group
+                                    .restart_replica(r)
+                                    .expect("durable restart mid-protocol");
                             }
                         }
                     }
@@ -293,6 +335,37 @@ pub fn random_schedule(rng: &mut Rng, participants: &[u32]) -> Schedule {
                 steps.push((at, Fault::Kill { shard: victim, count }));
             }
             1 => {
+                steps.push((at, Fault::Abandon));
+                break; // the dead front-end reaches no later instant
+            }
+            _ => {}
+        }
+    }
+    steps
+}
+
+/// The durable counterpart of [`random_schedule`]: instead of crashing
+/// replicas dead, each firing tears 1-2 of a random participant's
+/// replicas down to their WAL directories and rebuilds them from disk
+/// mid-protocol (or abandons the front-end).  Restart density is
+/// doubled relative to `random_schedule`'s kills because a restart is
+/// self-healing — the schedule can batter every instant and the commit
+/// must still resolve.  Requires a [`store_durable`] store.
+pub fn random_restart_schedule(rng: &mut Rng, participants: &[u32]) -> Schedule {
+    let mut points: Vec<At> = vec![At::Staged];
+    points.extend(participants.iter().map(|&p| At::Prepared(p)));
+    points.push(At::AllPrepared);
+    points.push(At::Decided);
+    points.extend(participants.iter().map(|&p| At::Applied(p)));
+    let mut steps = Schedule::new();
+    for at in points {
+        match rng.next_below(6) {
+            0 | 1 => {
+                let victim = participants[rng.next_below(participants.len() as u64) as usize];
+                let count = 1 + rng.next_below(2) as usize;
+                steps.push((at, Fault::Restart { shard: victim, count }));
+            }
+            2 => {
                 steps.push((at, Fault::Abandon));
                 break; // the dead front-end reaches no later instant
             }

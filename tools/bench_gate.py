@@ -2,7 +2,8 @@
 """Read/write-path bench regression gate (CI bench-smoke job).
 
 Checks a freshly produced BENCH_read_path.json (and, when
---write-fresh is given, BENCH_write_path.json) for regressions.  All
+--write-fresh / --wal-fresh are given, BENCH_write_path.json /
+BENCH_wal.json) for regressions.  All
 hard checks are SAME-RUN comparisons, so they are immune to cross-host
 wall-clock variance (the committed baseline may have been produced on a
 different machine, or be modeled — the authoring container has no Rust
@@ -23,7 +24,12 @@ toolchain):
        Paxos commit rounds batched than sequential);
      - scatter_ratio_2pc > 1.0 (prepare batching must issue fewer
        transport scatters, never more).
-3. Wall clock, within each fresh file only (enforced when the fresh
+3. WAL replay ratio (deterministic record counts, enforced when
+   --wal-fresh is given):
+     - replay_ratio_checkpointed > 1.0 (a checkpointed restart must
+       replay strictly fewer records than a full-log restart of the
+       same history).
+4. Wall clock, within each fresh file only (enforced when the fresh
    rows are measured, i.e. mean_ns > 0): for each row name present in
    both configs, the fast config must not be more than --max-slowdown
    (default 1.25, i.e. >25%) slower than the seed config measured in
@@ -52,6 +58,14 @@ WRITE_SAME_RUN_PAIRS = [
     ("append-burst", "write-behind", "seed"),
 ]
 
+# Same-run pairs for the WAL sweep (BENCH_wal.json), keyed by full
+# (row, config) since the fast and seed rows use different row names: a
+# checkpointed restart of the same 300-record history must not replay
+# slower than the full-log restart measured in the same run.
+WAL_SAME_RUN_KEY_PAIRS = [
+    (("replay-checkpointed", "checkpointed-300"), ("replay", "full-300")),
+]
+
 
 def load(path):
     with open(path) as f:
@@ -60,6 +74,27 @@ def load(path):
 
 def rows_by_key(doc):
     return {(r.get("row", ""), r.get("config", "")): r for r in doc.get("rows", [])}
+
+
+def clock_key_pairs(fresh_rows, key_pairs, max_slowdown, failures):
+    """Same-run wall clock over explicit (row, config) key pairs."""
+    checked = 0
+    for fast_key, seed_key in key_pairs:
+        f_row, s_row = fresh_rows.get(fast_key), fresh_rows.get(seed_key)
+        if not f_row or not s_row:
+            continue
+        f_ns, s_ns = f_row.get("mean_ns", 0), s_row.get("mean_ns", 0)
+        if not f_ns or not s_ns:
+            continue  # modeled rows carry mean_ns = 0
+        checked += 1
+        slowdown = f_ns / s_ns
+        if slowdown > max_slowdown:
+            failures.append(
+                f"{fast_key[0]} [{fast_key[1]}] is {slowdown:.2f}x "
+                f"{seed_key[0]} [{seed_key[1]}] in the same run "
+                f"({f_ns:.0f} ns vs {s_ns:.0f} ns; limit {max_slowdown}x)"
+            )
+    return checked
 
 
 def clock_pairs(fresh_rows, pairs, max_slowdown, failures):
@@ -103,6 +138,8 @@ def main():
     p.add_argument("--fresh", required=True, help="freshly produced BENCH_read_path.json")
     p.add_argument("--write-baseline", help="committed BENCH_write_path.json")
     p.add_argument("--write-fresh", help="freshly produced BENCH_write_path.json")
+    p.add_argument("--wal-baseline", help="committed BENCH_wal.json")
+    p.add_argument("--wal-fresh", help="freshly produced BENCH_wal.json")
     p.add_argument("--max-slowdown", type=float, default=1.25)
     p.add_argument("--min-seq-ratio", type=float, default=4.0)
     p.add_argument("--min-batch-ratio", type=float, default=2.0)
@@ -152,17 +189,39 @@ def main():
                 "(prepare batching issues as many transport scatters as sequential)"
             )
 
-    # 3. Same-run wall clock: fast config vs seed config, one machine.
+    # 3. WAL replay ratio (deterministic record counts, when a WAL file
+    #    was produced).
+    wal_ratio = None
+    wal_fresh_rows = {}
+    wal_base = {}
+    if a.wal_fresh:
+        wal_fresh = load(a.wal_fresh)
+        wal_base = load(a.wal_baseline) if a.wal_baseline else {}
+        wal_fresh_rows = rows_by_key(wal_fresh)
+        wal_ratio = float(wal_fresh.get("replay_ratio_checkpointed", 0.0))
+        if wal_ratio <= 1.0:
+            failures.append(
+                f"replay_ratio_checkpointed {wal_ratio:.2f} <= 1.0 "
+                "(a checkpointed restart no longer replays fewer records "
+                "than a full-log restart)"
+            )
+
+    # 4. Same-run wall clock: fast config vs seed config, one machine.
     fresh_rows = rows_by_key(fresh)
     clock_checked = clock_pairs(fresh_rows, SAME_RUN_PAIRS, a.max_slowdown, failures)
     clock_checked += clock_pairs(
         write_fresh_rows, WRITE_SAME_RUN_PAIRS, a.max_slowdown, failures
     )
+    clock_checked += clock_key_pairs(
+        wal_fresh_rows, WAL_SAME_RUN_KEY_PAIRS, a.max_slowdown, failures
+    )
 
-    # 4. Informational only: drift vs the committed baselines.
+    # 5. Informational only: drift vs the committed baselines.
     drift_notes(base, fresh_rows, a.max_slowdown)
     if write_fresh_rows:
         drift_notes(write_base, write_fresh_rows, a.max_slowdown)
+    if wal_fresh_rows:
+        drift_notes(wal_base, wal_fresh_rows, a.max_slowdown)
 
     if failures:
         print("bench_gate: FAIL")
@@ -176,9 +235,14 @@ def main():
         if batch_ratio is not None
         else ""
     )
+    wal_part = (
+        f", replay_ratio_checkpointed {wal_ratio:.2f}"
+        if wal_ratio is not None
+        else ""
+    )
     print(
         f"bench_gate: OK (envelope_ratio_seq {seq:.2f}, "
-        f"envelope_ratio_sort {sort_ratio:.2f}{write_part}, "
+        f"envelope_ratio_sort {sort_ratio:.2f}{write_part}{wal_part}, "
         f"same-run wall-clock pairs checked: {clock_checked})"
     )
     return 0
