@@ -1,0 +1,166 @@
+//! Partition-heal convergence sweep (PR 8): how quickly a replicated
+//! store comes back after the network does its worst.
+//!
+//! For each seed: establish a leader, lay background dup/reorder noise
+//! on the Paxos plane, partition the majority of every shard group away
+//! from its leader (writes must fail promptly, not hang), then heal and
+//! count the commit ROUNDS until the first post-heal commit lands.  The
+//! retry budget is 16 rounds; the gated figure is
+//!
+//!   `convergence_ratio = budget / max(rounds_after_heal)`
+//!
+//! so a store that converges on the first post-heal commit scores 16.0
+//! and anything that eats the whole budget scores 1.0 — the CI gate
+//! requires > 1.0.  Round counts are fully deterministic in the seed
+//! (integer dice, manual clock), so this bench doubles as a regression
+//! pin on recovery behavior, not just a timer.
+//!
+//! Set `WTF_BENCH_CHAOS_JSON=<path>` to emit the results as JSON
+//! (committed as `BENCH_chaos.json` for the CI regression gate).
+
+use std::sync::Arc;
+use wtf::coordinator::lease::LeaseClock;
+use wtf::meta::{Commit, MetaOp, ReplicatedMetaStore};
+use wtf::net::{CutMode, Peer, Plane, Transport, Turbulence, TurbulenceRule};
+use wtf::types::{Key, SliceData, SlicePtr, Space};
+
+const REPLICAS: usize = 3;
+const SHARDS: u32 = 2;
+const BUDGET: u64 = 16;
+
+struct Row {
+    seed: u64,
+    rounds_after_heal: u64,
+    faults_injected: u64,
+}
+
+fn append_commit(key: &Key) -> Commit {
+    Commit {
+        reads: vec![],
+        ops: vec![MetaOp::RegionAppendEof {
+            key: key.clone(),
+            data: SliceData::Stored(vec![SlicePtr {
+                server: 1,
+                backing: 0,
+                offset: 0,
+                len: 8,
+            }]),
+            len: 8,
+            cap: 1 << 30,
+        }],
+    }
+}
+
+/// One seeded partition-heal cycle; returns the row for the JSON.
+fn convergence(seed: u64) -> Row {
+    let clock = LeaseClock::manual();
+    let transport = Arc::new(Transport::instant());
+    let chaos = Turbulence::new(seed, clock.clone());
+    transport.set_turbulence(Some(chaos.clone()));
+    let store = Arc::new(
+        ReplicatedMetaStore::new(SHARDS, REPLICAS as u8, transport, clock.clone(), 20)
+            .two_pc(true),
+    );
+    let key = |i: u64| Key::new(Space::Region, format!("cvg{i}"));
+
+    // Clean air: elect leaders and land one commit per shard.
+    for i in 0..u64::from(SHARDS) {
+        store.commit(&append_commit(&key(i)), true).unwrap();
+    }
+
+    // Storm: background duplicate/reorder noise, then every group's
+    // majority drops off the network — each leader is minority-side.
+    chaos.add_rule(TurbulenceRule {
+        plane: Some(Plane::Paxos),
+        dup: 128,
+        reorder: 128,
+        ..TurbulenceRule::default()
+    });
+    for g in store.groups() {
+        for r in 1..REPLICAS {
+            let peer: Peer = g.replica(r).expect("replica index").clone();
+            chaos.cut(&peer, CutMode::Both);
+        }
+    }
+    // Partitioned writes fail promptly (no quorum), never hang.
+    assert!(
+        store.commit(&append_commit(&key(40)), true).is_err(),
+        "seed {seed}: a minority side must not commit"
+    );
+
+    // Heal, expire the partition-era leases, and count commit rounds
+    // until the store takes writes again.
+    chaos.clear_rules();
+    chaos.heal_all_cuts();
+    clock.advance(64);
+    let mut rounds = BUDGET;
+    for attempt in 0..BUDGET {
+        if store.commit(&append_commit(&key(100 + attempt)), true).is_ok() {
+            rounds = attempt + 1;
+            break;
+        }
+    }
+    assert!(
+        rounds <= BUDGET,
+        "seed {seed}: no commit landed within the {BUDGET}-round budget"
+    );
+    assert!(store.converged(), "seed {seed}: replicas diverged after heal");
+    println!(
+        "chaos/convergence [seed {seed}]: {rounds} round(s) after heal, \
+         {} faults injected",
+        chaos.faults_injected()
+    );
+    Row {
+        seed,
+        rounds_after_heal: rounds,
+        faults_injected: chaos.faults_injected(),
+    }
+}
+
+fn write_json(path: &str, rows: &[Row], ratio: f64) {
+    let mut out = String::from("{\n  \"bench\": \"chaos/convergence\",\n");
+    out.push_str(
+        "  \"description\": \"Partition-heal convergence: per seed, a leader is \
+         established, dup/reorder noise is laid on the Paxos plane, the majority of \
+         every shard group is cut away (writes fail promptly), then the network heals \
+         and the sweep counts commit rounds until the first post-heal commit lands \
+         (budget 16).  Deterministic in the seed.  Produced by `cargo bench --bench \
+         chaos` with WTF_BENCH_CHAOS_JSON set; see rust/benches/chaos.rs.\",\n",
+    );
+    out.push_str("  \"status\": \"measured\",\n  \"budget_rounds\": 16,\n  \"rows\": [\n");
+    for (i, r) in rows.iter().enumerate() {
+        out.push_str(&format!(
+            "    {{\"seed\": {}, \"rounds_after_heal\": {}, \"faults_injected\": {}}}{}\n",
+            r.seed,
+            r.rounds_after_heal,
+            r.faults_injected,
+            if i + 1 < rows.len() { "," } else { "" }
+        ));
+    }
+    out.push_str(&format!(
+        "  ],\n  \"convergence_ratio\": {ratio:.3},\n  \
+         \"acceptance\": \"convergence_ratio > 1.0 (after every seeded partition \
+         heals, the store takes commits again in strictly fewer rounds than the \
+         16-round retry budget)\"\n}}\n"
+    ));
+    std::fs::write(path, out).expect("write WTF_BENCH_CHAOS_JSON");
+    println!("  └─ wrote {path}");
+}
+
+fn main() {
+    let rows: Vec<Row> = [1u64, 7, 1234].iter().map(|&s| convergence(s)).collect();
+    let worst = rows
+        .iter()
+        .map(|r| r.rounds_after_heal)
+        .max()
+        .unwrap()
+        .max(1);
+    let ratio = BUDGET as f64 / worst as f64;
+    assert!(
+        ratio > 1.0,
+        "post-heal convergence ate the whole retry budget (worst {worst} rounds)"
+    );
+    if let Ok(path) = std::env::var("WTF_BENCH_CHAOS_JSON") {
+        write_json(&path, &rows, ratio);
+    }
+}

@@ -1,7 +1,7 @@
 //! Durable WAL sweep (PR 7): what durability costs on the commit path
 //! and what checkpointing buys back at restart.
 //!
-//! Three measurements:
+//! Four measurements:
 //!
 //! * `commit`: mean latency of a single-shard durable commit, by fsync
 //!   policy (`in-memory` seed, then `sync-none`, `sync-batch`,
@@ -15,6 +15,9 @@
 //!   replays only the 44-record suffix.  The deterministic record-count
 //!   ratio (`replay_ratio_checkpointed`) is what the CI gate checks —
 //!   checkpointed replay must beat full replay.
+//! * `fsync`: the PR-8 fsync group commit under `sync-always` — 64
+//!   records appended one-by-one (64 forced syncs) versus as one acked
+//!   batch (1).  `fsync_ratio_group_commit` is the gated ratio.
 //!
 //! Set `WTF_BENCH_WAL_JSON=<path>` to emit the results as JSON
 //! (committed as `BENCH_wal.json` for the CI regression gate).
@@ -37,6 +40,9 @@ struct Row {
     records: u64,
     /// Records a restart replays beyond the checkpoint image.
     replayed: u64,
+    /// Segment fsyncs one acked unit of this row's work paid (fsync
+    /// rows only; 0 where fsync accounting is not the measurement).
+    fsyncs: u64,
     mean_ns: f64,
 }
 
@@ -89,6 +95,7 @@ fn commit_latency(config: &'static str, sync: Option<WalSync>) -> Row {
         config,
         records: 64,
         replayed: 0,
+        fsyncs: 0,
         mean_ns: s.mean,
     }
 }
@@ -154,6 +161,57 @@ fn replay(
         config,
         records: n,
         replayed,
+        fsyncs: 0,
+        mean_ns: s.mean,
+    }
+}
+
+/// The PR-8 fsync group commit, measured where it lives: 64 chosen
+/// records appended one-by-one versus as ONE acked batch, both under
+/// `WalSync::Always`.  The per-record discipline forces media once per
+/// record; `append_batch` applies the policy once for the whole acked
+/// run.  The deterministic fsync-count ratio
+/// (`fsync_ratio_group_commit`) is what the CI gate checks.
+fn fsync_sweep(config: &'static str, batched: bool) -> Row {
+    let dir = TempDir::new("wtf-bench-wal-fsync").unwrap();
+    let setup = WalSetup {
+        dir: dir.path().to_path_buf(),
+        sync: WalSync::Always,
+        checkpoint_every: u64::MAX,
+    };
+    let (mut wal, recovered) = ReplicaWal::open(setup, 0, 0).unwrap();
+    assert!(recovered.fresh);
+    let recs: Vec<WalRecord> = (0..64).map(chosen).collect();
+    let mut runs = 0u64;
+    let s = Bench::new(format!("wal/fsync [{config}]"))
+        .warmup(2)
+        .iters(16)
+        .run(|| {
+            runs += 1;
+            if batched {
+                wal.append_batch(&recs).unwrap();
+            } else {
+                for r in &recs {
+                    wal.append(r).unwrap();
+                }
+            }
+        });
+    // Fsync accounting is exact, not sampled: under `Always` every
+    // append_batch call is one forced sync, so one acked unit of 64
+    // records costs 64 syncs per-record and 1 batched.
+    let per_unit = wal.fsyncs() / runs.max(1);
+    assert_eq!(
+        per_unit,
+        if batched { 1 } else { 64 },
+        "unexpected fsync count per acked unit [{config}]"
+    );
+    println!("  └─ {config}: {per_unit} fsyncs per 64-record acked unit");
+    Row {
+        row: "fsync",
+        config,
+        records: 64,
+        replayed: 0,
+        fsyncs: per_unit,
         mean_ns: s.mean,
     }
 }
@@ -170,32 +228,40 @@ fn write_json(path: &str, rows: &[Row]) {
     let full = find("replay", "full-300");
     let ckpt = find("replay-checkpointed", "checkpointed-300");
     let ratio = full.replayed as f64 / ckpt.replayed.max(1) as f64;
+    let per_rec = find("fsync", "per-record-64");
+    let grouped = find("fsync", "group-commit-64");
+    let fsync_ratio = per_rec.fsyncs as f64 / grouped.fsyncs.max(1) as f64;
     let mut out = String::from("{\n  \"bench\": \"wal/durability\",\n");
     out.push_str(
         "  \"description\": \"Durable replica WAL: single-shard commit latency by fsync \
          policy (in-memory seed vs sync-none/batch/always; the record is written before \
-         every ack in all durable modes), replay wall-clock vs log length, and \
+         every ack in all durable modes), replay wall-clock vs log length, \
          checkpoint-amortized replay (checkpoint every 64 chosen records truncates the \
-         replayable prefix).  Produced by `cargo bench --bench wal` with \
-         WTF_BENCH_WAL_JSON set; see rust/benches/wal.rs.\",\n",
+         replayable prefix), and the fsync group commit (one forced sync per acked \
+         batch under sync-always instead of one per record).  Produced by \
+         `cargo bench --bench wal` with WTF_BENCH_WAL_JSON set; see rust/benches/wal.rs.\",\n",
     );
     out.push_str("  \"status\": \"measured\",\n  \"rows\": [\n");
     for (i, r) in rows.iter().enumerate() {
         out.push_str(&format!(
             "    {{\"row\": \"{}\", \"config\": \"{}\", \"records\": {}, \
-             \"replayed\": {}, \"mean_ns\": {:.0}}}{}\n",
+             \"replayed\": {}, \"fsyncs\": {}, \"mean_ns\": {:.0}}}{}\n",
             r.row,
             r.config,
             r.records,
             r.replayed,
+            r.fsyncs,
             r.mean_ns,
             if i + 1 < rows.len() { "," } else { "" }
         ));
     }
     out.push_str(&format!(
         "  ],\n  \"replay_ratio_checkpointed\": {ratio:.3},\n  \
+         \"fsync_ratio_group_commit\": {fsync_ratio:.3},\n  \
          \"acceptance\": \"replay_ratio_checkpointed > 1.0 (a checkpointed restart \
-         replays strictly fewer records than a full-log restart of the same history)\"\
+         replays strictly fewer records than a full-log restart of the same history); \
+         fsync_ratio_group_commit > 1.0 (an acked batch pays strictly fewer forced \
+         syncs than the same records appended one-by-one)\"\
          \n}}\n"
     ));
     std::fs::write(path, out).expect("write WTF_BENCH_WAL_JSON");
@@ -211,6 +277,8 @@ fn main() {
         replay("replay", "full-100", 100, u64::MAX),
         replay("replay", "full-300", 300, u64::MAX),
         replay("replay-checkpointed", "checkpointed-300", 300, 64),
+        fsync_sweep("per-record-64", false),
+        fsync_sweep("group-commit-64", true),
     ];
 
     // The tentpole claim, asserted where the numbers are made: the same
@@ -229,6 +297,19 @@ fn main() {
     assert!(
         ckpt.replayed < full.replayed,
         "checkpointing must shrink the replayable prefix"
+    );
+    // And the PR-8 claim: one acked batch, one forced sync.
+    let per_rec = rows
+        .iter()
+        .find(|r| r.row == "fsync" && r.config == "per-record-64")
+        .unwrap();
+    let grouped = rows
+        .iter()
+        .find(|r| r.row == "fsync" && r.config == "group-commit-64")
+        .unwrap();
+    assert!(
+        grouped.fsyncs < per_rec.fsyncs,
+        "the fsync group commit must pay fewer forced syncs per acked batch"
     );
 
     if let Ok(path) = std::env::var("WTF_BENCH_WAL_JSON") {

@@ -91,7 +91,7 @@ impl WtfClient {
         let path = normalize(path)?;
         let (parent, name) = split_path(&path)?;
         let id = self.meta.alloc_inode_id();
-        self.with_retry(|| {
+        self.with_retry("fs.create", || {
             let mut t = self.meta_txn();
             let parent_id = match t.get(&Key::path(&parent))? {
                 Some(Value::PathEntry(p)) => p,
@@ -134,7 +134,7 @@ impl WtfClient {
         let path = normalize(path)?;
         let (parent, name) = split_path(&path)?;
         let id = self.meta.alloc_inode_id();
-        self.with_retry(|| {
+        self.with_retry("fs.mkdir", || {
             let mut t = self.meta_txn();
             let parent_id = match t.get(&Key::path(&parent))? {
                 Some(Value::PathEntry(p)) => p,
@@ -197,7 +197,7 @@ impl WtfClient {
         let new_path = normalize(new_path)?;
         let (parent, name) = split_path(&new_path)?;
         let existing = normalize(existing)?;
-        self.with_retry(|| {
+        self.with_retry("fs.link", || {
             let mut t = self.meta_txn();
             let id = match t.get(&Key::path(&existing))? {
                 Some(Value::PathEntry(p)) => p,
@@ -242,7 +242,7 @@ impl WtfClient {
         let new_path = normalize(new_path)?;
         let (old_parent, old_name) = split_path(&old_path)?;
         let (new_parent, new_name) = split_path(&new_path)?;
-        self.with_retry(|| {
+        self.with_retry("fs.rename", || {
             let mut t = self.meta_txn();
             let id = match t.get(&Key::path(&old_path))? {
                 Some(Value::PathEntry(p)) => p,
@@ -304,7 +304,7 @@ impl WtfClient {
     pub fn unlink(&self, path: &str) -> Result<()> {
         let path = normalize(path)?;
         let (parent, name) = split_path(&path)?;
-        self.with_retry(|| {
+        self.with_retry("fs.unlink", || {
             let mut t = self.meta_txn();
             let id = match t.get(&Key::path(&path))? {
                 Some(Value::PathEntry(p)) => p,
@@ -417,7 +417,7 @@ impl WtfClient {
         //    writers never conflict here.
         let end = offset + data.len() as u64;
         let highest = parts.last().map(|(r, _, _)| r.index).unwrap_or(0);
-        self.with_retry(|| {
+        self.with_retry("fs.write_at", || {
             let mut t = self.meta_txn();
             for (rid, rel, data) in &created {
                 t.push(MetaOp::RegionAppend {
@@ -550,7 +550,7 @@ impl WtfClient {
         inode: InodeId,
         slice: &Slice,
     ) -> Result<u64> {
-        self.with_retry(|| {
+        self.with_retry("fs.append", || {
             let mut t = self.meta_txn();
             let len = match t.get(&Key::inode(inode))? {
                 Some(Value::Inode(i)) => i.len,

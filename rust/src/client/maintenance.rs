@@ -29,7 +29,7 @@ impl WtfClient {
     /// The fetch bypasses the read cache: a CAS against a cached
     /// version could never succeed once the region moved.
     pub fn compact_region(&self, rid: RegionId) -> Result<CompactReport> {
-        self.with_retry(|| {
+        self.with_retry("compact_region", || {
             let (region, version) = self.fetch_region_fresh(rid)?;
             let before = region.entries.len();
             let compacted = compact::compact(&region);
@@ -56,7 +56,7 @@ impl WtfClient {
     /// (including any previously spilled base) into a replicated slice,
     /// and swap the region for a pointer + empty list.
     pub fn spill_region(&self, rid: RegionId) -> Result<CompactReport> {
-        self.with_retry(|| {
+        self.with_retry("spill_region", || {
             let (region, version) = self.fetch_region_fresh(rid)?;
             let before = region.entries.len();
             // Materialize the full view (spilled base + live list), then

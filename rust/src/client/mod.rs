@@ -247,8 +247,23 @@ impl WtfClient {
     /// the client rediscovers the shard leader (blocking through the
     /// election) and replays — leader failover must look like a
     /// transient conflict, not an application error.
-    pub(crate) fn with_retry<T>(&self, mut f: impl FnMut() -> Result<T>) -> Result<T> {
+    ///
+    /// Two optional bounds harden the loop against a turbulent network
+    /// (both default OFF, leaving the loop byte-identical to the
+    /// historical one): `Config::rpc_deadline` caps the END-TO-END
+    /// wall-clock of the whole retry ladder, surfacing
+    /// [`Error::Timeout`] tagged with `op`; `Config::retry_backoff`
+    /// inserts bounded exponential backoff with full jitter between
+    /// attempts so retry storms decorrelate instead of hammering a
+    /// healing shard in lockstep.
+    pub(crate) fn with_retry<T>(
+        &self,
+        op: &'static str,
+        mut f: impl FnMut() -> Result<T>,
+    ) -> Result<T> {
         let budget = self.config.txn_retry_budget.max(1);
+        let deadline = self.config.rpc_deadline;
+        let started = std::time::Instant::now();
         let mut attempts = 0;
         loop {
             let outcome = f();
@@ -270,6 +285,21 @@ impl WtfClient {
             if attempts >= budget {
                 return Err(Error::RetriesExhausted { attempts });
             }
+            if !deadline.is_zero() && started.elapsed() >= deadline {
+                // The operation itself did NOT commit (only retryable —
+                // i.e. definitively-failed — outcomes reach here), but
+                // callers must treat a deadline like any indeterminate
+                // turbulence verdict, so it surfaces as Timeout rather
+                // than the underlying conflict.
+                return Err(Error::Timeout {
+                    op,
+                    elapsed: started.elapsed(),
+                });
+            }
+            let pause = crate::util::backoff_jitter(self.config.retry_backoff, attempts);
+            if !pause.is_zero() {
+                std::thread::sleep(pause);
+            }
             if let Some(shard) = heal_shard {
                 // Leadership moved: every cached answer from the old
                 // leader's tenure is suspect — drop the lot, then
@@ -288,7 +318,7 @@ impl WtfClient {
     /// key absent just because its shard is unreadable.  Value and
     /// version come from one atomic view read (absent keys included).
     pub(crate) fn meta_get(&self, key: &Key) -> Result<(Option<Value>, u64)> {
-        self.with_retry(|| {
+        self.with_retry("meta_get", || {
             self.transport
                 .call(
                     self.meta.clone(),
@@ -647,7 +677,9 @@ impl WtfClient {
     /// the same invalidation trigger as every other heal path.
     pub(crate) fn meta_txn(&self) -> MetaTxn {
         let mut t = MetaTxn::with_transport(self.meta.clone(), self.transport.clone())
-            .heal_budget(self.config.txn_retry_budget);
+            .heal_budget(self.config.txn_retry_budget)
+            .rpc_deadline(self.config.rpc_deadline)
+            .retry_backoff(self.config.retry_backoff);
         if self.cache.is_active() {
             let cache = self.cache.clone();
             t = t.on_heal(Arc::new(move |_shard| cache.clear()));
@@ -661,8 +693,9 @@ impl WtfClient {
     /// read-your-writes); on `NotLeader`, drop the whole cache (the
     /// caller will heal and retry); on `TxnConflict`, drop the named
     /// stale key before the caller's retry re-reads; on an
-    /// INDETERMINATE failure (`NoQuorum`/`ReplicaLost`/
-    /// `RetriesExhausted` mid-commit, or a 2PC left unresolved) the
+    /// INDETERMINATE failure ([`Error::is_indeterminate`]:
+    /// `Timeout`/`NoQuorum`/`ReplicaLost`/`RetriesExhausted`
+    /// mid-commit, or a 2PC left unresolved) the
     /// mutated keys are dropped too — the
     /// transaction may yet resolve to committed when the shard heals
     /// (an orphaned decision record can be adopted), and own-commit
@@ -681,9 +714,7 @@ impl WtfClient {
             Err(Error::TxnConflict { space, key }) => {
                 self.cache.invalidate_key(&Key::new(*space, key.clone()))
             }
-            Err(Error::NoQuorum { .. })
-            | Err(Error::ReplicaLost { .. })
-            | Err(Error::RetriesExhausted { .. }) => self.cache.invalidate_keys(&keys),
+            Err(e) if e.is_indeterminate() => self.cache.invalidate_keys(&keys),
             Err(_) => {}
         }
         out

@@ -77,7 +77,7 @@ impl WtfClient {
         if slice.is_empty() {
             return Ok(());
         }
-        self.with_retry(|| {
+        self.with_retry("slicing.paste", || {
             let mut t = self.meta_txn();
             let highest = self.push_paste_ops(&mut t, inode, offset, slice);
             t.push(MetaOp::InodeSetLenMax {
@@ -140,7 +140,7 @@ impl WtfClient {
             let hole = Slice {
                 pieces: vec![(amount_in_file, SliceData::Hole)],
             };
-            self.with_retry(|| {
+            self.with_retry("slicing.punch", || {
                 let mut t = self.meta_txn();
                 self.push_paste_ops(&mut t, fd.inode, fd.offset, &hole);
                 self.commit_txn(t)?;
@@ -245,7 +245,7 @@ impl WtfClient {
         let dest = normalize(dest)?;
         let (parent, name) = super::fs::split_path(&dest)?;
         let id = self.meta.alloc_inode_id();
-        self.with_retry(|| {
+        self.with_retry("slicing.concat", || {
             let mut t = self.meta_txn();
             let parent_id = match t.get(&Key::path(&parent))? {
                 Some(Value::PathEntry(p)) => p,

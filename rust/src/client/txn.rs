@@ -222,12 +222,21 @@ impl<'c> Transaction<'c> {
     /// Commit.  Retries transparently on metadata conflicts by replaying
     /// the op log (§2.6); aborts to the application only when a replayed
     /// call's outcome diverges.
+    ///
+    /// Under `Config::rpc_deadline` the replay ladder is additionally
+    /// wall-clock bounded: past the deadline the commit surfaces
+    /// [`Error::Timeout`] — indeterminate only if the underlying failure
+    /// was (a conflict is a clean abort; the deadline merely stops the
+    /// healing).  `Config::retry_backoff` spaces the replays with
+    /// jittered exponential backoff.  Both default OFF.
     pub fn commit(mut self) -> Result<()> {
         // Write-behind reconciliation boundary: a WTF transaction must
         // not commit over writes the background flusher hasn't landed
         // (or silently swallowed a failure for).
         self.client.flush()?;
         let budget = self.client.config.txn_retry_budget.max(1);
+        let deadline = self.client.config.rpc_deadline;
+        let started = std::time::Instant::now();
         let mut attempts = 0u32;
         loop {
             let state = std::mem::replace(&mut self.state, TxnState::fresh(self.client));
@@ -248,6 +257,19 @@ impl<'c> Transaction<'c> {
                     self.client.metrics.add_txn_retries(1);
                     if attempts >= budget {
                         return Err(Error::RetriesExhausted { attempts });
+                    }
+                    if !deadline.is_zero() && started.elapsed() >= deadline {
+                        return Err(Error::Timeout {
+                            op: "txn.commit",
+                            elapsed: started.elapsed(),
+                        });
+                    }
+                    let pause = crate::util::backoff_jitter(
+                        self.client.config.retry_backoff,
+                        attempts,
+                    );
+                    if !pause.is_zero() {
+                        std::thread::sleep(pause);
                     }
                     // Replay the log against fresh state.
                     self.replay()?;

@@ -246,26 +246,29 @@ impl WriteBehind {
     /// client never re-enqueues) sharing the queue's single aim.
     fn flush_queue(client: &WtfClient, inode: InodeId, q: InodeQueue) -> Result<()> {
         let (_, version) = client.meta_get(&Key::inode(inode))?;
+        // Every cached key this queue's writes could leave stale —
+        // used both by the fence failure and by an indeterminate flush
+        // failure below.
+        let mut keys = vec![Key::inode(inode)];
+        for op in &q.ops {
+            match op {
+                QueuedWrite::Append { .. } | QueuedWrite::AppendSlice { .. } => {
+                    keys.push(Key::region(RegionId::new(inode, q.aim.region_idx)));
+                }
+                QueuedWrite::WriteAt { offset, data } => {
+                    for (rid, _, _) in
+                        client.split_range(inode, *offset, data.len() as u64)
+                    {
+                        keys.push(Key::region(rid));
+                    }
+                }
+            }
+        }
         if version != q.expected_version {
             // Another writer moved the file while the queue formed: the
             // deferred writes would land somewhere the caller never
             // intended.  Fail the whole queue and drop the file's
             // cached metadata so post-reconciliation reads refetch.
-            let mut keys = vec![Key::inode(inode)];
-            for op in &q.ops {
-                match op {
-                    QueuedWrite::Append { .. } | QueuedWrite::AppendSlice { .. } => {
-                        keys.push(Key::region(RegionId::new(inode, q.aim.region_idx)));
-                    }
-                    QueuedWrite::WriteAt { offset, data } => {
-                        for (rid, _, _) in
-                            client.split_range(inode, *offset, data.len() as u64)
-                        {
-                            keys.push(Key::region(rid));
-                        }
-                    }
-                }
-            }
             client.metadata_cache().invalidate_keys(&keys);
             let k = Key::inode(inode);
             return Err(Error::TxnConflict {
@@ -274,16 +277,27 @@ impl WriteBehind {
             });
         }
         for op in q.ops {
-            match op {
+            let landed = match op {
                 QueuedWrite::Append { data } => {
-                    client.append_bytes_aimed(inode, &data, q.aim)?;
+                    client.append_bytes_aimed(inode, &data, q.aim).map(|_| ())
                 }
                 QueuedWrite::AppendSlice { slice } => {
-                    client.append_slice_aimed(inode, &slice, q.aim)?;
+                    client.append_slice_aimed(inode, &slice, q.aim).map(|_| ())
                 }
                 QueuedWrite::WriteAt { offset, data } => {
-                    client.write_at_direct(inode, offset, &data)?;
+                    client.write_at_direct(inode, offset, &data)
                 }
+            };
+            if let Err(e) = landed {
+                // An INDETERMINATE failure (Timeout/NoQuorum/...) may
+                // have landed the write anyway — the cached view of the
+                // file is suspect either way, so drop it before the
+                // boundary surfaces the error.  Determinate failures
+                // changed nothing and keep the cache warm.
+                if e.is_indeterminate() {
+                    client.metadata_cache().invalidate_keys(&keys);
+                }
+                return Err(e);
             }
         }
         Ok(())

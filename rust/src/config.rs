@@ -78,6 +78,22 @@ pub struct Config {
     /// Max transparent retries of a conflicted transaction before the
     /// retry layer reports `RetriesExhausted`.
     pub txn_retry_budget: u32,
+    /// End-to-end deadline for one client-facing operation's retry loop
+    /// (`with_retry`, `MetaTxn` heals, `Transaction::commit` replays).
+    /// When the budget of transparent retries would carry an operation
+    /// past this wall-clock bound, the loop stops and surfaces
+    /// [`crate::Error::Timeout`] — an *indeterminate* outcome, handled
+    /// exactly like `NoQuorum` by commit paths.  `Duration::ZERO` (the
+    /// default) disables the deadline; retries are bounded only by
+    /// `txn_retry_budget`.
+    pub rpc_deadline: Duration,
+    /// Base delay for bounded exponential backoff between transparent
+    /// retries: attempt `n` sleeps a uniformly random duration in
+    /// `[0, base * 2^(n-1))`, capped at 64x base (full jitter, so
+    /// colliding clients decorrelate instead of re-colliding in
+    /// lockstep).  `Duration::ZERO` (the default) disables backoff and
+    /// keeps the historical retry-immediately behavior.
+    pub retry_backoff: Duration,
     /// GC: storage servers start collecting above this garbage fraction.
     pub gc_high_watermark: f64,
     /// GC: and stop below this one (§2.8: 20%).
@@ -178,6 +194,8 @@ impl Default for Config {
             data_dir: None,
             meta_txn_floor: Duration::ZERO,
             txn_retry_budget: 16,
+            rpc_deadline: Duration::ZERO,
+            retry_backoff: Duration::ZERO,
             gc_high_watermark: 0.5,
             gc_low_watermark: 0.2,
             transport_workers: 8,
@@ -499,6 +517,21 @@ mod tests {
         bad.wal_dir = Some(std::env::temp_dir());
         bad.wal_checkpoint_every = 0;
         assert!(bad.validate().is_err(), "checkpoint interval 0");
+    }
+
+    #[test]
+    fn deadlines_and_backoff_default_off() {
+        // Knobs-off runs must behave byte-identically to the pre-chaos
+        // tree: no deadline clock, no backoff sleeps.
+        let d = Config::default();
+        assert!(d.rpc_deadline.is_zero());
+        assert!(d.retry_backoff.is_zero());
+        let t = Config::test();
+        assert!(t.rpc_deadline.is_zero() && t.retry_backoff.is_zero());
+        let mut on = Config::replicated_2pc_test();
+        on.rpc_deadline = Duration::from_secs(2);
+        on.retry_backoff = Duration::from_millis(1);
+        on.validate().unwrap();
     }
 
     #[test]

@@ -105,24 +105,43 @@ impl Lease {
 }
 
 /// One replica's grant bookkeeping: at most one live lease at a time,
-/// plus the post-recovery hold-off window.
+/// plus the post-recovery hold-off window and the highest grant *epoch*
+/// ever honored.  The epoch orders grant requests end-to-end: the
+/// front-end stamps every election round with a fresh, strictly larger
+/// epoch, so a duplicated or delayed-then-redelivered `LeaseRequest` is
+/// recognizable as stale no matter when the network surfaces it.
 #[derive(Clone, Copy, Debug, Default)]
 pub struct GrantState {
     granted: Option<Lease>,
     hold_off_until: u64,
+    last_epoch: u64,
 }
 
 impl GrantState {
-    /// Grant (or renew) a lease to `leader` until `until_ms`.  Refused
-    /// while a different leader's grant is unexpired or during the
-    /// post-recovery hold-off.  The same leader may always extend.
-    pub fn grant(&mut self, now_ms: u64, leader: u32, until_ms: u64) -> bool {
+    /// Grant (or renew) a lease to `leader` until `until_ms`, under
+    /// grant-round `epoch`.  Refused while a different leader's grant is
+    /// unexpired or during the post-recovery hold-off.  A fresh-epoch
+    /// renewal by the same leader may extend; a **stale** epoch (replay
+    /// of an envelope already answered) is acknowledged idempotently for
+    /// the current holder but NEVER moves the recorded expiry, and is
+    /// refused outright for anyone else — re-delivered grants must not
+    /// extend leases.
+    pub fn grant(&mut self, now_ms: u64, leader: u32, until_ms: u64, epoch: u64) -> bool {
         if now_ms < self.hold_off_until {
             return false;
+        }
+        if epoch <= self.last_epoch {
+            // At-least-once delivery: this envelope was already answered
+            // once.  Repeat the positive answer for the holder it went
+            // to (the duplicate's response is discarded anyway), but the
+            // stale evidence must not extend the lease or seat a new
+            // holder.
+            return matches!(self.granted, Some(l) if l.holder == leader);
         }
         match self.granted {
             Some(l) if l.holder != leader && l.covers(now_ms) => false,
             prior => {
+                self.last_epoch = epoch;
                 // A same-holder renewal never shrinks the recorded
                 // expiry: concurrent renewals may arrive out of order.
                 let until_ms = match prior {
@@ -177,23 +196,56 @@ mod tests {
     #[test]
     fn no_overlapping_grants_to_different_leaders() {
         let mut g = GrantState::default();
-        assert!(g.grant(0, 1, 50));
-        assert!(!g.grant(10, 2, 60), "overlapping grant to another leader");
-        // Same leader renews freely.
-        assert!(g.grant(10, 1, 80));
+        assert!(g.grant(0, 1, 50, 1));
+        assert!(!g.grant(10, 2, 60, 2), "overlapping grant to another leader");
+        // Same leader renews freely under a fresh epoch.
+        assert!(g.grant(10, 1, 80, 3));
         // After expiry anyone may acquire.
-        assert!(g.grant(80, 2, 120));
+        assert!(g.grant(80, 2, 120, 4));
         assert_eq!(g.live_grant(90), Some(Lease { holder: 2, until_ms: 120 }));
     }
 
     #[test]
     fn recovery_hold_off_blocks_grants() {
         let mut g = GrantState::default();
-        assert!(g.grant(0, 1, 50));
+        assert!(g.grant(0, 1, 50, 1));
         g.hold_off(100);
-        assert!(!g.grant(60, 1, 120), "hold-off refuses even the old holder");
+        assert!(!g.grant(60, 1, 120, 2), "hold-off refuses even the old holder");
         assert_eq!(g.live_grant(60), None, "pre-crash grant forgotten");
-        assert!(g.grant(100, 2, 150));
+        assert!(g.grant(100, 2, 150, 3));
+    }
+
+    #[test]
+    fn replayed_grant_acks_the_holder_but_never_extends() {
+        let mut g = GrantState::default();
+        assert!(g.grant(0, 1, 50, 7));
+        // The network re-delivers the answered envelope — this time a
+        // delayed retransmission carrying a later until_ms.  The holder
+        // gets the same positive answer, but the lease must not move.
+        assert!(g.grant(10, 1, 99, 7), "idempotent ack for the holder");
+        assert_eq!(
+            g.live_grant(10),
+            Some(Lease { holder: 1, until_ms: 50 }),
+            "a re-delivered grant extended the lease"
+        );
+        // An even staler epoch: same answer, same non-extension.
+        assert!(g.grant(20, 1, 500, 3));
+        assert_eq!(g.live_grant(20), Some(Lease { holder: 1, until_ms: 50 }));
+    }
+
+    #[test]
+    fn stale_epoch_from_another_leader_is_rejected_even_after_expiry() {
+        let mut g = GrantState::default();
+        assert!(g.grant(0, 1, 50, 7));
+        // Holder 1's lease has expired, but this envelope is a replay of
+        // a grant round that already completed — a new holder may only
+        // seat itself with fresh evidence.
+        assert!(!g.grant(60, 2, 120, 7), "stale-epoch takeover");
+        assert!(!g.grant(60, 2, 120, 2), "ancient-epoch takeover");
+        assert_eq!(g.live_grant(60), None);
+        // Fresh epoch after expiry: a normal handover.
+        assert!(g.grant(60, 2, 120, 8));
+        assert_eq!(g.live_grant(61), Some(Lease { holder: 2, until_ms: 120 }));
     }
 
     #[test]

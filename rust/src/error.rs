@@ -10,6 +10,7 @@
 
 use crate::types::{ServerId, Space};
 use std::fmt;
+use std::time::Duration;
 
 /// Library-wide result alias.
 pub type Result<T, E = Error> = std::result::Result<T, E>;
@@ -32,6 +33,14 @@ pub enum Error {
 
     /// Too many consecutive conflict-retries; the transaction gave up.
     RetriesExhausted { attempts: u32 },
+
+    /// An end-to-end RPC deadline (`Config::rpc_deadline`) expired while
+    /// `op` was still retrying, or the network (turbulence layer) ate an
+    /// envelope outright.  The outcome of the last attempt is UNKNOWN:
+    /// commit paths must treat this exactly like `NoQuorum`
+    /// (indeterminate — see [`Error::is_indeterminate`]); pure reads may
+    /// retry freely.
+    Timeout { op: &'static str, elapsed: Duration },
 
     NotFound(String),
 
@@ -102,6 +111,10 @@ impl fmt::Display for Error {
             Error::RetriesExhausted { attempts } => write!(
                 f,
                 "transaction retry budget exhausted after {attempts} attempts"
+            ),
+            Error::Timeout { op, elapsed } => write!(
+                f,
+                "{op} timed out after {elapsed:?} (outcome unknown)"
             ),
             Error::NotFound(p) => write!(f, "no such file or directory: {p}"),
             Error::AlreadyExists(p) => write!(f, "file exists: {p}"),
@@ -176,11 +189,66 @@ impl Error {
             Error::TxnConflict { .. } | Error::CondAppendFailed { .. }
         )
     }
+
+    /// True when the outcome of the attempted operation is UNKNOWN: the
+    /// request may have landed — and may yet resolve to committed after
+    /// a heal — even though the caller saw an error.  A commit path
+    /// seeing one of these must NOT blindly retry under a fresh
+    /// transaction id (double-apply hazard) and must drop any cached
+    /// state the in-flight mutation covers.  Every indeterminate-outcome
+    /// site (commit_txn's cache drop, the write-behind deferred failure,
+    /// 2PC resolution) classifies through this one helper.
+    pub fn is_indeterminate(&self) -> bool {
+        matches!(
+            self,
+            Error::Timeout { .. }
+                | Error::NoQuorum { .. }
+                | Error::ReplicaLost { .. }
+                | Error::RetriesExhausted { .. }
+        )
+    }
 }
 
 #[cfg(feature = "xla-runtime")]
 impl From<xla::Error> for Error {
     fn from(e: xla::Error) -> Self {
         Error::Xla(e.to_string())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn indeterminate_is_exactly_the_unknown_outcome_class() {
+        let yes = [
+            Error::Timeout {
+                op: "commit",
+                elapsed: Duration::from_millis(5),
+            },
+            Error::NoQuorum { alive: 1, total: 3 },
+            Error::ReplicaLost { shard: 0, replica: 2 },
+            Error::RetriesExhausted { attempts: 16 },
+        ];
+        for e in &yes {
+            assert!(e.is_indeterminate(), "{e} should be indeterminate");
+            assert!(!e.is_retryable(), "{e} must not be blindly retried");
+        }
+        let no = [
+            Error::TxnConflict {
+                space: Space::Inode,
+                key: "k".into(),
+            },
+            Error::TxnAborted { reason: "r".into() },
+            Error::NotLeader {
+                shard: 0,
+                hint: Some(1),
+            },
+            Error::NotFound("p".into()),
+        ];
+        for e in &no {
+            assert!(!e.is_indeterminate(), "{e} has a determinate outcome");
+        }
     }
 }

@@ -531,11 +531,18 @@ impl GroupReplica {
     /// acknowledge — it crashes (degrading the quorum) rather than risk
     /// forgetting an acknowledged promise after a restart.
     fn wal_log(&self, g: &mut ReplicaInner, rec: WalRecord) -> Result<()> {
+        self.wal_log_batch(g, std::slice::from_ref(&rec))
+    }
+
+    /// Batch form of [`GroupReplica::wal_log`]: all records hit the log
+    /// in one append — one sync decision, so records acknowledged
+    /// together share one `fsync` under `WalSync::Always`.
+    fn wal_log_batch(&self, g: &mut ReplicaInner, recs: &[WalRecord]) -> Result<()> {
         let mut wal = self.wal.lock().unwrap();
         let Some(w) = wal.as_mut() else {
             return Ok(());
         };
-        match w.append(&rec) {
+        match w.append_batch(recs) {
             Ok(()) => Ok(()),
             Err(e) => {
                 *wal = None;
@@ -797,11 +804,45 @@ impl GroupReplica {
     /// Feed one chosen entry from a live peer during durable-recovery
     /// catch-up — the same path as a transport learn, WAL included.
     pub(crate) fn learn_chosen(&self, slot: u64, entry: LogEntry) -> Result<()> {
+        self.learn_chosen_batch(slot, vec![entry])
+    }
+
+    /// Learn a run of consecutive chosen entries starting at `from`,
+    /// with ONE durability point: every novel `Chosen` record is
+    /// appended in a single WAL batch — one `fsync` under
+    /// `WalSync::Always` instead of one per record — before any learn
+    /// is acknowledged.  Records that acknowledge together sync
+    /// together (the fsync group commit of ROADMAP item 1); crash
+    /// atomicity is unchanged because un-acked suffixes may always be
+    /// lost.
+    pub(crate) fn learn_chosen_batch(&self, from: u64, entries: Vec<LogEntry>) -> Result<()> {
         let mut g = self.lock_inner();
         if !g.alive {
             return Err(self.lost());
         }
-        self.learn_with_wal(&mut g, slot, entry)
+        let recs: Vec<WalRecord> = entries
+            .iter()
+            .enumerate()
+            .filter_map(|(i, e)| {
+                let slot = from + i as u64;
+                let novel = slot >= g.log.len() as u64 && !g.pending.contains_key(&slot);
+                novel.then(|| WalRecord::Chosen {
+                    slot,
+                    entry: e.clone(),
+                })
+            })
+            .collect();
+        let any_novel = !recs.is_empty();
+        if any_novel {
+            self.wal_log_batch(&mut g, &recs)?;
+        }
+        for (i, e) in entries.into_iter().enumerate() {
+            Self::learn_locked(&mut g, from + i as u64, e);
+        }
+        if any_novel {
+            self.maybe_checkpoint(&mut g)?;
+        }
+        Ok(())
     }
 
     fn lost(&self) -> Error {
@@ -958,14 +999,19 @@ impl GroupReplica {
                 Ok(Response::LogSuffix(g.log[from..].to_vec()))
             }
             Request::LeaseRequest {
-                leader, until_ms, ..
+                leader,
+                until_ms,
+                epoch,
+                ..
             } => {
                 let mut g = self.lock_inner();
                 if !g.alive {
                     return Err(self.lost());
                 }
                 let now = self.clock.now_ms();
-                Ok(Response::LeaseGranted(g.grant.grant(now, *leader, *until_ms)))
+                Ok(Response::LeaseGranted(g.grant.grant(
+                    now, *leader, *until_ms, *epoch,
+                )))
             }
             other => Err(Error::Unsupported(format!(
                 "metadata shard replica cannot serve {other:?}"
@@ -999,6 +1045,15 @@ pub struct ShardGroup {
     pub(crate) gate: Mutex<()>,
     elections: AtomicU64,
     lease_reads: AtomicU64,
+    /// Monotone grant-round stamp carried in every `LeaseRequest`; a
+    /// replica refuses to honor an epoch it already answered, so the
+    /// network re-delivering a grant can never extend a lease.
+    lease_epoch: AtomicU64,
+    /// Times a published leaseholder stepped down because its lease no
+    /// longer covered "now" at read time (a delayed refresh pushed past
+    /// the window) — the read then re-establishes a quorum-granted
+    /// lease instead of serving possibly-stale local state.
+    stepdowns: AtomicU64,
 }
 
 #[derive(Debug, Default)]
@@ -1034,6 +1089,8 @@ impl ShardGroup {
             gate: Mutex::new(()),
             elections: AtomicU64::new(0),
             lease_reads: AtomicU64::new(0),
+            lease_epoch: AtomicU64::new(0),
+            stepdowns: AtomicU64::new(0),
         }
     }
 
@@ -1071,6 +1128,13 @@ impl ShardGroup {
     /// Reads served locally by a leaseholder, no quorum round.
     pub fn lease_reads(&self) -> u64 {
         self.lease_reads.load(Ordering::Relaxed)
+    }
+
+    /// Times a leaseholder stepped down instead of serving a local read
+    /// past a lease it could not refresh (observability; chaos tests
+    /// assert this fires under delay faults).
+    pub fn stepdowns(&self) -> u64 {
+        self.stepdowns.load(Ordering::Relaxed)
     }
 
     fn lowest_alive(&self) -> Option<u32> {
@@ -1120,6 +1184,10 @@ impl ShardGroup {
         loop {
             let cand = self.lowest_alive().ok_or(Error::NoQuorum { alive: 0, total })?;
             let until = self.clock.now_ms() + self.lease_ms;
+            // Every grant round gets a fresh epoch, so a replica can
+            // tell this round's envelopes from network re-deliveries of
+            // an earlier round (which must not extend anything).
+            let epoch = self.lease_epoch.fetch_add(1, Ordering::Relaxed) + 1;
             let batch: Vec<(Peer, Request)> = self
                 .replicas
                 .iter()
@@ -1130,6 +1198,7 @@ impl ShardGroup {
                             shard: self.shard,
                             leader: cand,
                             until_ms: until,
+                            epoch,
                         },
                     )
                 })
@@ -1650,6 +1719,23 @@ impl ShardGroup {
     ) -> Result<R> {
         loop {
             let leader = self.ensure_leader(auto_elect)?;
+            // Step-down rule (network fault model, PR 8): immediately
+            // before serving from local state, verify the published
+            // lease still covers *now*.  A grant round whose envelopes
+            // the network delayed can publish a lease that already
+            // expired in flight — a holder that could not refresh within
+            // its window must not serve leaseholder-local reads; it
+            // steps down and the retry re-establishes a quorum-granted
+            // lease (the election broadcast IS the quorum round).
+            {
+                let v = self.view.lock().unwrap();
+                if v.leader != Some(leader) || self.clock.now_ms() >= v.lease_until {
+                    drop(v);
+                    self.stepdowns.fetch_add(1, Ordering::Relaxed);
+                    self.invalidate_leader(leader);
+                    continue;
+                }
+            }
             match self.replicas[leader as usize].read_inner(&f) {
                 Some(out) => {
                     self.lease_reads.fetch_add(1, Ordering::Relaxed);
@@ -1814,9 +1900,10 @@ impl ShardGroup {
                             },
                         )?
                         .into_log_suffix()?;
-                    for (i, e) in entries.into_iter().enumerate() {
-                        r.learn_chosen(from + i as u64, e)?;
-                    }
+                    // One WAL batch for the whole catch-up suffix: the
+                    // entries acknowledge together, so they sync
+                    // together.
+                    r.learn_chosen_batch(from, entries)?;
                 }
             }
             return Ok(());
@@ -2383,5 +2470,177 @@ mod tests {
         assert_eq!(g.local_get(&b, true).unwrap(), Some((Value::U64(7), 1)));
         g.recover_replica(0).unwrap();
         assert!(g.converged());
+    }
+
+    #[test]
+    fn replayed_and_stale_paxos_envelopes_are_safe() {
+        let g = group();
+        g.commit_entry(&put_entry(1, &k("a"), 1), true).unwrap();
+        let peer = g.replica(1).unwrap().clone() as Peer;
+        let high = Ballot {
+            round: 50,
+            proposer: 0,
+        };
+        // Prepare, then the network re-delivers the same envelope: the
+        // promise is already recorded, so the replay is stale-ballot
+        // rejected — and a rejection changes nothing.
+        let prepare = Request::PaxosPrepare {
+            shard: 0,
+            slot: 5,
+            ballot: high,
+        };
+        let (granted, _) = g
+            .transport
+            .call(peer.clone(), prepare.clone())
+            .unwrap()
+            .into_promised()
+            .unwrap();
+        assert!(granted);
+        let (replayed, _) = g
+            .transport
+            .call(peer.clone(), prepare)
+            .unwrap()
+            .into_promised()
+            .unwrap();
+        assert!(!replayed, "re-delivered prepare must not be re-granted");
+        // A genuinely stale (lower) ballot is rejected the same way.
+        let (low, _) = g
+            .transport
+            .call(
+                peer.clone(),
+                Request::PaxosPrepare {
+                    shard: 0,
+                    slot: 5,
+                    ballot: Ballot {
+                        round: 7,
+                        proposer: 2,
+                    },
+                },
+            )
+            .unwrap()
+            .into_promised()
+            .unwrap();
+        assert!(!low, "stale-ballot prepare rejected");
+        // Accept at the promised ballot, then its re-delivery: both
+        // ack, and the accepted value is simply re-recorded unchanged.
+        let entry = put_entry(9, &k("dup"), 9);
+        let accept = Request::PaxosAccept {
+            shard: 0,
+            slot: 5,
+            ballot: high,
+            entry: entry.clone(),
+        };
+        assert_eq!(
+            g.transport.call(peer.clone(), accept.clone()).unwrap(),
+            Response::Accepted(true)
+        );
+        assert_eq!(
+            g.transport.call(peer.clone(), accept).unwrap(),
+            Response::Accepted(true),
+            "duplicate accept re-acks idempotently"
+        );
+        // A stale-ballot accept cannot clobber it.
+        assert_eq!(
+            g.transport
+                .call(
+                    peer.clone(),
+                    Request::PaxosAccept {
+                        shard: 0,
+                        slot: 5,
+                        ballot: Ballot {
+                            round: 7,
+                            proposer: 2,
+                        },
+                        entry: put_entry(66, &k("evil"), 6),
+                    },
+                )
+                .unwrap(),
+            Response::Accepted(false),
+            "stale-ballot accept rejected"
+        );
+    }
+
+    #[test]
+    fn replayed_learn_applies_exactly_once() {
+        let g = group();
+        let r = k("r");
+        let e = eof_append_entry(5, &r);
+        g.commit_entry(&e, true).unwrap();
+        // The network re-delivers the chosen entry to every replica —
+        // including the ones that already learned it in the commit.
+        for idx in 0..3 {
+            let peer = g.replica(idx).unwrap().clone() as Peer;
+            for _ in 0..2 {
+                assert_eq!(
+                    g.transport
+                        .call(
+                            peer.clone(),
+                            Request::PaxosLearn {
+                                shard: 0,
+                                slot: 0,
+                                entry: e.clone(),
+                            },
+                        )
+                        .unwrap(),
+                    Response::Learned
+                );
+            }
+        }
+        let (v, ver) = g.local_get(&r, true).unwrap().unwrap();
+        assert_eq!(v.as_region().unwrap().eof, 8, "append applied exactly once");
+        assert_eq!(ver, 1);
+        assert_eq!(g.log_len(true).unwrap(), 1, "re-learns appended nothing");
+        assert!(g.converged());
+    }
+
+    #[test]
+    fn redelivered_lease_grant_does_not_extend_the_lease() {
+        let g = group();
+        g.commit_entry(&put_entry(1, &k("a"), 1), true).unwrap();
+        let epoch_used = g.lease_epoch.load(Ordering::Relaxed);
+        assert!(epoch_used >= 1, "election stamped an epoch");
+        // Re-deliver the (already answered) grant envelope to replica 1
+        // with a much later until_ms — a delayed retransmission.  The
+        // holder is re-acked, but the recorded grant must not move.
+        let peer = g.replica(1).unwrap().clone() as Peer;
+        let replay = Request::LeaseRequest {
+            shard: 0,
+            leader: 0,
+            until_ms: self::far_future_ms(),
+            epoch: epoch_used,
+        };
+        assert_eq!(
+            g.transport.call(peer.clone(), replay).unwrap(),
+            Response::LeaseGranted(true),
+            "same-holder replay is an idempotent ack"
+        );
+        let grant = g
+            .replica(1)
+            .unwrap()
+            .read_inner(|inner| inner.grant.live_grant(g.clock.now_ms()))
+            .unwrap()
+            .expect("grant live");
+        assert!(
+            grant.until_ms <= g.clock.now_ms() + g.lease_ms,
+            "replayed grant extended the lease to {}",
+            grant.until_ms
+        );
+        // A different would-be leader replaying the same epoch is
+        // refused outright.
+        let takeover = Request::LeaseRequest {
+            shard: 0,
+            leader: 2,
+            until_ms: self::far_future_ms(),
+            epoch: epoch_used,
+        };
+        assert_eq!(
+            g.transport.call(peer, takeover).unwrap(),
+            Response::LeaseGranted(false),
+            "stale-epoch takeover rejected"
+        );
+    }
+
+    fn far_future_ms() -> u64 {
+        1 << 40
     }
 }

@@ -326,6 +326,12 @@ fn dup_error(e: &Error) -> Error {
             shard: *shard,
             replica: *replica,
         },
+        // Duplicated verbatim so every batch member classifies the
+        // outcome as indeterminate, exactly like the lone-commit path.
+        Error::Timeout { op, elapsed } => Error::Timeout {
+            op,
+            elapsed: *elapsed,
+        },
         Error::CorruptMetadata(msg) => Error::CorruptMetadata(msg.clone()),
         Error::CondAppendFailed { eof, len, cap } => Error::CondAppendFailed {
             eof: *eof,
@@ -1674,6 +1680,14 @@ impl ReplicatedMetaStore {
     /// Total leader elections across groups (observability).
     pub fn elections(&self) -> u64 {
         self.groups.iter().map(|g| g.elections()).sum()
+    }
+
+    /// Total lease step-downs across groups: the leaseholder found its
+    /// lease no longer covered a local read (e.g. the grant window ran
+    /// out while a delayed quorum round was in flight) and fell back to
+    /// a fresh quorum election instead of serving a possibly-stale read.
+    pub fn stepdowns(&self) -> u64 {
+        self.groups.iter().map(|g| g.stepdowns()).sum()
     }
 }
 

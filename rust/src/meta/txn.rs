@@ -29,6 +29,13 @@ pub struct MetaTxn {
     /// Max NotLeader heal-retries per read (the deployment threads
     /// `Config::txn_retry_budget` through here).
     heal_budget: u32,
+    /// End-to-end wall-clock bound across ALL heal-retries of one read
+    /// (`Config::rpc_deadline`); ZERO disables.  When exceeded the read
+    /// surfaces [`Error::Timeout`] instead of healing again.
+    rpc_deadline: std::time::Duration,
+    /// Base for jittered exponential backoff between heal-retries
+    /// (`Config::retry_backoff`); ZERO retries immediately.
+    retry_backoff: std::time::Duration,
     /// Called with the shard id BEFORE every internal NotLeader heal.
     /// The client installs its read-cache clear here: every heal must
     /// drop the cache, including the ones this transaction performs on
@@ -45,6 +52,8 @@ impl MetaTxn {
             read_order: Vec::new(),
             ops: Vec::new(),
             heal_budget: 16,
+            rpc_deadline: std::time::Duration::ZERO,
+            retry_backoff: std::time::Duration::ZERO,
             heal_hook: None,
         }
     }
@@ -60,6 +69,21 @@ impl MetaTxn {
     /// Override the per-read NotLeader heal-retry budget.
     pub fn heal_budget(mut self, budget: u32) -> Self {
         self.heal_budget = budget.max(1);
+        self
+    }
+
+    /// Bound the END-TO-END wall-clock of one read's heal-retry ladder;
+    /// past it the read surfaces [`Error::Timeout`].  ZERO (the
+    /// default) disables the bound.
+    pub fn rpc_deadline(mut self, deadline: std::time::Duration) -> Self {
+        self.rpc_deadline = deadline;
+        self
+    }
+
+    /// Insert jittered exponential backoff (base `backoff`) between
+    /// heal-retries.  ZERO (the default) retries immediately.
+    pub fn retry_backoff(mut self, backoff: std::time::Duration) -> Self {
+        self.retry_backoff = backoff;
         self
     }
 
@@ -88,6 +112,7 @@ impl MetaTxn {
         // coexisted.
         let (value, version) = match &self.transport {
             Some(t) => {
+                let started = std::time::Instant::now();
                 let mut attempts = 0u32;
                 loop {
                     match t
@@ -100,6 +125,19 @@ impl MetaTxn {
                         Ok(pair) => break pair,
                         Err(Error::NotLeader { shard, .. }) if attempts < self.heal_budget => {
                             attempts += 1;
+                            if !self.rpc_deadline.is_zero()
+                                && started.elapsed() >= self.rpc_deadline
+                            {
+                                return Err(Error::Timeout {
+                                    op: "meta_txn.get",
+                                    elapsed: started.elapsed(),
+                                });
+                            }
+                            let pause =
+                                crate::util::backoff_jitter(self.retry_backoff, attempts);
+                            if !pause.is_zero() {
+                                std::thread::sleep(pause);
+                            }
                             if let Some(hook) = &self.heal_hook {
                                 hook(shard);
                             }

@@ -1,0 +1,310 @@
+//! Deterministic message-fault injection ("turbulence") for the
+//! in-process [`Transport`](super::Transport).
+//!
+//! The protocol stack above the transport — Paxos groups, 2PC, leases —
+//! must survive a network that drops, delays, duplicates, reorders, and
+//! partitions messages.  The in-process transport delivers every
+//! envelope synchronously and exactly once, so this layer *synthesizes*
+//! each network fault at the send site:
+//!
+//! * **drop / symmetric partition** — the envelope never reaches the
+//!   destination; the caller gets a typed [`Error::Timeout`] in place
+//!   (its per-envelope wait expired), degrading the quorum exactly like
+//!   an unreachable peer.  Because results come back per envelope, one
+//!   cut destination never stalls the rest of a scatter.
+//! * **asymmetric partition (ack loss)** — the request IS served (the
+//!   replica's state may change) but the acknowledgment is lost: the
+//!   caller sees [`Error::Timeout`] while the server moved.  This is the
+//!   canonical indeterminate-outcome generator.
+//! * **delay** — the shared [`LeaseClock`] jumps forward before the
+//!   envelope is served, modeling a message that arrived late — possibly
+//!   after the lease window it was trying to refresh.
+//! * **duplicate** — the envelope is served twice back-to-back; the
+//!   second response is returned (the first ack "was lost on the wire").
+//!   Handlers must be idempotent for this to be invisible.
+//! * **reorder** — a scatter's envelopes are issued in a seeded
+//!   permutation instead of batch order (results still gather in the
+//!   caller's order), so replicas observe learn/accept traffic out of
+//!   order.
+//!
+//! Everything is driven by a seeded [`Rng`], so a schedule replays
+//! bit-for-bit from its seed (the chaos CI matrix derives seeds from
+//! `WTF_TEST_SEED` and failures print them).  With no [`Turbulence`]
+//! installed the transport's behavior is byte-identical to the
+//! fault-free build — the hook is one relaxed atomic load.
+
+use super::transport::{Peer, Plane, Request};
+use crate::coordinator::lease::LeaseClock;
+use crate::error::Error;
+use crate::util::Rng;
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
+
+/// How a scripted partition treats traffic to a cut destination.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum CutMode {
+    /// Symmetric: the request never arrives; the destination's state is
+    /// untouched and the caller times out.
+    Both,
+    /// Asymmetric: the request arrives and is served (state may move),
+    /// but the acknowledgment is lost — the caller times out with the
+    /// outcome genuinely unknown.
+    AckLoss,
+}
+
+/// One per-plane probabilistic fault rule.  Probabilities are
+/// per-1024 (integer dice keep schedules exactly reproducible across
+/// platforms); a field of 0 disables that fault.  `plane`/`shard` of
+/// `None` match every envelope.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct TurbulenceRule {
+    /// Restrict to one plane (`None` = all planes).
+    pub plane: Option<Plane>,
+    /// Restrict to one shard's traffic (`None` = all; envelopes that
+    /// carry no shard — the client-facing metadata/data planes — only
+    /// match shard-less rules).
+    pub shard: Option<u32>,
+    /// Chance (per 1024) the envelope is dropped outright.
+    pub drop: u32,
+    /// Chance (per 1024) the envelope is served twice (duplicate
+    /// delivery; the handler must be idempotent).
+    pub dup: u32,
+    /// Chance (per 1024) the envelope is delayed: the shared lease
+    /// clock advances by `delay_ms` before the envelope is served.
+    pub delay: u32,
+    /// Clock advance applied when `delay` fires.  Bounded by the rule
+    /// author; choose `> lease_ms` to push renewals past their window.
+    pub delay_ms: u64,
+    /// Chance (per 1024), evaluated once per scatter containing a
+    /// matching envelope, that the whole scatter is issued in a seeded
+    /// permutation (reordered delivery).
+    pub reorder: u32,
+}
+
+impl TurbulenceRule {
+    fn matches(&self, req: &Request) -> bool {
+        if let Some(p) = self.plane {
+            if req.plane() != p {
+                return false;
+            }
+        }
+        if let Some(s) = self.shard {
+            if req.shard() != Some(s) {
+                return false;
+            }
+        }
+        true
+    }
+}
+
+/// What the turbulence layer decided for one envelope.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub(crate) enum Delivery {
+    Deliver,
+    Duplicate,
+    Drop,
+    AckLoss,
+}
+
+/// The seeded turbulence layer.  Install on a transport with
+/// [`Transport::set_turbulence`](super::Transport::set_turbulence);
+/// script partitions with [`Turbulence::cut`]/[`Turbulence::heal_cut`]
+/// and background noise with [`Turbulence::add_rule`].
+pub struct Turbulence {
+    rng: Mutex<Rng>,
+    rules: Mutex<Vec<TurbulenceRule>>,
+    /// Cut destinations, keyed by handler identity (thin pointer).
+    cuts: Mutex<HashMap<usize, CutMode>>,
+    /// The cluster's shared clock: delays advance it so "this message
+    /// arrived late" and "the lease window passed" are the same fact.
+    clock: LeaseClock,
+    /// Synthesized per-envelope wait behind every injected timeout.
+    timeout_ms: u64,
+    dropped: AtomicU64,
+    duplicated: AtomicU64,
+    delayed: AtomicU64,
+    reordered: AtomicU64,
+    acks_lost: AtomicU64,
+}
+
+fn peer_key(peer: &Peer) -> usize {
+    Arc::as_ptr(peer) as *const () as usize
+}
+
+impl Turbulence {
+    /// A turbulence layer deterministic in `seed`, advancing `clock`
+    /// (the cluster's lease clock) on delay faults.
+    pub fn new(seed: u64, clock: LeaseClock) -> Arc<Turbulence> {
+        Arc::new(Turbulence {
+            rng: Mutex::new(Rng::new(seed)),
+            rules: Mutex::new(Vec::new()),
+            cuts: Mutex::new(HashMap::new()),
+            clock,
+            timeout_ms: 5,
+            dropped: AtomicU64::new(0),
+            duplicated: AtomicU64::new(0),
+            delayed: AtomicU64::new(0),
+            reordered: AtomicU64::new(0),
+            acks_lost: AtomicU64::new(0),
+        })
+    }
+
+    /// Add a probabilistic fault rule (rules are tried in insertion
+    /// order; the first matching rule rolls the dice for its envelope).
+    pub fn add_rule(&self, rule: TurbulenceRule) {
+        self.rules.lock().unwrap().push(rule);
+    }
+
+    /// Remove every probabilistic rule (scripted cuts stay).
+    pub fn clear_rules(&self) {
+        self.rules.lock().unwrap().clear();
+    }
+
+    /// Cut the link to `peer`: every envelope addressed to it fails
+    /// with [`Error::Timeout`] until [`Turbulence::heal_cut`].  With
+    /// [`CutMode::AckLoss`] the envelope is still served first.
+    pub fn cut(&self, peer: &Peer, mode: CutMode) {
+        self.cuts.lock().unwrap().insert(peer_key(peer), mode);
+    }
+
+    /// Restore the link to `peer`.
+    pub fn heal_cut(&self, peer: &Peer) {
+        self.cuts.lock().unwrap().remove(&peer_key(peer));
+    }
+
+    /// Restore every cut link.
+    pub fn heal_all_cuts(&self) {
+        self.cuts.lock().unwrap().clear();
+    }
+
+    /// The typed error behind every synthesized drop/ack-loss.
+    pub(crate) fn timeout(&self, op: &'static str) -> Error {
+        Error::Timeout {
+            op,
+            elapsed: Duration::from_millis(self.timeout_ms),
+        }
+    }
+
+    /// Decide the fate of one envelope.  Delay faults take effect here
+    /// (the clock advances), independent of the delivery verdict.
+    pub(crate) fn on_send(&self, to: &Peer, req: &Request) -> Delivery {
+        if let Some(mode) = self.cuts.lock().unwrap().get(&peer_key(to)) {
+            return match mode {
+                CutMode::Both => {
+                    self.dropped.fetch_add(1, Ordering::Relaxed);
+                    Delivery::Drop
+                }
+                CutMode::AckLoss => {
+                    self.acks_lost.fetch_add(1, Ordering::Relaxed);
+                    Delivery::AckLoss
+                }
+            };
+        }
+        let rule = {
+            let rules = self.rules.lock().unwrap();
+            match rules.iter().find(|r| r.matches(req)) {
+                Some(r) => *r,
+                None => return Delivery::Deliver,
+            }
+        };
+        let mut rng = self.rng.lock().unwrap();
+        if rule.delay > 0 && rng.next_below(1024) < u64::from(rule.delay) {
+            // The message is in flight while the world moves on.
+            self.delayed.fetch_add(1, Ordering::Relaxed);
+            self.clock.advance(rule.delay_ms);
+        }
+        if rule.drop > 0 && rng.next_below(1024) < u64::from(rule.drop) {
+            self.dropped.fetch_add(1, Ordering::Relaxed);
+            return Delivery::Drop;
+        }
+        if rule.dup > 0 && rng.next_below(1024) < u64::from(rule.dup) {
+            self.duplicated.fetch_add(1, Ordering::Relaxed);
+            return Delivery::Duplicate;
+        }
+        Delivery::Deliver
+    }
+
+    /// Maybe reorder one scatter: if any envelope matches a rule with
+    /// `reorder > 0` and the dice fire, return the seeded permutation
+    /// the scatter must be issued in.  `None` means batch order.
+    pub(crate) fn scatter_order(&self, batch: &[(Peer, Request)]) -> Option<Vec<usize>> {
+        if batch.len() < 2 {
+            return None;
+        }
+        let chance = {
+            let rules = self.rules.lock().unwrap();
+            batch
+                .iter()
+                .filter_map(|(_, req)| {
+                    rules
+                        .iter()
+                        .find(|r| r.matches(req))
+                        .map(|r| r.reorder)
+                })
+                .max()
+                .unwrap_or(0)
+        };
+        if chance == 0 {
+            return None;
+        }
+        let mut rng = self.rng.lock().unwrap();
+        if rng.next_below(1024) >= u64::from(chance) {
+            return None;
+        }
+        self.reordered.fetch_add(1, Ordering::Relaxed);
+        let mut order: Vec<usize> = (0..batch.len()).collect();
+        rng.shuffle(&mut order);
+        Some(order)
+    }
+
+    /// Envelopes dropped (including symmetric-cut traffic).
+    pub fn dropped(&self) -> u64 {
+        self.dropped.load(Ordering::Relaxed)
+    }
+
+    /// Envelopes served twice.
+    pub fn duplicated(&self) -> u64 {
+        self.duplicated.load(Ordering::Relaxed)
+    }
+
+    /// Envelopes delayed (clock advanced before serving).
+    pub fn delayed(&self) -> u64 {
+        self.delayed.load(Ordering::Relaxed)
+    }
+
+    /// Scatters issued in a permuted order.
+    pub fn reordered(&self) -> u64 {
+        self.reordered.load(Ordering::Relaxed)
+    }
+
+    /// Envelopes served whose acknowledgment was lost.
+    pub fn acks_lost(&self) -> u64 {
+        self.acks_lost.load(Ordering::Relaxed)
+    }
+
+    /// Total faults injected so far (a schedule that injected nothing
+    /// proved nothing — harnesses assert this moved).
+    pub fn faults_injected(&self) -> u64 {
+        self.dropped()
+            + self.duplicated()
+            + self.delayed()
+            + self.reordered()
+            + self.acks_lost()
+    }
+}
+
+impl std::fmt::Debug for Turbulence {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("Turbulence")
+            .field("rules", &self.rules.lock().unwrap().len())
+            .field("cuts", &self.cuts.lock().unwrap().len())
+            .field("dropped", &self.dropped())
+            .field("duplicated", &self.duplicated())
+            .field("delayed", &self.delayed())
+            .field("reordered", &self.reordered())
+            .field("acks_lost", &self.acks_lost())
+            .finish()
+    }
+}

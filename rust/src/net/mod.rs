@@ -18,8 +18,10 @@
 //!   metadata service all serve requests through
 //!   [`transport::Handler`] implementations.
 
+pub mod chaos;
 pub mod transport;
 
+pub use chaos::{CutMode, Turbulence, TurbulenceRule};
 pub use transport::{serve_fail_stop, Handler, Peer, Pending, Plane, Request, Response, Transport};
 
 use std::time::Duration;

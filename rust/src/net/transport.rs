@@ -28,12 +28,14 @@
 //! caller thread — semantically identical, just serial (the pre-transport
 //! behavior).
 
+use super::chaos::{Delivery, Turbulence};
 use super::LinkModel;
 use crate::coordinator::paxos::Ballot;
 use crate::error::{Error, Result};
 use crate::meta::{Commit, LogEntry, OpOutcome};
 use crate::types::{Key, RegionId, SlicePtr, Value};
 use std::fmt;
+use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::mpsc;
 use std::sync::{Arc, Condvar, Mutex};
 
@@ -86,10 +88,15 @@ pub enum Request {
     /// Chosen-log suffix from slot `from` (rejoining-replica replay).
     PaxosPull { shard: u32, from: u64 },
     /// Ask a replica to grant `leader` a lease until `until_ms`.
+    /// `epoch` stamps the grant round: replicas refuse to honor an epoch
+    /// they have already answered, so a duplicated or delayed-then-
+    /// redelivered grant can never extend a lease (see
+    /// [`crate::coordinator::lease::GrantState::grant`]).
     LeaseRequest {
         shard: u32,
         leader: u32,
         until_ms: u64,
+        epoch: u64,
     },
 }
 
@@ -142,9 +149,10 @@ impl fmt::Debug for Request {
                 shard,
                 leader,
                 until_ms,
+                epoch,
             } => write!(
                 f,
-                "LeaseRequest(shard {shard}, leader {leader}, until {until_ms} ms)"
+                "LeaseRequest(shard {shard}, leader {leader}, until {until_ms} ms, epoch {epoch})"
             ),
         }
     }
@@ -180,7 +188,7 @@ pub enum Plane {
 }
 
 impl Request {
-    fn plane(&self) -> Plane {
+    pub(crate) fn plane(&self) -> Plane {
         match self {
             Request::CreateSlice { .. }
             | Request::RetrieveSlice { .. }
@@ -212,6 +220,40 @@ impl Request {
             | Request::PaxosStatus { .. }
             | Request::PaxosPull { .. }
             | Request::LeaseRequest { .. } => WireCost::Free,
+        }
+    }
+
+    /// The shard this envelope addresses, when it is shard-scoped
+    /// (Paxos-plane traffic) — lets turbulence rules target one group.
+    pub(crate) fn shard(&self) -> Option<u32> {
+        match self {
+            Request::PaxosPrepare { shard, .. }
+            | Request::PaxosAccept { shard, .. }
+            | Request::PaxosLearn { shard, .. }
+            | Request::PaxosStatus { shard }
+            | Request::PaxosPull { shard, .. }
+            | Request::LeaseRequest { shard, .. } => Some(*shard),
+            _ => None,
+        }
+    }
+
+    /// Stable operation name for typed timeouts injected by the
+    /// turbulence layer.
+    pub(crate) fn op_name(&self) -> &'static str {
+        match self {
+            Request::CreateSlice { .. } => "CreateSlice",
+            Request::RetrieveSlice { .. } => "RetrieveSlice",
+            Request::RetrieveMany { .. } => "RetrieveMany",
+            Request::AppendBlock { .. } => "AppendBlock",
+            Request::ReadBlock { .. } => "ReadBlock",
+            Request::MetaCommit { .. } => "MetaCommit",
+            Request::MetaGet { .. } => "MetaGet",
+            Request::PaxosPrepare { .. } => "PaxosPrepare",
+            Request::PaxosAccept { .. } => "PaxosAccept",
+            Request::PaxosLearn { .. } => "PaxosLearn",
+            Request::PaxosStatus { .. } => "PaxosStatus",
+            Request::PaxosPull { .. } => "PaxosPull",
+            Request::LeaseRequest { .. } => "LeaseRequest",
         }
     }
 }
@@ -450,6 +492,12 @@ pub struct Transport {
     /// width.  Prepare batching collapses a 2PC commit's per-group
     /// scatters; this counter is what proves it.
     scatters: std::sync::atomic::AtomicU64,
+    /// The optional turbulence (message-fault) layer.  `chaos_installed`
+    /// is the fast path: with no turbulence the per-send overhead is one
+    /// relaxed load and the wire behavior is byte-identical to a build
+    /// without the feature.
+    chaos: Mutex<Option<Arc<Turbulence>>>,
+    chaos_installed: AtomicBool,
 }
 
 impl fmt::Debug for Transport {
@@ -497,7 +545,26 @@ impl Transport {
             meta_envelopes: std::sync::atomic::AtomicU64::new(0),
             paxos_envelopes: std::sync::atomic::AtomicU64::new(0),
             scatters: std::sync::atomic::AtomicU64::new(0),
+            chaos: Mutex::new(None),
+            chaos_installed: AtomicBool::new(false),
         }
+    }
+
+    /// Install (or with `None` remove) the turbulence layer.  Chaos
+    /// harnesses call this through `tests/support`; production never
+    /// does, and with nothing installed the transport takes a one-load
+    /// fast path past every turbulence hook.
+    pub fn set_turbulence(&self, t: Option<Arc<Turbulence>>) {
+        let installed = t.is_some();
+        *self.chaos.lock().unwrap() = t;
+        self.chaos_installed.store(installed, Ordering::Relaxed);
+    }
+
+    fn turbulence(&self) -> Option<Arc<Turbulence>> {
+        if !self.chaos_installed.load(Ordering::Relaxed) {
+            return None;
+        }
+        self.chaos.lock().unwrap().clone()
     }
 
     /// An instant-link transport (unit tests, real-perf mode).
@@ -552,6 +619,42 @@ impl Transport {
         }
     }
 
+    /// [`Transport::execute`] behind the turbulence layer.  With no
+    /// turbulence installed this is exactly `execute`; otherwise the
+    /// layer decides the envelope's fate:
+    ///
+    /// * `Drop` — the envelope never reaches the destination; the
+    ///   caller's per-envelope wait expires into a typed
+    ///   [`Error::Timeout`].  Because the error lands in this envelope's
+    ///   own result slot, one dead destination degrades a scatter's
+    ///   quorum without stalling the gather.
+    /// * `Duplicate` — the destination serves the envelope twice (its
+    ///   first ack "was lost"); handlers must be idempotent.
+    /// * `AckLoss` — the destination serves the envelope (state may
+    ///   move) but the caller still times out: outcome unknown.
+    fn execute_faulted(
+        link: LinkModel,
+        to: &Peer,
+        req: &Request,
+        chaos: Option<&Turbulence>,
+    ) -> Result<Response> {
+        let Some(chaos) = chaos else {
+            return Self::execute(link, to, req);
+        };
+        match chaos.on_send(to, req) {
+            Delivery::Deliver => Self::execute(link, to, req),
+            Delivery::Duplicate => {
+                let _first_ack_lost = Self::execute(link, to, req);
+                Self::execute(link, to, req)
+            }
+            Delivery::Drop => Err(chaos.timeout(req.op_name())),
+            Delivery::AckLoss => {
+                let _ack_lost = Self::execute(link, to, req);
+                Err(chaos.timeout(req.op_name()))
+            }
+        }
+    }
+
     /// Asynchronously issue `req` to `to`; the wire time is paid on the
     /// worker, so the caller can overlap further sends with it.
     ///
@@ -568,10 +671,16 @@ impl Transport {
             Plane::Paxos => &self.paxos_envelopes,
         };
         plane_counter.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+        let chaos = self.turbulence();
         let slot = Slot::new();
         let inline = self.sender.is_none() || matches!(req.wire_cost(), WireCost::Free);
         if inline {
-            slot.fill(Ok(Self::execute(self.link, &to, &req)));
+            slot.fill(Ok(Self::execute_faulted(
+                self.link,
+                &to,
+                &req,
+                chaos.as_deref(),
+            )));
             return Pending { slot };
         }
         let tx = self.sender.as_ref().expect("checked above");
@@ -579,7 +688,7 @@ impl Transport {
         let link = self.link;
         let job: Job = Box::new(move || {
             let outcome = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
-                Self::execute(link, &to, &req)
+                Self::execute_faulted(link, &to, &req, chaos.as_deref())
             }));
             job_slot.fill(outcome);
         });
@@ -602,10 +711,33 @@ impl Transport {
     pub fn broadcast(&self, batch: Vec<(Peer, Request)>) -> Vec<Result<Response>> {
         self.scatters
             .fetch_add(1, std::sync::atomic::Ordering::Relaxed);
-        let pending: Vec<Pending> = batch
-            .into_iter()
-            .map(|(to, req)| self.send(to, req))
-            .collect();
+        // Turbulence may reorder the scatter: envelopes are *issued* in
+        // a seeded permutation (wire-free envelopes serve at issue time,
+        // so issue order is delivery order), while results still gather
+        // in the caller's batch order.
+        let order = self
+            .turbulence()
+            .and_then(|c| c.scatter_order(&batch));
+        let pending: Vec<Pending> = match order {
+            None => batch
+                .into_iter()
+                .map(|(to, req)| self.send(to, req))
+                .collect(),
+            Some(order) => {
+                let mut items: Vec<Option<(Peer, Request)>> =
+                    batch.into_iter().map(Some).collect();
+                let mut issued: Vec<Option<Pending>> =
+                    (0..items.len()).map(|_| None).collect();
+                for i in order {
+                    let (to, req) = items[i].take().expect("permutation index");
+                    issued[i] = Some(self.send(to, req));
+                }
+                issued
+                    .into_iter()
+                    .map(|p| p.expect("permutation covers every index"))
+                    .collect()
+            }
+        };
         pending.into_iter().map(Pending::join).collect()
     }
 }
@@ -810,6 +942,182 @@ mod tests {
             elapsed < Duration::from_millis(160),
             "broadcast did not overlap: {elapsed:?}"
         );
+    }
+
+    #[test]
+    fn turbulence_cut_fails_one_destination_without_stalling_the_scatter() {
+        use crate::net::chaos::{CutMode, Turbulence};
+        let t = Transport::new(LinkModel::instant(), 0);
+        let a = echo();
+        let b = echo();
+        let chaos = Turbulence::new(1, crate::coordinator::lease::LeaseClock::manual());
+        let cut: Peer = b.clone();
+        chaos.cut(&cut, CutMode::Both);
+        t.set_turbulence(Some(chaos.clone()));
+        let read = |block| Request::ReadBlock {
+            block,
+            offset: 0,
+            len: 1,
+        };
+        let results = t.broadcast(vec![
+            (a.clone() as Peer, read(0)),
+            (cut.clone(), read(1)),
+            (a.clone() as Peer, read(2)),
+        ]);
+        assert!(results[0].is_ok());
+        assert!(
+            matches!(results[1], Err(Error::Timeout { .. })),
+            "cut destination fails with a typed timeout"
+        );
+        assert!(results[2].is_ok(), "the rest of the scatter is unharmed");
+        assert_eq!(b.calls.load(Ordering::Relaxed), 0, "symmetric cut never serves");
+        assert_eq!(t.envelopes_sent(), 3, "dropped envelopes still count as sends");
+        chaos.heal_cut(&cut);
+        assert!(t.call(cut, read(3)).is_ok(), "healed link delivers again");
+    }
+
+    #[test]
+    fn turbulence_duplicate_double_serves_and_ack_loss_serves_but_errs() {
+        use crate::net::chaos::{CutMode, Turbulence, TurbulenceRule};
+        let t = Transport::new(LinkModel::instant(), 0);
+        let e = echo();
+        let chaos = Turbulence::new(2, crate::coordinator::lease::LeaseClock::manual());
+        chaos.add_rule(TurbulenceRule {
+            dup: 1024, // always
+            ..Default::default()
+        });
+        t.set_turbulence(Some(chaos.clone()));
+        let read = Request::ReadBlock {
+            block: 0,
+            offset: 0,
+            len: 1,
+        };
+        assert!(t.call(e.clone(), read.clone()).is_ok());
+        assert_eq!(
+            e.calls.load(Ordering::Relaxed),
+            2,
+            "duplicate delivery serves the envelope twice"
+        );
+        // Asymmetric partition: the request lands, the ack does not.
+        let victim: Peer = e.clone();
+        chaos.cut(&victim, CutMode::AckLoss);
+        assert!(matches!(
+            t.call(victim, read),
+            Err(Error::Timeout { .. })
+        ));
+        assert_eq!(
+            e.calls.load(Ordering::Relaxed),
+            3,
+            "ack-loss still changed server state"
+        );
+        assert!(chaos.faults_injected() >= 2);
+    }
+
+    #[test]
+    fn turbulence_schedules_replay_from_the_seed() {
+        use crate::net::chaos::{Turbulence, TurbulenceRule};
+        let run = |seed: u64| {
+            let t = Transport::new(LinkModel::instant(), 0);
+            let e = echo();
+            let chaos = Turbulence::new(seed, crate::coordinator::lease::LeaseClock::manual());
+            chaos.add_rule(TurbulenceRule {
+                drop: 512,
+                dup: 128,
+                ..Default::default()
+            });
+            t.set_turbulence(Some(chaos.clone()));
+            let oks: Vec<bool> = (0..64)
+                .map(|i| {
+                    t.call(
+                        e.clone(),
+                        Request::ReadBlock {
+                            block: i,
+                            offset: 0,
+                            len: 1,
+                        },
+                    )
+                    .is_ok()
+                })
+                .collect();
+            (chaos.dropped(), chaos.duplicated(), oks)
+        };
+        assert_eq!(run(42), run(42), "same seed, same schedule");
+        assert_ne!(run(42).2, run(43).2, "different seed, different schedule");
+    }
+
+    #[test]
+    fn turbulence_uninstall_restores_clean_delivery() {
+        use crate::net::chaos::{Turbulence, TurbulenceRule};
+        let t = Transport::new(LinkModel::instant(), 0);
+        let e = echo();
+        let chaos = Turbulence::new(3, crate::coordinator::lease::LeaseClock::manual());
+        chaos.add_rule(TurbulenceRule {
+            drop: 1024, // always
+            ..Default::default()
+        });
+        t.set_turbulence(Some(chaos));
+        let read = Request::ReadBlock {
+            block: 0,
+            offset: 0,
+            len: 1,
+        };
+        assert!(t.call(e.clone(), read.clone()).is_err());
+        t.set_turbulence(None);
+        assert!(t.call(e.clone(), read).is_ok());
+        assert_eq!(e.calls.load(Ordering::Relaxed), 1, "only the clean send served");
+    }
+
+    #[test]
+    fn turbulence_reorders_scatter_issue_order_but_not_gather_order() {
+        use crate::net::chaos::{Turbulence, TurbulenceRule};
+        struct Rec {
+            served: Mutex<Vec<u64>>,
+        }
+        impl Handler for Rec {
+            fn serve(&self, req: &Request) -> Result<Response> {
+                if let Request::ReadBlock { block, .. } = req {
+                    self.served.lock().unwrap().push(*block);
+                }
+                Ok(Response::Bytes(Vec::new()))
+            }
+        }
+        let identity: Vec<u64> = (0..8).collect();
+        let mut saw_permuted = false;
+        for seed in 0..4u64 {
+            let rec = Arc::new(Rec {
+                served: Mutex::new(Vec::new()),
+            });
+            let t = Transport::new(LinkModel::instant(), 0);
+            let chaos = Turbulence::new(seed, crate::coordinator::lease::LeaseClock::manual());
+            chaos.add_rule(TurbulenceRule {
+                reorder: 1024, // always
+                ..Default::default()
+            });
+            t.set_turbulence(Some(chaos.clone()));
+            let batch: Vec<(Peer, Request)> = (0..8)
+                .map(|i| {
+                    (
+                        rec.clone() as Peer,
+                        Request::ReadBlock {
+                            block: i,
+                            offset: 0,
+                            len: 0,
+                        },
+                    )
+                })
+                .collect();
+            let results = t.broadcast(batch);
+            assert!(results.iter().all(|r| r.is_ok()), "gather keeps every result");
+            assert_eq!(chaos.reordered(), 1);
+            let served = rec.served.lock().unwrap().clone();
+            let mut sorted = served.clone();
+            sorted.sort_unstable();
+            assert_eq!(sorted, identity, "every envelope served exactly once");
+            if served != identity {
+                saw_permuted = true;
+            }
+        }
+        assert!(saw_permuted, "no seed permuted an 8-wide scatter");
     }
 
     #[test]

@@ -6,7 +6,7 @@ pub mod json;
 pub mod rng;
 pub mod tempdir;
 
-pub use rng::Rng;
+pub use rng::{backoff_jitter, Rng};
 pub use tempdir::TempDir;
 
 /// Monotonic "now" in seconds for mtime stamping (coarse is fine: the

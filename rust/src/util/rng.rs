@@ -77,6 +77,27 @@ impl Rng {
     }
 }
 
+/// Bounded exponential backoff with full jitter for client RPC retry
+/// loops: attempt `n` sleeps uniformly in `[0, base * 2^min(n-1, 6))`
+/// (the 64x cap bounds the worst pause).  A ZERO `base` disables
+/// backoff entirely — the retry is immediate, byte-identical to the
+/// pre-backoff loops.  Jitter derives from a process-global counter
+/// through the seeded [`Rng`], so concurrent retry storms decorrelate
+/// without sharing an RNG, and two identical single-threaded runs pick
+/// identical pauses.
+pub fn backoff_jitter(base: std::time::Duration, attempt: u32) -> std::time::Duration {
+    use std::sync::atomic::{AtomicU64, Ordering};
+    static SALT: AtomicU64 = AtomicU64::new(0);
+    if base.is_zero() || attempt == 0 {
+        return std::time::Duration::ZERO;
+    }
+    let window = base.saturating_mul(1 << attempt.saturating_sub(1).min(6));
+    let salt = SALT.fetch_add(1, Ordering::Relaxed);
+    let mut rng = Rng::new(salt ^ (u64::from(attempt) << 56));
+    let nanos = u64::try_from(window.as_nanos()).unwrap_or(u64::MAX);
+    std::time::Duration::from_nanos(rng.next_below(nanos.max(1)))
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -119,6 +140,18 @@ mod tests {
         let mut buf = [0u8; 13];
         r.fill_bytes(&mut buf);
         assert!(buf.iter().any(|&b| b != 0));
+    }
+
+    #[test]
+    fn backoff_window_is_bounded_and_zero_base_is_free() {
+        use std::time::Duration;
+        assert_eq!(backoff_jitter(Duration::ZERO, 5), Duration::ZERO);
+        assert_eq!(backoff_jitter(Duration::from_millis(1), 0), Duration::ZERO);
+        for attempt in 1..20u32 {
+            let d = backoff_jitter(Duration::from_millis(1), attempt);
+            // Window caps at base * 64 no matter how high the attempt.
+            assert!(d < Duration::from_millis(64), "attempt {attempt}: {d:?}");
+        }
     }
 
     #[test]

@@ -23,7 +23,7 @@ use wtf::config::WalSync;
 use wtf::coordinator::lease::LeaseClock;
 use wtf::error::Result;
 use wtf::meta::{Commit, CommitPhase, FaultAction, MetaOp, OpOutcome, ReplicatedMetaStore};
-use wtf::net::Transport;
+use wtf::net::{CutMode, Peer, Transport, Turbulence};
 use wtf::types::{Key, SliceData, SlicePtr, Space};
 use wtf::util::Rng;
 
@@ -64,6 +64,53 @@ pub fn store_2pc(shards: u32) -> Arc<ReplicatedMetaStore> {
             .prepare_batching(true);
     }
     Arc::new(store)
+}
+
+/// A [`store_2pc`]-shaped store with a seeded [`Turbulence`] layer
+/// installed on its transport — the chaos testbed.  Returns the store,
+/// the turbulence handle (script probabilistic rules and partitions on
+/// it) and the shared manual clock (delay faults advance it; tests
+/// advance it too, so "a message arrived late" and "the lease window
+/// passed" stay one fact).
+pub fn noisy_store_2pc(
+    shards: u32,
+    seed: u64,
+) -> (Arc<ReplicatedMetaStore>, Arc<Turbulence>, LeaseClock) {
+    let clock = LeaseClock::manual();
+    let transport = Arc::new(Transport::instant());
+    let chaos = Turbulence::new(seed, clock.clone());
+    transport.set_turbulence(Some(chaos.clone()));
+    let mut store = ReplicatedMetaStore::new(
+        shards,
+        GROUP_REPLICAS as u8,
+        transport,
+        clock.clone(),
+        20,
+    )
+    .two_pc(true);
+    if std::env::var("WTF_TEST_WRITE_PATH").as_deref() == Ok("1") {
+        store = store
+            .group_commit(std::time::Duration::from_millis(1), 8)
+            .prepare_batching(true);
+    }
+    (Arc::new(store), chaos, clock)
+}
+
+/// Partition `shard`'s group so its leader sits on the MINORITY side:
+/// cut the links to every replica except replica 0 (the stable lowest
+/// candidate).  The quorum becomes unreachable while the leaseholder
+/// stays addressable — the paper's dangerous partition shape.
+pub fn cut_group_majority(
+    store: &ReplicatedMetaStore,
+    chaos: &Turbulence,
+    shard: u32,
+    mode: CutMode,
+) {
+    let group = &store.groups()[shard as usize];
+    for r in 1..GROUP_REPLICAS {
+        let peer: Peer = group.replica(r).expect("replica index in range").clone();
+        chaos.cut(&peer, mode);
+    }
 }
 
 /// A [`store_2pc`]-shaped store whose replicas additionally carry

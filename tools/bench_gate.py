@@ -24,12 +24,20 @@ toolchain):
        Paxos commit rounds batched than sequential);
      - scatter_ratio_2pc > 1.0 (prepare batching must issue fewer
        transport scatters, never more).
-3. WAL replay ratio (deterministic record counts, enforced when
-   --wal-fresh is given):
+3. WAL ratios (deterministic counts, enforced when --wal-fresh is
+   given):
      - replay_ratio_checkpointed > 1.0 (a checkpointed restart must
        replay strictly fewer records than a full-log restart of the
-       same history).
-4. Wall clock, within each fresh file only (enforced when the fresh
+       same history);
+     - fsync_ratio_group_commit > 1.0 (an acked batch under
+       sync-always must pay strictly fewer forced syncs than the same
+       records appended one-by-one).
+4. Chaos convergence ratio (deterministic round counts, enforced when
+   --chaos-fresh is given):
+     - convergence_ratio > 1.0 (after every seeded partition heals,
+       the store must take commits again in strictly fewer rounds
+       than the retry budget).
+5. Wall clock, within each fresh file only (enforced when the fresh
    rows are measured, i.e. mean_ns > 0): for each row name present in
    both configs, the fast config must not be more than --max-slowdown
    (default 1.25, i.e. >25%) slower than the seed config measured in
@@ -140,6 +148,8 @@ def main():
     p.add_argument("--write-fresh", help="freshly produced BENCH_write_path.json")
     p.add_argument("--wal-baseline", help="committed BENCH_wal.json")
     p.add_argument("--wal-fresh", help="freshly produced BENCH_wal.json")
+    p.add_argument("--chaos-baseline", help="committed BENCH_chaos.json")
+    p.add_argument("--chaos-fresh", help="freshly produced BENCH_chaos.json")
     p.add_argument("--max-slowdown", type=float, default=1.25)
     p.add_argument("--min-seq-ratio", type=float, default=4.0)
     p.add_argument("--min-batch-ratio", type=float, default=2.0)
@@ -191,7 +201,7 @@ def main():
 
     # 3. WAL replay ratio (deterministic record counts, when a WAL file
     #    was produced).
-    wal_ratio = None
+    wal_ratio = fsync_ratio = None
     wal_fresh_rows = {}
     wal_base = {}
     if a.wal_fresh:
@@ -205,8 +215,36 @@ def main():
                 "(a checkpointed restart no longer replays fewer records "
                 "than a full-log restart)"
             )
+        fsync_ratio = float(wal_fresh.get("fsync_ratio_group_commit", 0.0))
+        if fsync_ratio <= 1.0:
+            failures.append(
+                f"fsync_ratio_group_commit {fsync_ratio:.2f} <= 1.0 "
+                "(an acked batch no longer pays fewer forced syncs than "
+                "per-record appends)"
+            )
 
-    # 4. Same-run wall clock: fast config vs seed config, one machine.
+    # 4. Chaos convergence ratio (deterministic round counts, when a
+    #    chaos file was produced).
+    chaos_ratio = None
+    if a.chaos_fresh:
+        chaos_fresh = load(a.chaos_fresh)
+        chaos_ratio = float(chaos_fresh.get("convergence_ratio", 0.0))
+        if chaos_ratio <= 1.0:
+            failures.append(
+                f"convergence_ratio {chaos_ratio:.2f} <= 1.0 "
+                "(post-heal convergence eats the whole retry budget)"
+            )
+        if a.chaos_baseline:
+            chaos_base = load(a.chaos_baseline)
+            base_ratio = float(chaos_base.get("convergence_ratio", 0.0))
+            if base_ratio and chaos_ratio < base_ratio:
+                print(
+                    f"bench_gate: note: convergence_ratio {chaos_ratio:.2f} below "
+                    f"committed baseline {base_ratio:.2f} (informational; "
+                    "round counts are deterministic per seed set)"
+                )
+
+    # 5. Same-run wall clock: fast config vs seed config, one machine.
     fresh_rows = rows_by_key(fresh)
     clock_checked = clock_pairs(fresh_rows, SAME_RUN_PAIRS, a.max_slowdown, failures)
     clock_checked += clock_pairs(
@@ -216,7 +254,7 @@ def main():
         wal_fresh_rows, WAL_SAME_RUN_KEY_PAIRS, a.max_slowdown, failures
     )
 
-    # 5. Informational only: drift vs the committed baselines.
+    # 6. Informational only: drift vs the committed baselines.
     drift_notes(base, fresh_rows, a.max_slowdown)
     if write_fresh_rows:
         drift_notes(write_base, write_fresh_rows, a.max_slowdown)
@@ -236,13 +274,19 @@ def main():
         else ""
     )
     wal_part = (
-        f", replay_ratio_checkpointed {wal_ratio:.2f}"
+        f", replay_ratio_checkpointed {wal_ratio:.2f}, "
+        f"fsync_ratio_group_commit {fsync_ratio:.2f}"
         if wal_ratio is not None
+        else ""
+    )
+    chaos_part = (
+        f", convergence_ratio {chaos_ratio:.2f}"
+        if chaos_ratio is not None
         else ""
     )
     print(
         f"bench_gate: OK (envelope_ratio_seq {seq:.2f}, "
-        f"envelope_ratio_sort {sort_ratio:.2f}{write_part}{wal_part}, "
+        f"envelope_ratio_sort {sort_ratio:.2f}{write_part}{wal_part}{chaos_part}, "
         f"same-run wall-clock pairs checked: {clock_checked})"
     )
     return 0
