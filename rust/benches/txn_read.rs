@@ -1,0 +1,153 @@
+//! Transactional read-through bench (PR 9): metadata-plane envelopes
+//! for a warm WTF transaction, cached vs uncached.
+//!
+//! Two scenarios, identical op sequences in both configs:
+//!
+//! * **txn-concat** — open two warm 8 KiB files, read both fully, and
+//!   append the concatenation to a third file, in one transaction.
+//!   Uncached, every `t.open`/`t.read`/`t.seek` pays a `MetaGet`
+//!   (2 path + 2 inode + 4 region + 1 path + 1 inode = 10) plus the
+//!   `MetaCommit` — 11 metadata envelopes.  With the versioned cache
+//!   warm, every read is served locally with its version recorded in
+//!   the read set, so the whole transaction is ONE envelope (the
+//!   commit, which also validates the cached versions).
+//! * **txn-rmw** — read-modify-write of one warm 8 KiB file: uncached
+//!   1 path + 1 inode + 2 region + 1 commit = 5 envelopes; cached 1.
+//!
+//! Envelope counts are exact deterministic integers (no timers), so the
+//! gated figures are regression pins:
+//!
+//!   `meta_envelope_ratio_concat = uncached / cached   (gate: >= 2.0)`
+//!
+//! Set `WTF_BENCH_TXN_READ_JSON=<path>` to emit the results as JSON
+//! (committed as `BENCH_txn_read.json` for the CI regression gate).
+
+use wtf::client::SeekFrom;
+use wtf::cluster::Cluster;
+use wtf::config::Config;
+use wtf::net::Plane;
+
+struct Row {
+    row: &'static str,
+    config: &'static str,
+    meta_envelopes: u64,
+}
+
+/// Warm one file end-to-end through the plain client: path + inode +
+/// every region + the data bytes.
+fn warm(c: &wtf::client::WtfClient, path: &str, len: u64) {
+    let fd = c.open(path).unwrap();
+    assert_eq!(c.read_at(&fd, 0, len).unwrap().len() as u64, len);
+}
+
+/// One transactional concat over a fresh cluster; returns the metadata
+/// envelopes the transaction itself cost.
+fn txn_concat(cfg: Config) -> u64 {
+    let cluster = Cluster::builder().config(cfg).build().unwrap();
+    let c = cluster.client();
+    for path in ["/a", "/b"] {
+        let mut fd = c.create(path).unwrap();
+        c.write(&mut fd, &[b'v'; 8192]).unwrap();
+    }
+    c.create("/out").unwrap();
+    warm(&c, "/a", 8192);
+    warm(&c, "/b", 8192);
+    let _ = c.open("/out").unwrap(); // path + inode
+    let before = cluster.transport_envelopes_on(Plane::Meta);
+    let mut t = c.begin();
+    let a = t.open("/a").unwrap();
+    let b = t.open("/b").unwrap();
+    let xs = t.read(a, 8192).unwrap();
+    let ys = t.read(b, 8192).unwrap();
+    let o = t.open("/out").unwrap();
+    t.seek(o, SeekFrom::End(0)).unwrap();
+    t.write(o, &xs).unwrap();
+    t.write(o, &ys).unwrap();
+    t.commit().unwrap();
+    cluster.transport_envelopes_on(Plane::Meta) - before
+}
+
+/// One transactional read-modify-write over a fresh cluster.
+fn txn_rmw(cfg: Config) -> u64 {
+    let cluster = Cluster::builder().config(cfg).build().unwrap();
+    let c = cluster.client();
+    let mut fd = c.create("/f").unwrap();
+    c.write(&mut fd, &[b'v'; 8192]).unwrap();
+    warm(&c, "/f", 8192);
+    let before = cluster.transport_envelopes_on(Plane::Meta);
+    let mut t = c.begin();
+    let f = t.open("/f").unwrap();
+    let bytes = t.read(f, 8192).unwrap();
+    t.seek(f, SeekFrom::Start(0)).unwrap();
+    let flipped: Vec<u8> = bytes.iter().map(|b| !b).collect();
+    t.write(f, &flipped).unwrap();
+    t.commit().unwrap();
+    cluster.transport_envelopes_on(Plane::Meta) - before
+}
+
+fn write_json(path: &str, rows: &[Row], concat_ratio: f64, rmw_ratio: f64) {
+    let mut out = String::from("{\n  \"bench\": \"client_io/txn_read\",\n");
+    out.push_str(
+        "  \"description\": \"Transactional read-through (PR 9): metadata-plane \
+         envelopes for one warm WTF transaction, uncached vs versioned-cache-warm. \
+         txn-concat opens two warm 8 KiB files, reads both, and appends the concat \
+         to a third file; txn-rmw read-modify-writes one warm file.  Counts are \
+         exact deterministic integers.  Produced by `cargo bench --bench txn_read` \
+         with WTF_BENCH_TXN_READ_JSON set; see rust/benches/txn_read.rs.\",\n",
+    );
+    out.push_str("  \"status\": \"measured\",\n  \"rows\": [\n");
+    for (i, r) in rows.iter().enumerate() {
+        out.push_str(&format!(
+            "    {{\"row\": \"{}\", \"config\": \"{}\", \"meta_envelopes\": {}}}{}\n",
+            r.row,
+            r.config,
+            r.meta_envelopes,
+            if i + 1 < rows.len() { "," } else { "" }
+        ));
+    }
+    out.push_str(&format!(
+        "  ],\n  \"meta_envelope_ratio_concat\": {concat_ratio:.3},\n  \
+         \"meta_envelope_ratio_rmw\": {rmw_ratio:.3},\n  \
+         \"acceptance\": \"meta_envelope_ratio_concat >= 2.0 (a warm transactional \
+         concat must cost at least 2x fewer metadata-plane envelopes with the \
+         versioned cache than without; stale cached reads are caught by commit-time \
+         validation, so the discount is free of staleness)\"\n}}\n"
+    ));
+    std::fs::write(path, out).expect("write WTF_BENCH_TXN_READ_JSON");
+    println!("  └─ wrote {path}");
+}
+
+fn main() {
+    let cached = || {
+        let mut cfg = Config::fast_read_test();
+        cfg.readahead = 0; // isolate the cache: no readahead in the count
+        cfg
+    };
+    let concat_uncached = txn_concat(Config::test());
+    let concat_cached = txn_concat(cached());
+    let rmw_uncached = txn_rmw(Config::test());
+    let rmw_cached = txn_rmw(cached());
+    let rows = vec![
+        Row { row: "txn-concat", config: "uncached", meta_envelopes: concat_uncached },
+        Row { row: "txn-concat", config: "cached-warm", meta_envelopes: concat_cached },
+        Row { row: "txn-rmw", config: "uncached", meta_envelopes: rmw_uncached },
+        Row { row: "txn-rmw", config: "cached-warm", meta_envelopes: rmw_cached },
+    ];
+    let concat_ratio = concat_uncached as f64 / concat_cached.max(1) as f64;
+    let rmw_ratio = rmw_uncached as f64 / rmw_cached.max(1) as f64;
+    for r in &rows {
+        println!(
+            "txn_read/{} [{}]: {} metadata envelopes",
+            r.row, r.config, r.meta_envelopes
+        );
+    }
+    println!("txn_read: concat ratio {concat_ratio:.2}x, rmw ratio {rmw_ratio:.2}x");
+    assert!(
+        concat_ratio >= 2.0,
+        "warm transactional concat must save >= 2x metadata envelopes \
+         (uncached {concat_uncached}, cached {concat_cached})"
+    );
+    if let Ok(path) = std::env::var("WTF_BENCH_TXN_READ_JSON") {
+        write_json(&path, &rows, concat_ratio, rmw_ratio);
+    }
+}

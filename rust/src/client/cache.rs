@@ -13,11 +13,16 @@
 //!   below.  Lengths only ever grow (monotone max), so a cached length
 //!   is always a length the file *had*; a reader's view never moves
 //!   backwards.
-//! * **What is never stale.**  Transactional reads ([`crate::meta::MetaTxn::get`]
-//!   and everything inside a WTF [`crate::client::Transaction`]) bypass
-//!   this cache entirely and validate their versions at commit — §3
-//!   serializability is untouched.  CAS maintenance (compact/spill) uses
-//!   uncached region fetches for the same reason.
+//! * **What is never stale *at commit*.**  Transactional reads
+//!   ([`crate::meta::MetaTxn::get`] and everything inside a WTF
+//!   [`crate::client::Transaction`]) are served from this cache
+//!   optimistically (PR 9): the cached version enters the read set, and
+//!   commit-time validation rejects any read that was stale — a
+//!   `TxnConflict` invalidates the key and the retry re-reads fresh
+//!   state.  A stale cached read can therefore cost a retry, but can
+//!   never commit — §3 serializability is untouched.  CAS maintenance
+//!   (compact/spill) still uses uncached region fetches: a CAS against
+//!   a cached version could never succeed once the region moved.
 //! * **Snapshot rule.**  A freshly fetched inode drops the file's cached
 //!   regions ([`MetaCache::put_inode`]): a read then never pairs a new
 //!   length with older region metadata, exactly matching the uncached
@@ -37,10 +42,12 @@
 //! record).
 
 use crate::config::Config;
-use crate::types::{Inode, InodeId, Key, RegionId, RegionMeta, Space};
+use crate::meta::TxnReadCache;
+use crate::types::{Inode, InodeId, Key, RegionId, RegionMeta, Space, Value};
 use std::collections::HashMap;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
 
 /// Most readahead buffers kept at once (one per actively streamed file).
 const MAX_READAHEAD_BUFFERS: usize = 8;
@@ -54,6 +61,18 @@ struct Cached<T> {
     version: u64,
     /// LRU clock tick of the last touch.
     used: u64,
+    /// Hard lifetime bound (`Config::cache_ttl`); `None` = no expiry.
+    /// A hit past this instant is a miss — the entry is dropped, never
+    /// served.  This is what keeps the cache inside the GC two-scan
+    /// grace window: a region entry can never outlive one scan
+    /// interval, so the slice pointers it resolves are never reclaimed.
+    expires: Option<Instant>,
+}
+
+impl<T> Cached<T> {
+    fn expired(&self) -> bool {
+        self.expires.is_some_and(|at| Instant::now() >= at)
+    }
 }
 
 /// One file's readahead surplus: bytes `[start, start + data.len())`.
@@ -68,6 +87,10 @@ struct ReadAhead {
 struct Inner {
     inodes: HashMap<InodeId, Cached<Inode>>,
     regions: HashMap<RegionId, Cached<RegionMeta>>,
+    /// Absolute pathname → inode id at the version `MetaGet` carried —
+    /// `open()`/`lookup()` and namespace-transaction reads stop paying
+    /// one namespace round per component (PR 9).
+    paths: HashMap<String, Cached<InodeId>>,
     readahead: HashMap<InodeId, ReadAhead>,
     tick: u64,
     /// Bumped by every invalidation/clear.  Fetches snapshot it BEFORE
@@ -86,7 +109,7 @@ impl Inner {
     /// Keep the metadata maps under `capacity` entries by dropping the
     /// least-recently-used quarter when they overflow.
     fn evict(&mut self, capacity: usize) {
-        let total = self.inodes.len() + self.regions.len();
+        let total = self.inodes.len() + self.regions.len() + self.paths.len();
         if total <= capacity.max(1) {
             return;
         }
@@ -95,11 +118,13 @@ impl Inner {
             .values()
             .map(|c| c.used)
             .chain(self.regions.values().map(|c| c.used))
+            .chain(self.paths.values().map(|c| c.used))
             .collect();
         ticks.sort_unstable();
         let cut = ticks[total / 4];
         self.inodes.retain(|_, c| c.used > cut);
         self.regions.retain(|_, c| c.used > cut);
+        self.paths.retain(|_, c| c.used > cut);
     }
 
     fn drop_inode_state(&mut self, id: InodeId) {
@@ -117,6 +142,9 @@ pub struct MetaCache {
     meta_enabled: bool,
     readahead_window: u64,
     capacity: usize,
+    /// Lifetime bound on metadata entries (`Config::cache_ttl`);
+    /// `ZERO` = entries live until invalidated or evicted.
+    ttl: Duration,
     inner: Mutex<Inner>,
     hits: AtomicU64,
     misses: AtomicU64,
@@ -129,10 +157,20 @@ impl MetaCache {
             meta_enabled: config.metadata_cache,
             readahead_window: config.readahead,
             capacity: config.metadata_cache_entries.max(1),
+            ttl: config.cache_ttl,
             inner: Mutex::new(Inner::default()),
             hits: AtomicU64::new(0),
             misses: AtomicU64::new(0),
             invalidations: AtomicU64::new(0),
+        }
+    }
+
+    /// Expiry instant for an entry installed now (`None` without a TTL).
+    fn expiry(&self) -> Option<Instant> {
+        if self.ttl.is_zero() {
+            None
+        } else {
+            Some(Instant::now() + self.ttl)
         }
     }
 
@@ -168,16 +206,26 @@ impl MetaCache {
     }
 
     pub fn get_inode(&self, id: InodeId) -> Option<Arc<Inode>> {
+        self.get_inode_versioned(id).map(|(inode, _)| inode)
+    }
+
+    /// Like [`MetaCache::get_inode`] but also returns the authoritative
+    /// version the entry was read at — what a transactional read records
+    /// in its read set for commit-time validation (PR 9).
+    pub fn get_inode_versioned(&self, id: InodeId) -> Option<(Arc<Inode>, u64)> {
         if !self.meta_enabled {
             return None;
         }
         let mut g = self.inner.lock().unwrap();
         let tick = g.bump();
+        if g.inodes.get(&id).is_some_and(|c| c.expired()) {
+            g.inodes.remove(&id);
+        }
         match g.inodes.get_mut(&id) {
             Some(c) => {
                 c.used = tick;
                 self.hits.fetch_add(1, Ordering::Relaxed);
-                Some(c.value.clone())
+                Some((c.value.clone(), c.version))
             }
             None => {
                 self.misses.fetch_add(1, Ordering::Relaxed);
@@ -213,12 +261,14 @@ impl MetaCache {
             g.regions.retain(|rid, _| rid.inode != id);
         }
         let used = g.bump();
+        let expires = self.expiry();
         g.inodes.insert(
             id,
             Cached {
                 value: Arc::clone(inode),
                 version,
                 used,
+                expires,
             },
         );
         g.evict(self.capacity);
@@ -230,6 +280,9 @@ impl MetaCache {
         }
         let mut g = self.inner.lock().unwrap();
         let tick = g.bump();
+        if g.regions.get(&rid).is_some_and(|c| c.expired()) {
+            g.regions.remove(&rid);
+        }
         match g.regions.get_mut(&rid) {
             Some(c) => {
                 c.used = tick;
@@ -258,12 +311,73 @@ impl MetaCache {
             return;
         }
         let used = g.bump();
+        let expires = self.expiry();
         g.regions.insert(
             rid,
             Cached {
                 value: Arc::clone(region),
                 version,
                 used,
+                expires,
+            },
+        );
+        g.evict(self.capacity);
+    }
+
+    // ----------------------------------------------------- path entries
+
+    /// Cached pathname → `(inode id, version)` (PR 9): `lookup()` and
+    /// namespace-transaction reads serve warm path components with zero
+    /// envelopes.  Plain lookups inherit the may-be-stale contract;
+    /// transactional reads record the version and validate at commit.
+    pub fn get_path(&self, path: &str) -> Option<(InodeId, u64)> {
+        if !self.meta_enabled {
+            return None;
+        }
+        let mut g = self.inner.lock().unwrap();
+        let tick = g.bump();
+        if g.paths.get(path).is_some_and(|c| c.expired()) {
+            g.paths.remove(path);
+        }
+        match g.paths.get_mut(path) {
+            Some(c) => {
+                c.used = tick;
+                self.hits.fetch_add(1, Ordering::Relaxed);
+                Some((*c.value, c.version))
+            }
+            None => {
+                self.misses.fetch_add(1, Ordering::Relaxed);
+                None
+            }
+        }
+    }
+
+    /// Record a freshly resolved path entry.  Same guards as the other
+    /// puts: the epoch snapshot drops puts that lost an invalidation
+    /// race, and an older concurrent resolve never shadows a newer one.
+    /// Absence is deliberately NOT cached: a negative entry would turn
+    /// create/rename races into stale `NotFound`s with no version to
+    /// validate against outside a transaction.
+    pub fn put_path(&self, path: &str, id: InodeId, version: u64, as_of: u64) {
+        if !self.meta_enabled {
+            return;
+        }
+        let mut g = self.inner.lock().unwrap();
+        if g.epoch != as_of {
+            return;
+        }
+        if g.paths.get(path).is_some_and(|c| c.version > version) {
+            return;
+        }
+        let used = g.bump();
+        let expires = self.expiry();
+        g.paths.insert(
+            path.to_string(),
+            Cached {
+                value: Arc::new(id),
+                version,
+                used,
+                expires,
             },
         );
         g.evict(self.capacity);
@@ -298,21 +412,37 @@ impl MetaCache {
     fn invalidate_locked(&self, g: &mut Inner, key: &Key) {
         match key.space {
             Space::Inode => {
-                if let Some(id) = parse_inode_key(&key.key) {
-                    g.epoch += 1;
-                    g.drop_inode_state(id);
-                    self.invalidations.fetch_add(1, Ordering::Relaxed);
+                g.epoch += 1;
+                match parse_inode_key(&key.key) {
+                    Some(id) => g.drop_inode_state(id),
+                    // An inode key we cannot parse back to an id (e.g. a
+                    // server-echoed conflict key in a future encoding)
+                    // still invalidates conservatively: we cannot tell
+                    // WHICH file's buffered bytes it covers, so no
+                    // readahead buffer may survive it.  Leaving them
+                    // intact would let a later sequential read serve
+                    // pre-commit bytes with zero envelopes.
+                    None => g.readahead.clear(),
                 }
+                self.invalidations.fetch_add(1, Ordering::Relaxed);
             }
             Space::Region => {
-                if let Some(rid) = parse_region_key(&key.key) {
-                    g.epoch += 1;
-                    g.regions.remove(&rid);
-                    g.readahead.remove(&rid.inode);
-                    self.invalidations.fetch_add(1, Ordering::Relaxed);
+                g.epoch += 1;
+                match parse_region_key(&key.key) {
+                    Some(rid) => {
+                        g.regions.remove(&rid);
+                        g.readahead.remove(&rid.inode);
+                    }
+                    None => g.readahead.clear(),
                 }
+                self.invalidations.fetch_add(1, Ordering::Relaxed);
             }
-            // Path / Dir / Sys values are never cached here.
+            Space::Path => {
+                g.epoch += 1;
+                g.paths.remove(&key.key);
+                self.invalidations.fetch_add(1, Ordering::Relaxed);
+            }
+            // Dir / Sys values are never cached here.
             _ => {}
         }
     }
@@ -325,11 +455,16 @@ impl MetaCache {
         }
         let mut g = self.inner.lock().unwrap();
         g.epoch += 1;
-        if !g.inodes.is_empty() || !g.regions.is_empty() || !g.readahead.is_empty() {
+        if !g.inodes.is_empty()
+            || !g.regions.is_empty()
+            || !g.paths.is_empty()
+            || !g.readahead.is_empty()
+        {
             self.invalidations.fetch_add(1, Ordering::Relaxed);
         }
         g.inodes.clear();
         g.regions.clear();
+        g.paths.clear();
         g.readahead.clear();
     }
 
@@ -376,6 +511,68 @@ impl MetaCache {
             if let Some(oldest) = oldest {
                 g.readahead.remove(&oldest);
             }
+        }
+    }
+}
+
+/// The versioned read-through contract for transactional reads (PR 9):
+/// [`crate::meta::MetaTxn::get`] serves warm inode/region/path keys from
+/// this cache with zero envelopes, recording the CACHED version in its
+/// read set — commit-time validation catches staleness, so a stale hit
+/// costs one conflict-retry, never serializability.  Dir/Sys keys are
+/// never cached and always go to the wire.
+impl TxnReadCache for MetaCache {
+    fn lookup(&self, key: &Key) -> Option<(Option<Value>, u64)> {
+        match key.space {
+            Space::Inode => {
+                let id = parse_inode_key(&key.key)?;
+                self.get_inode_versioned(id)
+                    .map(|(i, v)| (Some(Value::Inode((*i).clone())), v))
+            }
+            Space::Region => {
+                let rid = parse_region_key(&key.key)?;
+                self.get_region(rid)
+                    .map(|(r, v)| (Some(Value::Region((*r).clone())), v))
+            }
+            Space::Path => self
+                .get_path(&key.key)
+                .map(|(id, v)| (Some(Value::PathEntry(id)), v)),
+            _ => None,
+        }
+    }
+
+    fn epoch(&self) -> u64 {
+        MetaCache::epoch(self)
+    }
+
+    fn fill(&self, key: &Key, value: &Option<Value>, version: u64, as_of: u64) {
+        match (key.space, value) {
+            (Space::Inode, Some(Value::Inode(i))) => {
+                if let Some(id) = parse_inode_key(&key.key) {
+                    self.put_inode(id, &Arc::new(i.clone()), version, as_of);
+                }
+            }
+            (Space::Region, Some(Value::Region(r))) => {
+                if let Some(rid) = parse_region_key(&key.key) {
+                    self.put_region(rid, &Arc::new(r.clone()), version, as_of);
+                }
+            }
+            // Region absence is cached as an empty region at the
+            // version of absence — the same convention as
+            // `WtfClient::fetch_region` (an empty entry list and a
+            // missing key resolve identically).
+            (Space::Region, None) => {
+                if let Some(rid) = parse_region_key(&key.key) {
+                    self.put_region(rid, &Arc::new(RegionMeta::default()), version, as_of);
+                }
+            }
+            (Space::Path, Some(Value::PathEntry(id))) => {
+                self.put_path(&key.key, *id, version, as_of);
+            }
+            // Inode/path absence and Dir/Sys values are never cached
+            // (a negative path entry would turn create/rename races
+            // into stale NotFounds for plain lookups).
+            _ => {}
         }
     }
 }
@@ -536,6 +733,94 @@ mod tests {
         c.clear();
         c.put_inode(8, &inode(8), 1, as_of);
         assert!(c.get_inode(8).is_none());
+    }
+
+    #[test]
+    fn ttl_expires_entries_into_misses() {
+        let mut cfg = Config::fast_read_test();
+        cfg.cache_ttl = Duration::from_millis(1);
+        let c = MetaCache::new(&cfg);
+        c.put_inode(7, &inode(7), 1, c.epoch());
+        c.put_region(RegionId::new(7, 0), &region(), 1, c.epoch());
+        c.put_path("/f", 7, 1, c.epoch());
+        assert!(c.get_inode(7).is_some(), "fresh entry serves");
+        std::thread::sleep(Duration::from_millis(3));
+        assert!(c.get_inode(7).is_none(), "expired inode served");
+        assert!(c.get_region(RegionId::new(7, 0)).is_none(), "expired region served");
+        assert!(c.get_path("/f").is_none(), "expired path served");
+        // A re-fill after expiry serves again (expiry is not poison).
+        c.put_inode(7, &inode(7), 2, c.epoch());
+        assert!(c.get_inode(7).is_some());
+    }
+
+    #[test]
+    fn path_entries_round_trip_and_invalidate() {
+        let c = cache();
+        c.put_path("/a/b", 42, 7, c.epoch());
+        assert_eq!(c.get_path("/a/b"), Some((42, 7)));
+        // Version-monotone: an older concurrent resolve never wins.
+        c.put_path("/a/b", 41, 6, c.epoch());
+        assert_eq!(c.get_path("/a/b"), Some((42, 7)));
+        // Path-key invalidation drops exactly that entry.
+        c.put_path("/a/c", 43, 1, c.epoch());
+        c.invalidate_key(&Key::path("/a/b"));
+        assert!(c.get_path("/a/b").is_none());
+        assert_eq!(c.get_path("/a/c"), Some((43, 1)));
+        // clear() drops the rest; stale-epoch puts stay dropped.
+        let as_of = c.epoch();
+        c.clear();
+        c.put_path("/a/d", 44, 1, as_of);
+        assert!(c.get_path("/a/d").is_none(), "stale-epoch path put landed");
+    }
+
+    #[test]
+    fn txn_read_through_serves_and_fills_by_key() {
+        use crate::types::Value;
+        let c = cache();
+        let as_of = TxnReadCache::epoch(&c);
+        // Wire-read fills route into the typed maps...
+        let mut i = Inode::new_file(7, 0o644, 2);
+        i.len = 99;
+        c.fill(&Key::inode(7), &Some(Value::Inode(i)), 5, as_of);
+        c.fill(&Key::path("/f"), &Some(Value::PathEntry(7)), 3, as_of);
+        c.fill(&Key::region(RegionId::new(7, 0)), &None, 2, as_of);
+        // ...and lookups come back as (value, version) read-set pairs.
+        match c.lookup(&Key::inode(7)) {
+            Some((Some(Value::Inode(i)), 5)) => assert_eq!(i.len, 99),
+            other => panic!("inode lookup: {other:?}"),
+        }
+        assert_eq!(
+            c.lookup(&Key::path("/f")),
+            Some((Some(Value::PathEntry(7)), 3))
+        );
+        // Region absence round-trips as an empty region at the version
+        // of absence.
+        match c.lookup(&Key::region(RegionId::new(7, 0))) {
+            Some((Some(Value::Region(r)), 2)) => assert!(r.entries.is_empty()),
+            other => panic!("region lookup: {other:?}"),
+        }
+        // Never-cached spaces stay on the wire; absent inodes are not
+        // negatively cached.
+        assert!(c.lookup(&Key::dir(1)).is_none());
+        c.fill(&Key::inode(8), &None, 1, as_of);
+        assert!(c.lookup(&Key::inode(8)).is_none());
+        // Invalidation is visible through the trait surface.
+        c.invalidate_key(&Key::inode(7));
+        assert!(c.lookup(&Key::inode(7)).is_none());
+    }
+
+    #[test]
+    fn unparseable_invalidation_clears_readahead_conservatively() {
+        let c = cache();
+        c.readahead_put(5, 0, vec![1; 8], c.epoch());
+        c.readahead_put(6, 0, vec![2; 8], c.epoch());
+        let before = c.epoch();
+        c.invalidate_key(&Key::new(Space::Inode, "not-hex"));
+        assert!(c.epoch() > before, "epoch must move");
+        assert!(
+            c.readahead_take(5, 0, 1).is_none() && c.readahead_take(6, 0, 1).is_none(),
+            "a buffer survived an unattributable inode invalidation"
+        );
     }
 
     #[test]

@@ -61,10 +61,24 @@ impl WtfClient {
 
     /// Resolve a path to its inode id with ONE metadata lookup, no matter
     /// how deeply nested (§2.4).
+    ///
+    /// With the metadata cache enabled a warm lookup is ZERO lookups:
+    /// path entries are cached versioned like inodes and regions, so
+    /// repeated `open()`s of the same file stop paying the namespace
+    /// round.  Absence is never cached — a racing `create` must become
+    /// visible on the next plain lookup, not after a TTL.
     pub fn lookup(&self, path: &str) -> Result<InodeId> {
         let path = normalize(path)?;
-        match self.meta_get(&Key::path(&path))?.0 {
-            Some(Value::PathEntry(id)) => Ok(id),
+        if let Some((id, _version)) = self.cache.get_path(&path) {
+            return Ok(id);
+        }
+        let as_of = self.cache.epoch();
+        let (value, version) = self.meta_get(&Key::path(&path))?;
+        match value {
+            Some(Value::PathEntry(id)) => {
+                self.cache.put_path(&path, id, version, as_of);
+                Ok(id)
+            }
             Some(_) => Err(Error::CorruptMetadata(format!("path {path} wrong type"))),
             None => Err(Error::NotFound(path)),
         }
@@ -929,6 +943,95 @@ mod tests {
         c.append_bytes(&rfd, &[b'z'; 10]).unwrap();
         assert_eq!(c.len(&rfd).unwrap(), 4096 + 10);
         assert!(c.metadata_cache().invalidations() > 0);
+    }
+
+    #[test]
+    fn indeterminate_txn_commit_drops_cache_and_readahead() {
+        // PR-9 bugfix pin: a Transaction::commit that returns an
+        // indeterminate error (here: meta ack loss -> Timeout) may have
+        // LANDED server-side.  The cached inode/region entries AND the
+        // readahead buffers for the mutated inodes must be dropped, or
+        // the next read serves pre-commit bytes out of readahead.
+        use crate::cluster::Cluster;
+        use crate::config::Config;
+        use crate::net::{CutMode, Peer, Turbulence};
+        let cluster = Cluster::builder()
+            .config(Config::fast_read_test())
+            .build()
+            .unwrap();
+        let c = cluster.client();
+        let mut fd = c.create("/ind").unwrap();
+        c.write(&mut fd, &[b'a'; 12 * 1024]).unwrap();
+        // Warm the metadata cache and the readahead buffer.
+        let mut rfd = c.open("/ind").unwrap();
+        assert_eq!(c.read(&mut rfd, 1024).unwrap(), vec![b'a'; 1024]);
+        // Overwrite through a WTF transaction whose commit ack is lost:
+        // the commit applies on the metadata server, the client times out.
+        let chaos =
+            Turbulence::new(29, crate::coordinator::lease::LeaseClock::manual());
+        let meta_peer: Peer = cluster.meta().clone();
+        chaos.cut(&meta_peer, CutMode::AckLoss);
+        cluster.transport().set_turbulence(Some(chaos));
+        let mut t = c.begin();
+        let tfd = t.open("/ind").unwrap();
+        t.write(tfd, &[b'B'; 2048]).unwrap();
+        let err = t.commit().unwrap_err();
+        assert!(
+            err.is_indeterminate(),
+            "expected indeterminate commit, got {err:?}"
+        );
+        cluster.transport().set_turbulence(None);
+        // The write landed.  Reads must refetch — not serve the stale
+        // readahead window filled before the commit.
+        let before = cluster.transport_envelopes();
+        assert_eq!(c.read_at(&rfd, 0, 2048).unwrap(), vec![b'B'; 2048]);
+        assert!(
+            cluster.transport_envelopes() > before,
+            "post-indeterminate-commit read served from stale cache/readahead"
+        );
+        assert_eq!(c.read(&mut rfd, 1024).unwrap(), vec![b'B'; 1024]);
+    }
+
+    #[test]
+    fn warm_transactional_reads_issue_no_metadata_envelopes() {
+        // Tentpole contract in unit form: inside a WTF transaction, reads
+        // of cache-warm metadata are served from the versioned cache with
+        // their versions recorded in the read set — zero MetaGet
+        // envelopes — and the commit still validates cleanly.
+        use crate::cluster::Cluster;
+        use crate::config::Config;
+        use crate::net::Plane;
+        let cluster = Cluster::builder()
+            .config(Config::fast_read_test())
+            .build()
+            .unwrap();
+        let c = cluster.client();
+        let mut fd = c.create("/warm").unwrap();
+        c.write(&mut fd, &[b'x'; 2048]).unwrap();
+        // Warm path, inode, and region entries with a plain open + read.
+        let rfd = c.open("/warm").unwrap();
+        assert_eq!(c.read_at(&rfd, 0, 2048).unwrap(), vec![b'x'; 2048]);
+        let before_meta = cluster.transport_envelopes_on(Plane::Meta);
+        let mut t = c.begin();
+        let tfd = t.open("/warm").unwrap();
+        assert_eq!(t.len(tfd).unwrap(), 2048);
+        assert_eq!(t.read(tfd, 2048).unwrap(), vec![b'x'; 2048]);
+        assert_eq!(
+            cluster.transport_envelopes_on(Plane::Meta),
+            before_meta,
+            "warm transactional reads must come from the versioned cache"
+        );
+        // Cached versions are current, so validation passes.
+        t.commit().unwrap();
+        // A second client's plain warm open is also envelope-free now
+        // that path entries are cached.
+        let before = cluster.transport_envelopes();
+        let _ = c.open("/warm").unwrap();
+        assert_eq!(
+            cluster.transport_envelopes(),
+            before,
+            "warm open must be served by the path-entry + inode cache"
+        );
     }
 
     #[test]

@@ -675,6 +675,12 @@ impl WtfClient {
     /// Its internal NotLeader heals clear this client's read cache
     /// first — a heal the transaction performs on its own must honor
     /// the same invalidation trigger as every other heal path.
+    ///
+    /// With `Config::metadata_cache` on, the transaction also reads
+    /// THROUGH the versioned cache (PR 9): warm inode/region/path keys
+    /// cost zero envelopes and their cached versions enter the read
+    /// set, so commit-time validation — not freshness at read time —
+    /// guards serializability.
     pub(crate) fn meta_txn(&self) -> MetaTxn {
         let mut t = MetaTxn::with_transport(self.meta.clone(), self.transport.clone())
             .heal_budget(self.config.txn_retry_budget)
@@ -683,6 +689,7 @@ impl WtfClient {
         if self.cache.is_active() {
             let cache = self.cache.clone();
             t = t.on_heal(Arc::new(move |_shard| cache.clear()));
+            t = t.read_through(self.cache.clone());
         }
         t
     }
@@ -712,7 +719,13 @@ impl WtfClient {
             Ok(_) => self.cache.invalidate_keys(&keys),
             Err(Error::NotLeader { .. }) => self.cache.clear(),
             Err(Error::TxnConflict { space, key }) => {
-                self.cache.invalidate_key(&Key::new(*space, key.clone()))
+                // The named stale key must go; the mutated keys go too
+                // so a replay whose reads overlapped its writes
+                // (read-modify-write, the common shape) re-reads fresh
+                // state instead of conflicting again off another warm
+                // entry.
+                self.cache.invalidate_key(&Key::new(*space, key.clone()));
+                self.cache.invalidate_keys(&keys);
             }
             Err(e) if e.is_indeterminate() => self.cache.invalidate_keys(&keys),
             Err(_) => {}

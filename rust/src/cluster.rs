@@ -260,7 +260,12 @@ impl Cluster {
 
     /// Run one garbage-collection round across the cluster (§2.8).  Two
     /// rounds are needed before anything is reclaimed (the safety rule).
+    /// Each round re-asserts the PR-9 coexistence bound — with the
+    /// versioned cache and scheduled GC both on, `cache_ttl` must sit
+    /// strictly inside the scan interval, so no cached region entry can
+    /// outlive the two-scan reclamation window.
     pub fn run_gc(&self) -> Result<GcReport> {
+        crate::storage::gc::assert_cache_ttl_bound(&self.config);
         self.gc
             .lock()
             .unwrap()

@@ -111,8 +111,26 @@ pub struct Config {
     /// transactional reads always validate real versions at commit.
     /// See ROADMAP "Hot read path" for the full coherence contract.
     pub metadata_cache: bool,
-    /// Bounded entry count (inodes + regions) for the metadata cache.
+    /// Bounded entry count (inodes + regions + path entries) for the
+    /// metadata cache.
     pub metadata_cache_entries: usize,
+    /// Upper bound on the lifetime of one metadata-cache entry (inode,
+    /// region, or path): a hit older than this is treated as a miss and
+    /// refetched from the leaseholder.  `Duration::ZERO` (the default)
+    /// disables expiry.  Whenever the cache runs alongside a scheduled
+    /// GC (`gc_scan_interval` non-zero) this MUST be set strictly below
+    /// the scan interval: a region entry that outlives one scan
+    /// interval can resolve slice pointers whose backing bytes the
+    /// two-consecutive-scan rule has already reclaimed (§2.8) —
+    /// `Config::validate` rejects the combination and
+    /// `storage/gc.rs` re-asserts the bound at every round start.
+    pub cache_ttl: Duration,
+    /// Declared cadence of storage GC scan rounds for this deployment
+    /// (the operator drives [`crate::cluster::Cluster::run_gc`] every
+    /// this often).  `Duration::ZERO` (the default) means GC is not
+    /// scheduled; non-zero engages the cache/GC coexistence bound on
+    /// `cache_ttl` above.
+    pub gc_scan_interval: Duration,
     /// Group resolved extent fetches by storage server and ship one
     /// `RetrieveMany` envelope per server (deduping repeated slice
     /// pointers) instead of one `RetrieveSlice` envelope per extent.
@@ -201,6 +219,8 @@ impl Default for Config {
             transport_workers: 8,
             metadata_cache: false,
             metadata_cache_entries: 4096,
+            cache_ttl: Duration::ZERO,
+            gc_scan_interval: Duration::ZERO,
             read_coalescing: false,
             readahead: 0,
             group_commit_window: Duration::ZERO,
@@ -296,6 +316,28 @@ impl Config {
         }
     }
 
+    /// The deployment preset — "the tested config IS the production
+    /// config".  Paper-scale sizing from [`Config::default`] plus every
+    /// knob the CI matrices have proven end to end: metadata served by
+    /// 3-replica Paxos shard groups, multi-shard commits through the
+    /// intent-logged 2PC, the versioned client cache (transactional
+    /// reads validate cached versions at commit, PR 9) with per-server
+    /// fetch coalescing, and GC on a 60 s scan cadence with
+    /// `cache_ttl` strictly inside the two-scan reclamation window —
+    /// the coexistence bound `validate()` enforces.
+    pub fn production() -> Self {
+        Config {
+            meta_paxos: true,
+            meta_group_replicas: 3,
+            meta_2pc: true,
+            metadata_cache: true,
+            read_coalescing: true,
+            cache_ttl: Duration::from_secs(30),
+            gc_scan_interval: Duration::from_secs(60),
+            ..Default::default()
+        }
+    }
+
     /// Region index + region-relative offset for an absolute file offset.
     pub fn locate(&self, offset: u64) -> (u32, u64) {
         ((offset / self.region_size) as u32, offset % self.region_size)
@@ -375,6 +417,26 @@ impl Config {
             return Err(crate::Error::InvalidArgument(
                 "metadata_cache requires metadata_cache_entries >= 1".into(),
             ));
+        }
+        if !self.cache_ttl.is_zero() && !self.metadata_cache {
+            return Err(crate::Error::InvalidArgument(
+                "cache_ttl bounds the metadata cache; enable metadata_cache".into(),
+            ));
+        }
+        // The reclaimed-slice hazard: a cached region older than one GC
+        // scan interval can resolve slice pointers the two-consecutive-
+        // scan rule has already reclaimed.  A deployment that schedules
+        // GC must bound cache-entry lifetime strictly inside the window.
+        if self.metadata_cache
+            && !self.gc_scan_interval.is_zero()
+            && (self.cache_ttl.is_zero() || self.cache_ttl >= self.gc_scan_interval)
+        {
+            return Err(crate::Error::InvalidArgument(format!(
+                "metadata_cache alongside scheduled GC requires 0 < cache_ttl ({:?}) \
+                 < gc_scan_interval ({:?}): an unexpired cache entry must never \
+                 outlive the two-scan reclamation grace window",
+                self.cache_ttl, self.gc_scan_interval
+            )));
         }
         if !(0.0..=1.0).contains(&self.gc_low_watermark)
             || !(0.0..=1.0).contains(&self.gc_high_watermark)
@@ -532,6 +594,55 @@ mod tests {
         on.rpc_deadline = Duration::from_secs(2);
         on.retry_backoff = Duration::from_millis(1);
         on.validate().unwrap();
+    }
+
+    #[test]
+    fn production_preset_is_the_tested_shape() {
+        let p = Config::production();
+        assert!(p.meta_paxos && p.meta_2pc, "replicated 2PC metadata plane");
+        assert!(p.metadata_cache && p.read_coalescing, "hot read path on");
+        assert_eq!(p.region_size, 64 << 20, "paper-scale sizing retained");
+        assert!(
+            !p.cache_ttl.is_zero() && p.cache_ttl < p.gc_scan_interval,
+            "cache lifetime strictly inside the GC two-scan window"
+        );
+        p.validate().unwrap();
+        // Defaults stay conservative: production is an explicit choice.
+        let d = Config::default();
+        assert!(!d.meta_paxos && !d.metadata_cache);
+        assert!(d.cache_ttl.is_zero() && d.gc_scan_interval.is_zero());
+    }
+
+    #[test]
+    fn cache_alongside_gc_requires_a_ttl_inside_the_scan_window() {
+        // The satellite-1 hazard: cache + scheduled GC with no TTL (or a
+        // TTL at/past the scan interval) can serve reclaimed slices.
+        let mut bad = Config::fast_read_test();
+        bad.gc_scan_interval = Duration::from_secs(60);
+        assert!(bad.validate().is_err(), "cache + GC without a cache_ttl");
+        let mut bad = Config::fast_read_test();
+        bad.gc_scan_interval = Duration::from_secs(60);
+        bad.cache_ttl = Duration::from_secs(60);
+        assert!(bad.validate().is_err(), "cache_ttl == scan interval");
+        let mut bad = Config::fast_read_test();
+        bad.gc_scan_interval = Duration::from_secs(60);
+        bad.cache_ttl = Duration::from_secs(90);
+        assert!(bad.validate().is_err(), "cache_ttl past the scan interval");
+
+        let mut ok = Config::fast_read_test();
+        ok.gc_scan_interval = Duration::from_secs(60);
+        ok.cache_ttl = Duration::from_secs(30);
+        ok.validate().unwrap();
+        // TTL without the cache it bounds is a misconfiguration too.
+        let mut bad = Config::test();
+        bad.cache_ttl = Duration::from_secs(30);
+        assert!(bad.validate().is_err(), "cache_ttl without metadata_cache");
+        // Unscheduled GC (interval zero) keeps the historical shape:
+        // cache without a TTL stays valid.
+        Config::fast_read_test().validate().unwrap();
+        let mut p = Config::production();
+        p.gc_scan_interval = Duration::ZERO;
+        p.validate().unwrap();
     }
 
     #[test]

@@ -51,5 +51,5 @@ pub use ops::{MetaOp, OpOutcome};
 pub use replicated::{CommitPhase, FaultAction, FaultHook, ReplicatedMetaStore};
 pub use shard::{KvState, Shard, ShardStats};
 pub use store::{Commit, MetaService, MetaSnapshot, MetaStore};
-pub use txn::MetaTxn;
+pub use txn::{MetaTxn, TxnReadCache};
 pub use wal::{Checkpoint, Recovered, ReplicaWal, WalRecord, WalSetup};

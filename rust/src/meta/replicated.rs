@@ -54,6 +54,15 @@
 //! mutated state, so GC scans see the pre-transaction view — tolerable
 //! staleness under the two-consecutive-scan rule.)
 //!
+//! Read-set validation is intentionally *origin-blind*: a `(key,
+//! version)` pair observed from a leaseholder read and one replayed
+//! from the client's versioned metadata cache (PR 9's transactional
+//! read-through) are indistinguishable here, and both are rejected
+//! with `TxnConflict` the moment the committed version moved.  That
+//! makes this validation loop the single serializability backstop for
+//! every cached read in the system — no cache-aware code exists on the
+//! server side, and none may be added.
+//!
 //! [`MetaStore`]: super::MetaStore
 
 use super::group::{

@@ -13,6 +13,31 @@ use crate::types::{Key, Value};
 use std::collections::HashMap;
 use std::sync::Arc;
 
+/// A versioned read-through source for transactional reads (PR 9).
+///
+/// The client's metadata cache implements this so [`MetaTxn::get`] can
+/// serve a warm key with ZERO envelopes, recording the CACHED version
+/// in the read set.  Commit-time validation then checks that version
+/// against the store exactly as if the read had paid a leaseholder
+/// round — a stale cache entry surfaces as [`Error::TxnConflict`], the
+/// key is invalidated, and the retry re-reads fresh state.  §3
+/// serializability is preserved by construction (the FaaS-FS recipe:
+/// optimistic cached reads + unchanged commit-time validation).
+pub trait TxnReadCache: Send + Sync {
+    /// Cached `(value, version)` for `key` when present and fresh.
+    /// `None` sends the read to the wire.
+    fn lookup(&self, key: &Key) -> Option<(Option<Value>, u64)>;
+
+    /// Invalidation epoch snapshotted BEFORE a wire read whose result
+    /// will be offered back via [`TxnReadCache::fill`].
+    fn epoch(&self) -> u64;
+
+    /// Offer a wire-read result for caching.  Implementations drop the
+    /// fill when `as_of` no longer matches their epoch (an invalidation
+    /// won the race while the read was in flight).
+    fn fill(&self, key: &Key, value: &Option<Value>, version: u64, as_of: u64);
+}
+
 /// An in-flight metadata transaction.
 pub struct MetaTxn {
     service: Arc<MetaService>,
@@ -41,6 +66,12 @@ pub struct MetaTxn {
     /// drop the cache, including the ones this transaction performs on
     /// its own (the coherence contract's second trigger).
     heal_hook: Option<Arc<dyn Fn(u32) + Send + Sync>>,
+    /// Optional versioned read-through cache ([`TxnReadCache`]): warm
+    /// keys are served locally with their cached version recorded in
+    /// the read set; commit-time validation catches staleness.
+    read_cache: Option<Arc<dyn TxnReadCache>>,
+    /// Reads served from `read_cache` (observability/benches).
+    cached_reads: u64,
 }
 
 impl MetaTxn {
@@ -55,6 +86,8 @@ impl MetaTxn {
             rpc_deadline: std::time::Duration::ZERO,
             retry_backoff: std::time::Duration::ZERO,
             heal_hook: None,
+            read_cache: None,
+            cached_reads: 0,
         }
     }
 
@@ -94,6 +127,19 @@ impl MetaTxn {
         self
     }
 
+    /// Serve reads through `cache` optimistically ([`TxnReadCache`]):
+    /// warm keys cost zero envelopes and their cached version enters
+    /// the read set for commit-time validation.
+    pub fn read_through(mut self, cache: Arc<dyn TxnReadCache>) -> Self {
+        self.read_cache = Some(cache);
+        self
+    }
+
+    /// Reads this transaction served from its [`TxnReadCache`].
+    pub fn cached_reads(&self) -> u64 {
+        self.cached_reads
+    }
+
     /// Read `key`, recording its version in the read set.  Re-reads are
     /// answered from the transaction's cache so the transaction observes
     /// a stable snapshot of every key it touches.
@@ -106,6 +152,22 @@ impl MetaTxn {
         if let Some((v, _)) = self.reads.get(key) {
             return Ok(v.clone());
         }
+        // Optimistic cached read (PR 9): a warm `(value, version)` pair
+        // enters the read set AS IF it came from the leaseholder —
+        // commit-time validation rejects it if the key has since moved,
+        // so a stale hit costs one conflict-retry, never serializability.
+        if let Some(cache) = &self.read_cache {
+            if let Some((value, version)) = cache.lookup(key) {
+                self.cached_reads += 1;
+                self.reads.insert(key.clone(), (value.clone(), version));
+                self.read_order.push(key.clone());
+                return Ok(value);
+            }
+        }
+        // Epoch BEFORE the wire round: if an invalidation (own commit,
+        // heal, conflict) lands while the read is in flight, the fill
+        // below is dropped rather than re-installing pre-commit state.
+        let as_of = self.read_cache.as_ref().map(|c| c.epoch());
         // Value + version arrive from ONE atomic view read (absent keys
         // included): a separate version fetch could race a concurrent
         // commit and record an (absence, version) pair that never
@@ -149,6 +211,9 @@ impl MetaTxn {
             }
             None => self.service.get_checked(key)?,
         };
+        if let (Some(cache), Some(as_of)) = (&self.read_cache, as_of) {
+            cache.fill(key, &value, version, as_of);
+        }
         self.reads
             .insert(key.clone(), (value.clone(), version));
         self.read_order.push(key.clone());
@@ -270,6 +335,156 @@ mod tests {
         w.commit().unwrap();
         // The transaction still sees its snapshot.
         assert_eq!(t.get(&k("a")).unwrap(), None);
+    }
+
+    /// A deterministic [`TxnReadCache`] for unit tests: a plain map
+    /// plus an epoch counter with the production guard semantics.
+    #[derive(Default)]
+    struct TestCache {
+        entries: std::sync::Mutex<HashMap<Key, (Option<Value>, u64)>>,
+        epoch: std::sync::atomic::AtomicU64,
+        fills: std::sync::atomic::AtomicU64,
+    }
+
+    impl TxnReadCache for TestCache {
+        fn lookup(&self, key: &Key) -> Option<(Option<Value>, u64)> {
+            self.entries.lock().unwrap().get(key).cloned()
+        }
+        fn epoch(&self) -> u64 {
+            self.epoch.load(std::sync::atomic::Ordering::Relaxed)
+        }
+        fn fill(&self, key: &Key, value: &Option<Value>, version: u64, as_of: u64) {
+            if as_of != self.epoch() {
+                return;
+            }
+            self.fills.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+            self.entries
+                .lock()
+                .unwrap()
+                .insert(key.clone(), (value.clone(), version));
+        }
+    }
+
+    #[test]
+    fn fresh_cached_read_commits_without_touching_the_store() {
+        let svc = service();
+        // Seed "a" and learn its authoritative version.
+        let mut w = MetaTxn::new(svc.clone());
+        w.push(MetaOp::Put {
+            key: k("a"),
+            value: Value::U64(1),
+        });
+        w.commit().unwrap();
+        let (val, ver) = svc.get_checked(&k("a")).unwrap();
+        let cache = Arc::new(TestCache::default());
+        cache
+            .entries
+            .lock()
+            .unwrap()
+            .insert(k("a"), (val.clone(), ver));
+        // The cached read is served locally, enters the read set, and
+        // the commit validates clean (nothing moved).
+        let mut t = MetaTxn::new(svc.clone()).read_through(cache);
+        assert_eq!(t.get(&k("a")).unwrap(), Some(Value::U64(1)));
+        assert_eq!(t.cached_reads(), 1);
+        t.push(MetaOp::Put {
+            key: k("b"),
+            value: Value::U64(2),
+        });
+        t.commit().unwrap();
+        assert_eq!(svc.get_checked(&k("b")).unwrap().0, Some(Value::U64(2)));
+    }
+
+    #[test]
+    fn stale_cached_read_is_caught_at_validation() {
+        let svc = service();
+        let mut w = MetaTxn::new(svc.clone());
+        w.push(MetaOp::Put {
+            key: k("a"),
+            value: Value::U64(1),
+        });
+        w.commit().unwrap();
+        let (val, ver) = svc.get_checked(&k("a")).unwrap();
+        let cache = Arc::new(TestCache::default());
+        cache.entries.lock().unwrap().insert(k("a"), (val, ver));
+        // The store moves on AFTER the cache snapshot...
+        let mut w = MetaTxn::new(svc.clone());
+        w.push(MetaOp::Put {
+            key: k("a"),
+            value: Value::U64(9),
+        });
+        w.commit().unwrap();
+        // ...so the optimistic cached read MUST abort at commit — the
+        // stale value can never be committed over.
+        let mut t = MetaTxn::new(svc.clone()).read_through(cache);
+        assert_eq!(t.get(&k("a")).unwrap(), Some(Value::U64(1)), "served stale, optimistically");
+        t.push(MetaOp::Put {
+            key: k("a"),
+            value: Value::U64(2),
+        });
+        let err = t.commit().unwrap_err();
+        assert!(matches!(err, Error::TxnConflict { .. }), "{err}");
+        assert_eq!(
+            svc.get_checked(&k("a")).unwrap().0,
+            Some(Value::U64(9)),
+            "the stale read never committed"
+        );
+    }
+
+    #[test]
+    fn wire_reads_fill_the_cache_unless_the_epoch_moved() {
+        let svc = service();
+        let mut w = MetaTxn::new(svc.clone());
+        w.push(MetaOp::Put {
+            key: k("a"),
+            value: Value::U64(1),
+        });
+        w.commit().unwrap();
+        let cache = Arc::new(TestCache::default());
+        // Cold read goes to the store and fills the cache.
+        let mut t = MetaTxn::new(svc.clone()).read_through(cache.clone());
+        assert_eq!(t.get(&k("a")).unwrap(), Some(Value::U64(1)));
+        assert_eq!(t.cached_reads(), 0);
+        assert_eq!(cache.fills.load(std::sync::atomic::Ordering::Relaxed), 1);
+        assert!(cache.entries.lock().unwrap().contains_key(&k("a")));
+        // A second transaction now hits the cache...
+        let mut t2 = MetaTxn::new(svc.clone()).read_through(cache.clone());
+        let _ = t2.get(&k("a")).unwrap();
+        assert_eq!(t2.cached_reads(), 1);
+        // ...and a read whose epoch snapshot went stale mid-flight
+        // drops its fill (the guard the client relies on).
+        cache.entries.lock().unwrap().clear();
+        cache
+            .epoch
+            .fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+        // Simulate the race by filling with a pre-bump snapshot.
+        cache.fill(&k("a"), &Some(Value::U64(1)), 1, 0);
+        assert!(cache.entries.lock().unwrap().is_empty(), "stale fill landed");
+    }
+
+    #[test]
+    fn rereads_stay_snapshot_stable_over_a_cache_hit() {
+        let svc = service();
+        let mut w = MetaTxn::new(svc.clone());
+        w.push(MetaOp::Put {
+            key: k("a"),
+            value: Value::U64(1),
+        });
+        w.commit().unwrap();
+        let (val, ver) = svc.get_checked(&k("a")).unwrap();
+        let cache = Arc::new(TestCache::default());
+        cache.entries.lock().unwrap().insert(k("a"), (val, ver));
+        let mut t = MetaTxn::new(svc.clone()).read_through(cache.clone());
+        assert_eq!(t.get(&k("a")).unwrap(), Some(Value::U64(1)));
+        // Evict + move the cache under the transaction: re-reads come
+        // from the txn's own read set, not the cache.
+        cache
+            .entries
+            .lock()
+            .unwrap()
+            .insert(k("a"), (Some(Value::U64(7)), ver + 1));
+        assert_eq!(t.get(&k("a")).unwrap(), Some(Value::U64(1)));
+        assert_eq!(t.cached_reads(), 1, "re-read did not consult the cache");
     }
 
     #[test]

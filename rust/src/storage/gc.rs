@@ -154,6 +154,28 @@ pub fn scan_in_use_with_spills(
         .collect())
 }
 
+/// Defense-in-depth for the cache/GC coexistence rule (PR 9), validated
+/// centrally by `Config::validate` and re-asserted here at every
+/// scheduled round start: when the versioned metadata cache and
+/// scheduled GC are both on, `cache_ttl` must be nonzero and strictly
+/// below `gc_scan_interval`.  A cached region entry carries slice
+/// pointers; the two-consecutive-scan rule only reclaims bytes
+/// unreferenced for a full scan interval, so an entry that expires
+/// inside one interval can never outlive the reclamation window and
+/// hand a reader pointers into rewritten bytes.
+pub fn assert_cache_ttl_bound(config: &crate::config::Config) {
+    if config.metadata_cache && !config.gc_scan_interval.is_zero() {
+        assert!(
+            !config.cache_ttl.is_zero() && config.cache_ttl < config.gc_scan_interval,
+            "cache_ttl ({:?}) must be nonzero and strictly below gc_scan_interval \
+             ({:?}): a cached region entry must expire before the two-scan window \
+             can reclaim the bytes it points at",
+            config.cache_ttl,
+            config.gc_scan_interval,
+        );
+    }
+}
+
 /// The periodic GC driver.
 #[derive(Debug, Default)]
 pub struct GcCoordinator {
@@ -370,6 +392,60 @@ mod tests {
         let in_use = scan_in_use(&meta).unwrap();
         let extents = &in_use[&(0, a.backing)];
         assert_eq!(extents.iter().map(|(_, l)| l).sum::<u64>(), 20);
+    }
+
+    #[test]
+    #[should_panic(expected = "strictly below gc_scan_interval")]
+    fn gc_round_asserts_the_cache_ttl_bound() {
+        let mut cfg = crate::config::Config::test();
+        cfg.metadata_cache = true;
+        cfg.gc_scan_interval = std::time::Duration::from_secs(60);
+        cfg.cache_ttl = std::time::Duration::from_secs(60); // not strictly below
+        assert_cache_ttl_bound(&cfg);
+    }
+
+    #[test]
+    fn cache_ttl_expires_region_entries_before_reclamation() {
+        // PR-9 coexistence proof in miniature: a second client's cached
+        // region entry (holding slice pointers) must expire via TTL
+        // before GC's two-scan window can reclaim the bytes it points
+        // at.  After the overwrite + TTL + reclamation, the stale
+        // client re-reads fresh metadata and observes the new bytes —
+        // it never dereferences pointers into rewritten storage.
+        use crate::cluster::Cluster;
+        let mut cfg = crate::config::Config::fast_read_test();
+        cfg.cache_ttl = std::time::Duration::from_millis(2);
+        cfg.gc_scan_interval = std::time::Duration::from_secs(1);
+        let cluster = Cluster::builder().config(cfg).build().unwrap();
+        let c1 = cluster.client();
+        let c2 = cluster.client();
+        let mut fd = c1.create("/gc").unwrap();
+        c1.write(&mut fd, &[b'a'; 1024]).unwrap();
+        // c2 warms its own cache over the original slice.
+        let rfd = c2.open("/gc").unwrap();
+        assert_eq!(c2.read_at(&rfd, 0, 1024).unwrap(), vec![b'a'; 1024]);
+        // c1 overwrites the whole region, then compacts it: the
+        // shadowed original slice loses its last metadata reference,
+        // but c2's cache still points at it.
+        c1.write_at(fd.inode(), 0, &[b'b'; 1024]).unwrap();
+        c1.compact_region(crate::types::RegionId::new(fd.inode(), 0))
+            .unwrap();
+        // TTL passes BEFORE any reclamation is possible.
+        std::thread::sleep(std::time::Duration::from_millis(5));
+        // Two scans reclaim the unreferenced original bytes.
+        cluster.run_gc().unwrap();
+        let report = cluster.run_gc().unwrap();
+        assert!(
+            report.bytes_reclaimed > 0,
+            "overwritten slice should be reclaimed after two scans"
+        );
+        // c2's cached entry expired with the TTL: the read refetches
+        // metadata and observes the overwrite, not reclaimed bytes.
+        assert_eq!(
+            c2.read_at(&rfd, 0, 1024).unwrap(),
+            vec![b'b'; 1024],
+            "expired cache entry must not serve pointers into reclaimed storage"
+        );
     }
 
     #[test]

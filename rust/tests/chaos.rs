@@ -309,3 +309,188 @@ fn duplicate_delivery_of_paxos_envelopes_is_invisible() {
     );
     support::assert_append_exactly_once(&store, &keys, true);
 }
+
+// ---------------------------------------------------------------------
+// Data-plane turbulence (PR 9): the dice were always wired through
+// `Plane::Data` envelopes, but nothing drove the client's slice ladders
+// through them.  These close PR-8's follow-up.
+// ---------------------------------------------------------------------
+
+/// Seeded drops on the data plane against a replication-3 file: every
+/// read that succeeds must return the right bytes (a dropped primary
+/// fails over to the remaining replicas, never to garbage), and once
+/// the rule clears, reads must succeed outright.
+#[test]
+fn data_plane_drops_fail_reads_over_to_replicas() {
+    use wtf::cluster::Cluster;
+    use wtf::config::Config;
+    let base = support::base_seed();
+    let seed = base.wrapping_mul(0x9E37_79B9) ^ 0xDA7A;
+    let mut cfg = Config::test();
+    cfg.replication = 3;
+    let cluster = Cluster::builder().config(cfg).build().unwrap();
+    let c = cluster.client();
+    let mut fd = c.create("/dp").unwrap();
+    let mut data = vec![0u8; 6 * 1024];
+    Rng::new(seed).fill_bytes(&mut data);
+    c.write(&mut fd, &data).unwrap();
+
+    let chaos = wtf::net::Turbulence::new(seed, wtf::coordinator::lease::LeaseClock::manual());
+    chaos.add_rule(TurbulenceRule {
+        plane: Some(Plane::Data),
+        drop: 200, // ~20% of data envelopes vanish
+        ..TurbulenceRule::default()
+    });
+    cluster.transport().set_turbulence(Some(chaos.clone()));
+    let fd = c.open("/dp").unwrap();
+    let mut ok = 0;
+    for round in 0..24 {
+        match c.read_at(&fd, 0, data.len() as u64) {
+            Ok(bytes) => {
+                assert_eq!(
+                    bytes, data,
+                    "seed {seed} round {round}: failover returned wrong bytes"
+                );
+                ok += 1;
+            }
+            Err(e) => assert!(
+                e.is_indeterminate(),
+                "seed {seed} round {round}: unexpected error class {e:?}"
+            ),
+        }
+    }
+    assert!(chaos.dropped() > 0, "seed {seed}: the drop rule never fired");
+    assert!(ok > 0, "seed {seed}: no read survived 20% drops at r=3");
+    // Calm air: the ladder must succeed, not just fail cleanly.
+    chaos.clear_rules();
+    assert_eq!(
+        c.read_at(&fd, 0, data.len() as u64).unwrap(),
+        data,
+        "seed {seed}: post-heal read"
+    );
+}
+
+/// The same dice through the coalesced (`RetrieveMany`) read path: the
+/// fetch planner's per-pointer failover must hold under drops AND
+/// duplicated data envelopes (a re-served retrieve is idempotent).
+#[test]
+fn coalesced_reads_survive_data_plane_drops_and_dups() {
+    use wtf::cluster::Cluster;
+    use wtf::config::Config;
+    let base = support::base_seed();
+    let seed = base.wrapping_mul(0x9E37_79B9) ^ 0xC0A1;
+    let mut cfg = Config::fast_read_test();
+    cfg.replication = 2;
+    let cluster = Cluster::builder().config(cfg).build().unwrap();
+    let c = cluster.client();
+    let mut fd = c.create("/dpc").unwrap();
+    let mut data = vec![0u8; 12 * 1024];
+    Rng::new(seed ^ 1).fill_bytes(&mut data);
+    c.write(&mut fd, &data).unwrap();
+
+    let chaos = wtf::net::Turbulence::new(seed, wtf::coordinator::lease::LeaseClock::manual());
+    chaos.add_rule(TurbulenceRule {
+        plane: Some(Plane::Data),
+        drop: 128,
+        dup: 128,
+        ..TurbulenceRule::default()
+    });
+    cluster.transport().set_turbulence(Some(chaos.clone()));
+    let fd = c.open("/dpc").unwrap();
+    for round in 0..16 {
+        // Cold-ish every round: drop the client cache so the metadata
+        // AND data ladders both re-run under the dice.
+        c.metadata_cache().clear();
+        match c.read_at(&fd, 0, data.len() as u64) {
+            Ok(bytes) => assert_eq!(
+                bytes, data,
+                "seed {seed} round {round}: coalesced failover returned wrong bytes"
+            ),
+            Err(e) => assert!(
+                e.is_indeterminate(),
+                "seed {seed} round {round}: unexpected error class {e:?}"
+            ),
+        }
+    }
+    assert!(
+        chaos.faults_injected() > 0,
+        "seed {seed}: no data-plane fault ever fired"
+    );
+    chaos.clear_rules();
+    c.metadata_cache().clear();
+    assert_eq!(
+        c.read_at(&fd, 0, data.len() as u64).unwrap(),
+        data,
+        "seed {seed}: post-heal coalesced read"
+    );
+}
+
+/// Ack loss on a `CreateSlice` store must never double-append: the
+/// slice lands on the cut server but the ack vanishes, the client fails
+/// over to another server, and ONLY the acked pointer is published.
+/// The orphan is invisible to every reader and reclaimed by GC's
+/// two-scan rule once the air clears.
+#[test]
+fn store_ack_loss_never_double_appends() {
+    use wtf::cluster::Cluster;
+    use wtf::config::Config;
+    let base = support::base_seed();
+    let seed = base.wrapping_mul(0x9E37_79B9) ^ 0x5708;
+    let mut cfg = Config::test();
+    cfg.replication = 2;
+    let cluster = Cluster::builder().config(cfg).build().unwrap();
+    let c = cluster.client();
+    let fd = c.create("/ack").unwrap();
+
+    let chaos = wtf::net::Turbulence::new(seed, wtf::coordinator::lease::LeaseClock::manual());
+    // Two of the four servers lose their acks: any region whose scatter
+    // set touches either one exercises the store-failover ladder, and
+    // two servers always remain for the top-up pass.
+    for sid in [0, 1] {
+        let victim: wtf::net::Peer = cluster.storage().get(sid).unwrap().clone();
+        chaos.cut(&victim, CutMode::AckLoss);
+    }
+    cluster.transport().set_turbulence(Some(chaos.clone()));
+    // Append one 512-byte record at a time until a CreateSlice provably
+    // hit a cut server (ring placement is deterministic, so bound the
+    // hunt), then a few more for good measure.
+    let mut expected: Vec<u8> = Vec::new();
+    let mut i = 0u8;
+    while chaos.acks_lost() == 0 {
+        assert!(i < 64, "seed {seed}: no store ever landed on a cut server");
+        let rec = vec![b'A' + (i % 26); 512];
+        c.append_bytes(&fd, &rec).unwrap();
+        expected.extend_from_slice(&rec);
+        i += 1;
+    }
+    for _ in 0..4 {
+        let rec = vec![b'A' + (i % 26); 512];
+        c.append_bytes(&fd, &rec).unwrap();
+        expected.extend_from_slice(&rec);
+        i += 1;
+    }
+    chaos.heal_all_cuts();
+
+    // Exactly one copy of every record, in order — nothing doubled,
+    // nothing torn.
+    let fd = c.open("/ack").unwrap();
+    let len = c.len(&fd).unwrap();
+    assert_eq!(
+        len,
+        expected.len() as u64,
+        "seed {seed}: doubled or lost append"
+    );
+    assert_eq!(
+        c.read_at(&fd, 0, len).unwrap(),
+        expected,
+        "seed {seed}: append content corrupt after ack-loss failover"
+    );
+    // The served-but-unacked slices are unreferenced orphans: GC's
+    // two-scan rule reclaims them.
+    cluster.run_gc().unwrap();
+    let report = cluster.run_gc().unwrap();
+    assert!(
+        report.bytes_reclaimed > 0,
+        "seed {seed}: orphaned ack-loss slices were never reclaimed"
+    );
+}

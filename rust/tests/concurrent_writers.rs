@@ -9,6 +9,8 @@
 //! (a namespace root resolving to a referent the same transaction
 //! removed or has not yet published).
 
+mod support;
+
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::Arc;
 use wtf::cluster::Cluster;
@@ -530,6 +532,14 @@ fn mixed_create_unlink_storm_2pc_intents_protect_readers() {
     mixed_namespace_storm(Config::replicated_2pc_test());
 }
 
+#[test]
+fn mixed_create_unlink_storm_production_preset_protects_readers() {
+    // The deployment shape (PR 9): the same reader-isolation contract
+    // with the versioned metadata cache, read coalescing, and the
+    // cache-TTL-below-GC-window bound all on at test timescale.
+    mixed_namespace_storm(support::production_test_config());
+}
+
 /// The unorderable shape, forced: both path keys co-located in ONE
 /// group (so its entry mixes a namespace insert and a remove — no
 /// proposal order can protect it) with both inode keys in ANOTHER.
@@ -765,4 +775,127 @@ fn replication_three_write_hides_wire_time() {
         ratio < 2.2,
         "replication-3 write cost {ratio:.2}x replication-1 (serial would be ~3x; r1={r1:?} r3={r3:?})"
     );
+}
+
+#[test]
+fn cached_txn_read_conflict_storm_never_commits_stale() {
+    // PR-9 conflict storm: transactional reads are served from the
+    // versioned client cache, so a reader can pick up a stale pair of
+    // entries — and commit-time validation must catch EVERY one of
+    // them.  The writer keeps /x and /y byte-identical (one atomic
+    // transaction per round); reader transactions read both through
+    // warm caches and append the concatenated pair to a private output
+    // file.  An aborted attempt is the machinery working; a COMMITTED
+    // mismatched pair is the stale-read bug this PR exists to prevent.
+    use wtf::client::SeekFrom;
+    use wtf::error::Error;
+    let cl = Arc::new(
+        Cluster::builder()
+            .config(Config::fast_read_test())
+            .build()
+            .unwrap(),
+    );
+    let setup = cl.client();
+    let mut fx = setup.create("/x").unwrap();
+    let mut fy = setup.create("/y").unwrap();
+    setup.write(&mut fx, &[b'a'; 512]).unwrap();
+    setup.write(&mut fy, &[b'a'; 512]).unwrap();
+
+    let stop = Arc::new(AtomicBool::new(false));
+    let writer = {
+        let cl = cl.clone();
+        std::thread::spawn(move || {
+            let c = cl.client();
+            for r in 0..96u32 {
+                let v = b'a' + (r % 26) as u8;
+                loop {
+                    let mut t = c.begin();
+                    let x = t.open("/x").unwrap();
+                    let y = t.open("/y").unwrap();
+                    t.write(x, &[v; 512]).unwrap();
+                    t.write(y, &[v; 512]).unwrap();
+                    match t.commit() {
+                        Ok(()) => break,
+                        // Divergent replay / exhausted budget: retry the
+                        // whole round; x and y only ever move together.
+                        Err(Error::TxnAborted { .. })
+                        | Err(Error::RetriesExhausted { .. }) => continue,
+                        Err(e) => panic!("writer round {r}: {e:?}"),
+                    }
+                }
+            }
+        })
+    };
+    let readers: Vec<_> = (0..2u32)
+        .map(|ri| {
+            let cl = cl.clone();
+            let stop = stop.clone();
+            std::thread::spawn(move || {
+                let c = cl.client();
+                let out_path = format!("/out-{ri}");
+                c.create(&out_path).unwrap();
+                let (mut committed, mut aborted) = (0u64, 0u64);
+                while !stop.load(Ordering::Relaxed) {
+                    // Warm this client's cache, then read through it
+                    // inside the transaction.
+                    let fd = c.open("/x").unwrap();
+                    let _ = c.read_at(&fd, 0, 1).unwrap();
+                    let mut t = c.begin();
+                    let x = t.open("/x").unwrap();
+                    let y = t.open("/y").unwrap();
+                    let xs = t.read(x, 512).unwrap();
+                    let ys = t.read(y, 512).unwrap();
+                    let o = t.open(&out_path).unwrap();
+                    t.seek(o, SeekFrom::End(0)).unwrap();
+                    t.write(o, &xs).unwrap();
+                    t.write(o, &ys).unwrap();
+                    match t.commit() {
+                        Ok(()) => {
+                            committed += 1;
+                            assert_eq!(
+                                xs, ys,
+                                "stale cached read COMMITTED (reader {ri})"
+                            );
+                        }
+                        Err(Error::TxnAborted { .. })
+                        | Err(Error::RetriesExhausted { .. }) => aborted += 1,
+                        Err(e) => panic!("reader {ri}: {e:?}"),
+                    }
+                }
+                (committed, aborted, c.metadata_cache().hits())
+            })
+        })
+        .collect();
+    writer.join().unwrap();
+    stop.store(true, Ordering::Relaxed);
+    let mut total_committed = 0u64;
+    let mut total_hits = 0u64;
+    for h in readers {
+        let (committed, aborted, hits) = h.join().unwrap();
+        println!("reader: {committed} committed, {aborted} caught at validation");
+        total_committed += committed;
+        total_hits += hits;
+    }
+    assert!(total_committed > 0, "no reader transaction ever committed");
+    assert!(
+        total_hits > 0,
+        "the storm never exercised the read-through cache"
+    );
+
+    // A fresh (cold-cache) client audits every committed pair: uniform
+    // bytes, halves equal — across the whole output history.
+    let c = cl.client();
+    for ri in 0..2u32 {
+        let fd = c.open(&format!("/out-{ri}")).unwrap();
+        let len = c.len(&fd).unwrap();
+        assert_eq!(len % 1024, 0, "torn pair append in /out-{ri}");
+        let data = c.read_at(&fd, 0, len).unwrap();
+        for (i, pair) in data.chunks(1024).enumerate() {
+            let (xs, ys) = pair.split_at(512);
+            assert!(
+                xs.iter().all(|&b| b == xs[0]) && xs == ys,
+                "committed pair {i} in /out-{ri} is stale or torn"
+            );
+        }
+    }
 }

@@ -230,6 +230,15 @@ fn two_pc_leader_failover_mid_transaction_is_exactly_once() {
     leader_failover_exactly_once(Config::replicated_2pc_test());
 }
 
+#[test]
+fn production_preset_leader_failover_mid_transaction_is_exactly_once() {
+    // The deployment shape (PR 9): the same exactly-once contract with
+    // the versioned metadata cache and read coalescing layered on top
+    // of paxos + 2PC — a failover retry must never replay against a
+    // stale cached read set (commit-time validation is the backstop).
+    leader_failover_exactly_once(support::production_test_config());
+}
+
 fn leader_failover_exactly_once(cfg: Config) {
     use std::sync::atomic::{AtomicBool, Ordering};
 

@@ -41,12 +41,48 @@ pub fn base_seed() -> u64 {
         .unwrap_or(0)
 }
 
+/// True under the CI production matrix entry (`WTF_TEST_PRODUCTION=1`):
+/// the fault-schedule jobs rerun with the deployment shape — every
+/// driver-built store picks up the PR-6 write-path knobs exactly as
+/// under `WTF_TEST_WRITE_PATH=1`, and the preset-parameterized storms
+/// already run [`production_test_config`] unconditionally.
+pub fn production_matrix() -> bool {
+    std::env::var("WTF_TEST_PRODUCTION").as_deref() == Ok("1")
+}
+
+/// Whether driver-built stores should carry the batched write path
+/// (group commit + prepare batching): either matrix dimension asks.
+fn batched_write_path() -> bool {
+    std::env::var("WTF_TEST_WRITE_PATH").as_deref() == Ok("1") || production_matrix()
+}
+
+/// [`Config::production`] scaled to test dimensions (PR 9): every
+/// deployment knob — Paxos + 2PC metadata, the versioned metadata
+/// cache, read coalescing, and the cache-TTL-strictly-below-GC-window
+/// bound — kept, but on test-sized regions and a millisecond timescale
+/// (a fault schedule must not wait out a 30 s TTL).  `validate()` runs
+/// here so a preset drift that breaks the TTL/GC bound fails loudly in
+/// every suite that uses this, not just in `config.rs` unit tests.
+pub fn production_test_config() -> wtf::config::Config {
+    let p = wtf::config::Config::production();
+    let mut cfg = wtf::config::Config::test();
+    cfg.meta_paxos = p.meta_paxos;
+    cfg.meta_group_replicas = p.meta_group_replicas;
+    cfg.meta_2pc = p.meta_2pc;
+    cfg.metadata_cache = p.metadata_cache;
+    cfg.read_coalescing = p.read_coalescing;
+    cfg.cache_ttl = std::time::Duration::from_millis(50);
+    cfg.gc_scan_interval = std::time::Duration::from_millis(500);
+    cfg.validate().expect("scaled production preset must validate");
+    cfg
+}
+
 /// A fresh `shards`-group, 3-replica, manually-clocked replicated store
 /// with the intent-logged 2PC enabled — the fault-schedule testbed
 /// (manual clock: lease waits advance deterministically, never block).
 ///
-/// With `WTF_TEST_WRITE_PATH=1` (a CI matrix dimension), the PR-6
-/// write-path knobs ride along — group commit with a 1 ms window and
+/// With `WTF_TEST_WRITE_PATH=1` or `WTF_TEST_PRODUCTION=1` (CI matrix
+/// dimensions), the PR-6 write-path knobs ride along — group commit with a 1 ms window and
 /// prepare batching — so every fault schedule also exercises the
 /// batched proposal paths without changing any test.
 pub fn store_2pc(shards: u32) -> Arc<ReplicatedMetaStore> {
@@ -58,7 +94,7 @@ pub fn store_2pc(shards: u32) -> Arc<ReplicatedMetaStore> {
         20,
     )
     .two_pc(true);
-    if std::env::var("WTF_TEST_WRITE_PATH").as_deref() == Ok("1") {
+    if batched_write_path() {
         store = store
             .group_commit(std::time::Duration::from_millis(1), 8)
             .prepare_batching(true);
@@ -88,7 +124,7 @@ pub fn noisy_store_2pc(
         20,
     )
     .two_pc(true);
-    if std::env::var("WTF_TEST_WRITE_PATH").as_deref() == Ok("1") {
+    if batched_write_path() {
         store = store
             .group_commit(std::time::Duration::from_millis(1), 8)
             .prepare_batching(true);
@@ -127,7 +163,7 @@ pub fn store_durable(shards: u32, wal_root: &Path) -> Arc<ReplicatedMetaStore> {
         20,
     )
     .two_pc(true);
-    if std::env::var("WTF_TEST_WRITE_PATH").as_deref() == Ok("1") {
+    if batched_write_path() {
         store = store
             .group_commit(std::time::Duration::from_millis(1), 8)
             .prepare_batching(true);

@@ -37,7 +37,15 @@ toolchain):
      - convergence_ratio > 1.0 (after every seeded partition heals,
        the store must take commits again in strictly fewer rounds
        than the retry budget).
-5. Wall clock, within each fresh file only (enforced when the fresh
+5. Transactional read-through ratios (deterministic envelope counts,
+   enforced when --txn-fresh is given):
+     - meta_envelope_ratio_concat >= --min-txn-ratio (default 2.0: a
+       warm transactional concat must issue >= 2x fewer
+       metadata-plane envelopes with the versioned cache than
+       without);
+     - meta_envelope_ratio_rmw > 1.0 (a warm read-modify-write must
+       save at least something).
+6. Wall clock, within each fresh file only (enforced when the fresh
    rows are measured, i.e. mean_ns > 0): for each row name present in
    both configs, the fast config must not be more than --max-slowdown
    (default 1.25, i.e. >25%) slower than the seed config measured in
@@ -150,9 +158,12 @@ def main():
     p.add_argument("--wal-fresh", help="freshly produced BENCH_wal.json")
     p.add_argument("--chaos-baseline", help="committed BENCH_chaos.json")
     p.add_argument("--chaos-fresh", help="freshly produced BENCH_chaos.json")
+    p.add_argument("--txn-baseline", help="committed BENCH_txn_read.json")
+    p.add_argument("--txn-fresh", help="freshly produced BENCH_txn_read.json")
     p.add_argument("--max-slowdown", type=float, default=1.25)
     p.add_argument("--min-seq-ratio", type=float, default=4.0)
     p.add_argument("--min-batch-ratio", type=float, default=2.0)
+    p.add_argument("--min-txn-ratio", type=float, default=2.0)
     a = p.parse_args()
 
     base, fresh = load(a.baseline), load(a.fresh)
@@ -244,7 +255,35 @@ def main():
                     "round counts are deterministic per seed set)"
                 )
 
-    # 5. Same-run wall clock: fast config vs seed config, one machine.
+    # 5. Transactional read-through ratios (deterministic envelope
+    #    counts, when a txn_read file was produced).
+    txn_ratio = txn_rmw_ratio = None
+    if a.txn_fresh:
+        txn_fresh = load(a.txn_fresh)
+        txn_ratio = float(txn_fresh.get("meta_envelope_ratio_concat", 0.0))
+        if txn_ratio < a.min_txn_ratio:
+            failures.append(
+                f"meta_envelope_ratio_concat {txn_ratio:.2f} < {a.min_txn_ratio} "
+                "(warm transactional concat no longer saves metadata envelopes "
+                "through the versioned cache)"
+            )
+        txn_rmw_ratio = float(txn_fresh.get("meta_envelope_ratio_rmw", 0.0))
+        if txn_rmw_ratio <= 1.0:
+            failures.append(
+                f"meta_envelope_ratio_rmw {txn_rmw_ratio:.2f} <= 1.0 "
+                "(warm transactional read-modify-write saves nothing)"
+            )
+        if a.txn_baseline:
+            txn_base = load(a.txn_baseline)
+            base_ratio = float(txn_base.get("meta_envelope_ratio_concat", 0.0))
+            if base_ratio and txn_ratio < base_ratio:
+                print(
+                    f"bench_gate: note: meta_envelope_ratio_concat {txn_ratio:.2f} "
+                    f"below committed baseline {base_ratio:.2f} (informational; "
+                    "envelope counts are deterministic)"
+                )
+
+    # 6. Same-run wall clock: fast config vs seed config, one machine.
     fresh_rows = rows_by_key(fresh)
     clock_checked = clock_pairs(fresh_rows, SAME_RUN_PAIRS, a.max_slowdown, failures)
     clock_checked += clock_pairs(
@@ -254,7 +293,7 @@ def main():
         wal_fresh_rows, WAL_SAME_RUN_KEY_PAIRS, a.max_slowdown, failures
     )
 
-    # 6. Informational only: drift vs the committed baselines.
+    # 7. Informational only: drift vs the committed baselines.
     drift_notes(base, fresh_rows, a.max_slowdown)
     if write_fresh_rows:
         drift_notes(write_base, write_fresh_rows, a.max_slowdown)
@@ -284,10 +323,16 @@ def main():
         if chaos_ratio is not None
         else ""
     )
+    txn_part = (
+        f", meta_envelope_ratio_concat {txn_ratio:.2f}, "
+        f"meta_envelope_ratio_rmw {txn_rmw_ratio:.2f}"
+        if txn_ratio is not None
+        else ""
+    )
     print(
         f"bench_gate: OK (envelope_ratio_seq {seq:.2f}, "
-        f"envelope_ratio_sort {sort_ratio:.2f}{write_part}{wal_part}{chaos_part}, "
-        f"same-run wall-clock pairs checked: {clock_checked})"
+        f"envelope_ratio_sort {sort_ratio:.2f}{write_part}{wal_part}{chaos_part}"
+        f"{txn_part}, same-run wall-clock pairs checked: {clock_checked})"
     )
     return 0
 
