@@ -1,0 +1,164 @@
+//! `wtf-cluster` — per-role launcher for a multi-process WTF
+//! deployment (see `docs/DEPLOY.md` for the walkthrough).
+//!
+//! Every role reads the same JSON deployment config:
+//!
+//! * `wtf-cluster meta --config c.json --replica <i> [--bind a:p] [--ready-file f]`
+//!   — replica `i` (1-based; 0 is the frontend's) of every metadata
+//!   shard group, serving the Paxos/lease plane over a socket.
+//! * `wtf-cluster storage --config c.json --server <i> [--bind a:p] [--ready-file f]`
+//!   — storage server `i`, serving the §2.2 data plane over a socket.
+//! * `wtf-cluster frontend --config c.json [--demo]` — the client-side
+//!   stack: local shard-group leaders, socket peers to every other
+//!   process.  `--demo` runs a small create/write/read workload and
+//!   exits; without it the frontend just verifies connectivity.
+//!
+//! Server roles run until killed.  With `--ready-file`, the bound
+//! address is written there once the listener is up (bind port 0 for
+//! an ephemeral port) — the multi-process integration test and the
+//! walkthrough scripts use this as the readiness handshake.
+
+use std::process::ExitCode;
+use wtf::deploy::{run_frontend, run_meta, run_storage, DeployConfig};
+
+fn main() -> ExitCode {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let cmd = args.first().map(String::as_str).unwrap_or("help");
+    let rest = &args[1.min(args.len())..];
+    let result = match cmd {
+        "meta" => cmd_meta(rest),
+        "storage" => cmd_storage(rest),
+        "frontend" => cmd_frontend(rest),
+        "help" | "--help" | "-h" => {
+            print_help();
+            Ok(())
+        }
+        other => {
+            eprintln!("unknown role: {other}\n");
+            print_help();
+            return ExitCode::FAILURE;
+        }
+    };
+    match result {
+        Ok(()) => ExitCode::SUCCESS,
+        Err(e) => {
+            eprintln!("error: {e}");
+            ExitCode::FAILURE
+        }
+    }
+}
+
+fn print_help() {
+    println!(
+        "wtf-cluster — per-role launcher for a multi-process WTF deployment\n\n\
+         USAGE:\n  \
+         wtf-cluster meta     --config <file> --replica <i> [--bind addr:port] [--ready-file <f>]\n  \
+         wtf-cluster storage  --config <file> --server <i>  [--bind addr:port] [--ready-file <f>]\n  \
+         wtf-cluster frontend --config <file> [--demo]\n\n\
+         See docs/DEPLOY.md for a 3-process local cluster walkthrough."
+    );
+}
+
+fn flag(rest: &[String], name: &str) -> bool {
+    rest.iter().any(|a| a == name)
+}
+
+fn opt<'a>(rest: &'a [String], name: &str) -> Option<&'a str> {
+    rest.iter()
+        .position(|a| a == name)
+        .and_then(|i| rest.get(i + 1))
+        .map(String::as_str)
+}
+
+fn load_config(rest: &[String]) -> wtf::Result<DeployConfig> {
+    let path = opt(rest, "--config")
+        .ok_or_else(|| wtf::Error::InvalidArgument("--config <file> is required".into()))?;
+    DeployConfig::load(std::path::Path::new(path))
+}
+
+fn index(rest: &[String], name: &str) -> wtf::Result<u32> {
+    opt(rest, name)
+        .ok_or_else(|| wtf::Error::InvalidArgument(format!("{name} <index> is required")))?
+        .parse()
+        .map_err(|_| wtf::Error::InvalidArgument(format!("{name} must be an integer")))
+}
+
+/// Write the bound address where the launcher is watching for it.  The
+/// write is `tmp + rename` so a watcher never reads a half-written
+/// address.
+fn announce(ready_file: Option<&str>, addr: std::net::SocketAddr) -> wtf::Result<()> {
+    if let Some(path) = ready_file {
+        let tmp = format!("{path}.tmp");
+        std::fs::write(&tmp, addr.to_string())?;
+        std::fs::rename(&tmp, path)?;
+    }
+    println!("listening on {addr}");
+    Ok(())
+}
+
+fn park_forever() -> ! {
+    loop {
+        std::thread::park();
+    }
+}
+
+fn cmd_meta(rest: &[String]) -> wtf::Result<()> {
+    let cfg = load_config(rest)?;
+    let replica = index(rest, "--replica")?;
+    // Default bind: the address the config assigns this replica.
+    let assigned;
+    let bind = match opt(rest, "--bind") {
+        Some(b) => b,
+        None => {
+            assigned = cfg
+                .meta
+                .get(replica.wrapping_sub(1) as usize)
+                .cloned()
+                .ok_or_else(|| {
+                    wtf::Error::InvalidArgument(format!("no meta address for replica {replica}"))
+                })?;
+            &assigned
+        }
+    };
+    let node = run_meta(&cfg, replica, bind)?;
+    announce(opt(rest, "--ready-file"), node.addr())?;
+    park_forever()
+}
+
+fn cmd_storage(rest: &[String]) -> wtf::Result<()> {
+    let cfg = load_config(rest)?;
+    let id = index(rest, "--server")?;
+    let assigned;
+    let bind = match opt(rest, "--bind") {
+        Some(b) => b,
+        None => {
+            assigned = cfg.storage.get(id as usize).cloned().ok_or_else(|| {
+                wtf::Error::InvalidArgument(format!("no storage address for server {id}"))
+            })?;
+            &assigned
+        }
+    };
+    let node = run_storage(&cfg, id, bind)?;
+    announce(opt(rest, "--ready-file"), node.addr())?;
+    park_forever()
+}
+
+fn cmd_frontend(rest: &[String]) -> wtf::Result<()> {
+    let cfg = load_config(rest)?;
+    let frontend = run_frontend(&cfg)?;
+    let client = frontend.client();
+    if !client.exists("/") {
+        return Err(wtf::Error::NotFound("/ (is the meta plane up?)".into()));
+    }
+    println!("frontend up: / exists, {} shard group(s)", cfg.shards);
+    if flag(rest, "--demo") {
+        let path = "/wtf-cluster-demo";
+        let mut fd = client.create(path)?;
+        client.write(&mut fd, b"written across processes")?;
+        let back = client.read_at(&fd, 0, 24)?;
+        assert_eq!(back, b"written across processes");
+        client.unlink(path)?;
+        println!("demo ok: created, wrote, read back, unlinked {path}");
+    }
+    Ok(())
+}

@@ -461,9 +461,10 @@ impl WtfClient {
         Ok(out)
     }
 
-    /// Resolve a server id to a transport peer.
+    /// Resolve a server id to a transport peer — in-process or (in the
+    /// multi-process deployment) a registered socket peer.
     fn storage_peer(&self, id: ServerId) -> Result<Peer> {
-        Ok(self.storage.get(id)?.clone() as Peer)
+        self.storage.peer(id)
     }
 
     /// Fetch bytes for a replicated slice, failing over across replicas

@@ -153,7 +153,8 @@ impl ClusterBuilder {
             )
             .two_pc(config.meta_2pc)
             .prepare_batching(config.prepare_batching)
-            .group_commit(config.group_commit_window, config.group_commit_max_txns);
+            .group_commit(config.group_commit_window, config.group_commit_max_txns)
+            .max_clock_skew(config.max_clock_skew.as_millis() as u64);
             if config.meta_durable {
                 let dir = config.wal_dir.as_ref().ok_or_else(|| {
                     crate::error::Error::InvalidArgument(

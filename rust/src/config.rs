@@ -62,6 +62,17 @@ pub struct Config {
     /// leader-local inside the lease; failover waits out at most one
     /// lease window.
     pub meta_lease: Duration,
+    /// Worst-case clock disagreement budgeted between any two processes
+    /// of one deployment.  Leader-lease validity is bounded holder-side
+    /// from *before* the grant request was sent, minus this budget, and
+    /// 2PC coordinator-claim expiry checks are padded by it — so a
+    /// lease or claim never looks live on one machine after it has
+    /// expired on another whose clock runs up to this far apart.  Zero
+    /// (the default) is correct single-process, where every component
+    /// shares one clock; multi-process deployments must set it.
+    /// `validate()` requires `2 * max_clock_skew < meta_lease` so the
+    /// shortened holder lease keeps a usable window.
+    pub max_clock_skew: Duration,
     /// Coordinator replicas (Replicant/Paxos group size).
     pub coordinator_replicas: u8,
     /// Backing files maintained per storage server (§2.2).
@@ -206,6 +217,7 @@ impl Default for Config {
             meta_group_replicas: 3,
             meta_2pc: false,
             meta_lease: Duration::from_millis(50),
+            max_clock_skew: Duration::ZERO,
             coordinator_replicas: 3,
             backing_files_per_server: 4,
             ring_vnodes: 64,
@@ -330,6 +342,11 @@ impl Config {
             meta_paxos: true,
             meta_group_replicas: 3,
             meta_2pc: true,
+            // Multi-process sizing: leases long enough to absorb a
+            // generous NTP-grade skew budget and still leave the holder
+            // most of the window.
+            meta_lease: Duration::from_secs(2),
+            max_clock_skew: Duration::from_millis(250),
             metadata_cache: true,
             read_coalescing: true,
             cache_ttl: Duration::from_secs(30),
@@ -372,6 +389,19 @@ impl Config {
             return Err(crate::Error::InvalidArgument(
                 "meta_paxos requires a non-zero meta_lease".into(),
             ));
+        }
+        // A skew budget at or past half the lease would leave holders
+        // with leases born (nearly) expired — elect/renew livelock.
+        if self.meta_paxos
+            && !self.max_clock_skew.is_zero()
+            && self.max_clock_skew * 2 >= self.meta_lease
+        {
+            return Err(crate::Error::InvalidArgument(format!(
+                "max_clock_skew ({:?}) must satisfy 2 * max_clock_skew < meta_lease \
+                 ({:?}): the holder-side lease is shortened by the skew budget and \
+                 must keep a usable window",
+                self.max_clock_skew, self.meta_lease
+            )));
         }
         if self.meta_2pc && !self.meta_paxos {
             return Err(crate::Error::InvalidArgument(
@@ -643,6 +673,27 @@ mod tests {
         let mut p = Config::production();
         p.gc_scan_interval = Duration::ZERO;
         p.validate().unwrap();
+    }
+
+    #[test]
+    fn clock_skew_budget_defaults_zero_and_bounds_against_the_lease() {
+        // Single-process presets share one clock: no budget needed.
+        assert!(Config::default().max_clock_skew.is_zero());
+        assert!(Config::test().max_clock_skew.is_zero());
+        assert!(Config::replicated_2pc_test().max_clock_skew.is_zero());
+        // The deployment preset budgets real inter-machine skew, well
+        // inside its lease.
+        let p = Config::production();
+        assert!(!p.max_clock_skew.is_zero());
+        assert!(p.max_clock_skew * 2 < p.meta_lease);
+        p.validate().unwrap();
+        // 25 ms lease: 13 ms of skew swallows the window, 12 ms fits.
+        let mut bad = Config::replicated_test();
+        bad.max_clock_skew = Duration::from_millis(13);
+        assert!(bad.validate().is_err(), "2 * skew >= lease must fail");
+        let mut ok = Config::replicated_test();
+        ok.max_clock_skew = Duration::from_millis(12);
+        ok.validate().unwrap();
     }
 
     #[test]

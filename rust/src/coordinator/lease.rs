@@ -47,6 +47,30 @@ impl LeaseClock {
         }
     }
 
+    /// A monotonic clock anchored ONCE to the Unix wall clock at
+    /// construction — the multi-process deployment clock.  Each process
+    /// reads the wall clock exactly one time (here) and then advances by
+    /// `Instant` alone, so an NTP step after boot can never move lease
+    /// or hold-off reasoning; what remains is a fixed per-process anchor
+    /// error, which is exactly the quantity `Config::max_clock_skew`
+    /// budgets for.  Absolute `until_ms` values exchanged between
+    /// processes (lease grants, coordinator claims) are comparable up to
+    /// that bound; a plain [`LeaseClock::auto`] (ms since process start)
+    /// would make them meaningless across processes.
+    pub fn auto_anchored() -> Self {
+        let anchor_ms = std::time::SystemTime::now()
+            .duration_since(std::time::UNIX_EPOCH)
+            .map(|d| d.as_millis() as u64)
+            .unwrap_or(0);
+        LeaseClock {
+            inner: Arc::new(ClockInner {
+                manual: false,
+                base: Instant::now(),
+                offset_ms: AtomicU64::new(anchor_ms),
+            }),
+        }
+    }
+
     /// A clock that only moves via [`LeaseClock::advance`] (unit tests).
     pub fn manual() -> Self {
         LeaseClock {
@@ -88,6 +112,19 @@ impl Default for LeaseClock {
     fn default() -> Self {
         LeaseClock::auto()
     }
+}
+
+/// The validity bound a leaseholder may publish for ITSELF, for a grant
+/// round whose requests left this process at `pre_send_ms`: anchored
+/// BEFORE the round hits the wire (however long the grants dawdle in
+/// flight, the holder's window only shrinks — a delayed grant can never
+/// overstate it) and shrunk by the deployment's clock-skew allowance
+/// (`Config::max_clock_skew`), so a holder clock running up to that much
+/// fast still steps down before any replica's own clock would let it
+/// re-grant.  Replicas record the full `pre_send_ms + lease_ms`; only
+/// the holder's self-view is tightened.
+pub fn holder_lease_bound(pre_send_ms: u64, lease_ms: u64, max_skew_ms: u64) -> u64 {
+    (pre_send_ms + lease_ms).saturating_sub(max_skew_ms)
 }
 
 /// A granted (or observed) lease: `holder` leads until `until_ms`.
@@ -246,6 +283,52 @@ mod tests {
         // Fresh epoch after expiry: a normal handover.
         assert!(g.grant(60, 2, 120, 8));
         assert_eq!(g.live_grant(61), Some(Lease { holder: 2, until_ms: 120 }));
+    }
+
+    #[test]
+    fn delayed_grant_publishes_only_the_pre_send_window() {
+        // A 50 ms grant round leaves at t=100 and its replies are
+        // delayed 40 ms on the wire.  The bug this pins against:
+        // timestamping validity when the replies ARRIVE (t=140) would
+        // publish until_ms=190, a 40 ms overstatement of what the
+        // replicas actually granted relative to the request instant.
+        let bound = holder_lease_bound(100, 50, 0);
+        assert_eq!(bound, 150, "anchored at the pre-send instant");
+        // With a 10 ms skew allowance the holder's own view shrinks
+        // further: replicas record 150, the holder serves only to 140.
+        let bound = holder_lease_bound(100, 50, 10);
+        assert_eq!(bound, 140);
+        let lease = Lease {
+            holder: 0,
+            until_ms: bound,
+        };
+        assert!(lease.covers(139));
+        assert!(
+            !lease.covers(140),
+            "a holder running 10 ms fast has already stepped down when \
+             a skew-lagged replica still sees 10 ms of grant left"
+        );
+    }
+
+    #[test]
+    fn holder_bound_never_underflows() {
+        assert_eq!(holder_lease_bound(0, 5, 100), 0);
+        let l = Lease {
+            holder: 0,
+            until_ms: holder_lease_bound(0, 5, 100),
+        };
+        assert!(!l.covers(0), "an all-skew lease is born expired");
+    }
+
+    #[test]
+    fn anchored_clock_is_monotonic_and_absolute() {
+        let c = LeaseClock::auto_anchored();
+        let a = c.now_ms();
+        // Anchored to the Unix epoch: any plausible run of this test is
+        // far past 2020 in epoch-ms terms.
+        assert!(a > 1_577_836_800_000, "epoch-anchored, got {a}");
+        let b = c.now_ms();
+        assert!(b >= a, "monotone");
     }
 
     #[test]

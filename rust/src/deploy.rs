@@ -1,0 +1,477 @@
+//! Multi-process deployment roles: the pieces `wtf-cluster` assembles
+//! into real OS processes connected by the socket transport.
+//!
+//! The single-process [`crate::cluster::Cluster`] stays the tested
+//! default; this module splits the same components along the paper's
+//! Fig. 1 boundaries:
+//!
+//! * **meta** (`wtf-cluster meta --replica i`): one process hosting
+//!   replica `i` of EVERY metadata shard group — standalone
+//!   [`GroupReplica`]s behind a [`ShardRouter`] that dispatches each
+//!   Paxos/lease envelope on its shard id, served over a
+//!   [`SocketServer`].  With a WAL root configured, each replica logs
+//!   durably under `shard-<s>/replica-<i>` and recovers from disk on
+//!   restart (PR 5 semantics, now across process boundaries).
+//! * **storage** (`wtf-cluster storage --server i`): one
+//!   [`StorageServer`] serving the two-call §2.2 data-plane API over a
+//!   socket.
+//! * **frontend** (`wtf-cluster frontend`): hosts replica 0 of every
+//!   shard group in-process (the proposing leader) with
+//!   [`SocketPeer`]s for the remote members
+//!   ([`ShardGroup::with_remote_members`]), plus socket peers for
+//!   every storage server — and hands out ordinary [`WtfClient`]s.
+//!
+//! Every process runs its own [`LeaseClock::auto_anchored`] clock;
+//! `max_clock_skew_ms` is the budgeted disagreement between those
+//! anchors (leases shrink holder-side by it, 2PC coordinator-claim
+//! expiry checks pad by it).
+
+use crate::client::WtfClient;
+use crate::config::{Config, WalSync};
+use crate::coordinator::lease::LeaseClock;
+use crate::error::{Error, Result};
+use crate::meta::{
+    GroupReplica, MetaOp, MetaService, MetaTxn, ReplicatedMetaStore, ShardGroup, WalSetup,
+};
+use crate::metrics::Metrics;
+use crate::net::{Handler, LinkModel, Peer, Request, Response, SocketPeer, SocketServer, Transport};
+use crate::storage::{Ring, StorageCluster, StorageServer};
+use crate::types::{DirEntries, Inode, Key, Value};
+use crate::util::json::{self, Json};
+use std::path::PathBuf;
+use std::sync::Arc;
+use std::time::Duration;
+
+/// The shared deployment description every role reads (JSON — the
+/// offline build carries its own parser in [`crate::util::json`]).
+///
+/// ```json
+/// {
+///   "shards": 2,
+///   "replicas": 3,
+///   "lease_ms": 2000,
+///   "max_clock_skew_ms": 250,
+///   "meta": ["127.0.0.1:7101", "127.0.0.1:7102"],
+///   "storage": ["127.0.0.1:7201", "127.0.0.1:7202"],
+///   "wal_dir": "/tmp/wtf/wal",
+///   "data_dir": "/tmp/wtf/data"
+/// }
+/// ```
+///
+/// `meta[i]` is the address of the process hosting replica `i + 1` of
+/// every shard (replica 0 lives in the frontend); `storage[i]` is the
+/// address of storage server `i`.
+#[derive(Clone, Debug)]
+pub struct DeployConfig {
+    pub shards: u32,
+    /// Total replicas per shard group, INCLUDING the frontend-local
+    /// replica 0.  `meta.len()` must equal `replicas - 1`.
+    pub replicas: u32,
+    pub lease_ms: u64,
+    pub max_clock_skew_ms: u64,
+    pub replication: u8,
+    pub region_size: u64,
+    /// Addresses of the meta replica processes, replicas `1..replicas`.
+    pub meta: Vec<String>,
+    /// Addresses of the storage server processes, server ids `0..len`.
+    pub storage: Vec<String>,
+    /// WAL root for meta replicas (`shard-<s>/replica-<r>` per
+    /// replica); `None` = in-memory replicas.
+    pub wal_dir: Option<PathBuf>,
+    /// Backing-file root for storage servers; `None` = tempdirs.
+    pub data_dir: Option<PathBuf>,
+    pub wal_checkpoint_every: u64,
+    pub backing_files: u32,
+    pub ring_vnodes: u32,
+}
+
+impl DeployConfig {
+    /// Parse and validate a deployment description.
+    pub fn parse(text: &str) -> Result<DeployConfig> {
+        let j = json::parse(text)
+            .map_err(|e| Error::InvalidArgument(format!("deploy config: {e}")))?;
+        let num = |key: &str, default: u64| -> Result<u64> {
+            match j.get(key) {
+                None => Ok(default),
+                Some(v) => v.as_u64().ok_or_else(|| {
+                    Error::InvalidArgument(format!("deploy config: \"{key}\" must be a non-negative integer"))
+                }),
+            }
+        };
+        let addrs = |key: &str| -> Result<Vec<String>> {
+            match j.get(key) {
+                None => Ok(Vec::new()),
+                Some(v) => v
+                    .as_arr()
+                    .ok_or_else(|| {
+                        Error::InvalidArgument(format!("deploy config: \"{key}\" must be an array"))
+                    })?
+                    .iter()
+                    .map(|a| {
+                        a.as_str().map(str::to_owned).ok_or_else(|| {
+                            Error::InvalidArgument(format!(
+                                "deploy config: \"{key}\" entries must be \"host:port\" strings"
+                            ))
+                        })
+                    })
+                    .collect(),
+            }
+        };
+        let path = |key: &str| -> Result<Option<PathBuf>> {
+            match j.get(key) {
+                None | Some(Json::Null) => Ok(None),
+                Some(v) => v.as_str().map(|s| Some(PathBuf::from(s))).ok_or_else(|| {
+                    Error::InvalidArgument(format!("deploy config: \"{key}\" must be a path string"))
+                }),
+            }
+        };
+        let cfg = DeployConfig {
+            shards: num("shards", 1)? as u32,
+            replicas: num("replicas", 3)? as u32,
+            lease_ms: num("lease_ms", 2000)?,
+            max_clock_skew_ms: num("max_clock_skew_ms", 250)?,
+            replication: num("replication", 2)? as u8,
+            region_size: num("region_size", 4 << 20)?,
+            meta: addrs("meta")?,
+            storage: addrs("storage")?,
+            wal_dir: path("wal_dir")?,
+            data_dir: path("data_dir")?,
+            wal_checkpoint_every: num("wal_checkpoint_every", 128)?,
+            backing_files: num("backing_files", 4)? as u32,
+            ring_vnodes: num("ring_vnodes", 64)?as u32,
+        };
+        cfg.validate()?;
+        Ok(cfg)
+    }
+
+    /// Load from a file.
+    pub fn load(path: &std::path::Path) -> Result<DeployConfig> {
+        let text = std::fs::read_to_string(path)?;
+        DeployConfig::parse(&text)
+    }
+
+    fn validate(&self) -> Result<()> {
+        if self.shards == 0 {
+            return Err(Error::InvalidArgument("deploy config: shards == 0".into()));
+        }
+        if self.replicas < 2 {
+            return Err(Error::InvalidArgument(
+                "deploy config: a multi-process group needs replicas >= 2".into(),
+            ));
+        }
+        if self.meta.len() as u32 != self.replicas - 1 {
+            return Err(Error::InvalidArgument(format!(
+                "deploy config: {} meta addresses for {} replicas (need replicas - 1 — \
+                 replica 0 lives in the frontend)",
+                self.meta.len(),
+                self.replicas
+            )));
+        }
+        if self.storage.is_empty() {
+            return Err(Error::InvalidArgument(
+                "deploy config: at least one storage address".into(),
+            ));
+        }
+        if u32::from(self.replication) > self.storage.len() as u32 || self.replication == 0 {
+            return Err(Error::InvalidArgument(format!(
+                "deploy config: replication {} over {} storage servers",
+                self.replication,
+                self.storage.len()
+            )));
+        }
+        if self.lease_ms == 0 {
+            return Err(Error::InvalidArgument("deploy config: lease_ms == 0".into()));
+        }
+        if self.max_clock_skew_ms * 2 >= self.lease_ms {
+            return Err(Error::InvalidArgument(format!(
+                "deploy config: 2 * max_clock_skew_ms ({}) must stay below lease_ms ({})",
+                self.max_clock_skew_ms, self.lease_ms
+            )));
+        }
+        Ok(())
+    }
+
+    /// The [`Config`] a frontend client of this deployment runs with.
+    pub fn client_config(&self) -> Config {
+        Config {
+            region_size: self.region_size,
+            replication: self.replication,
+            storage_servers: self.storage.len() as u32,
+            meta_shards: self.shards,
+            meta_paxos: true,
+            meta_group_replicas: self.replicas as u8,
+            meta_2pc: true,
+            meta_lease: Duration::from_millis(self.lease_ms),
+            max_clock_skew: Duration::from_millis(self.max_clock_skew_ms),
+            backing_files_per_server: self.backing_files,
+            ring_vnodes: self.ring_vnodes,
+            ..Config::default()
+        }
+    }
+}
+
+/// The meta process's server side: one standalone replica per shard,
+/// each envelope dispatched on its shard id.
+pub struct ShardRouter {
+    replicas: Vec<Arc<GroupReplica>>,
+}
+
+impl Handler for ShardRouter {
+    fn serve(&self, req: &Request) -> Result<Response> {
+        let shard = req.shard().ok_or_else(|| {
+            Error::Unsupported(format!("meta replica cannot serve {}", req.op_name()))
+        })?;
+        let replica = self.replicas.get(shard as usize).ok_or_else(|| {
+            Error::InvalidArgument(format!("unknown shard {shard} at this meta replica"))
+        })?;
+        replica.serve(req)
+    }
+}
+
+/// A running meta replica process body: replica `id` of every shard,
+/// serving until dropped.
+pub struct MetaNode {
+    server: SocketServer,
+}
+
+impl MetaNode {
+    /// The bound listen address (write it to the ready file so a
+    /// port-0 bind is discoverable).
+    pub fn addr(&self) -> std::net::SocketAddr {
+        self.server.addr()
+    }
+}
+
+/// Boot replica `replica` (1-based — 0 is the frontend's) of every
+/// shard and serve the group plane at `bind`.
+pub fn run_meta(cfg: &DeployConfig, replica: u32, bind: &str) -> Result<MetaNode> {
+    if replica == 0 || replica >= cfg.replicas {
+        return Err(Error::InvalidArgument(format!(
+            "meta replica index {replica} outside 1..{}",
+            cfg.replicas
+        )));
+    }
+    let clock = LeaseClock::auto_anchored();
+    let replicas: Vec<Arc<GroupReplica>> = (0..cfg.shards)
+        .map(|shard| {
+            let wal = cfg.wal_dir.as_ref().map(|root| WalSetup {
+                dir: root
+                    .join(format!("shard-{shard}"))
+                    .join(format!("replica-{replica}")),
+                sync: WalSync::Always,
+                checkpoint_every: cfg.wal_checkpoint_every,
+            });
+            GroupReplica::standalone(shard, replica, clock.clone(), cfg.lease_ms, wal)
+        })
+        .collect::<Result<_>>()?;
+    let router = Arc::new(ShardRouter { replicas }) as Peer;
+    let server = SocketServer::serve(router, bind)?;
+    Ok(MetaNode { server })
+}
+
+/// A running storage process body.
+pub struct StorageNode {
+    server: SocketServer,
+}
+
+impl StorageNode {
+    pub fn addr(&self) -> std::net::SocketAddr {
+        self.server.addr()
+    }
+}
+
+/// Boot storage server `id` and serve the data plane at `bind`.
+pub fn run_storage(cfg: &DeployConfig, id: u32, bind: &str) -> Result<StorageNode> {
+    let dir = cfg.data_dir.as_ref().map(|d| d.join(format!("server-{id}")));
+    let server = Arc::new(StorageServer::new(id, dir, cfg.backing_files)?);
+    let server = SocketServer::serve(server as Peer, bind)?;
+    Ok(StorageNode { server })
+}
+
+/// Build the frontend's replicated metadata store: replica 0 of every
+/// shard lives here, remote members are reached through `remote` (one
+/// peer per meta PROCESS — each serves all shards through its
+/// [`ShardRouter`]).  Exposed separately from [`run_frontend`] so the
+/// multi-process integration test can drive 2PC and fault hooks
+/// against the store directly.
+pub fn frontend_store(
+    cfg: &DeployConfig,
+    transport: Arc<Transport>,
+    clock: LeaseClock,
+    remote: Vec<Peer>,
+) -> ReplicatedMetaStore {
+    let groups = (0..cfg.shards)
+        .map(|shard| {
+            ShardGroup::with_remote_members(
+                shard,
+                transport.clone(),
+                clock.clone(),
+                cfg.lease_ms,
+                remote.clone(),
+            )
+        })
+        .collect();
+    ReplicatedMetaStore::from_groups(groups, clock, cfg.lease_ms)
+        .two_pc(true)
+        .max_clock_skew(cfg.max_clock_skew_ms)
+}
+
+/// A running frontend: the full client stack over socket peers.
+pub struct Frontend {
+    config: Config,
+    meta: Arc<MetaService>,
+    storage: Arc<StorageCluster>,
+    ring: Ring,
+    transport: Arc<Transport>,
+}
+
+impl Frontend {
+    pub fn client(&self) -> WtfClient {
+        WtfClient::with_transport(
+            self.config.clone(),
+            self.meta.clone(),
+            self.storage.clone(),
+            self.ring.clone(),
+            self.transport.clone(),
+        )
+    }
+
+    pub fn meta(&self) -> &Arc<MetaService> {
+        &self.meta
+    }
+}
+
+/// Assemble a frontend from the deployment config: remote socket peers
+/// for every meta replica and storage server, local shard-group
+/// leaders, and the root directory created if this is a fresh
+/// namespace.
+pub fn run_frontend(cfg: &DeployConfig) -> Result<Frontend> {
+    let config = cfg.client_config();
+    config.validate()?;
+    let transport = Arc::new(Transport::new(LinkModel::instant(), config.transport_workers));
+    let clock = LeaseClock::auto_anchored();
+    let remote: Vec<Peer> = cfg
+        .meta
+        .iter()
+        .map(|a| Arc::new(SocketPeer::new(a.clone())) as Peer)
+        .collect();
+    let store = frontend_store(cfg, transport.clone(), clock, remote);
+    let meta = Arc::new(MetaService::replicated(store, Duration::ZERO, Metrics::new()));
+
+    let mut storage = StorageCluster::new(Vec::new());
+    for (id, addr) in cfg.storage.iter().enumerate() {
+        storage.set_remote(id as u32, Arc::new(SocketPeer::new(addr.clone())) as Peer);
+    }
+    let ids: Vec<u32> = (0..cfg.storage.len() as u32).collect();
+    let ring = Ring::new(&ids, cfg.ring_vnodes);
+
+    ensure_root(&meta)?;
+    Ok(Frontend {
+        config,
+        meta,
+        storage: Arc::new(storage),
+        ring,
+        transport,
+    })
+}
+
+/// Create the root directory exactly once per namespace: a second
+/// frontend (or a restart) finds it already present and moves on.
+fn ensure_root(meta: &Arc<MetaService>) -> Result<()> {
+    let root = Inode::new_directory(1, 0o755);
+    let mut t = MetaTxn::new(meta.clone());
+    t.push(MetaOp::PathInsert {
+        key: Key::path("/"),
+        inode: 1,
+        expect_absent: true,
+    });
+    t.push(MetaOp::Put {
+        key: Key::inode(1),
+        value: Value::Inode(root),
+    });
+    t.push(MetaOp::Put {
+        key: Key::dir(1),
+        value: Value::Dir(DirEntries::new()),
+    });
+    match t.commit() {
+        Ok(_) => Ok(()),
+        Err(Error::AlreadyExists(_)) | Err(Error::TxnConflict { .. }) => Ok(()),
+        Err(e) => Err(e),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const DOC: &str = r#"{
+        "shards": 2,
+        "replicas": 3,
+        "lease_ms": 400,
+        "max_clock_skew_ms": 50,
+        "meta": ["127.0.0.1:7101", "127.0.0.1:7102"],
+        "storage": ["127.0.0.1:7201", "127.0.0.1:7202"],
+        "wal_dir": "/tmp/wtf-wal"
+    }"#;
+
+    #[test]
+    fn parses_a_full_deployment() {
+        let c = DeployConfig::parse(DOC).unwrap();
+        assert_eq!(c.shards, 2);
+        assert_eq!(c.replicas, 3);
+        assert_eq!(c.meta.len(), 2);
+        assert_eq!(c.storage.len(), 2);
+        assert_eq!(c.wal_dir.as_deref(), Some(std::path::Path::new("/tmp/wtf-wal")));
+        assert_eq!(c.data_dir, None);
+        let cc = c.client_config();
+        assert!(cc.meta_paxos && cc.meta_2pc);
+        assert_eq!(cc.max_clock_skew, Duration::from_millis(50));
+        cc.validate().unwrap();
+    }
+
+    #[test]
+    fn rejects_mismatched_membership() {
+        // Two meta addresses claim replicas 1 and 2; replicas: 2 leaves
+        // one of them unaccounted for.
+        let bad = DOC.replace("\"replicas\": 3", "\"replicas\": 2");
+        assert!(DeployConfig::parse(&bad).is_err());
+        // A skew budget that swallows the lease window.
+        let bad = DOC.replace("\"max_clock_skew_ms\": 50", "\"max_clock_skew_ms\": 200");
+        assert!(DeployConfig::parse(&bad).is_err());
+        // Garbage JSON fails typed, not by panic.
+        assert!(DeployConfig::parse("{").is_err());
+        assert!(DeployConfig::parse("{\"meta\": 7}").is_err());
+    }
+
+    #[test]
+    fn meta_replica_index_is_bounded() {
+        let c = DeployConfig::parse(DOC).unwrap();
+        assert!(run_meta(&c, 0, "127.0.0.1:0").is_err(), "0 is the frontend's");
+        assert!(run_meta(&c, 3, "127.0.0.1:0").is_err(), "past the group");
+    }
+
+    #[test]
+    fn one_process_cluster_round_trips_through_sockets() {
+        // The whole Fig. 1 split, in one test process: two meta replica
+        // "nodes", two storage nodes, and a frontend — every hop over
+        // real loopback sockets.
+        let tmp = crate::util::TempDir::new("wtf-deploy").unwrap();
+        let mut c = DeployConfig::parse(DOC).unwrap();
+        c.wal_dir = Some(tmp.path().join("wal"));
+        c.data_dir = Some(tmp.path().join("data"));
+        let m1 = run_meta(&c, 1, "127.0.0.1:0").unwrap();
+        let m2 = run_meta(&c, 2, "127.0.0.1:0").unwrap();
+        let s0 = run_storage(&c, 0, "127.0.0.1:0").unwrap();
+        let s1 = run_storage(&c, 1, "127.0.0.1:0").unwrap();
+        c.meta = vec![m1.addr().to_string(), m2.addr().to_string()];
+        c.storage = vec![s0.addr().to_string(), s1.addr().to_string()];
+
+        let f = run_frontend(&c).unwrap();
+        let client = f.client();
+        assert!(client.exists("/"));
+        let mut fd = client.create("/multi").unwrap();
+        client.write(&mut fd, b"process boundary").unwrap();
+        assert_eq!(client.read_at(&fd, 0, 16).unwrap(), b"process boundary");
+        assert!(client.exists("/multi"));
+    }
+}

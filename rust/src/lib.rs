@@ -61,6 +61,7 @@ pub mod client;
 pub mod cluster;
 pub mod config;
 pub mod coordinator;
+pub mod deploy;
 pub mod error;
 pub mod mapreduce;
 pub mod meta;

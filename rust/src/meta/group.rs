@@ -35,7 +35,7 @@ use super::wal::{
     WalSetup,
 };
 use crate::config::WalSync;
-use crate::coordinator::lease::{GrantState, LeaseClock};
+use crate::coordinator::lease::{holder_lease_bound, GrantState, LeaseClock};
 use crate::coordinator::paxos::{Acceptor, Ballot, SlotSnapshot};
 use crate::error::{Error, Result};
 use crate::net::{Handler, Peer, Request, Response, Transport};
@@ -340,6 +340,28 @@ impl GroupReplica {
 
     pub fn id(&self) -> u32 {
         self.id
+    }
+
+    /// A replica hosted OUTSIDE any local [`ShardGroup`] — the server
+    /// side of one `wtf-cluster meta` process, exposed to frontends
+    /// through a socket server.  With `wal` set the replica comes up
+    /// from its WAL directory (a first boot stamps a fresh one; a
+    /// corrupt one is a typed error and the process should exit), so a
+    /// SIGKILLed meta process restarted on the same directory rejoins
+    /// with its acknowledged promises/accepts intact.
+    pub fn standalone(
+        shard: u32,
+        id: u32,
+        clock: LeaseClock,
+        lease_ms: u64,
+        wal: Option<WalSetup>,
+    ) -> Result<Arc<GroupReplica>> {
+        let replica = Arc::new(GroupReplica::new(shard, id, clock.clone()));
+        if let Some(setup) = wal {
+            let now = clock.now_ms();
+            replica.attach_wal(setup, now, lease_ms.max(1))?;
+        }
+        Ok(replica)
     }
 
     /// Lock the volatile state, absorbing mutex poisoning as a crash: a
@@ -1036,9 +1058,24 @@ impl Handler for GroupReplica {
 pub struct ShardGroup {
     shard: u32,
     replicas: Vec<Arc<GroupReplica>>,
+    /// The wire addresses of the group members, one per replica slot.
+    /// In the classic single-process deployment `peers[i]` is simply
+    /// `replicas[i] as Peer`; in a multi-process deployment the local
+    /// member keeps its direct handle while remote slots hold socket
+    /// peers (their `replicas[i]` stand-ins stay permanently dead, so
+    /// every LOCAL read/election/convergence path skips them).  All
+    /// quorum scatters address `peers`, never `replicas`.
+    peers: Vec<Peer>,
     transport: Arc<Transport>,
     clock: LeaseClock,
     lease_ms: u64,
+    /// `Config::max_clock_skew` in ms: subtracted from the lease window
+    /// the HOLDER publishes for itself (grants at the replicas keep the
+    /// full window), so a leaseholder whose clock runs up to this much
+    /// ahead of a replica's still steps down before the replica would
+    /// re-grant.  Zero (the default) reproduces the single-process
+    /// behavior, where one shared clock makes the bound vacuous.
+    max_skew_ms: AtomicU64,
     view: Mutex<LeaderView>,
     /// Serializes commits to this group (and, taken in canonical order
     /// across groups, multi-shard commits).
@@ -1077,14 +1114,18 @@ impl ShardGroup {
         lease_ms: u64,
     ) -> Self {
         let n = replicas.max(1) as u32;
+        let replicas: Vec<Arc<GroupReplica>> = (0..n)
+            .map(|id| Arc::new(GroupReplica::new(shard, id, clock.clone())))
+            .collect();
+        let peers = replicas.iter().map(|r| r.clone() as Peer).collect();
         ShardGroup {
             shard,
-            replicas: (0..n)
-                .map(|id| Arc::new(GroupReplica::new(shard, id, clock.clone())))
-                .collect(),
+            replicas,
+            peers,
             transport,
             clock,
             lease_ms: lease_ms.max(1),
+            max_skew_ms: AtomicU64::new(0),
             view: Mutex::new(LeaderView::default()),
             gate: Mutex::new(()),
             elections: AtomicU64::new(0),
@@ -1092,6 +1133,59 @@ impl ShardGroup {
             lease_epoch: AtomicU64::new(0),
             stepdowns: AtomicU64::new(0),
         }
+    }
+
+    /// A group whose replica 0 lives in THIS process (the frontend's
+    /// local member — the only election candidate, so leaseholder reads
+    /// stay local) and whose remaining members are reached through
+    /// `remote` peers, one per replica id `1..=remote.len()` (socket
+    /// peers to the per-role `wtf-cluster meta` processes).  The local
+    /// stand-ins for remote slots are created permanently dead: quorum
+    /// traffic goes over the wire via `peers`, while every local-state
+    /// path (reads, candidate choice, convergence checks) sees only the
+    /// genuinely local member.
+    pub fn with_remote_members(
+        shard: u32,
+        transport: Arc<Transport>,
+        clock: LeaseClock,
+        lease_ms: u64,
+        remote: Vec<Peer>,
+    ) -> Self {
+        let n = remote.len() as u32 + 1;
+        let replicas: Vec<Arc<GroupReplica>> = (0..n)
+            .map(|id| Arc::new(GroupReplica::new(shard, id, clock.clone())))
+            .collect();
+        for stand_in in &replicas[1..] {
+            stand_in.kill();
+        }
+        let peers = std::iter::once(replicas[0].clone() as Peer)
+            .chain(remote)
+            .collect();
+        ShardGroup {
+            shard,
+            replicas,
+            peers,
+            transport,
+            clock,
+            lease_ms: lease_ms.max(1),
+            max_skew_ms: AtomicU64::new(0),
+            view: Mutex::new(LeaderView::default()),
+            gate: Mutex::new(()),
+            elections: AtomicU64::new(0),
+            lease_reads: AtomicU64::new(0),
+            lease_epoch: AtomicU64::new(0),
+            stepdowns: AtomicU64::new(0),
+        }
+    }
+
+    /// Set the clock-skew allowance (`Config::max_clock_skew`) this
+    /// group's leaseholder subtracts from its own published lease.
+    pub fn set_max_clock_skew_ms(&self, ms: u64) {
+        self.max_skew_ms.store(ms, Ordering::Relaxed);
+    }
+
+    fn max_clock_skew_ms(&self) -> u64 {
+        self.max_skew_ms.load(Ordering::Relaxed)
     }
 
     pub fn shard(&self) -> u32 {
@@ -1183,17 +1277,27 @@ impl ShardGroup {
         let mut waited_ms = 0u64;
         loop {
             let cand = self.lowest_alive().ok_or(Error::NoQuorum { alive: 0, total })?;
-            let until = self.clock.now_ms() + self.lease_ms;
+            // The validity window is anchored at the instant BEFORE the
+            // grant requests leave this process: however long the round
+            // takes on the wire, the holder's published window only
+            // shrinks.  The replicas grant the full `until`; the holder
+            // additionally subtracts `max_clock_skew`, so even a holder
+            // clock running fast by that much steps down before any
+            // replica could re-grant (see the delayed-grant tests in
+            // `coordinator::lease`).
+            let pre_send = self.clock.now_ms();
+            let until = pre_send + self.lease_ms;
+            let holder_until = holder_lease_bound(pre_send, self.lease_ms, self.max_clock_skew_ms());
             // Every grant round gets a fresh epoch, so a replica can
             // tell this round's envelopes from network re-deliveries of
             // an earlier round (which must not extend anything).
             let epoch = self.lease_epoch.fetch_add(1, Ordering::Relaxed) + 1;
             let batch: Vec<(Peer, Request)> = self
-                .replicas
+                .peers
                 .iter()
-                .map(|r| {
+                .map(|p| {
                     (
-                        r.clone() as Peer,
+                        p.clone(),
                         Request::LeaseRequest {
                             shard: self.shard,
                             leader: cand,
@@ -1239,7 +1343,7 @@ impl ShardGroup {
                         v.needs_prepare = true;
                     }
                     v.leader = Some(cand);
-                    v.lease_until = until;
+                    v.lease_until = holder_until;
                 }
                 return Ok(cand);
             }
@@ -1261,9 +1365,9 @@ impl ShardGroup {
     /// adopts whatever a quorum already accepted there).
     fn catch_up_leader(&self, leader: u32) -> Result<()> {
         let batch: Vec<(Peer, Request)> = self
-            .replicas
+            .peers
             .iter()
-            .map(|r| (r.clone() as Peer, Request::PaxosStatus { shard: self.shard }))
+            .map(|p| (p.clone(), Request::PaxosStatus { shard: self.shard }))
             .collect();
         let max_len = self
             .transport
@@ -1315,11 +1419,11 @@ impl ShardGroup {
             }
         };
         let batch: Vec<(Peer, Request)> = self
-            .replicas
+            .peers
             .iter()
-            .map(|r| {
+            .map(|p| {
                 (
-                    r.clone() as Peer,
+                    p.clone(),
                     Request::PaxosPrepare {
                         shard: self.shard,
                         slot,
@@ -1373,11 +1477,11 @@ impl ShardGroup {
     /// than a quorum of replicas are even reachable).
     fn accept_round(&self, slot: u64, ballot: Ballot, entry: &LogEntry) -> Result<usize> {
         let batch: Vec<(Peer, Request)> = self
-            .replicas
+            .peers
             .iter()
-            .map(|r| {
+            .map(|p| {
                 (
-                    r.clone() as Peer,
+                    p.clone(),
                     Request::PaxosAccept {
                         shard: self.shard,
                         slot,
@@ -1412,11 +1516,11 @@ impl ShardGroup {
     /// here too; dead replicas re-sync on recovery).
     fn learn_all(&self, slot: u64, chosen: &LogEntry) {
         let batch: Vec<(Peer, Request)> = self
-            .replicas
+            .peers
             .iter()
-            .map(|r| {
+            .map(|p| {
                 (
-                    r.clone() as Peer,
+                    p.clone(),
                     Request::PaxosLearn {
                         shard: self.shard,
                         slot,
@@ -1576,11 +1680,11 @@ impl ShardGroup {
     /// replica, in replica order (the order [`ShardGroup::seal_fast_accept`]
     /// expects the responses back in).
     pub(crate) fn accept_requests(&self, armed: &ArmedAccept) -> Vec<(Peer, Request)> {
-        self.replicas
+        self.peers
             .iter()
-            .map(|r| {
+            .map(|p| {
                 (
-                    r.clone() as Peer,
+                    p.clone(),
                     Request::PaxosAccept {
                         shard: self.shard,
                         slot: armed.slot,
@@ -1628,11 +1732,11 @@ impl ShardGroup {
 
     /// The learn envelopes that follow a quorum-accepted armed proposal.
     pub(crate) fn learn_requests(&self, armed: &ArmedAccept) -> Vec<(Peer, Request)> {
-        self.replicas
+        self.peers
             .iter()
-            .map(|r| {
+            .map(|p| {
                 (
-                    r.clone() as Peer,
+                    p.clone(),
                     Request::PaxosLearn {
                         shard: self.shard,
                         slot: armed.slot,
@@ -1889,7 +1993,7 @@ impl ShardGroup {
             };
             if let Some((len, src)) = self.longest_live_log(idx) {
                 if len > from {
-                    let peer = self.replicas[src].clone() as Peer;
+                    let peer = self.peers[src].clone();
                     let entries = self
                         .transport
                         .call(
@@ -1914,7 +2018,7 @@ impl ShardGroup {
                 total: self.replicas.len(),
             });
         };
-        let peer = self.replicas[src].clone() as Peer;
+        let peer = self.peers[src].clone();
         let entries = self
             .transport
             .call(

@@ -44,7 +44,7 @@ mod replicated;
 mod shard;
 mod store;
 mod txn;
-mod wal;
+pub(crate) mod wal;
 
 pub use group::{EntryKind, GroupReplica, LogEntry, ShardGroup};
 pub use ops::{MetaOp, OpOutcome};

@@ -28,12 +28,18 @@
 //!   outcome (first decision in its log wins), and phase 2 flushes or
 //!   discards each staged intent exactly once via the txn-id dedup.
 //!   Leaseholder reads treat intent-locked keys as unreadable until
-//!   they resolve the intent through the decision record — acquiring
-//!   the coordinator group's commit gate with no decision recorded
-//!   proves the coordinator died pre-decision (prepares are only ever
-//!   proposed while that gate is held), so presumed-abort is safe.  A
-//!   group that loses its quorum mid-commit therefore rejoins to the
-//!   recorded decision instead of stranding a phantom entry.
+//!   they resolve the intent through the decision record.  Presumed
+//!   abort is justified by the *coordinator claim* the front-end
+//!   records in the coordinator group before its first prepare: the
+//!   claim bounds (on the coordinator's own clock, padded by
+//!   `Config::max_clock_skew` on the resolver's side) how long the
+//!   coordinator may still decide, so "claim expired + no decision
+//!   recorded" means the resolver's durable abort record wins the
+//!   decision race — a rule that holds across real process boundaries,
+//!   where the old "commit gate held + no decision" proof only covered
+//!   front-ends sharing this process's mutexes.  A group that loses
+//!   its quorum mid-commit therefore rejoins to the recorded decision
+//!   instead of stranding a phantom entry.
 //!
 //! Invariants (asserted by the fault-injection suite):
 //!
@@ -105,6 +111,20 @@ fn entry_priority(ops: &[&MetaOp]) -> i32 {
         }
     }
     pri
+}
+
+/// High bit marking a coordinator-claim entry's txn id.  Claim entries
+/// share each group's txn-id dedup space with real transactions;
+/// `next_txn` allocates from 1 upward, so the top two bits are free to
+/// namespace the bookkeeping entries a 2PC transaction rides along.
+const CLAIM_TXN_BIT: u64 = 1 << 63;
+/// High bit marking a claim-cleanup (delete) entry's txn id.
+const CLAIM_DROP_BIT: u64 = 1 << 62;
+
+/// Where txn `txn_id`'s coordinator claim lives in the coordinator
+/// group's key space.
+fn claim_key(txn_id: u64) -> Key {
+    Key::sys(format!("txn-claim/{txn_id:016x}"))
 }
 
 /// Named instants of a multi-shard commit, exposed to the deterministic
@@ -356,6 +376,15 @@ fn dup_error(e: &Error) -> Error {
 /// The sharded, Paxos-replicated metadata store.
 pub struct ReplicatedMetaStore {
     groups: Vec<ShardGroup>,
+    /// The front-end's clock: claim expiries and claim-wait sleeps are
+    /// measured on it (manual in tests, monotonic in deployments).
+    clock: LeaseClock,
+    /// Leader lease length, reused as the unit for coordinator-claim
+    /// lifetimes (a claim outlives two lease terms plus the skew bound).
+    lease_ms: u64,
+    /// `Config::max_clock_skew` in ms: the cross-process clock-skew
+    /// budget padded onto claim expiry checks.
+    max_skew_ms: AtomicU64,
     next_inode: AtomicU64,
     next_txn: AtomicU64,
     /// Route multi-shard commits through the intent-logged 2PC
@@ -398,18 +427,31 @@ impl ReplicatedMetaStore {
         lease_ms: u64,
     ) -> Self {
         assert!(shards >= 1);
+        let groups = (0..shards)
+            .map(|s| {
+                ShardGroup::new(
+                    s,
+                    replicas_per_group,
+                    transport.clone(),
+                    clock.clone(),
+                    lease_ms,
+                )
+            })
+            .collect();
+        Self::from_groups(groups, clock, lease_ms)
+    }
+
+    /// Wrap pre-built shard groups (the multi-process front end builds
+    /// its groups with [`ShardGroup::with_remote_members`] and hands
+    /// them over here; the single-process path goes through
+    /// [`Self::new`]).
+    pub fn from_groups(groups: Vec<ShardGroup>, clock: LeaseClock, lease_ms: u64) -> Self {
+        assert!(!groups.is_empty());
         ReplicatedMetaStore {
-            groups: (0..shards)
-                .map(|s| {
-                    ShardGroup::new(
-                        s,
-                        replicas_per_group,
-                        transport.clone(),
-                        clock.clone(),
-                        lease_ms,
-                    )
-                })
-                .collect(),
+            groups,
+            clock,
+            lease_ms,
+            max_skew_ms: AtomicU64::new(0),
             // inode 1 is reserved for the root directory
             next_inode: AtomicU64::new(2),
             // txn 0 is the noop filler id
@@ -421,6 +463,18 @@ impl ReplicatedMetaStore {
             fault_hook: Mutex::new(None),
             hook_installed: std::sync::atomic::AtomicBool::new(false),
         }
+    }
+
+    /// Set the cross-process clock-skew budget (`Config::max_clock_skew`
+    /// in ms).  Leader leases are shortened holder-side by this much
+    /// ([`crate::coordinator::lease::holder_lease_bound`]) and 2PC
+    /// coordinator-claim expiry checks are padded by it.
+    pub fn max_clock_skew(self, ms: u64) -> Self {
+        self.max_skew_ms.store(ms, Ordering::Relaxed);
+        for g in &self.groups {
+            g.set_max_clock_skew_ms(ms);
+        }
+        self
     }
 
     /// Route multi-shard commits through the intent-logged two-phase
@@ -666,13 +720,19 @@ impl ReplicatedMetaStore {
     /// the coordinator, the observing shard, and the sibling
     /// participants itself, in ascending order (the same global gate
     /// order every commit uses, so no deadlocks).  Holding them
-    /// serializes this resolution against every proposer to those
-    /// groups, which is what keeps one-value-per-ballot intact, and it
-    /// is also the presumed-abort proof: prepares and decisions are
-    /// only ever proposed while the coordinator's gate is held, so
-    /// observing "gate acquired, no decision recorded" means the
-    /// coordinating front-end died before deciding and can never decide
-    /// later.
+    /// serializes this resolution against every proposer in THIS
+    /// process, which is what keeps one-value-per-ballot intact — but
+    /// it is no longer the presumed-abort proof, because the
+    /// coordinating front-end may live in another process that holds no
+    /// gate of ours.  The cross-process proof is the *coordinator
+    /// claim* ([`claim_key`]) the 2PC path records before its first
+    /// prepare: "claim expired (padded by `max_clock_skew`) + no
+    /// decision recorded" means the coordinator can no longer win the
+    /// decision race, so the presumed abort this function records is
+    /// the first — and therefore the only — decision.  An unexpired
+    /// claim is waited out first ([`Self::wait_out_claim`]); either
+    /// way, the decision re-read below adopts whichever decision
+    /// actually landed first.
     fn resolve_intent(
         &self,
         txn_id: u64,
@@ -703,6 +763,11 @@ impl ReplicatedMetaStore {
         let commit = match self.groups[c].decision(txn_id, auto_elect)? {
             Some(d) => d,
             None => {
+                // A coordinator in another process may still be alive
+                // and deciding: its claim record bounds for how long.
+                // Wait the claim out (no-op when absent or expired)
+                // before presuming anything.
+                self.wait_out_claim(c, txn_id, auto_elect)?;
                 // Record the presumed abort durably FIRST — the first
                 // decision in the coordinator's log wins, so once this
                 // lands no replayed decide can flip the outcome.
@@ -710,7 +775,9 @@ impl ReplicatedMetaStore {
                 // Re-read rather than assuming `false`: our proposal's
                 // prepare rounds may have adopted a minority-accepted
                 // `Decide(commit)` left behind by the dead front-end —
-                // in which case THAT is the recorded (first) decision.
+                // or a live remote coordinator's decide may have landed
+                // while we waited — in which case THAT is the recorded
+                // (first) decision.
                 self.groups[c]
                     .decision(txn_id, auto_elect)?
                     .unwrap_or(false)
@@ -726,6 +793,35 @@ impl ReplicatedMetaStore {
             }
         }
         Ok(commit)
+    }
+
+    /// Block until txn `txn_id`'s coordinator claim in group `c` has
+    /// expired, a decision lands, or the claim turns out to be absent.
+    /// The expiry check pads the recorded bound (measured on the
+    /// coordinator's clock) with `max_clock_skew`, so a coordinator
+    /// whose clock runs behind ours by up to the budget still gets its
+    /// full claim window.  Bounded: a claim covers at most two lease
+    /// terms plus the skew budget, and the manual test clock *advances*
+    /// on sleep instead of blocking.
+    fn wait_out_claim(&self, c: usize, txn_id: u64, auto_elect: bool) -> Result<()> {
+        let pad = self.max_skew_ms.load(Ordering::Relaxed);
+        loop {
+            let until = match self.groups[c].local_get(&claim_key(txn_id), auto_elect)? {
+                Some((Value::U64(until), _)) => until.saturating_add(pad),
+                // No claim: pre-claim log replay, or already cleaned up
+                // after its decision — either way nothing to wait for.
+                _ => return Ok(()),
+            };
+            let now = self.clock.now_ms();
+            if now >= until {
+                return Ok(());
+            }
+            self.clock.sleep_ms((until - now).min(self.lease_ms.max(1)));
+            if self.groups[c].decision(txn_id, auto_elect)?.is_some() {
+                // Decided while we waited; the caller's re-read adopts it.
+                return Ok(());
+            }
+        }
     }
 
     /// Sweep every group for pending intents and resolve each through
@@ -1296,14 +1392,18 @@ impl ReplicatedMetaStore {
     }
 
     /// The intent-logged two-phase commit for a multi-shard transaction
-    /// (`Config::meta_2pc`).  Phase 1 stages a durable `Prepare` intent
-    /// in every participant's log (validated + key-locked, nothing
-    /// applied); the `Decide` record replicated in the lowest-numbered
-    /// participant group fixes the outcome; phase 2 flushes or discards
-    /// each staged intent exactly once via the txn-id dedup.  A
-    /// participant unreachable during phase 2 resolves later — through
-    /// [`Self::resolve_orphans`] or a reader's intent resolution —
-    /// because the decision record is already durable.
+    /// (`Config::meta_2pc`).  A lease-bounded *coordinator claim* is
+    /// replicated into the coordinator group first (the cross-process
+    /// presumed-abort bound — see [`Self::resolve_intent`]); phase 1
+    /// then stages a durable `Prepare` intent in every participant's
+    /// log (validated + key-locked, nothing applied); the `Decide`
+    /// record replicated in the lowest-numbered participant group fixes
+    /// the outcome — re-read after proposing, because a claim-expiry
+    /// resolver may have recorded an abort first; phase 2 flushes or
+    /// discards each staged intent exactly once via the txn-id dedup.
+    /// A participant unreachable during phase 2 resolves later —
+    /// through [`Self::resolve_orphans`] or a reader's intent
+    /// resolution — because the decision record is already durable.
     fn commit_two_phase(
         &self,
         txn_id: u64,
@@ -1317,6 +1417,31 @@ impl ReplicatedMetaStore {
         by_shard.sort_unstable_by_key(|(sid, _)| *sid);
         let participants: Vec<u32> = by_shard.iter().map(|(sid, _)| *sid as u32).collect();
         let coordinator = participants[0];
+
+        // Coordinator claim: before any intent exists anywhere, record
+        // in the coordinator group's log how long this front-end may
+        // still decide — the expiry is measured on OUR clock *before*
+        // the claim is sent, so a resolver in another process (padding
+        // the bound with its own skew budget) waits at least as long as
+        // we could possibly act.  "Gate held + no decision" proves
+        // coordinator death only in-process; "claim expired + no
+        // decision" is the rule that survives real process boundaries.
+        // A claim that cannot replicate is a clean abort: nothing has
+        // been staged anywhere yet.
+        let claim_until = self
+            .clock
+            .now_ms()
+            .saturating_add(2 * self.lease_ms.max(1))
+            .saturating_add(self.max_skew_ms.load(Ordering::Relaxed));
+        let claim = LogEntry::apply(
+            txn_id | CLAIM_TXN_BIT,
+            Vec::new(),
+            vec![MetaOp::Put {
+                key: claim_key(txn_id),
+                value: Value::U64(claim_until),
+            }],
+        );
+        self.groups[coordinator as usize].propose_entry(&claim, true)?;
 
         // Phase 1: durable intents, in shard order.  Order is free here
         // — nothing applies until the decision, and the intent locks
@@ -1447,7 +1572,15 @@ impl ReplicatedMetaStore {
             // resolution runs against the healed coordinator group.
             Err(e) => return Err(abort_cause.unwrap_or(e)),
         }
-        let phase = CommitPhase::Decided { commit: vote_yes };
+        // Adopt the RECORDED decision, not the local vote: a claim-
+        // expiry resolver in another process may have recorded a
+        // presumed abort first, in which case the proposal above merely
+        // deduped against it and phase 2 must flush THAT outcome.
+        let decided = self.groups[coordinator as usize]
+            .decision(txn_id, true)?
+            .unwrap_or(vote_yes);
+        let decide = LogEntry::decide(txn_id, decided);
+        let phase = CommitPhase::Decided { commit: decided };
         if self.fire(phase, txn_id) == FaultAction::Abandon {
             return Err(Self::abandoned(txn_id, phase));
         }
@@ -1501,8 +1634,30 @@ impl ReplicatedMetaStore {
                 }
             }
         }
-        if vote_yes {
+        // Best-effort claim cleanup — the claim did its job the moment
+        // the decision record landed, and a leftover one only makes a
+        // future resolver wait before its decision re-read
+        // short-circuits anyway.
+        let drop_claim = LogEntry::apply(
+            txn_id | CLAIM_DROP_BIT,
+            Vec::new(),
+            vec![MetaOp::Delete {
+                key: claim_key(txn_id),
+            }],
+        );
+        let _ = self.groups[coordinator as usize].propose_entry(&drop_claim, true);
+        if decided {
             Ok(Attempt::Done(outcomes))
+        } else if vote_yes {
+            // Every participant voted yes but the recorded decision is
+            // an abort: a resolver presumed this front-end dead after
+            // its claim expired.  The intents are discarded everywhere;
+            // surface the loss of the race rather than fake a commit.
+            Err(Error::TxnAborted {
+                reason: format!(
+                    "txn {txn_id}: coordinator claim expired before the decision was recorded"
+                ),
+            })
         } else {
             Err(abort_cause.unwrap_or(Error::TxnAborted {
                 reason: format!("txn {txn_id}: a participant voted to abort at prepare"),

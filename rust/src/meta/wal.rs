@@ -98,55 +98,55 @@ pub fn crc32(bytes: &[u8]) -> u32 {
 // length-prefixed strings and sequences, one tag byte per enum.
 // ---------------------------------------------------------------------
 
-type Corrupt = String;
+pub(crate) type Corrupt = String;
 
-fn put_u8(o: &mut Vec<u8>, v: u8) {
+pub(crate) fn put_u8(o: &mut Vec<u8>, v: u8) {
     o.push(v);
 }
 
-fn put_u16(o: &mut Vec<u8>, v: u16) {
+pub(crate) fn put_u16(o: &mut Vec<u8>, v: u16) {
     o.extend_from_slice(&v.to_le_bytes());
 }
 
-fn put_u32(o: &mut Vec<u8>, v: u32) {
+pub(crate) fn put_u32(o: &mut Vec<u8>, v: u32) {
     o.extend_from_slice(&v.to_le_bytes());
 }
 
-fn put_u64(o: &mut Vec<u8>, v: u64) {
+pub(crate) fn put_u64(o: &mut Vec<u8>, v: u64) {
     o.extend_from_slice(&v.to_le_bytes());
 }
 
-fn put_i64(o: &mut Vec<u8>, v: i64) {
+pub(crate) fn put_i64(o: &mut Vec<u8>, v: i64) {
     o.extend_from_slice(&v.to_le_bytes());
 }
 
-fn put_bool(o: &mut Vec<u8>, v: bool) {
+pub(crate) fn put_bool(o: &mut Vec<u8>, v: bool) {
     put_u8(o, v as u8);
 }
 
-fn put_str(o: &mut Vec<u8>, s: &str) {
+pub(crate) fn put_str(o: &mut Vec<u8>, s: &str) {
     put_u32(o, s.len() as u32);
     o.extend_from_slice(s.as_bytes());
 }
 
-fn put_blob(o: &mut Vec<u8>, b: &[u8]) {
+pub(crate) fn put_blob(o: &mut Vec<u8>, b: &[u8]) {
     put_u32(o, b.len() as u32);
     o.extend_from_slice(b);
 }
 
 /// A strict decoding cursor: every read is bounds-checked and every
 /// failure carries the byte position, so corruption reports are exact.
-struct Dec<'a> {
+pub(crate) struct Dec<'a> {
     buf: &'a [u8],
     pos: usize,
 }
 
 impl<'a> Dec<'a> {
-    fn new(buf: &'a [u8]) -> Self {
+    pub(crate) fn new(buf: &'a [u8]) -> Self {
         Dec { buf, pos: 0 }
     }
 
-    fn take(&mut self, n: usize) -> std::result::Result<&'a [u8], Corrupt> {
+    pub(crate) fn take(&mut self, n: usize) -> std::result::Result<&'a [u8], Corrupt> {
         if self.buf.len() - self.pos < n {
             return Err(format!(
                 "payload truncated: need {n} bytes at offset {}, have {}",
@@ -159,27 +159,27 @@ impl<'a> Dec<'a> {
         Ok(s)
     }
 
-    fn u8(&mut self) -> std::result::Result<u8, Corrupt> {
+    pub(crate) fn u8(&mut self) -> std::result::Result<u8, Corrupt> {
         Ok(self.take(1)?[0])
     }
 
-    fn u16(&mut self) -> std::result::Result<u16, Corrupt> {
+    pub(crate) fn u16(&mut self) -> std::result::Result<u16, Corrupt> {
         Ok(u16::from_le_bytes(self.take(2)?.try_into().unwrap()))
     }
 
-    fn u32(&mut self) -> std::result::Result<u32, Corrupt> {
+    pub(crate) fn u32(&mut self) -> std::result::Result<u32, Corrupt> {
         Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
     }
 
-    fn u64(&mut self) -> std::result::Result<u64, Corrupt> {
+    pub(crate) fn u64(&mut self) -> std::result::Result<u64, Corrupt> {
         Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
     }
 
-    fn i64(&mut self) -> std::result::Result<i64, Corrupt> {
+    pub(crate) fn i64(&mut self) -> std::result::Result<i64, Corrupt> {
         Ok(i64::from_le_bytes(self.take(8)?.try_into().unwrap()))
     }
 
-    fn bool(&mut self) -> std::result::Result<bool, Corrupt> {
+    pub(crate) fn bool(&mut self) -> std::result::Result<bool, Corrupt> {
         match self.u8()? {
             0 => Ok(false),
             1 => Ok(true),
@@ -187,13 +187,13 @@ impl<'a> Dec<'a> {
         }
     }
 
-    fn str(&mut self) -> std::result::Result<String, Corrupt> {
+    pub(crate) fn str(&mut self) -> std::result::Result<String, Corrupt> {
         let n = self.seq()?;
         let bytes = self.take(n)?;
         String::from_utf8(bytes.to_vec()).map_err(|_| "invalid utf-8 string".to_string())
     }
 
-    fn blob(&mut self) -> std::result::Result<Vec<u8>, Corrupt> {
+    pub(crate) fn blob(&mut self) -> std::result::Result<Vec<u8>, Corrupt> {
         let n = self.seq()?;
         Ok(self.take(n)?.to_vec())
     }
@@ -201,7 +201,7 @@ impl<'a> Dec<'a> {
     /// Sequence length, sanity-bounded by the bytes actually remaining
     /// (every element costs >= 1 byte) so a corrupt length can never
     /// turn into a giant allocation.
-    fn seq(&mut self) -> std::result::Result<usize, Corrupt> {
+    pub(crate) fn seq(&mut self) -> std::result::Result<usize, Corrupt> {
         let n = self.u32()? as usize;
         if n > self.buf.len() - self.pos {
             return Err(format!(
@@ -212,7 +212,7 @@ impl<'a> Dec<'a> {
         Ok(n)
     }
 
-    fn done(&self) -> std::result::Result<(), Corrupt> {
+    pub(crate) fn done(&self) -> std::result::Result<(), Corrupt> {
         if self.pos != self.buf.len() {
             return Err(format!(
                 "{} trailing bytes after a complete payload",
@@ -223,19 +223,19 @@ impl<'a> Dec<'a> {
     }
 }
 
-fn enc_ballot(o: &mut Vec<u8>, b: &Ballot) {
+pub(crate) fn enc_ballot(o: &mut Vec<u8>, b: &Ballot) {
     put_u64(o, b.round);
     put_u32(o, b.proposer);
 }
 
-fn dec_ballot(d: &mut Dec) -> std::result::Result<Ballot, Corrupt> {
+pub(crate) fn dec_ballot(d: &mut Dec) -> std::result::Result<Ballot, Corrupt> {
     Ok(Ballot {
         round: d.u64()?,
         proposer: d.u32()?,
     })
 }
 
-fn enc_space(o: &mut Vec<u8>, s: Space) {
+pub(crate) fn enc_space(o: &mut Vec<u8>, s: Space) {
     put_u8(
         o,
         match s {
@@ -248,7 +248,7 @@ fn enc_space(o: &mut Vec<u8>, s: Space) {
     );
 }
 
-fn dec_space(d: &mut Dec) -> std::result::Result<Space, Corrupt> {
+pub(crate) fn dec_space(d: &mut Dec) -> std::result::Result<Space, Corrupt> {
     match d.u8()? {
         0 => Ok(Space::Path),
         1 => Ok(Space::Inode),
@@ -259,26 +259,26 @@ fn dec_space(d: &mut Dec) -> std::result::Result<Space, Corrupt> {
     }
 }
 
-fn enc_key(o: &mut Vec<u8>, k: &Key) {
+pub(crate) fn enc_key(o: &mut Vec<u8>, k: &Key) {
     enc_space(o, k.space);
     put_str(o, &k.key);
 }
 
-fn dec_key(d: &mut Dec) -> std::result::Result<Key, Corrupt> {
+pub(crate) fn dec_key(d: &mut Dec) -> std::result::Result<Key, Corrupt> {
     Ok(Key {
         space: dec_space(d)?,
         key: d.str()?,
     })
 }
 
-fn enc_slice_ptr(o: &mut Vec<u8>, p: &SlicePtr) {
+pub(crate) fn enc_slice_ptr(o: &mut Vec<u8>, p: &SlicePtr) {
     put_u32(o, p.server);
     put_u32(o, p.backing);
     put_u64(o, p.offset);
     put_u64(o, p.len);
 }
 
-fn dec_slice_ptr(d: &mut Dec) -> std::result::Result<SlicePtr, Corrupt> {
+pub(crate) fn dec_slice_ptr(d: &mut Dec) -> std::result::Result<SlicePtr, Corrupt> {
     Ok(SlicePtr {
         server: d.u32()?,
         backing: d.u32()?,
@@ -287,14 +287,14 @@ fn dec_slice_ptr(d: &mut Dec) -> std::result::Result<SlicePtr, Corrupt> {
     })
 }
 
-fn enc_slice_ptrs(o: &mut Vec<u8>, ptrs: &[SlicePtr]) {
+pub(crate) fn enc_slice_ptrs(o: &mut Vec<u8>, ptrs: &[SlicePtr]) {
     put_u32(o, ptrs.len() as u32);
     for p in ptrs {
         enc_slice_ptr(o, p);
     }
 }
 
-fn dec_slice_ptrs(d: &mut Dec) -> std::result::Result<Vec<SlicePtr>, Corrupt> {
+pub(crate) fn dec_slice_ptrs(d: &mut Dec) -> std::result::Result<Vec<SlicePtr>, Corrupt> {
     let n = d.seq()?;
     let mut v = Vec::with_capacity(n);
     for _ in 0..n {
@@ -303,7 +303,7 @@ fn dec_slice_ptrs(d: &mut Dec) -> std::result::Result<Vec<SlicePtr>, Corrupt> {
     Ok(v)
 }
 
-fn enc_slice_data(o: &mut Vec<u8>, s: &SliceData) {
+pub(crate) fn enc_slice_data(o: &mut Vec<u8>, s: &SliceData) {
     match s {
         SliceData::Stored(ptrs) => {
             put_u8(o, 0);
@@ -313,7 +313,7 @@ fn enc_slice_data(o: &mut Vec<u8>, s: &SliceData) {
     }
 }
 
-fn dec_slice_data(d: &mut Dec) -> std::result::Result<SliceData, Corrupt> {
+pub(crate) fn dec_slice_data(d: &mut Dec) -> std::result::Result<SliceData, Corrupt> {
     match d.u8()? {
         0 => Ok(SliceData::Stored(dec_slice_ptrs(d)?)),
         1 => Ok(SliceData::Hole),
@@ -321,7 +321,7 @@ fn dec_slice_data(d: &mut Dec) -> std::result::Result<SliceData, Corrupt> {
     }
 }
 
-fn enc_placement(o: &mut Vec<u8>, p: &Placement) {
+pub(crate) fn enc_placement(o: &mut Vec<u8>, p: &Placement) {
     match p {
         Placement::At(off) => {
             put_u8(o, 0);
@@ -331,7 +331,7 @@ fn enc_placement(o: &mut Vec<u8>, p: &Placement) {
     }
 }
 
-fn dec_placement(d: &mut Dec) -> std::result::Result<Placement, Corrupt> {
+pub(crate) fn dec_placement(d: &mut Dec) -> std::result::Result<Placement, Corrupt> {
     match d.u8()? {
         0 => Ok(Placement::At(d.u64()?)),
         1 => Ok(Placement::Eof),
@@ -339,13 +339,13 @@ fn dec_placement(d: &mut Dec) -> std::result::Result<Placement, Corrupt> {
     }
 }
 
-fn enc_region_entry(o: &mut Vec<u8>, e: &RegionEntry) {
+pub(crate) fn enc_region_entry(o: &mut Vec<u8>, e: &RegionEntry) {
     enc_placement(o, &e.placement);
     put_u64(o, e.len);
     enc_slice_data(o, &e.data);
 }
 
-fn dec_region_entry(d: &mut Dec) -> std::result::Result<RegionEntry, Corrupt> {
+pub(crate) fn dec_region_entry(d: &mut Dec) -> std::result::Result<RegionEntry, Corrupt> {
     Ok(RegionEntry {
         placement: dec_placement(d)?,
         len: d.u64()?,
@@ -353,7 +353,7 @@ fn dec_region_entry(d: &mut Dec) -> std::result::Result<RegionEntry, Corrupt> {
     })
 }
 
-fn enc_region(o: &mut Vec<u8>, r: &RegionMeta) {
+pub(crate) fn enc_region(o: &mut Vec<u8>, r: &RegionMeta) {
     match &r.spill {
         Some(ptrs) => {
             put_u8(o, 1);
@@ -368,7 +368,7 @@ fn enc_region(o: &mut Vec<u8>, r: &RegionMeta) {
     put_u64(o, r.eof);
 }
 
-fn dec_region(d: &mut Dec) -> std::result::Result<RegionMeta, Corrupt> {
+pub(crate) fn dec_region(d: &mut Dec) -> std::result::Result<RegionMeta, Corrupt> {
     let spill = match d.u8()? {
         0 => None,
         1 => Some(dec_slice_ptrs(d)?),
@@ -386,7 +386,7 @@ fn dec_region(d: &mut Dec) -> std::result::Result<RegionMeta, Corrupt> {
     })
 }
 
-fn enc_inode(o: &mut Vec<u8>, i: &Inode) {
+pub(crate) fn enc_inode(o: &mut Vec<u8>, i: &Inode) {
     put_u64(o, i.id);
     put_u8(
         o,
@@ -405,7 +405,7 @@ fn enc_inode(o: &mut Vec<u8>, i: &Inode) {
     put_u8(o, i.replication);
 }
 
-fn dec_inode(d: &mut Dec) -> std::result::Result<Inode, Corrupt> {
+pub(crate) fn dec_inode(d: &mut Dec) -> std::result::Result<Inode, Corrupt> {
     Ok(Inode {
         id: d.u64()?,
         kind: match d.u8()? {
@@ -424,7 +424,7 @@ fn dec_inode(d: &mut Dec) -> std::result::Result<Inode, Corrupt> {
     })
 }
 
-fn enc_value(o: &mut Vec<u8>, v: &Value) {
+pub(crate) fn enc_value(o: &mut Vec<u8>, v: &Value) {
     match v {
         Value::PathEntry(id) => {
             put_u8(o, 0);
@@ -457,7 +457,7 @@ fn enc_value(o: &mut Vec<u8>, v: &Value) {
     }
 }
 
-fn dec_value(d: &mut Dec) -> std::result::Result<Value, Corrupt> {
+pub(crate) fn dec_value(d: &mut Dec) -> std::result::Result<Value, Corrupt> {
     match d.u8()? {
         0 => Ok(Value::PathEntry(d.u64()?)),
         1 => Ok(Value::Inode(dec_inode(d)?)),
@@ -477,7 +477,7 @@ fn dec_value(d: &mut Dec) -> std::result::Result<Value, Corrupt> {
     }
 }
 
-fn enc_opt_value(o: &mut Vec<u8>, v: &Option<Value>) {
+pub(crate) fn enc_opt_value(o: &mut Vec<u8>, v: &Option<Value>) {
     match v {
         Some(v) => {
             put_u8(o, 1);
@@ -487,7 +487,7 @@ fn enc_opt_value(o: &mut Vec<u8>, v: &Option<Value>) {
     }
 }
 
-fn dec_opt_value(d: &mut Dec) -> std::result::Result<Option<Value>, Corrupt> {
+pub(crate) fn dec_opt_value(d: &mut Dec) -> std::result::Result<Option<Value>, Corrupt> {
     match d.u8()? {
         0 => Ok(None),
         1 => Ok(Some(dec_value(d)?)),
@@ -495,7 +495,7 @@ fn dec_opt_value(d: &mut Dec) -> std::result::Result<Option<Value>, Corrupt> {
     }
 }
 
-fn enc_outcome(o: &mut Vec<u8>, oc: &OpOutcome) {
+pub(crate) fn enc_outcome(o: &mut Vec<u8>, oc: &OpOutcome) {
     match oc {
         OpOutcome::Done => put_u8(o, 0),
         OpOutcome::AppendedAt(off) => {
@@ -505,7 +505,7 @@ fn enc_outcome(o: &mut Vec<u8>, oc: &OpOutcome) {
     }
 }
 
-fn dec_outcome(d: &mut Dec) -> std::result::Result<OpOutcome, Corrupt> {
+pub(crate) fn dec_outcome(d: &mut Dec) -> std::result::Result<OpOutcome, Corrupt> {
     match d.u8()? {
         0 => Ok(OpOutcome::Done),
         1 => Ok(OpOutcome::AppendedAt(d.u64()?)),
@@ -513,14 +513,14 @@ fn dec_outcome(d: &mut Dec) -> std::result::Result<OpOutcome, Corrupt> {
     }
 }
 
-fn enc_outcomes(o: &mut Vec<u8>, ocs: &[OpOutcome]) {
+pub(crate) fn enc_outcomes(o: &mut Vec<u8>, ocs: &[OpOutcome]) {
     put_u32(o, ocs.len() as u32);
     for oc in ocs {
         enc_outcome(o, oc);
     }
 }
 
-fn dec_outcomes(d: &mut Dec) -> std::result::Result<Vec<OpOutcome>, Corrupt> {
+pub(crate) fn dec_outcomes(d: &mut Dec) -> std::result::Result<Vec<OpOutcome>, Corrupt> {
     let n = d.seq()?;
     let mut v = Vec::with_capacity(n);
     for _ in 0..n {
@@ -529,7 +529,7 @@ fn dec_outcomes(d: &mut Dec) -> std::result::Result<Vec<OpOutcome>, Corrupt> {
     Ok(v)
 }
 
-fn enc_op(o: &mut Vec<u8>, op: &MetaOp) {
+pub(crate) fn enc_op(o: &mut Vec<u8>, op: &MetaOp) {
     match op {
         MetaOp::Put { key, value } => {
             put_u8(o, 0);
@@ -622,7 +622,7 @@ fn enc_op(o: &mut Vec<u8>, op: &MetaOp) {
     }
 }
 
-fn dec_op(d: &mut Dec) -> std::result::Result<MetaOp, Corrupt> {
+pub(crate) fn dec_op(d: &mut Dec) -> std::result::Result<MetaOp, Corrupt> {
     match d.u8()? {
         0 => Ok(MetaOp::Put {
             key: dec_key(d)?,
@@ -680,7 +680,7 @@ fn dec_op(d: &mut Dec) -> std::result::Result<MetaOp, Corrupt> {
     }
 }
 
-fn enc_entry(o: &mut Vec<u8>, e: &LogEntry) {
+pub(crate) fn enc_entry(o: &mut Vec<u8>, e: &LogEntry) {
     put_u64(o, e.txn_id);
     put_u32(o, e.reads.len() as u32);
     for (k, v) in &e.reads {
@@ -718,7 +718,7 @@ fn enc_entry(o: &mut Vec<u8>, e: &LogEntry) {
     }
 }
 
-fn dec_entry(d: &mut Dec) -> std::result::Result<LogEntry, Corrupt> {
+pub(crate) fn dec_entry(d: &mut Dec) -> std::result::Result<LogEntry, Corrupt> {
     let txn_id = d.u64()?;
     let n = d.seq()?;
     let mut reads = Vec::with_capacity(n);
@@ -786,7 +786,7 @@ pub enum WalRecord {
     Chosen { slot: u64, entry: LogEntry },
 }
 
-fn enc_record(o: &mut Vec<u8>, r: &WalRecord) {
+pub(crate) fn enc_record(o: &mut Vec<u8>, r: &WalRecord) {
     match r {
         WalRecord::Promise { slot, ballot } => {
             put_u8(o, 1);
@@ -807,7 +807,7 @@ fn enc_record(o: &mut Vec<u8>, r: &WalRecord) {
     }
 }
 
-fn dec_record(payload: &[u8]) -> std::result::Result<WalRecord, Corrupt> {
+pub(crate) fn dec_record(payload: &[u8]) -> std::result::Result<WalRecord, Corrupt> {
     let mut d = Dec::new(payload);
     let rec = match d.u8()? {
         1 => WalRecord::Promise {
@@ -887,7 +887,7 @@ pub struct Checkpoint {
     pub decisions: Vec<(u64, bool)>,
 }
 
-fn enc_checkpoint(o: &mut Vec<u8>, c: &Checkpoint) {
+pub(crate) fn enc_checkpoint(o: &mut Vec<u8>, c: &Checkpoint) {
     put_u32(o, c.slots.len() as u32);
     for s in &c.slots {
         enc_ballot(o, &s.promised);
@@ -963,7 +963,7 @@ fn enc_checkpoint(o: &mut Vec<u8>, c: &Checkpoint) {
     }
 }
 
-fn dec_checkpoint(payload: &[u8]) -> std::result::Result<Checkpoint, Corrupt> {
+pub(crate) fn dec_checkpoint(payload: &[u8]) -> std::result::Result<Checkpoint, Corrupt> {
     let mut d = Dec::new(payload);
     let mut c = Checkpoint::default();
     let n = d.seq()?;

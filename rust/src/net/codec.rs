@@ -1,0 +1,986 @@
+//! Wire codec for [`Request`]/[`Response`] envelopes — the socket
+//! transport's framing layer.
+//!
+//! Reuses the WAL's framing discipline byte for byte: every envelope
+//! travels as `[len: u32 LE][crc32: u32 LE][payload]` with the same
+//! IEEE CRC-32 and the same 64 MB frame bound, and the payload codec is
+//! built from the WAL's hand-rolled little-endian helpers (`put_*`,
+//! [`Dec`]) so the two on-wire formats cannot drift apart in dialect.
+//! A truncated or bit-flipped frame decodes to a typed
+//! [`Error::CorruptMetadata`] on the reader — never a partial value —
+//! and the socket layer drops the connection without dispatching
+//! anything (a corrupt request must not execute half-decoded).
+//!
+//! Responses travel as a full `Result<Response>`: a remote handler's
+//! typed error is re-materialized on the caller so failover logic
+//! (`is_retryable` / `is_indeterminate` classification) behaves
+//! identically under both transports.  One lossy corner is `Error::Io`,
+//! which flattens to its display string, and `Error::Timeout { op }`,
+//! whose `&'static str` op is re-interned from the fixed operation-name
+//! set (unknown names fall back to `"remote"`).
+
+use crate::error::{Error, Result};
+use crate::meta::wal::{
+    crc32, dec_ballot, dec_entry, dec_key, dec_op, dec_opt_value, dec_outcomes, dec_slice_ptr,
+    dec_slice_ptrs, dec_space, enc_ballot, enc_entry, enc_key, enc_op, enc_opt_value, enc_outcomes,
+    enc_slice_ptr, enc_slice_ptrs, enc_space, put_blob, put_bool, put_str, put_u32, put_u64, put_u8,
+    Corrupt, Dec,
+};
+use crate::meta::Commit;
+use crate::net::{Request, Response};
+use crate::types::RegionId;
+use std::io::{Read as IoRead, Write as IoWrite};
+use std::sync::Arc;
+use std::time::Duration;
+
+/// Upper bound on one framed envelope payload — matches the WAL's
+/// discipline: anything larger is corruption, not an allocation request.
+pub const MAX_FRAME: u32 = 64 << 20;
+
+// ---------------------------------------------------------------------
+// Frame I/O: [len u32 LE][crc32 u32 LE][payload].
+// ---------------------------------------------------------------------
+
+/// Write one CRC-framed payload to `w`.
+pub fn write_frame(w: &mut impl IoWrite, payload: &[u8]) -> std::io::Result<()> {
+    let mut head = [0u8; 8];
+    head[..4].copy_from_slice(&(payload.len() as u32).to_le_bytes());
+    head[4..].copy_from_slice(&crc32(payload).to_le_bytes());
+    w.write_all(&head)?;
+    w.write_all(payload)?;
+    w.flush()
+}
+
+/// What one blocking frame read produced.
+#[derive(Debug)]
+pub enum Frame {
+    /// A complete, CRC-verified payload.
+    Payload(Vec<u8>),
+    /// Clean EOF before any header byte — the peer closed the
+    /// connection between envelopes.
+    Eof,
+}
+
+/// Read one CRC-framed payload from `r`.  A short read mid-frame, a
+/// CRC mismatch, or an oversized length all return a typed error (the
+/// socket layer treats any of them as a dead connection).
+pub fn read_frame(r: &mut impl IoRead) -> Result<Frame> {
+    let mut head = [0u8; 8];
+    let mut got = 0;
+    while got < head.len() {
+        let n = r.read(&mut head[got..]).map_err(Error::Io)?;
+        if n == 0 {
+            if got == 0 {
+                return Ok(Frame::Eof);
+            }
+            return Err(Error::CorruptMetadata(format!(
+                "socket frame truncated: {got} of 8 header bytes"
+            )));
+        }
+        got += n;
+    }
+    let len = u32::from_le_bytes(head[..4].try_into().unwrap());
+    let crc = u32::from_le_bytes(head[4..].try_into().unwrap());
+    if len > MAX_FRAME {
+        return Err(Error::CorruptMetadata(format!(
+            "socket frame length {len} exceeds MAX_FRAME"
+        )));
+    }
+    let mut payload = vec![0u8; len as usize];
+    r.read_exact(&mut payload)
+        .map_err(|e| Error::CorruptMetadata(format!("socket frame truncated mid-payload: {e}")))?;
+    if crc32(&payload) != crc {
+        return Err(Error::CorruptMetadata(
+            "socket frame CRC mismatch".to_string(),
+        ));
+    }
+    Ok(Frame::Payload(payload))
+}
+
+fn corrupt(c: Corrupt) -> Error {
+    Error::CorruptMetadata(format!("socket envelope: {c}"))
+}
+
+// ---------------------------------------------------------------------
+// Request payload codec.
+// ---------------------------------------------------------------------
+
+fn enc_commit(o: &mut Vec<u8>, c: &Commit) {
+    put_u32(o, c.reads.len() as u32);
+    for (k, v) in &c.reads {
+        enc_key(o, k);
+        put_u64(o, *v);
+    }
+    put_u32(o, c.ops.len() as u32);
+    for op in &c.ops {
+        enc_op(o, op);
+    }
+}
+
+fn dec_commit(d: &mut Dec) -> std::result::Result<Commit, Corrupt> {
+    let n = d.seq()?;
+    let mut reads = Vec::with_capacity(n);
+    for _ in 0..n {
+        let k = dec_key(d)?;
+        reads.push((k, d.u64()?));
+    }
+    let n = d.seq()?;
+    let mut ops = Vec::with_capacity(n);
+    for _ in 0..n {
+        ops.push(dec_op(d)?);
+    }
+    Ok(Commit { reads, ops })
+}
+
+/// Encode one request envelope payload.
+pub fn encode_request(req: &Request) -> Vec<u8> {
+    let mut o = Vec::with_capacity(64);
+    match req {
+        Request::CreateSlice { hint, data } => {
+            put_u8(&mut o, 0);
+            put_u64(&mut o, hint.inode);
+            put_u32(&mut o, hint.index);
+            put_blob(&mut o, data);
+        }
+        Request::RetrieveSlice { ptr } => {
+            put_u8(&mut o, 1);
+            enc_slice_ptr(&mut o, ptr);
+        }
+        Request::RetrieveMany { ptrs } => {
+            put_u8(&mut o, 2);
+            enc_slice_ptrs(&mut o, ptrs);
+        }
+        Request::AppendBlock { block, data } => {
+            put_u8(&mut o, 3);
+            put_u64(&mut o, *block);
+            put_blob(&mut o, data);
+        }
+        Request::ReadBlock { block, offset, len } => {
+            put_u8(&mut o, 4);
+            put_u64(&mut o, *block);
+            put_u64(&mut o, *offset);
+            put_u64(&mut o, *len);
+        }
+        Request::MetaCommit { commit } => {
+            put_u8(&mut o, 5);
+            enc_commit(&mut o, commit);
+        }
+        Request::MetaGet { key } => {
+            put_u8(&mut o, 6);
+            enc_key(&mut o, key);
+        }
+        Request::PaxosPrepare {
+            shard,
+            slot,
+            ballot,
+        } => {
+            put_u8(&mut o, 7);
+            put_u32(&mut o, *shard);
+            put_u64(&mut o, *slot);
+            enc_ballot(&mut o, ballot);
+        }
+        Request::PaxosAccept {
+            shard,
+            slot,
+            ballot,
+            entry,
+        } => {
+            put_u8(&mut o, 8);
+            put_u32(&mut o, *shard);
+            put_u64(&mut o, *slot);
+            enc_ballot(&mut o, ballot);
+            enc_entry(&mut o, entry);
+        }
+        Request::PaxosLearn { shard, slot, entry } => {
+            put_u8(&mut o, 9);
+            put_u32(&mut o, *shard);
+            put_u64(&mut o, *slot);
+            enc_entry(&mut o, entry);
+        }
+        Request::PaxosStatus { shard } => {
+            put_u8(&mut o, 10);
+            put_u32(&mut o, *shard);
+        }
+        Request::PaxosPull { shard, from } => {
+            put_u8(&mut o, 11);
+            put_u32(&mut o, *shard);
+            put_u64(&mut o, *from);
+        }
+        Request::LeaseRequest {
+            shard,
+            leader,
+            until_ms,
+            epoch,
+        } => {
+            put_u8(&mut o, 12);
+            put_u32(&mut o, *shard);
+            put_u32(&mut o, *leader);
+            put_u64(&mut o, *until_ms);
+            put_u64(&mut o, *epoch);
+        }
+    }
+    o
+}
+
+/// Decode one request envelope payload (strict: trailing bytes are
+/// corruption).
+pub fn decode_request(payload: &[u8]) -> Result<Request> {
+    let mut d = Dec::new(payload);
+    let req = decode_request_inner(&mut d).map_err(corrupt)?;
+    d.done().map_err(corrupt)?;
+    Ok(req)
+}
+
+fn decode_request_inner(d: &mut Dec) -> std::result::Result<Request, Corrupt> {
+    Ok(match d.u8()? {
+        0 => Request::CreateSlice {
+            hint: RegionId {
+                inode: d.u64()?,
+                index: d.u32()?,
+            },
+            data: Arc::from(d.blob()?.into_boxed_slice()),
+        },
+        1 => Request::RetrieveSlice {
+            ptr: dec_slice_ptr(d)?,
+        },
+        2 => Request::RetrieveMany {
+            ptrs: Arc::from(dec_slice_ptrs(d)?.into_boxed_slice()),
+        },
+        3 => Request::AppendBlock {
+            block: d.u64()?,
+            data: Arc::from(d.blob()?.into_boxed_slice()),
+        },
+        4 => Request::ReadBlock {
+            block: d.u64()?,
+            offset: d.u64()?,
+            len: d.u64()?,
+        },
+        5 => Request::MetaCommit {
+            commit: dec_commit(d)?,
+        },
+        6 => Request::MetaGet { key: dec_key(d)? },
+        7 => Request::PaxosPrepare {
+            shard: d.u32()?,
+            slot: d.u64()?,
+            ballot: dec_ballot(d)?,
+        },
+        8 => Request::PaxosAccept {
+            shard: d.u32()?,
+            slot: d.u64()?,
+            ballot: dec_ballot(d)?,
+            entry: dec_entry(d)?,
+        },
+        9 => Request::PaxosLearn {
+            shard: d.u32()?,
+            slot: d.u64()?,
+            entry: dec_entry(d)?,
+        },
+        10 => Request::PaxosStatus { shard: d.u32()? },
+        11 => Request::PaxosPull {
+            shard: d.u32()?,
+            from: d.u64()?,
+        },
+        12 => Request::LeaseRequest {
+            shard: d.u32()?,
+            leader: d.u32()?,
+            until_ms: d.u64()?,
+            epoch: d.u64()?,
+        },
+        t => return Err(format!("invalid Request tag {t}")),
+    })
+}
+
+// ---------------------------------------------------------------------
+// Result<Response> payload codec.
+// ---------------------------------------------------------------------
+
+fn enc_response(o: &mut Vec<u8>, resp: &Response) {
+    match resp {
+        Response::Slice(ptr) => {
+            put_u8(o, 0);
+            enc_slice_ptr(o, ptr);
+        }
+        Response::Bytes(b) => {
+            put_u8(o, 1);
+            put_blob(o, b);
+        }
+        Response::BytesMany(items) => {
+            put_u8(o, 2);
+            put_u32(o, items.len() as u32);
+            for item in items {
+                match item {
+                    Some(b) => {
+                        put_u8(o, 1);
+                        put_blob(o, b);
+                    }
+                    None => put_u8(o, 0),
+                }
+            }
+        }
+        Response::BlockLen(n) => {
+            put_u8(o, 3);
+            put_u64(o, *n);
+        }
+        Response::Outcomes(ocs) => {
+            put_u8(o, 4);
+            enc_outcomes(o, ocs);
+        }
+        Response::MetaValue { value, version } => {
+            put_u8(o, 5);
+            enc_opt_value(o, value);
+            put_u64(o, *version);
+        }
+        Response::Promised { granted, accepted } => {
+            put_u8(o, 6);
+            put_bool(o, *granted);
+            match accepted {
+                Some((b, e)) => {
+                    put_u8(o, 1);
+                    enc_ballot(o, b);
+                    enc_entry(o, e);
+                }
+                None => put_u8(o, 0),
+            }
+        }
+        Response::Accepted(ok) => {
+            put_u8(o, 7);
+            put_bool(o, *ok);
+        }
+        Response::Learned => put_u8(o, 8),
+        Response::LogLen(n) => {
+            put_u8(o, 9);
+            put_u64(o, *n);
+        }
+        Response::LogSuffix(entries) => {
+            put_u8(o, 10);
+            put_u32(o, entries.len() as u32);
+            for e in entries {
+                enc_entry(o, e);
+            }
+        }
+        Response::LeaseGranted(ok) => {
+            put_u8(o, 11);
+            put_bool(o, *ok);
+        }
+    }
+}
+
+fn dec_response(d: &mut Dec) -> std::result::Result<Response, Corrupt> {
+    Ok(match d.u8()? {
+        0 => Response::Slice(dec_slice_ptr(d)?),
+        1 => Response::Bytes(d.blob()?),
+        2 => {
+            let n = d.seq()?;
+            let mut items = Vec::with_capacity(n);
+            for _ in 0..n {
+                items.push(match d.u8()? {
+                    0 => None,
+                    1 => Some(d.blob()?),
+                    t => return Err(format!("invalid BytesMany tag {t}")),
+                });
+            }
+            Response::BytesMany(items)
+        }
+        3 => Response::BlockLen(d.u64()?),
+        4 => Response::Outcomes(dec_outcomes(d)?),
+        5 => Response::MetaValue {
+            value: dec_opt_value(d)?,
+            version: d.u64()?,
+        },
+        6 => Response::Promised {
+            granted: d.bool()?,
+            accepted: match d.u8()? {
+                0 => None,
+                1 => Some((dec_ballot(d)?, dec_entry(d)?)),
+                t => return Err(format!("invalid Promised tag {t}")),
+            },
+        },
+        7 => Response::Accepted(d.bool()?),
+        8 => Response::Learned,
+        9 => Response::LogLen(d.u64()?),
+        10 => {
+            let n = d.seq()?;
+            let mut entries = Vec::with_capacity(n);
+            for _ in 0..n {
+                entries.push(dec_entry(d)?);
+            }
+            Response::LogSuffix(entries)
+        }
+        11 => Response::LeaseGranted(d.bool()?),
+        t => return Err(format!("invalid Response tag {t}")),
+    })
+}
+
+/// Re-intern an operation name decoded off the wire into the fixed
+/// `&'static str` set `Error::Timeout { op }` requires.
+fn intern_op(name: &str) -> &'static str {
+    for known in [
+        "CreateSlice",
+        "RetrieveSlice",
+        "RetrieveMany",
+        "AppendBlock",
+        "ReadBlock",
+        "MetaCommit",
+        "MetaGet",
+        "PaxosPrepare",
+        "PaxosAccept",
+        "PaxosLearn",
+        "PaxosStatus",
+        "PaxosPull",
+        "LeaseRequest",
+        "commit",
+        "read",
+    ] {
+        if name == known {
+            return known;
+        }
+    }
+    "remote"
+}
+
+fn enc_error(o: &mut Vec<u8>, e: &Error) {
+    match e {
+        Error::TxnConflict { space, key } => {
+            put_u8(o, 0);
+            enc_space(o, *space);
+            put_str(o, key);
+        }
+        Error::CondAppendFailed { eof, len, cap } => {
+            put_u8(o, 1);
+            put_u64(o, *eof);
+            put_u64(o, *len);
+            put_u64(o, *cap);
+        }
+        Error::TxnAborted { reason } => {
+            put_u8(o, 2);
+            put_str(o, reason);
+        }
+        Error::RetriesExhausted { attempts } => {
+            put_u8(o, 3);
+            put_u32(o, *attempts);
+        }
+        Error::Timeout { op, elapsed } => {
+            put_u8(o, 4);
+            put_str(o, op);
+            put_u64(o, elapsed.as_nanos() as u64);
+        }
+        Error::NotFound(p) => {
+            put_u8(o, 5);
+            put_str(o, p);
+        }
+        Error::AlreadyExists(p) => {
+            put_u8(o, 6);
+            put_str(o, p);
+        }
+        Error::IsDirectory(p) => {
+            put_u8(o, 7);
+            put_str(o, p);
+        }
+        Error::NotADirectory(p) => {
+            put_u8(o, 8);
+            put_str(o, p);
+        }
+        Error::DirectoryNotEmpty(p) => {
+            put_u8(o, 9);
+            put_str(o, p);
+        }
+        Error::InvalidArgument(m) => {
+            put_u8(o, 10);
+            put_str(o, m);
+        }
+        Error::Unsupported(m) => {
+            put_u8(o, 11);
+            put_str(o, m);
+        }
+        Error::ServerUnavailable(id) => {
+            put_u8(o, 12);
+            put_u32(o, *id);
+        }
+        Error::SliceNotFound {
+            server,
+            backing,
+            offset,
+            len,
+        } => {
+            put_u8(o, 13);
+            put_u32(o, *server);
+            put_u32(o, *backing);
+            put_u64(o, *offset);
+            put_u64(o, *len);
+        }
+        Error::CorruptMetadata(m) => {
+            put_u8(o, 14);
+            put_str(o, m);
+        }
+        Error::NoQuorum { alive, total } => {
+            put_u8(o, 15);
+            put_u64(o, *alive as u64);
+            put_u64(o, *total as u64);
+        }
+        Error::NotLeader { shard, hint } => {
+            put_u8(o, 16);
+            put_u32(o, *shard);
+            match hint {
+                Some(h) => {
+                    put_u8(o, 1);
+                    put_u32(o, *h);
+                }
+                None => put_u8(o, 0),
+            }
+        }
+        Error::ReplicaLost { shard, replica } => {
+            put_u8(o, 17);
+            put_u32(o, *shard);
+            put_u32(o, *replica);
+        }
+        Error::WalCorrupt {
+            shard,
+            replica,
+            detail,
+        } => {
+            put_u8(o, 18);
+            put_u32(o, *shard);
+            put_u32(o, *replica);
+            put_str(o, detail);
+        }
+        Error::Artifact(m) => {
+            put_u8(o, 19);
+            put_str(o, m);
+        }
+        Error::Xla(m) => {
+            put_u8(o, 20);
+            put_str(o, m);
+        }
+        Error::Io(e) => {
+            put_u8(o, 21);
+            put_str(o, &e.to_string());
+        }
+    }
+}
+
+fn dec_error(d: &mut Dec) -> std::result::Result<Error, Corrupt> {
+    Ok(match d.u8()? {
+        0 => Error::TxnConflict {
+            space: dec_space(d)?,
+            key: d.str()?,
+        },
+        1 => Error::CondAppendFailed {
+            eof: d.u64()?,
+            len: d.u64()?,
+            cap: d.u64()?,
+        },
+        2 => Error::TxnAborted { reason: d.str()? },
+        3 => Error::RetriesExhausted { attempts: d.u32()? },
+        4 => Error::Timeout {
+            op: intern_op(&d.str()?),
+            elapsed: Duration::from_nanos(d.u64()?),
+        },
+        5 => Error::NotFound(d.str()?),
+        6 => Error::AlreadyExists(d.str()?),
+        7 => Error::IsDirectory(d.str()?),
+        8 => Error::NotADirectory(d.str()?),
+        9 => Error::DirectoryNotEmpty(d.str()?),
+        10 => Error::InvalidArgument(d.str()?),
+        11 => Error::Unsupported(d.str()?),
+        12 => Error::ServerUnavailable(d.u32()?),
+        13 => Error::SliceNotFound {
+            server: d.u32()?,
+            backing: d.u32()?,
+            offset: d.u64()?,
+            len: d.u64()?,
+        },
+        14 => Error::CorruptMetadata(d.str()?),
+        15 => Error::NoQuorum {
+            alive: d.u64()? as usize,
+            total: d.u64()? as usize,
+        },
+        16 => Error::NotLeader {
+            shard: d.u32()?,
+            hint: match d.u8()? {
+                0 => None,
+                1 => Some(d.u32()?),
+                t => return Err(format!("invalid NotLeader tag {t}")),
+            },
+        },
+        17 => Error::ReplicaLost {
+            shard: d.u32()?,
+            replica: d.u32()?,
+        },
+        18 => Error::WalCorrupt {
+            shard: d.u32()?,
+            replica: d.u32()?,
+            detail: d.str()?,
+        },
+        19 => Error::Artifact(d.str()?),
+        20 => Error::Xla(d.str()?),
+        21 => Error::Io(std::io::Error::new(std::io::ErrorKind::Other, d.str()?)),
+        t => return Err(format!("invalid Error tag {t}")),
+    })
+}
+
+/// Encode one response payload — the full served `Result`, so typed
+/// errors cross the wire.
+pub fn encode_result(res: &Result<Response>) -> Vec<u8> {
+    let mut o = Vec::with_capacity(64);
+    match res {
+        Ok(resp) => {
+            put_u8(&mut o, 0);
+            enc_response(&mut o, resp);
+        }
+        Err(e) => {
+            put_u8(&mut o, 1);
+            enc_error(&mut o, e);
+        }
+    }
+    o
+}
+
+/// Decode one response payload (strict: trailing bytes are corruption).
+pub fn decode_result(payload: &[u8]) -> Result<Result<Response>> {
+    let mut d = Dec::new(payload);
+    let res = match d.u8().map_err(corrupt)? {
+        0 => Ok(dec_response(&mut d).map_err(corrupt)?),
+        1 => Err(dec_error(&mut d).map_err(corrupt)?),
+        t => return Err(corrupt(format!("invalid Result tag {t}"))),
+    };
+    d.done().map_err(corrupt)?;
+    Ok(res)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::paxos::Ballot;
+    use crate::meta::{EntryKind, LogEntry, MetaOp, OpOutcome};
+    use crate::types::{Key, SlicePtr, Space, Value};
+    use crate::util::rng::Rng;
+
+    fn ptr(r: &mut Rng) -> SlicePtr {
+        SlicePtr {
+            server: r.next_u64() as u32,
+            backing: r.next_u64() as u32,
+            offset: r.next_u64(),
+            len: r.next_u64(),
+        }
+    }
+
+    fn key(r: &mut Rng) -> Key {
+        let space = match r.next_below(5) {
+            0 => Space::Path,
+            1 => Space::Inode,
+            2 => Space::Region,
+            3 => Space::Dir,
+            _ => Space::Sys,
+        };
+        Key {
+            space,
+            key: format!("k{:x}", r.next_u64()),
+        }
+    }
+
+    fn blob(r: &mut Rng, max: usize) -> Vec<u8> {
+        let mut b = vec![0u8; r.next_below(max as u64 + 1) as usize];
+        r.fill_bytes(&mut b);
+        b
+    }
+
+    fn entry(r: &mut Rng, depth: u32) -> LogEntry {
+        let reads = vec![(key(r), r.next_u64())];
+        let ops = vec![
+            MetaOp::Put {
+                key: key(r),
+                value: Value::U64(r.next_u64()),
+            },
+            MetaOp::Delete { key: key(r) },
+            MetaOp::DirInsert {
+                key: key(r),
+                name: format!("n{:x}", r.next_u64()),
+                inode: r.next_u64(),
+                expect_absent: r.next_below(2) == 0,
+            },
+        ];
+        let kind = match if depth == 0 { r.next_below(3) } else { r.next_below(4) } {
+            0 => EntryKind::Apply,
+            1 => EntryKind::Prepare {
+                participants: vec![0, 1, 2],
+                coordinator: 0,
+            },
+            2 => EntryKind::Decide {
+                commit: r.next_below(2) == 0,
+            },
+            _ => EntryKind::Batch(vec![entry(r, 0), entry(r, 0)]),
+        };
+        LogEntry {
+            txn_id: r.next_u64(),
+            reads,
+            ops,
+            kind,
+        }
+    }
+
+    /// Every `Request` variant, fields seeded from `r`.
+    fn all_requests(r: &mut Rng) -> Vec<Request> {
+        vec![
+            Request::CreateSlice {
+                hint: RegionId {
+                    inode: r.next_u64(),
+                    index: r.next_u64() as u32,
+                },
+                data: Arc::from(blob(r, 64).into_boxed_slice()),
+            },
+            Request::RetrieveSlice { ptr: ptr(r) },
+            Request::RetrieveMany {
+                ptrs: Arc::from(vec![ptr(r), ptr(r), ptr(r)].into_boxed_slice()),
+            },
+            Request::AppendBlock {
+                block: r.next_u64(),
+                data: Arc::from(blob(r, 64).into_boxed_slice()),
+            },
+            Request::ReadBlock {
+                block: r.next_u64(),
+                offset: r.next_u64(),
+                len: r.next_u64(),
+            },
+            Request::MetaCommit {
+                commit: Commit {
+                    reads: vec![(key(r), r.next_u64())],
+                    ops: vec![MetaOp::Put {
+                        key: key(r),
+                        value: Value::Bytes(blob(r, 32)),
+                    }],
+                },
+            },
+            Request::MetaGet { key: key(r) },
+            Request::PaxosPrepare {
+                shard: r.next_u64() as u32,
+                slot: r.next_u64(),
+                ballot: Ballot {
+                    round: r.next_u64(),
+                    proposer: r.next_u64() as u32,
+                },
+            },
+            Request::PaxosAccept {
+                shard: r.next_u64() as u32,
+                slot: r.next_u64(),
+                ballot: Ballot {
+                    round: r.next_u64(),
+                    proposer: r.next_u64() as u32,
+                },
+                entry: entry(r, 1),
+            },
+            Request::PaxosLearn {
+                shard: r.next_u64() as u32,
+                slot: r.next_u64(),
+                entry: entry(r, 1),
+            },
+            Request::PaxosStatus {
+                shard: r.next_u64() as u32,
+            },
+            Request::PaxosPull {
+                shard: r.next_u64() as u32,
+                from: r.next_u64(),
+            },
+            Request::LeaseRequest {
+                shard: r.next_u64() as u32,
+                leader: r.next_u64() as u32,
+                until_ms: r.next_u64(),
+                epoch: r.next_u64(),
+            },
+        ]
+    }
+
+    /// Every `Response` variant, fields seeded from `r`.
+    fn all_responses(r: &mut Rng) -> Vec<Response> {
+        vec![
+            Response::Slice(ptr(r)),
+            Response::Bytes(blob(r, 64)),
+            Response::BytesMany(vec![Some(blob(r, 16)), None, Some(blob(r, 16))]),
+            Response::BlockLen(r.next_u64()),
+            Response::Outcomes(vec![OpOutcome::Done, OpOutcome::AppendedAt(r.next_u64())]),
+            Response::MetaValue {
+                value: Some(Value::U64(r.next_u64())),
+                version: r.next_u64(),
+            },
+            Response::Promised {
+                granted: true,
+                accepted: Some((
+                    Ballot {
+                        round: r.next_u64(),
+                        proposer: r.next_u64() as u32,
+                    },
+                    entry(r, 1),
+                )),
+            },
+            Response::Accepted(r.next_below(2) == 0),
+            Response::Learned,
+            Response::LogLen(r.next_u64()),
+            Response::LogSuffix(vec![entry(r, 1), entry(r, 1)]),
+            Response::LeaseGranted(r.next_below(2) == 0),
+        ]
+    }
+
+    /// Every `Error` variant the wire codec must carry.
+    fn all_errors() -> Vec<Error> {
+        vec![
+            Error::TxnConflict {
+                space: Space::Inode,
+                key: "k".into(),
+            },
+            Error::CondAppendFailed {
+                eof: 1,
+                len: 2,
+                cap: 3,
+            },
+            Error::TxnAborted { reason: "r".into() },
+            Error::RetriesExhausted { attempts: 9 },
+            Error::Timeout {
+                op: "PaxosAccept",
+                elapsed: Duration::from_micros(1234),
+            },
+            Error::NotFound("/p".into()),
+            Error::AlreadyExists("/p".into()),
+            Error::IsDirectory("/p".into()),
+            Error::NotADirectory("/p".into()),
+            Error::DirectoryNotEmpty("/p".into()),
+            Error::InvalidArgument("m".into()),
+            Error::Unsupported("m".into()),
+            Error::ServerUnavailable(3),
+            Error::SliceNotFound {
+                server: 1,
+                backing: 2,
+                offset: 3,
+                len: 4,
+            },
+            Error::CorruptMetadata("m".into()),
+            Error::NoQuorum { alive: 1, total: 3 },
+            Error::NotLeader {
+                shard: 2,
+                hint: Some(1),
+            },
+            Error::NotLeader {
+                shard: 2,
+                hint: None,
+            },
+            Error::ReplicaLost {
+                shard: 1,
+                replica: 2,
+            },
+            Error::WalCorrupt {
+                shard: 1,
+                replica: 2,
+                detail: "d".into(),
+            },
+            Error::Artifact("m".into()),
+            Error::Xla("m".into()),
+            Error::Io(std::io::Error::new(std::io::ErrorKind::Other, "io")),
+        ]
+    }
+
+    /// Roundtrip identity is checked structurally via re-encoding: the
+    /// envelope types deliberately do not implement `PartialEq`.
+    #[test]
+    fn request_roundtrip_over_all_variants() {
+        for seed in [1u64, 7, 1234, 99] {
+            let mut r = Rng::new(seed);
+            for req in all_requests(&mut r) {
+                let bytes = encode_request(&req);
+                let back = decode_request(&bytes).expect("roundtrip decode");
+                assert_eq!(encode_request(&back), bytes, "{}", req.op_name());
+                assert_eq!(back.op_name(), req.op_name());
+            }
+        }
+    }
+
+    #[test]
+    fn result_roundtrip_over_all_variants() {
+        for seed in [1u64, 7, 1234, 99] {
+            let mut r = Rng::new(seed);
+            for resp in all_responses(&mut r) {
+                let bytes = encode_result(&Ok(resp));
+                let back = decode_result(&bytes).expect("roundtrip decode");
+                assert_eq!(encode_result(&back), bytes);
+            }
+        }
+        for err in all_errors() {
+            let bytes = encode_result(&Err(err));
+            let back = decode_result(&bytes).expect("roundtrip decode");
+            assert_eq!(encode_result(&back), bytes);
+            assert!(back.is_err());
+        }
+    }
+
+    /// Errors must keep their retry/indeterminacy CLASS across the
+    /// wire — that classification drives commit-path safety.
+    #[test]
+    fn error_classification_survives_the_wire() {
+        for err in all_errors() {
+            let retryable = err.is_retryable();
+            let indeterminate = err.is_indeterminate();
+            let back = decode_result(&encode_result(&Err(err))).unwrap().unwrap_err();
+            assert_eq!(back.is_retryable(), retryable, "{back}");
+            assert_eq!(back.is_indeterminate(), indeterminate, "{back}");
+        }
+    }
+
+    #[test]
+    fn truncated_frames_are_typed_errors() {
+        let mut r = Rng::new(7);
+        let req = &all_requests(&mut r)[5]; // MetaCommit: nested payload
+        let mut framed = Vec::new();
+        write_frame(&mut framed, &encode_request(req)).unwrap();
+        for cut in 1..framed.len() {
+            let mut reader = &framed[..cut];
+            match read_frame(&mut reader) {
+                Err(Error::CorruptMetadata(_)) => {}
+                Ok(Frame::Eof) => panic!("cut {cut}: truncation misread as clean EOF"),
+                other => panic!("cut {cut}: expected CorruptMetadata, got {other:?}"),
+            }
+        }
+        // Zero bytes IS a clean EOF (peer closed between envelopes).
+        let mut empty: &[u8] = &[];
+        assert!(matches!(read_frame(&mut empty), Ok(Frame::Eof)));
+    }
+
+    #[test]
+    fn bit_flips_never_decode() {
+        let mut r = Rng::new(1234);
+        for req in all_requests(&mut r) {
+            let mut framed = Vec::new();
+            write_frame(&mut framed, &encode_request(&req)).unwrap();
+            // Flip one bit at a seeded sample of positions (every
+            // position for small frames).
+            let stride = (framed.len() / 64).max(1);
+            for byte in (0..framed.len()).step_by(stride) {
+                let mut bad = framed.clone();
+                bad[byte] ^= 1 << (byte % 8);
+                let mut reader = &bad[..];
+                let outcome = read_frame(&mut reader).and_then(|f| match f {
+                    Frame::Payload(p) => decode_request(&p).map(|_| ()),
+                    Frame::Eof => Ok(()),
+                });
+                assert!(
+                    outcome.is_err(),
+                    "bit flip at byte {byte} of {} decoded cleanly",
+                    req.op_name()
+                );
+            }
+        }
+    }
+
+    /// A payload truncated BELOW the framing layer (framing intact,
+    /// payload cut) must fail decode, not yield a partial request.
+    #[test]
+    fn truncated_payloads_never_partially_decode() {
+        let mut r = Rng::new(99);
+        for req in all_requests(&mut r) {
+            let payload = encode_request(&req);
+            for cut in 0..payload.len() {
+                assert!(
+                    decode_request(&payload[..cut]).is_err(),
+                    "prefix {cut} of {} decoded",
+                    req.op_name()
+                );
+            }
+        }
+    }
+}

@@ -19,9 +19,12 @@
 //!   [`transport::Handler`] implementations.
 
 pub mod chaos;
+pub mod codec;
+pub mod socket;
 pub mod transport;
 
 pub use chaos::{CutMode, Turbulence, TurbulenceRule};
+pub use socket::{SocketBridge, SocketPeer, SocketServer};
 pub use transport::{serve_fail_stop, Handler, Peer, Pending, Plane, Request, Response, Transport};
 
 use std::time::Duration;

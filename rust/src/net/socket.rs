@@ -1,0 +1,470 @@
+//! Real-TCP transport: [`SocketPeer`] (client side), [`SocketServer`]
+//! (server side), and [`SocketBridge`] (the loopback interposer that
+//! lets every in-process test rerun over real sockets unchanged).
+//!
+//! The wire format is the [`codec`](super::codec) envelope: one
+//! CRC-framed request per round, answered by one CRC-framed
+//! `Result<Response>`.  Requests on one connection are strictly
+//! sequential (send → reply), and a [`SocketPeer`] keeps a small pool
+//! of idle connections so concurrent callers fan out over parallel
+//! streams instead of serializing.
+//!
+//! Failure semantics are deliberately conservative:
+//!
+//! * A connect failure is retried once (the "reconnect" of a pool whose
+//!   server restarted); if it still fails the call returns
+//!   [`Error::Timeout`].
+//! * Any failure after the request bytes may have left this process —
+//!   a write error, a dropped connection, a truncated or corrupt reply
+//!   frame — returns [`Error::Timeout`]: the outcome is UNKNOWN and the
+//!   caller's indeterminate-outcome discipline (PR 5/PR 8) applies.
+//!   The connection is discarded, never re-pooled.
+//! * The server drops a connection whose request frame fails CRC or
+//!   decode WITHOUT dispatching anything: a corrupt envelope can abort
+//!   a connection but can never execute half-decoded.
+//! * A handler panic on the server side also drops the connection
+//!   without a reply — over a real wire, a crashed server and a lost
+//!   ack are the same observable event.
+
+use super::codec::{decode_request, decode_result, encode_request, encode_result, read_frame,
+    write_frame, Frame};
+use super::transport::{Handler, Peer, Request, Response};
+use crate::error::{Error, Result};
+use std::collections::HashMap;
+use std::io::Write as IoWrite;
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+/// Idle connections kept per peer; callers beyond this open fresh
+/// streams that are simply dropped after use.
+const POOL_CAP: usize = 8;
+
+/// Blocking-read bound per reply.  Healthy handlers answer in
+/// microseconds; this is a last-resort hang breaker (CI), not a tuning
+/// knob — when it fires the call resolves to the same indeterminate
+/// [`Error::Timeout`] as a dead connection.
+const READ_TIMEOUT: Duration = Duration::from_secs(60);
+
+// ---------------------------------------------------------------------
+// Client side.
+// ---------------------------------------------------------------------
+
+/// A remote [`Handler`]: RPCs to `addr` over pooled TCP connections.
+pub struct SocketPeer {
+    addr: Mutex<String>,
+    pool: Mutex<Vec<TcpStream>>,
+}
+
+impl std::fmt::Debug for SocketPeer {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("SocketPeer").field("addr", &self.addr()).finish()
+    }
+}
+
+impl SocketPeer {
+    /// A peer for the server listening at `addr` (e.g. `127.0.0.1:7070`).
+    /// Connections are opened lazily, on first use.
+    pub fn new(addr: impl Into<String>) -> SocketPeer {
+        SocketPeer {
+            addr: Mutex::new(addr.into()),
+            pool: Mutex::new(Vec::new()),
+        }
+    }
+
+    pub fn addr(&self) -> String {
+        self.addr.lock().unwrap().clone()
+    }
+
+    /// Re-point this peer at a new address (the process it addressed
+    /// restarted under a different — typically ephemeral — port).  The
+    /// idle pool is discarded: every pooled stream belongs to the old
+    /// process.  In-flight calls racing this keep their old streams and
+    /// resolve to the usual indeterminate [`Error::Timeout`].
+    pub fn set_addr(&self, addr: impl Into<String>) {
+        *self.addr.lock().unwrap() = addr.into();
+        self.pool.lock().unwrap().clear();
+    }
+
+    fn connect(&self) -> std::io::Result<TcpStream> {
+        let addr = self.addr();
+        let dial = || -> std::io::Result<TcpStream> {
+            let s = TcpStream::connect(&addr)?;
+            s.set_nodelay(true)?;
+            s.set_read_timeout(Some(READ_TIMEOUT))?;
+            Ok(s)
+        };
+        dial().or_else(|_| {
+            // Reconnect path: one brief grace for a restarting server.
+            std::thread::sleep(Duration::from_millis(20));
+            dial()
+        })
+    }
+
+    /// One request/reply exchange on `stream`.  The outer error is a
+    /// transport failure (indeterminate); the inner result is whatever
+    /// the remote handler actually served.
+    fn round_trip(stream: &mut TcpStream, payload: &[u8]) -> Result<Result<Response>> {
+        write_frame(stream, payload).map_err(Error::Io)?;
+        match read_frame(stream)? {
+            Frame::Payload(reply) => decode_result(&reply),
+            Frame::Eof => Err(Error::CorruptMetadata(
+                "connection closed before reply".to_string(),
+            )),
+        }
+    }
+}
+
+impl Handler for SocketPeer {
+    fn serve(&self, req: &Request) -> Result<Response> {
+        let start = Instant::now();
+        let payload = encode_request(req);
+        let stream = self.pool.lock().unwrap().pop();
+        let mut stream = match stream {
+            Some(s) => s,
+            None => match self.connect() {
+                Ok(s) => s,
+                // Could not even open a connection: nothing was sent,
+                // but callers classify through the same indeterminate
+                // timeout a dead wire produces (over-conservative and
+                // therefore safe).
+                Err(_) => {
+                    return Err(Error::Timeout {
+                        op: req.op_name(),
+                        elapsed: start.elapsed(),
+                    })
+                }
+            },
+        };
+        match Self::round_trip(&mut stream, &payload) {
+            Ok(result) => {
+                let mut pool = self.pool.lock().unwrap();
+                if pool.len() < POOL_CAP {
+                    pool.push(stream);
+                }
+                result
+            }
+            // The request may have executed remotely: outcome unknown.
+            Err(_) => Err(Error::Timeout {
+                op: req.op_name(),
+                elapsed: start.elapsed(),
+            }),
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// Server side.
+// ---------------------------------------------------------------------
+
+/// A TCP listener dispatching framed envelopes to one [`Handler`].
+/// Dropping the server stops the accept loop.
+pub struct SocketServer {
+    addr: SocketAddr,
+    shutdown: Arc<AtomicBool>,
+    accept_thread: Option<std::thread::JoinHandle<()>>,
+}
+
+impl std::fmt::Debug for SocketServer {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("SocketServer").field("addr", &self.addr).finish()
+    }
+}
+
+impl SocketServer {
+    /// Bind `bind` (use port 0 for an ephemeral port — the bound address
+    /// is [`SocketServer::addr`]) and serve `handler` until dropped.
+    pub fn serve(handler: Peer, bind: &str) -> std::io::Result<SocketServer> {
+        let listener = TcpListener::bind(bind)?;
+        let addr = listener.local_addr()?;
+        let shutdown = Arc::new(AtomicBool::new(false));
+        let stop = Arc::clone(&shutdown);
+        let accept_thread = std::thread::Builder::new()
+            .name(format!("wtf-socket-{}", addr.port()))
+            .spawn(move || loop {
+                match listener.accept() {
+                    Ok((stream, _)) => {
+                        if stop.load(Ordering::Relaxed) {
+                            return;
+                        }
+                        let handler = handler.clone();
+                        let _ = std::thread::Builder::new()
+                            .name("wtf-socket-conn".to_string())
+                            .spawn(move || Self::connection(stream, handler));
+                    }
+                    Err(_) => {
+                        if stop.load(Ordering::Relaxed) {
+                            return;
+                        }
+                    }
+                }
+            })?;
+        Ok(SocketServer {
+            addr,
+            shutdown,
+            accept_thread: Some(accept_thread),
+        })
+    }
+
+    /// The bound listen address.
+    pub fn addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    /// Serve one connection: `[request frame] → [Result<Response> frame]`
+    /// rounds until EOF.  Any framing/decode failure drops the
+    /// connection with NOTHING dispatched for that frame; a handler
+    /// panic drops it without a reply (fail-stop over the wire).
+    fn connection(mut stream: TcpStream, handler: Peer) {
+        let _ = stream.set_nodelay(true);
+        loop {
+            let payload = match read_frame(&mut stream) {
+                Ok(Frame::Payload(p)) => p,
+                Ok(Frame::Eof) | Err(_) => return,
+            };
+            let req = match decode_request(&payload) {
+                Ok(r) => r,
+                // Corrupt envelope: kill the connection, dispatch nothing.
+                Err(_) => return,
+            };
+            let served = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                handler.serve(&req)
+            }));
+            let result = match served {
+                Ok(r) => r,
+                Err(_) => return,
+            };
+            if write_frame(&mut stream, &encode_result(&result)).is_err() {
+                return;
+            }
+        }
+    }
+}
+
+impl Drop for SocketServer {
+    fn drop(&mut self) {
+        self.shutdown.store(true, Ordering::Relaxed);
+        // Unblock the accept loop with a throwaway connection.
+        if let Ok(mut s) = TcpStream::connect(self.addr) {
+            let _ = s.flush();
+        }
+        if let Some(t) = self.accept_thread.take() {
+            let _ = t.join();
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// Loopback bridge: run any in-process peer behind a real socket.
+// ---------------------------------------------------------------------
+
+/// Routes in-process peers through per-peer loopback socket pairs, so
+/// the whole test suite (chaos schedules included) exercises the real
+/// framing, connection pool, and failure mapping without changing a
+/// line of test code.  Installed by `Transport` when
+/// `WTF_SOCKET_TRANSPORT=1`; keyed by peer identity exactly like the
+/// turbulence layer, and interposed AFTER turbulence decides an
+/// envelope's fate, so seeded fault schedules stay byte-identical.
+pub struct SocketBridge {
+    routes: Mutex<HashMap<usize, (SocketServer, Peer)>>,
+}
+
+impl std::fmt::Debug for SocketBridge {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("SocketBridge").finish()
+    }
+}
+
+impl SocketBridge {
+    pub fn new() -> SocketBridge {
+        SocketBridge {
+            routes: Mutex::new(HashMap::new()),
+        }
+    }
+
+    /// The socket-backed stand-in for `peer`, lazily booting a loopback
+    /// server around it.  The original peer Arc is retained by its
+    /// server, so the identity key can never be recycled while routed.
+    /// If the loopback cannot bind, the call degrades to the in-process
+    /// peer (never wrong, just not exercising the wire).
+    pub(crate) fn route(&self, peer: &Peer) -> Peer {
+        let key = Arc::as_ptr(peer) as *const () as usize;
+        let mut routes = self.routes.lock().unwrap();
+        if let Some((_, p)) = routes.get(&key) {
+            return p.clone();
+        }
+        match SocketServer::serve(peer.clone(), "127.0.0.1:0") {
+            Ok(server) => {
+                let remote: Peer = Arc::new(SocketPeer::new(server.addr().to_string()));
+                routes.insert(key, (server, remote.clone()));
+                remote
+            }
+            Err(_) => peer.clone(),
+        }
+    }
+}
+
+impl Default for SocketBridge {
+    fn default() -> Self {
+        SocketBridge::new()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::net::LinkModel;
+    use crate::net::Transport;
+    use std::sync::atomic::AtomicU64;
+
+    struct Echo {
+        calls: AtomicU64,
+    }
+
+    impl Handler for Echo {
+        fn serve(&self, req: &Request) -> Result<Response> {
+            self.calls.fetch_add(1, Ordering::Relaxed);
+            match req {
+                Request::ReadBlock { len, .. } => Ok(Response::Bytes(vec![9u8; *len as usize])),
+                Request::AppendBlock { data, .. } => Ok(Response::BlockLen(data.len() as u64)),
+                _ => Err(Error::Unsupported("echo".into())),
+            }
+        }
+    }
+
+    fn echo() -> Arc<Echo> {
+        Arc::new(Echo {
+            calls: AtomicU64::new(0),
+        })
+    }
+
+    #[test]
+    fn socket_round_trip_and_typed_errors() {
+        let e = echo();
+        let server = SocketServer::serve(e.clone(), "127.0.0.1:0").unwrap();
+        let peer = SocketPeer::new(server.addr().to_string());
+        let resp = peer
+            .serve(&Request::ReadBlock {
+                block: 0,
+                offset: 0,
+                len: 5,
+            })
+            .unwrap();
+        assert!(matches!(resp, Response::Bytes(ref b) if b == &vec![9u8; 5]));
+        // A typed handler error crosses the wire as the same variant.
+        let err = peer.serve(&Request::PaxosStatus { shard: 0 }).unwrap_err();
+        assert!(matches!(err, Error::Unsupported(_)), "{err}");
+        assert_eq!(e.calls.load(Ordering::Relaxed), 2);
+    }
+
+    /// The no-partial-dispatch guarantee, end to end: a corrupt frame
+    /// kills the connection and the handler never runs, while the
+    /// server keeps serving fresh connections.
+    #[test]
+    fn corrupt_frame_drops_connection_without_dispatch() {
+        let e = echo();
+        let server = SocketServer::serve(e.clone(), "127.0.0.1:0").unwrap();
+        let mut raw = TcpStream::connect(server.addr()).unwrap();
+        // A well-formed header whose CRC does not match its payload.
+        let payload = encode_request(&Request::ReadBlock {
+            block: 0,
+            offset: 0,
+            len: 1,
+        });
+        let mut framed = Vec::new();
+        write_frame(&mut framed, &payload).unwrap();
+        let crc_at = 4;
+        framed[crc_at] ^= 0xFF;
+        raw.write_all(&framed).unwrap();
+        raw.flush().unwrap();
+        // The server must close the connection without replying...
+        let mut reply = [0u8; 1];
+        use std::io::Read as _;
+        raw.set_read_timeout(Some(Duration::from_secs(10))).unwrap();
+        assert_eq!(raw.read(&mut reply).unwrap_or(0), 0, "expected EOF");
+        // ...having dispatched nothing...
+        assert_eq!(e.calls.load(Ordering::Relaxed), 0);
+        // ...and still serve a healthy peer afterwards.
+        let peer = SocketPeer::new(server.addr().to_string());
+        peer.serve(&Request::ReadBlock {
+            block: 0,
+            offset: 0,
+            len: 1,
+        })
+        .unwrap();
+        assert_eq!(e.calls.load(Ordering::Relaxed), 1);
+    }
+
+    /// A dead server maps to the indeterminate timeout class — the
+    /// caller cannot know whether its envelope executed.
+    #[test]
+    fn dead_server_maps_to_indeterminate_timeout() {
+        let e = echo();
+        let server = SocketServer::serve(e.clone(), "127.0.0.1:0").unwrap();
+        let addr = server.addr().to_string();
+        let peer = SocketPeer::new(addr);
+        let req = Request::ReadBlock {
+            block: 0,
+            offset: 0,
+            len: 1,
+        };
+        peer.serve(&req).unwrap();
+        drop(server); // SIGKILL stand-in: listener gone, pooled conn dead.
+        let err = peer.serve(&req).unwrap_err();
+        assert!(err.is_indeterminate(), "{err}");
+    }
+
+    /// A peer re-pointed at a restarted server's new ephemeral address
+    /// drops its stale pool and serves again (the multi-process test's
+    /// respawn handshake).
+    #[test]
+    fn set_addr_repoints_a_peer_at_a_respawned_server() {
+        let e1 = echo();
+        let s1 = SocketServer::serve(e1.clone(), "127.0.0.1:0").unwrap();
+        let peer = SocketPeer::new(s1.addr().to_string());
+        let req = Request::ReadBlock {
+            block: 0,
+            offset: 0,
+            len: 1,
+        };
+        peer.serve(&req).unwrap(); // pool now holds a stream into s1
+        drop(s1);
+        let e2 = echo();
+        let s2 = SocketServer::serve(e2.clone(), "127.0.0.1:0").unwrap();
+        peer.set_addr(s2.addr().to_string());
+        peer.serve(&req).unwrap();
+        assert_eq!(e1.calls.load(Ordering::Relaxed), 1);
+        assert_eq!(e2.calls.load(Ordering::Relaxed), 1);
+    }
+
+    /// The loopback bridge: an ordinary in-process transport call runs
+    /// over a real socket pair with identical results.
+    #[test]
+    fn bridged_transport_round_trips() {
+        let t = Transport::socket_bridged(LinkModel::instant(), 0);
+        assert!(t.is_socket_bridged());
+        let e = echo();
+        let resp = t
+            .call(
+                e.clone(),
+                Request::ReadBlock {
+                    block: 0,
+                    offset: 0,
+                    len: 3,
+                },
+            )
+            .unwrap();
+        assert!(matches!(resp, Response::Bytes(ref b) if b.len() == 3));
+        // Same peer again: the route (and its connection pool) is reused.
+        t.call(
+            e.clone(),
+            Request::AppendBlock {
+                block: 0,
+                data: Arc::from(vec![1u8, 2].into_boxed_slice()),
+            },
+        )
+        .unwrap();
+        assert_eq!(e.calls.load(Ordering::Relaxed), 2);
+    }
+}

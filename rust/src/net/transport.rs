@@ -498,6 +498,13 @@ pub struct Transport {
     /// without the feature.
     chaos: Mutex<Option<Arc<Turbulence>>>,
     chaos_installed: AtomicBool,
+    /// When set, every envelope detours through a per-peer loopback
+    /// socket pair (real framing, pool, failure mapping) instead of a
+    /// direct method call — `WTF_SOCKET_TRANSPORT=1`, or the explicit
+    /// [`Transport::socket_bridged`] constructor.  The bridge sits
+    /// BEHIND the turbulence layer, so seeded fault schedules are
+    /// byte-identical under both transports.
+    bridge: Option<Arc<super::socket::SocketBridge>>,
 }
 
 impl fmt::Debug for Transport {
@@ -513,6 +520,17 @@ impl Transport {
     /// Build a transport over `link` with `workers` pool threads.
     /// `workers == 0` means inline (serial) execution on the caller.
     pub fn new(link: LinkModel, workers: u32) -> Transport {
+        let bridged = std::env::var_os("WTF_SOCKET_TRANSPORT").is_some_and(|v| v == "1");
+        Transport::build(link, workers, bridged)
+    }
+
+    /// A transport whose envelopes travel over real loopback sockets —
+    /// what `WTF_SOCKET_TRANSPORT=1` selects globally.
+    pub fn socket_bridged(link: LinkModel, workers: u32) -> Transport {
+        Transport::build(link, workers, true)
+    }
+
+    fn build(link: LinkModel, workers: u32, bridged: bool) -> Transport {
         let sender = if workers == 0 {
             None
         } else {
@@ -547,7 +565,13 @@ impl Transport {
             scatters: std::sync::atomic::AtomicU64::new(0),
             chaos: Mutex::new(None),
             chaos_installed: AtomicBool::new(false),
+            bridge: bridged.then(|| Arc::new(super::socket::SocketBridge::new())),
         }
+    }
+
+    /// True when envelopes travel through the loopback socket bridge.
+    pub fn is_socket_bridged(&self) -> bool {
+        self.bridge.is_some()
     }
 
     /// Install (or with `None` remove) the turbulence layer.  Chaos
@@ -604,7 +628,20 @@ impl Transport {
 
     /// Serve one envelope, charging the wire exactly once.  Runs on a
     /// worker thread (or inline when the pool is empty).
-    fn execute(link: LinkModel, to: &Peer, req: &Request) -> Result<Response> {
+    fn execute(
+        link: LinkModel,
+        to: &Peer,
+        req: &Request,
+        bridge: Option<&super::socket::SocketBridge>,
+    ) -> Result<Response> {
+        let routed;
+        let to = match bridge {
+            Some(b) => {
+                routed = b.route(to);
+                &routed
+            }
+            None => to,
+        };
         match req.wire_cost() {
             WireCost::Upload(bytes) => {
                 link.charge(bytes);
@@ -637,19 +674,20 @@ impl Transport {
         to: &Peer,
         req: &Request,
         chaos: Option<&Turbulence>,
+        bridge: Option<&super::socket::SocketBridge>,
     ) -> Result<Response> {
         let Some(chaos) = chaos else {
-            return Self::execute(link, to, req);
+            return Self::execute(link, to, req, bridge);
         };
         match chaos.on_send(to, req) {
-            Delivery::Deliver => Self::execute(link, to, req),
+            Delivery::Deliver => Self::execute(link, to, req, bridge),
             Delivery::Duplicate => {
-                let _first_ack_lost = Self::execute(link, to, req);
-                Self::execute(link, to, req)
+                let _first_ack_lost = Self::execute(link, to, req, bridge);
+                Self::execute(link, to, req, bridge)
             }
             Delivery::Drop => Err(chaos.timeout(req.op_name())),
             Delivery::AckLoss => {
-                let _ack_lost = Self::execute(link, to, req);
+                let _ack_lost = Self::execute(link, to, req, bridge);
                 Err(chaos.timeout(req.op_name()))
             }
         }
@@ -680,15 +718,17 @@ impl Transport {
                 &to,
                 &req,
                 chaos.as_deref(),
+                self.bridge.as_deref(),
             )));
             return Pending { slot };
         }
         let tx = self.sender.as_ref().expect("checked above");
         let job_slot = Arc::clone(&slot);
         let link = self.link;
+        let bridge = self.bridge.clone();
         let job: Job = Box::new(move || {
             let outcome = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
-                Self::execute_faulted(link, &to, &req, chaos.as_deref())
+                Self::execute_faulted(link, &to, &req, chaos.as_deref(), bridge.as_deref())
             }));
             job_slot.fill(outcome);
         });

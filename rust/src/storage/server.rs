@@ -21,7 +21,7 @@ use super::backing::BackingFile;
 use super::placement::backing_of;
 use crate::error::{Error, Result};
 use crate::metrics::Metrics;
-use crate::net::{Handler, Request, Response};
+use crate::net::{Handler, Peer, Request, Response};
 use crate::types::{RegionId, ServerId, SlicePtr};
 use std::collections::HashMap;
 use std::path::PathBuf;
@@ -207,15 +207,29 @@ impl Handler for StorageServer {
 }
 
 /// The set of storage servers a client can reach, indexed by id.
-#[derive(Clone, Debug, Default)]
+/// Each id resolves to either an in-process [`StorageServer`] or (in
+/// multi-process deployments) a remote transport peer — [`Self::peer`]
+/// is the one lookup every data-plane envelope goes through.
+#[derive(Clone, Default)]
 pub struct StorageCluster {
     servers: HashMap<ServerId, Arc<StorageServer>>,
+    remotes: HashMap<ServerId, Peer>,
+}
+
+impl std::fmt::Debug for StorageCluster {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("StorageCluster")
+            .field("servers", &self.servers)
+            .field("remotes", &self.remotes.keys().collect::<Vec<_>>())
+            .finish()
+    }
 }
 
 impl StorageCluster {
     pub fn new(servers: Vec<Arc<StorageServer>>) -> Self {
         StorageCluster {
             servers: servers.into_iter().map(|s| (s.id(), s)).collect(),
+            remotes: HashMap::new(),
         }
     }
 
@@ -223,18 +237,42 @@ impl StorageCluster {
         self.servers.get(&id).ok_or(Error::ServerUnavailable(id))
     }
 
+    /// Register a remote peer serving server `id`'s data-plane
+    /// envelopes (a [`crate::net::SocketPeer`] in the multi-process
+    /// deployment).  A remote registration shadows any in-process
+    /// server of the same id.
+    pub fn set_remote(&mut self, id: ServerId, peer: Peer) {
+        self.remotes.insert(id, peer);
+    }
+
+    /// Resolve server `id` to the transport peer that serves it:
+    /// the registered remote when there is one, else the in-process
+    /// server.
+    pub fn peer(&self, id: ServerId) -> Result<Peer> {
+        if let Some(p) = self.remotes.get(&id) {
+            return Ok(p.clone());
+        }
+        Ok(self.get(id)?.clone() as Peer)
+    }
+
     pub fn ids(&self) -> Vec<ServerId> {
-        let mut v: Vec<ServerId> = self.servers.keys().copied().collect();
+        let mut v: Vec<ServerId> = self
+            .servers
+            .keys()
+            .chain(self.remotes.keys())
+            .copied()
+            .collect();
         v.sort_unstable();
+        v.dedup();
         v
     }
 
     pub fn len(&self) -> usize {
-        self.servers.len()
+        self.ids().len()
     }
 
     pub fn is_empty(&self) -> bool {
-        self.servers.is_empty()
+        self.servers.is_empty() && self.remotes.is_empty()
     }
 
     pub fn iter(&self) -> impl Iterator<Item = &Arc<StorageServer>> {

@@ -9,8 +9,11 @@ pub mod tempdir;
 pub use rng::{backoff_jitter, Rng};
 pub use tempdir::TempDir;
 
-/// Monotonic "now" in seconds for mtime stamping (coarse is fine: the
-/// paper's inode mtimes are advisory).
+/// Wall-clock "now" in seconds (`SystemTime`, NOT monotonic) for inode
+/// mtime stamping and log/bench rows only.  Correctness-critical timing
+/// — leases, coordinator claims, GC deadlines — must never use this:
+/// those paths use `coordinator::lease::LeaseClock` / `Instant`, which
+/// cannot jump backwards under NTP step or clock skew.
 pub fn unix_now() -> u64 {
     std::time::SystemTime::now()
         .duration_since(std::time::UNIX_EPOCH)

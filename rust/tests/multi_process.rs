@@ -1,0 +1,349 @@
+//! Multi-process crash-recovery: real `wtf-cluster meta` OS processes
+//! under the frontend's 2PC, SIGKILLed mid-protocol.
+//!
+//! The in-process suites (`chaos.rs`, `fault_injection.rs`) crash
+//! replicas by flipping an atomic; here the replica is a separate
+//! process holding a real WAL on disk, and the "crash" is `SIGKILL` —
+//! nothing flushes, sockets die mid-stream, and the only surviving
+//! state is what `WalSync::Always` forced to media before the ack.
+//! Recovery is a genuine process respawn over the same WAL directory.
+//!
+//! The invariants asserted are exactly PR 5/PR 7's, now across process
+//! boundaries: after the survivors respawn and the orphan sweep runs,
+//! every participant settles to the coordinator group's decision record
+//! (presumed abort once the coordinator CLAIM expires with no
+//! decision), no intent stays pending, and a committed append applied
+//! exactly once (eof 8 / version 1 — never doubled by WAL replay).
+//!
+//! `WTF_TEST_SEED` (CI matrix: 1, 7, 1234) seeds which protocol
+//! instant the kill fires at, which replica processes die, and whether
+//! the coordinating frontend abandons the commit — failures print the
+//! seed for replay.
+
+mod support;
+
+use std::path::{Path, PathBuf};
+use std::process::{Child, Command, Stdio};
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+use support::At;
+use wtf::coordinator::lease::LeaseClock;
+use wtf::deploy::{frontend_store, DeployConfig};
+use wtf::meta::{FaultAction, ReplicatedMetaStore};
+use wtf::net::{Peer, SocketPeer, Transport};
+use wtf::types::{Key, Space};
+use wtf::util::{Rng, TempDir};
+
+/// Lease window for the real-clock cluster: long enough that a healthy
+/// commit never loses its lease mid-protocol on a loaded CI box, short
+/// enough that waiting out a coordinator claim (2 leases + skew) stays
+/// test-sized.
+const LEASE_MS: u64 = 400;
+const SKEW_MS: u64 = 50;
+const SHARDS: u32 = 2;
+
+/// One `wtf-cluster meta` child process: replica `replica` of every
+/// shard, WAL under the shared root, bound to an ephemeral port
+/// announced through a ready file.
+struct MetaChild {
+    child: Child,
+    addr: String,
+    replica: u32,
+    config: PathBuf,
+    ready_dir: PathBuf,
+    generation: u32,
+}
+
+impl MetaChild {
+    fn spawn(config: &Path, ready_dir: &Path, replica: u32) -> MetaChild {
+        let (child, addr) = Self::launch(config, ready_dir, replica, 0);
+        MetaChild {
+            child,
+            addr,
+            replica,
+            config: config.to_path_buf(),
+            ready_dir: ready_dir.to_path_buf(),
+            generation: 0,
+        }
+    }
+
+    fn launch(config: &Path, ready_dir: &Path, replica: u32, generation: u32) -> (Child, String) {
+        let ready = ready_dir.join(format!("ready-{replica}-{generation}"));
+        let mut child = Command::new(env!("CARGO_BIN_EXE_wtf-cluster"))
+            .arg("meta")
+            .arg("--config")
+            .arg(config)
+            .arg("--replica")
+            .arg(replica.to_string())
+            .arg("--bind")
+            .arg("127.0.0.1:0")
+            .arg("--ready-file")
+            .arg(&ready)
+            .stdout(Stdio::null())
+            .stderr(Stdio::inherit())
+            .spawn()
+            .expect("spawn wtf-cluster meta");
+        // Readiness handshake: the child writes its bound address to the
+        // ready file (tmp + rename) once the listener is up.
+        let deadline = Instant::now() + Duration::from_secs(20);
+        let addr = loop {
+            if let Ok(text) = std::fs::read_to_string(&ready) {
+                if text.parse::<std::net::SocketAddr>().is_ok() {
+                    break text;
+                }
+            }
+            if let Ok(Some(status)) = child.try_wait() {
+                panic!("meta replica {replica} exited during startup: {status}");
+            }
+            assert!(
+                Instant::now() < deadline,
+                "meta replica {replica} never announced readiness"
+            );
+            std::thread::sleep(Duration::from_millis(20));
+        };
+        (child, addr)
+    }
+
+    /// The crash under test: SIGKILL, no shutdown path of any kind.
+    fn sigkill(&mut self) {
+        let _ = self.child.kill();
+        let _ = self.child.wait();
+    }
+
+    /// Respawn over the SAME WAL directories (the config pins them by
+    /// replica id); a fresh ephemeral port avoids racing the kernel for
+    /// the old one.  Returns the new address.
+    fn respawn(&mut self) -> String {
+        self.sigkill();
+        self.generation += 1;
+        let (child, addr) = Self::launch(&self.config, &self.ready_dir, self.replica, self.generation);
+        self.child = child;
+        self.addr = addr.clone();
+        addr
+    }
+}
+
+impl Drop for MetaChild {
+    fn drop(&mut self) {
+        self.sigkill();
+    }
+}
+
+/// The deployment under test: 2 shards, 3 replicas (frontend-local
+/// replica 0 + two child processes), durable child WALs, real anchored
+/// clocks in every process with the skew budget between them.
+fn write_config(tmp: &TempDir) -> PathBuf {
+    let doc = format!(
+        r#"{{
+            "shards": {SHARDS},
+            "replicas": 3,
+            "lease_ms": {LEASE_MS},
+            "max_clock_skew_ms": {SKEW_MS},
+            "replication": 1,
+            "meta": ["127.0.0.1:1", "127.0.0.1:1"],
+            "storage": ["127.0.0.1:1"],
+            "wal_dir": {:?}
+        }}"#,
+        tmp.path().join("wal")
+    );
+    let path = tmp.path().join("deploy.json");
+    std::fs::write(&path, doc).expect("write deploy config");
+    path
+}
+
+struct Cluster {
+    store: Arc<ReplicatedMetaStore>,
+    children: Arc<Mutex<Vec<MetaChild>>>,
+    peers: Vec<Arc<SocketPeer>>,
+    _tmp: TempDir,
+}
+
+fn boot() -> Cluster {
+    let tmp = TempDir::new("wtf-multi-process").expect("tempdir");
+    let config = write_config(&tmp);
+    let ready_dir = tmp.path().to_path_buf();
+    let children = vec![
+        MetaChild::spawn(&config, &ready_dir, 1),
+        MetaChild::spawn(&config, &ready_dir, 2),
+    ];
+    let peers: Vec<Arc<SocketPeer>> = children
+        .iter()
+        .map(|c| Arc::new(SocketPeer::new(c.addr.clone())))
+        .collect();
+    let cfg = DeployConfig::load(&config).expect("reload deploy config");
+    let store = frontend_store(
+        &cfg,
+        Arc::new(Transport::instant()),
+        LeaseClock::auto_anchored(),
+        peers.iter().map(|p| p.clone() as Peer).collect(),
+    );
+    Cluster {
+        store: Arc::new(store),
+        children: Arc::new(Mutex::new(children)),
+        peers,
+        _tmp: tmp,
+    }
+}
+
+/// `n` fresh keys (unique per `tag`) on `n` distinct shard groups.
+fn fresh_keys(store: &ReplicatedMetaStore, tag: &str, n: usize) -> Vec<Key> {
+    let mut found: Vec<(u32, Key)> = Vec::new();
+    for i in 0..10_000 {
+        let k = Key::new(Space::Region, format!("{tag}-{i}"));
+        let shard = store.group_of(&k).shard();
+        if !found.iter().any(|(s, _)| *s == shard) {
+            found.push((shard, k));
+            if found.len() == n {
+                return found.into_iter().map(|(_, k)| k).collect();
+            }
+        }
+    }
+    panic!("store has fewer than {n} shard groups");
+}
+
+/// Respawn the named children and re-point the frontend's socket peers
+/// at their new addresses (children index 0/1 = replica 1/2).
+fn respawn(cluster: &Cluster, victims: &[usize]) {
+    let mut children = cluster.children.lock().unwrap();
+    for &v in victims {
+        let addr = children[v].respawn();
+        cluster.peers[v].set_addr(addr);
+    }
+}
+
+/// Drive the orphan sweep until no intent stays pending.  Claim waits
+/// are real-time here (2 leases + skew ≈ 1 s), so give the sweep a
+/// generous deadline before declaring the cluster stuck.
+fn resolve_until_quiet(store: &Arc<ReplicatedMetaStore>) {
+    let deadline = Instant::now() + Duration::from_secs(30);
+    loop {
+        store.resolve_orphans();
+        if store.pending_intents().is_empty() {
+            return;
+        }
+        assert!(
+            Instant::now() < deadline,
+            "intents still pending after respawn + 30s of resolution: {:?}",
+            store.pending_intents()
+        );
+        std::thread::sleep(Duration::from_millis(50));
+    }
+}
+
+#[test]
+fn sigkill_mid_2pc_converges_all_or_nothing_across_processes() {
+    let cluster = boot();
+    let store = &cluster.store;
+
+    // Baseline: with both replica processes up, a cross-shard commit
+    // round-trips the full socket plane (claim, prepares, decision,
+    // phase 2 — every quorum over real TCP).
+    let keys = fresh_keys(store, "baseline", 2);
+    let participants = support::participants_of(store, &keys);
+    assert_eq!(participants.len(), 2, "keys must straddle both shards");
+    store
+        .commit(&support::append_commit(&keys), true)
+        .expect("healthy multi-process commit");
+    support::assert_append_exactly_once(store, &keys, true);
+
+    // Seeded kill cases: each picks a protocol instant, a victim set,
+    // and whether the coordinating frontend abandons the commit.
+    let seed = support::base_seed();
+    for case in 0..3u64 {
+        let mut rng = Rng::new(seed.wrapping_mul(0x9E37_79B9).wrapping_add(case + 1));
+        let keys = fresh_keys(store, &format!("case{seed}-{case}"), 2);
+        let participants = support::participants_of(store, &keys);
+        let at = match rng.next_below(3) {
+            0 => At::Prepared(participants[rng.next_below(2) as usize]),
+            1 => At::AllPrepared,
+            _ => At::Decided,
+        };
+        let victims: Vec<usize> = match rng.next_below(3) {
+            0 => vec![0],
+            1 => vec![1],
+            _ => vec![0, 1],
+        };
+        // Killing both children takes the quorum with it; the frontend
+        // must then abandon (a real client machine would time out and
+        // die with it).  With one survivor the commit may press on.
+        let abandon = victims.len() == 2 || rng.next_below(2) == 0;
+
+        let hook_children = cluster.children.clone();
+        let hook_victims = victims.clone();
+        let fired = Arc::new(Mutex::new(false));
+        let hook_fired = fired.clone();
+        let seen_txn = Arc::new(Mutex::new(0u64));
+        let hook_txn = seen_txn.clone();
+        store.set_fault_hook(Some(Arc::new(move |phase, txn| {
+            *hook_txn.lock().unwrap() = txn;
+            let mut fired = hook_fired.lock().unwrap();
+            if !*fired && at.matches(&phase) {
+                *fired = true;
+                let mut children = hook_children.lock().unwrap();
+                for &v in &hook_victims {
+                    children[v].sigkill();
+                }
+                if abandon {
+                    return FaultAction::Abandon;
+                }
+            }
+            FaultAction::Continue
+        })));
+        // A commit can fail BEFORE the scripted instant for boring
+        // reasons — the previous case's respawned replicas hold off
+        // lease grants for one window, so the first election after a
+        // respawn may transiently find no quorum.  Retry until the
+        // fault actually fires (the kill itself ends the loop).
+        let mut result = store.commit(&support::append_commit(&keys), true);
+        let warmup = Instant::now() + Duration::from_secs(10);
+        while result.is_err() && !*fired.lock().unwrap() && Instant::now() < warmup {
+            std::thread::sleep(Duration::from_millis(50));
+            result = store.commit(&support::append_commit(&keys), true);
+        }
+        store.set_fault_hook(None);
+        let txn = *seen_txn.lock().unwrap();
+        assert!(
+            *fired.lock().unwrap(),
+            "seed {seed} case {case}: instant {at:?} never fired"
+        );
+        assert!(txn != 0, "seed {seed} case {case}: no transaction observed");
+
+        // Recovery: respawn every victim over its WAL, re-point the
+        // peers, and sweep orphans until the protocol is quiet.
+        respawn(&cluster, &victims);
+        resolve_until_quiet(store);
+
+        let decision = support::assert_all_or_nothing(store, txn, &participants);
+        support::assert_append_exactly_once(store, &keys, decision == Some(true));
+        // A commit the frontend saw succeed must never settle as abort.
+        if result.is_ok() {
+            assert_eq!(
+                decision,
+                Some(true),
+                "seed {seed} case {case}: acked commit settled as abort"
+            );
+        }
+    }
+}
+
+/// A replica process that dies OUTSIDE any commit and respawns from its
+/// WAL must rejoin the quorum transparently: the next commit simply
+/// succeeds through the re-pointed peer.
+#[test]
+fn respawned_replica_rejoins_the_write_quorum() {
+    let cluster = boot();
+    let store = &cluster.store;
+    let keys = fresh_keys(store, "rejoin", 2);
+    store
+        .commit(&support::append_commit(&keys), true)
+        .expect("commit before the restart");
+
+    respawn(&cluster, &[0]);
+
+    let keys2 = fresh_keys(store, "rejoin2", 2);
+    store
+        .commit(&support::append_commit(&keys2), true)
+        .expect("commit after the restart");
+    support::assert_append_exactly_once(store, &keys2, true);
+    assert!(store.pending_intents().is_empty());
+}

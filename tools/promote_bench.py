@@ -1,0 +1,171 @@
+#!/usr/bin/env python3
+"""Promote freshly measured bench JSON over the committed baselines.
+
+The committed `BENCH_*.json` baselines were authored in a container
+with no Rust toolchain, so their wall-clock rows are marked
+`"status": "modeled"` (deterministic count arithmetic, `mean_ns: 0`).
+The CI bench-smoke job DOES have cargo: it re-runs every bench binary
+and drops the real output into `fresh-bench/`, where each writer emits
+the same schema with `"status": "measured"` and nonzero `mean_ns`.
+
+This tool closes the loop: it copies each measured fresh file over the
+matching committed baseline, so the repo's baselines graduate from
+modeled to measured.  It refuses to promote anything that would make
+the baselines LESS honest:
+
+  * a fresh file still marked "modeled" is skipped (promoting it would
+    churn the baseline without adding measurement);
+  * a fresh file whose rows are all `mean_ns: 0` is rejected even if it
+    claims "measured" (a writer bug, not a measurement);
+  * a fresh file missing a top-level acceptance-ratio field the
+    baseline carries is rejected (schema drift would silently disarm
+    tools/bench_gate.py);
+  * a fresh file is never promoted over a baseline for a DIFFERENT
+    bench (the `bench` field must match).
+
+Modes:
+
+  # In place, on a checkout that has the CI `bench-json` artifact:
+  python3 tools/promote_bench.py --fresh-dir fresh-bench
+
+  # CI artifact mode: write promoted baselines into a staging dir and
+  # leave the checkout untouched; a maintainer downloads the
+  # `promoted-bench` artifact and commits its contents to the repo
+  # root.
+  python3 tools/promote_bench.py --fresh-dir fresh-bench --out promoted-bench
+
+Exit status is 0 when every present fresh file either promoted or was
+legitimately skipped as modeled, and 1 on any rejection.  `--dry-run`
+prints the plan without writing.
+"""
+
+import argparse
+import json
+import os
+import shutil
+import sys
+
+# Every committed baseline the bench-smoke job regenerates.  The fresh
+# files carry the same names (see the WTF_BENCH_*_JSON env wiring in
+# .github/workflows/ci.yml).
+BASELINES = [
+    "BENCH_chaos.json",
+    "BENCH_client_io.json",
+    "BENCH_meta_store.json",
+    "BENCH_read_path.json",
+    "BENCH_txn_read.json",
+    "BENCH_wal.json",
+    "BENCH_write_path.json",
+]
+
+# Top-level fields the regression gate reads; when the committed
+# baseline carries one, the fresh replacement must too.
+RATIO_FIELDS = [
+    "envelope_ratio_seq",
+    "envelope_ratio_sort",
+    "envelope_ratio_batched",
+    "commit_rounds_ratio_storm",
+    "scatter_ratio_2pc",
+    "replay_ratio_checkpointed",
+    "fsync_ratio_group_commit",
+    "convergence_ratio",
+    "meta_envelope_ratio_concat",
+    "meta_envelope_ratio_rmw",
+]
+
+
+def load(path):
+    with open(path) as f:
+        return json.load(f)
+
+
+def check_promotable(name, fresh, baseline):
+    """Return (ok, reason). ok=None means 'skip, not an error'."""
+    status = fresh.get("status", "")
+    if status != "measured":
+        return None, f"fresh status is {status!r}, not 'measured'"
+    rows = fresh.get("rows", [])
+    if not any(r.get("mean_ns", 0) > 0 for r in rows):
+        return False, "claims 'measured' but every row has mean_ns 0"
+    if baseline is not None:
+        if fresh.get("bench") != baseline.get("bench"):
+            return False, (
+                f"bench mismatch: fresh {fresh.get('bench')!r} vs "
+                f"baseline {baseline.get('bench')!r}"
+            )
+        missing = [
+            f for f in RATIO_FIELDS if f in baseline and f not in fresh
+        ]
+        if missing:
+            return False, (
+                "fresh file drops gate field(s) the baseline carries: "
+                + ", ".join(missing)
+            )
+    return True, f"measured ({sum(1 for r in rows if r.get('mean_ns', 0) > 0)}/{len(rows)} rows timed)"
+
+
+def main():
+    p = argparse.ArgumentParser(
+        description=__doc__, formatter_class=argparse.RawDescriptionHelpFormatter
+    )
+    p.add_argument(
+        "--fresh-dir",
+        required=True,
+        help="directory of freshly produced BENCH_*.json (CI bench-json artifact)",
+    )
+    p.add_argument(
+        "--baseline-dir",
+        default=os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+        help="directory of the committed baselines (default: repo root)",
+    )
+    p.add_argument(
+        "--out",
+        help="write promoted files here instead of over the baselines "
+        "(CI artifact mode; the dir is created)",
+    )
+    p.add_argument("--dry-run", action="store_true", help="print the plan only")
+    a = p.parse_args()
+
+    dest_dir = a.out or a.baseline_dir
+    promoted, skipped, rejected = [], [], []
+
+    for name in BASELINES:
+        fresh_path = os.path.join(a.fresh_dir, name)
+        base_path = os.path.join(a.baseline_dir, name)
+        if not os.path.exists(fresh_path):
+            skipped.append((name, "no fresh file"))
+            continue
+        try:
+            fresh = load(fresh_path)
+        except (OSError, json.JSONDecodeError) as e:
+            rejected.append((name, f"unreadable fresh file: {e}"))
+            continue
+        baseline = load(base_path) if os.path.exists(base_path) else None
+        ok, reason = check_promotable(name, fresh, baseline)
+        if ok is None:
+            skipped.append((name, reason))
+        elif not ok:
+            rejected.append((name, reason))
+        else:
+            promoted.append((name, reason))
+            if not a.dry_run:
+                os.makedirs(dest_dir, exist_ok=True)
+                shutil.copyfile(fresh_path, os.path.join(dest_dir, name))
+
+    verb = "would promote" if a.dry_run else "promoted"
+    for name, reason in promoted:
+        print(f"promote_bench: {verb} {name} -> {dest_dir}/ ({reason})")
+    for name, reason in skipped:
+        print(f"promote_bench: skipped {name} ({reason})")
+    for name, reason in rejected:
+        print(f"promote_bench: REJECTED {name} ({reason})")
+
+    print(
+        f"promote_bench: {len(promoted)} promoted, {len(skipped)} skipped, "
+        f"{len(rejected)} rejected"
+    )
+    return 1 if rejected else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
